@@ -1,0 +1,87 @@
+//! Table 1 analogue: held-out success rates of base / SFT / RL-trained
+//! models, per task family (our MATH500 / AIME24 stand-ins).
+//!
+//! ```bash
+//! cargo run --release --example evaluate -- --variant tiny --rl-steps 40
+//! # or evaluate an existing checkpoint:
+//! cargo run --release --example evaluate -- --checkpoint runs/step00040.ckpt
+//! ```
+
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator::{self, eval};
+use pipeline_rl::data::task::TaskKind;
+use pipeline_rl::model::checkpoint::Checkpoint;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::cli::Args;
+use pipeline_rl::util::logging::{self, Level};
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Info);
+    let args = Args::parse_env();
+    let mut cfg = RunConfig::default();
+    cfg.variant = args.str_or("variant", "tiny");
+    cfg.sft_steps = args.usize_or("sft-steps", 60)?;
+    cfg.rl_steps = args.usize_or("rl-steps", 40)?;
+    cfg.max_new_tokens = args.usize_or("max-new", 32)?;
+    cfg.task.kinds = vec![TaskKind::Add, TaskKind::Sub, TaskKind::Copy];
+    cfg.task.max_operand = args.usize_or("max-operand", 50)? as i64;
+    cfg.seed = args.usize_or("seed", 2)? as u64;
+    cfg.log_every = 20;
+    let n_eval = args.usize_or("n-eval", 100)?;
+
+    let mut rt = Runtime::new()?;
+    let mut rows: Vec<(String, eval::EvalReport, f64)> = Vec::new();
+
+    if let Some(path) = args.flags.get("checkpoint") {
+        let ck = Checkpoint::load(std::path::Path::new(path))?;
+        cfg.variant = ck.variant.clone();
+        let rep = eval::evaluate(&mut rt, &cfg, &ck.params, n_eval)?;
+        rows.push((format!("checkpoint step {}", ck.step), rep, f64::NAN));
+    } else {
+        // base (random init) -> SFT -> RL, like Table 1's progression
+        let base_params = rt.init_params(&cfg.variant, cfg.seed as i32)?;
+        let rep_base = eval::evaluate(&mut rt, &cfg, &base_params, n_eval)?;
+        rows.push(("base (random init)".into(), rep_base, 0.0));
+
+        let hub = pipeline_rl::metrics::MetricsHub::new();
+        let sft_params = coordinator::warmup::run_sft(&mut rt, &cfg, &hub)?;
+        let rep_sft = eval::evaluate(&mut rt, &cfg, &sft_params, n_eval)?;
+        rows.push((format!("SFT ({} steps)", cfg.sft_steps), rep_sft, 0.0));
+
+        println!("== RL training ({} steps, PipelineRL) ==", cfg.rl_steps);
+        let summary = coordinator::run(cfg.clone(), Some(sft_params))?;
+        let rep_rl = eval::evaluate(&mut rt, &cfg, &summary.final_params, n_eval)?;
+        let samples = summary.report.counters.get("samples_trained").copied().unwrap_or(0.0);
+        rows.push((
+            format!("PipelineRL ({} steps)", cfg.rl_steps),
+            rep_rl,
+            samples,
+        ));
+    }
+
+    println!("\n================== Table 1 analogue ==================");
+    println!(
+        "{:<24} {:>8} {:>9} {:>9} {:>8}",
+        "method", "overall", "# samples", "mean len", "eos rate"
+    );
+    for (name, rep, samples) in &rows {
+        println!(
+            "{:<24} {:>7.1}% {:>9} {:>9.1} {:>8.2}",
+            name,
+            100.0 * rep.success_rate(),
+            if samples.is_nan() { "-".to_string() } else { format!("{samples}") },
+            rep.mean_gen_len,
+            rep.eos_rate,
+        );
+    }
+    println!("\nper task family (correct/total):");
+    for (name, rep, _) in &rows {
+        let detail: Vec<String> = rep
+            .by_kind
+            .iter()
+            .map(|(k, (c, n))| format!("{k}: {c}/{n}"))
+            .collect();
+        println!("  {:<24} {}", name, detail.join("  "));
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Analytic model explorer — Fig 8 (U(h)), Fig 9 (throughput vs g_max),
+//! Fig 3b (Pareto frontiers) and the Appendix A.4 case study, from the
+//! calibrated flash-unit performance model.
+//!
+//! ```bash
+//! cargo run --release --example pareto -- --n 128 --b 128 --l 2048
+//! ```
+
+use pipeline_rl::perfmodel::{
+    search, throughput::Workload, AccelModel,
+};
+use pipeline_rl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let mut w = Workload::paper_a4();
+    w.n = args.usize_or("n", 128)?;
+    w.b = args.usize_or("b", 128)?;
+    w.l_max = args.usize_or("l", 2048)?;
+    w.tau = args.f64_or("tau", 4.92)?;
+
+    println!("== Fig 8: H100 utilization model U(h) ==");
+    let m = AccelModel::h100();
+    println!("{:>6} {:>9} {:>9}", "h", "U_raw", "U_padded");
+    for (h, raw, pad) in m.table(&[1, 2, 4, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512, 1024, 2048]) {
+        println!("{h:>6} {raw:>9.4} {pad:>9.4}");
+    }
+
+    println!("\n== Fig 9: throughput vs max lag (N={}, B={}) ==", w.n, w.b);
+    let budgets: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64, 96, 133, 192, 256, 384, 512];
+    let grid: Vec<usize> = (4..=512).step_by(4).collect();
+    let pipe = search::search_pipeline_configs(&w, &budgets, &grid);
+    let conv = search::conventional_curve(&w, &budgets);
+    println!(
+        "{:>7} {:>12} {:>16} {:>12} {:>8}",
+        "g_max", "r_pipeline", "(I, H)", "r_conv", "speedup"
+    );
+    for ((budget, best), c) in pipe.iter().zip(&conv) {
+        match best {
+            Some(p) => println!(
+                "{budget:>7} {:>12.2} {:>16} {:>12.2} {:>8.2}",
+                p.r,
+                format!("({}, {})", p.i, p.h),
+                c.r,
+                p.r / c.r
+            ),
+            None => println!("{budget:>7} {:>12} {:>16} {:>12.2}", "-", "-", c.r),
+        }
+    }
+
+    println!("\n== Appendix A.4 case study ==");
+    let cs = search::case_study(&w);
+    println!(
+        "pipeline : r_gen {:.2}, r_train {:.2}, r {:.2}  (H={}, I={}, g_max={})",
+        cs.pipe.r_gen, cs.pipe.r_train, cs.pipe.r, cs.pipe.h, cs.pipe.i, cs.pipe.lag_steps
+    );
+    println!(
+        "convent. : r_gen {:.2}, r_train {:.2}, r {:.2}  (G={})",
+        cs.conv.r_gen, cs.conv.r_train, cs.conv.r, cs.conv.g
+    );
+    println!("speedup  : {:.2}x   (paper: 1.57x at g_max ~ 133)", cs.speedup);
+
+    println!("\n== Fig 3b: effectiveness/throughput frontier points ==");
+    let (pipe_pts, conv_pts) = search::pareto_sweep(&w);
+    println!("pipeline      : {:?}", round_pts(&pipe_pts));
+    println!("conventional  : {:?}", round_pts(&conv_pts));
+    Ok(())
+}
+
+fn round_pts(pts: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    pts.iter()
+        .map(|(a, b)| ((a * 1000.0).round() / 1000.0, (b * 100.0).round() / 100.0))
+        .collect()
+}

@@ -1,0 +1,121 @@
+//! Soak test: run the engine decode loop (and optionally train steps)
+//! for a fixed duration and report RSS growth — guards against device
+//! buffer / literal leaks in the PJRT hot path (we already fixed one
+//! upstream leak in the xla crate's `execute`; see runtime/mod.rs).
+//!
+//! ```bash
+//! cargo run --release --example soak -- --seconds 60 --train
+//! ```
+
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::runtime::{HostTensor, Runtime};
+use pipeline_rl::util::cli::Args;
+use pipeline_rl::util::timer::Stopwatch;
+use pipeline_rl::util::Rng;
+
+fn rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| s.split_whitespace().nth(1).map(|p| p.parse::<u64>().ok()))
+        .flatten()
+        .map(|pages| pages * 4)
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let seconds = args.f64_or("seconds", 30.0)?;
+    let do_train = args.bool("train");
+    let variant = args.str_or("variant", "tiny");
+
+    let mut rt = Runtime::new()?;
+    let params = rt.init_params(&variant, 1)?;
+    let mut cfg = EngineCfg::new(&variant);
+    cfg.max_new_tokens = usize::MAX / 2; // slots never finish
+    let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(1))?;
+    eng.set_weights(1, &params)?;
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    for i in 0..eng.n_slots() {
+        let p = gen.problem(i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        eng.add_request(p, toks, i as u64);
+    }
+    // warm up compilation + first steps
+    for _ in 0..5 {
+        eng.step()?;
+    }
+
+    let train_graph = if do_train {
+        Some(rt.graph(&variant, "train")?)
+    } else {
+        None
+    };
+    let v = rt.manifest.variant(&variant)?.clone();
+    let (b, t) = (v.train_batch, v.seq_len);
+    let p = v.params.len();
+    let m = rt.zero_opt_state(&variant)?;
+    let vv = rt.zero_opt_state(&variant)?;
+
+    let rss0 = rss_kb();
+    let sw = Stopwatch::new();
+    let mut steps = 0u64;
+    let mut train_steps = 0u64;
+    let mut last_report = 0.0;
+    while sw.seconds() < seconds {
+        // decode step (slots wrap at max_seq via Length finish + refill)
+        let out = eng.step()?;
+        if out.idle {
+            for i in 0..eng.n_slots() {
+                let pb = gen.problem(steps + i as u64);
+                let toks = tk.encode(&pb.prompt).unwrap();
+                eng.add_request(pb, toks, steps + i as u64);
+            }
+        }
+        steps += 1;
+        if let Some(g) = &train_graph {
+            if steps % 16 == 0 {
+                let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 12);
+                inputs.extend(params.iter().cloned());
+                inputs.extend(m.iter().cloned());
+                inputs.extend(vv.iter().cloned());
+                inputs.push(HostTensor::scalar_f32(1.0));
+                inputs.push(HostTensor::zeros_i32(&[b, t]));
+                inputs.push(HostTensor::zeros_i32(&[b, t]));
+                inputs.push(HostTensor::zeros_i32(&[b, t]));
+                inputs.push(HostTensor::zeros_f32(&[b, t]));
+                inputs.push(HostTensor::zeros_f32(&[b, t]));
+                inputs.push(HostTensor::zeros_f32(&[b, t]));
+                inputs.push(HostTensor::zeros_f32(&[b, t]));
+                inputs.push(HostTensor::scalar_f32(1e-3));
+                inputs.push(HostTensor::scalar_f32(5.0));
+                inputs.push(HostTensor::scalar_f32(0.0));
+                inputs.push(HostTensor::scalar_f32(0.0));
+                g.run_host(&inputs)?;
+                train_steps += 1;
+            }
+        }
+        if sw.seconds() - last_report >= 5.0 {
+            last_report = sw.seconds();
+            println!(
+                "t={:5.1}s steps={steps} train={train_steps} rss={} KB (Δ {} KB)",
+                sw.seconds(),
+                rss_kb(),
+                rss_kb() as i64 - rss0 as i64
+            );
+        }
+    }
+    let drss = rss_kb() as i64 - rss0 as i64;
+    let per_step = drss as f64 / steps as f64;
+    println!(
+        "\nsoak done: {steps} decode steps, {train_steps} train steps, \
+         ΔRSS {drss} KB ({per_step:.2} KB/step)"
+    );
+    if per_step > 8.0 {
+        println!("WARNING: possible leak (> 8 KB/step)");
+        std::process::exit(1);
+    }
+    Ok(())
+}

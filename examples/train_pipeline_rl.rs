@@ -1,0 +1,152 @@
+//! End-to-end driver — the repository's headline experiment (Fig 5/6/10).
+//!
+//! Trains the transformer policy on synthetic arithmetic reasoning with
+//! the FULL stack (AOT Pallas kernels → PJRT engine → broker pipeline),
+//! comparing PipelineRL against Conventional-RL baselines from the *same*
+//! SFT warmup:
+//!
+//! ```bash
+//! cargo run --release --example train_pipeline_rl -- \
+//!     --variant small --steps 120 --modes pipeline,conv8,conv32 \
+//!     --out runs/
+//! ```
+//!
+//! For each mode it logs reward-vs-time (Fig 5a), reward-vs-samples
+//! (Fig 5b), samples-vs-time (Fig 5c), max-lag and ESS per step (Fig 6),
+//! writes the full metric series as JSON, evaluates held-out success
+//! rates (Table 1 protocol) and prints a comparison table. `--modes
+//! conv64` reproduces the Fig 10 divergence probe.
+
+use pipeline_rl::config::{Mode, RunConfig};
+use pipeline_rl::coordinator::{self, eval};
+use pipeline_rl::data::task::TaskKind;
+use pipeline_rl::metrics::RunReport;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::cli::Args;
+use pipeline_rl::util::logging::{self, Level};
+
+struct ModeResult {
+    name: String,
+    report: RunReport,
+    wall: f64,
+    final_success: f64,
+    time_to_threshold: Option<f64>,
+    samples_to_threshold: Option<f64>,
+}
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Info);
+    let args = Args::parse_env();
+    let variant = args.str_or("variant", "small");
+    let steps = args.usize_or("steps", 80)?;
+    let sft_steps = args.usize_or("sft-steps", 120)?;
+    let seed = args.usize_or("seed", 1)? as u64;
+    let out_dir = args.str_or("out", "runs");
+    let threshold = args.f64_or("threshold", 0.5)?;
+    let modes_s = args.str_or("modes", "pipeline,conv8");
+
+    let mut base = RunConfig::default();
+    base.variant = variant.clone();
+    base.rl_steps = steps;
+    base.sft_steps = sft_steps;
+    base.seed = seed;
+    base.group_size = args.usize_or("group", 4)?;
+    base.max_new_tokens = args.usize_or("max-new", 48)?;
+    base.task.kinds = vec![TaskKind::Add, TaskKind::Sub, TaskKind::Copy];
+    base.task.max_operand = args.usize_or("max-operand", 99)? as i64;
+    base.lr = args.f64_or("lr", 3e-4)?;
+    base.log_every = args.usize_or("log-every", 10)?;
+
+    // one shared warmup => all modes start from the same "base model"
+    println!("== SFT warmup ({sft_steps} steps, variant {variant}) ==");
+    let warm = {
+        let mut rt = Runtime::new()?;
+        let hub = pipeline_rl::metrics::MetricsHub::new();
+        coordinator::warmup::run_sft(&mut rt, &base, &hub)?
+    };
+
+    let mut results = Vec::new();
+    for mode_name in modes_s.split(',') {
+        let mut cfg = base.clone();
+        cfg.mode = parse_mode(mode_name)?;
+        println!("\n== training: {} ({} optimizer steps) ==", mode_name, steps);
+        let summary = coordinator::run(cfg.clone(), Some(warm.clone()))?;
+
+        let mut rt = Runtime::new()?;
+        let ev = eval::evaluate(&mut rt, &cfg, &summary.final_params, 60)?;
+        let rvt = summary.report.series("reward_vs_time").cloned().unwrap_or_default();
+        let rvs = summary.report.series("reward_vs_samples").cloned().unwrap_or_default();
+        let res = ModeResult {
+            name: mode_name.to_string(),
+            wall: summary.wall_seconds,
+            final_success: ev.success_rate(),
+            time_to_threshold: rvt.first_crossing(threshold, 5).map(|(t, _)| t),
+            samples_to_threshold: rvs.first_crossing(threshold, 5).map(|(_, x)| x),
+            report: summary.report,
+        };
+        let path = std::path::Path::new(&out_dir)
+            .join(format!("{}_{}.json", variant, mode_name));
+        res.report.save_json(&path)?;
+        println!("  series written to {}", path.display());
+        results.push(res);
+    }
+
+    // ---- Fig 5/6 style comparison table ----
+    println!("\n==================== comparison ====================");
+    println!(
+        "{:<12} {:>8} {:>9} {:>10} {:>11} {:>8} {:>8}",
+        "mode", "wall(s)", "samples", "t->R=.5", "S->R=.5", "ESS", "eval%"
+    );
+    for r in &results {
+        let ess = r
+            .report
+            .series("train/ess")
+            .map(|s| s.tail_mean(10))
+            .unwrap_or(f64::NAN);
+        println!(
+            "{:<12} {:>8.1} {:>9} {:>10} {:>11} {:>8.3} {:>8.1}",
+            r.name,
+            r.wall,
+            r.report.counters.get("samples_trained").copied().unwrap_or(0.0),
+            r.time_to_threshold
+                .map(|t| format!("{t:.1}s"))
+                .unwrap_or_else(|| "-".into()),
+            r.samples_to_threshold
+                .map(|s| format!("{s:.0}"))
+                .unwrap_or_else(|| "-".into()),
+            ess,
+            100.0 * r.final_success,
+        );
+    }
+    if let (Some(p), Some(c)) = (
+        results.iter().find(|r| r.name == "pipeline"),
+        results.iter().find(|r| r.name.starts_with("conv")),
+    ) {
+        if let (Some(tp), Some(tc)) = (p.time_to_threshold, c.time_to_threshold) {
+            println!(
+                "\nPipelineRL reached R={threshold} {:.2}x faster than {} (Fig 5a)",
+                tc / tp,
+                c.name
+            );
+        }
+        let lag_p = p.report.series("train/max_lag").map(|s| s.tail_mean(10));
+        let lag_c = c.report.series("train/max_lag").map(|s| s.tail_mean(10));
+        println!(
+            "max lag (steps): pipeline {:.1} vs {} {:.1} (Fig 6a)",
+            lag_p.unwrap_or(f64::NAN),
+            c.name,
+            lag_c.unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}
+
+fn parse_mode(s: &str) -> anyhow::Result<Mode> {
+    if s == "pipeline" {
+        return Ok(Mode::Pipeline);
+    }
+    if let Some(g) = s.strip_prefix("conv") {
+        return Ok(Mode::Conventional { g: g.parse()? });
+    }
+    anyhow::bail!("unknown mode {s:?} (use pipeline | convN)")
+}

@@ -1,0 +1,216 @@
+"""AOT exporter: lower every L2 graph to XLA HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime then loads and
+compiles the text with `HloModuleProto::from_text_file` and never touches
+python again.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (per variant v in {tiny, small, base}):
+    artifacts/<v>_init.hlo.txt      seed -> params
+    artifacts/<v>_decode.hlo.txt    engine decode step
+    artifacts/<v>_train.hlo.txt     IS-REINFORCE + Adam optimizer step
+    artifacts/<v>_sft.hlo.txt       cross-entropy warmup step
+    artifacts/<v>_score.hlo.txt     per-token logprobs
+    artifacts/<v>_score_full.hlo.txt  ... plus full log-distributions
+    artifacts/manifest.json         dims, param specs, io signatures
+    artifacts/vocab.json            id -> token table (rust cross-check)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, vocab
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    jdt = {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(shape, jdt)
+
+
+def graph_signatures(cfg: configs.ModelConfig):
+    """Non-parameter runtime inputs of every graph, in call order.
+    (name, shape, dtype) — the manifest records these for the rust side."""
+    bg, bt = cfg.gen_batch, cfg.train_batch
+    t, tm, v = cfg.seq_len, cfg.max_seq, cfg.vocab
+    kv = model.kv_shape(cfg)
+    return {
+        "init": [("seed", (), "i32")],
+        "decode": [
+            ("kv", kv, "f32"),
+            ("pos", (bg,), "i32"),
+            ("cur_tok", (bg,), "i32"),
+            ("gumbel", (bg, v), "f32"),
+            ("force_tok", (bg,), "i32"),
+            ("force_mask", (bg,), "f32"),
+            ("temp", (), "f32"),
+        ],
+        "train": [
+            ("step", (), "f32"),
+            ("tokens", (bt, t), "i32"),
+            ("seg", (bt, t), "i32"),
+            ("pos", (bt, t), "i32"),
+            ("behavior_lp", (bt, t), "f32"),
+            ("adv_in", (bt, t), "f32"),
+            ("reward", (bt, t), "f32"),
+            ("mask", (bt, t), "f32"),
+            ("lr", (), "f32"),
+            ("clip_c", (), "f32"),
+            ("adv_mode", (), "f32"),
+            ("vf_coef", (), "f32"),
+        ],
+        "sft": [
+            ("step", (), "f32"),
+            ("tokens", (bt, t), "i32"),
+            ("seg", (bt, t), "i32"),
+            ("pos", (bt, t), "i32"),
+            ("mask", (bt, t), "f32"),
+            ("lr", (), "f32"),
+        ],
+        "score": [
+            ("tokens", (bt, t), "i32"),
+            ("seg", (bt, t), "i32"),
+            ("pos", (bt, t), "i32"),
+        ],
+        "score_full": [
+            ("tokens", (bt, t), "i32"),
+            ("seg", (bt, t), "i32"),
+            ("pos", (bt, t), "i32"),
+        ],
+    }
+
+
+def graph_fns(cfg: configs.ModelConfig):
+    """graph name -> (callable, takes_opt_state). Parameter-list arguments
+    always come first; opt-state graphs take (params, m, v, *rest)."""
+    P = len(cfg.param_specs())
+
+    def with_params(f, n_state):
+        """Wrap f so the flat-literal calling convention (params unrolled)
+        becomes the model.py list convention."""
+        @functools.wraps(f)
+        def g(*args):
+            lists = []
+            off = 0
+            for _ in range(n_state):
+                lists.append(list(args[off:off + P]))
+                off += P
+            return f(cfg, *lists, *args[off:])
+        return g
+
+    return {
+        "init": (lambda seed: tuple(model.init_params(cfg, seed)), 0),
+        "decode": (with_params(model.decode_step, 1), 1),
+        "train": (with_params(model.train_step, 3), 3),
+        "sft": (with_params(model.sft_step, 3), 3),
+        "score": (with_params(model.score, 1), 1),
+        "score_full": (with_params(model.score_full, 1), 1),
+    }
+
+
+def lower_variant(cfg: configs.ModelConfig, out_dir: str, only=None):
+    sigs = graph_signatures(cfg)
+    fns = graph_fns(cfg)
+    params_specs = [
+        _spec(shape) for _, shape in cfg.param_specs()
+    ]
+    files = {}
+    for name, (fn, n_state) in fns.items():
+        if only and name not in only:
+            continue
+        example = []
+        for _ in range(n_state):
+            example.extend(params_specs)
+        for _, shape, dt in sigs[name]:
+            example.append(_spec(shape, dt))
+        # flatten output pytrees to a tuple of arrays for a stable rust ABI
+        def flat_fn(*args, _fn=fn):
+            out = _fn(*args)
+            return tuple(jax.tree_util.tree_leaves(out))
+        # keep_unused: graphs like decode never touch value_head, but the
+        # rust ABI passes the full canonical param list to every graph.
+        lowered = jax.jit(flat_fn, keep_unused=True).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB")
+    return files
+
+
+def build_manifest(variants, files_by_variant):
+    out = {"variants": {}, "metric_names": model.METRIC_NAMES,
+           "sft_metric_names": model.SFT_METRIC_NAMES,
+           "pad_id": vocab.PAD_ID, "bos_id": vocab.BOS_ID,
+           "eos_id": vocab.EOS_ID, "vocab_size": vocab.V}
+    for cfg in variants:
+        sigs = graph_signatures(cfg)
+        out["variants"][cfg.name] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": cfg.max_seq,
+            "gen_batch": cfg.gen_batch,
+            "train_batch": cfg.train_batch,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "n_params": cfg.n_params(),
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+            ],
+            "artifacts": files_by_variant[cfg.name],
+            "inputs": {
+                g: [{"name": n, "shape": list(s), "dtype": d}
+                    for n, s, d in sig]
+                for g, sig in sigs.items()
+            },
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,small,base")
+    ap.add_argument("--graphs", default=None,
+                    help="comma list to restrict (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.graphs.split(",")) if args.graphs else None
+    variants = [configs.VARIANTS[n] for n in args.variants.split(",")]
+    files = {}
+    for cfg in variants:
+        print(f"[aot] lowering variant {cfg.name} "
+              f"({cfg.n_params() / 1e6:.2f}M params)")
+        files[cfg.name] = lower_variant(cfg, args.out_dir, only)
+    manifest = build_manifest(variants, files)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "vocab.json"), "w") as f:
+        json.dump({"table": vocab.build_table(), "alphabet": vocab.ALPHABET},
+                  f, indent=1)
+    print("[aot] manifest + vocab written")
+
+
+if __name__ == "__main__":
+    main()

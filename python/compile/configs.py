@@ -1,0 +1,82 @@
+"""Model-size variants shared by model.py, aot.py and the tests.
+
+Each variant bakes every static dimension of the AOT artifacts: the rust
+runtime cannot reshape a compiled executable, so the generation batch
+(`gen_batch` = the engine's slot count H), the training batch/sequence
+(`train_batch` x `seq_len`) and the KV capacity (`max_seq`) are all fixed
+per artifact.  The rust manifest (artifacts/manifest.json) records them.
+
+Sizing rationale (DESIGN.md §2): the testbed is a single CPU core, so the
+"base" variant (~3M params) plays the role of the paper's Qwen-2.5-7B.
+Dynamics of mixed-policy lag / ESS / IS-truncation do not depend on model
+scale; throughput-at-scale figures come from perfmodel/simcluster instead.
+"""
+
+from dataclasses import dataclass, field
+
+from . import vocab
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    max_seq: int      # KV-cache capacity per generation slot
+    gen_batch: int    # engine slots per actor (paper's H)
+    train_batch: int  # optimizer batch rows (packed)
+    seq_len: int      # packed training sequence length
+    vocab: int = vocab.V
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def ffn_dim(self) -> int:
+        return 4 * self.d_model
+
+    def param_specs(self):
+        """Canonical flat parameter ordering. Mirrored in rust via manifest."""
+        d, f, v = self.d_model, self.ffn_dim, self.vocab
+        specs = [
+            ("embed", (v, d)),
+            ("final_norm", (d,)),
+            ("value_head", (d,)),
+        ]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.wq", (d, d)),
+                (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)),
+                (f"l{l}.wo", (d, d)),
+                (f"l{l}.w1", (d, f)),
+                (f"l{l}.w2", (f, d)),
+                (f"l{l}.ln1", (d,)),
+                (f"l{l}.ln2", (d,)),
+            ]
+        return specs
+
+    def n_params(self) -> int:
+        import math
+        return sum(math.prod(s) for _, s in self.param_specs())
+
+
+TINY = ModelConfig(
+    name="tiny", d_model=32, n_layers=2, n_heads=2,
+    max_seq=96, gen_batch=4, train_batch=4, seq_len=96,
+)
+
+SMALL = ModelConfig(
+    name="small", d_model=64, n_layers=3, n_heads=4,
+    max_seq=160, gen_batch=8, train_batch=8, seq_len=160,
+)
+
+BASE = ModelConfig(
+    name="base", d_model=128, n_layers=4, n_heads=4,
+    max_seq=224, gen_batch=16, train_batch=16, seq_len=224,
+)
+
+VARIANTS = {c.name: c for c in (TINY, SMALL, BASE)}

@@ -1,0 +1,104 @@
+"""Fused Adam update as a Pallas kernel (L1).
+
+The paper's trainer (DeepSpeed) runs a fused Adam CUDA kernel; this is the
+TPU-flavoured equivalent: each parameter tensor is flattened, padded to a
+VMEM-friendly block multiple and updated in a single elementwise pass
+(p, m, v, g -> p', m', v'), with bias correction computed from the
+(runtime) step input.  beta/eps are compile-time constants; lr and step
+are runtime scalars so the trainer can schedule the learning rate without
+recompiling the artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192  # fewer grid steps: one per 8k elements (interpret overhead, §Perf)
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, lr_ref, step_ref,
+                 p2_ref, m2_ref, v2_ref):
+    p = p_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0]
+    step = step_ref[0]
+    m2 = BETA1 * m + (1.0 - BETA1) * g
+    v2 = BETA2 * v + (1.0 - BETA2) * g * g
+    c1 = 1.0 - jnp.exp(step * jnp.log(BETA1))
+    c2 = 1.0 - jnp.exp(step * jnp.log(BETA2))
+    mhat = m2 / c1
+    vhat = v2 / c2
+    p2_ref[...] = p - lr * mhat / (jnp.sqrt(vhat) + EPS)
+    m2_ref[...] = m2
+    v2_ref[...] = v2
+
+
+def adam_update_flat(p, m, v, g, lr, step):
+    """All of p/m/v/g are 1-D f32 of identical length (already padded to a
+    BLOCK multiple by the caller). lr/step are scalars (step is 1-based)."""
+    n = p.shape[0]
+    assert n % BLOCK == 0, n
+    lr_arr = jnp.reshape(lr.astype(jnp.float32), (1,))
+    step_arr = jnp.reshape(step.astype(jnp.float32), (1,))
+    grid = (n // BLOCK,)
+    blk = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, scl, scl],
+        out_specs=[blk, blk, blk],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=True,
+    )(p, m, v, g, lr_arr, step_arr)
+
+
+def adam_update(p, m, v, g, lr, step):
+    """Arbitrary-shape wrapper: flatten -> pad -> kernel -> unpad -> reshape.
+    Matches ref.adam_update."""
+    shape = p.shape
+    n = p.size
+    pad = (-n) % BLOCK
+    flat = lambda x: jnp.pad(jnp.ravel(x.astype(jnp.float32)), (0, pad))
+    p2, m2, v2 = adam_update_flat(flat(p), flat(m), flat(v), flat(g), lr, step)
+    unflat = lambda x: jnp.reshape(x[:n], shape)
+    return unflat(p2), unflat(m2), unflat(v2)
+
+
+def adam_update_tree(params, ms, vs, grads, lr, step):
+    """Apply the fused update across a list-of-arrays parameter set.
+
+    All tensors are flattened and concatenated so the whole optimizer
+    update is ONE pallas_call (one DeepSpeed-style fused kernel launch)
+    instead of one per parameter — under interpret=True the per-call
+    overhead of ~35 separate calls dominated the train step (§Perf).
+    """
+    sizes = [p.size for p in params]
+    shapes = [p.shape for p in params]
+    cat = lambda xs: jnp.concatenate(
+        [jnp.ravel(x).astype(jnp.float32) for x in xs]
+    )
+    n = sum(sizes)
+    pad = (-n) % BLOCK
+    padded = lambda x: jnp.pad(cat(x), (0, pad))
+    p2, m2, v2 = adam_update_flat(
+        padded(params), padded(ms), padded(vs), padded(grads), lr, step
+    )
+
+    def split(flat):
+        out = []
+        off = 0
+        for size, shape in zip(sizes, shapes):
+            out.append(jnp.reshape(flat[off : off + size], shape))
+            off += size
+        return out
+
+    return split(p2), split(m2), split(v2)

@@ -1,0 +1,150 @@
+"""Pallas attention kernels (L1).
+
+Two kernels, matching the two execution regimes of the generation engine
+and trainer (DESIGN.md §3):
+
+* `flash_attention` — tiled causal+segment attention over a full packed
+  sequence (teacher forcing: the `score`/`score_full` artifacts and the
+  KL-replay path). Flash-style schedule: the grid walks (head, q-tile);
+  the batch dimension is vectorized *inside* the kernel body, K/V for the
+  head are staged through VMEM and consumed in k-tiles with a
+  running-softmax accumulator, so the [T, T] logits matrix never
+  materializes.
+
+* `decode_attention` — single-query attention against the dense per-slot
+  KV cache, the per-token hot op of the engine's decode loop. Grid walks
+  heads only; all slots are processed vectorized per grid step.
+
+Grid-shape rationale (§Perf): batch-vectorized bodies keep the VMEM
+footprint per grid step modest (≤ ~2 MiB at the base variant — table in
+EXPERIMENTS.md §Perf) while minimizing the *number* of grid steps, which
+matters twice: on real TPU fewer grid steps amortize the MXU pipeline
+fill, and under `interpret=True` (the CPU correctness path — the Mosaic
+lowering cannot run on CPU PJRT) every grid step pays interpreter
+overhead — the original (batch, head) grid made the decode hot loop ~12x
+slower end-to-end.
+
+Hardware adaptation (paper targets CUDA/vLLM paged attention): the
+BlockSpec index maps express the HBM->VMEM schedule that vLLM expresses
+with thread-block tiling; see DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+Q_BLOCK = 32  # divides every variant's seq_len (96, 160, 224)
+K_BLOCK = 32
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref, *, scale, t_total):
+    """One (head, q-tile) grid step, vectorized over batch. Shapes inside:
+    q [B, bq, 1, hd]; k,v [B, T, 1, hd]; segq [B, bq]; segk [B, T]."""
+    qi = pl.program_id(1)
+    bq = q_ref.shape[1]
+    hd = q_ref.shape[3]
+    bsz = q_ref.shape[0]
+    q = q_ref[:, :, 0, :].astype(jnp.float32)          # [B, bq, hd]
+    seg_q = segq_ref[...]                              # [B, bq]
+    row_ids = qi * bq + jax.lax.iota(jnp.int32, bq)    # global q positions
+
+    n_kb = t_total // K_BLOCK
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[:, :, 0, :], (0, kb * K_BLOCK, 0), (bsz, K_BLOCK, hd)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[:, :, 0, :], (0, kb * K_BLOCK, 0), (bsz, K_BLOCK, hd)
+        ).astype(jnp.float32)
+        seg_k = jax.lax.dynamic_slice(
+            segk_ref[...], (0, kb * K_BLOCK), (bsz, K_BLOCK)
+        )
+        col_ids = kb * K_BLOCK + jax.lax.iota(jnp.int32, K_BLOCK)
+        s = jnp.einsum("bqd,bkd->bqk", q, k) * scale   # [B, bq, K_BLOCK]
+        valid = (
+            (col_ids[None, None, :] <= row_ids[None, :, None])
+            & (seg_q[:, :, None] == seg_k[:, None, :])
+            & (seg_k[:, None, :] != 0)
+        )
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)                   # masked rows stay inert
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqk,bkd->bqd", p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bsz, bq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bsz, bq), dtype=jnp.float32)
+    a0 = jnp.zeros((bsz, bq, hd), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, a0))
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    out = jnp.where((l > 0.0)[..., None], acc / safe_l[..., None], 0.0)
+    o_ref[:, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, seg):
+    """q,k,v: [B, T, H, D] (rope already applied); seg: [B, T] int32.
+    Equivalent to ref.causal_segment_attention."""
+    b, t, h, d = q.shape
+    assert t % Q_BLOCK == 0 and t % K_BLOCK == 0, (t, Q_BLOCK)
+    scale = 1.0 / (d ** 0.5)
+    grid = (h, t // Q_BLOCK)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, t_total=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, Q_BLOCK, 1, d), lambda hi, qi: (0, qi, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi, qi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi, qi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, Q_BLOCK), lambda hi, qi: (0, qi)),
+            pl.BlockSpec((b, t), lambda hi, qi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, Q_BLOCK, 1, d), lambda hi, qi: (0, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        interpret=True,
+    )(q, k, v, seg, seg)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale):
+    """One head per grid step, vectorized over slots.
+    q [B,1,hd]; k,v [B,T,1,hd]; pos [B]."""
+    t = k_ref.shape[1]
+    q = q_ref[:, 0, :].astype(jnp.float32)             # [B, hd]
+    k = k_ref[:, :, 0, :].astype(jnp.float32)          # [B, T, hd]
+    v = v_ref[:, :, 0, :].astype(jnp.float32)
+    s = jnp.einsum("bd,btd->bt", q, k) * scale         # [B, T]
+    valid = jax.lax.iota(jnp.int32, t)[None, :] <= pos_ref[...][:, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bt,btd->bd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q: [B, H, D]; k_cache, v_cache: [B, T, H, D]; pos: [B] int32.
+    Equivalent to ref.decode_attention."""
+    b, t, h, d = k_cache.shape
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, 1, d), lambda hi: (0, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b,), lambda hi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, d), lambda hi: (0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, pos)

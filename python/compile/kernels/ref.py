@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (+ hypothesis sweeps) asserts
+`kernels.* ≈ ref.*` over shapes/dtypes/seeds. The train graph's backward
+pass is additionally checked against jax.grad of the reference loss.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, positions, base=10000.0):
+    """Rotary embedding. x: [..., n_heads, head_dim], positions: int32 array
+    matching x's leading dims (one position per token)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def causal_segment_attention(q, k, v, seg):
+    """Full (prefill / teacher-forcing) attention.
+
+    q,k,v: [B, T, H, D] (already rope'd); seg: [B, T] int32 segment ids
+    (0 = padding; packing restarts segments).
+    mask[i,j] = causal(j<=i) AND seg[i]==seg[j] AND seg[j] != 0.
+    """
+    b, t, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    causal = j <= i                                        # [T, T]
+    same = seg[:, :, None] == seg[:, None, :]              # [B, T, T]
+    valid = (seg[:, None, :] != 0) & same & causal[None]
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows with no valid key (padding queries) -> zero output
+    any_valid = jnp.any(valid, axis=-1)                    # [B, T]
+    out = jnp.einsum("bhij,bjhd->bihd", p, v)
+    return jnp.where(any_valid[:, :, None, None], out, 0.0)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-step attention against a per-slot dense KV cache.
+
+    q: [B, H, D] (rope'd query at position pos[b]);
+    k_cache, v_cache: [B, T, H, D]; pos: [B] int32 — attends to 0..=pos[b].
+    """
+    b, t, h, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bhd,bjhd->bhj", q, k_cache) * scale
+    valid = jnp.arange(t)[None, :] <= pos[:, None]         # [B, T]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhj,bjhd->bhd", p, v_cache)
+
+
+def fused_loss_fwd(h, embed, targets, behavior_lp, clip_c):
+    """Reference for the fused IS-REINFORCE head+loss kernel (forward).
+
+    h: [B, T, D] final hidden states (already final-norm'ed);
+    embed: [V, D] tied softmax head; targets: [B, T] int32;
+    behavior_lp: [B, T] behavior-policy logprob of the target token.
+
+    Returns (lp, w, ent):
+      lp  [B,T] current-policy logprob of the target token (differentiable)
+      w   [B,T] truncated IS weight min(c, exp(lp - behavior_lp)) (stop-grad)
+      ent [B,T] policy entropy at each position (stop-grad, metrics only)
+    """
+    logits = jnp.einsum("btd,vd->btv", h, embed)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lp_all = logits - lse[..., None]
+    lp = jnp.take_along_axis(lp_all, targets[..., None], axis=-1)[..., 0]
+    ratio = jnp.exp(lp - behavior_lp)
+    w = jnp.minimum(ratio, clip_c)
+    p = jnp.exp(lp_all)
+    ent = -jnp.sum(p * lp_all, axis=-1)
+    return lp, jax.lax.stop_gradient(w), jax.lax.stop_gradient(ent)
+
+
+def adam_update(p, m, v, g, lr, beta1, beta2, eps, step):
+    """Reference fused Adam (bias-corrected). step is the 1-based step."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    p2 = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p2, m2, v2

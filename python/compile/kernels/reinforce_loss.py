@@ -1,0 +1,152 @@
+"""Fused IS-REINFORCE head + loss Pallas kernel (L1), with custom VJP.
+
+This is the training hot-spot of the paper's Eq. (5): for every target
+token it computes, in one VMEM-resident tile pass,
+
+    logits  = h @ E^T                 (tied softmax head, MXU matmul)
+    lp      = log_softmax(logits)[y]  (current-policy logprob)
+    ratio   = exp(lp - behavior_lp)   (importance ratio vs recorded mu)
+    w       = min(ratio, c)           (truncated IS weight, Eq. 5)
+    ent     = entropy(softmax(logits))
+
+without materializing the [B, T, V] logits tensor in HBM — each grid step
+holds a [B, T_BLOCK, V] tile (batch vectorized in the body; the grid
+walks time tiles only — see attention.py for the grid-shape rationale).
+The IS weight `w` is a stop-gradient coefficient (Eq. 5 weights the
+*gradient*), so the backward pass is
+d logits = dlp * (onehot(y) - softmax(logits)), recomputed tile-by-tile
+(activation recompute: the fwd saves only h/E/targets, not logits).
+
+The custom_vjp backward is itself a Pallas kernel that accumulates dE
+across grid steps into a single output block (sequential grid semantics).
+pytest checks both fwd (vs ref.fused_loss_fwd) and bwd (vs jax.grad of the
+reference).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_BLOCK = 32
+
+
+def _fwd_kernel(h_ref, e_ref, tgt_ref, blp_ref, c_ref, lp_ref, w_ref, ent_ref):
+    """One time-tile grid step, vectorized over batch.
+    h [B,bt,d]; e [V,d]; tgt/blp [B,bt]; c [1]."""
+    h = h_ref[...].astype(jnp.float32)                  # [B, bt, d]
+    e = e_ref[...].astype(jnp.float32)                  # [V, d]
+    logits = jnp.einsum("btd,vd->btv", h, e)            # [B, bt, V]
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    lp_all = logits - lse[..., None]
+    tgt = tgt_ref[...]
+    onehot = jax.lax.iota(jnp.int32, e.shape[0])[None, None, :] == tgt[..., None]
+    lp = jnp.sum(jnp.where(onehot, lp_all, 0.0), axis=-1)
+    ratio = jnp.exp(lp - blp_ref[...])
+    w = jnp.minimum(ratio, c_ref[0])
+    p = jnp.exp(lp_all)
+    ent = -jnp.sum(p * lp_all, axis=-1)
+    lp_ref[...] = lp
+    w_ref[...] = w
+    ent_ref[...] = ent
+
+
+def _bwd_kernel(h_ref, e_ref, tgt_ref, dlp_ref, dh_ref, de_ref):
+    """Backward grid step: recompute the logits tile, emit dh and
+    accumulate dE. The dE block is shared by every grid step."""
+    ti = pl.program_id(0)
+    h = h_ref[...].astype(jnp.float32)                  # [B, bt, d]
+    e = e_ref[...].astype(jnp.float32)                  # [V, d]
+    logits = jnp.einsum("btd,vd->btv", h, e)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)          # softmax [B, bt, V]
+    tgt = tgt_ref[...]
+    onehot = (
+        jax.lax.iota(jnp.int32, e.shape[0])[None, None, :] == tgt[..., None]
+    ).astype(jnp.float32)
+    dlogits = dlp_ref[...][..., None] * (onehot - p)    # [B, bt, V]
+    dh_ref[...] = jnp.einsum("btv,vd->btd", dlogits, e).astype(dh_ref.dtype)
+
+    @pl.when(ti == 0)
+    def _init():
+        de_ref[...] = jnp.zeros_like(de_ref)
+
+    de_ref[...] += jnp.einsum("btv,btd->vd", dlogits, h).astype(de_ref.dtype)
+
+
+def _fused_loss_fwd_impl(h, embed, targets, behavior_lp, clip_c):
+    b, t, d = h.shape
+    v = embed.shape[0]
+    assert t % T_BLOCK == 0, (t, T_BLOCK)
+    grid = (t // T_BLOCK,)
+    c_arr = jnp.reshape(clip_c.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, T_BLOCK, d), lambda ti: (0, ti, 0)),
+            pl.BlockSpec((v, d), lambda ti: (0, 0)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+        ],
+        interpret=True,
+    )(h, embed, targets, behavior_lp, c_arr)
+
+
+def _fused_loss_bwd_impl(h, embed, targets, dlp):
+    b, t, d = h.shape
+    v = embed.shape[0]
+    grid = (t // T_BLOCK,)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, T_BLOCK, d), lambda ti: (0, ti, 0)),
+            pl.BlockSpec((v, d), lambda ti: (0, 0)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+            pl.BlockSpec((b, T_BLOCK), lambda ti: (0, ti)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, T_BLOCK, d), lambda ti: (0, ti, 0)),
+            pl.BlockSpec((v, d), lambda ti: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, d), h.dtype),
+            jax.ShapeDtypeStruct((v, d), embed.dtype),
+        ],
+        interpret=True,
+    )(h, embed, targets, dlp)
+
+
+@jax.custom_vjp
+def fused_loss(h, embed, targets, behavior_lp, clip_c):
+    """Returns (lp, w, ent) — see module docstring. Differentiable in
+    (h, embed) through lp only; w and ent are stop-grad outputs."""
+    return _fused_loss_fwd_impl(h, embed, targets, behavior_lp, clip_c)
+
+
+def _vjp_fwd(h, embed, targets, behavior_lp, clip_c):
+    out = _fused_loss_fwd_impl(h, embed, targets, behavior_lp, clip_c)
+    return out, (h, embed, targets)
+
+
+def _vjp_bwd(res, cotangents):
+    h, embed, targets = res
+    dlp, _dw, _dent = cotangents  # w/ent are stop-grad: cotangents dropped
+    dh, de = _fused_loss_bwd_impl(h, embed, targets, dlp)
+    return dh, de, None, None, None
+
+
+fused_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,256 @@
+"""L2: the transformer policy model (fwd / decode / train / score graphs).
+
+This is the Qwen-2.5 stand-in (DESIGN.md §2): a decoder-only transformer
+with RMSNorm, RoPE, GELU MLP and a tied embedding/softmax head, expressed
+as pure functions over a *flat list* of parameter arrays (canonical order
+= `configs.ModelConfig.param_specs()`, mirrored by the rust manifest).
+
+Five computations are exported by aot.py, one HLO artifact each:
+
+  init        seed -> params
+  decode      one continuous-batching engine step for all slots (the
+              request-path hot loop; calls kernels.decode_attention and
+              samples in-graph via Gumbel-max so one PJRT execution
+              produces the next token AND its behavior logprob)
+  train       fused fwd+bwd+Adam IS-REINFORCE optimizer step (calls
+              kernels.reinforce_loss with its custom-VJP Pallas backward
+              and kernels.adam)
+  sft         cross-entropy warmup step (the "base model" stand-in)
+  score/score_full   teacher-forced per-token logprobs (preprocessor ref
+              logprobs; Fig 7 KL study) — calls kernels.flash_attention
+
+Conventions (rust side must match — recorded in artifacts/manifest.json):
+  * tokens[b, t] with t=0 the BOS; predictions are aligned so that index t
+    of lp / mask / behavior_lp / advantage refers to predicting
+    tokens[b, t+1]; the last column of mask MUST be 0.
+  * seg[b, t] = 0 for padding; packed sequences get ids 1, 2, ...;
+    pos[b, t] restarts at 0 for each segment.
+  * metrics vector layout: see METRIC_NAMES / SFT_METRIC_NAMES.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, vocab
+from .kernels import adam as adam_k
+from .kernels import attention as attn_k
+from .kernels import ref
+from .kernels import reinforce_loss as loss_k
+
+METRIC_NAMES = [
+    "loss", "pg_loss", "v_loss", "ess", "mean_kl", "clip_frac",
+    "grad_norm", "entropy", "mean_ratio", "n_tokens",
+]
+SFT_METRIC_NAMES = ["loss", "grad_norm", "n_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# parameter handling
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: configs.ModelConfig, seed):
+    """Build the flat parameter list from an int32 seed (traceable)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name == "value_head":
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif len(shape) == 1:  # norm scales
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+def unpack(cfg: configs.ModelConfig, params):
+    """flat list -> dict by name."""
+    return {name: p for (name, _), p in zip(cfg.param_specs(), params)}
+
+
+# ---------------------------------------------------------------------------
+# shared forward pieces
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads):
+    b = x.shape[:-1]
+    return x.reshape(*b, n_heads, x.shape[-1] // n_heads)
+
+
+def _merge_heads(x):
+    b = x.shape[:-2]
+    return x.reshape(*b, x.shape[-2] * x.shape[-1])
+
+
+def forward_hidden(cfg, params, tokens, seg, pos, use_pallas_attn):
+    """Teacher-forced forward. tokens/seg/pos: [B, T] int32.
+    Returns final-normed hidden states [B, T, d]."""
+    p = unpack(cfg, params)
+    x = p["embed"][tokens]                                   # [B, T, d]
+    attention = (
+        attn_k.flash_attention if use_pallas_attn else ref.causal_segment_attention
+    )
+    for l in range(cfg.n_layers):
+        h = ref.rmsnorm(x, p[f"l{l}.ln1"])
+        q = ref.rope(_split_heads(h @ p[f"l{l}.wq"], cfg.n_heads), pos)
+        k = ref.rope(_split_heads(h @ p[f"l{l}.wk"], cfg.n_heads), pos)
+        v = _split_heads(h @ p[f"l{l}.wv"], cfg.n_heads)
+        att = attention(q, k, v, seg)
+        x = x + _merge_heads(att) @ p[f"l{l}.wo"]
+        h2 = ref.rmsnorm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    return ref.rmsnorm(x, p["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# decode (engine hot loop)
+# ---------------------------------------------------------------------------
+
+def kv_shape(cfg):
+    return (cfg.n_layers, 2, cfg.gen_batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+
+
+def decode_step(cfg, params, kv, pos, cur_tok, gumbel, force_tok, force_mask, temp):
+    """One engine step for every slot.
+
+    kv: [L, 2, B, Tmax, H, hd]; pos[b] = cache index the current token is
+    written at (and attended up to); cur_tok: the token being fed in;
+    gumbel: [B, V] Gumbel(0,1) noise from the rust RNG; force_tok/mask:
+    continuous-batching prompt forcing (prefill-through-decode).
+
+    Returns (next_tok[B], chosen_lp[B], logprobs[B, V], kv', ent[B]).
+    chosen_lp / logprobs are under the actual sampling distribution
+    softmax(logits / temp) — the true behavior policy mu.
+    """
+    p = unpack(cfg, params)
+    bsz = cfg.gen_batch
+    rows = jnp.arange(bsz)
+    x = p["embed"][cur_tok]                                  # [B, d]
+    for l in range(cfg.n_layers):
+        h = ref.rmsnorm(x, p[f"l{l}.ln1"])
+        q = ref.rope(_split_heads(h @ p[f"l{l}.wq"], cfg.n_heads), pos)
+        k = ref.rope(_split_heads(h @ p[f"l{l}.wk"], cfg.n_heads), pos)
+        v = _split_heads(h @ p[f"l{l}.wv"], cfg.n_heads)
+        kv = kv.at[l, 0, rows, pos].set(k)
+        kv = kv.at[l, 1, rows, pos].set(v)
+        att = attn_k.decode_attention(q, kv[l, 0], kv[l, 1], pos)
+        x = x + _merge_heads(att) @ p[f"l{l}.wo"]
+        h2 = ref.rmsnorm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    hN = ref.rmsnorm(x, p["final_norm"])
+    logits = (hN @ p["embed"].T) / temp                      # [B, V]
+    lp_all = jax.nn.log_softmax(logits, axis=-1)
+    sampled = jnp.argmax(logits + gumbel, axis=-1).astype(jnp.int32)
+    next_tok = jnp.where(force_mask > 0.5, force_tok, sampled).astype(jnp.int32)
+    chosen_lp = jnp.take_along_axis(lp_all, next_tok[:, None], axis=-1)[:, 0]
+    ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1)
+    return next_tok, chosen_lp, lp_all, kv, ent
+
+
+# ---------------------------------------------------------------------------
+# train (IS-REINFORCE + value baseline + fused Adam)
+# ---------------------------------------------------------------------------
+
+def _targets(tokens):
+    """targets[t] = tokens[t+1]; last column PAD (mask must be 0 there)."""
+    return jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), vocab.PAD_ID, jnp.int32)],
+        axis=1,
+    )
+
+
+def train_step(cfg, params, m, v, step, tokens, seg, pos, behavior_lp,
+               adv_in, reward, mask, lr, clip_c, adv_mode, vf_coef):
+    """One optimizer step of Eq. (5) with truncated IS weights.
+
+    adv_mode = 0: use adv_in (preprocessor group baseline, GRPO-style);
+    adv_mode = 1: use R - v_phi (Eq. 4 learned value baseline, trained
+    in the same step with coefficient vf_coef).
+
+    reward is per-token [B, T] (constant across each packed segment) so
+    that online sequence packing — multiple sequences per row — stays
+    exact. Returns (params', m', v', metrics[10]) — METRIC_NAMES order.
+    """
+    targets = _targets(tokens)
+    nm = jnp.sum(mask) + 1e-6
+
+    def loss_fn(ps):
+        h = forward_hidden(cfg, ps, tokens, seg, pos, use_pallas_attn=False)
+        lp, w, ent = loss_k.fused_loss(h, ps[0], targets, behavior_lp, clip_c)
+        values = h @ unpack(cfg, ps)["value_head"]           # [B, T]
+        adv_value = reward - jax.lax.stop_gradient(values)
+        adv_used = adv_mode * adv_value + (1.0 - adv_mode) * adv_in
+        pg_loss = -jnp.sum(w * adv_used * lp * mask) / nm
+        v_loss = jnp.sum(jnp.square(values - reward) * mask) / nm
+        loss = pg_loss + vf_coef * v_loss
+        aux = (pg_loss, v_loss, lp, w, ent)
+        return loss, aux
+
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    pg_loss, v_loss, lp, w, ent = aux
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    p2, m2, v2 = adam_k.adam_update_tree(params, m, v, grads, lr, step)
+
+    # on-policyness metrics (Fig 6): masked ESS of the truncated weights,
+    # k3 KL estimator, clip fraction.
+    sw = jnp.sum(w * mask)
+    sw2 = jnp.sum(jnp.square(w) * mask)
+    ess = jnp.square(sw) / (nm * sw2 + 1e-12)
+    log_ratio = lp - behavior_lp
+    ratio = jnp.exp(log_ratio)
+    mean_kl = jnp.sum((ratio - 1.0 - log_ratio) * mask) / nm
+    clip_frac = jnp.sum((ratio > clip_c).astype(jnp.float32) * mask) / nm
+    entropy = jnp.sum(ent * mask) / nm
+    mean_ratio = jnp.sum(ratio * mask) / nm
+
+    metrics = jnp.stack([
+        loss, pg_loss, v_loss, ess, mean_kl, clip_frac,
+        gnorm, entropy, mean_ratio, jnp.sum(mask),
+    ])
+    return p2, m2, v2, metrics
+
+
+def sft_step(cfg, params, m, v, step, tokens, seg, pos, mask, lr):
+    """Cross-entropy warmup step (the pretraining stand-in). Reuses the
+    fused loss kernel: CE gradient == REINFORCE gradient with w*adv == 1."""
+    targets = _targets(tokens)
+    nm = jnp.sum(mask) + 1e-6
+    zeros = jnp.zeros_like(mask)
+
+    def loss_fn(ps):
+        h = forward_hidden(cfg, ps, tokens, seg, pos, use_pallas_attn=False)
+        lp, _w, _ent = loss_k.fused_loss(h, ps[0], targets, zeros, jnp.float32(1.0))
+        return -jnp.sum(lp * mask) / nm
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    p2, m2, v2 = adam_k.adam_update_tree(params, m, v, grads, lr, step)
+    return p2, m2, v2, jnp.stack([loss, gnorm, jnp.sum(mask)])
+
+
+# ---------------------------------------------------------------------------
+# scoring (preprocessor / KL study)
+# ---------------------------------------------------------------------------
+
+def score(cfg, params, tokens, seg, pos):
+    """Per-token logprobs under `params` (teacher forcing, Pallas flash
+    attention + fused head). lp[t] refers to tokens[t+1]; lp[:, -1] = 0."""
+    h = forward_hidden(cfg, params, tokens, seg, pos, use_pallas_attn=True)
+    targets = _targets(tokens)
+    zeros = jnp.zeros(tokens.shape, jnp.float32)
+    lp, _w, ent = loss_k.fused_loss(h, params[0], targets, zeros, jnp.float32(1.0))
+    lp = lp.at[:, -1].set(0.0)
+    return lp, ent
+
+
+def score_full(cfg, params, tokens, seg, pos):
+    """score() plus the full per-position log-distribution [B, T, V]
+    (Fig 7 needs full distributions for exact per-token KL)."""
+    h = forward_hidden(cfg, params, tokens, seg, pos, use_pallas_attn=True)
+    logits = h @ params[0].T
+    logdist = jax.nn.log_softmax(logits, axis=-1)
+    targets = _targets(tokens)
+    lp = jnp.take_along_axis(logdist, targets[..., None], axis=-1)[..., 0]
+    lp = lp.at[:, -1].set(0.0)
+    return lp, logdist

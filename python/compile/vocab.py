@@ -1,0 +1,58 @@
+"""Shared vocabulary between the python compile path and the rust runtime.
+
+The tokenizer is character-level over a small fixed alphabet that covers the
+synthetic arithmetic-reasoning tasks (the OpenReasoner-Zero stand-in, see
+DESIGN.md §2).  The rust side (rust/src/model/tokenizer.rs) mirrors this
+table; `aot.py` dumps it to artifacts/vocab.json and a cargo test
+cross-checks the two, so they can never drift silently.
+
+Token ids:
+    0  PAD      padding (never predicted, masked out of every loss)
+    1  BOS      beginning of sequence
+    2  EOS      end of sequence (generation stops here)
+    3+ printable characters from `ALPHABET`, in order.
+
+`V` is padded to 64 so the logits matmul hits MXU-friendly shapes; the
+trailing ids are unused and their logits are forced to -inf nowhere — the
+model simply learns to never produce them (they never appear in data).
+"""
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+# Order is load-bearing: rust/src/model/tokenizer.rs mirrors it.
+ALPHABET = "0123456789+-*/=()<>.,:; \nabcdefghijklmnopqrstuvwxyz?_"
+
+V = 64  # padded vocab size
+
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+
+
+def build_table():
+    """id -> token string (specials as <...>), padded to V with <unused-i>."""
+    table = list(SPECIALS) + [c for c in ALPHABET]
+    assert len(table) <= V, f"alphabet too large: {len(table)} > {V}"
+    while len(table) < V:
+        table.append(f"<unused{len(table)}>")
+    return table
+
+
+def encode(text: str):
+    base = len(SPECIALS)
+    idx = {c: base + i for i, c in enumerate(ALPHABET)}
+    return [idx[c] for c in text]
+
+
+def decode(ids):
+    table = build_table()
+    out = []
+    for i in ids:
+        if i == EOS_ID:
+            break
+        if i in (PAD_ID, BOS_ID):
+            continue
+        tok = table[i]
+        if not tok.startswith("<"):
+            out.append(tok)
+    return "".join(out)

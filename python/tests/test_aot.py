@@ -1,0 +1,79 @@
+"""AOT path smoke tests: HLO text emission, manifest completeness and the
+ABI conventions the rust runtime depends on."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, configs, model, vocab
+
+
+def test_hlo_text_emission_roundtrip(tmp_path):
+    """Lower the tiny init graph and check it is valid HLO text."""
+    cfg = configs.TINY
+    files = aot.lower_variant(cfg, str(tmp_path), only={"init"})
+    assert files == {"init": "tiny_init.hlo.txt"}
+    text = (tmp_path / "tiny_init.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # the entry layout takes exactly one s32 scalar (the seed)
+    assert "entry_computation_layout={(s32[])->" in text
+
+
+def test_manifest_structure(tmp_path):
+    cfg = configs.TINY
+    files = {"tiny": {"init": "tiny_init.hlo.txt"}}
+    manifest = aot.build_manifest([cfg], files)
+    v = manifest["variants"]["tiny"]
+    assert v["n_params"] == cfg.n_params()
+    assert len(v["params"]) == len(cfg.param_specs())
+    assert v["params"][0]["name"] == "embed"
+    assert manifest["metric_names"] == model.METRIC_NAMES
+    assert manifest["pad_id"] == vocab.PAD_ID
+    # every graph has an input signature
+    for g in ("init", "decode", "train", "sft", "score", "score_full"):
+        assert g in v["inputs"], g
+    # json-serializable
+    json.dumps(manifest)
+
+
+def test_signatures_match_model_conventions():
+    cfg = configs.TINY
+    sigs = aot.graph_signatures(cfg)
+    decode = {s[0]: s for s in sigs["decode"]}
+    assert decode["kv"][1] == model.kv_shape(cfg)
+    assert decode["gumbel"][1] == (cfg.gen_batch, cfg.vocab)
+    train = {s[0]: s for s in sigs["train"]}
+    # per-token reward (packing-exact)
+    assert train["reward"][1] == (cfg.train_batch, cfg.seq_len)
+    assert train["behavior_lp"][2] == "f32"
+    assert train["tokens"][2] == "i32"
+
+
+def test_generated_artifacts_match_current_code():
+    """If artifacts/ exists, its manifest must agree with configs.py —
+    guards against stale artifacts after a model change."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["metric_names"] == model.METRIC_NAMES
+    for name, cfg in configs.VARIANTS.items():
+        v = manifest["variants"][name]
+        assert v["n_params"] == cfg.n_params(), f"stale artifacts for {name}"
+        assert v["seq_len"] == cfg.seq_len
+        got = [(p["name"], tuple(p["shape"])) for p in v["params"]]
+        assert got == [(n, tuple(s)) for n, s in cfg.param_specs()]
+
+
+def test_vocab_table_stable():
+    table = vocab.build_table()
+    assert len(table) == vocab.V
+    assert table[vocab.PAD_ID] == "<pad>"
+    assert table[vocab.EOS_ID] == "<eos>"
+    text = "q:12+34=\na:46\n"
+    assert vocab.decode(vocab.encode(text)) == text

@@ -1,0 +1,183 @@
+"""L2 model invariants: causality, packing isolation, decode/score
+consistency, training-step behaviour. All on the tiny config."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, vocab
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 0)
+
+
+def mk_tokens(seed, rows, fill):
+    """Simple single-segment rows: BOS + `fill` random alphabet tokens."""
+    t = CFG.seq_len
+    key = jax.random.PRNGKey(seed)
+    body = jax.random.randint(key, (rows, fill), 3, 40)
+    tokens = jnp.zeros((rows, t), jnp.int32)
+    tokens = tokens.at[:, 0].set(vocab.BOS_ID)
+    tokens = tokens.at[:, 1 : fill + 1].set(body)
+    seg = jnp.zeros((rows, t), jnp.int32).at[:, : fill + 1].set(1)
+    pos = jnp.zeros((rows, t), jnp.int32).at[:, : fill + 1].set(
+        jnp.arange(fill + 1)
+    )
+    return tokens, seg, pos
+
+
+def test_causality_future_tokens_dont_change_past_hidden(params):
+    tokens, seg, pos = mk_tokens(0, CFG.train_batch, 20)
+    h1 = model.forward_hidden(CFG, params, tokens, seg, pos, False)
+    tokens2 = tokens.at[:, 15].set(7)  # perturb position 15
+    h2 = model.forward_hidden(CFG, params, tokens2, seg, pos, False)
+    np.testing.assert_allclose(h1[:, :15], h2[:, :15], atol=1e-6)
+    assert not np.allclose(h1[:, 15:21], h2[:, 15:21], atol=1e-6)
+
+
+def test_packed_segments_are_isolated(params):
+    """Two sequences packed in one row must produce the same hidden states
+    as the same sequences in separate rows."""
+    t = CFG.seq_len
+    a = [vocab.BOS_ID, 5, 6, 7, 8]
+    b = [vocab.BOS_ID, 9, 10, 11]
+    packed = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    packed = packed.at[0, : len(a)].set(jnp.array(a))
+    packed = packed.at[0, len(a) : len(a) + len(b)].set(jnp.array(b))
+    seg = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    seg = seg.at[0, : len(a)].set(1).at[0, len(a) : len(a) + len(b)].set(2)
+    pos = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    pos = pos.at[0, : len(a)].set(jnp.arange(len(a)))
+    pos = pos.at[0, len(a) : len(a) + len(b)].set(jnp.arange(len(b)))
+    h_packed = model.forward_hidden(CFG, params, packed, seg, pos, False)
+
+    solo = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    solo = solo.at[0, : len(a)].set(jnp.array(a))
+    solo = solo.at[1, : len(b)].set(jnp.array(b))
+    seg_s = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    seg_s = seg_s.at[0, : len(a)].set(1).at[1, : len(b)].set(1)
+    pos_s = jnp.zeros((CFG.train_batch, t), jnp.int32)
+    pos_s = pos_s.at[0, : len(a)].set(jnp.arange(len(a)))
+    pos_s = pos_s.at[1, : len(b)].set(jnp.arange(len(b)))
+    h_solo = model.forward_hidden(CFG, params, solo, seg_s, pos_s, False)
+
+    np.testing.assert_allclose(h_packed[0, : len(a)], h_solo[0, : len(a)], atol=1e-5)
+    np.testing.assert_allclose(
+        h_packed[0, len(a) : len(a) + len(b)], h_solo[1, : len(b)], atol=1e-5
+    )
+
+
+def test_decode_chain_matches_teacher_forced_score(params):
+    """The decode graph's chosen-token logprobs must equal the score
+    graph's teacher-forced logprobs for the same context — the IS-weight
+    consistency Eq. 5 relies on."""
+    forced = [5, 9, 12, 7, 4]
+    bg = CFG.gen_batch
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    cur = jnp.full((bg,), vocab.BOS_ID, jnp.int32)
+    gum = jnp.zeros((bg, CFG.vocab))
+    lps = []
+    for i, ftok in enumerate(forced):
+        pos = jnp.full((bg,), i, jnp.int32)
+        nt, lp, _, kv, _ = model.decode_step(
+            CFG, params, kv, pos, cur,
+            gum, jnp.full((bg,), ftok, jnp.int32), jnp.ones((bg,)),
+            jnp.float32(1.0),
+        )
+        lps.append(float(lp[0]))
+        cur = nt
+
+    tokens, seg, pos = mk_tokens(0, CFG.train_batch, len(forced))
+    tokens = tokens.at[:, 1 : len(forced) + 1].set(jnp.array(forced))
+    lp_score, _ = model.score(CFG, params, tokens, seg, pos)
+    for i in range(len(forced)):
+        assert abs(lps[i] - float(lp_score[0, i])) < 2e-3, (i, lps[i], lp_score[0, i])
+
+
+def test_decode_samples_argmax_with_zero_gumbel(params):
+    bg = CFG.gen_batch
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    cur = jnp.full((bg,), vocab.BOS_ID, jnp.int32)
+    nt, lp, lp_all, _, _ = model.decode_step(
+        CFG, params, kv, jnp.zeros((bg,), jnp.int32), cur,
+        jnp.zeros((bg, CFG.vocab)), jnp.zeros((bg,), jnp.int32),
+        jnp.zeros((bg,)), jnp.float32(1.0),
+    )
+    np.testing.assert_array_equal(nt, jnp.argmax(lp_all, axis=-1))
+    # chosen lp is the max logprob
+    np.testing.assert_allclose(lp, jnp.max(lp_all, axis=-1), atol=1e-6)
+
+
+def test_train_step_is_onpolicy_consistent(params):
+    """behavior_lp from score => ESS = 1, KL = 0, and loss gradient flows."""
+    tokens, seg, pos = mk_tokens(1, CFG.train_batch, 24)
+    mask = jnp.zeros(tokens.shape).at[:, 0:23].set(1.0)
+    blp, _ = model.score(CFG, params, tokens, seg, pos)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    p2, m2, v2, metrics = model.train_step(
+        CFG, params, m, v, jnp.float32(1.0), tokens, seg, pos,
+        blp, jnp.ones(tokens.shape), jnp.ones(tokens.shape),
+        mask, jnp.float32(1e-3), jnp.float32(5.0), jnp.float32(0.0),
+        jnp.float32(0.0),
+    )
+    names = model.METRIC_NAMES
+    ess = float(metrics[names.index("ess")])
+    kl = float(metrics[names.index("mean_kl")])
+    assert abs(ess - 1.0) < 1e-3
+    assert abs(kl) < 1e-4
+    assert float(metrics[names.index("grad_norm")]) > 0.0
+    # params moved
+    assert float(jnp.sum(jnp.abs(p2[0] - params[0]))) > 0.0
+
+
+def test_value_mode_uses_value_head(params):
+    """adv_mode=1 trains the value head (Eq. 4's v_phi)."""
+    tokens, seg, pos = mk_tokens(2, CFG.train_batch, 16)
+    mask = jnp.zeros(tokens.shape).at[:, 0:15].set(1.0)
+    blp, _ = model.score(CFG, params, tokens, seg, pos)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    vh_index = [n for n, _ in CFG.param_specs()].index("value_head")
+    p2, _, _, _ = model.train_step(
+        CFG, params, m, v, jnp.float32(1.0), tokens, seg, pos,
+        blp, jnp.zeros(tokens.shape), jnp.ones(tokens.shape),
+        mask, jnp.float32(1e-3), jnp.float32(5.0), jnp.float32(1.0),
+        jnp.float32(0.5),
+    )
+    dv = float(jnp.sum(jnp.abs(p2[vh_index] - params[vh_index])))
+    assert dv > 0.0, "value head must receive gradient in value mode"
+
+
+def test_sft_reduces_loss(params):
+    tokens, seg, pos = mk_tokens(3, CFG.train_batch, 30)
+    mask = jnp.zeros(tokens.shape).at[:, 0:29].set(1.0)
+    ps = list(params)
+    m = [jnp.zeros_like(p) for p in ps]
+    v = [jnp.zeros_like(p) for p in ps]
+    losses = []
+    for step in range(1, 7):
+        ps, m, v, metrics = model.sft_step(
+            CFG, ps, m, v, jnp.float32(step), tokens, seg, pos, mask,
+            jnp.float32(1e-2),
+        )
+        losses.append(float(metrics[0]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_score_full_distribution_normalizes(params):
+    tokens, seg, pos = mk_tokens(4, CFG.train_batch, 10)
+    lp, logdist = model.score_full(CFG, params, tokens, seg, pos)
+    z = jnp.sum(jnp.exp(logdist), axis=-1)
+    np.testing.assert_allclose(z, jnp.ones_like(z), atol=1e-4)
+    # lp consistent with the distribution
+    tgt = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((tokens.shape[0], 1), jnp.int32)], axis=1
+    )
+    picked = jnp.take_along_axis(logdist, tgt[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(lp[:, :-1], picked[:, :-1], atol=1e-6)

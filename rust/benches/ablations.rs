@@ -1,0 +1,151 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * advantage estimator — group baseline (GRPO-style) vs normalized
+//!   group vs learned value head (Eq. 4);
+//! * rollout-queue overflow policy — the paper's lag-minimizing
+//!   DropOldest ring vs plain Block backpressure;
+//! * KV handling at in-flight updates — retain (paper's choice) vs
+//!   recompute: the throughput cost the §5.1 discussion quantifies.
+//!
+//! `cargo bench --bench ablations`
+
+use pipeline_rl::benchkit;
+use pipeline_rl::broker::Policy;
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator;
+use pipeline_rl::data::task::{TaskGen, TaskKind};
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::metrics::MetricsHub;
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::AdvantageMode;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::logging::{self, Level};
+use pipeline_rl::util::timer::Stopwatch;
+use pipeline_rl::util::Rng;
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.variant = "tiny".into();
+    cfg.rl_steps = 16;
+    cfg.sft_steps = 60;
+    cfg.group_size = 4;
+    cfg.max_new_tokens = 24;
+    cfg.task.kinds = vec![TaskKind::Copy, TaskKind::Add];
+    cfg.task.max_operand = 20;
+    cfg.log_every = 0;
+    cfg.seed = 21;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Warn);
+    let base = base_cfg();
+    let warm = {
+        let mut rt = Runtime::new()?;
+        let hub = MetricsHub::new();
+        coordinator::warmup::run_sft(&mut rt, &base, &hub)?
+    };
+
+    benchkit::section("ablation 1 — advantage estimator");
+    let mut rows = Vec::new();
+    for (name, mode, vf) in [
+        ("group", AdvantageMode::Group, 0.0),
+        ("group_norm", AdvantageMode::GroupNormalized, 0.0),
+        ("value (Eq. 4)", AdvantageMode::Value, 0.5),
+    ] {
+        let mut cfg = base.clone();
+        cfg.advantage = mode;
+        cfg.vf_coef = vf;
+        let s = coordinator::run(cfg, Some(warm.clone()))?;
+        rows.push(vec![
+            name.to_string(),
+            benchkit::f3(
+                s.report
+                    .series("reward_vs_samples")
+                    .map(|r| r.tail_mean(5))
+                    .unwrap_or(f64::NAN),
+            ),
+            benchkit::f3(
+                s.report.series("train/ess").map(|r| r.tail_mean(5)).unwrap_or(f64::NAN),
+            ),
+            benchkit::f3(
+                s.report
+                    .series("train/v_loss")
+                    .map(|r| r.tail_mean(5))
+                    .unwrap_or(f64::NAN),
+            ),
+        ]);
+    }
+    benchkit::table(&["advantage", "reward (tail)", "ESS", "v_loss"], &rows);
+
+    benchkit::section("ablation 2 — rollout queue policy under a slow trainer");
+    let mut rows = Vec::new();
+    for (name, policy, cap) in [
+        ("drop_oldest (ring, paper)", Policy::DropOldest, 16usize),
+        ("block (backpressure)", Policy::Block, 16),
+    ] {
+        let mut cfg = base.clone();
+        cfg.rollout_policy = policy;
+        cfg.rollout_queue = cap;
+        cfg.checkpoint_every = 0;
+        let s = coordinator::run(cfg, Some(warm.clone()))?;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.0}", s.report.counters.get("rollouts_dropped_ring").copied().unwrap_or(0.0)),
+            benchkit::f3(
+                s.report
+                    .series("train/mean_lag")
+                    .map(|r| r.tail_mean(5))
+                    .unwrap_or(f64::NAN),
+            ),
+            format!("{:.1}", s.wall_seconds),
+        ]);
+    }
+    benchkit::table(&["policy", "dropped", "mean lag (tail)", "wall (s)"], &rows);
+
+    benchkit::section("ablation 3 — KV retain vs recompute at weight updates");
+    let mut rows = Vec::new();
+    for (name, recompute) in [("retain (paper)", false), ("recompute", true)] {
+        let mut rt = Runtime::new()?;
+        let params = rt.init_params("tiny", 1)?;
+        let mut ecfg = EngineCfg::new("tiny");
+        ecfg.max_new_tokens = 40;
+        ecfg.recompute_kv_on_update = recompute;
+        let mut eng = Engine::new(&mut rt, ecfg, &params, 0, Rng::new(4))?;
+        eng.set_weights(1, &params)?;
+        let gen = TaskGen::curriculum_small();
+        let tk = Tokenizer::new();
+        for i in 0..16 {
+            let p = gen.problem(i as u64);
+            let toks = tk.encode(&p.prompt).unwrap();
+            eng.add_request(p, toks, i as u64);
+        }
+        let sw = Stopwatch::new();
+        let mut ver = 1;
+        let mut steps = 0u64;
+        while eng.load() > 0 && steps < 800 {
+            eng.step()?;
+            steps += 1;
+            if steps % 8 == 0 {
+                ver += 1;
+                eng.set_weights(ver, &params)?; // in-flight update every 8 steps
+            }
+        }
+        let secs = sw.seconds();
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", eng.stats.tokens_sampled),
+            format!("{}", eng.stats.recompute_steps),
+            format!("{:.0}", eng.stats.tokens_sampled as f64 / secs),
+        ]);
+    }
+    benchkit::table(
+        &["kv policy", "tokens", "replay steps", "tokens/s"],
+        &rows,
+    );
+    println!(
+        "\nshape check (paper §5.1/Fig 7): recompute costs extra replay decode\n\
+         steps (lower throughput) for a negligible KL improvement."
+    );
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Fig 2 — analysis of generation times and throughput.
+//!
+//! (a) throughput vs generation batch size: analytic U(h)·h per-GPU
+//!     tokens/flash (the paper's H100 measurement) AND the real engine's
+//!     measured decode throughput on this box's CPU PJRT backend;
+//! (b) inference batch size vs time: the live-batch drain trajectory as
+//!     an engine finishes a fixed request set;
+//! (c) time-to-finish and tokens/s vs sequences per GPU.
+//!
+//! `cargo bench --bench fig2_generation`
+
+use pipeline_rl::benchkit;
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::perfmodel::AccelModel;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::simcluster::{drain_scenario, generation_only};
+use pipeline_rl::util::timer::Stopwatch;
+use pipeline_rl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let accel = AccelModel::h100();
+
+    benchkit::section("Fig 2a — generation throughput vs batch size");
+    println!("analytic (H100 model), per GPU:");
+    let rows: Vec<Vec<String>> = [1usize, 2, 4, 8, 16, 32, 64, 128, 192, 256, 384, 512]
+        .iter()
+        .map(|&h| {
+            vec![
+                h.to_string(),
+                benchkit::f3(accel.u(h)),
+                benchkit::f(accel.u(h) * 1.0 / 1.0),
+            ]
+        })
+        .collect();
+    benchkit::table(&["batch h", "U(h)", "tokens/flash"], &rows);
+
+    println!("\nmeasured (tiny variant, CPU PJRT decode, forced tokens):");
+    let mut rt = Runtime::new()?;
+    let variant = rt.manifest.variant("tiny")?.clone();
+    let mut rows = Vec::new();
+    for &fill in &[1usize, 2, 4] {
+        let fill = fill.min(variant.gen_batch);
+        let mut cfg = EngineCfg::new("tiny");
+        cfg.max_new_tokens = 16;
+        let params = rt.init_params("tiny", 1)?;
+        let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(9))?;
+        eng.set_weights(1, &params)?;
+        let gen = TaskGen::curriculum_small();
+        let tk = Tokenizer::new();
+        for i in 0..fill {
+            let p = gen.problem(i as u64);
+            let toks = tk.encode(&p.prompt).unwrap();
+            eng.add_request(p, toks, i as u64);
+        }
+        // warmup (compilation already cached by Runtime) then measure
+        let sw = Stopwatch::new();
+        let mut steps = 0u64;
+        while eng.n_active() > 0 || eng.n_pending() > 0 {
+            eng.step()?;
+            steps += 1;
+            if steps > 2000 {
+                break;
+            }
+        }
+        let secs = sw.seconds();
+        let toks = eng.stats.tokens_sampled + eng.stats.tokens_forced;
+        rows.push(vec![
+            fill.to_string(),
+            format!("{steps}"),
+            format!("{:.1}", toks as f64 / secs),
+        ]);
+    }
+    benchkit::table(&["live seqs", "steps", "tokens/s (CPU)"], &rows);
+
+    benchkit::section("Fig 2b — inference batch size vs time (batch drain)");
+    let (series, t_total, thr) = generation_only(&accel, 256, 2048, 512, 11);
+    let xs: Vec<f64> = series.points.iter().map(|p| p.t).collect();
+    let vs: Vec<f64> = series.points.iter().map(|p| p.value).collect();
+    benchkit::series("live sequences vs time (flashes), H=256, 2048 seqs", &xs, &vs, 12);
+    println!("total: {t_total:.0} flashes, {thr:.2} tokens/flash");
+
+    benchkit::section("Fig 2c — time to finish / throughput vs seqs per GPU");
+    let pts = drain_scenario(&accel, 512, 512, &[16, 32, 64, 128, 256, 512, 1024]);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.seqs_per_gpu.to_string(),
+                format!("{:.0}", p.time_flashes),
+                benchkit::f(p.tokens_per_flash),
+            ]
+        })
+        .collect();
+    benchkit::table(&["seqs/GPU", "time (flashes)", "tokens/flash"], &rows);
+    println!(
+        "\nshape check (paper): time plateaus as seqs/GPU shrinks; throughput\n\
+         keeps falling — the reason conventional RL wants many seqs per GPU."
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Fig 9 + Fig 3b + Appendix A.4 — throughput vs max lag with the full
+//! (I, H) configuration search, the Pareto frontier points, and the case
+//! study. Also cross-checks the analytic pipeline model against the
+//! discrete-event simulator (queueing effects included).
+//!
+//! `cargo bench --bench fig9_pareto`
+
+use pipeline_rl::benchkit;
+use pipeline_rl::perfmodel::{search, throughput::Workload};
+use pipeline_rl::simcluster::{SimCfg, Simulator};
+
+fn main() {
+    let w = Workload::paper_a4();
+
+    benchkit::section("Fig 9 — RL throughput vs max lag g_max (N=128, B=128)");
+    let budgets = vec![1, 2, 4, 8, 16, 32, 64, 96, 133, 192, 256, 384, 512];
+    let grid: Vec<usize> = (4..=512).step_by(4).collect();
+    let pipe = search::search_pipeline_configs(&w, &budgets, &grid);
+    let conv = search::conventional_curve(&w, &budgets);
+    let rows: Vec<Vec<String>> = pipe
+        .iter()
+        .zip(&conv)
+        .map(|((budget, best), c)| {
+            let (r, ih) = match best {
+                Some(p) => (benchkit::f(p.r), format!("({},{})", p.i, p.h)),
+                None => ("-".into(), "-".into()),
+            };
+            vec![
+                budget.to_string(),
+                r,
+                ih,
+                benchkit::f(c.r),
+                best.map(|p| benchkit::f(p.r / c.r)).unwrap_or_default(),
+            ]
+        })
+        .collect();
+    benchkit::table(
+        &["g_max", "r_pipeline", "(I,H)", "r_conv", "speedup"],
+        &rows,
+    );
+
+    benchkit::section("Appendix A.4 — case study");
+    let cs = search::case_study(&w);
+    println!(
+        "pipeline : r_gen {:.2} r_train {:.2} r {:.2}  (H={} I={} g_max={})",
+        cs.pipe.r_gen, cs.pipe.r_train, cs.pipe.r, cs.pipe.h, cs.pipe.i, cs.pipe.lag_steps
+    );
+    println!(
+        "convent. : r_gen {:.2} r_train {:.2} r {:.2}  (G={})",
+        cs.conv.r_gen, cs.conv.r_train, cs.conv.r, cs.conv.g
+    );
+    println!("speedup  : {:.2}x  (paper: 1.57x at g_max ~ 133)", cs.speedup);
+
+    benchkit::section("Fig 3b — effectiveness/throughput frontiers");
+    let (pipe_pts, conv_pts) = search::pareto_sweep(&w);
+    let rows: Vec<Vec<String>> = pipe_pts
+        .iter()
+        .map(|(e, r)| vec!["pipeline".into(), benchkit::f3(*e), benchkit::f(*r)])
+        .chain(
+            conv_pts
+                .iter()
+                .map(|(e, r)| vec!["conventional".into(), benchkit::f3(*e), benchkit::f(*r)]),
+        )
+        .collect();
+    benchkit::table(&["method", "effectiveness proxy", "throughput"], &rows);
+
+    benchkit::section("cross-check: analytic model vs discrete-event simulator");
+    // scaled-down setup the simulator can run quickly
+    let (n, i, h, b, l) = (32usize, 12usize, 96usize, 64usize, 256usize);
+    let mut sw = Workload::paper_a4();
+    sw.n = n;
+    sw.b = b;
+    sw.l_max = l;
+    let analytic = pipeline_rl::perfmodel::pipeline(&sw, i, h);
+    let mut cfg = SimCfg::pipeline(n, i, h, b, l);
+    cfg.rl_steps = 48;
+    let sim = Simulator::new(cfg).run();
+    println!(
+        "pipeline N={n} I={i} H={h}: analytic r = {:.2}, simulated r = {:.2} tokens/flash ({:+.1}%)",
+        analytic.r,
+        sim.throughput,
+        100.0 * (sim.throughput - analytic.r) / analytic.r
+    );
+}

@@ -1,0 +1,173 @@
+//! Hot-path micro-benchmarks (§Perf) — the numbers tracked in
+//! EXPERIMENTS.md §Perf before/after each optimization.
+//!
+//! * engine decode step (per variant): the request-path inner loop
+//! * trainer optimizer step (per variant)
+//! * weight swap (in-flight update cost at the engine)
+//! * packer throughput, broker round-trip, RNG fill
+//!
+//! `cargo bench --bench hotpath`
+
+use pipeline_rl::benchkit::{self, time};
+use pipeline_rl::broker::{topic, Policy};
+use pipeline_rl::coordinator::Packer;
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::{FinishReason, Rollout};
+use pipeline_rl::runtime::{HostTensor, Runtime};
+use pipeline_rl::util::logging::{self, Level};
+use pipeline_rl::util::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Warn);
+
+    benchkit::section("L3 hot paths — engine decode step");
+    for variant in ["tiny", "small", "base"] {
+        let mut rt = Runtime::new()?;
+        let params = rt.init_params(variant, 1)?;
+        let mut cfg = EngineCfg::new(variant);
+        cfg.max_new_tokens = usize::MAX / 2; // keep slots busy forever
+        let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(2))?;
+        eng.set_weights(1, &params)?;
+        let gen = TaskGen::curriculum_small();
+        let tk = Tokenizer::new();
+        let slots = eng.n_slots();
+        for i in 0..slots {
+            let p = gen.problem(i as u64);
+            let toks = tk.encode(&p.prompt).unwrap();
+            eng.add_request(p, toks, i as u64);
+        }
+        let v = rt.manifest.variant(variant)?.clone();
+        let r = time(
+            &format!("decode step {variant} (B={} slots, full)", slots),
+            3,
+            20,
+            || {
+                eng.step().unwrap();
+            },
+        );
+        let tokens_per_s = slots as f64 / (r.mean_ms / 1e3);
+        println!(
+            "    -> {:.0} tokens/s at batch {} (KV {:.1} MB round-trip)",
+            tokens_per_s,
+            slots,
+            v.kv_numel() as f64 * 4.0 / 1e6
+        );
+    }
+
+    benchkit::section("L3 hot paths — trainer optimizer step");
+    for variant in ["tiny", "small"] {
+        let mut rt = Runtime::new()?;
+        let v = rt.manifest.variant(variant)?.clone();
+        let graph = rt.graph(variant, "train")?;
+        let params = rt.init_params(variant, 1)?;
+        let m = rt.zero_opt_state(variant)?;
+        let vv = rt.zero_opt_state(variant)?;
+        let (b, t) = (v.train_batch, v.seq_len);
+        let p = v.params.len();
+        let mk_inputs = || {
+            let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 12);
+            inputs.extend(params.iter().cloned());
+            inputs.extend(m.iter().cloned());
+            inputs.extend(vv.iter().cloned());
+            inputs.push(HostTensor::scalar_f32(1.0));
+            inputs.push(HostTensor::zeros_i32(&[b, t]));
+            inputs.push(HostTensor::zeros_i32(&[b, t]));
+            inputs.push(HostTensor::zeros_i32(&[b, t]));
+            inputs.push(HostTensor::zeros_f32(&[b, t]));
+            inputs.push(HostTensor::zeros_f32(&[b, t]));
+            inputs.push(HostTensor::zeros_f32(&[b, t]));
+            inputs.push(HostTensor::zeros_f32(&[b, t]));
+            inputs.push(HostTensor::scalar_f32(1e-3));
+            inputs.push(HostTensor::scalar_f32(5.0));
+            inputs.push(HostTensor::scalar_f32(0.0));
+            inputs.push(HostTensor::scalar_f32(0.0));
+            inputs
+        };
+        let inputs = mk_inputs();
+        let r = time(
+            &format!("train step {variant} ([{b}x{t}], {:.2}M params)", v.n_params as f64 / 1e6),
+            2,
+            10,
+            || {
+                graph.run_host(&inputs).unwrap();
+            },
+        );
+        let toks_per_s = (b * t) as f64 / (r.mean_ms / 1e3);
+        println!("    -> {toks_per_s:.0} padded tokens/s");
+    }
+
+    benchkit::section("L3 hot paths — in-flight weight swap");
+    for variant in ["tiny", "base"] {
+        let mut rt = Runtime::new()?;
+        let params = rt.init_params(variant, 1)?;
+        let cfg = EngineCfg::new(variant);
+        let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(2))?;
+        let mut ver = 1u64;
+        let nbytes: usize = params.iter().map(|t| t.nbytes()).sum();
+        let r = time(
+            &format!("set_weights {variant} ({:.2} MB)", nbytes as f64 / 1e6),
+            2,
+            20,
+            || {
+                ver += 1;
+                eng.set_weights(ver, &params).unwrap();
+            },
+        );
+        println!(
+            "    -> {:.1} MB/s transfer-equivalent",
+            nbytes as f64 / 1e6 / (r.mean_ms / 1e3)
+        );
+    }
+
+    benchkit::section("substrate micro-benchmarks");
+    // packer
+    let mk_rollout = |n: usize| Rollout {
+        seq_id: 0,
+        problem_id: 1,
+        group_id: 1,
+        actor_id: 0,
+        prompt_tokens: vec![1; 8],
+        gen_tokens: vec![5; n],
+        behavior_lp: vec![-0.5; n],
+        token_version: vec![3; n],
+        reward: 1.0,
+        finish: FinishReason::Eos,
+        t_start: 0.0,
+        t_end: 0.0,
+    };
+    let rollouts: Vec<Rollout> = (0..64).map(|i| mk_rollout(16 + i % 32)).collect();
+    time("packer: pack 64 rollouts into [16x224]", 3, 50, || {
+        let mut p = Packer::new(16, 224);
+        for r in &rollouts {
+            if !p.try_add(r, 1.0) {
+                let _ = p.flush();
+                let _ = p.try_add(r, 1.0);
+            }
+        }
+        std::hint::black_box(p.flush());
+    });
+
+    // broker round-trip (capacity > burst: single-threaded bench must
+    // not hit the Block backpressure path, which needs a live consumer)
+    let (tx, rx) = topic::<u64>("bench", 16_384, Policy::Block);
+    time("broker: 10k send+recv round-trips", 2, 20, || {
+        for i in 0..10_000u64 {
+            tx.send(i).unwrap();
+        }
+        for _ in 0..10_000 {
+            rx.recv(Duration::from_secs(1)).unwrap();
+        }
+    });
+
+    // rng gumbel fill (decode-loop noise)
+    let mut rng = Rng::new(3);
+    let mut buf = vec![0.0f32; 16 * 64];
+    time("rng: gumbel fill 16x64 (decode noise)", 10, 1000, || {
+        rng.fill_gumbel(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Table 1 — held-out success rates: base model vs SFT vs PipelineRL,
+//! per task family (our MATH500 / AIME24 stand-ins). Shortened run; the
+//! full experiment is `examples/evaluate.rs`.
+//!
+//! `cargo bench --bench table1_eval`
+
+use pipeline_rl::benchkit;
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator::{self, eval};
+use pipeline_rl::data::task::TaskKind;
+use pipeline_rl::metrics::MetricsHub;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::logging::{self, Level};
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Warn);
+    benchkit::section("Table 1 — success rates (tiny variant, shortened)");
+
+    let mut cfg = RunConfig::default();
+    cfg.variant = "tiny".into();
+    // configuration validated in examples/evaluate: a strong-enough warmup
+    // is required or short RL runs collapse into the length-penalty
+    // optimum (emit EOS early) before reward signal accumulates
+    cfg.sft_steps = 500;
+    cfg.rl_steps = 30;
+    cfg.max_new_tokens = 24;
+    cfg.task.kinds = vec![TaskKind::Add, TaskKind::Sub, TaskKind::Copy];
+    cfg.task.max_operand = 20;
+    cfg.log_every = 0;
+    cfg.seed = 2;
+    let n_eval = 60;
+
+    let mut rt = Runtime::new()?;
+    let base_params = rt.init_params(&cfg.variant, cfg.seed as i32)?;
+    let rep_base = eval::evaluate(&mut rt, &cfg, &base_params, n_eval)?;
+
+    let hub = MetricsHub::new();
+    let sft_params = coordinator::warmup::run_sft(&mut rt, &cfg, &hub)?;
+    let rep_sft = eval::evaluate(&mut rt, &cfg, &sft_params, n_eval)?;
+
+    let summary = coordinator::run(cfg.clone(), Some(sft_params))?;
+    let rep_rl = eval::evaluate(&mut rt, &cfg, &summary.final_params, n_eval)?;
+    let samples = summary
+        .report
+        .counters
+        .get("samples_trained")
+        .copied()
+        .unwrap_or(0.0);
+
+    let row = |name: &str, rep: &eval::EvalReport, samples: String| {
+        vec![
+            name.to_string(),
+            format!("{:.1}%", 100.0 * rep.success_rate()),
+            samples,
+            format!("{:.1}", rep.mean_gen_len),
+            format!("{:.2}", rep.eos_rate),
+        ]
+    };
+    benchkit::table(
+        &["method", "success", "# samples", "mean len", "eos rate"],
+        &[
+            row("base (random init)", &rep_base, "-".into()),
+            row("SFT warmup", &rep_sft, "-".into()),
+            row("PipelineRL", &rep_rl, format!("{samples}")),
+        ],
+    );
+    println!(
+        "\nshape check (paper Table 1): the robust signals at this bench's\n\
+         short budget are base -> SFT (0% -> formatted answers) and RL\n\
+         driving the eos rate to ~1 while train reward rises; the held-out\n\
+         delta of a 30-step RL run sits within eval noise (+-2/60) — the\n\
+         headline run (EXPERIMENTS.md) shows the reward-vs-time curves\n\
+         where the PipelineRL-vs-conventional comparison actually lives."
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Bench harness (criterion is unavailable offline; every bench target
+//! uses `harness = false` and this module).
+//!
+//! Two roles:
+//! * `time(...)` — micro-benchmarks with warmup + repeated measurement,
+//!   reporting mean/std/min (the §Perf hot-path numbers);
+//! * `table(...)` / `series(...)` — figure regeneration output: each
+//!   bench prints the same rows/series the paper's table or figure
+//!   reports, so `cargo bench` regenerates the evaluation section.
+
+use crate::util::timer::{Stats, Stopwatch};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` with `warmup` + `iters` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        f();
+        stats.push(sw.millis());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: stats.mean(),
+        std_ms: stats.std(),
+        min_ms: stats.min,
+    };
+    println!(
+        "{:<44} {:>10.3} ms/iter  (±{:>7.3}, min {:>8.3}, n={})",
+        r.name, r.mean_ms, r.std_ms, r.min_ms, r.iters
+    );
+    r
+}
+
+/// Print a figure/table header.
+pub fn section(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+/// Print aligned rows: headers then each row of cells.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    println!(
+        "{}",
+        fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Downsample a (x, v) series to ~n printed points.
+pub fn series(name: &str, xs: &[f64], vs: &[f64], n: usize) {
+    println!("series: {name} ({} points)", xs.len());
+    if xs.is_empty() {
+        println!("  (empty)");
+        return;
+    }
+    let stride = (xs.len() / n.max(1)).max(1);
+    let mut line_x = String::from("  x: ");
+    let mut line_v = String::from("  v: ");
+    for i in (0..xs.len()).step_by(stride) {
+        line_x.push_str(&format!("{:>9.1}", xs[i]));
+        line_v.push_str(&format!("{:>9.3}", vs[i]));
+    }
+    println!("{line_x}");
+    println!("{line_v}");
+}
+
+pub fn f(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_positive() {
+        let r = time("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ms >= 0.0);
+        assert_eq!(r.iters, 5);
+    }
+}

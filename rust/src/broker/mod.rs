@@ -1,0 +1,21 @@
+//! Stream broker — the Redis substitute (paper Fig. 4).
+//!
+//! PipelineRL's three stages (actor → preprocessor → trainer) communicate
+//! exclusively through named topics backed by bounded ring buffers. Two
+//! overflow policies model the paper's design space:
+//!
+//! * [`Policy::Block`] — classic backpressure: publishers wait. Used on
+//!   the trainer-facing topic so samples are never lost.
+//! * [`Policy::DropOldest`] — the paper's "ring buffers to minimize the
+//!   lag when earlier pipeline stages run faster than the later ones,
+//!   e.g. when the trainer makes a checkpoint": the freshest samples
+//!   survive, the stalest are evicted (they would have had the highest
+//!   lag anyway).
+//!
+//! Topics are multi-producer/multi-consumer; consumers see FIFO order.
+//! When every publisher is dropped, subscribers drain the queue and then
+//! observe end-of-stream.
+
+pub mod topic;
+
+pub use topic::{topic, Policy, Publisher, RecvError, Subscriber, TopicStats};

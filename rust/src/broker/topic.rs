@@ -1,0 +1,362 @@
+//! Bounded MPMC ring-buffer topic (see module docs in broker/mod.rs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Publisher blocks while the buffer is full (backpressure).
+    Block,
+    /// Evict the oldest queued item to make room (lag-minimizing ring).
+    DropOldest,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TopicStats {
+    pub published: u64,
+    pub consumed: u64,
+    pub dropped: u64,
+    pub depth: usize,
+    pub max_depth: usize,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    stats: TopicStats,
+    capacity: usize,
+    policy: Policy,
+    publishers: usize,
+}
+
+struct Shared<T> {
+    name: String,
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    subscribers: AtomicUsize,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// All publishers dropped and the queue is drained.
+    Closed,
+    /// Timed out waiting for an item.
+    Timeout,
+}
+
+/// Create a topic; returns connected (publisher, subscriber) handles.
+/// Clone them freely for MPMC use.
+pub fn topic<T>(name: &str, capacity: usize, policy: Policy) -> (Publisher<T>, Subscriber<T>) {
+    assert!(capacity > 0, "topic capacity must be positive");
+    let shared = Arc::new(Shared {
+        name: name.to_string(),
+        inner: Mutex::new(Inner {
+            queue: VecDeque::with_capacity(capacity),
+            stats: TopicStats::default(),
+            capacity,
+            policy,
+            publishers: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        subscribers: AtomicUsize::new(1),
+    });
+    (Publisher { shared: shared.clone() }, Subscriber { shared })
+}
+
+pub struct Publisher<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub struct Subscriber<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Publisher<T> {
+    fn clone(&self) -> Self {
+        self.shared.inner.lock().unwrap().publishers += 1;
+        Publisher { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Publisher<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.publishers -= 1;
+        if inner.publishers == 0 {
+            drop(inner);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Subscriber<T> {
+    fn clone(&self) -> Self {
+        self.shared.subscribers.fetch_add(1, Ordering::Relaxed);
+        Subscriber { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Subscriber<T> {
+    fn drop(&mut self) {
+        if self.shared.subscribers.fetch_sub(1, Ordering::Relaxed) == 1 {
+            // last subscriber gone: unblock publishers so they can error out
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Publisher<T> {
+    pub fn name(&self) -> &str {
+        &self.shared.name
+    }
+
+    /// Publish one item. With `Policy::Block` this waits for space; with
+    /// `Policy::DropOldest` it evicts and returns the number dropped (0/1).
+    pub fn send(&self, item: T) -> Result<u64, &'static str> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        let mut dropped = 0;
+        loop {
+            if inner.queue.len() < inner.capacity {
+                break;
+            }
+            match inner.policy {
+                Policy::DropOldest => {
+                    inner.queue.pop_front();
+                    inner.stats.dropped += 1;
+                    dropped += 1;
+                    break;
+                }
+                Policy::Block => {
+                    if self.shared.subscribers.load(Ordering::Relaxed) == 0 {
+                        return Err("all subscribers disconnected");
+                    }
+                    let (guard, _timeout) = self
+                        .shared
+                        .not_full
+                        .wait_timeout(inner, Duration::from_millis(50))
+                        .unwrap();
+                    inner = guard;
+                }
+            }
+        }
+        inner.queue.push_back(item);
+        inner.stats.published += 1;
+        let depth = inner.queue.len();
+        inner.stats.depth = depth;
+        inner.stats.max_depth = inner.stats.max_depth.max(depth);
+        drop(inner);
+        self.shared.not_empty.notify_one();
+        Ok(dropped)
+    }
+
+    pub fn stats(&self) -> TopicStats {
+        let mut s = self.shared.inner.lock().unwrap().stats.clone();
+        s.depth = self.shared.inner.lock().unwrap().queue.len();
+        s
+    }
+}
+
+impl<T> Subscriber<T> {
+    pub fn name(&self) -> &str {
+        &self.shared.name
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.queue.pop_front() {
+                inner.stats.consumed += 1;
+                inner.stats.depth = inner.queue.len();
+                drop(inner);
+                self.shared.not_full.notify_one();
+                return Ok(item);
+            }
+            if inner.publishers == 0 {
+                return Err(RecvError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, _) = self
+                .shared
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        self.recv(Duration::from_millis(0))
+    }
+
+    /// Receive up to `n` items, waiting up to `timeout` for the *first*.
+    pub fn recv_up_to(&self, n: usize, timeout: Duration) -> Result<Vec<T>, RecvError> {
+        let mut out = Vec::with_capacity(n);
+        match self.recv(timeout) {
+            Ok(x) => out.push(x),
+            Err(e) => return Err(e),
+        }
+        while out.len() < n {
+            match self.try_recv() {
+                Ok(x) => out.push(x),
+                Err(_) => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Receive exactly `n` items, waiting up to `timeout` overall.
+    /// Returns what was collected on timeout/close.
+    pub fn recv_exact(&self, n: usize, timeout: Duration) -> Vec<T> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.recv(deadline - now) {
+                Ok(x) => out.push(x),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    pub fn depth(&self) -> usize {
+        self.shared.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn stats(&self) -> TopicStats {
+        let inner = self.shared.inner.lock().unwrap();
+        let mut s = inner.stats.clone();
+        s.depth = inner.queue.len();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = topic("t", 16, Policy::Block);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn drop_oldest_keeps_freshest() {
+        let (tx, rx) = topic("t", 3, Policy::DropOldest);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let got: Vec<i32> = rx.recv_exact(3, Duration::from_millis(100));
+        assert_eq!(got, vec![7, 8, 9]);
+        assert_eq!(rx.stats().dropped, 7);
+    }
+
+    #[test]
+    fn close_on_publisher_drop() {
+        let (tx, rx) = topic("t", 4, Policy::Block);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 1);
+        assert_eq!(rx.recv(Duration::from_secs(1)), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn timeout_when_empty() {
+        let (_tx, rx) = topic::<i32>("t", 4, Policy::Block);
+        assert_eq!(
+            rx.recv(Duration::from_millis(20)),
+            Err(RecvError::Timeout)
+        );
+    }
+
+    #[test]
+    fn blocking_backpressure() {
+        let (tx, rx) = topic("t", 2, Policy::Block);
+        tx.send(0).unwrap();
+        tx.send(1).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(2).unwrap(); // must block until a recv happens
+            tx.stats().published
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 0);
+        assert_eq!(t.join().unwrap(), 3);
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 1);
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 2);
+    }
+
+    #[test]
+    fn mpmc_delivers_everything_once() {
+        let (tx, rx) = topic("t", 8, Policy::Block);
+        let n_pub = 4;
+        let n_per = 250;
+        let mut pubs = Vec::new();
+        for p in 0..n_pub {
+            let tx = tx.clone();
+            pubs.push(thread::spawn(move || {
+                for i in 0..n_per {
+                    tx.send(p * n_per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut subs = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            subs.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(x) = rx.recv(Duration::from_secs(5)) {
+                    got.push(x);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for p in pubs {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = subs.into_iter().flat_map(|s| s.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_pub * n_per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_up_to_batches() {
+        let (tx, rx) = topic("t", 16, Policy::Block);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let batch = rx.recv_up_to(3, Duration::from_secs(1)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        let batch = rx.recv_up_to(10, Duration::from_secs(1)).unwrap();
+        assert_eq!(batch, vec![3, 4]);
+    }
+
+    #[test]
+    fn max_depth_tracked() {
+        let (tx, rx) = topic("t", 8, Policy::Block);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let _ = rx.recv(Duration::from_secs(1));
+        assert_eq!(rx.stats().max_depth, 6);
+    }
+}

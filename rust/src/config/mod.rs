@@ -1,0 +1,273 @@
+//! Typed run configuration for the PipelineRL system.
+//!
+//! A `RunConfig` fully determines a training run: model variant (must
+//! match an AOT artifact set), pipeline vs conventional mode, actor
+//! topology, RL hyper-parameters, task curriculum and queue policies.
+//! Configs load from TOML files (see configs/*.toml) with CLI
+//! `key=value` overrides, and are echoed into every RunReport.
+
+pub mod toml;
+
+pub use self::toml::{TomlDoc, TomlValue};
+
+use crate::broker::Policy;
+use crate::data::task::{RewardCfg, TaskKind};
+use crate::rl::AdvantageMode;
+use anyhow::{bail, Result};
+
+/// Training mode (paper §2.2 vs §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Algorithm 2: concurrent generation/training, in-flight updates.
+    Pipeline,
+    /// Algorithm 1: generate B·G sequences, then G optimizer steps.
+    Conventional { g: usize },
+}
+
+impl Mode {
+    pub fn name(&self) -> String {
+        match self {
+            Mode::Pipeline => "pipeline".into(),
+            Mode::Conventional { g } => format!("conventional_g{g}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskConfig {
+    pub kinds: Vec<TaskKind>,
+    pub max_operand: i64,
+    /// training pool size (paper: 17k problems)
+    pub pool: usize,
+}
+
+impl Default for TaskConfig {
+    fn default() -> Self {
+        TaskConfig {
+            kinds: vec![TaskKind::Add, TaskKind::Copy],
+            max_operand: 99,
+            pool: 4096,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub variant: String,
+    pub mode: Mode,
+    pub n_actors: usize,
+    pub seed: u64,
+    /// optimizer steps of RL training
+    pub rl_steps: usize,
+    /// supervised warmup steps (the base-model stand-in)
+    pub sft_steps: usize,
+    pub lr: f64,
+    pub sft_lr: f64,
+    /// IS truncation constant c (paper uses 5)
+    pub clip_c: f64,
+    pub advantage: AdvantageMode,
+    pub vf_coef: f64,
+    pub temperature: f64,
+    /// rollouts sampled per prompt (group-baseline group size)
+    pub group_size: usize,
+    /// generation budget per sequence (<= variant max_seq - prompt)
+    pub max_new_tokens: usize,
+    pub task: TaskConfig,
+    pub reward: RewardCfg,
+    /// rollout topic capacity (actor -> preprocessor)
+    pub rollout_queue: usize,
+    pub rollout_policy: Policy,
+    /// batch topic capacity (preprocessor -> trainer)
+    pub batch_queue: usize,
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: Option<String>,
+    /// deterministic single-thread mode: actors and trainer are stepped
+    /// round-robin by the orchestrator (useful for tests & 1-core boxes)
+    pub log_every: usize,
+    /// extra wall-clock to simulate per weight-update transfer (models
+    /// the NCCL broadcast pause; 0 for tests)
+    pub weight_transfer_ms: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            variant: "tiny".into(),
+            mode: Mode::Pipeline,
+            n_actors: 1,
+            seed: 0,
+            rl_steps: 50,
+            sft_steps: 60,
+            lr: 3e-4,
+            sft_lr: 1e-3,
+            clip_c: 5.0,
+            advantage: AdvantageMode::Group,
+            vf_coef: 0.0,
+            temperature: 1.0,
+            group_size: 4,
+            max_new_tokens: 48,
+            task: TaskConfig::default(),
+            reward: RewardCfg::default(),
+            rollout_queue: 256,
+            rollout_policy: Policy::DropOldest,
+            batch_queue: 4,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            log_every: 10,
+            weight_transfer_ms: 0.0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let mode = match doc.str_or("run.mode", "pipeline")?.as_str() {
+            "pipeline" => Mode::Pipeline,
+            "conventional" => Mode::Conventional {
+                g: doc.usize_or("run.g", 8)?,
+            },
+            m => bail!("unknown run.mode {m:?}"),
+        };
+        let advantage = match doc.str_or("rl.advantage", "group")?.as_str() {
+            "group" => AdvantageMode::Group,
+            "group_norm" => AdvantageMode::GroupNormalized,
+            "value" => AdvantageMode::Value,
+            a => bail!("unknown rl.advantage {a:?}"),
+        };
+        let kinds = match doc.get("task.kinds") {
+            None => d.task.kinds.clone(),
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| {
+                    Ok(match v.as_str()? {
+                        "add" => TaskKind::Add,
+                        "sub" => TaskKind::Sub,
+                        "chain" => TaskKind::Chain,
+                        "mul" => TaskKind::Mul,
+                        "copy" => TaskKind::Copy,
+                        k => bail!("unknown task kind {k:?}"),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Some(v) => bail!("task.kinds must be an array, got {v:?}"),
+        };
+        let rollout_policy = match doc.str_or("queues.rollout_policy", "drop_oldest")?.as_str() {
+            "drop_oldest" => Policy::DropOldest,
+            "block" => Policy::Block,
+            p => bail!("unknown queue policy {p:?}"),
+        };
+        Ok(RunConfig {
+            variant: doc.str_or("run.variant", &d.variant)?,
+            mode,
+            n_actors: doc.usize_or("run.n_actors", d.n_actors)?,
+            seed: doc.i64_or("run.seed", d.seed as i64)? as u64,
+            rl_steps: doc.usize_or("run.rl_steps", d.rl_steps)?,
+            sft_steps: doc.usize_or("run.sft_steps", d.sft_steps)?,
+            lr: doc.f64_or("rl.lr", d.lr)?,
+            sft_lr: doc.f64_or("rl.sft_lr", d.sft_lr)?,
+            clip_c: doc.f64_or("rl.clip_c", d.clip_c)?,
+            advantage,
+            vf_coef: doc.f64_or("rl.vf_coef", d.vf_coef)?,
+            temperature: doc.f64_or("rl.temperature", d.temperature)?,
+            group_size: doc.usize_or("rl.group_size", d.group_size)?,
+            max_new_tokens: doc.usize_or("rl.max_new_tokens", d.max_new_tokens)?,
+            task: TaskConfig {
+                kinds,
+                max_operand: doc.i64_or("task.max_operand", d.task.max_operand)?,
+                pool: doc.usize_or("task.pool", d.task.pool)?,
+            },
+            reward: RewardCfg {
+                correct: doc.f64_or("reward.correct", 1.0)? as f32,
+                incorrect: doc.f64_or("reward.incorrect", 0.0)? as f32,
+                length_penalty_start: doc.f64_or("reward.length_penalty_start", 0.85)? as f32,
+                length_penalty_max: doc.f64_or("reward.length_penalty_max", 0.5)? as f32,
+            },
+            rollout_queue: doc.usize_or("queues.rollout_capacity", d.rollout_queue)?,
+            rollout_policy,
+            batch_queue: doc.usize_or("queues.batch_capacity", d.batch_queue)?,
+            checkpoint_every: doc.usize_or("trainer.checkpoint_every", d.checkpoint_every)?,
+            checkpoint_dir: doc.get("trainer.checkpoint_dir").map(|v| v.as_str().map(String::from)).transpose()?,
+            log_every: doc.usize_or("run.log_every", d.log_every)?,
+            weight_transfer_ms: doc.f64_or("run.weight_transfer_ms", d.weight_transfer_ms)?,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path, overrides: &[String]) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let mut doc = TomlDoc::parse(&text)?;
+        doc.apply_overrides(overrides)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_actors == 0 {
+            bail!("need at least one actor");
+        }
+        if let Mode::Conventional { g } = self.mode {
+            if g == 0 {
+                bail!("conventional mode needs g >= 1");
+            }
+        }
+        if self.group_size == 0 {
+            bail!("group_size must be >= 1");
+        }
+        if !(0.0..=100.0).contains(&self.clip_c) || self.clip_c <= 0.0 {
+            bail!("clip_c must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            [run]
+            variant = "small"
+            mode = "conventional"
+            g = 16
+            n_actors = 2
+            rl_steps = 100
+            [rl]
+            lr = 5e-4
+            clip_c = 5.0
+            advantage = "group_norm"
+            [task]
+            kinds = ["add", "chain"]
+            max_operand = 999
+            [queues]
+            rollout_policy = "block"
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.variant, "small");
+        assert_eq!(cfg.mode, Mode::Conventional { g: 16 });
+        assert_eq!(cfg.advantage, AdvantageMode::GroupNormalized);
+        assert_eq!(cfg.task.kinds, vec![TaskKind::Add, TaskKind::Chain]);
+        assert_eq!(cfg.rollout_policy, crate::broker::Policy::Block);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_mode() {
+        let doc = TomlDoc::parse("[run]\nmode = \"warp\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(Mode::Pipeline.name(), "pipeline");
+        assert_eq!(Mode::Conventional { g: 8 }.name(), "conventional_g8");
+    }
+}

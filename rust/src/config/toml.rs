@@ -1,0 +1,283 @@
+//! Minimal TOML-subset parser (offline env — no toml crate).
+//!
+//! Supports what the config files use: `[section.sub]` tables, `key =
+//! value` with strings, integers, floats, booleans and flat arrays,
+//! `#` comments. Keys are flattened to dotted paths ("trainer.lr").
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section {line:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(full.clone(), value).is_some() {
+                bail!("line {}: duplicate key {full:?}", lineno + 1);
+            }
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    /// Apply `key=value` CLI overrides on top of the parsed file.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for ov in overrides {
+            let Some(eq) = ov.find('=') else {
+                bail!("override {ov:?} must be key=value");
+            };
+            let key = ov[..eq].trim().to_string();
+            let value = parse_value(ov[eq + 1..].trim())?;
+            self.entries.insert(key, value);
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            Some(v) => v.as_i64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.i64_or(key, default as i64)? as usize)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("unterminated string {text:?}");
+        };
+        return Ok(TomlValue::Str(s.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("unterminated array {text:?}");
+        };
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(body)?;
+        return Ok(TomlValue::Arr(
+            items
+                .iter()
+                .map(|s| parse_value(s.trim()))
+                .collect::<Result<Vec<_>>>()?,
+        ));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if text.contains('.') || text.contains('e') || text.contains('E') {
+        if let Ok(f) = text.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+fn split_top_level(body: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # run config
+            name = "demo"
+            [trainer]
+            lr = 1e-3          # adam
+            steps = 100
+            use_value = false
+            [actor]
+            kinds = ["add", "sub"]
+            weights = [0.5, 0.5]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(doc.get("trainer.lr").unwrap().as_f64().unwrap(), 1e-3);
+        assert_eq!(doc.get("trainer.steps").unwrap().as_i64().unwrap(), 100);
+        assert!(!doc.get("trainer.use_value").unwrap().as_bool().unwrap());
+        let kinds = match doc.get("actor.kinds").unwrap() {
+            TomlValue::Arr(a) => a.len(),
+            _ => 0,
+        };
+        assert_eq!(kinds, 2);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut doc = TomlDoc::parse("a = 1\n[s]\nb = 2\n").unwrap();
+        doc.apply_overrides(&["s.b=9".into(), "c=\"x\"".into()]).unwrap();
+        assert_eq!(doc.i64_or("s.b", 0).unwrap(), 9);
+        assert_eq!(doc.str_or("c", "").unwrap(), "x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.f64_or("missing", 2.5).unwrap(), 2.5);
+        assert!(doc.bool_or("missing", true).unwrap());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("x = @garbage").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str().unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,200 @@
+//! Actor stage (Alg. 2 lines 1–14).
+//!
+//! Owns one generation engine (= one generation GPU pool in the paper).
+//! Loop: poll the weight bus — on a new version, pause briefly (optional
+//! simulated broadcast latency), swap weights in-flight, resume; keep the
+//! engine saturated with prompt groups; step the engine; verify rewards
+//! of finished sequences and stream them to the preprocessor.
+//!
+//! In conventional mode the actor instead takes prompt groups from a
+//! shared quota and, once exhausted, *drains* all in-flight sequences
+//! before blocking for the training phase (Alg. 1's alternation,
+//! including the Fig 2b batch-drain tail).
+
+use super::conv::ConvSync;
+use crate::broker::Publisher;
+use crate::config::{Mode, RunConfig};
+use crate::data::{Dataset, task::TaskGen};
+use crate::engine::{Engine, EngineCfg};
+use crate::metrics::MetricsHub;
+use crate::model::Tokenizer;
+use crate::rl::{FinishReason, Rollout};
+use crate::runtime::Runtime;
+use crate::util::logging::Logger;
+use crate::util::Rng;
+use crate::weights::WeightBus;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct ActorArgs {
+    pub actor_id: usize,
+    pub cfg: RunConfig,
+    pub bus: WeightBus,
+    pub rollout_tx: Publisher<Rollout>,
+    pub hub: MetricsHub,
+    pub stop: Arc<AtomicBool>,
+    pub conv: Option<Arc<ConvSync>>,
+}
+
+pub fn run_actor(args: ActorArgs) -> Result<()> {
+    let ActorArgs { actor_id, cfg, bus, rollout_tx, hub, stop, conv } = args;
+    let log = Logger::new(format!("actor-{actor_id}"));
+    let tokenizer = Tokenizer::new();
+    let mut rt = Runtime::new().context("actor runtime")?;
+
+    // join the weight-transfer process group and wait for initial weights
+    bus.init_process_group(&format!("actor-{actor_id}"));
+    let initial = loop {
+        if let Some(w) = bus.fetch_if_newer(0) {
+            break w;
+        }
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+
+    let mut ecfg = EngineCfg::new(&cfg.variant);
+    ecfg.temperature = cfg.temperature as f32;
+    ecfg.max_new_tokens = cfg.max_new_tokens;
+    let mut engine = Engine::new(
+        &mut rt,
+        ecfg,
+        &initial.params,
+        actor_id,
+        Rng::with_stream(cfg.seed ^ 0xac70, actor_id as u64 + 1),
+    )?;
+    engine.set_weights(initial.version, &initial.params)?;
+    log.debug(&format!("engine ready at version {}", initial.version));
+
+    let task_gen = TaskGen::new(cfg.task.kinds.clone(), cfg.task.max_operand);
+    let mut dataset = Dataset::new(task_gen.clone(), cfg.task.pool, cfg.seed + actor_id as u64);
+    let mut group_counter: u64 = 0;
+    // target: slots full + one group queued so freed slots refill instantly
+    let target_load = engine.n_slots() + cfg.group_size;
+    let mut version = initial.version;
+    let mut steps_since_fill_metric = 0usize;
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+
+        // ---- in-flight weight update (pipeline) / per-phase (conv) ----
+        if let Some(w) = bus.fetch_if_newer(version) {
+            if cfg.weight_transfer_ms > 0.0 {
+                // simulated NCCL broadcast pause
+                std::thread::sleep(Duration::from_micros(
+                    (cfg.weight_transfer_ms * 1000.0) as u64,
+                ));
+            }
+            engine.set_weights(w.version, &w.params)?;
+            version = w.version;
+            hub.add("weight_updates_received", 1.0);
+        }
+
+        // ---- admission ----
+        match (&cfg.mode, &conv) {
+            (Mode::Pipeline, _) => {
+                while engine.load() < target_load {
+                    submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
+                                 actor_id, &mut group_counter)?;
+                }
+            }
+            (Mode::Conventional { .. }, Some(sync)) => {
+                if !sync.generating() {
+                    // training phase: engine must be empty; wait
+                    debug_assert_eq!(engine.load(), 0);
+                    sync.wait_generate(Duration::from_millis(20));
+                    continue;
+                }
+                while engine.load() < target_load && sync.try_take_group(cfg.group_size) {
+                    submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
+                                 actor_id, &mut group_counter)?;
+                }
+            }
+            (Mode::Conventional { .. }, None) => {
+                anyhow::bail!("conventional mode requires a ConvSync")
+            }
+        }
+
+        // ---- decode step ----
+        let out = engine.step()?;
+        if out.idle {
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        hub.add("gen_tokens_sampled", out.tokens_sampled as f64);
+        steps_since_fill_metric += 1;
+        if steps_since_fill_metric >= 16 {
+            steps_since_fill_metric = 0;
+            hub.record(
+                &format!("actor{actor_id}/active_slots"),
+                now(&hub),
+                engine.stats.steps as f64,
+                engine.n_active() as f64,
+            );
+        }
+
+        // ---- finished sequences: verify reward, publish ----
+        for mut r in out.finished {
+            let problem = dataset_problem(&task_gen, r.problem_id);
+            let completion = tokenizer.decode(&r.gen_tokens);
+            r.reward = cfg.reward.reward(
+                &problem,
+                &completion,
+                r.gen_len(),
+                cfg.max_new_tokens,
+            );
+            hub.add("gen_seqs_finished", 1.0);
+            if matches!(r.finish, FinishReason::Eos) {
+                hub.add("gen_seqs_eos", 1.0);
+            }
+            if let Some(sync) = &conv {
+                sync.report_finished();
+            }
+            match rollout_tx.send(r) {
+                Ok(dropped) if dropped > 0 => {
+                    hub.add("rollouts_dropped_ring", dropped as f64);
+                }
+                Ok(_) => {}
+                Err(_) => return Ok(()), // preprocessor gone: shutdown
+            }
+        }
+    }
+    log.debug("actor stopping");
+    Ok(())
+}
+
+fn submit_group(
+    engine: &mut Engine,
+    dataset: &mut Dataset,
+    tokenizer: &Tokenizer,
+    cfg: &RunConfig,
+    actor_id: usize,
+    group_counter: &mut u64,
+) -> Result<()> {
+    let problem = dataset.sample_train();
+    let prompt = tokenizer
+        .encode(&problem.prompt)
+        .context("task prompt must tokenize")?;
+    let group_id = ((actor_id as u64 + 1) << 40) | *group_counter;
+    *group_counter += 1;
+    for _ in 0..cfg.group_size {
+        engine.add_request(problem.clone(), prompt.clone(), group_id);
+    }
+    Ok(())
+}
+
+/// Problems regenerate deterministically from their id — no need to ship
+/// the full Problem through the rollout.
+fn dataset_problem(gen: &TaskGen, id: u64) -> crate::data::task::Problem {
+    gen.problem(id)
+}
+
+fn now(_hub: &MetricsHub) -> f64 {
+    // wall-clock origin is per-hub; use a process-global origin instead
+    crate::util::timer::global_seconds()
+}

@@ -1,0 +1,182 @@
+//! Conventional-RL phase synchronization (Algorithm 1).
+//!
+//! Conventional RL alternates generation and training globally. The sync
+//! object gates the actors: during a **Generate** phase each actor takes
+//! prompt groups from a shared quota, finishes *every* in-flight sequence
+//! (reproducing the batch-drain tail of Fig 2b), and when the last
+//! sequence lands the phase flips to **Train**; actors then block until
+//! the trainer has run the RL step's optimizer steps and published the
+//! new weights.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Generate,
+    Train,
+}
+
+#[derive(Debug)]
+struct ConvState {
+    phase: Phase,
+    /// prompt groups still available to take this phase
+    groups_to_submit: usize,
+    /// sequences submitted but not yet finished
+    outstanding: usize,
+    /// sequences finished this phase
+    finished: usize,
+}
+
+#[derive(Debug)]
+pub struct ConvSync {
+    state: Mutex<ConvState>,
+    cv: Condvar,
+}
+
+impl ConvSync {
+    /// Starts in a Generate phase with `groups` prompt groups.
+    pub fn new(groups: usize) -> Self {
+        ConvSync {
+            state: Mutex::new(ConvState {
+                phase: Phase::Generate,
+                groups_to_submit: groups,
+                outstanding: 0,
+                finished: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.state.lock().unwrap().phase
+    }
+
+    /// Actor: claim one prompt group (of `group_size` sequences).
+    pub fn try_take_group(&self, group_size: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.phase == Phase::Generate && s.groups_to_submit > 0 {
+            s.groups_to_submit -= 1;
+            s.outstanding += group_size;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Actor: report one finished sequence. Flips to Train when the quota
+    /// is exhausted and nothing is in flight.
+    pub fn report_finished(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.outstanding = s.outstanding.saturating_sub(1);
+        s.finished += 1;
+        if s.phase == Phase::Generate && s.groups_to_submit == 0 && s.outstanding == 0 {
+            s.phase = Phase::Train;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Actor: true while it should keep stepping its engine (quota left
+    /// or sequences still draining).
+    pub fn generating(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.phase == Phase::Generate
+    }
+
+    /// Actor: block while the trainer works. Returns promptly on timeout
+    /// so stop flags can be polled.
+    pub fn wait_generate(&self, timeout: Duration) {
+        let s = self.state.lock().unwrap();
+        let _ = self
+            .cv
+            .wait_timeout_while(s, timeout, |s| s.phase == Phase::Train)
+            .unwrap();
+    }
+
+    /// Preprocessor/trainer: block until the Generate phase has fully
+    /// drained (phase == Train). Returns the number of finished seqs.
+    pub fn wait_train(&self, timeout: Duration) -> Option<usize> {
+        let s = self.state.lock().unwrap();
+        let (s, res) = self
+            .cv
+            .wait_timeout_while(s, timeout, |s| s.phase == Phase::Generate)
+            .unwrap();
+        if res.timed_out() && s.phase == Phase::Generate {
+            None
+        } else {
+            Some(s.finished)
+        }
+    }
+
+    /// Trainer: open the next Generate phase with a fresh quota.
+    pub fn begin_generate(&self, groups: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.phase = Phase::Generate;
+        s.groups_to_submit = groups;
+        s.outstanding = 0;
+        s.finished = 0;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn quota_then_drain_flips_phase() {
+        let c = ConvSync::new(2);
+        assert!(c.try_take_group(3));
+        assert!(c.try_take_group(3));
+        assert!(!c.try_take_group(3), "quota exhausted");
+        assert_eq!(c.phase(), Phase::Generate);
+        for _ in 0..5 {
+            c.report_finished();
+        }
+        assert_eq!(c.phase(), Phase::Generate, "one still in flight");
+        c.report_finished();
+        assert_eq!(c.phase(), Phase::Train);
+    }
+
+    #[test]
+    fn begin_generate_resets() {
+        let c = ConvSync::new(1);
+        assert!(c.try_take_group(1));
+        c.report_finished();
+        assert_eq!(c.phase(), Phase::Train);
+        c.begin_generate(4);
+        assert_eq!(c.phase(), Phase::Generate);
+        assert!(c.try_take_group(1));
+    }
+
+    #[test]
+    fn waiters_wake_on_flip() {
+        let c = Arc::new(ConvSync::new(1));
+        let c2 = c.clone();
+        let waiter = thread::spawn(move || c2.wait_train(Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(30));
+        assert!(c.try_take_group(2));
+        c.report_finished();
+        c.report_finished();
+        assert_eq!(waiter.join().unwrap(), Some(2));
+
+        // actors wake when training ends
+        let c3 = c.clone();
+        let actor = thread::spawn(move || {
+            c3.wait_generate(Duration::from_secs(5));
+            c3.phase()
+        });
+        thread::sleep(Duration::from_millis(30));
+        c.begin_generate(1);
+        assert_eq!(actor.join().unwrap(), Phase::Generate);
+    }
+
+    #[test]
+    fn wait_train_times_out_while_generating() {
+        let c = ConvSync::new(5);
+        assert_eq!(c.wait_train(Duration::from_millis(20)), None);
+    }
+}

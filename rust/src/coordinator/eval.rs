@@ -1,0 +1,101 @@
+//! Greedy-decoding evaluation harness (Table 1 protocol).
+//!
+//! Loads a parameter set into a fresh engine, greedy-decodes the held-out
+//! eval suite and reports exact-match success rates, overall and per task
+//! kind — our analogue of MATH500 / AIME24 accuracy.
+
+use crate::config::RunConfig;
+use crate::data::task::{extract_answer, Problem, TaskGen};
+use crate::data::Dataset;
+use crate::engine::{Engine, EngineCfg};
+use crate::model::Tokenizer;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    pub n: usize,
+    pub correct: usize,
+    pub by_kind: BTreeMap<&'static str, (usize, usize)>, // kind -> (correct, n)
+    pub mean_gen_len: f64,
+    pub eos_rate: f64,
+}
+
+impl EvalReport {
+    pub fn success_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+}
+
+/// Evaluate `params` on the first `n` problems of the eval split.
+pub fn evaluate(
+    rt: &mut Runtime,
+    cfg: &RunConfig,
+    params: &[HostTensor],
+    n: usize,
+) -> Result<EvalReport> {
+    let task_gen = TaskGen::new(cfg.task.kinds.clone(), cfg.task.max_operand);
+    let dataset = Dataset::new(task_gen, cfg.task.pool, cfg.seed);
+    let problems = dataset.eval_suite(n);
+    evaluate_problems(rt, cfg, params, &problems)
+}
+
+pub fn evaluate_problems(
+    rt: &mut Runtime,
+    cfg: &RunConfig,
+    params: &[HostTensor],
+    problems: &[Problem],
+) -> Result<EvalReport> {
+    let tokenizer = Tokenizer::new();
+    let mut ecfg = EngineCfg::new(&cfg.variant);
+    ecfg.max_new_tokens = cfg.max_new_tokens;
+    ecfg.greedy = true;
+    let mut engine = Engine::new(rt, ecfg, params, usize::MAX, Rng::new(0))?;
+    engine.set_weights(1, params)?;
+
+    for (i, p) in problems.iter().enumerate() {
+        let toks = tokenizer.encode(&p.prompt)?;
+        engine.add_request(p.clone(), toks, i as u64);
+    }
+
+    let mut report = EvalReport { n: problems.len(), ..Default::default() };
+    let mut finished = 0usize;
+    let mut sum_len = 0usize;
+    let mut eos = 0usize;
+    // map problem instances back by id (ids are unique within the suite)
+    let by_id: BTreeMap<u64, &Problem> =
+        problems.iter().map(|p| (p.id, p)).collect();
+    while finished < problems.len() {
+        let out = engine.step()?;
+        if out.idle {
+            break;
+        }
+        for r in out.finished {
+            finished += 1;
+            sum_len += r.gen_len();
+            if matches!(r.finish, crate::rl::FinishReason::Eos) {
+                eos += 1;
+            }
+            let problem = by_id[&r.problem_id];
+            let completion = tokenizer.decode(&r.gen_tokens);
+            let ok = extract_answer(&completion)
+                .map(|a| a == problem.answer)
+                .unwrap_or(false);
+            let e = report.by_kind.entry(problem.kind.name()).or_insert((0, 0));
+            e.1 += 1;
+            if ok {
+                e.0 += 1;
+                report.correct += 1;
+            }
+        }
+    }
+    report.mean_gen_len = if finished > 0 { sum_len as f64 / finished as f64 } else { 0.0 };
+    report.eos_rate = if finished > 0 { eos as f64 / finished as f64 } else { 0.0 };
+    Ok(report)
+}

@@ -1,0 +1,152 @@
+//! Fig 7 machinery — KL divergence of mixed-policy (in-flight) sampling
+//! distributions vs the on-policy checkpoint (§5.1).
+//!
+//! Shared by `examples/kl_inflight.rs` and `benches/fig7_kl.rs`.
+
+use crate::config::RunConfig;
+use crate::data::task::TaskGen;
+use crate::data::Dataset;
+use crate::engine::engine::DistRow;
+use crate::engine::{Engine, EngineCfg};
+use crate::model::Tokenizer;
+use crate::rl::Rollout;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// How weights evolve during the replay.
+pub enum Swap {
+    /// PipelineRL: advance one checkpoint every max_new/g decode steps.
+    InFlight { recompute: bool },
+    /// Conventional: the whole sequence sampled from the start checkpoint.
+    None,
+}
+
+/// Generate under the (mixed or fixed) behavior policy starting from
+/// checkpoint `start`, capture every sampled token's full distribution,
+/// then teacher-force the sequences through checkpoint `start + g` and
+/// return the mean per-token KL(behavior ‖ on-policy).
+pub fn replay_kl(
+    cfg: &RunConfig,
+    load: &dyn Fn(usize) -> Result<Vec<HostTensor>>,
+    start: usize,
+    g: usize,
+    swap: Swap,
+) -> Result<f64> {
+    let mut rt = Runtime::new()?;
+    let mut ecfg = EngineCfg::new(&cfg.variant);
+    ecfg.max_new_tokens = cfg.max_new_tokens;
+    ecfg.capture_dist = true;
+    if let Swap::InFlight { recompute } = swap {
+        ecfg.recompute_kv_on_update = recompute;
+    }
+    let params0 = load(start)?;
+    let mut engine = Engine::new(
+        &mut rt,
+        ecfg,
+        &params0,
+        0,
+        Rng::new(start as u64 * 1009 + g as u64),
+    )?;
+    engine.set_weights(0, &params0)?;
+
+    // submit one eval problem per slot
+    let task_gen = TaskGen::new(cfg.task.kinds.clone(), cfg.task.max_operand);
+    let dataset = Dataset::new(task_gen, cfg.task.pool, 99);
+    let tokenizer = Tokenizer::new();
+    let n = engine.n_slots();
+    for (i, p) in dataset.eval_suite(n).into_iter().enumerate() {
+        let toks = tokenizer.encode(&p.prompt)?;
+        engine.add_request(p, toks, i as u64);
+    }
+
+    let interval = (cfg.max_new_tokens / g.max(1)).max(1);
+    let mut decode_steps = 0usize;
+    let mut next_ck = 1usize;
+    let mut finished: Vec<Rollout> = Vec::new();
+    while finished.len() < n {
+        let out = engine.step()?;
+        if out.idle {
+            break;
+        }
+        finished.extend(out.finished);
+        decode_steps += 1;
+        if matches!(swap, Swap::InFlight { .. })
+            && decode_steps % interval == 0
+            && next_ck <= g
+        {
+            engine.set_weights(next_ck as u64, &load(start + next_ck)?)?;
+            next_ck += 1;
+        }
+    }
+    let captured = std::mem::take(&mut engine.captured);
+    let final_params = load(start + g)?;
+    score_kl(&mut rt, cfg, &final_params, &finished, &captured)
+}
+
+/// Teacher-force each sequence through `final_params` (score_full) and
+/// average the full-distribution KL against the captured behavior rows.
+pub fn score_kl(
+    rt: &mut Runtime,
+    cfg: &RunConfig,
+    final_params: &[HostTensor],
+    rollouts: &[Rollout],
+    captured: &[DistRow],
+) -> Result<f64> {
+    let v = rt.manifest.variant(&cfg.variant)?.clone();
+    let graph = rt.graph(&cfg.variant, "score_full")?;
+    let (b, t, vs) = (v.train_batch, v.seq_len, v.vocab);
+
+    let by_seq: HashMap<u64, &Rollout> = rollouts.iter().map(|r| (r.seq_id, r)).collect();
+    let mut total_kl = 0.0f64;
+    let mut n_pts = 0usize;
+
+    let mut seq_ids: Vec<u64> = by_seq.keys().copied().collect();
+    seq_ids.sort_unstable();
+    for chunk in seq_ids.chunks(b) {
+        let mut tokens = vec![0i32; b * t];
+        let mut seg = vec![0i32; b * t];
+        let mut pos = vec![0i32; b * t];
+        for (row, &sid) in chunk.iter().enumerate() {
+            let r = by_seq[&sid];
+            let stream: Vec<i32> = r
+                .prompt_tokens
+                .iter()
+                .chain(r.gen_tokens.iter())
+                .copied()
+                .collect();
+            for (i, &tok) in stream.iter().take(t).enumerate() {
+                tokens[row * t + i] = tok;
+                seg[row * t + i] = 1;
+                pos[row * t + i] = i as i32;
+            }
+        }
+        let mut inputs: Vec<HostTensor> = final_params.to_vec();
+        inputs.push(HostTensor::from_i32(&[b, t], tokens));
+        inputs.push(HostTensor::from_i32(&[b, t], seg));
+        inputs.push(HostTensor::from_i32(&[b, t], pos));
+        let out = graph.run_host(&inputs)?;
+        let logdist = out[1].f32s()?; // [b, t, V]
+        for (row, &sid) in chunk.iter().enumerate() {
+            let r = by_seq[&sid];
+            let plen = r.prompt_tokens.len();
+            for c in captured.iter().filter(|c| c.seq_id == sid) {
+                // the slot predicting gen token j sits at plen + j - 1
+                let slot = match (plen + c.gen_index).checked_sub(1) {
+                    Some(s) if s + 1 < t => s,
+                    _ => continue,
+                };
+                let on = &logdist[(row * t + slot) * vs..(row * t + slot + 1) * vs];
+                let mut kl = 0.0f64;
+                for (lm, lo) in c.logdist.iter().zip(on) {
+                    let p = (*lm as f64).exp();
+                    kl += p * (*lm as f64 - *lo as f64);
+                }
+                total_kl += kl.max(0.0);
+                n_pts += 1;
+            }
+        }
+    }
+    Ok(if n_pts > 0 { total_kl / n_pts as f64 } else { 0.0 })
+}

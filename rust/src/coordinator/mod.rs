@@ -1,0 +1,42 @@
+//! The PipelineRL coordinator — the paper's system contribution (Alg. 2,
+//! Fig. 4).
+//!
+//! Three stages run as OS threads connected by broker topics:
+//!
+//! ```text
+//!  actor(s) ──"rollouts"──▶ preprocessor ──"batches"──▶ trainer
+//!     ▲                                                    │
+//!     └──────────── weight bus (in-flight updates) ◀───────┘
+//! ```
+//!
+//! * [`actor`] owns one generation [`crate::engine::Engine`], keeps its
+//!   slots saturated at batch size H, polls the weight bus between decode
+//!   steps (in-flight updates), verifies rewards, streams rollouts.
+//! * [`preprocessor`] groups rollouts per prompt, computes advantages,
+//!   packs sequences online into fixed training batches; in
+//!   **conventional mode** it instead accumulates and shuffles a buffer
+//!   of B·G samples before releasing the RL step's batches (the paper's
+//!   §5 tweak).
+//! * [`trainer`] runs the AOT train graph (IS-REINFORCE + fused Adam),
+//!   publishes a new weight version after every optimizer step
+//!   (pipeline) or per RL step (conventional), tracks loss/ESS/KL/lag.
+//! * [`orchestrator`] wires everything, runs the SFT warmup (the base
+//!   model stand-in), and returns a [`crate::metrics::RunReport`].
+//!
+//! Conventional mode reproduces Alg. 1 faithfully including the batch
+//! drain: actors stop admitting at the quota, *finish* every in-flight
+//! sequence (the Fig 2b tail), and only then does training start.
+
+pub mod actor;
+pub mod conv;
+pub mod eval;
+pub mod klstudy;
+pub mod orchestrator;
+pub mod packing;
+pub mod preprocessor;
+pub mod trainer;
+pub mod warmup;
+
+pub use conv::ConvSync;
+pub use orchestrator::{run, RunSummary};
+pub use packing::{Packer, TrainBatch};

@@ -1,0 +1,166 @@
+//! Orchestrator: builds the pipeline topology from a [`RunConfig`],
+//! runs the SFT warmup, spawns the stage threads, and collects the
+//! [`RunReport`].
+//!
+//! Thread topology (each stage constructs its own PJRT runtime — the
+//! xla handles are not Send, and the paper's stages each own their own
+//! accelerator pool anyway):
+//!
+//! ```text
+//!   main ── sft warmup ── publish v1 ──┬── actor-0 .. actor-(A-1)
+//!                                      ├── preprocessor
+//!                                      └── trainer (returns final params)
+//! ```
+
+use super::actor::{run_actor, ActorArgs};
+use super::conv::ConvSync;
+use super::packing::TrainBatch;
+use super::preprocessor::{run_preprocessor, PreprocessorArgs};
+use super::trainer::{run_trainer, TrainerArgs};
+use super::warmup;
+use crate::broker::{topic, Policy};
+use crate::config::{Mode, RunConfig};
+use crate::metrics::{MetricsHub, RunReport};
+use crate::rl::Rollout;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::logging::Logger;
+use crate::util::timer::global_seconds;
+use crate::weights::WeightBus;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct RunSummary {
+    pub report: RunReport,
+    pub final_params: Vec<HostTensor>,
+    pub initial_params: Vec<HostTensor>,
+    pub wall_seconds: f64,
+}
+
+/// Run a full PipelineRL (or Conventional-RL) training job.
+///
+/// `warm_params`: reuse an existing warmed-up parameter set (e.g. so that
+/// pipeline/conventional comparisons start from the *same* base model);
+/// None runs the SFT warmup.
+pub fn run(cfg: RunConfig, warm_params: Option<Vec<HostTensor>>) -> Result<RunSummary> {
+    cfg.validate()?;
+    let log = Logger::new("orchestr");
+    let hub = MetricsHub::new();
+    let t0 = global_seconds();
+
+    // ---- warmup (base-model stand-in) ----
+    let initial_params = match warm_params {
+        Some(p) => p,
+        None => {
+            let mut rt = Runtime::new().context("orchestrator runtime")?;
+            log.info(&format!(
+                "sft warmup: {} steps on variant {}",
+                cfg.sft_steps, cfg.variant
+            ));
+            warmup::run_sft(&mut rt, &cfg, &hub)?
+        }
+    };
+
+    // ---- topology ----
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(initial_params.clone()));
+    let (rollout_tx, rollout_rx) =
+        topic::<Rollout>("rollouts", cfg.rollout_queue, cfg.rollout_policy);
+    let (batch_tx, batch_rx) =
+        topic::<TrainBatch>("batches", cfg.batch_queue, Policy::Block);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (b, t) = {
+        let rt = Runtime::new()?; // manifest only; cheap
+        let v = rt.manifest.variant(&cfg.variant)?;
+        (v.train_batch, v.seq_len)
+    };
+
+    // conventional quota: ~G optimizer batches' worth of sequences
+    let conv_groups = match cfg.mode {
+        Mode::Conventional { g } => (g * b).div_ceil(cfg.group_size).max(1),
+        Mode::Pipeline => 0,
+    };
+    let conv = match cfg.mode {
+        Mode::Conventional { .. } => Some(Arc::new(ConvSync::new(conv_groups))),
+        Mode::Pipeline => None,
+    };
+
+    // ---- spawn stages ----
+    let mut actor_handles = Vec::new();
+    for actor_id in 0..cfg.n_actors {
+        let args = ActorArgs {
+            actor_id,
+            cfg: cfg.clone(),
+            bus: bus.clone(),
+            rollout_tx: rollout_tx.clone(),
+            hub: hub.clone(),
+            stop: stop.clone(),
+            conv: conv.clone(),
+        };
+        actor_handles.push(
+            std::thread::Builder::new()
+                .name(format!("actor-{actor_id}"))
+                .spawn(move || run_actor(args))?,
+        );
+    }
+    drop(rollout_tx); // actors hold the only publishers now
+
+    let pre_args = PreprocessorArgs {
+        cfg: cfg.clone(),
+        b,
+        t,
+        rollout_rx,
+        batch_tx,
+        hub: hub.clone(),
+        stop: stop.clone(),
+        conv: conv.clone(),
+    };
+    let pre_handle = std::thread::Builder::new()
+        .name("preproc".into())
+        .spawn(move || run_preprocessor(pre_args))?;
+
+    let trainer_args = TrainerArgs {
+        cfg: cfg.clone(),
+        initial_params: initial_params.clone(),
+        batch_rx,
+        bus: bus.clone(),
+        hub: hub.clone(),
+        stop: stop.clone(),
+        conv: conv.clone(),
+        conv_groups,
+    };
+    let trainer_handle = std::thread::Builder::new()
+        .name("trainer".into())
+        .spawn(move || run_trainer(trainer_args))?;
+
+    // ---- run to completion ----
+    let final_params = trainer_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("trainer panicked"))??;
+    stop.store(true, Ordering::Relaxed);
+    for h in actor_handles {
+        h.join().map_err(|_| anyhow::anyhow!("actor panicked"))??;
+    }
+    pre_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("preprocessor panicked"))??;
+
+    let wall = global_seconds() - t0;
+    hub.add("wall_seconds", wall);
+    hub.add("weight_bus_bytes", bus.bytes_fetched() as f64);
+    hub.add("weight_bus_publishes", bus.publishes() as f64);
+    log.info(&format!(
+        "run complete: mode={} wall={:.1}s samples={}",
+        cfg.mode.name(),
+        wall,
+        hub.counter("samples_trained")
+    ));
+
+    Ok(RunSummary {
+        report: hub.snapshot(),
+        final_params,
+        initial_params,
+        wall_seconds: wall,
+    })
+}

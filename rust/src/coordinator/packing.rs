@@ -1,0 +1,325 @@
+//! Online sequence packing (one of the paper's named key optimizations:
+//! "online sequence packing for fast training").
+//!
+//! Variable-length rollouts are packed greedily (first-fit) into fixed
+//! [B, T] training batches; segment ids + per-segment positions keep the
+//! attention of packed sequences independent (the train graph masks
+//! cross-segment attention).
+//!
+//! Layout per placed sequence (stream = [BOS, prompt..., gen...]):
+//! row cells [o, o+L) hold the stream; position o+i-1 is the *target
+//! slot* predicting stream[i]; target slots of generated tokens carry
+//! mask=1, the recorded behavior logprob, weight version, advantage and
+//! per-token reward. Everything else is masked out — including the last
+//! cell of each segment, whose prediction would cross into the next
+//! segment.
+//!
+//! Property-tested invariant: packing is lossless — the multiset of
+//! (gen token, behavior_lp, version) triples in == out.
+
+use crate::rl::Rollout;
+
+/// A packed training batch, ready to become train-graph literals.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub seg: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub behavior_lp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub reward: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// weight version per target slot (0 where mask = 0)
+    pub versions: Vec<u64>,
+    pub n_seqs: usize,
+    pub n_gen_tokens: usize,
+    pub sum_reward: f64,
+    /// true when this batch closes a conventional-RL step
+    pub last_of_rl_step: bool,
+}
+
+impl TrainBatch {
+    pub fn mean_reward(&self) -> f64 {
+        if self.n_seqs == 0 {
+            0.0
+        } else {
+            self.sum_reward / self.n_seqs as f64
+        }
+    }
+
+    /// Token-fill fraction (packed cells / capacity).
+    pub fn fill(&self) -> f64 {
+        self.tokens.iter().filter(|&&t| t != 0).count() as f64 / (self.b * self.t) as f64
+    }
+}
+
+/// Greedy first-fit packer.
+pub struct Packer {
+    b: usize,
+    t: usize,
+    used: Vec<usize>,
+    next_seg: Vec<i32>,
+    batch: TrainBatch,
+}
+
+impl Packer {
+    pub fn new(b: usize, t: usize) -> Self {
+        Packer {
+            b,
+            t,
+            used: vec![0; b],
+            next_seg: vec![1; b],
+            batch: Self::empty(b, t),
+        }
+    }
+
+    fn empty(b: usize, t: usize) -> TrainBatch {
+        TrainBatch {
+            b,
+            t,
+            tokens: vec![0; b * t],
+            seg: vec![0; b * t],
+            pos: vec![0; b * t],
+            behavior_lp: vec![0.0; b * t],
+            adv: vec![0.0; b * t],
+            reward: vec![0.0; b * t],
+            mask: vec![0.0; b * t],
+            versions: vec![0; b * t],
+            n_seqs: 0,
+            n_gen_tokens: 0,
+            sum_reward: 0.0,
+            last_of_rl_step: false,
+        }
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.batch.n_seqs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch.n_seqs == 0
+    }
+
+    /// Fraction of token cells already used.
+    pub fn fill_fraction(&self) -> f64 {
+        self.used.iter().sum::<usize>() as f64 / (self.b * self.t) as f64
+    }
+
+    /// Would this rollout fit anywhere right now?
+    pub fn fits(&self, r: &Rollout) -> bool {
+        let len = r.prompt_tokens.len() + r.gen_tokens.len();
+        len <= self.t && self.used.iter().any(|&u| u + len <= self.t)
+    }
+
+    /// Place a rollout (first-fit). Returns false when it doesn't fit —
+    /// flush and retry. Rollouts with no generated tokens are rejected.
+    pub fn try_add(&mut self, r: &Rollout, advantage: f32) -> bool {
+        let len = r.prompt_tokens.len() + r.gen_tokens.len();
+        if r.gen_tokens.is_empty() || len > self.t {
+            return false;
+        }
+        let Some(row) = (0..self.b).find(|&i| self.used[i] + len <= self.t) else {
+            return false;
+        };
+        let o = row * self.t + self.used[row];
+        let seg_id = self.next_seg[row];
+        let bt = &mut self.batch;
+        // stream cells
+        let stream: Vec<i32> = r
+            .prompt_tokens
+            .iter()
+            .chain(r.gen_tokens.iter())
+            .copied()
+            .collect();
+        for (i, &tok) in stream.iter().enumerate() {
+            bt.tokens[o + i] = tok;
+            bt.seg[o + i] = seg_id;
+            bt.pos[o + i] = i as i32;
+        }
+        // target slots of generated tokens
+        let plen = r.prompt_tokens.len();
+        for (j, &tok) in r.gen_tokens.iter().enumerate() {
+            let _ = tok;
+            let slot = o + plen + j - 1; // predicts stream[plen + j]
+            bt.mask[slot] = 1.0;
+            bt.behavior_lp[slot] = r.behavior_lp[j];
+            bt.versions[slot] = r.token_version[j];
+            bt.adv[slot] = advantage;
+            bt.reward[slot] = r.reward;
+        }
+        self.used[row] += len;
+        self.next_seg[row] += 1;
+        bt.n_seqs += 1;
+        bt.n_gen_tokens += r.gen_tokens.len();
+        bt.sum_reward += r.reward as f64;
+        true
+    }
+
+    /// Take the current batch and reset.
+    pub fn flush(&mut self) -> TrainBatch {
+        let b = std::mem::replace(&mut self.batch, Self::empty(self.b, self.t));
+        self.used.iter_mut().for_each(|u| *u = 0);
+        self.next_seg.iter_mut().for_each(|s| *s = 1);
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::FinishReason;
+
+    fn rollout(prompt: Vec<i32>, gen: Vec<i32>, reward: f32) -> Rollout {
+        let n = gen.len();
+        Rollout {
+            seq_id: 1,
+            problem_id: 1,
+            group_id: 1,
+            actor_id: 0,
+            prompt_tokens: prompt,
+            gen_tokens: gen,
+            behavior_lp: (0..n).map(|i| -0.1 * (i + 1) as f32).collect(),
+            token_version: (0..n).map(|i| 10 + i as u64).collect(),
+            reward,
+            finish: FinishReason::Eos,
+            t_start: 0.0,
+            t_end: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_sequence_layout() {
+        let mut p = Packer::new(2, 16);
+        let r = rollout(vec![1, 5, 6], vec![7, 8, 2], 1.0);
+        assert!(p.try_add(&r, 0.5));
+        let b = p.flush();
+        // stream in row 0
+        assert_eq!(&b.tokens[0..6], &[1, 5, 6, 7, 8, 2]);
+        assert_eq!(&b.seg[0..7], &[1, 1, 1, 1, 1, 1, 0]);
+        assert_eq!(&b.pos[0..6], &[0, 1, 2, 3, 4, 5]);
+        // targets: gen tokens are stream[3..6], so slots 2,3,4
+        assert_eq!(&b.mask[0..6], &[0.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.behavior_lp[2], -0.1);
+        assert_eq!(b.versions[4], 12);
+        assert_eq!(b.adv[3], 0.5);
+        assert_eq!(b.reward[4], 1.0);
+        assert_eq!(b.n_seqs, 1);
+        assert_eq!(b.n_gen_tokens, 3);
+    }
+
+    #[test]
+    fn packs_multiple_per_row_with_fresh_segments() {
+        let mut p = Packer::new(1, 16);
+        let r1 = rollout(vec![1, 5], vec![7, 2], 1.0);
+        let r2 = rollout(vec![1, 6], vec![8, 2], 0.0);
+        assert!(p.try_add(&r1, 1.0));
+        assert!(p.try_add(&r2, -1.0));
+        let b = p.flush();
+        assert_eq!(&b.tokens[0..8], &[1, 5, 7, 2, 1, 6, 8, 2]);
+        assert_eq!(&b.seg[0..8], &[1, 1, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(&b.pos[0..8], &[0, 1, 2, 3, 0, 1, 2, 3]);
+        // seg 1 targets at slots 1,2 ; boundary slot 3 masked 0
+        assert_eq!(&b.mask[0..8], &[0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.adv[5], -1.0);
+    }
+
+    #[test]
+    fn rejects_when_full_or_too_long() {
+        let mut p = Packer::new(1, 8);
+        let long = rollout(vec![1; 6], vec![9, 9, 9, 2], 0.0);
+        assert!(!p.try_add(&long, 0.0), "10 tokens > T=8");
+        let r = rollout(vec![1, 5], vec![7, 8, 2], 0.0);
+        assert!(p.try_add(&r, 0.0)); // 5 cells
+        let r2 = rollout(vec![1, 5], vec![7, 8, 2], 0.0);
+        assert!(!p.try_add(&r2, 0.0), "only 3 cells left");
+        assert!(p.fits(&rollout(vec![1], vec![2], 0.0)));
+    }
+
+    #[test]
+    fn empty_gen_rejected() {
+        let mut p = Packer::new(1, 8);
+        assert!(!p.try_add(&rollout(vec![1, 5], vec![], 0.0), 0.0));
+    }
+
+    #[test]
+    fn property_packing_is_lossless() {
+        crate::testkit::check("packing lossless", 120, 0x9ac8, 48, |c| {
+            let mut p = Packer::new(c.usize_in(1, 4), 32);
+            let mut want: Vec<(i32, u64)> = Vec::new();
+            let mut batches = Vec::new();
+            for _ in 0..c.usize_in(1, 12) {
+                let plen = c.usize_in(1, 6);
+                let glen = c.usize_in(1, 10);
+                let gen: Vec<i32> =
+                    (0..glen).map(|_| 3 + c.rng.below(50) as i32).collect();
+                let vers: Vec<u64> = (0..glen).map(|_| c.rng.below(9) as u64).collect();
+                let mut r = rollout(vec![1; plen], gen.clone(), 0.0);
+                r.token_version = vers.clone();
+                if !p.try_add(&r, 0.0) {
+                    if !p.is_empty() {
+                        batches.push(p.flush());
+                    }
+                    if !p.try_add(&r, 0.0) {
+                        continue; // genuinely too long — skipped, not lost
+                    }
+                }
+                want.extend(gen.iter().copied().zip(vers));
+            }
+            if !p.is_empty() {
+                batches.push(p.flush());
+            }
+            let mut got: Vec<(i32, u64)> = Vec::new();
+            for b in &batches {
+                for i in 0..b.tokens.len() {
+                    if b.mask[i] == 1.0 {
+                        // the predicted token lives one cell later
+                        got.push((b.tokens[i + 1], b.versions[i]));
+                    }
+                }
+            }
+            want.sort_unstable();
+            got.sort_unstable();
+            if want != got {
+                return Err(format!(
+                    "packing lost tokens: want {} got {}",
+                    want.len(),
+                    got.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mask_never_crosses_segments() {
+        crate::testkit::check("mask slots stay in-segment", 60, 0xface, 32, |c| {
+            let mut p = Packer::new(2, 24);
+            for _ in 0..c.usize_in(1, 8) {
+                let r = rollout(
+                    vec![1; c.usize_in(1, 4)],
+                    (0..c.usize_in(1, 8)).map(|_| 5).collect(),
+                    0.0,
+                );
+                let _ = p.try_add(&r, 0.0);
+            }
+            let b = p.flush();
+            for i in 0..b.tokens.len() {
+                if b.mask[i] == 1.0 {
+                    let next = i + 1;
+                    if next % b.t == 0 {
+                        return Err(format!("mask at row end, slot {i}"));
+                    }
+                    if b.seg[next] != b.seg[i] || b.seg[i] == 0 {
+                        return Err(format!(
+                            "target slot {i} crosses segment {} -> {}",
+                            b.seg[i], b.seg[next]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Preprocessor stage (paper Fig. 4, middle box).
+//!
+//! Consumes the rollout stream, completes advantage groups, computes
+//! group-baseline advantages, packs sequences online into fixed [B, T]
+//! training batches and publishes them to the trainer topic.
+//!
+//! **Conventional mode** implements the paper's §5 tweak: it accumulates
+//! the whole RL step's buffer (every sequence the Generate phase
+//! produced), shuffles it, packs it into ~G batches, marks the last one,
+//! and only then releases them — reproducing Alg. 1's lag structure
+//! exactly (batch j trained at lag j).
+
+use super::conv::ConvSync;
+use super::packing::{Packer, TrainBatch};
+use crate::broker::{Publisher, RecvError, Subscriber};
+use crate::config::{Mode, RunConfig};
+use crate::metrics::MetricsHub;
+use crate::rl::{group_advantages, AdvantageMode, FinishReason, Rollout};
+use crate::util::logging::Logger;
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct PreprocessorArgs {
+    pub cfg: RunConfig,
+    /// train-graph batch geometry (rows, seq_len) from the manifest
+    pub b: usize,
+    pub t: usize,
+    pub rollout_rx: Subscriber<Rollout>,
+    pub batch_tx: Publisher<TrainBatch>,
+    pub hub: MetricsHub,
+    pub stop: Arc<AtomicBool>,
+    pub conv: Option<Arc<ConvSync>>,
+}
+
+pub fn run_preprocessor(args: PreprocessorArgs) -> Result<()> {
+    let PreprocessorArgs { cfg, b, t, rollout_rx, batch_tx, hub, stop, conv } = args;
+    let log = Logger::new("preproc");
+    match cfg.mode {
+        Mode::Pipeline => run_pipeline(&cfg, b, t, rollout_rx, batch_tx, hub, stop, log),
+        Mode::Conventional { g } => run_conventional(
+            &cfg,
+            g,
+            b,
+            t,
+            rollout_rx,
+            batch_tx,
+            hub,
+            stop,
+            conv.expect("conventional mode requires ConvSync"),
+            log,
+        ),
+    }
+}
+
+/// Collect rollouts into groups; on completion compute advantages and
+/// return (rollout, advantage) pairs ready for packing.
+struct GroupCollector {
+    group_size: usize,
+    normalize: bool,
+    pending: HashMap<u64, Vec<Rollout>>,
+}
+
+impl GroupCollector {
+    fn new(cfg: &RunConfig) -> Self {
+        GroupCollector {
+            group_size: cfg.group_size,
+            normalize: cfg.advantage == AdvantageMode::GroupNormalized,
+            pending: HashMap::new(),
+        }
+    }
+
+    fn add(&mut self, r: Rollout, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+        // aborted/empty rollouts still count towards group completion but
+        // are filtered out of the advantage computation
+        if matches!(r.finish, FinishReason::Aborted) || r.gen_tokens.is_empty() {
+            hub.add("rollouts_discarded", 1.0);
+        }
+        let gid = r.group_id;
+        self.pending.entry(gid).or_default().push(r);
+        self.maybe_complete(hub, gid)
+    }
+
+    fn maybe_complete(&mut self, hub: &MetricsHub, gid: u64) -> Vec<(Rollout, f32)> {
+        let done = self
+            .pending
+            .get(&gid)
+            .map(|v| v.len() >= self.group_size)
+            .unwrap_or(false);
+        if !done {
+            return Vec::new();
+        }
+        let members: Vec<Rollout> = self
+            .pending
+            .remove(&gid)
+            .unwrap()
+            .into_iter()
+            .filter(|r| {
+                !r.gen_tokens.is_empty() && !matches!(r.finish, FinishReason::Aborted)
+            })
+            .collect();
+        if members.is_empty() {
+            return Vec::new();
+        }
+        let groups: Vec<u64> = members.iter().map(|r| r.group_id).collect();
+        let rewards: Vec<f32> = members.iter().map(|r| r.reward).collect();
+        let advs = group_advantages(&groups, &rewards, self.normalize);
+        hub.add("groups_completed", 1.0);
+        members.into_iter().zip(advs).collect()
+    }
+
+    fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_pipeline(
+    cfg: &RunConfig,
+    b: usize,
+    t: usize,
+    rollout_rx: Subscriber<Rollout>,
+    batch_tx: Publisher<TrainBatch>,
+    hub: MetricsHub,
+    stop: Arc<AtomicBool>,
+    log: Logger,
+) -> Result<()> {
+    let mut collector = GroupCollector::new(cfg);
+    let mut packer = Packer::new(b, t);
+    let mut ready: Vec<(Rollout, f32)> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match rollout_rx.recv(Duration::from_millis(100)) {
+            Ok(r) => ready.extend(collector.add(r, &hub)),
+            Err(RecvError::Closed) => break,
+            Err(RecvError::Timeout) => {
+                // trickle flush: don't let a partial batch starve the trainer
+                if !packer.is_empty() && ready.is_empty() && send(&mut packer, &batch_tx, &hub, false)? {
+                    break;
+                }
+                continue;
+            }
+        }
+        // pack everything that fits; flush when full
+        let i = 0;
+        while i < ready.len() {
+            let (r, adv) = &ready[i];
+            if packer.try_add(r, *adv) {
+                ready.swap_remove(i);
+            } else if !packer.is_empty() {
+                if send(&mut packer, &batch_tx, &hub, false)? {
+                    return Ok(());
+                }
+            } else {
+                // single rollout longer than T — cannot ever fit
+                hub.add("rollouts_too_long", 1.0);
+                ready.swap_remove(i);
+            }
+        }
+        // target fill reached? ship it
+        if packer.fill_fraction() >= 0.85 && send(&mut packer, &batch_tx, &hub, false)? {
+            break;
+        }
+    }
+    log.debug(&format!(
+        "preprocessor stopping ({} groups pending)",
+        collector.n_pending()
+    ));
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_conventional(
+    cfg: &RunConfig,
+    _g: usize,
+    b: usize,
+    t: usize,
+    rollout_rx: Subscriber<Rollout>,
+    batch_tx: Publisher<TrainBatch>,
+    hub: MetricsHub,
+    stop: Arc<AtomicBool>,
+    conv: Arc<ConvSync>,
+    log: Logger,
+) -> Result<()> {
+    let mut collector = GroupCollector::new(cfg);
+    let mut rng = Rng::with_stream(cfg.seed, 0x5f00);
+    loop {
+        // accumulate the whole Generate phase's buffer
+        let mut buffer: Vec<(Rollout, f32)> = Vec::new();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match rollout_rx.recv(Duration::from_millis(50)) {
+                Ok(r) => buffer.extend(collector.add(r, &hub)),
+                Err(RecvError::Closed) => return Ok(()),
+                Err(RecvError::Timeout) => {}
+            }
+            // phase flipped to Train once every sequence landed
+            if conv.wait_train(Duration::from_millis(0)).is_some()
+                && rollout_rx.depth() == 0
+            {
+                break;
+            }
+        }
+        if buffer.is_empty() {
+            continue;
+        }
+        // Alg. 1: shuffle the B*G buffer, then release the step's batches
+        rng.shuffle(&mut buffer);
+        hub.record(
+            "conv/buffer_seqs",
+            crate::util::timer::global_seconds(),
+            hub.counter("groups_completed"),
+            buffer.len() as f64,
+        );
+        // Alg. 1 splits the B·G buffer into exactly G optimizer batches:
+        // chunk the shuffled buffer rather than packing to density (the
+        // trainer must take G steps per RL step).
+        let mut packer = Packer::new(b, t);
+        let mut batches = Vec::new();
+        let chunk = buffer.len().div_ceil(_g.max(1)).max(1);
+        for group in buffer.chunks(chunk) {
+            for (r, adv) in group {
+                if !packer.try_add(r, *adv) {
+                    if !packer.is_empty() {
+                        batches.push(packer.flush());
+                    }
+                    if !packer.try_add(r, *adv) {
+                        hub.add("rollouts_too_long", 1.0);
+                    }
+                }
+            }
+            if !packer.is_empty() {
+                batches.push(packer.flush());
+            }
+        }
+        let n = batches.len();
+        log.debug(&format!("releasing {n} conventional batches"));
+        for (i, mut batch) in batches.into_iter().enumerate() {
+            batch.last_of_rl_step = i + 1 == n;
+            hub.add("batches_packed", 1.0);
+            if batch_tx.send(batch).is_err() {
+                return Ok(()); // trainer disconnected: shutdown
+            }
+        }
+    }
+}
+
+/// Returns true when the trainer has disconnected (graceful shutdown).
+fn send(
+    packer: &mut Packer,
+    batch_tx: &Publisher<TrainBatch>,
+    hub: &MetricsHub,
+    last: bool,
+) -> Result<bool> {
+    let mut batch = packer.flush();
+    batch.last_of_rl_step = last;
+    hub.add("batches_packed", 1.0);
+    hub.record(
+        "preproc/batch_fill",
+        crate::util::timer::global_seconds(),
+        hub.counter("batches_packed"),
+        batch.fill(),
+    );
+    // a send failure means the trainer is done and disconnected: shut down
+    Ok(batch_tx.send(batch).is_err())
+}

@@ -1,0 +1,174 @@
+//! Trainer stage (Alg. 2 lines 15–22).
+//!
+//! Pulls packed batches, runs the AOT train graph (fused IS-REINFORCE
+//! loss + Adam — one PJRT execution per optimizer step), then publishes
+//! the new weight version:
+//!
+//! * pipeline mode — publish after **every** optimizer step
+//!   (`request_weight_update`, the in-flight mechanism);
+//! * conventional mode — publish only when the RL step's last batch is
+//!   done, then reopen the Generate phase.
+//!
+//! Records the full metric suite: loss/ESS/KL/clip from the device
+//! metrics vector, token-lag profiles computed from the per-token weight
+//! versions (Fig 6a), reward-vs-samples and reward-vs-time (Fig 5).
+
+use super::conv::ConvSync;
+use super::packing::TrainBatch;
+use crate::broker::{RecvError, Subscriber};
+use crate::config::{Mode, RunConfig};
+use crate::metrics::MetricsHub;
+use crate::model::checkpoint::Checkpoint;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::logging::Logger;
+use crate::util::timer::global_seconds;
+use crate::weights::WeightBus;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct TrainerArgs {
+    pub cfg: RunConfig,
+    pub initial_params: Vec<HostTensor>,
+    pub batch_rx: Subscriber<TrainBatch>,
+    pub bus: WeightBus,
+    pub hub: MetricsHub,
+    pub stop: Arc<AtomicBool>,
+    pub conv: Option<Arc<ConvSync>>,
+    /// groups per conventional Generate phase (quota)
+    pub conv_groups: usize,
+}
+
+/// Returns the final parameters.
+pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
+    let TrainerArgs {
+        cfg, initial_params, batch_rx, bus, hub, stop, conv, conv_groups,
+    } = args;
+    let log = Logger::new("trainer");
+    let mut rt = Runtime::new().context("trainer runtime")?;
+    let variant = rt.manifest.variant(&cfg.variant)?.clone();
+    let graph = rt.graph(&cfg.variant, "train")?;
+    let metric_names = rt.manifest.metric_names.clone();
+    let p = variant.params.len();
+
+    let mut params = initial_params;
+    let mut m = rt.zero_opt_state(&cfg.variant)?;
+    let mut v = rt.zero_opt_state(&cfg.variant)?;
+    let mut samples_total: f64 = 0.0;
+    let mut tokens_total: f64 = 0.0;
+
+    for step in 1..=cfg.rl_steps {
+        // ---- get a batch ----
+        let batch = loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(params);
+            }
+            match batch_rx.recv(Duration::from_millis(200)) {
+                Ok(b) => break b,
+                Err(RecvError::Closed) => return Ok(params),
+                Err(RecvError::Timeout) => continue,
+            }
+        };
+
+        // ---- lag profile (Fig 6a): version v trained at step s has lag s - v
+        let mut max_lag = 0u64;
+        let mut sum_lag = 0f64;
+        let mut n_lag = 0usize;
+        for i in 0..batch.versions.len() {
+            if batch.mask[i] == 1.0 {
+                let lag = (step as u64).saturating_sub(batch.versions[i]);
+                max_lag = max_lag.max(lag);
+                sum_lag += lag as f64;
+                n_lag += 1;
+            }
+        }
+
+        // ---- optimizer step ----
+        let (b, t) = (batch.b, batch.t);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 12);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(step as f32));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.tokens.clone()));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.seg.clone()));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.pos.clone()));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.behavior_lp.clone()));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.adv.clone()));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.reward.clone()));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.mask.clone()));
+        inputs.push(HostTensor::scalar_f32(cfg.lr as f32));
+        inputs.push(HostTensor::scalar_f32(cfg.clip_c as f32));
+        inputs.push(HostTensor::scalar_f32(cfg.advantage.graph_flag()));
+        inputs.push(HostTensor::scalar_f32(cfg.vf_coef as f32));
+        let mut out = graph.run_host(&inputs).context("train step")?;
+        let metrics = out.split_off(3 * p).remove(0);
+        let v_new = out.split_off(2 * p);
+        let m_new = out.split_off(p);
+        params = out;
+        m = m_new;
+        v = v_new;
+
+        // ---- metrics ----
+        samples_total += batch.n_seqs as f64;
+        tokens_total += batch.n_gen_tokens as f64;
+        let tnow = global_seconds();
+        let mvec = metrics.f32s()?;
+        for (name, &val) in metric_names.iter().zip(mvec) {
+            hub.record(&format!("train/{name}"), tnow, step as f64, val as f64);
+        }
+        hub.record("train/max_lag", tnow, step as f64, max_lag as f64);
+        hub.record(
+            "train/mean_lag",
+            tnow,
+            step as f64,
+            if n_lag > 0 { sum_lag / n_lag as f64 } else { 0.0 },
+        );
+        hub.record("reward_vs_samples", tnow, samples_total, batch.mean_reward());
+        hub.record("reward_vs_time", tnow, tnow, batch.mean_reward());
+        hub.record("samples_vs_time", tnow, tnow, samples_total);
+        hub.record("tokens_vs_time", tnow, tnow, tokens_total);
+        hub.record("batch_fill", tnow, step as f64, batch.fill());
+        hub.add("samples_trained", batch.n_seqs as f64);
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            let ess_i = metric_names.iter().position(|n| n == "ess").unwrap_or(0);
+            log.info(&format!(
+                "step {step:4} loss {:+.4} ess {:.3} reward {:+.3} max_lag {max_lag} samples {samples_total}",
+                mvec[0], mvec[ess_i], batch.mean_reward()
+            ));
+        }
+
+        // ---- publish weights ----
+        let publish = match cfg.mode {
+            Mode::Pipeline => true,
+            Mode::Conventional { .. } => batch.last_of_rl_step,
+        };
+        if publish {
+            bus.publish(step as u64 + 1, Arc::new(params.clone()));
+            if let (Mode::Conventional { .. }, Some(sync)) = (&cfg.mode, &conv) {
+                sync.begin_generate(conv_groups);
+            }
+        }
+
+        // ---- checkpoint (the stall the ring buffer absorbs) ----
+        if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let ck = Checkpoint {
+                    variant: cfg.variant.clone(),
+                    step: step as u64,
+                    params: params.clone(),
+                };
+                let path = std::path::Path::new(dir).join(format!("step{step:05}.ckpt"));
+                ck.save(&path)?;
+                hub.add("checkpoints_written", 1.0);
+            }
+        }
+    }
+    log.info(&format!(
+        "training done: {} steps, {} samples",
+        cfg.rl_steps, samples_total
+    ));
+    Ok(params)
+}

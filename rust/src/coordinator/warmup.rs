@@ -1,0 +1,95 @@
+//! SFT warmup — the "base model" stand-in (DESIGN.md §2).
+//!
+//! The paper starts RL from a pretrained Qwen base model. We create the
+//! equivalent by supervised training on worked chain-of-thought traces
+//! (the task generator emits the ground-truth trace for every problem),
+//! using the AOT sft graph. The warmed-up model emits well-formed
+//! `c:`/`a:` lines with imperfect arithmetic — exactly the "base model
+//! that can format but must learn to reason" starting point RL needs.
+
+use super::packing::Packer;
+use crate::config::RunConfig;
+use crate::data::{task::TaskGen, Dataset};
+use crate::metrics::MetricsHub;
+use crate::model::Tokenizer;
+use crate::rl::{FinishReason, Rollout};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::logging::Logger;
+use crate::util::timer::global_seconds;
+use anyhow::{Context, Result};
+
+/// Run `cfg.sft_steps` of supervised warmup; returns the parameters.
+pub fn run_sft(rt: &mut Runtime, cfg: &RunConfig, hub: &MetricsHub) -> Result<Vec<HostTensor>> {
+    let log = Logger::new("sft");
+    let variant = rt.manifest.variant(&cfg.variant)?.clone();
+    let graph = rt.graph(&cfg.variant, "sft")?;
+    let p = variant.params.len();
+    let tokenizer = Tokenizer::new();
+    let task_gen = TaskGen::new(cfg.task.kinds.clone(), cfg.task.max_operand);
+    let mut dataset = Dataset::new(task_gen, cfg.task.pool, cfg.seed ^ 0x5f7);
+
+    let mut params = rt.init_params(&cfg.variant, cfg.seed as i32)?;
+    let mut m = rt.zero_opt_state(&cfg.variant)?;
+    let mut v = rt.zero_opt_state(&cfg.variant)?;
+
+    let (b, t) = (variant.train_batch, variant.seq_len);
+    for step in 1..=cfg.sft_steps {
+        // pack ground-truth traces as pseudo-rollouts (mask covers trace)
+        let mut packer = Packer::new(b, t);
+        loop {
+            let problem = dataset.sample_train();
+            let prompt = tokenizer.encode(&problem.prompt)?;
+            let mut trace = tokenizer.encode(&problem.trace)?;
+            trace.push(crate::model::tokenizer::EOS_ID);
+            let n = trace.len();
+            let pseudo = Rollout {
+                seq_id: 0,
+                problem_id: problem.id,
+                group_id: 0,
+                actor_id: 0,
+                prompt_tokens: std::iter::once(crate::model::tokenizer::BOS_ID)
+                    .chain(prompt)
+                    .collect(),
+                gen_tokens: trace,
+                behavior_lp: vec![0.0; n],
+                token_version: vec![0; n],
+                reward: 0.0,
+                finish: FinishReason::Eos,
+                t_start: 0.0,
+                t_end: 0.0,
+            };
+            if !packer.try_add(&pseudo, 0.0) {
+                break;
+            }
+            if packer.fill_fraction() > 0.9 {
+                break;
+            }
+        }
+        let batch = packer.flush();
+
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 6);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(step as f32));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.tokens));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.seg));
+        inputs.push(HostTensor::from_i32(&[b, t], batch.pos));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.mask));
+        inputs.push(HostTensor::scalar_f32(cfg.sft_lr as f32));
+        let mut out = graph.run_host(&inputs).context("sft step")?;
+        let metrics = out.split_off(3 * p).remove(0);
+        let v_new = out.split_off(2 * p);
+        let m_new = out.split_off(p);
+        params = out;
+        m = m_new;
+        v = v_new;
+
+        let loss = metrics.f32s()?[0] as f64;
+        hub.record("sft/loss", global_seconds(), step as f64, loss);
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log.info(&format!("sft step {step:4} loss {loss:.4}"));
+        }
+    }
+    Ok(params)
+}

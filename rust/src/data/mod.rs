@@ -1,0 +1,16 @@
+//! Synthetic arithmetic-reasoning tasks — the OpenReasoner-Zero stand-in
+//! (DESIGN.md §2 substitution table).
+//!
+//! The paper trains a base model to emit long-form chain-of-thought for
+//! math problems with a verifiable 0/1 answer reward plus a soft penalty
+//! near the maximum sequence length (§5). This module reproduces that
+//! task *shape* at CPU scale: deterministic problem generators with
+//! mechanical chain-of-thought traces (for the SFT warmup that stands in
+//! for base-model pretraining), a held-out eval split, and an exact-match
+//! verifier with the same reward structure.
+
+pub mod dataset;
+pub mod task;
+
+pub use dataset::{Dataset, Split};
+pub use task::{Problem, RewardCfg, TaskGen, TaskKind};

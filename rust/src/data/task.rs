@@ -1,0 +1,378 @@
+//! Problem generation, chain-of-thought traces and the reward verifier.
+//!
+//! Format (char-level tokenized, alphabet in model/tokenizer.rs):
+//!
+//! ```text
+//! prompt:      "q:47+85=\n"
+//! completion:  "c:7+5=12\n"      (one mechanical CoT line per step)
+//!              "c:4+8+1=13\n"
+//!              "a:132\n"          (final answer line)
+//!              <eos>
+//! ```
+//!
+//! Reward (paper §5): 1.0 for a correct final answer, 0.0 otherwise, plus
+//! a soft penalty as the generation approaches the max length budget.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Multi-digit addition with column-carry CoT.
+    Add,
+    /// Subtraction (a >= b) with place-value decomposition CoT.
+    Sub,
+    /// a + b - c chains, reusing Add/Sub traces coarsely.
+    Chain,
+    /// single-digit × multi-digit multiplication via partial products.
+    Mul,
+    /// Digit-copy diagnostic (trivially learnable; sanity checks).
+    Copy,
+}
+
+impl TaskKind {
+    pub fn all() -> &'static [TaskKind] {
+        &[TaskKind::Add, TaskKind::Sub, TaskKind::Chain, TaskKind::Mul, TaskKind::Copy]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Add => "add",
+            TaskKind::Sub => "sub",
+            TaskKind::Chain => "chain",
+            TaskKind::Mul => "mul",
+            TaskKind::Copy => "copy",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Problem {
+    pub kind: TaskKind,
+    pub prompt: String,
+    /// ground-truth final answer (the integer as text)
+    pub answer: String,
+    /// full worked trace (CoT lines + answer line), used for SFT
+    pub trace: String,
+    /// stable problem id (for grouping rollouts per prompt)
+    pub id: u64,
+}
+
+impl Problem {
+    /// prompt + trace — the supervised training text.
+    pub fn sft_text(&self) -> String {
+        format!("{}{}", self.prompt, self.trace)
+    }
+}
+
+/// Deterministic problem generator.
+#[derive(Debug, Clone)]
+pub struct TaskGen {
+    pub kinds: Vec<TaskKind>,
+    /// max operand magnitude (e.g. 99 => up to 2-digit problems)
+    pub max_operand: i64,
+}
+
+impl TaskGen {
+    pub fn new(kinds: Vec<TaskKind>, max_operand: i64) -> Self {
+        assert!(max_operand >= 9);
+        TaskGen { kinds, max_operand }
+    }
+
+    pub fn curriculum_small() -> Self {
+        TaskGen::new(vec![TaskKind::Add, TaskKind::Copy], 99)
+    }
+
+    pub fn curriculum_full() -> Self {
+        TaskGen::new(TaskKind::all().to_vec(), 99)
+    }
+
+    /// Generate the problem with the given id (deterministic in id).
+    pub fn problem(&self, id: u64) -> Problem {
+        let mut rng = Rng::with_stream(id, 0x7a5b_1ed0);
+        let kind = *rng.choice(&self.kinds);
+        match kind {
+            TaskKind::Add => self.gen_add(id, &mut rng),
+            TaskKind::Sub => self.gen_sub(id, &mut rng),
+            TaskKind::Chain => self.gen_chain(id, &mut rng),
+            TaskKind::Mul => self.gen_mul(id, &mut rng),
+            TaskKind::Copy => self.gen_copy(id, &mut rng),
+        }
+    }
+
+    fn gen_add(&self, id: u64, rng: &mut Rng) -> Problem {
+        let a = rng.range(1, self.max_operand);
+        let b = rng.range(1, self.max_operand);
+        let trace = add_trace(a, b);
+        Problem {
+            kind: TaskKind::Add,
+            prompt: format!("q:{a}+{b}=\n"),
+            answer: (a + b).to_string(),
+            trace,
+            id,
+        }
+    }
+
+    fn gen_sub(&self, id: u64, rng: &mut Rng) -> Problem {
+        let x = rng.range(1, self.max_operand);
+        let y = rng.range(1, self.max_operand);
+        let (a, b) = if x >= y { (x, y) } else { (y, x) };
+        let trace = sub_trace(a, b);
+        Problem {
+            kind: TaskKind::Sub,
+            prompt: format!("q:{a}-{b}=\n"),
+            answer: (a - b).to_string(),
+            trace,
+            id,
+        }
+    }
+
+    fn gen_chain(&self, id: u64, rng: &mut Rng) -> Problem {
+        let a = rng.range(1, self.max_operand);
+        let b = rng.range(1, self.max_operand);
+        let c = rng.range(1, (a + b).min(self.max_operand));
+        let s1 = a + b;
+        let s2 = s1 - c;
+        let trace = format!("c:{a}+{b}={s1}\nc:{s1}-{c}={s2}\na:{s2}\n");
+        Problem {
+            kind: TaskKind::Chain,
+            prompt: format!("q:{a}+{b}-{c}=\n"),
+            answer: s2.to_string(),
+            trace,
+            id,
+        }
+    }
+
+    fn gen_mul(&self, id: u64, rng: &mut Rng) -> Problem {
+        let a = rng.range(2, 9);
+        let b = rng.range(2, self.max_operand);
+        // partial products per digit place of b, then sum
+        let db = digits_rev(b);
+        let mut lines = String::new();
+        let mut acc = 0i64;
+        for (p, &d) in db.iter().enumerate() {
+            if d == 0 {
+                continue;
+            }
+            let part = a * d * 10i64.pow(p as u32);
+            let next = acc + part;
+            if acc == 0 {
+                lines.push_str(&format!("c:{a}*{}={part}\n", d * 10i64.pow(p as u32)));
+            } else {
+                lines.push_str(&format!(
+                    "c:{a}*{}={part}\nc:{acc}+{part}={next}\n",
+                    d * 10i64.pow(p as u32)
+                ));
+            }
+            acc = next;
+        }
+        lines.push_str(&format!("a:{}\n", a * b));
+        Problem {
+            kind: TaskKind::Mul,
+            prompt: format!("q:{a}*{b}=\n"),
+            answer: (a * b).to_string(),
+            trace: lines,
+            id,
+        }
+    }
+
+    fn gen_copy(&self, id: u64, rng: &mut Rng) -> Problem {
+        let a = rng.range(1, self.max_operand);
+        Problem {
+            kind: TaskKind::Copy,
+            prompt: format!("q:copy {a}=\n"),
+            answer: a.to_string(),
+            trace: format!("a:{a}\n"),
+            id,
+        }
+    }
+}
+
+/// Column-addition CoT: one line per digit column, carrying.
+fn add_trace(a: i64, b: i64) -> String {
+    let da = digits_rev(a);
+    let db = digits_rev(b);
+    let n = da.len().max(db.len());
+    let mut carry = 0i64;
+    let mut lines = String::new();
+    for i in 0..n {
+        let x = da.get(i).copied().unwrap_or(0);
+        let y = db.get(i).copied().unwrap_or(0);
+        let s = x + y + carry;
+        if carry > 0 {
+            lines.push_str(&format!("c:{x}+{y}+{carry}={s}\n"));
+        } else {
+            lines.push_str(&format!("c:{x}+{y}={s}\n"));
+        }
+        carry = s / 10;
+    }
+    lines.push_str(&format!("a:{}\n", a + b));
+    lines
+}
+
+/// Place-value subtraction CoT: peel off b one digit-place at a time.
+fn sub_trace(a: i64, b: i64) -> String {
+    debug_assert!(a >= b);
+    let mut lines = String::new();
+    let mut cur = a;
+    let db = digits_rev(b);
+    for (p, &d) in db.iter().enumerate().rev() {
+        if d == 0 {
+            continue;
+        }
+        let step = d * 10i64.pow(p as u32);
+        let next = cur - step;
+        lines.push_str(&format!("c:{cur}-{step}={next}\n"));
+        cur = next;
+    }
+    lines.push_str(&format!("a:{}\n", a - b));
+    lines
+}
+
+fn digits_rev(mut x: i64) -> Vec<i64> {
+    if x == 0 {
+        return vec![0];
+    }
+    let mut out = Vec::new();
+    while x > 0 {
+        out.push(x % 10);
+        x /= 10;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// reward
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RewardCfg {
+    pub correct: f32,
+    pub incorrect: f32,
+    /// fraction of the generation budget after which the soft length
+    /// penalty starts (paper: "soft penalty ... close to max seq length")
+    pub length_penalty_start: f32,
+    /// max penalty magnitude at 100% of budget
+    pub length_penalty_max: f32,
+}
+
+impl Default for RewardCfg {
+    fn default() -> Self {
+        RewardCfg {
+            correct: 1.0,
+            incorrect: 0.0,
+            length_penalty_start: 0.85,
+            length_penalty_max: 0.5,
+        }
+    }
+}
+
+impl RewardCfg {
+    /// Compute the reward for a generated completion.
+    ///
+    /// `completion` is the decoded text after the prompt (EOS stripped);
+    /// `gen_len` the number of generated tokens, `budget` the max allowed.
+    pub fn reward(&self, problem: &Problem, completion: &str, gen_len: usize, budget: usize) -> f32 {
+        let correct = extract_answer(completion)
+            .map(|ans| ans == problem.answer)
+            .unwrap_or(false);
+        let base = if correct { self.correct } else { self.incorrect };
+        base - self.length_penalty(gen_len, budget)
+    }
+
+    pub fn length_penalty(&self, gen_len: usize, budget: usize) -> f32 {
+        let frac = gen_len as f32 / budget.max(1) as f32;
+        if frac <= self.length_penalty_start {
+            0.0
+        } else {
+            let over = (frac - self.length_penalty_start)
+                / (1.0 - self.length_penalty_start);
+            self.length_penalty_max * over.min(1.0)
+        }
+    }
+}
+
+/// Parse the final `a:<int>` line of a completion.
+pub fn extract_answer(completion: &str) -> Option<String> {
+    completion
+        .lines()
+        .rev()
+        .find_map(|l| l.strip_prefix("a:"))
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty() && s.chars().all(|c| c.is_ascii_digit()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tokenizer;
+
+    #[test]
+    fn deterministic_per_id() {
+        let g = TaskGen::curriculum_full();
+        assert_eq!(g.problem(42), g.problem(42));
+        assert_ne!(g.problem(42), g.problem(43));
+    }
+
+    #[test]
+    fn add_trace_is_correct_and_parsable() {
+        let t = add_trace(47, 85);
+        assert_eq!(t, "c:7+5=12\nc:4+8+1=13\na:132\n");
+        assert_eq!(extract_answer(&t).unwrap(), "132");
+    }
+
+    #[test]
+    fn sub_trace_ends_with_answer() {
+        let t = sub_trace(85, 47);
+        assert!(t.ends_with("a:38\n"), "{t}");
+        assert_eq!(extract_answer(&t).unwrap(), "38");
+    }
+
+    #[test]
+    fn traces_verify_for_many_ids() {
+        let g = TaskGen::curriculum_full();
+        let cfg = RewardCfg::default();
+        for id in 0..500 {
+            let p = g.problem(id);
+            let r = cfg.reward(&p, &p.trace, 10, 100);
+            assert_eq!(r, 1.0, "trace must earn full reward: {p:?}");
+        }
+    }
+
+    #[test]
+    fn wrong_answer_gets_zero() {
+        let g = TaskGen::curriculum_full();
+        let p = g.problem(7);
+        let cfg = RewardCfg::default();
+        assert_eq!(cfg.reward(&p, "a:99999999\n", 10, 100), 0.0);
+        assert_eq!(cfg.reward(&p, "gibberish", 10, 100), 0.0);
+    }
+
+    #[test]
+    fn length_penalty_kicks_in_smoothly() {
+        let cfg = RewardCfg::default();
+        assert_eq!(cfg.length_penalty(50, 100), 0.0);
+        assert_eq!(cfg.length_penalty(85, 100), 0.0);
+        let p90 = cfg.length_penalty(90, 100);
+        let p100 = cfg.length_penalty(100, 100);
+        assert!(p90 > 0.0 && p90 < p100);
+        assert!((p100 - cfg.length_penalty_max).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_texts_tokenizable() {
+        let g = TaskGen::curriculum_full();
+        let tk = Tokenizer::new();
+        for id in 0..200 {
+            let p = g.problem(id);
+            tk.encode(&p.sft_text()).expect("trace must tokenize");
+        }
+    }
+
+    #[test]
+    fn extract_answer_takes_last_answer_line() {
+        assert_eq!(extract_answer("a:1\nc:x\na:2\n").unwrap(), "2");
+        assert_eq!(extract_answer("a: 42 \n").unwrap(), "42");
+        assert!(extract_answer("a:\n").is_none());
+        assert!(extract_answer("a:12x\n").is_none());
+    }
+}

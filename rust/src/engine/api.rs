@@ -1,0 +1,68 @@
+//! The paper's three-endpoint generation-service API, as a Rust trait.
+//!
+//! §4 ("Architecture and Implementation Details"): *"any generation
+//! software that supports the three HTTP API endpoints that PipelineRL
+//! requires can be easily integrated"* — the endpoints being
+//! `/v1/chat/completions`, `/init_process_group` and
+//! `/request_weight_update`. The actor is written against this trait, so
+//! an alternative engine (or a real HTTP client) can be dropped in; the
+//! in-process [`super::Engine`] is the reference implementation.
+
+use crate::data::task::Problem;
+use crate::rl::Rollout;
+use crate::runtime::HostTensor;
+use anyhow::Result;
+
+/// A generation request (the chat-completions analogue).
+#[derive(Debug, Clone)]
+pub struct CompletionRequest {
+    pub problem: Problem,
+    pub prompt_tokens: Vec<i32>,
+    pub group_id: u64,
+}
+
+pub trait GenerationService {
+    /// `/v1/chat/completions` (streaming form): enqueue a request.
+    fn submit(&mut self, req: CompletionRequest) -> Result<u64>;
+
+    /// `/init_process_group`: join the weight-transfer group.
+    fn init_process_group(&mut self, group: &str) -> Result<()>;
+
+    /// `/request_weight_update`: receive new weights (in-flight).
+    fn request_weight_update(&mut self, version: u64, params: &[HostTensor]) -> Result<()>;
+
+    /// Advance generation by one engine step; completed sequences are
+    /// returned as rollouts.
+    fn step(&mut self) -> Result<Vec<Rollout>>;
+
+    /// Sequences currently in flight (active + queued).
+    fn load(&self) -> usize;
+
+    fn slots(&self) -> usize;
+}
+
+impl GenerationService for super::Engine {
+    fn submit(&mut self, req: CompletionRequest) -> Result<u64> {
+        Ok(self.add_request(req.problem, req.prompt_tokens, req.group_id))
+    }
+
+    fn init_process_group(&mut self, _group: &str) -> Result<()> {
+        Ok(()) // single-process: the WeightBus handles registration
+    }
+
+    fn request_weight_update(&mut self, version: u64, params: &[HostTensor]) -> Result<()> {
+        self.set_weights(version, params)
+    }
+
+    fn step(&mut self) -> Result<Vec<Rollout>> {
+        Ok(self.step()?.finished)
+    }
+
+    fn load(&self) -> usize {
+        self.load()
+    }
+
+    fn slots(&self) -> usize {
+        self.n_slots()
+    }
+}

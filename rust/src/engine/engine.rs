@@ -1,0 +1,440 @@
+//! The engine proper: continuous-batching decode loop over the AOT
+//! decode graph, with in-flight request admission and in-flight weight
+//! updates. See module docs in engine/mod.rs.
+
+use super::kvcache::BlockAllocator;
+use super::sequence::SeqState;
+use crate::data::task::Problem;
+use crate::model::tokenizer::{EOS_ID, PAD_ID};
+use crate::rl::Rollout;
+use crate::runtime::{HostTensor, Runtime, Variant};
+use crate::util::timer::Stopwatch;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::rc::Rc;
+use xla::{Literal, PjRtBuffer};
+
+#[derive(Debug, Clone)]
+pub struct EngineCfg {
+    pub variant: String,
+    pub temperature: f32,
+    pub max_new_tokens: usize,
+    /// KV page size for the block allocator
+    pub block_size: usize,
+    /// total KV blocks; None = exactly enough for all slots at max_seq
+    pub kv_blocks: Option<usize>,
+    /// record the full per-step log-distribution of sampled tokens
+    /// (needed by the Fig 7 KL study; off on the hot path)
+    pub capture_dist: bool,
+    /// recompute the whole KV cache under new weights at every weight
+    /// update (the paper's §5.1 ablation; costs throughput)
+    pub recompute_kv_on_update: bool,
+    /// greedy decoding: zero Gumbel noise (argmax) — used by the eval
+    /// harness (Table 1 protocol)
+    pub greedy: bool,
+}
+
+impl EngineCfg {
+    pub fn new(variant: &str) -> Self {
+        EngineCfg {
+            variant: variant.to_string(),
+            temperature: 1.0,
+            max_new_tokens: 48,
+            block_size: 16,
+            kv_blocks: None,
+            capture_dist: false,
+            recompute_kv_on_update: false,
+            greedy: false,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub steps: u64,
+    pub tokens_sampled: u64,
+    pub tokens_forced: u64,
+    pub weight_updates: u64,
+    pub kv_recomputes: u64,
+    pub recompute_steps: u64,
+    pub stall_steps: u64,
+    pub finished: u64,
+}
+
+/// Captured distribution row (Fig 7): sampled token's full log-dist.
+#[derive(Debug, Clone)]
+pub struct DistRow {
+    pub seq_id: u64,
+    /// index within the generated part of the sequence
+    pub gen_index: usize,
+    pub logdist: Vec<f32>,
+    pub version: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    pub finished: Vec<Rollout>,
+    pub tokens_sampled: usize,
+    /// true when no slot had work
+    pub idle: bool,
+}
+
+pub struct Engine {
+    pub cfg: EngineCfg,
+    variant: Variant,
+    graph: Rc<crate::runtime::Graph>,
+    /// weights staged once per in-flight update and kept device-resident
+    /// across decode steps (loop-invariant — §Perf)
+    params_bufs: Vec<PjRtBuffer>,
+    version: u64,
+    kv: Literal,
+    slots: Vec<Option<SeqState>>,
+    stalled: Vec<bool>,
+    pending: VecDeque<SeqState>,
+    allocator: BlockAllocator,
+    rng: Rng,
+    clock: Stopwatch,
+    next_seq_id: u64,
+    actor_id: usize,
+    pub stats: EngineStats,
+    pub captured: Vec<DistRow>,
+    gumbel_buf: Vec<f32>,
+}
+
+/// Stage a parameter set, keeping the source literals alive until every
+/// async host->device copy must have landed (we force completion by
+/// reading one element back through a blocking call on the last buffer).
+fn stage_params(
+    graph: &crate::runtime::Graph,
+    params: &[HostTensor],
+) -> Result<Vec<PjRtBuffer>> {
+    let lits = params
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+    let bufs = lits
+        .iter()
+        .map(|l| graph.stage(l))
+        .collect::<Result<Vec<_>>>()?;
+    // force every pending host->device copy to completion before the
+    // source literals drop (a blocking readback per buffer; weights are
+    // staged once per in-flight update, so this is off the decode loop)
+    for b in &bufs {
+        let _ = b.to_literal_sync()?;
+    }
+    drop(lits);
+    Ok(bufs)
+}
+
+impl Engine {
+    pub fn new(
+        rt: &mut Runtime,
+        cfg: EngineCfg,
+        init_params: &[HostTensor],
+        actor_id: usize,
+        rng: Rng,
+    ) -> Result<Engine> {
+        let variant = rt.manifest.variant(&cfg.variant)?.clone();
+        crate::runtime::check_params(&variant, init_params)?;
+        let graph = rt.graph(&cfg.variant, "decode")?;
+        let params_bufs = stage_params(&graph, init_params)?;
+        let kv = HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?;
+        let allocator = match cfg.kv_blocks {
+            Some(n) => BlockAllocator::new(n, cfg.block_size),
+            None => BlockAllocator::for_slots(variant.gen_batch, variant.max_seq, cfg.block_size),
+        };
+        let b = variant.gen_batch;
+        let v = variant.vocab;
+        Ok(Engine {
+            cfg,
+            slots: (0..b).map(|_| None).collect(),
+            stalled: vec![false; b],
+            pending: VecDeque::new(),
+            allocator,
+            rng,
+            clock: Stopwatch::new(),
+            next_seq_id: 1,
+            actor_id,
+            stats: EngineStats::default(),
+            captured: Vec::new(),
+            gumbel_buf: vec![0.0; b * v],
+            variant,
+            graph,
+            params_bufs,
+            version: 0,
+            kv,
+        })
+    }
+
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    pub fn current_version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total sequences in flight (active + queued).
+    pub fn load(&self) -> usize {
+        self.n_active() + self.n_pending()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Paper API `/v1/chat/completions` (enqueue form): submit a prompt.
+    /// Rollouts sharing `group_id` form one advantage group.
+    pub fn add_request(&mut self, problem: Problem, prompt_tokens: Vec<i32>, group_id: u64) -> u64 {
+        let id = self.next_seq_id;
+        self.next_seq_id += 1;
+        let seq = SeqState::new(
+            id,
+            group_id,
+            problem,
+            prompt_tokens,
+            crate::model::tokenizer::BOS_ID,
+            self.cfg.max_new_tokens,
+            self.clock.seconds(),
+        );
+        self.pending.push_back(seq);
+        id
+    }
+
+    /// Paper API `request_weight_update`: swap weights in-flight.
+    /// KV cache is retained (default) or recomputed (cfg flag, §5.1).
+    pub fn set_weights(&mut self, version: u64, params: &[HostTensor]) -> Result<()> {
+        crate::runtime::check_params(&self.variant, params)?;
+        self.params_bufs = stage_params(&self.graph, params)?;
+        self.version = version;
+        self.stats.weight_updates += 1;
+        if self.cfg.recompute_kv_on_update && self.n_active() > 0 {
+            self.recompute_kv()?;
+        }
+        Ok(())
+    }
+
+    /// Admit pending sequences into free slots (in-flight adds).
+    fn admit(&mut self) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                continue;
+            }
+            let Some(seq) = self.pending.front() else { break };
+            if !self.allocator.can_admit(seq.total_len()) {
+                break; // out of KV blocks: wait for a release
+            }
+            let seq = self.pending.pop_front().unwrap();
+            self.allocator
+                .admit(seq.seq_id, seq.total_len())
+                .expect("can_admit checked");
+            self.slots[i] = Some(seq);
+            self.stalled[i] = false;
+        }
+    }
+
+    /// One decode step for every busy slot. Returns finished rollouts.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        self.admit();
+        let b = self.variant.gen_batch;
+        let vsz = self.variant.vocab;
+        if self.n_active() == 0 {
+            return Ok(StepOutcome { idle: true, ..Default::default() });
+        }
+
+        // KV growth check: a slot whose next token needs a new block may
+        // stall when the pool is over-committed (vLLM would preempt).
+        for i in 0..b {
+            if let Some(s) = &self.slots[i] {
+                let ok = self.allocator.grow(s.seq_id, s.pos + 1).unwrap_or(false);
+                self.stalled[i] = !ok;
+                if !ok {
+                    self.stats.stall_steps += 1;
+                }
+            }
+        }
+
+        // build inputs
+        let mut pos = vec![0i32; b];
+        let mut cur = vec![PAD_ID; b];
+        let mut ftok = vec![PAD_ID; b];
+        let mut fmask = vec![1.0f32; b]; // idle/stalled slots: force PAD
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                if self.stalled[i] {
+                    continue;
+                }
+                pos[i] = s.pos as i32;
+                cur[i] = s.cur_token();
+                match s.forced_next() {
+                    Some(t) => {
+                        ftok[i] = t;
+                        fmask[i] = 1.0;
+                    }
+                    None => {
+                        fmask[i] = 0.0;
+                    }
+                }
+            }
+        }
+        if self.cfg.greedy {
+            self.gumbel_buf.iter_mut().for_each(|g| *g = 0.0);
+        } else {
+            self.rng.fill_gumbel(&mut self.gumbel_buf);
+        }
+
+        // NOTE: buffer staging is asynchronous on the TFRT CPU client —
+        // the source literal must outlive the execute call (the upstream
+        // crate's execute() awaits readiness for the same reason), so the
+        // per-step literals are bound to locals that live past run_buffers.
+        let pos_l = HostTensor::from_i32(&[b], pos).to_literal()?;
+        let cur_l = HostTensor::from_i32(&[b], cur).to_literal()?;
+        let gum_l = HostTensor::from_f32(&[b, vsz], self.gumbel_buf.clone()).to_literal()?;
+        let ftok_l = HostTensor::from_i32(&[b], ftok).to_literal()?;
+        let fmask_l = HostTensor::from_f32(&[b], fmask.clone()).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
+        let kv_b = self.graph.stage(&self.kv)?;
+        let pos_b = self.graph.stage(&pos_l)?;
+        let cur_b = self.graph.stage(&cur_l)?;
+        let gum_b = self.graph.stage(&gum_l)?;
+        let ftok_b = self.graph.stage(&ftok_l)?;
+        let fmask_b = self.graph.stage(&fmask_l)?;
+        let temp_b = self.graph.stage(&temp_l)?;
+
+        let mut inputs: Vec<&PjRtBuffer> = self.params_bufs.iter().collect();
+        inputs.push(&kv_b);
+        inputs.push(&pos_b);
+        inputs.push(&cur_b);
+        inputs.push(&gum_b);
+        inputs.push(&ftok_b);
+        inputs.push(&fmask_b);
+        inputs.push(&temp_b);
+
+        let mut outs = self.graph.run_buffers(&inputs).context("decode step")?;
+        // outputs: next_tok[B], chosen_lp[B], lp_all[B,V], kv', ent[B]
+        let kv_new = outs.swap_remove(3);
+        let next = outs[0].to_vec::<i32>()?;
+        let lps = outs[1].to_vec::<f32>()?;
+        let lp_all = if self.cfg.capture_dist {
+            Some(outs[2].to_vec::<f32>()?)
+        } else {
+            None
+        };
+        self.kv = kv_new;
+        self.stats.steps += 1;
+
+        // advance states, collect finishes
+        let mut outcome = StepOutcome::default();
+        let t_now = self.clock.seconds();
+        for i in 0..b {
+            if self.stalled[i] {
+                continue;
+            }
+            let Some(s) = self.slots[i].as_mut() else { continue };
+            let was_forced = s.forced_next().is_some();
+            if was_forced {
+                self.stats.tokens_forced += 1;
+            } else {
+                self.stats.tokens_sampled += 1;
+                outcome.tokens_sampled += 1;
+                if let Some(all) = &lp_all {
+                    self.captured.push(DistRow {
+                        seq_id: s.seq_id,
+                        gen_index: s.gen_len(),
+                        logdist: all[i * vsz..(i + 1) * vsz].to_vec(),
+                        version: self.version,
+                    });
+                }
+            }
+            s.advance(next[i], lps[i], self.version, EOS_ID, self.variant.max_seq);
+            if s.finished() {
+                let s = self.slots[i].take().unwrap();
+                self.allocator.release(s.seq_id).expect("release admitted seq");
+                self.stats.finished += 1;
+                outcome.finished.push(s.into_rollout(self.actor_id, t_now));
+            }
+        }
+        Ok(outcome)
+    }
+
+    /// Rebuild the KV cache for all active sequences under the current
+    /// weights by force-replaying their streams (Fig 7 "KV cache
+    /// recomputed" mode). Does not touch sequence state or stats other
+    /// than recompute counters.
+    fn recompute_kv(&mut self) -> Result<()> {
+        let b = self.variant.gen_batch;
+        let vsz = self.variant.vocab;
+        self.kv = HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?;
+        let max_pos = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.pos)
+            .max()
+            .unwrap_or(0);
+        let zero_gum = HostTensor::zeros_f32(&[b, vsz]).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
+        for p in 0..=max_pos {
+            let mut pos = vec![0i32; b];
+            let mut cur = vec![PAD_ID; b];
+            for (i, slot) in self.slots.iter().enumerate() {
+                if let Some(s) = slot {
+                    if p <= s.pos {
+                        pos[i] = p as i32;
+                        cur[i] = s.stream[p];
+                    }
+                }
+            }
+            let pos_l = HostTensor::from_i32(&[b], pos).to_literal()?;
+            let cur_l = HostTensor::from_i32(&[b], cur).to_literal()?;
+            let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
+            let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
+            let kv_b = self.graph.stage(&self.kv)?;
+            let pos_b = self.graph.stage(&pos_l)?;
+            let cur_b = self.graph.stage(&cur_l)?;
+            let gum_b = self.graph.stage(&zero_gum)?;
+            let ftok_b = self.graph.stage(&ftok_l)?;
+            let fmask_b = self.graph.stage(&fmask_l)?;
+            let temp_b = self.graph.stage(&temp_l)?;
+            let mut inputs: Vec<&PjRtBuffer> = self.params_bufs.iter().collect();
+            inputs.push(&kv_b);
+            inputs.push(&pos_b);
+            inputs.push(&cur_b);
+            inputs.push(&gum_b);
+            inputs.push(&ftok_b);
+            inputs.push(&fmask_b);
+            inputs.push(&temp_b);
+            let mut outs = self.graph.run_buffers(&inputs)?;
+            self.kv = outs.swap_remove(3);
+            self.stats.recompute_steps += 1;
+        }
+        self.stats.kv_recomputes += 1;
+        Ok(())
+    }
+
+    /// Abort everything in flight (shutdown path). Returns unfinished
+    /// rollouts with `FinishReason::Aborted`.
+    pub fn drain(&mut self) -> Vec<Rollout> {
+        let t = self.clock.seconds();
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                self.allocator.release(s.seq_id).ok();
+                out.push(s.into_rollout(self.actor_id, t));
+            }
+        }
+        for s in self.pending.drain(..) {
+            out.push(s.into_rollout(self.actor_id, t));
+        }
+        out
+    }
+}

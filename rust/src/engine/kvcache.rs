@@ -1,0 +1,222 @@
+//! Paged KV-cache block allocator (vLLM's PagedAttention bookkeeping).
+//!
+//! The device-side cache of the AOT decode graph is dense per slot, but
+//! admission control and memory accounting work exactly like vLLM: the
+//! cache is divided into fixed-size blocks; a sequence holds
+//! ceil(len / block_size) blocks, acquired incrementally as it grows and
+//! released when it finishes. A new request is admitted only when a slot
+//! *and* enough blocks for its prompt are available — with an
+//! over-committed pool this throttles admission exactly like a full HBM.
+//!
+//! Invariants (property-tested): no double-free, no leak: free +
+//! held == total at all times; a sequence never holds more blocks than
+//! ceil(max_seq / block_size).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    total: usize,
+    free: Vec<u32>,
+    /// sequence id -> block table (ordered physical block ids)
+    tables: HashMap<u64, Vec<u32>>,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && total_blocks > 0);
+        BlockAllocator {
+            block_size,
+            total: total_blocks,
+            free: (0..total_blocks as u32).rev().collect(),
+            tables: HashMap::new(),
+        }
+    }
+
+    /// Pool sized for `slots` sequences of up to `max_seq` tokens
+    /// (the non-overcommitted configuration).
+    pub fn for_slots(slots: usize, max_seq: usize, block_size: usize) -> Self {
+        let per_seq = max_seq.div_ceil(block_size);
+        Self::new(slots * per_seq, block_size)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn held_blocks(&self) -> usize {
+        self.tables.values().map(|t| t.len()).sum()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a new sequence of `prompt_len` tokens be admitted now?
+    pub fn can_admit(&self, prompt_len: usize) -> bool {
+        self.blocks_for(prompt_len.max(1)) <= self.free.len()
+    }
+
+    /// Register a new sequence and allocate blocks for its prompt.
+    pub fn admit(&mut self, seq_id: u64, prompt_len: usize) -> Result<()> {
+        if self.tables.contains_key(&seq_id) {
+            bail!("sequence {seq_id} already admitted");
+        }
+        let need = self.blocks_for(prompt_len.max(1));
+        if need > self.free.len() {
+            bail!("out of KV blocks: need {need}, free {}", self.free.len());
+        }
+        let table: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(seq_id, table);
+        Ok(())
+    }
+
+    /// Grow a sequence to `new_len` tokens, acquiring blocks as needed.
+    /// Returns false (and leaves state unchanged) if the pool is exhausted
+    /// — the engine then stalls that sequence (vLLM would preempt/swap).
+    pub fn grow(&mut self, seq_id: u64, new_len: usize) -> Result<bool> {
+        let Some(table) = self.tables.get_mut(&seq_id) else {
+            bail!("grow on unknown sequence {seq_id}");
+        };
+        let need = new_len.div_ceil(self.block_size);
+        if need <= table.len() {
+            return Ok(true);
+        }
+        let extra = need - table.len();
+        if extra > self.free.len() {
+            return Ok(false);
+        }
+        for _ in 0..extra {
+            table.push(self.free.pop().unwrap());
+        }
+        Ok(true)
+    }
+
+    /// Release every block of a finished sequence.
+    pub fn release(&mut self, seq_id: u64) -> Result<()> {
+        let Some(table) = self.tables.remove(&seq_id) else {
+            bail!("release of unknown sequence {seq_id}");
+        };
+        self.free.extend(table);
+        Ok(())
+    }
+
+    /// The block table of a live sequence (for tests/inspection).
+    pub fn table(&self, seq_id: u64) -> Option<&[u32]> {
+        self.tables.get(&seq_id).map(|t| t.as_slice())
+    }
+
+    /// Invariant check used by the property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        let held = self.held_blocks();
+        if held + self.free.len() != self.total {
+            bail!(
+                "block leak: held {held} + free {} != total {}",
+                self.free.len(),
+                self.total
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for b in self.free.iter().chain(self.tables.values().flatten()) {
+            if !seen.insert(*b) {
+                bail!("block {b} appears twice");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn admit_grow_release_cycle() {
+        let mut a = BlockAllocator::new(8, 16);
+        a.admit(1, 10).unwrap(); // 1 block
+        assert_eq!(a.table(1).unwrap().len(), 1);
+        assert!(a.grow(1, 16).unwrap()); // still 1 block
+        assert_eq!(a.table(1).unwrap().len(), 1);
+        assert!(a.grow(1, 17).unwrap()); // 2 blocks
+        assert_eq!(a.table(1).unwrap().len(), 2);
+        a.release(1).unwrap();
+        assert_eq!(a.free_blocks(), 8);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut a = BlockAllocator::new(2, 16);
+        assert!(a.can_admit(32));
+        a.admit(1, 32).unwrap(); // takes both blocks
+        assert!(!a.can_admit(1));
+        assert!(a.admit(2, 1).is_err());
+        a.release(1).unwrap();
+        assert!(a.can_admit(32));
+    }
+
+    #[test]
+    fn grow_exhaustion_is_graceful() {
+        let mut a = BlockAllocator::new(2, 4);
+        a.admit(1, 4).unwrap();
+        a.admit(2, 4).unwrap();
+        assert!(!a.grow(1, 5).unwrap(), "no blocks left: stall, not panic");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_admit_and_unknown_ops_error() {
+        let mut a = BlockAllocator::new(4, 4);
+        a.admit(1, 1).unwrap();
+        assert!(a.admit(1, 1).is_err());
+        assert!(a.release(99).is_err());
+        assert!(a.grow(99, 10).is_err());
+    }
+
+    #[test]
+    fn property_no_leak_no_double_use() {
+        testkit::check("kv allocator invariants", 200, 0xb10c, 64, |c| {
+            let total = c.usize_in(2, 24);
+            let bs = c.usize_in(1, 8);
+            let mut a = BlockAllocator::new(total, bs);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..c.usize_in(1, 60) {
+                match c.rng.below(3) {
+                    0 => {
+                        let len = c.usize_in(1, bs * 4);
+                        if a.can_admit(len) {
+                            a.admit(next_id, len).map_err(|e| e.to_string())?;
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let idx = c.rng.below(live.len());
+                            let id = live[idx];
+                            let len = c.usize_in(1, bs * 8);
+                            a.grow(id, len).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = c.rng.below(live.len());
+                            let id = live.swap_remove(idx);
+                            a.release(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Generation engine — the vLLM substitute (DESIGN.md §2).
+//!
+//! Faithful to the coordination contract the paper relies on:
+//!
+//! * **continuous batching** — a fixed pool of `gen_batch` slots; new
+//!   requests are admitted *in-flight* the moment a slot (and its KV
+//!   blocks) frees, without stopping in-progress sequences;
+//! * **paged KV accounting** — a block allocator in the vLLM style
+//!   ([`kvcache`]) gates admission; the device-side cache itself is a
+//!   dense per-slot tensor (the AOT decode graph's layout);
+//! * **in-flight weight updates** — [`Engine::set_weights`] swaps the
+//!   parameter set between decode steps while *retaining* the KV cache
+//!   (the paper's §5.1 design choice), tagging subsequent tokens with the
+//!   new weight version;
+//! * **prefill-through-decode** — prompts are force-fed through the same
+//!   decode graph (the force_tok/force_mask inputs), so one compiled
+//!   executable serves the whole request path;
+//! * the paper's three-endpoint service API as a trait ([`api`]).
+
+pub mod api;
+pub mod engine;
+pub mod kvcache;
+pub mod sequence;
+
+pub use api::{CompletionRequest, GenerationService};
+pub use engine::{Engine, EngineCfg, StepOutcome};
+pub use kvcache::BlockAllocator;
+pub use sequence::{SeqPhase, SeqState};

@@ -1,0 +1,211 @@
+//! Per-sequence state inside the engine.
+//!
+//! Token-stream convention (must match the AOT decode graph, model.py):
+//! the stream is `[BOS, prompt..., generated...]`; at cache position p the
+//! engine feeds stream[p] as cur_tok and the graph predicts stream[p+1].
+//! While p+1 still lies inside the prompt the prediction is *forced*
+//! (prefill-through-decode); afterwards the Gumbel-max sample is taken
+//! and its behavior logprob + weight version are recorded.
+
+use crate::data::task::Problem;
+use crate::rl::{FinishReason, Rollout};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// still force-feeding prompt tokens
+    Prefill,
+    /// sampling new tokens
+    Decode,
+    Finished(FinishReason),
+}
+
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub seq_id: u64,
+    pub group_id: u64,
+    pub problem: Problem,
+    /// [BOS, prompt...]
+    pub stream: Vec<i32>,
+    pub prompt_len: usize, // len incl. BOS
+    pub gen_tokens: Vec<i32>,
+    pub behavior_lp: Vec<f32>,
+    pub token_version: Vec<u64>,
+    /// next cache position to write (== tokens fed so far)
+    pub pos: usize,
+    pub phase: SeqPhase,
+    pub max_new: usize,
+    pub t_start: f64,
+}
+
+impl SeqState {
+    pub fn new(seq_id: u64, group_id: u64, problem: Problem, prompt_tokens: Vec<i32>,
+               bos: i32, max_new: usize, t_start: f64) -> Self {
+        let mut stream = Vec::with_capacity(prompt_tokens.len() + 1);
+        stream.push(bos);
+        stream.extend_from_slice(&prompt_tokens);
+        SeqState {
+            seq_id,
+            group_id,
+            problem,
+            prompt_len: stream.len(),
+            stream,
+            gen_tokens: Vec::new(),
+            behavior_lp: Vec::new(),
+            token_version: Vec::new(),
+            pos: 0,
+            phase: SeqPhase::Prefill,
+            max_new,
+            t_start,
+        }
+    }
+
+    /// The token to feed at the current position.
+    pub fn cur_token(&self) -> i32 {
+        self.stream[self.pos]
+    }
+
+    /// If the next position is still prompt, the forced token.
+    pub fn forced_next(&self) -> Option<i32> {
+        self.stream.get(self.pos + 1).copied()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.stream.len()
+    }
+
+    pub fn gen_len(&self) -> usize {
+        self.gen_tokens.len()
+    }
+
+    /// Advance after a decode step produced `next_tok` with `lp` under
+    /// weight `version`. `eos`/`max_seq` close the sequence.
+    pub fn advance(&mut self, next_tok: i32, lp: f32, version: u64, eos_id: i32, max_seq: usize) {
+        debug_assert!(!matches!(self.phase, SeqPhase::Finished(_)));
+        let forced = self.forced_next().is_some();
+        if forced {
+            self.pos += 1;
+            if self.pos + 1 >= self.prompt_len {
+                self.phase = SeqPhase::Decode;
+            }
+            return;
+        }
+        // sampled token
+        self.stream.push(next_tok);
+        self.gen_tokens.push(next_tok);
+        self.behavior_lp.push(lp);
+        self.token_version.push(version);
+        self.pos += 1;
+        if next_tok == eos_id {
+            self.phase = SeqPhase::Finished(FinishReason::Eos);
+        } else if self.gen_len() >= self.max_new || self.pos + 1 >= max_seq {
+            self.phase = SeqPhase::Finished(FinishReason::Length);
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        matches!(self.phase, SeqPhase::Finished(_))
+    }
+
+    pub fn into_rollout(self, actor_id: usize, t_end: f64) -> Rollout {
+        let finish = match self.phase {
+            SeqPhase::Finished(f) => f,
+            _ => FinishReason::Aborted,
+        };
+        Rollout {
+            seq_id: self.seq_id,
+            problem_id: self.problem.id,
+            group_id: self.group_id,
+            actor_id,
+            prompt_tokens: self.stream[..self.prompt_len].to_vec(),
+            gen_tokens: self.gen_tokens,
+            behavior_lp: self.behavior_lp,
+            token_version: self.token_version,
+            reward: 0.0, // filled by the actor after verification
+            finish,
+            t_start: self.t_start,
+            t_end,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task::TaskGen;
+
+    fn seq(max_new: usize) -> SeqState {
+        let p = TaskGen::curriculum_small().problem(1);
+        SeqState::new(7, 1, p, vec![10, 11, 12], 1, max_new, 0.0)
+    }
+
+    #[test]
+    fn prefill_forces_prompt_then_decodes() {
+        let mut s = seq(8);
+        assert_eq!(s.phase, SeqPhase::Prefill);
+        assert_eq!(s.cur_token(), 1); // BOS
+        assert_eq!(s.forced_next(), Some(10));
+        s.advance(99, -0.1, 0, 2, 96); // forced: 99 ignored
+        assert_eq!(s.cur_token(), 10);
+        s.advance(99, -0.1, 0, 2, 96);
+        s.advance(99, -0.1, 0, 2, 96);
+        assert_eq!(s.phase, SeqPhase::Decode);
+        assert_eq!(s.gen_len(), 0, "forced tokens are not recorded");
+        // now sampling
+        s.advance(42, -0.7, 3, 2, 96);
+        assert_eq!(s.gen_tokens, vec![42]);
+        assert_eq!(s.behavior_lp, vec![-0.7]);
+        assert_eq!(s.token_version, vec![3]);
+    }
+
+    #[test]
+    fn eos_finishes() {
+        let mut s = seq(8);
+        for _ in 0..3 {
+            s.advance(0, 0.0, 0, 2, 96);
+        }
+        s.advance(2, -0.5, 1, 2, 96); // EOS
+        assert_eq!(s.phase, SeqPhase::Finished(FinishReason::Eos));
+        let r = s.into_rollout(0, 1.0);
+        assert_eq!(r.gen_tokens, vec![2]);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn budget_finishes_with_length() {
+        let mut s = seq(2);
+        for _ in 0..3 {
+            s.advance(0, 0.0, 0, 2, 96);
+        }
+        s.advance(5, -0.5, 0, 2, 96);
+        s.advance(6, -0.5, 0, 2, 96);
+        assert_eq!(s.phase, SeqPhase::Finished(FinishReason::Length));
+        assert_eq!(s.gen_len(), 2);
+    }
+
+    #[test]
+    fn max_seq_caps_even_before_budget() {
+        let mut s = seq(100);
+        for _ in 0..3 {
+            s.advance(0, 0.0, 0, 2, 8);
+        }
+        for i in 0..4 {
+            s.advance(5 + i, -0.1, 0, 2, 8);
+        }
+        assert!(matches!(s.phase, SeqPhase::Finished(FinishReason::Length)));
+        assert!(s.total_len() <= 8);
+    }
+
+    #[test]
+    fn mixed_versions_recorded() {
+        let mut s = seq(8);
+        for _ in 0..3 {
+            s.advance(0, 0.0, 0, 2, 96);
+        }
+        s.advance(5, -0.1, 1, 2, 96);
+        s.advance(6, -0.1, 2, 2, 96);
+        s.advance(7, -0.1, 2, 2, 96);
+        let r = s.into_rollout(3, 2.0);
+        assert_eq!(r.version_span(), 1);
+        assert_eq!(r.actor_id, 3);
+    }
+}

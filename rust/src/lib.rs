@@ -1,0 +1,34 @@
+//! # PipelineRL — faster on-policy RL for long sequence generation
+//!
+//! Reproduction of Piché et al., *PipelineRL* (2025) as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   streaming actor → preprocessor → trainer pipeline with **in-flight
+//!   weight updates**, plus every substrate it depends on (generation
+//!   engine, stream broker, weight bus, synthetic task data, RL math,
+//!   analytic performance model, cluster simulator).
+//! * **L2/L1 (python/, build-time only)** — the transformer policy and its
+//!   Pallas kernels, AOT-lowered to HLO-text artifacts that
+//!   [`runtime`] loads and executes via the PJRT CPU client.
+//!
+//! The crate is organised so that `coordinator` is the only module that
+//! knows about the pipeline topology; everything below it is reusable.
+
+pub mod benchkit;
+pub mod broker;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod rl;
+pub mod runtime;
+pub mod simcluster;
+pub mod testkit;
+pub mod util;
+pub mod weights;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,192 @@
+//! `pipeline-rl` — the command-line launcher.
+//!
+//! ```text
+//! pipeline-rl train   [--config configs/pipeline_small.toml] [key=value ...]
+//! pipeline-rl eval    --checkpoint path.ckpt [--n 100]
+//! pipeline-rl sim     [--mode pipeline|conv] [--n 128] [--steps 100]
+//! pipeline-rl pareto  [--n 128 --b 128]
+//! pipeline-rl info
+//! ```
+//!
+//! `train` runs the full coordinator from a TOML config with CLI
+//! overrides and writes the metric series to --out (default runs/).
+
+use anyhow::{bail, Result};
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator::{self, eval};
+use pipeline_rl::model::checkpoint::Checkpoint;
+use pipeline_rl::perfmodel::{search, throughput::Workload};
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::simcluster::{SimCfg, Simulator};
+use pipeline_rl::util::cli::Args;
+use pipeline_rl::util::logging::{self, Level};
+
+fn main() -> Result<()> {
+    logging::set_level(Level::Info);
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv.clone());
+    match cmd.as_str() {
+        "train" => train(&args, &argv),
+        "eval" => evaluate(&args),
+        "sim" => sim(&args),
+        "pareto" => pareto(&args),
+        "info" => info(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `pipeline-rl help`"),
+    }
+}
+
+fn train(args: &Args, argv: &[String]) -> Result<()> {
+    let overrides: Vec<String> = argv
+        .iter()
+        .filter(|a| !a.starts_with("--") && a.contains('='))
+        .cloned()
+        .collect();
+    let cfg = match args.flags.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path), &overrides)?,
+        None => {
+            let mut doc = pipeline_rl::config::TomlDoc::default();
+            doc.apply_overrides(&overrides)?;
+            RunConfig::from_doc(&doc)?
+        }
+    };
+    let out = args.str_or("out", "runs");
+    println!(
+        "training: variant={} mode={} steps={} actors={}",
+        cfg.variant,
+        cfg.mode.name(),
+        cfg.rl_steps,
+        cfg.n_actors
+    );
+    let summary = coordinator::run(cfg.clone(), None)?;
+    let path = std::path::Path::new(&out)
+        .join(format!("{}_{}.json", cfg.variant, cfg.mode.name()));
+    summary.report.save_json(&path)?;
+    println!("metrics written to {}", path.display());
+
+    let mut rt = Runtime::new()?;
+    let rep = eval::evaluate(&mut rt, &cfg, &summary.final_params, 60)?;
+    println!(
+        "held-out success: {:.1}%  (wall {:.1}s, samples {})",
+        100.0 * rep.success_rate(),
+        summary.wall_seconds,
+        summary.report.counters.get("samples_trained").copied().unwrap_or(0.0),
+    );
+    if let Some(dir) = &cfg.checkpoint_dir {
+        println!("checkpoints in {dir}");
+    }
+    Ok(())
+}
+
+fn evaluate(args: &Args) -> Result<()> {
+    let path = args.require("checkpoint")?;
+    let n = args.usize_or("n", 100)?;
+    let ck = Checkpoint::load(std::path::Path::new(path))?;
+    let mut cfg = RunConfig::default();
+    cfg.variant = ck.variant.clone();
+    cfg.max_new_tokens = args.usize_or("max-new", 48)?;
+    let mut rt = Runtime::new()?;
+    let rep = eval::evaluate(&mut rt, &cfg, &ck.params, n)?;
+    println!(
+        "checkpoint step {}: success {:.1}% over {} problems",
+        ck.step,
+        100.0 * rep.success_rate(),
+        rep.n
+    );
+    for (k, (c, tot)) in rep.by_kind {
+        println!("  {k:<8} {c}/{tot}");
+    }
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 128)?;
+    let b = args.usize_or("b", 128)?;
+    let l = args.usize_or("l", 512)?;
+    let steps = args.usize_or("steps", 64)?;
+    let mode = args.str_or("mode", "pipeline");
+    let mut cfg = if mode == "pipeline" {
+        let i = args.usize_or("i", n / 3)?;
+        let h = args.usize_or("h", 192)?;
+        SimCfg::pipeline(n, i, h, b, l)
+    } else {
+        let g = args.usize_or("g", 32)?;
+        SimCfg::conventional(n, g, args.usize_or("h", 64)?, b, l)
+    };
+    cfg.rl_steps = steps;
+    let r = Simulator::new(cfg).run();
+    println!("mode {mode}: {steps} optimizer steps");
+    println!("  wall time      : {:.0} flashes", r.t_end);
+    println!("  tokens         : {:.0}", r.tokens);
+    println!("  throughput     : {:.2} tokens/flash", r.throughput);
+    println!(
+        "  max lag        : {:.0} steps",
+        r.max_lag.values().iter().cloned().fold(0.0, f64::max)
+    );
+    println!(
+        "  lag by rel.pos : {:?}",
+        r.lag_by_relpos
+            .iter()
+            .map(|x| (x * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn pareto(args: &Args) -> Result<()> {
+    let mut w = Workload::paper_a4();
+    w.n = args.usize_or("n", 128)?;
+    w.b = args.usize_or("b", 128)?;
+    let cs = search::case_study(&w);
+    println!(
+        "best same-lag speedup: {:.2}x at g_max {} (pipeline H={} I={})",
+        cs.speedup, cs.pipe.lag_steps, cs.pipe.h, cs.pipe.i
+    );
+    println!("run `cargo run --release --example pareto` for the full tables");
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::new()?;
+    println!("PJRT platform : cpu");
+    println!(
+        "artifacts     : {}",
+        pipeline_rl::runtime::artifacts_dir().display()
+    );
+    println!("variants:");
+    for (name, v) in &rt.manifest.variants {
+        println!(
+            "  {name:<6} d={} L={} heads={} max_seq={} gen_batch={} train=[{}x{}] params={:.2}M graphs={}",
+            v.d_model,
+            v.n_layers,
+            v.n_heads,
+            v.max_seq,
+            v.gen_batch,
+            v.train_batch,
+            v.seq_len,
+            v.n_params as f64 / 1e6,
+            v.artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "pipeline-rl — PipelineRL reproduction (rust + JAX/Pallas AOT)\n\n\
+         commands:\n\
+         \x20 train   [--config FILE] [section.key=value ...] [--out DIR]\n\
+         \x20 eval    --checkpoint FILE [--n N]\n\
+         \x20 sim     [--mode pipeline|conv] [--n GPUS] [--steps N]\n\
+         \x20 pareto  [--n GPUS] [--b BATCH]\n\
+         \x20 info\n"
+    );
+}

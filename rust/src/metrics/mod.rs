@@ -1,0 +1,255 @@
+//! Metrics: thread-safe time-series recording shared by every pipeline
+//! stage, plus JSON/CSV export for the figure harnesses.
+//!
+//! Every point is (wall_clock_seconds, x, value) where x is the natural
+//! x-axis of the series (optimizer step, sample count, batch index...).
+//! The figure benches slice these series exactly the way the paper's
+//! plots do: reward-vs-time (Fig 5a), reward-vs-samples (Fig 5b),
+//! samples-vs-time (Fig 5c), max-lag and ESS vs step (Fig 6).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub t: f64,
+    pub x: f64,
+    pub value: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<Point>,
+}
+
+impl Series {
+    pub fn push(&mut self, t: f64, x: f64, value: f64) {
+        self.points.push(Point { t, x, value });
+    }
+
+    pub fn last(&self) -> Option<&Point> {
+        self.points.last()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.value).collect()
+    }
+
+    /// Moving average of the last `window` values.
+    pub fn tail_mean(&self, window: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.points.len().min(window);
+        self.points[self.points.len() - n..]
+            .iter()
+            .map(|p| p.value)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// First time the smoothed value crosses `threshold` (for
+    /// "time-to-reward" comparisons, Fig 5a). Returns (t, x).
+    pub fn first_crossing(&self, threshold: f64, window: usize) -> Option<(f64, f64)> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let mut acc = 0.0;
+        let mut buf = std::collections::VecDeque::new();
+        for p in &self.points {
+            buf.push_back(p.value);
+            acc += p.value;
+            if buf.len() > window {
+                acc -= buf.pop_front().unwrap();
+            }
+            if acc / buf.len() as f64 >= threshold {
+                return Some((p.t, p.x));
+            }
+        }
+        None
+    }
+}
+
+#[derive(Debug, Default)]
+struct HubInner {
+    series: BTreeMap<String, Series>,
+    counters: BTreeMap<String, f64>,
+}
+
+/// Clone-able, thread-safe metrics sink.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsHub {
+    inner: Arc<Mutex<HubInner>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, series: &str, t: f64, x: f64, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.series.entry(series.to_string()).or_default().push(t, x, value);
+    }
+
+    pub fn add(&self, counter: &str, delta: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(counter.to_string()).or_insert(0.0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn series(&self, name: &str) -> Series {
+        self.inner
+            .lock()
+            .unwrap()
+            .series
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn series_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().series.keys().cloned().collect()
+    }
+
+    pub fn snapshot(&self) -> RunReport {
+        let g = self.inner.lock().unwrap();
+        RunReport {
+            series: g.series.clone(),
+            counters: g.counters.clone(),
+        }
+    }
+}
+
+/// Immutable result of a run: all series + counters.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub series: BTreeMap<String, Series>,
+    pub counters: BTreeMap<String, f64>,
+}
+
+impl RunReport {
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = self
+            .series
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    Json::Obj(vec![
+                        ("t".into(), Json::arr_f64(&s.points.iter().map(|p| p.t).collect::<Vec<_>>())),
+                        ("x".into(), Json::arr_f64(&s.points.iter().map(|p| p.x).collect::<Vec<_>>())),
+                        ("v".into(), Json::arr_f64(&s.points.iter().map(|p| p.value).collect::<Vec<_>>())),
+                    ]),
+                )
+            })
+            .collect();
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::Obj(vec![
+            ("series".into(), Json::Obj(series)),
+            ("counters".into(), Json::Obj(counters)),
+        ])
+    }
+
+    pub fn save_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// CSV with columns t,x,value for one series.
+    pub fn series_csv(&self, name: &str) -> String {
+        let mut out = String::from("t,x,value\n");
+        if let Some(s) = self.series.get(name) {
+            for p in &s.points {
+                out.push_str(&format!("{},{},{}\n", p.t, p.x, p.value));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let hub = MetricsHub::new();
+        hub.record("reward", 0.1, 1.0, 0.2);
+        hub.record("reward", 0.2, 2.0, 0.4);
+        hub.add("samples", 8.0);
+        hub.add("samples", 8.0);
+        let rep = hub.snapshot();
+        assert_eq!(rep.series("reward").unwrap().points.len(), 2);
+        assert_eq!(rep.counters["samples"], 16.0);
+    }
+
+    #[test]
+    fn tail_mean_and_crossing() {
+        let mut s = Series::default();
+        for i in 0..10 {
+            s.push(i as f64, i as f64, i as f64 * 0.1);
+        }
+        assert!((s.tail_mean(2) - 0.85).abs() < 1e-12);
+        let (t, _x) = s.first_crossing(0.5, 1).unwrap();
+        assert_eq!(t, 5.0);
+        assert!(s.first_crossing(2.0, 1).is_none());
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let hub = MetricsHub::new();
+        let mut handles = Vec::new();
+        for th in 0..4 {
+            let hub = hub.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    hub.record("s", th as f64, i as f64, 1.0);
+                    hub.add("c", 1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hub.series("s").points.len(), 400);
+        assert_eq!(hub.counter("c"), 400.0);
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let hub = MetricsHub::new();
+        hub.record("a", 1.0, 2.0, 3.0);
+        let j = hub.snapshot().to_json();
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        let v = parsed
+            .req("series").unwrap()
+            .req("a").unwrap()
+            .req("v").unwrap()
+            .as_arr().unwrap();
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn csv_export() {
+        let hub = MetricsHub::new();
+        hub.record("x", 0.5, 1.0, 2.0);
+        let csv = hub.snapshot().series_csv("x");
+        assert_eq!(csv, "t,x,value\n0.5,1,2\n");
+    }
+}

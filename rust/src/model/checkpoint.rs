@@ -1,0 +1,137 @@
+//! Checkpoint (de)serialization for parameter / optimizer-state sets.
+//!
+//! Own compact binary format (offline env — no serde/safetensors):
+//!
+//! ```text
+//! magic  "PRLCKPT1"                       8 bytes
+//! meta   u32 json_len, json bytes         variant name, step, tensor index
+//! data   for each tensor: f32 LE values   (shapes live in the json index)
+//! ```
+//!
+//! Used by the trainer's periodic checkpointing (whose stall the broker's
+//! ring buffers must absorb — see the failure-injection test) and by the
+//! Fig 7 KL study, which replays consecutive checkpoints.
+
+use crate::runtime::HostTensor;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PRLCKPT1";
+
+pub struct Checkpoint {
+    pub variant: String,
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let index = Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("step".into(), Json::Num(self.step as f64)),
+            (
+                "tensors".into(),
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|t| {
+                            Json::Arr(
+                                t.shape().iter().map(|&d| Json::Num(d as f64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let meta = index.to_string_compact().into_bytes();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(&meta)?;
+        for t in &self.params {
+            let data = t.f32s().context("checkpoints hold f32 tensors")?;
+            // SAFETY-free explicit LE encode
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a PipelineRL checkpoint");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let mut meta = vec![0u8; u32::from_le_bytes(len4) as usize];
+        f.read_exact(&mut meta)?;
+        let j = Json::parse(std::str::from_utf8(&meta)?)?;
+        let variant = j.req("variant")?.as_str()?.to_string();
+        let step = j.req("step")?.as_f64()? as u64;
+        let mut params = Vec::new();
+        for tshape in j.req("tensors")?.as_arr()? {
+            let shape: Vec<usize> = tshape
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            let n: usize = shape.iter().product();
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(HostTensor::F32 { shape, data });
+        }
+        Ok(Checkpoint { variant, step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            variant: "tiny".into(),
+            step: 17,
+            params: vec![
+                HostTensor::from_f32(&[2, 3], vec![1., -2., 3.5, 0., 5., -6.25]),
+                HostTensor::from_f32(&[4], vec![9., 8., 7., 6.]),
+            ],
+        };
+        let dir = std::env::temp_dir().join("prl_ckpt_test");
+        let path = dir.join("c17.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.variant, "tiny");
+        assert_eq!(back.step, 17);
+        assert_eq!(back.params, ck.params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("prl_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-side host utilities: the tokenizer (mirroring the python vocab)
+//! and checkpoint (de)serialization for parameter sets.
+
+pub mod checkpoint;
+pub mod tokenizer;
+
+pub use tokenizer::Tokenizer;

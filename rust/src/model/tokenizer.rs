@@ -1,0 +1,157 @@
+//! Character-level tokenizer, the exact mirror of python/compile/vocab.py.
+//!
+//! The alphabet string below is load-bearing and must match ALPHABET in
+//! vocab.py byte-for-byte; `Tokenizer::verify_against_artifact` checks the
+//! generated artifacts/vocab.json at runtime so the two can never drift
+//! silently (also exercised as a cargo test).
+
+use crate::util::Json;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+
+/// Must match python/compile/vocab.py ALPHABET exactly.
+pub const ALPHABET: &str = "0123456789+-*/=()<>.,:; \nabcdefghijklmnopqrstuvwxyz?_";
+
+pub const V: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    to_id: HashMap<char, i32>,
+    to_char: Vec<Option<char>>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = HashMap::new();
+        let mut to_char = vec![None; V];
+        for (i, c) in ALPHABET.chars().enumerate() {
+            let id = 3 + i as i32;
+            to_id.insert(c, id);
+            to_char[id as usize] = Some(c);
+        }
+        Tokenizer { to_id, to_char }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        V
+    }
+
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                self.to_id
+                    .get(&c)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("char {c:?} not in alphabet"))
+            })
+            .collect()
+    }
+
+    /// Decode, stopping at EOS and skipping specials.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS_ID {
+                break;
+            }
+            if id == PAD_ID || id == BOS_ID {
+                continue;
+            }
+            if let Some(Some(c)) = self.to_char.get(id as usize) {
+                out.push(*c);
+            }
+        }
+        out
+    }
+
+    /// Cross-check against the table emitted by aot.py.
+    pub fn verify_against_artifact(&self, artifacts_dir: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(artifacts_dir.join("vocab.json"))?;
+        let j = Json::parse(&text)?;
+        let alphabet = j.req("alphabet")?.as_str()?;
+        if alphabet != ALPHABET {
+            bail!(
+                "tokenizer drift: python alphabet {:?} != rust {:?}",
+                alphabet,
+                ALPHABET
+            );
+        }
+        let table = j.req("table")?.as_arr()?;
+        if table.len() != V {
+            bail!("vocab table size {} != {V}", table.len());
+        }
+        for (i, entry) in table.iter().enumerate() {
+            let s = entry.as_str()?;
+            match self.to_char[i] {
+                Some(c) => {
+                    if s.chars().count() != 1 || s.chars().next() != Some(c) {
+                        bail!("table[{i}] = {s:?}, rust has {c:?}");
+                    }
+                }
+                None => {
+                    if !s.starts_with('<') {
+                        bail!("table[{i}] = {s:?}, rust has a special/unused");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new();
+        let text = "12+34=46\nc:ok";
+        let ids = tk.encode(text).unwrap();
+        assert_eq!(tk.decode(&ids), text);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode("42").unwrap();
+        ids.push(EOS_ID);
+        ids.extend(tk.encode("junk").unwrap());
+        assert_eq!(tk.decode(&ids), "42");
+    }
+
+    #[test]
+    fn rejects_unknown_chars() {
+        let tk = Tokenizer::new();
+        assert!(tk.encode("日本").is_err());
+    }
+
+    #[test]
+    fn alphabet_fits_vocab() {
+        assert!(ALPHABET.chars().count() + 3 <= V);
+        // no duplicate characters
+        let mut seen = std::collections::HashSet::new();
+        for c in ALPHABET.chars() {
+            assert!(seen.insert(c), "duplicate char {c:?}");
+        }
+    }
+
+    #[test]
+    fn matches_artifact_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("vocab.json").exists() {
+            Tokenizer::new().verify_against_artifact(&dir).unwrap();
+        }
+    }
+}

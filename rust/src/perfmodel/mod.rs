@@ -1,0 +1,21 @@
+//! Analytic performance model — paper Appendix A, in "flash" units.
+//!
+//! A *flash* is the theoretically smallest amortized time for one token
+//! forward pass (Eq. 9): F_gen / M. Throughputs are tokens/flash; they
+//! depend only on the utilization curve U(h), the train-cost-per-token τ
+//! and the topology — never on the absolute GPU speed, which is why the
+//! paper's 128-H100 conclusions transfer to any accelerator.
+//!
+//! Regenerates: Fig 8 (U(h) curve), Fig 9 (throughput vs g_max with the
+//! full (I, H) search), Fig 3b (Pareto schematic), and the Appendix A.4
+//! case study (H=192, I=44, 1.57× at g_max≈133).
+
+pub mod learning;
+pub mod search;
+pub mod throughput;
+pub mod utilization;
+
+pub use learning::{same_lag_comparison, LearnCfg, LearningCurve};
+pub use search::{pareto_sweep, search_pipeline_configs, CaseStudy};
+pub use throughput::{conventional, pipeline, ConvPoint, PipePoint, Workload};
+pub use utilization::AccelModel;

@@ -1,0 +1,177 @@
+//! Configuration search over (I, H) — the paper's A.3 note that the
+//! same-lag maximization is hard analytically, so it performs "a
+//! straight-forward search of all (H, I) configurations". Regenerates
+//! Fig 9 and the A.4 case study, plus Fig 3b's Pareto view.
+
+use super::throughput::{conventional, pipeline, ConvPoint, PipePoint, Workload};
+
+/// Best pipeline throughput for every max-lag budget: for each (I, H)
+/// with lag ≤ budget keep the max r. Returns (lag_budget, best point).
+pub fn search_pipeline_configs(
+    w: &Workload,
+    lag_budgets: &[usize],
+    h_grid: &[usize],
+) -> Vec<(usize, Option<PipePoint>)> {
+    let mut all: Vec<PipePoint> = Vec::new();
+    for i in 1..w.n {
+        for &h in h_grid {
+            all.push(pipeline(w, i, h));
+        }
+    }
+    lag_budgets
+        .iter()
+        .map(|&budget| {
+            let best = all
+                .iter()
+                .filter(|p| p.lag_steps <= budget)
+                .max_by(|a, b| a.r.partial_cmp(&b.r).unwrap());
+            (budget, best.copied())
+        })
+        .collect()
+}
+
+/// Conventional curve over G (Fig 9's second series).
+pub fn conventional_curve(w: &Workload, gs: &[usize]) -> Vec<ConvPoint> {
+    gs.iter().map(|&g| conventional(w, g)).collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct CaseStudy {
+    pub pipe: PipePoint,
+    pub conv: ConvPoint,
+    pub speedup: f64,
+}
+
+/// The A.4 case study: best same-lag pipeline config vs conventional at
+/// the lag where pipeline peaks (paper: 1.57× at g_max ≈ 133).
+pub fn case_study(w: &Workload) -> CaseStudy {
+    let h_grid: Vec<usize> = (8..=512).step_by(4).collect();
+    // find the pipeline config with max r whose lag matches a
+    // conventional G in a practical range
+    let mut best: Option<(PipePoint, ConvPoint, f64)> = None;
+    for i in 1..w.n {
+        for &h in &h_grid {
+            let p = pipeline(w, i, h);
+            if p.lag_steps == 0 || p.lag_steps > 512 {
+                continue;
+            }
+            // same-lag conventional: S - 1 lag_samples ~ lag budget
+            let g = p.lag_steps.max(1);
+            let c = conventional(w, g);
+            let speedup = p.r / c.r;
+            if best.as_ref().map(|(_, _, s)| speedup > *s).unwrap_or(true) {
+                best = Some((p, c, speedup));
+            }
+        }
+    }
+    let (pipe, conv, speedup) = best.expect("non-empty grid");
+    CaseStudy { pipe, conv, speedup }
+}
+
+/// Fig 3b Pareto data: (effectiveness proxy, throughput) pairs for both
+/// methods. Effectiveness ΔR/ΔS is not analytically computable (the
+/// paper makes the same caveat); the standard proxy is 1/(1+mean_lag)
+/// normalized — monotone in on-policyness.
+pub fn pareto_sweep(w: &Workload) -> (Vec<(f64, f64)>, Vec<(f64, f64)>) {
+    let conv: Vec<(f64, f64)> = [1usize, 2, 4, 8, 16, 32, 64, 128]
+        .iter()
+        .map(|&g| {
+            let c = conventional(w, g);
+            // mean lag of conventional batches ~ (G-1)/2 steps
+            let eff = 1.0 / (1.0 + (g as f64 - 1.0) / 2.0);
+            (eff, c.r)
+        })
+        .collect();
+    let mut pipe: Vec<(f64, f64)> = Vec::new();
+    for t_gpus in [16usize, 32, 48, 64, 80, 96, 112] {
+        let i = w.n - t_gpus;
+        // smallest H that keeps the trainer fed: U(H)*I >= (N-I)/tau
+        let mut chosen: Option<PipePoint> = None;
+        for h in (4..=1024).step_by(4) {
+            let p = pipeline(w, i, h);
+            if p.r_gen >= p.r_train {
+                chosen = Some(p);
+                break;
+            }
+        }
+        if let Some(p) = chosen {
+            // pipeline mean token lag ~ g_max/2 (linear ramp, Fig 3a)
+            let eff = 1.0 / (1.0 + p.lag_steps as f64 / 2.0);
+            pipe.push((eff, p.r));
+        }
+    }
+    (pipe, conv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_speedup_matches_paper() {
+        let w = Workload::paper_a4();
+        let cs = case_study(&w);
+        // paper: up to 1.57x at g_max ~ 133
+        assert!(
+            cs.speedup > 1.4 && cs.speedup < 1.8,
+            "speedup {} (paper 1.57)",
+            cs.speedup
+        );
+        assert!(
+            (cs.pipe.lag_steps as f64 - 133.0).abs() < 60.0,
+            "lag {} (paper ~133)",
+            cs.pipe.lag_steps
+        );
+    }
+
+    #[test]
+    fn search_respects_lag_budget() {
+        let w = Workload::paper_a4();
+        let grid: Vec<usize> = (8..=256).step_by(8).collect();
+        let res = search_pipeline_configs(&w, &[4, 16, 64, 256], &grid);
+        let mut prev = 0.0;
+        for (budget, best) in res {
+            let p = best.expect("some config fits");
+            assert!(p.lag_steps <= budget);
+            assert!(p.r >= prev, "more lag budget can't hurt");
+            prev = p.r;
+        }
+    }
+
+    #[test]
+    fn pipeline_dominates_conventional_at_matched_lag(){
+        let w = Workload::paper_a4();
+        for g in [16usize, 32, 64, 128] {
+            let c = conventional(&w, g);
+            let grid: Vec<usize> = (8..=512).step_by(8).collect();
+            let best = search_pipeline_configs(&w, &[g], &grid)[0]
+                .1
+                .expect("config");
+            assert!(
+                best.r > c.r,
+                "pipeline should win at lag {g}: {} vs {}",
+                best.r,
+                c.r
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_sweep_produces_both_frontiers() {
+        let w = Workload::paper_a4();
+        let (pipe, conv) = pareto_sweep(&w);
+        assert!(pipe.len() >= 4 && conv.len() >= 4);
+        // conventional frontier: throughput rises as effectiveness falls
+        for win in conv.windows(2) {
+            assert!(win[1].0 <= win[0].0, "conv eff monotone");
+            assert!(win[1].1 >= win[0].1 * 0.99, "conv r monotone-ish");
+        }
+        // Fig 3b's claim, in its testable form: at matched lag budgets the
+        // pipeline configurations reach strictly higher throughput, i.e.
+        // higher eff x throughput iso-curves (checked in detail by
+        // pipeline_dominates_conventional_at_matched_lag).
+        let best_pipe_r = pipe.iter().map(|p| p.1).fold(0.0f64, f64::max);
+        let conv_g32_r = conventional(&w, 32).r;
+        assert!(best_pipe_r > conv_g32_r);
+    }
+}

@@ -1,0 +1,230 @@
+//! Throughput equations — paper Appendix A.2 (conventional) and A.3
+//! (pipeline).
+//!
+//! Conventional RL (Eqs. 10–15): each RL step generates S = B·G
+//! sequences on all N GPUs, *draining* the batch as short sequences
+//! finish (h(l) shrinks with decode step l), then trains on the K tokens.
+//!
+//! PipelineRL (Eqs. 16–18): I GPUs generate at a *constant* batch H
+//! (in-flight refills), N−I GPUs train concurrently; system throughput is
+//! the min of the two stages. Max lag g_max = ⌈H·I·L / (L̄·B)⌉.
+
+use super::utilization::AccelModel;
+
+/// Workload + hardware assumptions shared by both formulas.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// total GPUs
+    pub n: usize,
+    /// optimizer batch (sequences per optimizer step)
+    pub b: usize,
+    /// maximum sequence length; lengths ~ Uniform{1..L} (paper A.4)
+    pub l_max: usize,
+    /// amortized training flashes per token (fwd+bwd+opt at train
+    /// utilization; calibrated to the A.4 case study: τ = 4.92)
+    pub tau: f64,
+    pub accel: AccelModel,
+}
+
+impl Workload {
+    pub fn paper_a4() -> Self {
+        Workload {
+            n: 128,
+            b: 128,
+            l_max: 2048,
+            tau: 4.92,
+            accel: AccelModel::h100(),
+        }
+    }
+
+    /// average sequence length under the uniform assumption
+    pub fn l_bar(&self) -> f64 {
+        (self.l_max as f64 + 1.0) / 2.0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvPoint {
+    pub g: usize,
+    /// sequences per RL step S = B·G
+    pub s: usize,
+    pub r_gen: f64,
+    pub r_train: f64,
+    /// combined tokens/flash (Eq. 13)
+    pub r: f64,
+    /// max token lag in samples (paper: S − 1)
+    pub lag_samples: usize,
+    /// max token lag in optimizer steps (≈ G)
+    pub lag_steps: f64,
+}
+
+/// Conventional RL throughput for G optimizer steps per RL step.
+pub fn conventional(w: &Workload, g: usize) -> ConvPoint {
+    let s = w.b * g;
+    let l = w.l_max;
+    let k = s as f64 * w.l_bar(); // tokens per RL step
+
+    // h(l): sequences still alive after l decode steps; uniform lengths
+    // 1..L  =>  h(l) = S * (L - l) / L
+    // t_gen = Σ_l (h(l)/N) / U(h(l)/N)   [flashes]
+    let mut t_gen = 0.0;
+    for step in 0..l {
+        let alive = (s as f64 * (l - step) as f64 / l as f64).ceil();
+        if alive < 1.0 {
+            break;
+        }
+        let per_gpu = alive / w.n as f64;
+        // average over GPUs holding ceil/floor counts: use fractional h
+        // via interpolation of U at the two nearest integers
+        let u = u_frac(&w.accel, per_gpu);
+        if u <= 0.0 {
+            continue;
+        }
+        t_gen += per_gpu / u;
+    }
+    let r_gen = k / t_gen;
+    let r_train = w.n as f64 / w.tau;
+    let r = 1.0 / (1.0 / r_gen + 1.0 / r_train);
+    ConvPoint {
+        g,
+        s,
+        r_gen,
+        r_train,
+        r,
+        lag_samples: s.saturating_sub(1),
+        lag_steps: g as f64,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PipePoint {
+    /// inference GPUs
+    pub i: usize,
+    /// generation batch per inference GPU
+    pub h: usize,
+    pub r_gen: f64,
+    pub r_train: f64,
+    pub r: f64,
+    /// g_max = ceil(H I L / (L̄ B)) (A.3)
+    pub lag_steps: usize,
+    pub lag_samples: usize,
+}
+
+/// PipelineRL throughput for (I inference GPUs, batch H each).
+pub fn pipeline(w: &Workload, i: usize, h: usize) -> PipePoint {
+    let r_gen = w.accel.u(h) * i as f64; // Eq. 17
+    let r_train = (w.n - i) as f64 / w.tau; // Eq. 18
+    let r = r_gen.min(r_train);
+    let lag = ((h * i) as f64 * w.l_max as f64 / (w.l_bar() * w.b as f64)).ceil() as usize;
+    PipePoint {
+        i,
+        h,
+        r_gen,
+        r_train,
+        r,
+        lag_steps: lag,
+        lag_samples: lag * w.b,
+    }
+}
+
+/// U at fractional per-GPU batch (linear interpolation between integers).
+fn u_frac(accel: &AccelModel, h: f64) -> f64 {
+    if h <= 0.0 {
+        return 0.0;
+    }
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi || lo == 0 {
+        return accel.u(hi.max(1));
+    }
+    let w = h - lo as f64;
+    accel.u(lo) * (1.0 - w) + accel.u(hi) * w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conventional_throughput_rises_with_g() {
+        let w = Workload::paper_a4();
+        let r1 = conventional(&w, 1).r;
+        let r8 = conventional(&w, 8).r;
+        let r64 = conventional(&w, 64).r;
+        assert!(r8 > r1, "more sequences per step -> better utilization");
+        assert!(r64 > r8);
+    }
+
+    #[test]
+    fn conventional_saturates() {
+        // r_conv is increasing in G but hard-capped by the training side
+        // (Eq. 13): the gap to r_train must shrink monotonically — the
+        // "hard ceiling" of §3.
+        let w = Workload::paper_a4();
+        let r_train = w.n as f64 / w.tau;
+        let (r128, r512, r2048) = (
+            conventional(&w, 128).r,
+            conventional(&w, 512).r,
+            conventional(&w, 2048).r,
+        );
+        assert!(r128 < r512 && r512 < r2048, "increasing in G");
+        assert!(r2048 < r_train, "never exceeds the train-side cap");
+        assert!(
+            (r_train - r2048) < (r_train - r512)
+                && (r_train - r512) < (r_train - r128),
+            "gap to the ceiling shrinks"
+        );
+        // relative growth per 4x of G slows down
+        let rel_lo = r512 / r128;
+        let rel_hi = r2048 / r512;
+        assert!(rel_hi < rel_lo, "relative gains shrink: {rel_lo} vs {rel_hi}");
+    }
+
+    #[test]
+    fn pipeline_case_study_matches_paper_a4() {
+        // paper: H=192, I=44 -> r_gen = 16.9, r_train = 17.08, r = 16.9
+        let w = Workload::paper_a4();
+        let p = pipeline(&w, 44, 192);
+        assert!((p.r_gen - 16.9).abs() < 0.5, "r_gen {}", p.r_gen);
+        assert!((p.r_train - 17.08).abs() < 0.1, "r_train {}", p.r_train);
+        assert!((p.r - 16.9).abs() < 0.5);
+    }
+
+    #[test]
+    fn conventional_case_study_scale() {
+        // paper A.4: r_conv = 10.7 with r_gen = 18.3, r_train = 26.02 at
+        // the same-lag configuration (g_max ~ 133). r_train is exact (it
+        // only involves N and tau); r_gen depends on the *measured* Fig 8
+        // utilization table which we approximate analytically — accept the
+        // shape within 20% (ours: ~21, the drain integral is sensitive to
+        // the mid-range of U(h)).
+        let w = Workload::paper_a4();
+        let c = conventional(&w, 133);
+        assert!((c.r_train - 26.02).abs() < 0.1, "r_train {}", c.r_train);
+        assert!(
+            (c.r_gen - 18.3).abs() / 18.3 < 0.20,
+            "r_gen {} (paper 18.3)",
+            c.r_gen
+        );
+        assert!((c.r - 10.7).abs() / 10.7 < 0.15, "r {} (paper 10.7)", c.r);
+    }
+
+    #[test]
+    fn pipeline_train_side_caps() {
+        let w = Workload::paper_a4();
+        // huge I starves training
+        let p = pipeline(&w, 120, 256);
+        assert_eq!(p.r, p.r_train.min(p.r_gen));
+        assert!(p.r_train < p.r_gen);
+    }
+
+    #[test]
+    fn lag_grows_with_i_and_h() {
+        let w = Workload::paper_a4();
+        let a = pipeline(&w, 16, 64);
+        let b = pipeline(&w, 32, 64);
+        let c = pipeline(&w, 32, 128);
+        assert!(b.lag_steps > a.lag_steps);
+        assert!(c.lag_steps > b.lag_steps);
+    }
+}

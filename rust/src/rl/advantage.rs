@@ -1,0 +1,109 @@
+//! Advantage estimation.
+//!
+//! Two modes, matching the train artifact's `adv_mode` input:
+//!
+//! * `Group` — GRPO-style leave-mean baseline computed here in the
+//!   preprocessor: rollouts for the same prompt are grouped and each gets
+//!   advantage r_i − mean(group) (optionally /std). This is the standard
+//!   choice for verifiable math RL (the paper builds on GRPO-family
+//!   training).
+//! * `Value` — Eq. (4)'s learned per-token value baseline v_phi, computed
+//!   *inside* the train graph from the value head; the host passes
+//!   adv_mode=1 and the adv_in tensor is ignored.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdvantageMode {
+    Group,
+    GroupNormalized,
+    Value,
+}
+
+impl AdvantageMode {
+    /// value for the train graph's adv_mode scalar input.
+    pub fn graph_flag(&self) -> f32 {
+        match self {
+            AdvantageMode::Value => 1.0,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Compute per-rollout advantages with the group baseline.
+/// `groups[i]` = problem id of rollout i; `rewards[i]` its reward.
+pub fn group_advantages(
+    groups: &[u64],
+    rewards: &[f32],
+    normalize: bool,
+) -> Vec<f32> {
+    assert_eq!(groups.len(), rewards.len());
+    let mut sums: HashMap<u64, (f64, f64, usize)> = HashMap::new();
+    for (&g, &r) in groups.iter().zip(rewards) {
+        let e = sums.entry(g).or_insert((0.0, 0.0, 0));
+        e.0 += r as f64;
+        e.1 += (r as f64) * (r as f64);
+        e.2 += 1;
+    }
+    groups
+        .iter()
+        .zip(rewards)
+        .map(|(&g, &r)| {
+            let (s, s2, n) = sums[&g];
+            let mean = s / n as f64;
+            let mut adv = r as f64 - mean;
+            if normalize && n > 1 {
+                let var = (s2 / n as f64 - mean * mean).max(0.0);
+                let std = var.sqrt();
+                if std > 1e-6 {
+                    adv /= std;
+                }
+            }
+            adv as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sum_within_group() {
+        let groups = vec![1, 1, 1, 2, 2];
+        let rewards = vec![1.0, 0.0, 0.0, 1.0, 1.0];
+        let adv = group_advantages(&groups, &rewards, false);
+        let g1: f32 = adv[0..3].iter().sum();
+        let g2: f32 = adv[3..5].iter().sum();
+        assert!(g1.abs() < 1e-6 && g2.abs() < 1e-6);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+    }
+
+    #[test]
+    fn uniform_group_gets_zero_advantage() {
+        let adv = group_advantages(&[5, 5, 5], &[1.0, 1.0, 1.0], false);
+        assert!(adv.iter().all(|a| a.abs() < 1e-6));
+    }
+
+    #[test]
+    fn normalization_bounds_scale() {
+        let groups = vec![1, 1, 1, 1];
+        let rewards = vec![10.0, 0.0, 0.0, 0.0];
+        let adv = group_advantages(&groups, &rewards, true);
+        for a in &adv {
+            assert!(a.abs() < 2.0, "{adv:?}");
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_safe() {
+        let adv = group_advantages(&[9], &[1.0], true);
+        assert_eq!(adv, vec![0.0]);
+    }
+
+    #[test]
+    fn graph_flags() {
+        assert_eq!(AdvantageMode::Group.graph_flag(), 0.0);
+        assert_eq!(AdvantageMode::Value.graph_flag(), 1.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Truncated importance weights and Effective Sample Size (Eq. 5–6).
+//!
+//! The trainer's AOT graph computes these on-device for the batch it
+//! optimizes; this host-side implementation is used by the preprocessor
+//! (for admission metrics), the simulator and the test suite, and is the
+//! oracle the device metrics are checked against.
+
+/// w_i = min(c, exp(lp_pi - lp_mu)) — Eq. (5)'s truncated IS weights.
+pub fn truncated_weights(lp_pi: &[f32], lp_mu: &[f32], clip_c: f32) -> Vec<f32> {
+    assert_eq!(lp_pi.len(), lp_mu.len());
+    lp_pi
+        .iter()
+        .zip(lp_mu)
+        .map(|(p, m)| (p - m).exp().min(clip_c))
+        .collect()
+}
+
+/// Normalized ESS = (Σw)² / (N Σw²) — Eq. (6). Returns 1.0 for empty
+/// input (vacuously on-policy) and is always in (0, 1].
+pub fn effective_sample_size(weights: &[f32]) -> f64 {
+    if weights.is_empty() {
+        return 1.0;
+    }
+    let n = weights.len() as f64;
+    let sw: f64 = weights.iter().map(|&w| w as f64).sum();
+    let sw2: f64 = weights.iter().map(|&w| (w as f64).powi(2)).sum();
+    if sw2 == 0.0 {
+        return 1.0;
+    }
+    (sw * sw) / (n * sw2)
+}
+
+/// k3 estimator of KL(pi ‖ mu) from per-token logprob pairs:
+/// mean(ratio - 1 - log ratio), non-negative, low variance.
+pub fn kl_k3(lp_pi: &[f32], lp_mu: &[f32]) -> f64 {
+    assert_eq!(lp_pi.len(), lp_mu.len());
+    if lp_pi.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (p, m) in lp_pi.iter().zip(lp_mu) {
+        let lr = (p - m) as f64;
+        acc += lr.exp() - 1.0 - lr;
+    }
+    acc / lp_pi.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_policy_ess_is_one() {
+        let lp = vec![-0.3, -1.2, -2.0];
+        let w = truncated_weights(&lp, &lp, 5.0);
+        assert!(w.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!((effective_sample_size(&w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncation_clips_at_c() {
+        let w = truncated_weights(&[0.0], &[-10.0], 5.0);
+        assert_eq!(w, vec![5.0]);
+    }
+
+    #[test]
+    fn ess_degrades_with_weight_spread() {
+        let uniform = vec![1.0; 8];
+        let skewed = vec![5.0, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01];
+        assert!(
+            effective_sample_size(&skewed) < effective_sample_size(&uniform)
+        );
+        assert!(effective_sample_size(&skewed) < 0.2);
+    }
+
+    #[test]
+    fn ess_bounds() {
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..50 {
+            let w: Vec<f32> = (0..64).map(|_| rng.f32() * 5.0 + 1e-3).collect();
+            let e = effective_sample_size(&w);
+            assert!(e > 0.0 && e <= 1.0 + 1e-9, "{e}");
+        }
+    }
+
+    #[test]
+    fn kl_zero_on_policy_positive_off() {
+        let lp = vec![-0.5, -0.7];
+        assert_eq!(kl_k3(&lp, &lp), 0.0);
+        assert!(kl_k3(&[-0.5, -0.7], &[-1.5, -0.2]) > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! RL math and bookkeeping shared by every pipeline stage:
+//! rollout records, truncated-importance-sampling / ESS statistics
+//! (paper Eq. 5–6), per-token weight-version lag accounting (Fig 3a/6a)
+//! and advantage estimation (group baseline or value-function input).
+
+pub mod advantage;
+pub mod ess;
+pub mod lag;
+pub mod rollout;
+
+pub use advantage::{group_advantages, AdvantageMode};
+pub use ess::{effective_sample_size, truncated_weights};
+pub use lag::{BatchLag, LagTracker};
+pub use rollout::{FinishReason, Rollout};

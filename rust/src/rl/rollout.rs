@@ -1,0 +1,112 @@
+//! The rollout record that flows actor → preprocessor → trainer.
+//!
+//! Every generated token carries the *weight version* it was sampled
+//! under — the raw material for the paper's lag analysis (Fig 3a, Fig 6a)
+//! — and its behavior-policy logprob, the denominator of the truncated
+//! importance weights in Eq. (5).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// generated EOS
+    Eos,
+    /// ran out of generation budget (max_seq)
+    Length,
+    /// actor shut down mid-sequence
+    Aborted,
+}
+
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    /// engine-assigned sequence id (unique per engine)
+    pub seq_id: u64,
+    /// stable problem id (identifies the task instance)
+    pub problem_id: u64,
+    /// rollout-group id: the `group_size` rollouts sampled for the same
+    /// prompt submission share it (group-baseline advantage)
+    pub group_id: u64,
+    pub actor_id: usize,
+    pub prompt_tokens: Vec<i32>,
+    /// generated tokens (no BOS, may end with EOS)
+    pub gen_tokens: Vec<i32>,
+    /// behavior-policy logprob per generated token
+    pub behavior_lp: Vec<f32>,
+    /// weight version each generated token was sampled under (in-flight
+    /// updates make this non-constant within one sequence)
+    pub token_version: Vec<u64>,
+    pub reward: f32,
+    pub finish: FinishReason,
+    /// wall-clock seconds when generation of this sequence started/ended
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl Rollout {
+    pub fn gen_len(&self) -> usize {
+        self.gen_tokens.len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt_tokens.len() + self.gen_tokens.len()
+    }
+
+    /// Weight-version span within this sequence (0 for conventional RL
+    /// where whole sequences come from a single behavior policy).
+    pub fn version_span(&self) -> u64 {
+        match (self.token_version.iter().min(), self.token_version.iter().max()) {
+            (Some(lo), Some(hi)) => hi - lo,
+            _ => 0,
+        }
+    }
+
+    /// Consistency check: parallel arrays must stay parallel.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.gen_tokens.len() != self.behavior_lp.len()
+            || self.gen_tokens.len() != self.token_version.len()
+        {
+            anyhow::bail!(
+                "rollout arrays disagree: {} tokens, {} lps, {} versions",
+                self.gen_tokens.len(),
+                self.behavior_lp.len(),
+                self.token_version.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(versions: Vec<u64>) -> Rollout {
+        let n = versions.len();
+        Rollout {
+            seq_id: 1,
+            problem_id: 1,
+            group_id: 1,
+            actor_id: 0,
+            prompt_tokens: vec![1, 5, 6],
+            gen_tokens: vec![7; n],
+            behavior_lp: vec![-0.5; n],
+            token_version: versions,
+            reward: 1.0,
+            finish: FinishReason::Eos,
+            t_start: 0.0,
+            t_end: 1.0,
+        }
+    }
+
+    #[test]
+    fn version_span() {
+        assert_eq!(mk(vec![3, 3, 3]).version_span(), 0);
+        assert_eq!(mk(vec![3, 4, 7]).version_span(), 4);
+        assert_eq!(mk(vec![]).version_span(), 0);
+    }
+
+    #[test]
+    fn validate_catches_skew() {
+        let mut r = mk(vec![1, 2, 3]);
+        r.behavior_lp.pop();
+        assert!(r.validate().is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Parse `artifacts/manifest.json` — the contract between the python
+//! compile path (aot.py) and this runtime. The manifest pins every static
+//! dimension of every AOT graph so the rust side can build correctly
+//! shaped literals without ever importing python.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub gen_batch: usize,
+    pub train_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, String>,
+    pub inputs: BTreeMap<String, Vec<IoSpec>>,
+}
+
+impl Variant {
+    /// Elements in the KV cache tensor [L, 2, B, Tmax, H, hd].
+    pub fn kv_numel(&self) -> usize {
+        self.n_layers * 2 * self.gen_batch * self.max_seq * self.n_heads * self.head_dim
+    }
+
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![self.n_layers, 2, self.gen_batch, self.max_seq, self.n_heads, self.head_dim]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: BTreeMap<String, Variant>,
+    pub metric_names: Vec<String>,
+    pub sft_metric_names: Vec<String>,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub vocab_size: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut variants = BTreeMap::new();
+        for (name, vj) in j.req("variants")?.as_obj()? {
+            variants.insert(name.clone(), parse_variant(name, vj)?);
+        }
+        Ok(Manifest {
+            variants,
+            metric_names: str_arr(j.req("metric_names")?)?,
+            sft_metric_names: str_arr(j.req("sft_metric_names")?)?,
+            pad_id: j.req("pad_id")?.as_f64()? as i32,
+            bos_id: j.req("bos_id")?.as_f64()? as i32,
+            eos_id: j.req("eos_id")?.as_f64()? as i32,
+            vocab_size: j.req("vocab_size")?.as_usize()?,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant '{name}'"))
+    }
+
+    /// Index of a metric in the train-graph metrics vector.
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metric_names.iter().position(|m| m == name)
+    }
+}
+
+fn parse_variant(name: &str, v: &Json) -> Result<Variant> {
+    let params = v
+        .req("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req("name")?.as_str()?.to_string(),
+                shape: usize_arr(p.req("shape")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut artifacts = BTreeMap::new();
+    for (k, f) in v.req("artifacts")?.as_obj()? {
+        artifacts.insert(k.clone(), f.as_str()?.to_string());
+    }
+    let mut inputs = BTreeMap::new();
+    for (g, sig) in v.req("inputs")?.as_obj()? {
+        let specs = sig
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(IoSpec {
+                    name: s.req("name")?.as_str()?.to_string(),
+                    shape: usize_arr(s.req("shape")?)?,
+                    dtype: match s.req("dtype")?.as_str()? {
+                        "f32" => Dtype::F32,
+                        "i32" => Dtype::I32,
+                        d => anyhow::bail!("unknown dtype {d}"),
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        inputs.insert(g.clone(), specs);
+    }
+    Ok(Variant {
+        name: name.to_string(),
+        d_model: v.req("d_model")?.as_usize()?,
+        n_layers: v.req("n_layers")?.as_usize()?,
+        n_heads: v.req("n_heads")?.as_usize()?,
+        head_dim: v.req("head_dim")?.as_usize()?,
+        max_seq: v.req("max_seq")?.as_usize()?,
+        gen_batch: v.req("gen_batch")?.as_usize()?,
+        train_batch: v.req("train_batch")?.as_usize()?,
+        seq_len: v.req("seq_len")?.as_usize()?,
+        vocab: v.req("vocab")?.as_usize()?,
+        n_params: v.req("n_params")?.as_usize()?,
+        params,
+        artifacts,
+        inputs,
+    })
+}
+
+fn usize_arr(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+fn str_arr(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_str()?.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SNIPPET: &str = r#"{
+      "variants": {
+        "tiny": {
+          "d_model": 32, "n_layers": 2, "n_heads": 2, "head_dim": 16,
+          "max_seq": 96, "gen_batch": 4, "train_batch": 4, "seq_len": 96,
+          "vocab": 64, "n_params": 27744,
+          "params": [{"name": "embed", "shape": [64, 32]}],
+          "artifacts": {"decode": "tiny_decode.hlo.txt"},
+          "inputs": {"decode": [
+            {"name": "pos", "shape": [4], "dtype": "i32"}]}
+        }
+      },
+      "metric_names": ["loss", "ess"],
+      "sft_metric_names": ["loss"],
+      "pad_id": 0, "bos_id": 1, "eos_id": 2, "vocab_size": 64
+    }"#;
+
+    #[test]
+    fn parses_snippet() {
+        let m = Manifest::parse(SNIPPET).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.gen_batch, 4);
+        assert_eq!(v.params[0].numel(), 64 * 32);
+        assert_eq!(v.kv_shape(), vec![2, 2, 4, 96, 2, 16]);
+        assert_eq!(v.inputs["decode"][0].dtype, Dtype::I32);
+        assert_eq!(m.metric_index("ess"), Some(1));
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::parse(SNIPPET).unwrap();
+        assert!(m.variant("huge").is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! One `Runtime` per worker thread (the xla crate's handles are not
+//! `Send` — see [`tensor::HostTensor`] for the cross-thread story): each
+//! actor / trainer / preprocessor thread constructs its own PJRT CPU
+//! client and compiles the executables it needs, exactly like each GPU
+//! pool in the paper runs its own vLLM / DeepSpeed instance.
+//!
+//! The interchange format is HLO *text* (`HloModuleProto::from_text_file`)
+//! — see aot.py for why serialized protos do not work here.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{Dtype, IoSpec, Manifest, ParamSpec, Variant};
+pub use tensor::HostTensor;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Default artifacts directory, overridable via `PIPELINE_RL_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PIPELINE_RL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            // resolve relative to the crate root so tests/benches work from
+            // any working directory
+            let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            p.push("artifacts");
+            p
+        })
+}
+
+/// A compiled AOT graph.
+pub struct Graph {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+    /// client handle for input-buffer staging (see `run`)
+    client: PjRtClient,
+    /// expected number of runtime (non-param) inputs, for error messages
+    pub n_inputs: usize,
+}
+
+impl Graph {
+    /// Execute with host literals; returns the flattened output tuple.
+    /// Accepts owned literals or references (`&[Literal]` / `&[&Literal]`).
+    ///
+    /// NOTE: this stages inputs into device buffers itself and runs
+    /// `execute_b` rather than the crate's literal-based `execute`: the
+    /// latter leaks every input device buffer (`buffer.release()` with no
+    /// matching free in xla_rs.cc `execute`), which at one decode step per
+    /// token adds up to GBs per minute. Managing `PjRtBuffer` handles on
+    /// this side gives them proper Drop semantics.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        let staged = inputs
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l.borrow()))
+            .collect::<Result<Vec<_>, _>>()
+            .with_context(|| format!("staging inputs for '{}'", self.name))?;
+        self.run_buffers(&staged)
+    }
+
+    /// Execute with pre-staged device buffers (hot-path variant: callers
+    /// can keep loop-invariant inputs, e.g. model weights, resident).
+    pub fn run_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<Literal>> {
+        let bufs = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing graph '{}'", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: single tuple literal out.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Stage a literal into a device buffer on this graph's client.
+    pub fn stage(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute and read outputs as HostTensors.
+    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.run(&lits)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// Per-thread runtime: PJRT client + manifest + compiled-graph cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Graph>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&artifacts_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Load + compile (memoized) the `graph` of `variant`.
+    pub fn graph(&mut self, variant: &str, graph: &str) -> Result<std::rc::Rc<Graph>> {
+        let key = format!("{variant}/{graph}");
+        if let Some(g) = self.cache.get(&key) {
+            return Ok(g.clone());
+        }
+        let v = self.manifest.variant(variant)?;
+        let Some(file) = v.artifacts.get(graph) else {
+            bail!("variant '{variant}' has no artifact '{graph}'");
+        };
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let n_inputs = v.inputs.get(graph).map(|s| s.len()).unwrap_or(0);
+        let g = std::rc::Rc::new(Graph {
+            name: key.clone(),
+            exe,
+            client: self.client.clone(),
+            n_inputs,
+        });
+        self.cache.insert(key, g.clone());
+        Ok(g)
+    }
+
+    /// Run the init graph: seed -> fresh parameter set (host side).
+    pub fn init_params(&mut self, variant: &str, seed: i32) -> Result<Vec<HostTensor>> {
+        let g = self.graph(variant, "init")?;
+        g.run_host(&[HostTensor::scalar_i32(seed)])
+    }
+
+    /// Zero-filled Adam state matching the variant's parameter shapes.
+    pub fn zero_opt_state(&self, variant: &str) -> Result<Vec<HostTensor>> {
+        let v = self.manifest.variant(variant)?;
+        Ok(v.params
+            .iter()
+            .map(|p| HostTensor::zeros_f32(&p.shape))
+            .collect())
+    }
+}
+
+/// Validate that a host tensor set matches the variant's parameter specs.
+pub fn check_params(v: &Variant, params: &[HostTensor]) -> Result<()> {
+    if params.len() != v.params.len() {
+        bail!(
+            "param count mismatch: got {}, manifest says {}",
+            params.len(),
+            v.params.len()
+        );
+    }
+    for (t, spec) in params.iter().zip(&v.params) {
+        if t.shape() != spec.shape.as_slice() {
+            bail!(
+                "param '{}' shape mismatch: got {:?}, want {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod perf_probe {
+    use super::*;
+
+    /// Timing breakdown of one decode execution (run with --ignored):
+    /// staging vs execute vs readback. Guides the §Perf pass.
+    #[test]
+    #[ignore]
+    fn decode_breakdown_base() {
+        let mut rt = Runtime::new().unwrap();
+        let v = rt.manifest.variant("base").unwrap().clone();
+        let g = rt.graph("base", "decode").unwrap();
+        let params = rt.init_params("base", 1).unwrap();
+        let kv = HostTensor::zeros_f32(&v.kv_shape());
+        let b = v.gen_batch;
+        let mut lits: Vec<Literal> =
+            params.iter().map(|t| t.to_literal().unwrap()).collect();
+        lits.push(kv.to_literal().unwrap());
+        lits.push(HostTensor::zeros_i32(&[b]).to_literal().unwrap());
+        lits.push(HostTensor::from_i32(&[b], vec![1; b]).to_literal().unwrap());
+        lits.push(HostTensor::zeros_f32(&[b, v.vocab]).to_literal().unwrap());
+        lits.push(HostTensor::zeros_i32(&[b]).to_literal().unwrap());
+        lits.push(HostTensor::from_f32(&[b], vec![1.0; b]).to_literal().unwrap());
+        lits.push(HostTensor::scalar_f32(1.0).to_literal().unwrap());
+
+        for round in 0..5 {
+            let t0 = std::time::Instant::now();
+            let staged: Vec<xla::PjRtBuffer> =
+                lits.iter().map(|l| g.stage(l).unwrap()).collect();
+            let t1 = std::time::Instant::now();
+            let bufs = g.exe.execute_b(&staged).unwrap();
+            let t2 = std::time::Instant::now();
+            let lit = bufs[0][0].to_literal_sync().unwrap();
+            let outs = lit.to_tuple().unwrap();
+            let t3 = std::time::Instant::now();
+            eprintln!(
+                "round {round}: stage {:.1}ms execute {:.1}ms readback {:.1}ms ({} outs)",
+                (t1 - t0).as_secs_f64() * 1e3,
+                (t2 - t1).as_secs_f64() * 1e3,
+                (t3 - t2).as_secs_f64() * 1e3,
+                outs.len()
+            );
+        }
+    }
+}

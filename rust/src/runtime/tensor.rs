@@ -1,0 +1,157 @@
+//! `HostTensor` — the Send-able host-side tensor used everywhere outside
+//! a device thread.
+//!
+//! The xla crate's `Literal`/`PjRtBuffer` wrap raw C pointers and are not
+//! `Send`; PipelineRL's stages are OS threads that exchange data through
+//! the broker and the weight bus, so everything that crosses a thread
+//! boundary is a `HostTensor` (plain `Vec` + shape). This mirrors the
+//! paper's architecture faithfully: weights crossing the trainer→actor
+//! boundary are a *serialized transfer* (NCCL broadcast there, a memcpy
+//! here), and rollouts crossing actor→trainer are plain data.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor::I32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Size in bytes (both dtypes are 4-byte).
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Device-thread only: build an xla Literal.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Device-thread only: read a Literal back to host.
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            t => bail!("unsupported literal element type {t:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bytes() {
+        let t = HostTensor::zeros_f32(&[3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.nbytes(), 48);
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.i32s().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::zeros_f32(&[2]);
+        assert!(t.i32s().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+
+        let ti = HostTensor::from_i32(&[4], vec![9, 8, 7, 6]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), ti);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event cluster simulator — the 128-GPU testbed substitute.
+//!
+//! Simulates N accelerators in the Appendix-A *flash* time unit, driven
+//! by the calibrated [`crate::perfmodel::AccelModel`] utilization curve:
+//! generation GPUs advance in decode rounds costing h/U(h) flashes (h =
+//! live sequences on that GPU), the trainer consumes finished sequences
+//! in optimizer batches costing tokens·τ/T flashes, and weight versions
+//! propagate exactly like the real system's weight bus (in-flight for
+//! PipelineRL, per-RL-step for Conventional).
+//!
+//! This regenerates the paper's *scale* results on a 1-core box:
+//! Fig 2b (batch drain), Fig 2c (latency/throughput vs seqs per GPU),
+//! Fig 3a (token-lag structure), Fig 5c (samples vs time at scale), and
+//! cross-checks the analytic Fig 9 model with queueing effects included.
+
+pub mod scenarios;
+pub mod sim;
+
+pub use scenarios::{drain_scenario, generation_only, DrainPoint};
+pub use sim::{SimCfg, SimMode, SimResult, Simulator};

@@ -1,0 +1,101 @@
+//! Canned generation-only scenarios for Fig 2's analysis plots.
+
+use crate::metrics::Series;
+use crate::perfmodel::AccelModel;
+use crate::util::Rng;
+
+/// Result row for Fig 2c: time-to-finish and throughput when each GPU
+/// must generate `seqs_per_gpu` sequences (batch slots = min(seqs, H)).
+#[derive(Debug, Clone)]
+pub struct DrainPoint {
+    pub seqs_per_gpu: usize,
+    pub time_flashes: f64,
+    pub tokens_per_flash: f64,
+}
+
+/// Pure generation of a fixed set of sequences on one GPU with slot
+/// count `h`: returns the live-batch trajectory (Fig 2b) and totals.
+pub fn generation_only(
+    accel: &AccelModel,
+    h: usize,
+    n_seqs: usize,
+    l_max: usize,
+    seed: u64,
+) -> (Series, f64, f64) {
+    let mut rng = Rng::with_stream(seed, 0xd2a1);
+    let mut pending: Vec<usize> = (0..n_seqs).map(|_| 1 + rng.below(l_max)).collect();
+    let mut slots: Vec<usize> = Vec::new();
+    let mut t = 0.0;
+    let mut tokens = 0.0;
+    let mut series = Series::default();
+    loop {
+        while slots.len() < h {
+            match pending.pop() {
+                Some(len) => slots.push(len),
+                None => break,
+            }
+        }
+        if slots.is_empty() {
+            break;
+        }
+        let active = slots.len();
+        series.push(t, t, active as f64);
+        t += active as f64 / accel.u(active);
+        tokens += active as f64;
+        slots.iter_mut().for_each(|r| *r -= 1);
+        slots.retain(|&r| r > 0);
+    }
+    series.push(t, t, 0.0);
+    (series, t, tokens / t.max(1e-9))
+}
+
+/// Fig 2c sweep: per-GPU sequence counts vs completion time/throughput.
+pub fn drain_scenario(
+    accel: &AccelModel,
+    h: usize,
+    l_max: usize,
+    counts: &[usize],
+) -> Vec<DrainPoint> {
+    counts
+        .iter()
+        .map(|&n| {
+            let (_, t, thr) = generation_only(accel, h.min(n), n, l_max, 7);
+            DrainPoint { seqs_per_gpu: n, time_flashes: t, tokens_per_flash: thr }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_drains_to_zero() {
+        let accel = AccelModel::h100();
+        let (series, t, thr) = generation_only(&accel, 64, 256, 512, 3);
+        assert!(t > 0.0 && thr > 0.0);
+        let vals = series.values();
+        assert_eq!(*vals.last().unwrap(), 0.0);
+        assert_eq!(vals[0], 64.0);
+        // the tail (few live sequences) exists — Fig 2b's inefficiency
+        assert!(vals.iter().any(|&v| v > 0.0 && v <= 8.0));
+    }
+
+    #[test]
+    fn time_plateaus_as_counts_shrink() {
+        // Fig 2c: halving the sequences per GPU does NOT halve the time —
+        // the longest sequence dominates.
+        let accel = AccelModel::h100();
+        let pts = drain_scenario(&accel, 256, 512, &[32, 64, 128, 256]);
+        let t32 = pts[0].time_flashes;
+        let t256 = pts[3].time_flashes;
+        assert!(
+            t256 / t32 < 8.0 / 2.0,
+            "8x the work should take well under 4x the time: {} vs {}",
+            t32,
+            t256
+        );
+        // throughput grows with more sequences per GPU
+        assert!(pts[3].tokens_per_flash > pts[0].tokens_per_flash);
+    }
+}

@@ -1,0 +1,418 @@
+//! The simulator core (see module docs).
+
+use crate::metrics::Series;
+use crate::perfmodel::AccelModel;
+use crate::util::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    Pipeline,
+    Conventional { g: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct SimCfg {
+    pub mode: SimMode,
+    /// generation GPUs (pipeline: I; conventional: all N generate)
+    pub n_gen_gpus: usize,
+    /// training GPUs (pipeline: N − I; conventional: all N train)
+    pub n_train_gpus: usize,
+    /// generation slots per GPU (paper's H)
+    pub slots_per_gpu: usize,
+    /// sequences per optimizer batch (B)
+    pub batch_b: usize,
+    /// max sequence length; lengths ~ Uniform{1..=L}
+    pub l_max: usize,
+    /// train flashes per token
+    pub tau: f64,
+    pub accel: AccelModel,
+    /// optimizer steps to run
+    pub rl_steps: usize,
+    pub seed: u64,
+    /// flashes each generation GPU pauses per in-flight weight update
+    pub weight_update_pause: f64,
+}
+
+impl SimCfg {
+    pub fn pipeline(n: usize, i: usize, h: usize, b: usize, l: usize) -> Self {
+        SimCfg {
+            mode: SimMode::Pipeline,
+            n_gen_gpus: i,
+            n_train_gpus: n - i,
+            slots_per_gpu: h,
+            batch_b: b,
+            l_max: l,
+            tau: 4.92,
+            accel: AccelModel::h100(),
+            rl_steps: 50,
+            seed: 0,
+            weight_update_pause: 0.0,
+        }
+    }
+
+    pub fn conventional(n: usize, g: usize, h: usize, b: usize, l: usize) -> Self {
+        SimCfg {
+            mode: SimMode::Conventional { g },
+            n_gen_gpus: n,
+            n_train_gpus: n,
+            slots_per_gpu: h,
+            batch_b: b,
+            l_max: l,
+            tau: 4.92,
+            accel: AccelModel::h100(),
+            rl_steps: 50,
+            seed: 0,
+            weight_update_pause: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Seq {
+    remaining: usize,
+    /// (version, count) runs of generated tokens
+    versions: Vec<(u64, usize)>,
+    total: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct SimResult {
+    /// (t, samples trained) per optimizer step — Fig 5c
+    pub samples_vs_time: Series,
+    /// (t, live sequences on GPU 0) — Fig 2b
+    pub gpu0_active: Series,
+    /// max token lag per optimizer step — Fig 6a analogue
+    pub max_lag: Series,
+    /// mean token lag per optimizer step
+    pub mean_lag: Series,
+    /// mean lag per relative token position (16 buckets) — Fig 3a
+    pub lag_by_relpos: Vec<f64>,
+    /// total tokens generated
+    pub tokens: f64,
+    /// end-to-end tokens/flash
+    pub throughput: f64,
+    /// wall time (flashes) at completion
+    pub t_end: f64,
+}
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    /// decode round completes on GPU i
+    Round(usize),
+    /// optimizer step completes
+    TrainDone,
+}
+
+pub struct Simulator {
+    cfg: SimCfg,
+    rng: Rng,
+    /// per-GPU slot table
+    slots: Vec<Vec<Option<Seq>>>,
+    queue: VecDeque<Seq>,
+    version: u64,
+    /// conventional: sequences left to start this RL step
+    quota: usize,
+    heap: BinaryHeap<Reverse<(u64, Event)>>, // time in nano-flashes
+    t: f64,
+    steps_done: usize,
+    samples: usize,
+    trainer_busy: bool,
+    result: SimResult,
+    lag_sum_by_bucket: Vec<f64>,
+    lag_n_by_bucket: Vec<f64>,
+}
+
+const BUCKETS: usize = 16;
+
+fn key(t: f64, e: Event) -> Reverse<(u64, Event)> {
+    Reverse(((t * 1e6) as u64, e))
+}
+
+impl Simulator {
+    pub fn new(cfg: SimCfg) -> Self {
+        let rng = Rng::with_stream(cfg.seed, 0x51u64);
+        let slots = (0..cfg.n_gen_gpus)
+            .map(|_| vec![None; cfg.slots_per_gpu])
+            .collect();
+        let quota = match cfg.mode {
+            SimMode::Conventional { g } => cfg.batch_b * g,
+            SimMode::Pipeline => usize::MAX,
+        };
+        Simulator {
+            cfg,
+            rng,
+            slots,
+            queue: VecDeque::new(),
+            version: 0,
+            quota,
+            heap: BinaryHeap::new(),
+            t: 0.0,
+            steps_done: 0,
+            samples: 0,
+            trainer_busy: false,
+            result: SimResult::default(),
+            lag_sum_by_bucket: vec![0.0; BUCKETS],
+            lag_n_by_bucket: vec![0.0; BUCKETS],
+        }
+    }
+
+    fn new_seq(&mut self) -> Seq {
+        let len = 1 + self.rng.below(self.cfg.l_max);
+        Seq { remaining: len, versions: Vec::new(), total: len }
+    }
+
+    fn refill(&mut self, gpu: usize) {
+        for s in 0..self.cfg.slots_per_gpu {
+            if self.slots[gpu][s].is_none() && self.quota > 0 {
+                let seq = self.new_seq();
+                if self.quota != usize::MAX {
+                    self.quota -= 1;
+                }
+                self.slots[gpu][s] = Some(seq);
+            }
+        }
+    }
+
+    fn active(&self, gpu: usize) -> usize {
+        self.slots[gpu].iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn run(mut self) -> SimResult {
+        // prime
+        for g in 0..self.cfg.n_gen_gpus {
+            self.refill(g);
+            let h = self.active(g);
+            if h > 0 {
+                let dt = h as f64 / self.cfg.accel.u(h);
+                self.heap.push(key(self.t + dt, Event::Round(g)));
+            }
+        }
+        let mut gen_done_tokens = 0f64;
+
+        while self.steps_done < self.cfg.rl_steps {
+            let Some(Reverse((tk, ev))) = self.heap.pop() else {
+                break; // deadlock guard (should not happen)
+            };
+            self.t = tk as f64 / 1e6;
+            match ev {
+                Event::Round(g) => {
+                    let mut finished = Vec::new();
+                    for slot in self.slots[g].iter_mut() {
+                        if let Some(seq) = slot {
+                            // one token generated under the current version
+                            match seq.versions.last_mut() {
+                                Some((v, c)) if *v == self.version => *c += 1,
+                                _ => seq.versions.push((self.version, 1)),
+                            }
+                            seq.remaining -= 1;
+                            gen_done_tokens += 1.0;
+                            if seq.remaining == 0 {
+                                finished.push(slot.take().unwrap());
+                            }
+                        }
+                    }
+                    self.queue.extend(finished);
+                    // in-flight refill (pipeline) / quota refill (conv)
+                    self.refill(g);
+                    if g == 0 {
+                        self.result.gpu0_active.push(self.t, self.t, self.active(0) as f64);
+                    }
+                    let h = self.active(g);
+                    if h > 0 {
+                        let pause = self.cfg.weight_update_pause; // amortized
+                        let dt = h as f64 / self.cfg.accel.u(h) + pause;
+                        self.heap.push(key(self.t + dt, Event::Round(g)));
+                    }
+                    self.maybe_start_training();
+                }
+                Event::TrainDone => {
+                    self.trainer_busy = false;
+                    self.steps_done += 1;
+                    self.version += 1;
+                    self.samples += self.cfg.batch_b;
+                    self.result.samples_vs_time.push(self.t, self.t, self.samples as f64);
+                    if let SimMode::Conventional { g } = self.cfg.mode {
+                        // RL step boundary: reopen generation quota
+                        let steps_into = self.steps_done % g;
+                        if steps_into == 0 {
+                            self.quota = self.cfg.batch_b * g;
+                            for gpu in 0..self.cfg.n_gen_gpus {
+                                self.refill(gpu);
+                                let h = self.active(gpu);
+                                if h > 0 {
+                                    let dt = h as f64 / self.cfg.accel.u(h);
+                                    self.heap.push(key(self.t + dt, Event::Round(gpu)));
+                                }
+                            }
+                        }
+                    }
+                    self.maybe_start_training();
+                }
+            }
+        }
+
+        self.result.tokens = gen_done_tokens;
+        self.result.t_end = self.t;
+        self.result.throughput = gen_done_tokens / self.t.max(1e-9);
+        self.result.lag_by_relpos = self
+            .lag_sum_by_bucket
+            .iter()
+            .zip(&self.lag_n_by_bucket)
+            .map(|(s, n)| if *n > 0.0 { s / n } else { 0.0 })
+            .collect();
+        self.result
+    }
+
+    fn maybe_start_training(&mut self) {
+        if self.trainer_busy || self.queue.len() < self.cfg.batch_b {
+            return;
+        }
+        if let SimMode::Conventional { .. } = self.cfg.mode {
+            // Alg. 1: wait for the full generation phase to drain
+            let any_active = (0..self.cfg.n_gen_gpus).any(|g| self.active(g) > 0);
+            if self.quota > 0 || any_active {
+                return;
+            }
+        }
+        // form a batch and account lag
+        let mut tokens = 0usize;
+        let mut max_lag = 0u64;
+        let mut lag_sum = 0f64;
+        let mut lag_n = 0f64;
+        let train_version = self.version; // steps applied so far
+        for _ in 0..self.cfg.batch_b {
+            let seq = self.queue.pop_front().unwrap();
+            tokens += seq.total;
+            let mut idx = 0usize;
+            for (v, c) in &seq.versions {
+                let lag = train_version.saturating_sub(*v);
+                max_lag = max_lag.max(lag);
+                lag_sum += (lag * *c as u64) as f64;
+                lag_n += *c as f64;
+                for k in 0..*c {
+                    let rel = (idx + k) * BUCKETS / seq.total.max(1);
+                    self.lag_sum_by_bucket[rel.min(BUCKETS - 1)] += lag as f64;
+                    self.lag_n_by_bucket[rel.min(BUCKETS - 1)] += 1.0;
+                }
+                idx += *c;
+            }
+        }
+        let step = self.steps_done as f64 + 1.0;
+        self.result.max_lag.push(self.t, step, max_lag as f64);
+        self.result
+            .mean_lag
+            .push(self.t, step, if lag_n > 0.0 { lag_sum / lag_n } else { 0.0 });
+        let dt = tokens as f64 * self.cfg.tau / self.cfg.n_train_gpus as f64;
+        self.trainer_busy = true;
+        self.heap.push(key(self.t + dt, Event::TrainDone));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pipe() -> SimCfg {
+        let mut c = SimCfg::pipeline(16, 8, 32, 64, 128);
+        c.rl_steps = 30;
+        c
+    }
+
+    #[test]
+    fn pipeline_completes_and_reports() {
+        let r = Simulator::new(small_pipe()).run();
+        assert_eq!(r.samples_vs_time.points.len(), 30);
+        assert!(r.throughput > 0.0);
+        assert!(r.tokens > 0.0);
+    }
+
+    #[test]
+    fn pipeline_keeps_generation_batch_constant() {
+        let r = Simulator::new(small_pipe()).run();
+        // after warmup, gpu0 active slots stay at H (in-flight refills)
+        let vals = r.gpu0_active.values();
+        let tail = &vals[vals.len() / 2..];
+        assert!(tail.iter().all(|&v| v == 32.0), "constant batch: {tail:?}");
+    }
+
+    #[test]
+    fn conventional_batch_drains() {
+        let mut c = SimCfg::conventional(16, 4, 32, 64, 128);
+        c.rl_steps = 8;
+        let r = Simulator::new(c).run();
+        // active slots must visit low values during the drain (Fig 2b)
+        let vals = r.gpu0_active.values();
+        assert!(vals.iter().any(|&v| v <= 4.0), "drain tail must appear");
+        assert!(vals.iter().any(|&v| v == 32.0), "starts full");
+    }
+
+    #[test]
+    fn pipeline_lag_structure_earlier_tokens_lag_more() {
+        let mut c = small_pipe();
+        c.rl_steps = 60;
+        let r = Simulator::new(c).run();
+        // Fig 3a: earlier relative positions have strictly higher mean lag
+        let first = r.lag_by_relpos[0];
+        let last = r.lag_by_relpos[BUCKETS - 1];
+        assert!(
+            first > last,
+            "early tokens lag more: first {first} last {last} ({:?})",
+            r.lag_by_relpos
+        );
+    }
+
+    #[test]
+    fn conventional_sequences_are_single_version() {
+        let mut c = SimCfg::conventional(8, 2, 16, 32, 64);
+        c.rl_steps = 6;
+        let r = Simulator::new(c).run();
+        // lag profile flat across positions within an RL step
+        let prof = &r.lag_by_relpos;
+        let spread = prof.iter().cloned().fold(f64::MIN, f64::max)
+            - prof.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread < 0.75, "conventional lag is flat per batch: {prof:?}");
+    }
+
+    #[test]
+    fn conventional_lag_bounded_by_g() {
+        let g = 4;
+        let mut c = SimCfg::conventional(8, g, 16, 32, 64);
+        c.rl_steps = 12;
+        let r = Simulator::new(c).run();
+        for p in &r.max_lag.points {
+            assert!(p.value <= g as f64, "lag {} > g {}", p.value, g);
+        }
+    }
+
+    #[test]
+    fn pipeline_beats_conventional_wallclock_at_scale() {
+        // the headline: same B, same N, PipelineRL finishes its steps in
+        // less wall-clock (flash) time than Conventional G=32.
+        let n = 32;
+        let b = 64;
+        let l = 256;
+        let mut pipe = SimCfg::pipeline(n, 12, 96, b, l);
+        pipe.rl_steps = 32;
+        let mut conv = SimCfg::conventional(n, 32, 64, b, l);
+        conv.rl_steps = 32;
+        let rp = Simulator::new(pipe).run();
+        let rc = Simulator::new(conv).run();
+        assert!(
+            rp.t_end < rc.t_end,
+            "pipeline {:.0} flashes vs conventional {:.0}",
+            rp.t_end,
+            rc.t_end
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Simulator::new(small_pipe()).run();
+        let b = Simulator::new(small_pipe()).run();
+        assert_eq!(a.t_end, b.t_end);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

@@ -1,0 +1,113 @@
+//! Miniature property-testing kit (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` pseudo-random cases derived from a
+//! base seed; on failure it reports the failing case seed so the exact
+//! case can be replayed with `check_one`. Shrinking is approximated by
+//! re-running the failing case at progressively smaller "size" hints.
+
+use crate::util::Rng;
+
+/// Size-aware case context handed to properties.
+pub struct Case {
+    pub rng: Rng,
+    /// size hint in [1, max_size] — generators should scale with it
+    pub size: usize,
+}
+
+impl Case {
+    pub fn vec_f32(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let len = self.rng.below(max_len.min(self.size.max(1)) + 1);
+        (0..len).map(|_| lo + self.rng.f32() * (hi - lo)).collect()
+    }
+
+    pub fn vec_u64(&mut self, max_len: usize, hi: u64) -> Vec<u64> {
+        let len = self.rng.below(max_len.min(self.size.max(1)) + 1);
+        (0..len).map(|_| self.rng.below(hi as usize) as u64).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+}
+
+/// Run `prop` over `n` cases. Panics with the failing seed on error.
+pub fn check<F>(name: &str, n: usize, base_seed: u64, max_size: usize, prop: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    for i in 0..n {
+        let case_seed = base_seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(i as u64);
+        // grow size over the run, like proptest
+        let size = 1 + (i * max_size) / n.max(1);
+        if let Err(msg) = run_case(case_seed, size, &prop) {
+            // "shrink": retry the same seed at smaller sizes to find the
+            // smallest size that still fails
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                if let Err(m) = run_case(case_seed, s, &prop) {
+                    smallest = (s, m);
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {case_seed}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+fn run_case<F>(seed: u64, size: usize, prop: &F) -> Result<(), String>
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    let mut case = Case { rng: Rng::new(seed), size };
+    prop(&mut case)
+}
+
+/// Replay a single case (debugging helper).
+pub fn check_one<F>(seed: u64, size: usize, prop: F) -> Result<(), String>
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    run_case(seed, size, &prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, 1, 64, |c| {
+            let v = c.vec_f32(32, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, 2, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let max_seen = std::cell::Cell::new(0usize);
+        check("observe sizes", 20, 3, 40, |c| {
+            max_seen.set(max_seen.get().max(c.size));
+            Ok(())
+        });
+        assert!(max_seen.get() > 20);
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny CLI flag parser (offline env — no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! collects positionals. Used by the binary and the examples.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some(eq) = name.find('=') {
+                    out.flags
+                        .insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        // note: a bare `--flag` followed by a non-flag token would consume
+        // it as the flag's value — boolean flags go last or before another
+        // `--` flag (documented ambiguity of space-separated values)
+        let a = parse("--x 3 --y=hello pos1 pos2 --flag");
+        assert_eq!(a.usize_or("x", 0).unwrap(), 3);
+        assert_eq!(a.str_or("y", ""), "hello");
+        assert!(a.bool("flag"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n notanumber");
+        assert!(a.usize_or("n", 1).is_err());
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = parse("--v --n 3");
+        assert!(a.bool("v"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,64 @@
+//! Leveled stderr logging with per-component prefixes.
+//!
+//! Deliberately tiny: PipelineRL components log through a `Logger` handle
+//! so tests can silence them and the orchestrator can stamp stage names
+//! (actor-0, preproc, trainer) the way the paper's reference
+//! implementation tags its pipeline stages.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+    Off = 5,
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+#[derive(Debug, Clone)]
+pub struct Logger {
+    pub component: String,
+    start: Instant,
+}
+
+impl Logger {
+    pub fn new(component: impl Into<String>) -> Self {
+        Logger { component: component.into(), start: Instant::now() }
+    }
+
+    pub fn log(&self, lvl: Level, msg: &str) {
+        if (lvl as u8) >= level() && level() != Level::Off as u8 {
+            eprintln!(
+                "[{:9.3}s] [{:>9}] {}",
+                self.start.elapsed().as_secs_f64(),
+                self.component,
+                msg
+            );
+        }
+    }
+
+    pub fn info(&self, msg: &str) {
+        self.log(Level::Info, msg);
+    }
+
+    pub fn debug(&self, msg: &str) {
+        self.log(Level::Debug, msg);
+    }
+
+    pub fn warn(&self, msg: &str) {
+        self.log(Level::Warn, msg);
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared utilities built from scratch for the offline environment:
+//! a JSON parser/writer (manifest + metrics interchange), a PCG64 RNG
+//! (sampling noise, data generation), and small timing helpers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,176 @@
+//! Weight bus — the in-flight weight-update transport (paper Fig. 1b,
+//! Alg. 2 lines 9–10 / 18).
+//!
+//! Models the paper's NCCL-broadcast process group with shared-memory
+//! semantics: the trainer publishes a new *versioned* parameter set after
+//! every optimizer step (`request_weight_update` in the paper's API);
+//! each generation engine polls between decode steps, and on seeing a
+//! newer version briefly "pauses" (an optional simulated transfer delay
+//! models the real broadcast time), swaps weights, and resumes decoding
+//! the in-progress sequences — KV cache retained.
+//!
+//! Versions are monotonically increasing optimizer-step counters; they
+//! are the clock the entire lag analysis (Fig 3a/6a) is measured against.
+
+use crate::runtime::HostTensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One published parameter set.
+#[derive(Debug, Clone)]
+pub struct WeightVersion {
+    pub version: u64,
+    pub params: Arc<Vec<HostTensor>>,
+}
+
+#[derive(Debug, Default)]
+struct BusInner {
+    current: Option<WeightVersion>,
+    /// receivers that joined the "process group"
+    receivers: Vec<String>,
+}
+
+/// Shared trainer → actors weight channel.
+#[derive(Debug, Clone, Default)]
+pub struct WeightBus {
+    inner: Arc<RwLock<BusInner>>,
+    version: Arc<AtomicU64>,
+    /// total bytes "transferred" (per receiver fetch) — metrics
+    bytes_fetched: Arc<AtomicU64>,
+    publishes: Arc<AtomicU64>,
+    lock: Arc<Mutex<()>>,
+}
+
+impl WeightBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Paper API `init_process_group`: register a receiver.
+    pub fn init_process_group(&self, receiver: &str) {
+        let mut g = self.inner.write().unwrap();
+        if !g.receivers.iter().any(|r| r == receiver) {
+            g.receivers.push(receiver.to_string());
+        }
+    }
+
+    pub fn receivers(&self) -> Vec<String> {
+        self.inner.read().unwrap().receivers.clone()
+    }
+
+    /// Paper API `request_weight_update`: publish a new version.
+    /// Returns the version number assigned.
+    pub fn publish(&self, version: u64, params: Arc<Vec<HostTensor>>) -> u64 {
+        let _g = self.lock.lock().unwrap();
+        {
+            let mut inner = self.inner.write().unwrap();
+            inner.current = Some(WeightVersion { version, params });
+        }
+        self.version.store(version, Ordering::Release);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        version
+    }
+
+    /// Latest published version number (cheap poll — the actor calls this
+    /// between every decode step).
+    pub fn latest_version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Fetch if newer than `have`. Returns None when up to date.
+    pub fn fetch_if_newer(&self, have: u64) -> Option<WeightVersion> {
+        if self.latest_version() <= have {
+            return None;
+        }
+        let g = self.inner.read().unwrap();
+        let cur = g.current.clone()?;
+        if cur.version > have {
+            let bytes: usize = cur.params.iter().map(|t| t.nbytes()).sum();
+            self.bytes_fetched.fetch_add(bytes as u64, Ordering::Relaxed);
+            Some(cur)
+        } else {
+            None
+        }
+    }
+
+    pub fn bytes_fetched(&self) -> u64 {
+        self.bytes_fetched.load(Ordering::Relaxed)
+    }
+
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(v: f32) -> Arc<Vec<HostTensor>> {
+        Arc::new(vec![HostTensor::from_f32(&[2], vec![v, v])])
+    }
+
+    #[test]
+    fn publish_and_fetch() {
+        let bus = WeightBus::new();
+        assert_eq!(bus.latest_version(), 0);
+        assert!(bus.fetch_if_newer(0).is_none());
+        bus.publish(1, params(1.0));
+        let w = bus.fetch_if_newer(0).unwrap();
+        assert_eq!(w.version, 1);
+        assert!(bus.fetch_if_newer(1).is_none());
+    }
+
+    #[test]
+    fn newer_version_replaces() {
+        let bus = WeightBus::new();
+        bus.publish(1, params(1.0));
+        bus.publish(2, params(2.0));
+        let w = bus.fetch_if_newer(0).unwrap();
+        assert_eq!(w.version, 2);
+        assert_eq!(w.params[0].f32s().unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn process_group_registration() {
+        let bus = WeightBus::new();
+        bus.init_process_group("actor-0");
+        bus.init_process_group("actor-1");
+        bus.init_process_group("actor-0"); // idempotent
+        assert_eq!(bus.receivers(), vec!["actor-0", "actor-1"]);
+    }
+
+    #[test]
+    fn transfer_bytes_accounted() {
+        let bus = WeightBus::new();
+        bus.publish(1, params(1.0));
+        let _ = bus.fetch_if_newer(0).unwrap();
+        assert_eq!(bus.bytes_fetched(), 8);
+    }
+
+    #[test]
+    fn concurrent_publish_fetch() {
+        let bus = WeightBus::new();
+        let b2 = bus.clone();
+        let pubs = std::thread::spawn(move || {
+            for v in 1..=100u64 {
+                b2.publish(v, params(v as f32));
+            }
+        });
+        let b3 = bus.clone();
+        let gets = std::thread::spawn(move || {
+            let mut have = 0;
+            let mut fetched = 0;
+            while have < 100 {
+                if let Some(w) = b3.fetch_if_newer(have) {
+                    assert!(w.version > have, "versions move forward");
+                    have = w.version;
+                    fetched += 1;
+                }
+            }
+            fetched
+        });
+        pubs.join().unwrap();
+        assert!(gets.join().unwrap() >= 1);
+    }
+}

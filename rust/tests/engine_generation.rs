@@ -1,0 +1,207 @@
+//! Integration: the generation engine over the real tiny decode artifact.
+//!
+//! Covers the vLLM-substitute behaviours the paper's coordination relies
+//! on: continuous batching (in-flight admission), prefill-through-decode,
+//! EOS/budget termination, in-flight weight updates (version tagging,
+//! KV retained), and the KV-recompute ablation mode.
+
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::FinishReason;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::Rng;
+
+fn mk_engine(cfg: EngineCfg) -> (Runtime, Engine) {
+    let mut rt = Runtime::new().expect("runtime");
+    let params = rt.init_params("tiny", 7).unwrap();
+    let eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(1)).unwrap();
+    (rt, eng)
+}
+
+fn submit_n(eng: &mut Engine, n: usize) {
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    for i in 0..n {
+        let p = gen.problem(i as u64 + 100);
+        let toks = tk.encode(&p.prompt).unwrap();
+        eng.add_request(p, toks, i as u64);
+    }
+}
+
+#[test]
+fn generates_until_budget_or_eos() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 12;
+    let (_rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 4);
+    let mut rollouts = Vec::new();
+    for _ in 0..400 {
+        let out = eng.step().unwrap();
+        rollouts.extend(out.finished);
+        if rollouts.len() >= 4 {
+            break;
+        }
+    }
+    assert_eq!(rollouts.len(), 4, "all requests finish");
+    for r in &rollouts {
+        r.validate().unwrap();
+        assert!(r.gen_len() >= 1 && r.gen_len() <= 12);
+        assert!(matches!(r.finish, FinishReason::Eos | FinishReason::Length));
+        // behavior logprobs are genuine log-probabilities
+        for &lp in &r.behavior_lp {
+            assert!(lp <= 0.0 && lp > -30.0, "lp {lp}");
+        }
+        // untrained model at version 0
+        assert!(r.token_version.iter().all(|&v| v == 0));
+    }
+}
+
+#[test]
+fn continuous_batching_admits_in_flight() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 6;
+    let (_rt, mut eng) = mk_engine(cfg);
+    // 9 requests for 4 slots: admission must refill as slots free
+    submit_n(&mut eng, 9);
+    assert_eq!(eng.n_active(), 0);
+    let mut done = 0;
+    let mut saw_mixed_admission = false;
+    for _ in 0..2000 {
+        let out = eng.step().unwrap();
+        done += out.finished.len();
+        // slots stay saturated while the backlog lasts
+        if done >= 1 && done < 5 && eng.n_pending() > 0 {
+            saw_mixed_admission = eng.n_active() == eng.n_slots();
+        }
+        if done == 9 {
+            break;
+        }
+    }
+    assert_eq!(done, 9);
+    assert!(saw_mixed_admission, "slots must refill while others decode");
+    assert_eq!(eng.load(), 0);
+}
+
+#[test]
+fn inflight_weight_update_tags_versions_and_keeps_kv() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 16;
+    let (mut rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 4);
+    // run a few steps under v0 (prefill + first samples)
+    for _ in 0..10 {
+        eng.step().unwrap();
+    }
+    // in-flight update to different weights (different seed)
+    let params_v1 = rt.init_params("tiny", 8).unwrap();
+    eng.set_weights(1, &params_v1).unwrap();
+    let mut rollouts = Vec::new();
+    for _ in 0..600 {
+        let out = eng.step().unwrap();
+        rollouts.extend(out.finished);
+        if rollouts.len() >= 4 {
+            break;
+        }
+    }
+    assert!(rollouts.len() >= 4);
+    // at least one sequence must span both versions (mixed-policy!)
+    let mixed = rollouts.iter().filter(|r| r.version_span() > 0).count();
+    assert!(mixed >= 1, "in-flight update must produce mixed-policy sequences");
+    for r in &rollouts {
+        // versions are monotone within a sequence
+        for w in r.token_version.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+    assert_eq!(eng.stats.weight_updates, 1);
+    assert_eq!(eng.stats.kv_recomputes, 0, "default keeps stale KV");
+}
+
+#[test]
+fn kv_recompute_mode_runs_replay() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 16;
+    cfg.recompute_kv_on_update = true;
+    let (mut rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 4);
+    for _ in 0..12 {
+        eng.step().unwrap();
+    }
+    let params_v1 = rt.init_params("tiny", 9).unwrap();
+    eng.set_weights(1, &params_v1).unwrap();
+    assert_eq!(eng.stats.kv_recomputes, 1);
+    assert!(eng.stats.recompute_steps > 0);
+    // engine still generates fine afterwards
+    let mut done = 0;
+    for _ in 0..600 {
+        done += eng.step().unwrap().finished.len();
+        if done >= 4 {
+            break;
+        }
+    }
+    assert!(done >= 4);
+}
+
+#[test]
+fn capture_dist_records_rows() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 5;
+    cfg.capture_dist = true;
+    let (_rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 2);
+    let mut done = 0;
+    for _ in 0..300 {
+        done += eng.step().unwrap().finished.len();
+        if done >= 2 {
+            break;
+        }
+    }
+    assert!(!eng.captured.is_empty());
+    let v = eng.variant().vocab;
+    for row in &eng.captured {
+        assert_eq!(row.logdist.len(), v);
+        let z: f32 = row.logdist.iter().map(|lp| lp.exp()).sum();
+        assert!((z - 1.0).abs() < 1e-3, "captured dist normalizes: {z}");
+    }
+}
+
+#[test]
+fn greedy_decoding_is_deterministic_at_zero_temperature() {
+    // temperature ~ 0 via gumbel=0 is not exposed; instead check that the
+    // same seed reproduces identical rollouts end-to-end.
+    let mk = || {
+        let mut cfg = EngineCfg::new("tiny");
+        cfg.max_new_tokens = 8;
+        let (_rt, mut eng) = mk_engine(cfg);
+        submit_n(&mut eng, 3);
+        let mut rs = Vec::new();
+        for _ in 0..400 {
+            rs.extend(eng.step().unwrap().finished);
+            if rs.len() >= 3 {
+                break;
+            }
+        }
+        rs.into_iter().map(|r| r.gen_tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(mk(), mk(), "same seeds => same generations");
+}
+
+#[test]
+fn drain_aborts_in_flight() {
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 32;
+    let (_rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 6);
+    for _ in 0..8 {
+        eng.step().unwrap();
+    }
+    let drained = eng.drain();
+    assert_eq!(drained.len(), 6);
+    assert!(drained.iter().any(|r| matches!(r.finish, FinishReason::Aborted)));
+    assert_eq!(eng.load(), 0);
+    // allocator must be clean: a fresh batch can be admitted
+    submit_n(&mut eng, 4);
+    let out = eng.step().unwrap();
+    assert!(!out.idle);
+}

@@ -1,0 +1,147 @@
+//! Failure injection and stress tests over the coordination substrates.
+//!
+//! * trainer checkpoint stall — the rollout ring buffer must absorb the
+//!   pause by evicting the stalest samples (the paper's stated purpose of
+//!   the ring buffers) and the run must still complete;
+//! * slow-consumer backpressure on a Block topic;
+//! * multi-actor pipeline run — rollouts from several engines interleave
+//!   into coherent batches;
+//! * KV-block starvation — an over-committed engine stalls sequences
+//!   instead of corrupting state, and recovers.
+
+use pipeline_rl::broker::{topic, Policy, RecvError};
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator;
+use pipeline_rl::data::task::{TaskGen, TaskKind};
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::util::Rng;
+use std::time::Duration;
+
+#[test]
+fn ring_buffer_absorbs_slow_consumer() {
+    // DropOldest topic with a fast producer and a stalled consumer: the
+    // producer never blocks and the consumer sees the freshest items.
+    let (tx, rx) = topic("rollouts", 8, Policy::DropOldest);
+    for i in 0..100 {
+        tx.send(i).unwrap();
+    }
+    // consumer wakes up late
+    let got = rx.recv_exact(8, Duration::from_millis(200));
+    assert_eq!(got, (92..100).collect::<Vec<_>>(), "freshest survive");
+    assert_eq!(rx.stats().dropped, 92);
+}
+
+#[test]
+fn block_topic_applies_backpressure_and_recovers() {
+    let (tx, rx) = topic("batches", 2, Policy::Block);
+    let producer = std::thread::spawn(move || {
+        for i in 0..50 {
+            tx.send(i).unwrap();
+        }
+        "done"
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    // producer must be blocked well below 50 items in
+    assert!(rx.depth() <= 2);
+    let mut got = Vec::new();
+    while got.len() < 50 {
+        match rx.recv(Duration::from_secs(2)) {
+            Ok(x) => got.push(x),
+            Err(RecvError::Closed) => break,
+            Err(RecvError::Timeout) => panic!("producer stuck"),
+        }
+    }
+    assert_eq!(producer.join().unwrap(), "done");
+    assert_eq!(got, (0..50).collect::<Vec<_>>());
+}
+
+#[test]
+fn checkpoint_stall_does_not_deadlock_pipeline() {
+    // per-step checkpointing (slow trainer) with a tiny rollout ring:
+    // actors keep generating, stale rollouts fall off the ring, training
+    // still completes all steps.
+    let dir = std::env::temp_dir().join("prl_stall_ckpts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.variant = "tiny".into();
+    cfg.sft_steps = 8;
+    cfg.rl_steps = 5;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 16;
+    cfg.task.kinds = vec![TaskKind::Copy];
+    cfg.task.max_operand = 9;
+    cfg.rollout_queue = 8; // tiny ring
+    cfg.checkpoint_every = 1; // stall every step
+    cfg.checkpoint_dir = Some(dir.to_string_lossy().to_string());
+    cfg.log_every = 0;
+    let summary = coordinator::run(cfg, None).expect("run must complete");
+    assert_eq!(
+        summary.report.series("train/loss").unwrap().points.len(),
+        5
+    );
+    assert_eq!(summary.report.counters["checkpoints_written"], 5.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_actor_pipeline_interleaves() {
+    let mut cfg = RunConfig::default();
+    cfg.variant = "tiny".into();
+    cfg.sft_steps = 8;
+    cfg.rl_steps = 4;
+    cfg.n_actors = 2;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 16;
+    cfg.task.kinds = vec![TaskKind::Copy];
+    cfg.task.max_operand = 9;
+    cfg.log_every = 0;
+    let summary = coordinator::run(cfg, None).expect("multi-actor run");
+    assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 4);
+    // both actors produced sequences
+    assert!(summary.report.counters["gen_seqs_finished"] > 0.0);
+    assert!(
+        summary
+            .report
+            .counters
+            .get("weight_updates_received")
+            .copied()
+            .unwrap_or(0.0)
+            >= 2.0,
+        "both engines should receive in-flight updates"
+    );
+}
+
+#[test]
+fn kv_starvation_stalls_then_recovers() {
+    let mut rt = Runtime::new().unwrap();
+    let params = rt.init_params("tiny", 1).unwrap();
+    // over-committed pool: 5 blocks of 8 = 40 token cells for 4 slots
+    // wanting ~22 tokens each. Two sequences run, the third stalls on its
+    // final block until the first releases; admission queues the rest.
+    // (vLLM would preempt; our engine stalls — same liveness guarantee as
+    // long as one sequence can always finish, which max_new=12 ensures.)
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 12;
+    cfg.block_size = 8;
+    cfg.kv_blocks = Some(5);
+    let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(1)).unwrap();
+    eng.set_weights(1, &params).unwrap();
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    for i in 0..4 {
+        let p = gen.problem(i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        eng.add_request(p, toks, i as u64);
+    }
+    let mut finished = 0;
+    for _ in 0..3000 {
+        finished += eng.step().unwrap().finished.len();
+        if finished >= 4 {
+            break;
+        }
+    }
+    assert!(finished >= 4, "all sequences finish despite block pressure");
+    assert!(eng.stats.stall_steps > 0, "starvation must have caused stalls");
+}

@@ -10,7 +10,7 @@
 use pipeline_rl::config::RunConfig;
 use pipeline_rl::coordinator::{self, eval};
 use pipeline_rl::data::task::TaskKind;
-use pipeline_rl::model::checkpoint::Checkpoint;
+use pipeline_rl::model::checkpoint::load_params_any;
 use pipeline_rl::runtime::Runtime;
 use pipeline_rl::util::cli::Args;
 use pipeline_rl::util::logging::{self, Level};
@@ -33,10 +33,10 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<(String, eval::EvalReport, f64)> = Vec::new();
 
     if let Some(path) = args.flags.get("checkpoint") {
-        let ck = Checkpoint::load(std::path::Path::new(path))?;
-        cfg.variant = ck.variant.clone();
-        let rep = eval::evaluate(&mut rt, &cfg, &ck.params, n_eval)?;
-        rows.push((format!("checkpoint step {}", ck.step), rep, f64::NAN));
+        let (variant, step, params) = load_params_any(std::path::Path::new(path))?;
+        cfg.variant = variant;
+        let rep = eval::evaluate(&mut rt, &cfg, &params, n_eval)?;
+        rows.push((format!("checkpoint step {step}"), rep, f64::NAN));
     } else {
         // base (random init) -> SFT -> RL, like Table 1's progression
         let base_params = rt.init_params(&cfg.variant, cfg.seed as i32)?;

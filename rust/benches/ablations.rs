@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.rollout_policy = policy;
         cfg.rollout_queue = cap;
-        cfg.checkpoint_every = 0;
+        cfg.checkpoint.every = 0;
         let s = coordinator::run(cfg, Some(warm.clone()))?;
         rows.push(vec![
             name.to_string(),

@@ -8,7 +8,7 @@
 use pipeline_rl::benchkit;
 use pipeline_rl::config::RunConfig;
 use pipeline_rl::coordinator::{self, klstudy::{replay_kl, Swap}};
-use pipeline_rl::model::checkpoint::Checkpoint;
+use pipeline_rl::model::checkpoint::TrainState;
 use pipeline_rl::runtime::HostTensor;
 use pipeline_rl::util::logging::{self, Level};
 
@@ -24,15 +24,15 @@ fn main() -> anyhow::Result<()> {
     cfg.sft_steps = 40;
     cfg.rl_steps = steps;
     cfg.max_new_tokens = 24;
-    cfg.checkpoint_every = 1;
-    cfg.checkpoint_dir = Some(ckpt_dir.to_string_lossy().to_string());
+    cfg.checkpoint.every = 1;
+    cfg.checkpoint.dir = Some(ckpt_dir.to_string_lossy().to_string());
     cfg.log_every = 0;
     cfg.seed = 7;
     coordinator::run(cfg.clone(), None)?;
 
     let load = |step: usize| -> anyhow::Result<Vec<HostTensor>> {
-        let p = ckpt_dir.join(format!("step{step:05}.ckpt"));
-        Ok(Checkpoint::load(&p)?.params)
+        let p = ckpt_dir.join(TrainState::file_name(step as u64));
+        Ok(TrainState::load(&p)?.params)
     };
 
     let start = 1usize;

@@ -36,6 +36,9 @@ struct Shared<T> {
     not_empty: Condvar,
     not_full: Condvar,
     subscribers: AtomicUsize,
+    /// fault injection: publishers sleep until this instant before
+    /// enqueueing (chaos-harness "topic stall"); None = healthy
+    stall_until: Mutex<Option<Instant>>,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -62,6 +65,7 @@ pub fn topic<T>(name: &str, capacity: usize, policy: Policy) -> (Publisher<T>, S
         not_empty: Condvar::new(),
         not_full: Condvar::new(),
         subscribers: AtomicUsize::new(1),
+        stall_until: Mutex::new(None),
     });
     (Publisher { shared: shared.clone() }, Subscriber { shared })
 }
@@ -113,9 +117,24 @@ impl<T> Publisher<T> {
         &self.shared.name
     }
 
+    /// Stall every publisher of this topic for `d` from now (chaos
+    /// injection: models a broker hiccup / slow network). Send calls made
+    /// while the stall is active sleep it off before enqueueing; consumers
+    /// are unaffected and simply see no new items.
+    pub fn stall_for(&self, d: Duration) {
+        *self.shared.stall_until.lock().unwrap() = Some(Instant::now() + d);
+    }
+
     /// Publish one item. With `Policy::Block` this waits for space; with
     /// `Policy::DropOldest` it evicts and returns the number dropped (0/1).
     pub fn send(&self, item: T) -> Result<u64, &'static str> {
+        let stall = *self.shared.stall_until.lock().unwrap();
+        if let Some(until) = stall {
+            let now = Instant::now();
+            if until > now {
+                std::thread::sleep(until - now);
+            }
+        }
         let mut inner = self.shared.inner.lock().unwrap();
         let mut dropped = 0;
         loop {
@@ -153,8 +172,9 @@ impl<T> Publisher<T> {
     }
 
     pub fn stats(&self) -> TopicStats {
-        let mut s = self.shared.inner.lock().unwrap().stats.clone();
-        s.depth = self.shared.inner.lock().unwrap().queue.len();
+        let inner = self.shared.inner.lock().unwrap();
+        let mut s = inner.stats.clone();
+        s.depth = inner.queue.len();
         s
     }
 }
@@ -162,6 +182,18 @@ impl<T> Publisher<T> {
 impl<T> Subscriber<T> {
     pub fn name(&self) -> &str {
         &self.shared.name
+    }
+
+    /// Hot-attach a new publisher from the subscriber side, re-opening
+    /// the topic even if the publisher count had reached zero —
+    /// subscribers that already observed [`RecvError::Closed`] can keep
+    /// calling `recv` and will see new items. The in-tree elastic pool
+    /// hot-attaches by cloning a retained `Publisher` instead (see
+    /// `coordinator::supervisor`); this is the primitive for embedders
+    /// that only hold the subscriber end of a topic.
+    pub fn make_publisher(&self) -> Publisher<T> {
+        self.shared.inner.lock().unwrap().publishers += 1;
+        Publisher { shared: self.shared.clone() }
     }
 
     /// Blocking receive with timeout.
@@ -336,6 +368,41 @@ mod tests {
         let mut all: Vec<i32> = subs.into_iter().flat_map(|s| s.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..n_pub * n_per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hot_attach_reopens_closed_topic() {
+        let (tx, rx) = topic("t", 4, Policy::Block);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 1);
+        assert_eq!(rx.recv(Duration::from_millis(10)), Err(RecvError::Closed));
+        // elastic pool: a new actor attaches after all publishers died
+        let tx2 = rx.make_publisher();
+        tx2.send(2).unwrap();
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 2);
+        drop(tx2);
+        assert_eq!(rx.recv(Duration::from_millis(10)), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn stall_delays_publishers_only() {
+        let (tx, rx) = topic("t", 8, Policy::Block);
+        tx.send(0).unwrap();
+        tx.stall_for(Duration::from_millis(80));
+        // consumer is unaffected by the stall
+        assert_eq!(rx.recv(Duration::from_millis(10)).unwrap(), 0);
+        let t0 = Instant::now();
+        tx.send(1).unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(60),
+            "send must sleep off the stall"
+        );
+        // stall expired: sends proceed (no upper-bound assert — loaded
+        // CI runners make tight wall-clock ceilings flaky)
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 1);
+        assert_eq!(rx.recv(Duration::from_secs(1)).unwrap(), 2);
     }
 
     #[test]

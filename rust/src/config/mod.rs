@@ -51,6 +51,49 @@ impl Default for TaskConfig {
     }
 }
 
+/// `[elastic]` — the fault-tolerant actor-pool supervisor (pipeline mode
+/// only: conventional RL's phase barrier cannot survive actor churn).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ElasticConfig {
+    /// run actors under the supervisor (restart on crash, allow resize)
+    pub enabled: bool,
+    /// pool size floor the supervisor will not shrink below
+    pub min_actors: usize,
+    /// pool size ceiling the supervisor will not grow beyond
+    pub max_actors: usize,
+    /// shared respawn budget: total crash restarts + floor top-ups the
+    /// supervisor will perform before abandoning lost slots (a global
+    /// cap so a persistent fault cannot crash-loop forever)
+    pub max_restarts: usize,
+    /// supervisor health/chaos polling cadence
+    pub poll_ms: u64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            enabled: false,
+            min_actors: 1,
+            max_actors: 8,
+            max_restarts: 3,
+            poll_ms: 5,
+        }
+    }
+}
+
+/// `[checkpoint]` — trainer state snapshots and resume.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CheckpointConfig {
+    /// snapshot every N optimizer steps (0 = off)
+    pub every: usize,
+    /// directory for `stepNNNNN.state` files + `manifest.json`
+    pub dir: Option<String>,
+    /// resume source: a checkpoint dir (manifest's latest) or a state file
+    pub resume_from: Option<String>,
+    /// prune all but the newest K states (0 = keep everything)
+    pub keep_last: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub variant: String,
@@ -79,8 +122,8 @@ pub struct RunConfig {
     pub rollout_policy: Policy,
     /// batch topic capacity (preprocessor -> trainer)
     pub batch_queue: usize,
-    pub checkpoint_every: usize,
-    pub checkpoint_dir: Option<String>,
+    pub checkpoint: CheckpointConfig,
+    pub elastic: ElasticConfig,
     /// deterministic single-thread mode: actors and trainer are stepped
     /// round-robin by the orchestrator (useful for tests & 1-core boxes)
     pub log_every: usize,
@@ -111,8 +154,8 @@ impl Default for RunConfig {
             rollout_queue: 256,
             rollout_policy: Policy::DropOldest,
             batch_queue: 4,
-            checkpoint_every: 0,
-            checkpoint_dir: None,
+            checkpoint: CheckpointConfig::default(),
+            elastic: ElasticConfig::default(),
             log_every: 10,
             weight_transfer_ms: 0.0,
         }
@@ -186,8 +229,31 @@ impl RunConfig {
             rollout_queue: doc.usize_or("queues.rollout_capacity", d.rollout_queue)?,
             rollout_policy,
             batch_queue: doc.usize_or("queues.batch_capacity", d.batch_queue)?,
-            checkpoint_every: doc.usize_or("trainer.checkpoint_every", d.checkpoint_every)?,
-            checkpoint_dir: doc.get("trainer.checkpoint_dir").map(|v| v.as_str().map(String::from)).transpose()?,
+            checkpoint: CheckpointConfig {
+                // `trainer.checkpoint_*` kept as legacy aliases
+                every: doc.usize_or(
+                    "checkpoint.every",
+                    doc.usize_or("trainer.checkpoint_every", d.checkpoint.every)?,
+                )?,
+                dir: doc
+                    .get("checkpoint.dir")
+                    .or_else(|| doc.get("trainer.checkpoint_dir"))
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?,
+                resume_from: doc
+                    .get("checkpoint.resume_from")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?,
+                keep_last: doc.usize_or("checkpoint.keep_last", d.checkpoint.keep_last)?,
+            },
+            elastic: ElasticConfig {
+                enabled: doc.bool_or("elastic.enabled", d.elastic.enabled)?,
+                min_actors: doc.usize_or("elastic.min_actors", d.elastic.min_actors)?,
+                max_actors: doc.usize_or("elastic.max_actors", d.elastic.max_actors)?,
+                max_restarts: doc.usize_or("elastic.max_restarts", d.elastic.max_restarts)?,
+                // usize_or rejects negatives instead of wrapping
+                poll_ms: doc.usize_or("elastic.poll_ms", d.elastic.poll_ms as usize)? as u64,
+            },
             log_every: doc.usize_or("run.log_every", d.log_every)?,
             weight_transfer_ms: doc.f64_or("run.weight_transfer_ms", d.weight_transfer_ms)?,
         })
@@ -214,6 +280,42 @@ impl RunConfig {
         }
         if !(0.0..=100.0).contains(&self.clip_c) || self.clip_c <= 0.0 {
             bail!("clip_c must be positive");
+        }
+        if self.elastic.enabled {
+            if !matches!(self.mode, Mode::Pipeline) {
+                bail!(
+                    "elastic actor pool requires pipeline mode: conventional RL's \
+                     generate/train barrier cannot survive actor churn"
+                );
+            }
+            if self.elastic.min_actors == 0 {
+                bail!("elastic.min_actors must be >= 1");
+            }
+            if self.elastic.max_restarts >= 256 {
+                // actor group ids carry the incarnation in an 8-bit field;
+                // generation 256 would alias generation 0's groups
+                bail!(
+                    "elastic.max_restarts must be < 256, got {}",
+                    self.elastic.max_restarts
+                );
+            }
+            if self.elastic.min_actors > self.elastic.max_actors {
+                bail!(
+                    "elastic.min_actors {} > elastic.max_actors {}",
+                    self.elastic.min_actors,
+                    self.elastic.max_actors
+                );
+            }
+            if self.n_actors < self.elastic.min_actors
+                || self.n_actors > self.elastic.max_actors
+            {
+                bail!(
+                    "n_actors {} outside elastic bounds [{}, {}]",
+                    self.n_actors,
+                    self.elastic.min_actors,
+                    self.elastic.max_actors
+                );
+            }
         }
         Ok(())
     }
@@ -257,6 +359,66 @@ mod tests {
         assert_eq!(cfg.task.kinds, vec![TaskKind::Add, TaskKind::Chain]);
         assert_eq!(cfg.rollout_policy, crate::broker::Policy::Block);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_elastic_and_checkpoint_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            [run]
+            n_actors = 2
+            [elastic]
+            enabled = true
+            min_actors = 1
+            max_actors = 4
+            max_restarts = 7
+            [checkpoint]
+            every = 5
+            dir = "ckpts"
+            resume_from = "ckpts"
+            keep_last = 3
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(cfg.elastic.enabled);
+        assert_eq!(cfg.elastic.max_actors, 4);
+        assert_eq!(cfg.elastic.max_restarts, 7);
+        assert_eq!(cfg.checkpoint.every, 5);
+        assert_eq!(cfg.checkpoint.dir.as_deref(), Some("ckpts"));
+        assert_eq!(cfg.checkpoint.resume_from.as_deref(), Some("ckpts"));
+        assert_eq!(cfg.checkpoint.keep_last, 3);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn legacy_trainer_checkpoint_keys_still_parse() {
+        let doc = TomlDoc::parse(
+            "[trainer]\ncheckpoint_every = 2\ncheckpoint_dir = \"old\"",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.checkpoint.every, 2);
+        assert_eq!(cfg.checkpoint.dir.as_deref(), Some("old"));
+    }
+
+    #[test]
+    fn elastic_rejects_conventional_and_bad_bounds() {
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.mode = Mode::Conventional { g: 4 };
+        assert!(cfg.validate().is_err(), "elastic + conventional refused");
+
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.n_actors = 9; // above default max_actors = 8
+        assert!(cfg.validate().is_err(), "n_actors outside elastic bounds");
+
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.elastic.min_actors = 5;
+        cfg.elastic.max_actors = 2;
+        assert!(cfg.validate().is_err(), "min > max refused");
     }
 
     #[test]

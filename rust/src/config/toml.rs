@@ -118,7 +118,11 @@ impl TomlDoc {
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
-        Ok(self.i64_or(key, default as i64)? as usize)
+        let v = self.i64_or(key, default as i64)?;
+        if v < 0 {
+            bail!("key '{key}' must be non-negative, got {v}");
+        }
+        Ok(v as usize)
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
@@ -265,6 +269,13 @@ mod tests {
         let doc = TomlDoc::parse("").unwrap();
         assert_eq!(doc.f64_or("missing", 2.5).unwrap(), 2.5);
         assert!(doc.bool_or("missing", true).unwrap());
+    }
+
+    #[test]
+    fn usize_rejects_negative_instead_of_wrapping() {
+        let doc = TomlDoc::parse("n = -5").unwrap();
+        assert!(doc.usize_or("n", 1).is_err());
+        assert_eq!(doc.i64_or("n", 1).unwrap(), -5);
     }
 
     #[test]

@@ -34,23 +34,33 @@ pub struct ActorArgs {
     pub bus: WeightBus,
     pub rollout_tx: Publisher<Rollout>,
     pub hub: MetricsHub,
+    /// global run shutdown
     pub stop: Arc<AtomicBool>,
+    /// per-actor kill switch (elastic pool: this incarnation only)
+    pub halt: Arc<AtomicBool>,
+    /// restart count of this slot; folded into group ids so a restarted
+    /// actor can never collide with its previous incarnation's groups
+    pub generation: u64,
     pub conv: Option<Arc<ConvSync>>,
 }
 
 pub fn run_actor(args: ActorArgs) -> Result<()> {
-    let ActorArgs { actor_id, cfg, bus, rollout_tx, hub, stop, conv } = args;
+    let ActorArgs { actor_id, cfg, bus, rollout_tx, hub, stop, halt, generation, conv } = args;
     let log = Logger::new(format!("actor-{actor_id}"));
+    let group_name = format!("actor-{actor_id}");
     let tokenizer = Tokenizer::new();
     let mut rt = Runtime::new().context("actor runtime")?;
 
-    // join the weight-transfer process group and wait for initial weights
-    bus.init_process_group(&format!("actor-{actor_id}"));
+    // join the weight-transfer process group and wait for initial weights.
+    // Registration is idempotent, so a restarted actor hot-joins under the
+    // same name and picks up whatever version the trainer last published.
+    bus.init_process_group(&group_name);
     let initial = loop {
         if let Some(w) = bus.fetch_if_newer(0) {
             break w;
         }
-        if stop.load(Ordering::Relaxed) {
+        if stop.load(Ordering::Relaxed) || halt.load(Ordering::Relaxed) {
+            bus.leave_process_group(&group_name);
             return Ok(());
         }
         std::thread::sleep(Duration::from_millis(2));
@@ -71,6 +81,9 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
 
     let task_gen = TaskGen::new(cfg.task.kinds.clone(), cfg.task.max_operand);
     let mut dataset = Dataset::new(task_gen.clone(), cfg.task.pool, cfg.seed + actor_id as u64);
+    // id layout: [actor+1 : bits 40..] [generation & 0xff : bits 32..40]
+    // [counter : bits 0..32] — unique across restarts of the same slot
+    let group_base = ((actor_id as u64 + 1) << 40) | ((generation & 0xff) << 32);
     let mut group_counter: u64 = 0;
     // target: slots full + one group queued so freed slots refill instantly
     let target_load = engine.n_slots() + cfg.group_size;
@@ -78,7 +91,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let mut steps_since_fill_metric = 0usize;
 
     loop {
-        if stop.load(Ordering::Relaxed) {
+        if stop.load(Ordering::Relaxed) || halt.load(Ordering::Relaxed) {
             break;
         }
 
@@ -100,7 +113,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
             (Mode::Pipeline, _) => {
                 while engine.load() < target_load {
                     submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
-                                 actor_id, &mut group_counter)?;
+                                 group_base, &mut group_counter)?;
                 }
             }
             (Mode::Conventional { .. }, Some(sync)) => {
@@ -112,7 +125,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
                 }
                 while engine.load() < target_load && sync.try_take_group(cfg.group_size) {
                     submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
-                                 actor_id, &mut group_counter)?;
+                                 group_base, &mut group_counter)?;
                 }
             }
             (Mode::Conventional { .. }, None) => {
@@ -160,10 +173,34 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
                     hub.add("rollouts_dropped_ring", dropped as f64);
                 }
                 Ok(_) => {}
-                Err(_) => return Ok(()), // preprocessor gone: shutdown
+                Err(_) => {
+                    bus.leave_process_group(&group_name);
+                    return Ok(()); // preprocessor gone: shutdown
+                }
             }
         }
     }
+
+    // Shutdown/kill path: abort in-flight sequences and publish them as
+    // `Aborted` rollouts so the preprocessor's pending advantage groups
+    // can still complete (aborted members count toward group size but
+    // are filtered out of the advantage computation). Best effort: a
+    // saturated DropOldest ring may still evict these before the
+    // preprocessor sees them, stranding those groups in its pending map
+    // — bounded-pending eviction is a ROADMAP item.
+    let aborted = engine.drain();
+    if !aborted.is_empty() {
+        hub.add("rollouts_aborted_on_halt", aborted.len() as f64);
+        for r in aborted {
+            if let Some(sync) = &conv {
+                sync.report_finished();
+            }
+            if rollout_tx.send(r).is_err() {
+                break; // preprocessor already gone
+            }
+        }
+    }
+    bus.leave_process_group(&group_name);
     log.debug("actor stopping");
     Ok(())
 }
@@ -173,14 +210,14 @@ fn submit_group(
     dataset: &mut Dataset,
     tokenizer: &Tokenizer,
     cfg: &RunConfig,
-    actor_id: usize,
+    group_base: u64,
     group_counter: &mut u64,
 ) -> Result<()> {
     let problem = dataset.sample_train();
     let prompt = tokenizer
         .encode(&problem.prompt)
         .context("task prompt must tokenize")?;
-    let group_id = ((actor_id as u64 + 1) << 40) | *group_counter;
+    let group_id = group_base | *group_counter;
     *group_counter += 1;
     for _ in 0..cfg.group_size {
         engine.add_request(problem.clone(), prompt.clone(), group_id);

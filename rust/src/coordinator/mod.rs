@@ -22,6 +22,11 @@
 //!   (pipeline) or per RL step (conventional), tracks loss/ESS/KL/lag.
 //! * [`orchestrator`] wires everything, runs the SFT warmup (the base
 //!   model stand-in), and returns a [`crate::metrics::RunReport`].
+//! * [`supervisor`] makes the actor tier **elastic**: actors run under an
+//!   [`supervisor::ActorPool`] that can kill, restart, add, and remove
+//!   them mid-run (hot-joining the weight bus and rollout topic), and a
+//!   supervisor thread replays deterministic chaos schedules
+//!   ([`crate::testkit::chaos`]) for fault-tolerance testing.
 //!
 //! Conventional mode reproduces Alg. 1 faithfully including the batch
 //! drain: actors stop admitting at the quota, *finish* every in-flight
@@ -34,9 +39,11 @@ pub mod klstudy;
 pub mod orchestrator;
 pub mod packing;
 pub mod preprocessor;
+pub mod supervisor;
 pub mod trainer;
 pub mod warmup;
 
 pub use conv::ConvSync;
-pub use orchestrator::{run, RunSummary};
+pub use orchestrator::{run, run_with_chaos, RunSummary};
 pub use packing::{Packer, TrainBatch};
+pub use supervisor::{ActorCtx, ActorPool, SpawnFn};

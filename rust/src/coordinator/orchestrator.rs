@@ -1,34 +1,50 @@
 //! Orchestrator: builds the pipeline topology from a [`RunConfig`],
-//! runs the SFT warmup, spawns the stage threads, and collects the
-//! [`RunReport`].
+//! runs the SFT warmup (or loads a resume state), spawns the stage
+//! threads, and collects the [`RunReport`].
 //!
 //! Thread topology (each stage constructs its own PJRT runtime — the
 //! xla handles are not Send, and the paper's stages each own their own
 //! accelerator pool anyway):
 //!
 //! ```text
-//!   main ── sft warmup ── publish v1 ──┬── actor-0 .. actor-(A-1)
-//!                                      ├── preprocessor
-//!                                      └── trainer (returns final params)
+//!   main ── warmup/resume ── publish v ──┬── supervisor ── actor pool
+//!                                        ├── preprocessor
+//!                                        └── trainer (returns final params)
 //! ```
+//!
+//! Actors always run under the [`super::supervisor::ActorPool`] and its
+//! supervisor thread. In plain runs the pool is fixed-size and
+//! fail-fast (an actor error unwinds the run, as before); with
+//! `[elastic] enabled = true` (or a chaos schedule) the supervisor
+//! instead restarts crashes within a respawn budget, resizes the pool,
+//! and injects the schedule's faults against the weight-bus version
+//! clock.
+//!
+//! With `[checkpoint] resume_from` set, the warmup is skipped entirely:
+//! the checkpoint's parameters are published at version `step + 1` and
+//! the trainer continues the optimizer trajectory from the saved state.
 
 use super::actor::{run_actor, ActorArgs};
 use super::conv::ConvSync;
 use super::packing::TrainBatch;
 use super::preprocessor::{run_preprocessor, PreprocessorArgs};
+use super::supervisor::{run_supervisor, ActorPool, SpawnFn, SupervisorArgs};
 use super::trainer::{run_trainer, TrainerArgs};
 use super::warmup;
 use crate::broker::{topic, Policy};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::{MetricsHub, RunReport};
+use crate::model::checkpoint::TrainState;
 use crate::rl::Rollout;
 use crate::runtime::{HostTensor, Runtime};
+use crate::testkit::chaos::ChaosSchedule;
 use crate::util::logging::Logger;
 use crate::util::timer::global_seconds;
 use crate::weights::WeightBus;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub struct RunSummary {
     pub report: RunReport,
@@ -43,15 +59,46 @@ pub struct RunSummary {
 /// pipeline/conventional comparisons start from the *same* base model);
 /// None runs the SFT warmup.
 pub fn run(cfg: RunConfig, warm_params: Option<Vec<HostTensor>>) -> Result<RunSummary> {
+    run_with_chaos(cfg, warm_params, None)
+}
+
+/// [`run`], optionally under a deterministic chaos schedule. Passing a
+/// schedule implies supervision even when `[elastic]` is not enabled.
+pub fn run_with_chaos(
+    cfg: RunConfig,
+    warm_params: Option<Vec<HostTensor>>,
+    chaos: Option<ChaosSchedule>,
+) -> Result<RunSummary> {
     cfg.validate()?;
+    if chaos.is_some() && !matches!(cfg.mode, Mode::Pipeline) {
+        anyhow::bail!(
+            "chaos injection requires pipeline mode (conventional RL's phase \
+             barrier cannot survive actor churn)"
+        );
+    }
     let log = Logger::new("orchestr");
     let hub = MetricsHub::new();
     let t0 = global_seconds();
 
+    // ---- resume state (skips warmup entirely) ----
+    let resume = match &cfg.checkpoint.resume_from {
+        Some(src) => {
+            let st = TrainState::load_resume(std::path::Path::new(src))
+                .with_context(|| format!("loading resume state from {src:?}"))?;
+            log.info(&format!(
+                "resuming {} from optimizer step {} ({src})",
+                st.variant, st.step
+            ));
+            Some(st)
+        }
+        None => None,
+    };
+
     // ---- warmup (base-model stand-in) ----
-    let initial_params = match warm_params {
-        Some(p) => p,
-        None => {
+    let initial_params = match (&resume, warm_params) {
+        (Some(st), _) => st.params.clone(),
+        (None, Some(p)) => p,
+        (None, None) => {
             let mut rt = Runtime::new().context("orchestrator runtime")?;
             log.info(&format!(
                 "sft warmup: {} steps on variant {}",
@@ -63,7 +110,8 @@ pub fn run(cfg: RunConfig, warm_params: Option<Vec<HostTensor>>) -> Result<RunSu
 
     // ---- topology ----
     let bus = WeightBus::new();
-    bus.publish(1, Arc::new(initial_params.clone()));
+    let start_version = resume.as_ref().map(|st| st.step + 1).unwrap_or(1);
+    bus.publish(start_version, Arc::new(initial_params.clone()));
     let (rollout_tx, rollout_rx) =
         topic::<Rollout>("rollouts", cfg.rollout_queue, cfg.rollout_policy);
     let (batch_tx, batch_rx) =
@@ -86,25 +134,53 @@ pub fn run(cfg: RunConfig, warm_params: Option<Vec<HostTensor>>) -> Result<RunSu
         Mode::Pipeline => None,
     };
 
-    // ---- spawn stages ----
-    let mut actor_handles = Vec::new();
-    for actor_id in 0..cfg.n_actors {
-        let args = ActorArgs {
-            actor_id,
-            cfg: cfg.clone(),
-            bus: bus.clone(),
-            rollout_tx: rollout_tx.clone(),
-            hub: hub.clone(),
-            stop: stop.clone(),
-            conv: conv.clone(),
-        };
-        actor_handles.push(
-            std::thread::Builder::new()
-                .name(format!("actor-{actor_id}"))
-                .spawn(move || run_actor(args))?,
-        );
-    }
-    drop(rollout_tx); // actors hold the only publishers now
+    // ---- actor pool ----
+    // Always supervised: the supervisor thread is what closes the rollout
+    // topic and unwinds the run if the pool dies (the SpawnFn below keeps
+    // a publisher alive, so actor exits alone can no longer close it).
+    // `elastic` merely selects tolerant bounds; plain runs get a
+    // fixed-size, fail-fast pool that preserves the original
+    // actor-error-fails-the-run semantics.
+    let elastic = cfg.elastic.enabled || chaos.is_some();
+    let spawn: SpawnFn = {
+        let cfg = cfg.clone();
+        let bus = bus.clone();
+        let hub = hub.clone();
+        let conv = conv.clone();
+        let rollout_tx = rollout_tx.clone();
+        Arc::new(move |ctx| {
+            run_actor(ActorArgs {
+                actor_id: ctx.actor_id,
+                cfg: cfg.clone(),
+                bus: bus.clone(),
+                rollout_tx: rollout_tx.clone(),
+                hub: hub.clone(),
+                stop: ctx.stop,
+                halt: ctx.halt,
+                generation: ctx.generation,
+                conv: conv.clone(),
+            })
+        })
+    };
+    let (min_a, max_a, max_restarts) = if elastic {
+        (
+            cfg.elastic.min_actors,
+            cfg.elastic.max_actors.max(cfg.n_actors),
+            cfg.elastic.max_restarts,
+        )
+    } else {
+        (cfg.n_actors, cfg.n_actors, 0)
+    };
+    let pool = ActorPool::new(
+        spawn,
+        stop.clone(),
+        hub.clone(),
+        cfg.n_actors,
+        min_a,
+        max_a,
+        max_restarts,
+        !elastic, // fail_fast
+    )?;
 
     let pre_args = PreprocessorArgs {
         cfg: cfg.clone(),
@@ -121,30 +197,60 @@ pub fn run(cfg: RunConfig, warm_params: Option<Vec<HostTensor>>) -> Result<RunSu
         .spawn(move || run_preprocessor(pre_args))?;
 
     let trainer_args = TrainerArgs {
+        // on resume the trainer takes its params from the state instead;
+        // don't ship a third copy of the weights
+        initial_params: if resume.is_some() { Vec::new() } else { initial_params.clone() },
         cfg: cfg.clone(),
-        initial_params: initial_params.clone(),
         batch_rx,
         bus: bus.clone(),
         hub: hub.clone(),
         stop: stop.clone(),
         conv: conv.clone(),
         conv_groups,
+        resume,
     };
     let trainer_handle = std::thread::Builder::new()
         .name("trainer".into())
         .spawn(move || run_trainer(trainer_args))?;
 
+    // The pool (via its SpawnFn) holds the rollout topic open from here
+    // on; the supervisor's shutdown path closes it so the preprocessor
+    // drains and exits.
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: rollout_tx.clone(),
+        schedule: chaos,
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(cfg.elastic.poll_ms.max(1)),
+    };
+    let sup_handle = std::thread::Builder::new()
+        .name("superv".into())
+        .spawn(move || run_supervisor(sup_args))?;
+    drop(rollout_tx);
+
     // ---- run to completion ----
-    let final_params = trainer_handle
+    // Join the trainer but raise `stop` and tear the other stages down
+    // *before* propagating any trainer error — otherwise a failing
+    // trainer (e.g. a resume/variant mismatch) would leak a supervisor
+    // that keeps restarting actors forever. Propagation order after
+    // that: trainer, preprocessor, supervisor — the supervisor's
+    // "pool died" escalation is usually a symptom, so upstream root
+    // causes surface first.
+    let trainer_out = trainer_handle
         .join()
-        .map_err(|_| anyhow::anyhow!("trainer panicked"))??;
+        .map_err(|_| anyhow::anyhow!("trainer panicked"));
     stop.store(true, Ordering::Relaxed);
-    for h in actor_handles {
-        h.join().map_err(|_| anyhow::anyhow!("actor panicked"))??;
-    }
-    pre_handle
+    let sup_out = sup_handle
         .join()
-        .map_err(|_| anyhow::anyhow!("preprocessor panicked"))??;
+        .map_err(|_| anyhow::anyhow!("supervisor panicked"));
+    let pre_out = pre_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("preprocessor panicked"));
+    let final_params = trainer_out??;
+    pre_out??;
+    sup_out??;
 
     let wall = global_seconds() - t0;
     hub.add("wall_seconds", wall);

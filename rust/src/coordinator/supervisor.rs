@@ -1,0 +1,375 @@
+//! Elastic, fault-tolerant actor-pool supervision.
+//!
+//! The seed topology spawned every stage exactly once and could survive
+//! nothing; production-scale async RL (LlamaRL-style generator churn)
+//! needs the actor tier to be **elastic**. This module provides:
+//!
+//! * [`ActorPool`] — a supervised set of actor threads. Each incarnation
+//!   gets its own `halt` kill-switch next to the global `stop`, so one
+//!   actor can be killed / restarted / added / removed mid-run. New
+//!   actors *hot-join*: they clone a live rollout [`Publisher`] (the pool
+//!   keeps the topic open, so the publishers-dropped → `RecvError::Closed`
+//!   path never fires mid-run) and register on the [`WeightBus`] process
+//!   group, picking up the latest published weights.
+//! * [`run_supervisor`] — the monitor loop: reaps crashed actors and
+//!   restarts them within a restart budget, tops the pool back up to its
+//!   floor, and fires the events of a deterministic
+//!   [`ChaosSchedule`](crate::testkit::chaos::ChaosSchedule) against the
+//!   pipeline's logical clock (the weight bus's published version).
+//!
+//! The pool is deliberately generic over a [`SpawnFn`] closure rather
+//! than hard-wired to [`super::actor::run_actor`]: the chaos tests drive
+//! the very same supervision machinery with synthetic actors, so the
+//! kill/restart/hot-attach logic is exercised even in environments where
+//! the PJRT engine is unavailable.
+
+use crate::broker::Publisher;
+use crate::metrics::MetricsHub;
+use crate::rl::Rollout;
+use crate::testkit::chaos::{ChaosKind, ChaosSchedule};
+use crate::util::logging::Logger;
+use crate::weights::WeightBus;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Identity handed to each spawned actor incarnation.
+pub struct ActorCtx {
+    pub actor_id: usize,
+    /// restart count of this slot (0 = first spawn)
+    pub generation: u64,
+    /// global run shutdown flag
+    pub stop: Arc<AtomicBool>,
+    /// kill-switch for this incarnation only
+    pub halt: Arc<AtomicBool>,
+}
+
+/// Actor body. Must poll `ctx.stop` / `ctx.halt` and return promptly when
+/// either is raised.
+pub type SpawnFn = Arc<dyn Fn(ActorCtx) -> Result<()> + Send + Sync + 'static>;
+
+struct Slot {
+    halt: Arc<AtomicBool>,
+    join: JoinHandle<Result<()>>,
+    generation: u64,
+}
+
+/// Supervised, resizable set of actor threads.
+pub struct ActorPool {
+    spawn: SpawnFn,
+    stop: Arc<AtomicBool>,
+    hub: MetricsHub,
+    log: Logger,
+    slots: BTreeMap<usize, Slot>,
+    next_id: usize,
+    min_actors: usize,
+    max_actors: usize,
+    max_restarts: usize,
+    restarts_used: usize,
+    /// propagate the first crash instead of restarting (plain,
+    /// non-elastic runs keep the fail-on-actor-error semantics)
+    fail_fast: bool,
+    last_crash: Option<String>,
+}
+
+impl ActorPool {
+    /// Build a pool and spawn `initial` actors (ids `0..initial`).
+    pub fn new(
+        spawn: SpawnFn,
+        stop: Arc<AtomicBool>,
+        hub: MetricsHub,
+        initial: usize,
+        min_actors: usize,
+        max_actors: usize,
+        max_restarts: usize,
+        fail_fast: bool,
+    ) -> Result<ActorPool> {
+        let mut pool = ActorPool {
+            spawn,
+            stop,
+            hub,
+            log: Logger::new("actorpool"),
+            slots: BTreeMap::new(),
+            next_id: 0,
+            min_actors,
+            max_actors,
+            max_restarts,
+            restarts_used: 0,
+            fail_fast,
+            last_crash: None,
+        };
+        for _ in 0..initial {
+            pool.add_actor()?;
+        }
+        Ok(pool)
+    }
+
+    /// Message of the most recent crash seen by [`ActorPool::reap`].
+    pub fn last_crash(&self) -> Option<&str> {
+        self.last_crash.as_deref()
+    }
+
+    fn spawn_slot(&mut self, actor_id: usize, generation: u64) -> Result<()> {
+        let halt = Arc::new(AtomicBool::new(false));
+        let ctx = ActorCtx {
+            actor_id,
+            generation,
+            stop: self.stop.clone(),
+            halt: halt.clone(),
+        };
+        let body = self.spawn.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("actor-{actor_id}.g{generation}"))
+            .spawn(move || body(ctx))
+            .with_context(|| format!("spawning actor-{actor_id}"))?;
+        self.slots.insert(actor_id, Slot { halt, join, generation });
+        Ok(())
+    }
+
+    /// Grow the pool by one actor. Returns the new id, or None at the
+    /// `max_actors` ceiling.
+    pub fn add_actor(&mut self) -> Result<Option<usize>> {
+        if self.slots.len() >= self.max_actors {
+            return Ok(None);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.spawn_slot(id, 0)?;
+        self.hub.add("actors_spawned", 1.0);
+        Ok(Some(id))
+    }
+
+    /// Halt one actor and join its thread. In-flight sequences are
+    /// aborted by the actor's own halt path. Returns false for unknown
+    /// ids. A crash surfaced at join time is recorded, not propagated —
+    /// killing an already-dying actor is not an error.
+    pub fn kill_actor(&mut self, actor_id: usize) -> bool {
+        let Some(slot) = self.slots.remove(&actor_id) else {
+            return false;
+        };
+        slot.halt.store(true, Ordering::Relaxed);
+        match slot.join.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => self.log.warn(&format!("actor-{actor_id} died on kill: {e:#}")),
+            Err(_) => self.log.warn(&format!("actor-{actor_id} panicked")),
+        }
+        self.hub.add("actors_killed", 1.0);
+        true
+    }
+
+    /// Kill + immediately respawn the same slot (next generation).
+    pub fn restart_actor(&mut self, actor_id: usize) -> Result<bool> {
+        let generation = match self.slots.get(&actor_id) {
+            Some(s) => s.generation + 1,
+            None => return Ok(false),
+        };
+        self.kill_actor(actor_id);
+        self.spawn_slot(actor_id, generation)?;
+        self.hub.add("actor_restarts", 1.0);
+        Ok(true)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn min_actors(&self) -> usize {
+        self.min_actors
+    }
+
+    pub fn lowest_live(&self) -> Option<usize> {
+        self.slots.keys().next().copied()
+    }
+
+    pub fn highest_live(&self) -> Option<usize> {
+        self.slots.keys().next_back().copied()
+    }
+
+    /// Collect actors whose threads have exited. Crashed ones are
+    /// restarted while the shared respawn budget lasts (with
+    /// `fail_fast`, the first crash is returned as an error instead);
+    /// clean exits are retired. Afterwards the pool is topped back up
+    /// towards `min_actors` — floor top-ups draw from the same budget,
+    /// so a persistent fault cannot produce an unbounded crash loop.
+    /// Returns the number of restarts performed.
+    pub fn reap(&mut self) -> Result<usize> {
+        let finished: Vec<usize> = self
+            .slots
+            .iter()
+            .filter(|(_, s)| s.join.is_finished())
+            .map(|(&id, _)| id)
+            .collect();
+        let mut restarted = 0;
+        for id in finished {
+            let slot = self.slots.remove(&id).unwrap();
+            let crash = match slot.join.join() {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(format!("actor-{id} crashed: {e:#}")),
+                Err(_) => Some(format!("actor-{id} panicked")),
+            };
+            if let Some(why) = crash {
+                self.log.warn(&why);
+                self.hub.add("actor_crashes", 1.0);
+                if self.fail_fast {
+                    self.last_crash = Some(why.clone());
+                    anyhow::bail!("{why}");
+                }
+                self.last_crash = Some(why);
+                if self.restarts_used < self.max_restarts {
+                    self.restarts_used += 1;
+                    self.spawn_slot(id, slot.generation + 1)?;
+                    self.hub.add("actor_restarts", 1.0);
+                    restarted += 1;
+                    self.log.info(&format!(
+                        "restarted actor-{id} (generation {}, budget {}/{})",
+                        slot.generation + 1,
+                        self.restarts_used,
+                        self.max_restarts
+                    ));
+                } else {
+                    self.log.warn(&format!(
+                        "actor-{id} abandoned: respawn budget ({}) exhausted",
+                        self.max_restarts
+                    ));
+                    self.hub.add("actor_slots_abandoned", 1.0);
+                }
+            }
+        }
+        // elastic floor: keep at least min_actors generating. Budgeted,
+        // so a fault that keeps killing fresh actors eventually empties
+        // the pool and the supervisor escalates instead of thrashing.
+        while self.slots.len() < self.min_actors
+            && !self.stop.load(Ordering::Relaxed)
+            && self.restarts_used < self.max_restarts
+        {
+            self.restarts_used += 1;
+            if self.add_actor()?.is_none() {
+                break;
+            }
+        }
+        Ok(restarted)
+    }
+
+    /// Halt everything and join. First actor error is propagated.
+    pub fn shutdown(mut self) -> Result<()> {
+        for slot in self.slots.values() {
+            slot.halt.store(true, Ordering::Relaxed);
+        }
+        let mut first_err = None;
+        for (id, slot) in std::mem::take(&mut self.slots) {
+            match slot.join.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) if first_err.is_none() => first_err = Some(e),
+                Ok(Err(_)) => {}
+                Err(_) if first_err.is_none() => {
+                    first_err = Some(anyhow::anyhow!("actor-{id} panicked"))
+                }
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+pub struct SupervisorArgs {
+    pub pool: ActorPool,
+    pub bus: WeightBus,
+    /// live handle onto the rollout topic: keeps it open for hot-attach
+    /// and is the injection point for `TopicStall` chaos
+    pub rollout_tx: Publisher<Rollout>,
+    pub schedule: Option<ChaosSchedule>,
+    pub stop: Arc<AtomicBool>,
+    pub hub: MetricsHub,
+    pub poll: Duration,
+}
+
+/// Supervision loop. Runs until `stop` is raised (trainer done), then
+/// shuts the pool down. Chaos events fire once the weight bus's published
+/// version passes their step — the logical clock shared with the trainer
+/// — so a schedule replays in the same order on every run of its seed.
+pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
+    let SupervisorArgs { mut pool, bus, rollout_tx, schedule, stop, hub, poll } = args;
+    let log = Logger::new("superv");
+    let events = schedule
+        .as_ref()
+        .map(|s| s.events.clone())
+        .unwrap_or_default();
+    if let Some(s) = &schedule {
+        log.info(&s.describe());
+    }
+    let mut next_event = 0usize;
+
+    loop {
+        let stopping = stop.load(Ordering::Relaxed);
+        let clock = bus.latest_version();
+        while !stopping && next_event < events.len() && clock > events[next_event].at_step {
+            let ev = events[next_event];
+            next_event += 1;
+            hub.add("chaos_events_fired", 1.0);
+            log.info(&format!("firing at step {}: {}", ev.at_step, ev.kind));
+            match ev.kind {
+                ChaosKind::KillActor => {
+                    if let Some(id) = pool.lowest_live() {
+                        pool.kill_actor(id);
+                    }
+                }
+                ChaosKind::RestartActor => {
+                    if let Some(id) = pool.lowest_live() {
+                        pool.restart_actor(id)?;
+                    }
+                }
+                ChaosKind::AddActor => {
+                    pool.add_actor()?;
+                }
+                ChaosKind::RemoveActor => {
+                    if pool.len() > pool.min_actors() {
+                        if let Some(id) = pool.highest_live() {
+                            pool.kill_actor(id);
+                            hub.add("actors_removed", 1.0);
+                        }
+                    }
+                }
+                ChaosKind::BusDelay { ms } => bus.set_publish_delay_ms(ms),
+                ChaosKind::BusHeal => bus.set_publish_delay_ms(0),
+                ChaosKind::TopicStall { ms } => {
+                    rollout_tx.stall_for(Duration::from_millis(ms))
+                }
+            }
+        }
+        if let Err(e) = pool.reap() {
+            // fail-fast crash (plain runs): unwind the whole topology
+            // before surfacing the actor's error
+            stop.store(true, Ordering::Relaxed);
+            pool.shutdown().ok();
+            return Err(e);
+        }
+        if !stop.load(Ordering::Relaxed) && pool.is_empty() {
+            // no live actors and no respawn budget left: unwind the run
+            // instead of letting the trainer wait on rollouts forever
+            stop.store(true, Ordering::Relaxed);
+            let why = pool
+                .last_crash()
+                .map(str::to_string)
+                .unwrap_or_else(|| "all actors exited".into());
+            pool.shutdown().ok();
+            anyhow::bail!("actor pool has no live actors left ({why})");
+        }
+        if stopping {
+            break;
+        }
+        std::thread::sleep(poll);
+    }
+    pool.shutdown()
+    // rollout_tx (and the pool's SpawnFn publisher clone) drop here,
+    // closing the topic so the preprocessor drains and exits.
+}

@@ -12,13 +12,21 @@
 //! Records the full metric suite: loss/ESS/KL/clip from the device
 //! metrics vector, token-lag profiles computed from the per-token weight
 //! versions (Fig 6a), reward-vs-samples and reward-vs-time (Fig 5).
+//!
+//! **Checkpoint/resume:** every `[checkpoint] every` steps the trainer
+//! snapshots a full [`TrainState`] (params + both Adam moments + the
+//! sample/token counters) under `[checkpoint] dir` and updates the
+//! directory manifest. When [`TrainerArgs::resume`] is set the trainer
+//! continues from `state.step + 1` with the restored optimizer trajectory
+//! — identical inputs then produce bit-identical parameters (see
+//! tests/checkpoint_resume.rs).
 
 use super::conv::ConvSync;
 use super::packing::TrainBatch;
 use crate::broker::{RecvError, Subscriber};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::MetricsHub;
-use crate::model::checkpoint::Checkpoint;
+use crate::model::checkpoint::TrainState;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::logging::Logger;
 use crate::util::timer::global_seconds;
@@ -38,12 +46,14 @@ pub struct TrainerArgs {
     pub conv: Option<Arc<ConvSync>>,
     /// groups per conventional Generate phase (quota)
     pub conv_groups: usize,
+    /// resume from this state instead of starting at step 1
+    pub resume: Option<TrainState>,
 }
 
 /// Returns the final parameters.
 pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
     let TrainerArgs {
-        cfg, initial_params, batch_rx, bus, hub, stop, conv, conv_groups,
+        cfg, initial_params, batch_rx, bus, hub, stop, conv, conv_groups, resume,
     } = args;
     let log = Logger::new("trainer");
     let mut rt = Runtime::new().context("trainer runtime")?;
@@ -52,13 +62,41 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
     let metric_names = rt.manifest.metric_names.clone();
     let p = variant.params.len();
 
-    let mut params = initial_params;
-    let mut m = rt.zero_opt_state(&cfg.variant)?;
-    let mut v = rt.zero_opt_state(&cfg.variant)?;
-    let mut samples_total: f64 = 0.0;
-    let mut tokens_total: f64 = 0.0;
+    let (mut params, mut m, mut v, start_step, mut samples_total, mut tokens_total) =
+        match resume {
+            Some(st) => {
+                if st.variant != cfg.variant {
+                    anyhow::bail!(
+                        "resume state is for variant {:?}, run wants {:?}",
+                        st.variant,
+                        cfg.variant
+                    );
+                }
+                log.info(&format!(
+                    "resuming from step {} ({} samples trained so far)",
+                    st.step, st.samples_total
+                ));
+                hub.add("resumed_from_step", st.step as f64);
+                (
+                    st.params,
+                    st.opt_m,
+                    st.opt_v,
+                    st.step as usize + 1,
+                    st.samples_total,
+                    st.tokens_total,
+                )
+            }
+            None => (
+                initial_params,
+                rt.zero_opt_state(&cfg.variant)?,
+                rt.zero_opt_state(&cfg.variant)?,
+                1,
+                0.0,
+                0.0,
+            ),
+        };
 
-    for step in 1..=cfg.rl_steps {
+    for step in start_step..=cfg.rl_steps {
         // ---- get a batch ----
         let batch = loop {
             if stop.load(Ordering::Relaxed) {
@@ -153,15 +191,22 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
         }
 
         // ---- checkpoint (the stall the ring buffer absorbs) ----
-        if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
-            if let Some(dir) = &cfg.checkpoint_dir {
-                let ck = Checkpoint {
+        if cfg.checkpoint.every > 0 && step % cfg.checkpoint.every == 0 {
+            if let Some(dir) = &cfg.checkpoint.dir {
+                let st = TrainState {
                     variant: cfg.variant.clone(),
                     step: step as u64,
                     params: params.clone(),
+                    opt_m: m.clone(),
+                    opt_v: v.clone(),
+                    samples_total,
+                    tokens_total,
+                    rng: [0; 4], // trainer owns no RNG; harnesses fill this
                 };
-                let path = std::path::Path::new(dir).join(format!("step{step:05}.ckpt"));
-                ck.save(&path)?;
+                st.save_with_manifest(
+                    std::path::Path::new(dir),
+                    cfg.checkpoint.keep_last,
+                )?;
                 hub.add("checkpoints_written", 1.0);
             }
         }

@@ -14,7 +14,7 @@
 use anyhow::{bail, Result};
 use pipeline_rl::config::RunConfig;
 use pipeline_rl::coordinator::{self, eval};
-use pipeline_rl::model::checkpoint::Checkpoint;
+use pipeline_rl::model::checkpoint::load_params_any;
 use pipeline_rl::perfmodel::{search, throughput::Workload};
 use pipeline_rl::runtime::Runtime;
 use pipeline_rl::simcluster::{SimCfg, Simulator};
@@ -80,7 +80,7 @@ fn train(args: &Args, argv: &[String]) -> Result<()> {
         summary.wall_seconds,
         summary.report.counters.get("samples_trained").copied().unwrap_or(0.0),
     );
-    if let Some(dir) = &cfg.checkpoint_dir {
+    if let Some(dir) = &cfg.checkpoint.dir {
         println!("checkpoints in {dir}");
     }
     Ok(())
@@ -89,15 +89,14 @@ fn train(args: &Args, argv: &[String]) -> Result<()> {
 fn evaluate(args: &Args) -> Result<()> {
     let path = args.require("checkpoint")?;
     let n = args.usize_or("n", 100)?;
-    let ck = Checkpoint::load(std::path::Path::new(path))?;
+    let (variant, step, params) = load_params_any(std::path::Path::new(path))?;
     let mut cfg = RunConfig::default();
-    cfg.variant = ck.variant.clone();
+    cfg.variant = variant;
     cfg.max_new_tokens = args.usize_or("max-new", 48)?;
     let mut rt = Runtime::new()?;
-    let rep = eval::evaluate(&mut rt, &cfg, &ck.params, n)?;
+    let rep = eval::evaluate(&mut rt, &cfg, &params, n)?;
     println!(
-        "checkpoint step {}: success {:.1}% over {} problems",
-        ck.step,
+        "checkpoint step {step}: success {:.1}% over {} problems",
         100.0 * rep.success_rate(),
         rep.n
     );

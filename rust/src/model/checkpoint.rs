@@ -3,22 +3,81 @@
 //! Own compact binary format (offline env — no serde/safetensors):
 //!
 //! ```text
-//! magic  "PRLCKPT1"                       8 bytes
+//! magic  "PRLCKPT1" / "PRLCKPT2"          8 bytes
 //! meta   u32 json_len, json bytes         variant name, step, tensor index
 //! data   for each tensor: f32 LE values   (shapes live in the json index)
 //! ```
 //!
-//! Used by the trainer's periodic checkpointing (whose stall the broker's
-//! ring buffers must absorb — see the failure-injection test) and by the
-//! Fig 7 KL study, which replays consecutive checkpoints.
+//! Two record types share the format:
+//!
+//! * [`Checkpoint`] (`PRLCKPT1`) — parameters only. Portable export used
+//!   by `pipeline-rl eval` and anything that just needs weights.
+//! * [`TrainState`] (`PRLCKPT2`) — the trainer's **full resume state**:
+//!   parameters, both Adam moments, the sample/token counters and an RNG
+//!   cursor. A run resumed from a `TrainState` continues the optimizer
+//!   trajectory exactly (see tests/checkpoint_resume.rs for the
+//!   bit-identity property).
+//!
+//! `TrainState::save_with_manifest` additionally maintains a
+//! `manifest.json` in the checkpoint directory (latest + history with
+//! optional pruning) so `[checkpoint] resume_from = "<dir>"` can pick up
+//! the newest state without knowing file names.
+//!
+//! The trainer's periodic checkpoint write is also the canonical stall
+//! the broker's ring buffers must absorb — see the failure-injection
+//! suite.
 
 use crate::runtime::HostTensor;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"PRLCKPT1";
+const MAGIC_STATE: &[u8; 8] = b"PRLCKPT2";
+const MANIFEST: &str = "manifest.json";
+
+fn shapes_json(tensors: &[HostTensor]) -> Json {
+    Json::Arr(
+        tensors
+            .iter()
+            .map(|t| Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect(),
+    )
+}
+
+fn write_tensor_data(f: &mut impl Write, tensors: &[HostTensor]) -> Result<()> {
+    for t in tensors {
+        let data = t.f32s().context("checkpoints hold f32 tensors")?;
+        // SAFETY-free explicit LE encode
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_tensor_list(f: &mut impl Read, shapes: &Json) -> Result<Vec<HostTensor>> {
+    let mut out = Vec::new();
+    for tshape in shapes.as_arr()? {
+        let shape: Vec<usize> = tshape
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?;
+        let n: usize = shape.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(HostTensor::F32 { shape, data });
+    }
+    Ok(out)
+}
 
 pub struct Checkpoint {
     pub variant: String,
@@ -31,19 +90,7 @@ impl Checkpoint {
         let index = Json::Obj(vec![
             ("variant".into(), Json::Str(self.variant.clone())),
             ("step".into(), Json::Num(self.step as f64)),
-            (
-                "tensors".into(),
-                Json::Arr(
-                    self.params
-                        .iter()
-                        .map(|t| {
-                            Json::Arr(
-                                t.shape().iter().map(|&d| Json::Num(d as f64)).collect(),
-                            )
-                        })
-                        .collect(),
-                ),
-            ),
+            ("tensors".into(), shapes_json(&self.params)),
         ]);
         let meta = index.to_string_compact().into_bytes();
         if let Some(parent) = path.parent() {
@@ -53,15 +100,7 @@ impl Checkpoint {
         f.write_all(MAGIC)?;
         f.write_all(&(meta.len() as u32).to_le_bytes())?;
         f.write_all(&meta)?;
-        for t in &self.params {
-            let data = t.f32s().context("checkpoints hold f32 tensors")?;
-            // SAFETY-free explicit LE encode
-            let mut buf = Vec::with_capacity(data.len() * 4);
-            for x in data {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
-            f.write_all(&buf)?;
-        }
+        write_tensor_data(&mut f, &self.params)?;
         Ok(())
     }
 
@@ -81,24 +120,196 @@ impl Checkpoint {
         let j = Json::parse(std::str::from_utf8(&meta)?)?;
         let variant = j.req("variant")?.as_str()?.to_string();
         let step = j.req("step")?.as_f64()? as u64;
-        let mut params = Vec::new();
-        for tshape in j.req("tensors")?.as_arr()? {
-            let shape: Vec<usize> = tshape
-                .as_arr()?
-                .iter()
-                .map(|d| d.as_usize())
-                .collect::<Result<_>>()?;
-            let n: usize = shape.iter().product();
-            let mut raw = vec![0u8; n * 4];
-            f.read_exact(&mut raw)?;
-            let data = raw
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            params.push(HostTensor::F32 { shape, data });
-        }
+        let params = read_tensor_list(&mut f, j.req("tensors")?)?;
         Ok(Checkpoint { variant, step, params })
     }
+}
+
+/// Full trainer resume state (`PRLCKPT2`): everything the trainer needs
+/// to continue a run as if it had never stopped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    pub variant: String,
+    /// last completed optimizer step
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+    /// Adam first moment
+    pub opt_m: Vec<HostTensor>,
+    /// Adam second moment
+    pub opt_v: Vec<HostTensor>,
+    pub samples_total: f64,
+    pub tokens_total: f64,
+    /// RNG cursor ([`crate::util::Rng::state_words`]) for deterministic
+    /// replay harnesses; all-zero when the producer owns no RNG.
+    pub rng: [u64; 4],
+}
+
+impl TrainState {
+    /// Canonical file name for a step's state inside a checkpoint dir.
+    pub fn file_name(step: u64) -> String {
+        format!("step{step:05}.state")
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let index = Json::Obj(vec![
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("step".into(), Json::Num(self.step as f64)),
+            ("samples_total".into(), Json::Num(self.samples_total)),
+            ("tokens_total".into(), Json::Num(self.tokens_total)),
+            // full-width u64 words: hex strings, f64 would truncate
+            (
+                "rng".into(),
+                Json::Arr(
+                    self.rng
+                        .iter()
+                        .map(|w| Json::Str(format!("{w:016x}")))
+                        .collect(),
+                ),
+            ),
+            ("params".into(), shapes_json(&self.params)),
+            ("opt_m".into(), shapes_json(&self.opt_m)),
+            ("opt_v".into(), shapes_json(&self.opt_v)),
+        ]);
+        let meta = index.to_string_compact().into_bytes();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC_STATE)?;
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(&meta)?;
+        write_tensor_data(&mut f, &self.params)?;
+        write_tensor_data(&mut f, &self.opt_m)?;
+        write_tensor_data(&mut f, &self.opt_v)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC_STATE {
+            bail!("{path:?} is not a PipelineRL train state (PRLCKPT2)");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let mut meta = vec![0u8; u32::from_le_bytes(len4) as usize];
+        f.read_exact(&mut meta)?;
+        let j = Json::parse(std::str::from_utf8(&meta)?)?;
+        let words = j.req("rng")?.as_arr()?;
+        if words.len() != 4 {
+            bail!(
+                "{path:?}: rng cursor must be 4 words, found {} — refusing a \
+                 state that would silently break deterministic resume",
+                words.len()
+            );
+        }
+        let mut rng = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            rng[i] = u64::from_str_radix(w.as_str()?, 16)
+                .context("rng cursor must be a hex word")?;
+        }
+        let params = read_tensor_list(&mut f, j.req("params")?)?;
+        let opt_m = read_tensor_list(&mut f, j.req("opt_m")?)?;
+        let opt_v = read_tensor_list(&mut f, j.req("opt_v")?)?;
+        Ok(TrainState {
+            variant: j.req("variant")?.as_str()?.to_string(),
+            step: j.req("step")?.as_f64()? as u64,
+            samples_total: j.req("samples_total")?.as_f64()?,
+            tokens_total: j.req("tokens_total")?.as_f64()?,
+            rng,
+            params,
+            opt_m,
+            opt_v,
+        })
+    }
+
+    /// Save under the canonical name in `dir` and update `manifest.json`
+    /// (latest pointer + history). With `keep_last > 0`, prunes the oldest
+    /// state files beyond the window. Returns the state file path.
+    pub fn save_with_manifest(&self, dir: &Path, keep_last: usize) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let name = Self::file_name(self.step);
+        let path = dir.join(&name);
+        self.save(&path)?;
+
+        let mut history = read_manifest(dir).map(|(_, h)| h).unwrap_or_default();
+        history.retain(|h| h != &name);
+        history.push(name.clone());
+        if keep_last > 0 {
+            while history.len() > keep_last {
+                let victim = history.remove(0);
+                std::fs::remove_file(dir.join(&victim)).ok();
+            }
+        }
+        let manifest = Json::Obj(vec![
+            ("format".into(), Json::Str("PRLSTATE1".into())),
+            ("latest".into(), Json::Str(name)),
+            (
+                "history".into(),
+                Json::Arr(history.into_iter().map(Json::Str).collect()),
+            ),
+        ]);
+        // atomic-ish update: write sidecar then rename over
+        let tmp = dir.join(format!("{MANIFEST}.tmp"));
+        std::fs::write(&tmp, manifest.to_string_compact())?;
+        std::fs::rename(&tmp, dir.join(MANIFEST))?;
+        Ok(path)
+    }
+
+    /// Load the newest state named by `dir/manifest.json`.
+    pub fn load_latest(dir: &Path) -> Result<TrainState> {
+        let (latest, _) = read_manifest(dir)
+            .with_context(|| format!("no readable {MANIFEST} in {dir:?}"))?;
+        Self::load(&dir.join(latest))
+    }
+
+    /// Resolve a `[checkpoint] resume_from` value: a directory loads its
+    /// manifest's latest state, a file path loads that state directly.
+    pub fn load_resume(path: &Path) -> Result<TrainState> {
+        if path.is_dir() {
+            Self::load_latest(path)
+        } else {
+            Self::load(path)
+        }
+    }
+}
+
+/// Load parameters from either record type: a `TrainState` (PRLCKPT2,
+/// what the trainer writes) or a params-only `Checkpoint` (PRLCKPT1).
+/// Returns (variant, step, params). Dispatches on the file magic so a
+/// damaged file of either format reports its real parse error instead
+/// of a misleading wrong-format message. The `pipeline-rl eval` path
+/// and any external consumer should use this instead of guessing.
+pub fn load_params_any(path: &Path) -> Result<(String, u64, Vec<HostTensor>)> {
+    let mut magic = [0u8; 8];
+    {
+        let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        f.read_exact(&mut magic)
+            .with_context(|| format!("{path:?} is too short to be a checkpoint"))?;
+    }
+    if &magic == MAGIC_STATE {
+        let st = TrainState::load(path)?;
+        Ok((st.variant, st.step, st.params))
+    } else {
+        let ck = Checkpoint::load(path)?;
+        Ok((ck.variant, ck.step, ck.params))
+    }
+}
+
+fn read_manifest(dir: &Path) -> Result<(String, Vec<String>)> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST))?;
+    let j = Json::parse(&text)?;
+    let latest = j.req("latest")?.as_str()?.to_string();
+    let history = j
+        .req("history")?
+        .as_arr()?
+        .iter()
+        .map(|h| Ok(h.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((latest, history))
 }
 
 #[cfg(test)]
@@ -122,6 +333,54 @@ mod tests {
         assert_eq!(back.variant, "tiny");
         assert_eq!(back.step, 17);
         assert_eq!(back.params, ck.params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn state(step: u64, scale: f32) -> TrainState {
+        TrainState {
+            variant: "tiny".into(),
+            step,
+            params: vec![HostTensor::from_f32(&[3], vec![scale, -scale, 0.5 * scale])],
+            opt_m: vec![HostTensor::from_f32(&[3], vec![0.1, 0.2, 0.3])],
+            opt_v: vec![HostTensor::from_f32(&[3], vec![1e-8, 2e-8, 3e-8])],
+            samples_total: 128.0 * step as f64,
+            tokens_total: 4096.0 * step as f64,
+            rng: [u64::MAX, 0x0123_4567_89ab_cdef, 1, 0],
+        }
+    }
+
+    #[test]
+    fn train_state_roundtrip_bit_identical() {
+        let dir = std::env::temp_dir().join("prl_state_test");
+        let st = state(7, 3.25);
+        let path = dir.join(TrainState::file_name(7));
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back, st, "full state survives the roundtrip bit-exactly");
+        // a TrainState is not a Checkpoint
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_tracks_latest_and_prunes() {
+        let dir = std::env::temp_dir().join("prl_manifest_test");
+        std::fs::remove_dir_all(&dir).ok();
+        for step in [2, 4, 6, 8] {
+            state(step, step as f32).save_with_manifest(&dir, 2).unwrap();
+        }
+        let latest = TrainState::load_latest(&dir).unwrap();
+        assert_eq!(latest.step, 8);
+        // keep_last = 2: steps 2 and 4 pruned from disk
+        assert!(!dir.join(TrainState::file_name(2)).exists());
+        assert!(!dir.join(TrainState::file_name(4)).exists());
+        assert!(dir.join(TrainState::file_name(6)).exists());
+        // resume_from accepts the directory form
+        let resumed = TrainState::load_resume(&dir).unwrap();
+        assert_eq!(resumed, latest);
+        // ... and the explicit-file form
+        let explicit = TrainState::load_resume(&dir.join(TrainState::file_name(6))).unwrap();
+        assert_eq!(explicit.step, 6);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -20,6 +20,21 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
+/// True when a PJRT backend *and* the AOT artifacts are both present, i.e.
+/// a [`Runtime`] can actually be constructed. Engine-dependent tests call
+/// this to skip (with a printed reason) in environments built against the
+/// vendored no-PJRT `xla` stub or lacking `artifacts/` — see tier1.sh.
+pub fn runtime_available() -> bool {
+    static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAIL.get_or_init(|| match Runtime::new() {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("runtime unavailable (engine tests will skip): {e:#}");
+            false
+        }
+    })
+}
+
 /// Default artifacts directory, overridable via `PIPELINE_RL_ARTIFACTS`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("PIPELINE_RL_ARTIFACTS")

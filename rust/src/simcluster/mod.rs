@@ -17,4 +17,4 @@ pub mod scenarios;
 pub mod sim;
 
 pub use scenarios::{drain_scenario, generation_only, DrainPoint};
-pub use sim::{SimCfg, SimMode, SimResult, Simulator};
+pub use sim::{GpuFailure, SimCfg, SimMode, SimResult, Simulator};

@@ -13,6 +13,19 @@ pub enum SimMode {
     Conventional { g: usize },
 }
 
+/// A generation-GPU outage: at flash `at`, `gpu` drops every live
+/// sequence and generates nothing until `at + down_for` (generator
+/// churn, LlamaRL-style). Pipeline mode refills and keeps training;
+/// conventional mode cannot tolerate churn (its quota never drains).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuFailure {
+    pub gpu: usize,
+    /// outage start (flashes)
+    pub at: f64,
+    /// outage duration (flashes)
+    pub down_for: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SimCfg {
     pub mode: SimMode,
@@ -34,6 +47,8 @@ pub struct SimCfg {
     pub seed: u64,
     /// flashes each generation GPU pauses per in-flight weight update
     pub weight_update_pause: f64,
+    /// injected generation-GPU outages (empty = healthy cluster)
+    pub failures: Vec<GpuFailure>,
 }
 
 impl SimCfg {
@@ -50,6 +65,7 @@ impl SimCfg {
             rl_steps: 50,
             seed: 0,
             weight_update_pause: 0.0,
+            failures: Vec::new(),
         }
     }
 
@@ -66,7 +82,22 @@ impl SimCfg {
             rl_steps: 50,
             seed: 0,
             weight_update_pause: 0.0,
+            failures: Vec::new(),
         }
+    }
+
+    /// Seed-derived churn: `n` outages of `down_for` flashes each, at
+    /// deterministic GPUs/times in `[0, t_max)`. Same seed, same churn.
+    pub fn with_churn(mut self, seed: u64, n: usize, t_max: f64, down_for: f64) -> Self {
+        let mut rng = Rng::with_stream(seed, 0xfa11);
+        for _ in 0..n {
+            self.failures.push(GpuFailure {
+                gpu: rng.below(self.n_gen_gpus.max(1)),
+                at: rng.f64() * t_max,
+                down_for,
+            });
+        }
+        self
     }
 }
 
@@ -96,6 +127,8 @@ pub struct SimResult {
     pub throughput: f64,
     /// wall time (flashes) at completion
     pub t_end: f64,
+    /// sequences dropped by injected GPU outages
+    pub seqs_lost: usize,
 }
 
 #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -133,6 +166,12 @@ fn key(t: f64, e: Event) -> Reverse<(u64, Event)> {
 
 impl Simulator {
     pub fn new(cfg: SimCfg) -> Self {
+        assert!(
+            cfg.failures.is_empty() || matches!(cfg.mode, SimMode::Pipeline),
+            "GPU churn requires SimMode::Pipeline: conventional mode's quota \
+             never reopens after lost sequences, which would silently truncate \
+             the simulation"
+        );
         let rng = Rng::with_stream(cfg.seed, 0x51u64);
         let slots = (0..cfg.n_gen_gpus)
             .map(|_| vec![None; cfg.slots_per_gpu])
@@ -180,6 +219,20 @@ impl Simulator {
         self.slots[gpu].iter().filter(|s| s.is_some()).count()
     }
 
+    /// End of the outage window covering `(gpu, now)`, if any. The 2e-6
+    /// tolerance absorbs the micro-flash truncation in [`key`] so a round
+    /// rescheduled *at* the window end counts as recovered.
+    fn down_until(&self, gpu: usize) -> Option<f64> {
+        self.cfg
+            .failures
+            .iter()
+            .filter(|f| f.gpu == gpu && f.at <= self.t && self.t + 2e-6 < f.at + f.down_for)
+            .map(|f| f.at + f.down_for)
+            .fold(None, |acc: Option<f64>, end| {
+                Some(acc.map_or(end, |a| a.max(end)))
+            })
+    }
+
     pub fn run(mut self) -> SimResult {
         // prime
         for g in 0..self.cfg.n_gen_gpus {
@@ -199,6 +252,19 @@ impl Simulator {
             self.t = tk as f64 / 1e6;
             match ev {
                 Event::Round(g) => {
+                    // injected outage: drop live sequences, go dark until
+                    // the window ends, then resume (pipeline refills)
+                    if let Some(end) = self.down_until(g) {
+                        let lost =
+                            self.slots[g].iter_mut().filter_map(|s| s.take()).count();
+                        self.result.seqs_lost += lost;
+                        if g == 0 {
+                            self.result.gpu0_active.push(self.t, self.t, 0.0);
+                        }
+                        self.heap.push(key(end, Event::Round(g)));
+                        self.maybe_start_training();
+                        continue;
+                    }
                     let mut finished = Vec::new();
                     for slot in self.slots[g].iter_mut() {
                         if let Some(seq) = slot {
@@ -412,6 +478,45 @@ mod tests {
     fn deterministic_per_seed() {
         let a = Simulator::new(small_pipe()).run();
         let b = Simulator::new(small_pipe()).run();
+        assert_eq!(a.t_end, b.t_end);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn healthy_cluster_loses_nothing() {
+        let r = Simulator::new(small_pipe()).run();
+        assert_eq!(r.seqs_lost, 0);
+    }
+
+    #[test]
+    fn churn_drops_sequences_but_pipeline_completes() {
+        let healthy = Simulator::new(small_pipe()).run();
+        // knock GPUs out across the healthy run's whole horizon
+        let cfg = small_pipe().with_churn(11, 6, healthy.t_end, healthy.t_end / 10.0);
+        let r = Simulator::new(cfg).run();
+        assert_eq!(
+            r.samples_vs_time.points.len(),
+            30,
+            "pipeline refills around outages and still finishes every step"
+        );
+        assert!(r.seqs_lost > 0, "outages must have dropped live sequences");
+        assert!(
+            r.t_end >= healthy.t_end,
+            "churn cannot make the run faster: {} vs {}",
+            r.t_end,
+            healthy.t_end
+        );
+    }
+
+    #[test]
+    fn churn_is_seed_deterministic() {
+        let mk = || {
+            let healthy_end = 5_000.0;
+            let cfg = small_pipe().with_churn(21, 4, healthy_end, 300.0);
+            Simulator::new(cfg).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.seqs_lost, b.seqs_lost);
         assert_eq!(a.t_end, b.t_end);
         assert_eq!(a.tokens, b.tokens);
     }

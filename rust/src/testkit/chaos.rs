@@ -1,0 +1,161 @@
+//! Deterministic chaos schedules for the fault-tolerance harness.
+//!
+//! A [`ChaosSchedule`] is a pure, seed-derived list of failure events,
+//! each pinned to an *optimizer-step* timestamp. The coordinator's
+//! supervisor (see `coordinator::supervisor`) polls the weight bus's
+//! published version — the pipeline's logical clock — and fires every
+//! event whose step has passed, in schedule order.
+//!
+//! Determinism contract: the schedule is a function of its seed alone
+//! (`generate(seed, ..) == generate(seed, ..)`), event kinds carry no
+//! ambient targets (the supervisor resolves "which actor" from pool
+//! state, lowest/highest live id, which is itself deterministic given
+//! the event sequence), and every run prints its chaos seed — so a
+//! failing schedule replays exactly from the printed seed. Wall-clock
+//! interleaving still varies between runs, but the *sequence* of
+//! injected faults does not, which is what a reproduction needs.
+
+use crate::util::Rng;
+use std::fmt;
+
+/// One failure to inject. Targets are resolved by the supervisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// abruptly halt the lowest-id live actor (in-flight work aborted);
+    /// the supervisor respawns one only if the pool would drop below its
+    /// floor, and only while the respawn budget lasts
+    KillActor,
+    /// kill the lowest-id live actor and immediately respawn it
+    RestartActor,
+    /// grow the pool by one actor (no-op at the ceiling)
+    AddActor,
+    /// retire the highest-id live actor (no-op at the floor)
+    RemoveActor,
+    /// every weight-bus publish sleeps this long until healed
+    BusDelay { ms: u64 },
+    /// heal a previous `BusDelay`
+    BusHeal,
+    /// stall all rollout-topic publishers for this long
+    TopicStall { ms: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// fire once the trainer has published this optimizer step
+    pub at_step: u64,
+    pub kind: ChaosKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    /// Derive a schedule of `n_events` faults over a run of `total_steps`
+    /// optimizer steps. Pure in `seed`: equal seeds give equal schedules.
+    pub fn generate(seed: u64, total_steps: u64, n_events: usize) -> ChaosSchedule {
+        let mut rng = Rng::with_stream(seed, 0xc4a0);
+        let last = total_steps.saturating_sub(1).max(1);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let at_step = 1 + rng.below(last as usize) as u64;
+            // weighted kinds: churn-heavy, with occasional transport faults
+            let kind = match rng.below(100) {
+                0..=29 => ChaosKind::KillActor,
+                30..=49 => ChaosKind::RestartActor,
+                50..=64 => ChaosKind::AddActor,
+                65..=74 => ChaosKind::RemoveActor,
+                75..=84 => ChaosKind::BusDelay { ms: 5 + rng.below(45) as u64 },
+                85..=89 => ChaosKind::BusHeal,
+                _ => ChaosKind::TopicStall { ms: 5 + rng.below(45) as u64 },
+            };
+            events.push(ChaosEvent { at_step, kind });
+        }
+        events.sort_by_key(|e| e.at_step);
+        ChaosSchedule { seed, events }
+    }
+
+    /// Hand-written scenario: kill one actor at `kill_step`, bring a
+    /// replacement up at `restart_step`. The canonical integration case.
+    pub fn kill_then_restart(kill_step: u64, restart_step: u64) -> ChaosSchedule {
+        ChaosSchedule {
+            seed: 0,
+            events: vec![
+                ChaosEvent { at_step: kill_step, kind: ChaosKind::KillActor },
+                ChaosEvent { at_step: restart_step, kind: ChaosKind::AddActor },
+            ],
+        }
+    }
+
+    /// Human-readable replay recipe; printed at run start so a failing
+    /// schedule can be reproduced from its seed.
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "chaos schedule (seed {}, {} events):",
+            self.seed,
+            self.events.len()
+        );
+        for e in &self.events {
+            s.push_str(&format!("\n  step {:>4}: {}", e.at_step, e.kind));
+        }
+        s
+    }
+}
+
+impl fmt::Display for ChaosKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChaosKind::KillActor => write!(f, "kill-actor"),
+            ChaosKind::RestartActor => write!(f, "restart-actor"),
+            ChaosKind::AddActor => write!(f, "add-actor"),
+            ChaosKind::RemoveActor => write!(f, "remove-actor"),
+            ChaosKind::BusDelay { ms } => write!(f, "bus-delay {ms}ms"),
+            ChaosKind::BusHeal => write!(f, "bus-heal"),
+            ChaosKind::TopicStall { ms } => write!(f, "topic-stall {ms}ms"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_seed_deterministic() {
+        let a = ChaosSchedule::generate(1234, 50, 8);
+        let b = ChaosSchedule::generate(1234, 50, 8);
+        assert_eq!(a, b, "same seed must replay the exact same schedule");
+        let c = ChaosSchedule::generate(1235, 50, 8);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn events_are_sorted_and_in_range() {
+        let s = ChaosSchedule::generate(7, 40, 32);
+        assert_eq!(s.events.len(), 32);
+        for w in s.events.windows(2) {
+            assert!(w[0].at_step <= w[1].at_step);
+        }
+        for e in &s.events {
+            assert!(e.at_step >= 1 && e.at_step < 40, "step {} in range", e.at_step);
+        }
+    }
+
+    #[test]
+    fn describe_names_the_seed() {
+        let s = ChaosSchedule::generate(99, 10, 3);
+        let d = s.describe();
+        assert!(d.contains("seed 99"));
+        assert_eq!(d.lines().count(), 4);
+    }
+
+    #[test]
+    fn degenerate_run_lengths_still_generate() {
+        let s = ChaosSchedule::generate(3, 1, 4);
+        assert!(s.events.iter().all(|e| e.at_step == 1));
+        let empty = ChaosSchedule::generate(3, 20, 0);
+        assert!(empty.events.is_empty());
+    }
+}

@@ -4,8 +4,31 @@
 //! base seed; on failure it reports the failing case seed so the exact
 //! case can be replayed with `check_one`. Shrinking is approximated by
 //! re-running the failing case at progressively smaller "size" hints.
+//!
+//! The [`chaos`] submodule extends the same replay-from-seed philosophy
+//! to whole-pipeline failure injection: seeded, deterministic schedules
+//! of actor kills / restarts / transport faults that the coordinator's
+//! supervisor executes against a live run.
+
+pub mod chaos;
+
+pub use chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
 
 use crate::util::Rng;
+
+/// Integration-test gate: true when a PJRT runtime + AOT artifacts are
+/// present; otherwise prints a `SKIP <test>` line with the reason and
+/// returns false so the test can bail early. See tier1.sh for how to
+/// unlock the gated tests.
+pub fn runtime_or_skip(test: &str) -> bool {
+    if crate::runtime::runtime_available() {
+        return true;
+    }
+    eprintln!(
+        "SKIP {test}: PJRT runtime / AOT artifacts unavailable (env-gated, see tier1.sh)"
+    );
+    false
+}
 
 /// Size-aware case context handed to properties.
 pub struct Case {

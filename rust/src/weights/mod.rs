@@ -39,6 +39,9 @@ pub struct WeightBus {
     bytes_fetched: Arc<AtomicU64>,
     publishes: Arc<AtomicU64>,
     lock: Arc<Mutex<()>>,
+    /// fault injection: milliseconds each publish sleeps before the swap
+    /// (chaos-harness "bus publish delay"); 0 = healthy
+    publish_delay_ms: Arc<AtomicU64>,
 }
 
 impl WeightBus {
@@ -46,7 +49,9 @@ impl WeightBus {
         Self::default()
     }
 
-    /// Paper API `init_process_group`: register a receiver.
+    /// Paper API `init_process_group`: register a receiver. Idempotent, so
+    /// a restarted actor re-joining under the same name is a no-op — the
+    /// elastic pool's hot-join path.
     pub fn init_process_group(&self, receiver: &str) {
         let mut g = self.inner.write().unwrap();
         if !g.receivers.iter().any(|r| r == receiver) {
@@ -54,13 +59,31 @@ impl WeightBus {
         }
     }
 
+    /// De-register a receiver (actor killed or scaled away). Unknown names
+    /// are ignored so kill/crash paths can call this unconditionally.
+    pub fn leave_process_group(&self, receiver: &str) {
+        let mut g = self.inner.write().unwrap();
+        g.receivers.retain(|r| r != receiver);
+    }
+
     pub fn receivers(&self) -> Vec<String> {
         self.inner.read().unwrap().receivers.clone()
+    }
+
+    /// Chaos injection: every subsequent publish sleeps `ms` before
+    /// swapping in the new version (models a degraded broadcast path).
+    /// Pass 0 to heal.
+    pub fn set_publish_delay_ms(&self, ms: u64) {
+        self.publish_delay_ms.store(ms, Ordering::Relaxed);
     }
 
     /// Paper API `request_weight_update`: publish a new version.
     /// Returns the version number assigned.
     pub fn publish(&self, version: u64, params: Arc<Vec<HostTensor>>) -> u64 {
+        let delay = self.publish_delay_ms.load(Ordering::Relaxed);
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(delay));
+        }
         let _g = self.lock.lock().unwrap();
         {
             let mut inner = self.inner.write().unwrap();
@@ -138,6 +161,24 @@ mod tests {
         bus.init_process_group("actor-1");
         bus.init_process_group("actor-0"); // idempotent
         assert_eq!(bus.receivers(), vec!["actor-0", "actor-1"]);
+        // elastic pool: leave + hot re-join
+        bus.leave_process_group("actor-0");
+        bus.leave_process_group("actor-7"); // unknown: ignored
+        assert_eq!(bus.receivers(), vec!["actor-1"]);
+        bus.init_process_group("actor-0");
+        assert_eq!(bus.receivers(), vec!["actor-1", "actor-0"]);
+    }
+
+    #[test]
+    fn publish_delay_injection() {
+        let bus = WeightBus::new();
+        bus.set_publish_delay_ms(60);
+        let t0 = std::time::Instant::now();
+        bus.publish(1, params(1.0));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(50));
+        bus.set_publish_delay_ms(0); // heal
+        bus.publish(2, params(2.0));
+        assert_eq!(bus.latest_version(), 2);
     }
 
     #[test]

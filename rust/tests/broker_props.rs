@@ -1,0 +1,128 @@
+//! Property tests (testkit::check) for the broker topic invariants:
+//!
+//! * conservation — every published item is accounted for exactly once:
+//!   `published == consumed + dropped + depth`;
+//! * `DropOldest` evicts from the stale end only — the newest items
+//!   always survive, in order;
+//! * `Block` never drops.
+//!
+//! Failures print the case seed; replay with `testkit::check_one`.
+
+use pipeline_rl::broker::{topic, Policy, RecvError};
+use pipeline_rl::testkit::check;
+use std::time::Duration;
+
+#[test]
+fn prop_drop_oldest_conserves_and_keeps_newest() {
+    check("drop-oldest conservation + newest survive", 40, 0xb10c, 64, |c| {
+        let cap = c.usize_in(1, 16);
+        let n = c.usize_in(1, 64.min(c.size * 4).max(1));
+        let (tx, rx) = topic("t", cap, Policy::DropOldest);
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        let s = tx.stats();
+        if s.published != (s.consumed + s.dropped) + s.depth as u64 {
+            return Err(format!("conservation pre-drain: {s:?}"));
+        }
+        let kept = cap.min(n);
+        let got = rx.recv_exact(kept, Duration::from_millis(200));
+        // the surviving window must be exactly the newest `kept` items
+        let want: Vec<usize> = (n - kept..n).collect();
+        if got != want {
+            return Err(format!("evicted a newer item: got {got:?}, want {want:?}"));
+        }
+        let s = rx.stats();
+        if s.published != s.consumed + s.dropped + s.depth as u64 {
+            return Err(format!("conservation post-drain: {s:?}"));
+        }
+        if s.dropped != (n.saturating_sub(cap)) as u64 {
+            return Err(format!("dropped {} != overflow {}", s.dropped, n - cap));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_concurrent_drop_oldest_conserves_with_partial_drain() {
+    check("mpmc drop-oldest conservation", 25, 0xb20c, 32, |c| {
+        let cap = c.usize_in(1, 12);
+        let n_pub = c.usize_in(1, 4);
+        let per = c.usize_in(1, 32.min(c.size * 2).max(1));
+        let (tx, rx) = topic("t", cap, Policy::DropOldest);
+        let mut pubs = Vec::new();
+        for p in 0..n_pub {
+            let tx = tx.clone();
+            pubs.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        for p in pubs {
+            p.join().unwrap();
+        }
+        // consumer drains only part of the queue: depth term stays nonzero
+        let q = c.rng.below(cap + 1);
+        let got = rx.recv_exact(q.min(rx.depth()), Duration::from_millis(200));
+        let s = rx.stats();
+        if s.published != (n_pub * per) as u64 {
+            return Err(format!("published {} != sent {}", s.published, n_pub * per));
+        }
+        if s.consumed != got.len() as u64 {
+            return Err(format!("consumed {} != received {}", s.consumed, got.len()));
+        }
+        if s.published != s.consumed + s.dropped + s.depth as u64 {
+            return Err(format!("conservation violated: {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_never_drops_under_concurrency() {
+    check("block policy never drops", 20, 0xb30c, 32, |c| {
+        let cap = c.usize_in(1, 8);
+        let n_pub = c.usize_in(1, 4);
+        let per = c.usize_in(1, 32.min(c.size * 2).max(1));
+        let (tx, rx) = topic("t", cap, Policy::Block);
+        let mut pubs = Vec::new();
+        for p in 0..n_pub {
+            let tx = tx.clone();
+            pubs.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        // concurrent consumer so blocked publishers make progress
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            loop {
+                match rx.recv(Duration::from_secs(10)) {
+                    Ok(x) => got.push(x),
+                    Err(RecvError::Closed) => break,
+                    Err(RecvError::Timeout) => break,
+                }
+            }
+            (got, rx.stats())
+        });
+        for p in pubs {
+            p.join().unwrap();
+        }
+        let (mut got, s) = consumer.join().unwrap();
+        if s.dropped != 0 {
+            return Err(format!("Block dropped {} items", s.dropped));
+        }
+        if s.published != s.consumed + s.depth as u64 {
+            return Err(format!("conservation violated: {s:?}"));
+        }
+        got.sort_unstable();
+        let want: Vec<usize> = (0..n_pub * per).collect();
+        if got != want {
+            return Err("delivery was not exactly-once".into());
+        }
+        Ok(())
+    });
+}

@@ -1,23 +1,44 @@
-//! Failure injection and stress tests over the coordination substrates.
+//! Scenario-driven failure injection over the coordination substrates.
 //!
-//! * trainer checkpoint stall — the rollout ring buffer must absorb the
-//!   pause by evicting the stalest samples (the paper's stated purpose of
-//!   the ring buffers) and the run must still complete;
-//! * slow-consumer backpressure on a Block topic;
-//! * multi-actor pipeline run — rollouts from several engines interleave
-//!   into coherent batches;
-//! * KV-block starvation — an over-committed engine stalls sequences
-//!   instead of corrupting state, and recovers.
+//! Two tiers:
+//!
+//! * **Substrate scenarios** (always run): the supervision machinery —
+//!   [`ActorPool`] + [`run_supervisor`] + [`ChaosSchedule`] — driven with
+//!   synthetic actors over the real broker topics and weight bus, so the
+//!   kill / restart / hot-attach / restart-budget logic is exercised even
+//!   without a PJRT runtime. Plus the classic ring-buffer and
+//!   backpressure cases.
+//! * **Full-pipeline scenarios** (gated on `runtime_available()`): the
+//!   same chaos schedules injected into a real `coordinator::run` — an
+//!   actor is killed and restarted mid-run and training still completes.
+//!
+//! Chaos schedules are pure functions of their seed; a failing run's
+//! printed seed replays the identical fault sequence.
 
 use pipeline_rl::broker::{topic, Policy, RecvError};
 use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator::supervisor::{
+    run_supervisor, ActorPool, SpawnFn, SupervisorArgs,
+};
 use pipeline_rl::coordinator;
 use pipeline_rl::data::task::{TaskGen, TaskKind};
 use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::metrics::MetricsHub;
+use pipeline_rl::model::checkpoint::TrainState;
 use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::{FinishReason, Rollout};
 use pipeline_rl::runtime::Runtime;
+use pipeline_rl::testkit::chaos::ChaosSchedule;
+use pipeline_rl::testkit::runtime_or_skip;
 use pipeline_rl::util::Rng;
+use pipeline_rl::weights::WeightBus;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// substrate scenarios (always run)
+// ---------------------------------------------------------------------
 
 #[test]
 fn ring_buffer_absorbs_slow_consumer() {
@@ -57,13 +78,170 @@ fn block_topic_applies_backpressure_and_recovers() {
     assert_eq!(got, (0..50).collect::<Vec<_>>());
 }
 
+fn dummy_rollout(actor_id: usize, n: u64) -> Rollout {
+    Rollout {
+        seq_id: n,
+        problem_id: n,
+        group_id: (actor_id as u64 + 1) << 40 | n,
+        actor_id,
+        prompt_tokens: vec![1, 2],
+        gen_tokens: vec![3],
+        behavior_lp: vec![-0.5],
+        token_version: vec![1],
+        reward: 0.0,
+        finish: FinishReason::Eos,
+        t_start: 0.0,
+        t_end: 0.0,
+    }
+}
+
+/// Synthetic actor for supervision tests: hot-joins the bus, streams
+/// dummy rollouts until halted. No PJRT runtime involved.
+fn synthetic_spawn(bus: WeightBus, tx: pipeline_rl::broker::Publisher<Rollout>) -> SpawnFn {
+    Arc::new(move |ctx| {
+        let name = format!("actor-{}", ctx.actor_id);
+        bus.init_process_group(&name);
+        let mut have = 0u64;
+        let mut n = 0u64;
+        while !ctx.stop.load(Ordering::Relaxed) && !ctx.halt.load(Ordering::Relaxed) {
+            if let Some(w) = bus.fetch_if_newer(have) {
+                have = w.version;
+            }
+            if tx.send(dummy_rollout(ctx.actor_id, n)).is_err() {
+                break;
+            }
+            n += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        bus.leave_process_group(&name);
+        Ok(())
+    })
+}
+
 #[test]
-fn checkpoint_stall_does_not_deadlock_pipeline() {
-    // per-step checkpointing (slow trainer) with a tiny rollout ring:
-    // actors keep generating, stale rollouts fall off the ring, training
-    // still completes all steps.
-    let dir = std::env::temp_dir().join("prl_stall_ckpts");
-    std::fs::create_dir_all(&dir).unwrap();
+fn chaos_kill_then_restart_keeps_pipeline_alive() {
+    // The canonical scenario on the real supervision machinery with
+    // synthetic actors: one actor, killed at step 3, replacement added at
+    // step 6, a fake trainer advancing the version clock to 10. The run
+    // must keep producing rollouts throughout — no deadlock, no Closed.
+    let hub = MetricsHub::new();
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(vec![]));
+    let (tx, rx) = topic::<Rollout>("rollouts", 64, Policy::DropOldest);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let pool = ActorPool::new(
+        synthetic_spawn(bus.clone(), tx.clone()),
+        stop.clone(),
+        hub.clone(),
+        1,     // initial
+        1,     // min
+        4,     // max
+        2,     // respawn budget
+        false, // tolerate crashes
+    )
+    .unwrap();
+    let schedule = ChaosSchedule::kill_then_restart(3, 6);
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: tx.clone(),
+        schedule: Some(schedule),
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(2),
+    };
+    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+    // fake trainer: 20 rollouts per "optimizer step", 10 steps
+    let mut consumed = 0u64;
+    let mut version = 1u64;
+    while version <= 10 {
+        match rx.recv(Duration::from_secs(10)) {
+            Ok(_) => {
+                consumed += 1;
+                if consumed % 20 == 0 {
+                    version += 1;
+                    bus.publish(version, Arc::new(vec![]));
+                }
+            }
+            Err(e) => panic!("pipeline stalled at version {version}: {e:?}"),
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    sup.join().unwrap().unwrap();
+
+    assert!(consumed >= 200, "rollouts flowed the whole run: {consumed}");
+    assert_eq!(hub.counter("chaos_events_fired"), 2.0);
+    assert!(hub.counter("actors_killed") >= 1.0, "kill event fired");
+    // initial + (floor top-up after the kill) + scheduled add
+    assert!(hub.counter("actors_spawned") >= 2.0);
+    // every incarnation de-registered on halt
+    assert!(bus.receivers().is_empty(), "left: {:?}", bus.receivers());
+}
+
+#[test]
+fn crash_restart_budget_is_enforced() {
+    // Actors of generation < 2 crash instantly; the pool must restart
+    // them through the budget and keep exactly one live actor.
+    let hub = MetricsHub::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let spawn: SpawnFn = Arc::new(|ctx| {
+        if ctx.generation < 2 {
+            anyhow::bail!("injected crash (generation {})", ctx.generation);
+        }
+        while !ctx.stop.load(Ordering::Relaxed) && !ctx.halt.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    });
+    let mut pool = ActorPool::new(spawn, stop.clone(), hub.clone(), 1, 1, 2, 10, false).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while hub.counter("actor_restarts") < 2.0 {
+        assert!(std::time::Instant::now() < deadline, "restarts never happened");
+        pool.reap().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // generation-2 incarnation stays alive
+    std::thread::sleep(Duration::from_millis(20));
+    pool.reap().unwrap();
+    assert_eq!(pool.len(), 1);
+    assert_eq!(hub.counter("actor_crashes"), 2.0);
+    stop.store(true, Ordering::Relaxed);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn pool_resize_respects_bounds() {
+    let hub = MetricsHub::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let spawn: SpawnFn = Arc::new(|ctx| {
+        while !ctx.stop.load(Ordering::Relaxed) && !ctx.halt.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    });
+    let mut pool = ActorPool::new(spawn, stop.clone(), hub.clone(), 2, 1, 3, 0, false).unwrap();
+    assert_eq!(pool.len(), 2);
+    assert_eq!(pool.add_actor().unwrap(), Some(2));
+    assert_eq!(pool.add_actor().unwrap(), None, "ceiling enforced");
+    assert_eq!(pool.lowest_live(), Some(0));
+    assert_eq!(pool.highest_live(), Some(2));
+    assert!(pool.kill_actor(1));
+    assert!(!pool.kill_actor(1), "already gone");
+    assert_eq!(pool.len(), 2);
+    assert!(pool.restart_actor(0).unwrap());
+    assert_eq!(pool.len(), 2);
+    stop.store(true, Ordering::Relaxed);
+    pool.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// full-pipeline scenarios (need PJRT runtime + AOT artifacts)
+// ---------------------------------------------------------------------
+
+fn small_pipeline_cfg() -> RunConfig {
     let mut cfg = RunConfig::default();
     cfg.variant = "tiny".into();
     cfg.sft_steps = 8;
@@ -72,31 +250,41 @@ fn checkpoint_stall_does_not_deadlock_pipeline() {
     cfg.max_new_tokens = 16;
     cfg.task.kinds = vec![TaskKind::Copy];
     cfg.task.max_operand = 9;
-    cfg.rollout_queue = 8; // tiny ring
-    cfg.checkpoint_every = 1; // stall every step
-    cfg.checkpoint_dir = Some(dir.to_string_lossy().to_string());
     cfg.log_every = 0;
+    cfg
+}
+
+#[test]
+fn scenario_checkpoint_stall_does_not_deadlock_pipeline() {
+    if !runtime_or_skip("scenario_checkpoint_stall") {
+        return;
+    }
+    // per-step checkpointing (slow trainer) with a tiny rollout ring:
+    // actors keep generating, stale rollouts fall off the ring, training
+    // still completes all steps.
+    let dir = std::env::temp_dir().join("prl_stall_ckpts");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = small_pipeline_cfg();
+    cfg.rollout_queue = 8; // tiny ring
+    cfg.checkpoint.every = 1; // stall every step
+    cfg.checkpoint.dir = Some(dir.to_string_lossy().to_string());
     let summary = coordinator::run(cfg, None).expect("run must complete");
-    assert_eq!(
-        summary.report.series("train/loss").unwrap().points.len(),
-        5
-    );
+    assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 5);
     assert_eq!(summary.report.counters["checkpoints_written"], 5.0);
+    // full TrainStates + manifest landed on disk
+    let latest = TrainState::load_latest(&dir).expect("manifest resolves");
+    assert_eq!(latest.step, 5);
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn multi_actor_pipeline_interleaves() {
-    let mut cfg = RunConfig::default();
-    cfg.variant = "tiny".into();
-    cfg.sft_steps = 8;
+fn scenario_multi_actor_pipeline_interleaves() {
+    if !runtime_or_skip("scenario_multi_actor_pipeline") {
+        return;
+    }
+    let mut cfg = small_pipeline_cfg();
     cfg.rl_steps = 4;
     cfg.n_actors = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 16;
-    cfg.task.kinds = vec![TaskKind::Copy];
-    cfg.task.max_operand = 9;
-    cfg.log_every = 0;
     let summary = coordinator::run(cfg, None).expect("multi-actor run");
     assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 4);
     // both actors produced sequences
@@ -114,7 +302,54 @@ fn multi_actor_pipeline_interleaves() {
 }
 
 #[test]
+fn scenario_kill_and_restart_actor_mid_run() {
+    if !runtime_or_skip("scenario_kill_and_restart_actor_mid_run") {
+        return;
+    }
+    // the acceptance scenario: an actor dies mid-run, a replacement
+    // hot-joins, and training still completes every optimizer step.
+    let mut cfg = small_pipeline_cfg();
+    cfg.rl_steps = 6;
+    cfg.n_actors = 2;
+    cfg.elastic.enabled = true;
+    cfg.elastic.min_actors = 1;
+    cfg.elastic.max_actors = 4;
+    let schedule = ChaosSchedule::kill_then_restart(2, 4);
+    let summary =
+        coordinator::run_with_chaos(cfg, None, Some(schedule)).expect("chaos run completes");
+    assert_eq!(
+        summary.report.series("train/loss").unwrap().points.len(),
+        6,
+        "all optimizer steps ran despite the kill"
+    );
+    assert!(summary.report.counters["samples_trained"] > 0.0);
+    assert!(summary.report.counters["chaos_events_fired"] >= 1.0);
+    assert!(summary.report.counters["actors_killed"] >= 1.0);
+}
+
+#[test]
+fn scenario_seeded_schedule_runs_to_completion() {
+    if !runtime_or_skip("scenario_seeded_schedule") {
+        return;
+    }
+    // a generated (seed-derived) schedule with mixed fault kinds; the
+    // seed is printed by the supervisor, so any failure here replays.
+    let mut cfg = small_pipeline_cfg();
+    cfg.rl_steps = 6;
+    cfg.n_actors = 2;
+    cfg.elastic.enabled = true;
+    let schedule = ChaosSchedule::generate(0xdead_beef, 6, 4);
+    let summary =
+        coordinator::run_with_chaos(cfg, None, Some(schedule)).expect("seeded chaos run");
+    assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 6);
+    assert!(summary.report.counters["samples_trained"] > 0.0);
+}
+
+#[test]
 fn kv_starvation_stalls_then_recovers() {
+    if !runtime_or_skip("kv_starvation") {
+        return;
+    }
     let mut rt = Runtime::new().unwrap();
     let params = rt.init_params("tiny", 1).unwrap();
     // over-committed pool: 5 blocks of 8 = 40 token cells for 4 slots

@@ -5,6 +5,8 @@ use pipeline_rl::config::{Mode, RunConfig};
 use pipeline_rl::coordinator;
 use pipeline_rl::data::task::TaskKind;
 
+use pipeline_rl::testkit::runtime_or_skip;
+
 fn base_cfg() -> RunConfig {
     let mut cfg = RunConfig::default();
     cfg.variant = "tiny".into();
@@ -21,6 +23,9 @@ fn base_cfg() -> RunConfig {
 
 #[test]
 fn pipeline_mode_end_to_end() {
+    if !runtime_or_skip("pipeline_mode_end_to_end") {
+        return;
+    }
     let cfg = base_cfg();
     let summary = coordinator::run(cfg, None).expect("pipeline run");
     let rep = &summary.report;
@@ -55,6 +60,9 @@ fn pipeline_mode_end_to_end() {
 
 #[test]
 fn conventional_mode_end_to_end() {
+    if !runtime_or_skip("conventional_mode_end_to_end") {
+        return;
+    }
     let mut cfg = base_cfg();
     cfg.mode = Mode::Conventional { g: 2 };
     cfg.rl_steps = 4;

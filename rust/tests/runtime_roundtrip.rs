@@ -14,6 +14,8 @@ use pipeline_rl::runtime::{check_params, HostTensor, Runtime};
 
 const V: &str = "tiny";
 
+use pipeline_rl::testkit::runtime_or_skip;
+
 fn setup() -> (Runtime, Vec<HostTensor>) {
     let mut rt = Runtime::new().expect("runtime (did you run `make artifacts`?)");
     let params = rt.init_params(V, 42).unwrap();
@@ -22,6 +24,9 @@ fn setup() -> (Runtime, Vec<HostTensor>) {
 
 #[test]
 fn init_matches_manifest() {
+    if !runtime_or_skip("init_matches_manifest") {
+        return;
+    }
     let (rt, params) = setup();
     let v = rt.manifest.variant(V).unwrap();
     check_params(v, &params).unwrap();
@@ -34,6 +39,9 @@ fn init_matches_manifest() {
 
 #[test]
 fn decode_forced_tokens_echo_and_logprobs_normalize() {
+    if !runtime_or_skip("decode_forced_tokens_echo_and_logprobs_normalize") {
+        return;
+    }
     let (mut rt, params) = setup();
     let v = rt.manifest.variant(V).unwrap().clone();
     let g = rt.graph(V, "decode").unwrap();
@@ -73,6 +81,9 @@ fn decode_forced_tokens_echo_and_logprobs_normalize() {
 
 #[test]
 fn sft_loss_decreases() {
+    if !runtime_or_skip("sft_loss_decreases") {
+        return;
+    }
     let (mut rt, mut params) = setup();
     let v = rt.manifest.variant(V).unwrap().clone();
     let g = rt.graph(V, "sft").unwrap();
@@ -127,6 +138,9 @@ fn sft_loss_decreases() {
 
 #[test]
 fn train_step_runs_and_metrics_layout_matches() {
+    if !runtime_or_skip("train_step_runs_and_metrics_layout_matches") {
+        return;
+    }
     let (mut rt, params) = setup();
     let v = rt.manifest.variant(V).unwrap().clone();
     let g = rt.graph(V, "train").unwrap();
@@ -201,6 +215,9 @@ fn train_step_runs_and_metrics_layout_matches() {
 
 #[test]
 fn decode_chain_matches_teacher_forced_score() {
+    if !runtime_or_skip("decode_chain_matches_teacher_forced_score") {
+        return;
+    }
     let (mut rt, params) = setup();
     let v = rt.manifest.variant(V).unwrap().clone();
     let decode = rt.graph(V, "decode").unwrap();

@@ -1,0 +1,105 @@
+//! Property tests (testkit::check) for the weight bus:
+//!
+//! * versions observed by any receiver are **strictly monotonic** under
+//!   concurrent publishers — `fetch_if_newer` can skip versions (that is
+//!   the in-flight design: actors jump to the freshest weights) but can
+//!   never deliver one twice or out of order;
+//! * `bytes_fetched` accounting is exact: it equals the sum of `nbytes`
+//!   over every parameter set actually handed to a receiver.
+
+use pipeline_rl::runtime::HostTensor;
+use pipeline_rl::testkit::check;
+use pipeline_rl::weights::WeightBus;
+use std::sync::{Arc, Mutex};
+
+fn params_for(version: u64, base_len: usize) -> Arc<Vec<HostTensor>> {
+    // version-dependent sizes make the byte accounting non-trivial
+    let len = base_len + (version as usize % 3);
+    Arc::new(vec![
+        HostTensor::from_f32(&[len], vec![version as f32; len]),
+        HostTensor::from_f32(&[2], vec![0.0, version as f32]),
+    ])
+}
+
+#[test]
+fn prop_versions_strictly_monotonic_and_bytes_exact() {
+    check("weight bus monotonic fetch + exact bytes", 20, 0x3b5, 24, |c| {
+        let n_pub = c.usize_in(1, 3);
+        let n_recv = c.usize_in(1, 3);
+        let last = c.usize_in(5, 5 + c.size.min(40)) as u64;
+        let base_len = c.usize_in(1, 8);
+        let bus = WeightBus::new();
+        // concurrent publishers draw strictly increasing versions from a
+        // shared counter; the draw+publish pair is atomic so the stream
+        // of published versions is increasing
+        let next = Arc::new(Mutex::new(1u64));
+        let mut pubs = Vec::new();
+        for _ in 0..n_pub {
+            let bus = bus.clone();
+            let next = next.clone();
+            pubs.push(std::thread::spawn(move || loop {
+                let mut g = next.lock().unwrap();
+                let v = *g;
+                if v > last {
+                    return;
+                }
+                *g += 1;
+                bus.publish(v, params_for(v, base_len));
+                drop(g);
+                std::thread::yield_now();
+            }));
+        }
+        let mut recvs = Vec::new();
+        for _ in 0..n_recv {
+            let bus = bus.clone();
+            recvs.push(std::thread::spawn(move || {
+                let mut have = 0u64;
+                let mut bytes = 0u64;
+                let mut fetches = 0u64;
+                while have < last {
+                    if let Some(w) = bus.fetch_if_newer(have) {
+                        assert!(
+                            w.version > have,
+                            "non-monotonic fetch: {} after {}",
+                            w.version,
+                            have
+                        );
+                        have = w.version;
+                        bytes += w.params.iter().map(|t| t.nbytes() as u64).sum::<u64>();
+                        fetches += 1;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                (bytes, fetches)
+            }));
+        }
+        for p in pubs {
+            p.join().unwrap();
+        }
+        let mut receiver_bytes = 0u64;
+        let mut receiver_fetches = 0u64;
+        for r in recvs {
+            let (b, f) = r.join().unwrap();
+            receiver_bytes += b;
+            receiver_fetches += f;
+        }
+        if bus.publishes() != last {
+            return Err(format!("publishes {} != {last}", bus.publishes()));
+        }
+        if bus.latest_version() != last {
+            return Err(format!("latest {} != {last}", bus.latest_version()));
+        }
+        if receiver_fetches == 0 {
+            return Err("receivers fetched nothing".into());
+        }
+        if bus.bytes_fetched() != receiver_bytes {
+            return Err(format!(
+                "byte accounting drifted: bus says {}, receivers counted {}",
+                bus.bytes_fetched(),
+                receiver_bytes
+            ));
+        }
+        Ok(())
+    });
+}

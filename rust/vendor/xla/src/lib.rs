@@ -1,0 +1,248 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! Mirrors exactly the subset of the xla-rs API that `pipeline_rl` calls:
+//!
+//! * [`Literal`] — a *functional* host-side tensor literal (scalar / vec1 /
+//!   reshape / readback / tuples), so everything that moves data around in
+//!   host memory works identically to the real bindings;
+//! * [`PjRtClient`] and friends — the device entry points. Constructing a
+//!   client **fails** with a descriptive error: there is no XLA runtime in
+//!   this build. Callers are expected to gate on that error (see
+//!   `pipeline_rl::runtime::runtime_available`).
+//!
+//! Swap in the real bindings by replacing the `xla = { path = ... }`
+//! dependency with the upstream git dependency; no source changes needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the shape of xla-rs's error (Display + StdError).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: pipeline_rl was built against the vendored \
+         no-PJRT xla stub (rust/vendor/xla). Install the real xla-rs \
+         bindings and the AOT artifacts to run device code."
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+    U8,
+}
+
+/// Sealed-ish conversion trait for the element types the stub supports.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn store(data: Vec<Self>) -> LitData;
+    fn load(data: &LitData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn store(data: Vec<f32>) -> LitData {
+        LitData::F32(data)
+    }
+    fn load(data: &LitData) -> Option<Vec<f32>> {
+        match data {
+            LitData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn store(data: Vec<i32>) -> LitData {
+        LitData::I32(data)
+    }
+    fn load(data: &LitData) -> Option<Vec<i32>> {
+        match data {
+            LitData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal. Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LitData,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::store(vec![v]) }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::store(v.to_vec()) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape mismatch: literal has {have} elements, target shape {dims:?} wants {want}"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::I32(v) => v.len(),
+            LitData::Tuple(_) => 0,
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LitData::F32(_) => ElementType::F32,
+            LitData::I32(_) => ElementType::S32,
+            LitData::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LitData::Tuple(xs) => Ok(xs.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub build.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PJRT buffer staging"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device readback"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executable dispatch"))
+    }
+}
+
+/// Parsed HLO-text module. The stub keeps the raw text only.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path:?}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}

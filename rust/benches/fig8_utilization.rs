@@ -10,6 +10,48 @@
 use pipeline_rl::benchkit;
 use pipeline_rl::perfmodel::AccelModel;
 
+/// Engine-gated addendum: measure the real decode-step breakdown so the
+/// analytic utilization curve can be compared against what the hot path
+/// actually spends on staging vs compute vs readback (the before/after
+/// evidence for the device-resident decode refactor).
+fn measured_breakdown() -> anyhow::Result<()> {
+    use pipeline_rl::data::task::TaskGen;
+    use pipeline_rl::engine::{Engine, EngineCfg};
+    use pipeline_rl::model::Tokenizer;
+    use pipeline_rl::runtime::Runtime;
+    use pipeline_rl::util::Rng;
+
+    let mut rt = Runtime::new()?;
+    let params = rt.init_params("tiny", 1)?;
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = usize::MAX / 2;
+    let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(5))?;
+    eng.set_weights(1, &params)?;
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    for i in 0..eng.n_slots() {
+        let p = gen.problem(i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        eng.add_request(p, toks, i as u64);
+    }
+    for _ in 0..32 {
+        eng.step()?;
+    }
+    let s = &eng.stats;
+    let steps = s.steps.max(1);
+    println!(
+        "measured tiny decode, {} steps: stage {:.0}us execute {:.0}us readback {:.0}us \
+         per step; kv restages {} (device-resident: {})",
+        steps,
+        s.stage_us as f64 / steps as f64,
+        s.execute_us as f64 / steps as f64,
+        s.readback_us as f64 / steps as f64,
+        s.kv_restages,
+        eng.kv_on_device(),
+    );
+    Ok(())
+}
+
 fn main() {
     let m = AccelModel::h100();
 
@@ -44,4 +86,13 @@ fn main() {
         "\ncalibration anchors: U(192) = {:.4} (paper A.4: r_gen = U(192)*44 = 16.9)",
         m.u_raw(192)
     );
+
+    benchkit::section("measured decode-step breakdown (engine-gated)");
+    if pipeline_rl::runtime::runtime_available() {
+        if let Err(e) = measured_breakdown() {
+            eprintln!("measured breakdown failed: {e:#}");
+        }
+    } else {
+        eprintln!("SKIP measured breakdown: PJRT runtime / AOT artifacts unavailable");
+    }
 }

@@ -1,9 +1,14 @@
 //! Hot-path micro-benchmarks (§Perf) — the numbers tracked in
-//! EXPERIMENTS.md §Perf before/after each optimization.
+//! ROADMAP.md §Perf before/after each optimization, and appended
+//! machine-readably to BENCH_hotpath.json (see benchkit docs).
 //!
 //! * engine decode step (per variant): the request-path inner loop
+//! * decode steady state: KV device-resident, arena-staged inputs,
+//!   selective readback — with the EngineStats stage/execute/readback
+//!   breakdown
 //! * trainer optimizer step (per variant)
-//! * weight swap (in-flight update cost at the engine)
+//! * weight swap: eager (decode stalls for the transfer) vs overlapped
+//!   (shadow staging between steps + zero-stall commit)
 //! * packer throughput, broker round-trip, RNG fill
 //!
 //! `cargo bench --bench hotpath`
@@ -15,30 +20,34 @@ use pipeline_rl::data::task::TaskGen;
 use pipeline_rl::engine::{Engine, EngineCfg};
 use pipeline_rl::model::Tokenizer;
 use pipeline_rl::rl::{FinishReason, Rollout};
-use pipeline_rl::runtime::{HostTensor, Runtime};
+use pipeline_rl::runtime::{self, HostTensor, Runtime};
 use pipeline_rl::util::logging::{self, Level};
+use pipeline_rl::util::timer::{Stats, Stopwatch};
 use pipeline_rl::util::Rng;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    logging::set_level(Level::Warn);
+fn saturated_engine(rt: &mut Runtime, variant: &str) -> anyhow::Result<Engine> {
+    let params = rt.init_params(variant, 1)?;
+    let mut cfg = EngineCfg::new(variant);
+    cfg.max_new_tokens = usize::MAX / 2; // keep slots busy forever
+    let mut eng = Engine::new(rt, cfg, &params, 0, Rng::new(2))?;
+    eng.set_weights(1, &params)?;
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    for i in 0..eng.n_slots() {
+        let p = gen.problem(i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        eng.add_request(p, toks, i as u64);
+    }
+    Ok(eng)
+}
 
+fn engine_benches() -> anyhow::Result<()> {
     benchkit::section("L3 hot paths — engine decode step");
     for variant in ["tiny", "small", "base"] {
         let mut rt = Runtime::new()?;
-        let params = rt.init_params(variant, 1)?;
-        let mut cfg = EngineCfg::new(variant);
-        cfg.max_new_tokens = usize::MAX / 2; // keep slots busy forever
-        let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(2))?;
-        eng.set_weights(1, &params)?;
-        let gen = TaskGen::curriculum_small();
-        let tk = Tokenizer::new();
+        let mut eng = saturated_engine(&mut rt, variant)?;
         let slots = eng.n_slots();
-        for i in 0..slots {
-            let p = gen.problem(i as u64);
-            let toks = tk.encode(&p.prompt).unwrap();
-            eng.add_request(p, toks, i as u64);
-        }
         let v = rt.manifest.variant(variant)?.clone();
         let r = time(
             &format!("decode step {variant} (B={} slots, full)", slots),
@@ -49,11 +58,49 @@ fn main() -> anyhow::Result<()> {
             },
         );
         let tokens_per_s = slots as f64 / (r.mean_ms / 1e3);
+        benchkit::json_note(&format!("decode step {variant}/tokens_per_s"), tokens_per_s);
         println!(
-            "    -> {:.0} tokens/s at batch {} (KV {:.1} MB round-trip)",
+            "    -> {:.0} tokens/s at batch {} (KV {:.1} MB, device-resident: {})",
             tokens_per_s,
             slots,
-            v.kv_numel() as f64 * 4.0 / 1e6
+            v.kv_numel() as f64 * 4.0 / 1e6,
+            eng.kv_on_device(),
+        );
+    }
+
+    benchkit::section("L3 hot paths — decode steady state (breakdown)");
+    {
+        let mut rt = Runtime::new()?;
+        let mut eng = saturated_engine(&mut rt, "base")?;
+        // warm in: admit + first KV staging happen off the measurement
+        for _ in 0..3 {
+            eng.step()?;
+        }
+        let s0 = eng.stats.clone();
+        let r = time("decode steady state base (KV resident)", 0, 32, || {
+            eng.step().unwrap();
+        });
+        let s1 = eng.stats.clone();
+        let steps = (s1.steps - s0.steps).max(1);
+        let stage = (s1.stage_us - s0.stage_us) as f64 / steps as f64;
+        let exec = (s1.execute_us - s0.execute_us) as f64 / steps as f64;
+        let read = (s1.readback_us - s0.readback_us) as f64 / steps as f64;
+        println!(
+            "    -> per step: stage {stage:.0}us execute {exec:.0}us readback {read:.0}us \
+             (kv restages {} over {} steps)",
+            s1.kv_restages - s0.kv_restages,
+            steps,
+        );
+        benchkit::json_note("decode steady state/stage_us", stage);
+        benchkit::json_note("decode steady state/execute_us", exec);
+        benchkit::json_note("decode steady state/readback_us", read);
+        benchkit::json_note(
+            "decode steady state/kv_restages",
+            (s1.kv_restages - s0.kv_restages) as f64,
+        );
+        benchkit::json_note(
+            "decode steady state/tokens_per_s",
+            eng.n_slots() as f64 / (r.mean_ms / 1e3),
         );
     }
 
@@ -99,7 +146,7 @@ fn main() -> anyhow::Result<()> {
         println!("    -> {toks_per_s:.0} padded tokens/s");
     }
 
-    benchkit::section("L3 hot paths — in-flight weight swap");
+    benchkit::section("L3 hot paths — in-flight weight swap (eager stall)");
     for variant in ["tiny", "base"] {
         let mut rt = Runtime::new()?;
         let params = rt.init_params(variant, 1)?;
@@ -117,8 +164,74 @@ fn main() -> anyhow::Result<()> {
             },
         );
         println!(
-            "    -> {:.1} MB/s transfer-equivalent",
-            nbytes as f64 / 1e6 / (r.mean_ms / 1e3)
+            "    -> {:.1} MB/s transfer-equivalent, stall recorded {} us total",
+            nbytes as f64 / 1e6 / (r.mean_ms / 1e3),
+            eng.stats.weight_stall_us,
+        );
+    }
+
+    benchkit::section("L3 hot paths — in-flight weight swap (overlapped)");
+    {
+        let mut rt = Runtime::new()?;
+        let params = rt.init_params("base", 1)?;
+        let mut eng = saturated_engine(&mut rt, "base")?;
+        for _ in 0..2 {
+            eng.step()?;
+        }
+        let mut ver = 1u64;
+        let mut commit_stats = Stats::new();
+        let swaps = 12u64;
+        for _ in 0..swaps {
+            ver += 1;
+            eng.begin_weight_update(ver, params.len())?;
+            // stage a couple of tensors between decode steps, like the actor
+            let mut i = 0usize;
+            while !eng.weight_update_ready() {
+                for _ in 0..2 {
+                    if i < params.len() {
+                        eng.stage_weight_tensor(&params[i]).unwrap();
+                        i += 1;
+                    }
+                }
+                eng.step()?;
+            }
+            let sw = Stopwatch::new();
+            eng.commit_weights()?.expect("staged set commits");
+            commit_stats.push(sw.millis());
+        }
+        println!(
+            "weight swap overlapped (base): commit {:.4} ms mean (±{:.4}, n={}), \
+             decode stall from overlapped swaps: 0 us by construction \
+             (stage_us interleaved: {} us over {} swaps)",
+            commit_stats.mean(),
+            commit_stats.std(),
+            commit_stats.n,
+            eng.stats.weight_stage_us,
+            swaps,
+        );
+        benchkit::json_note("weight swap overlapped/commit_ms", commit_stats.mean());
+        benchkit::json_note(
+            "weight swap overlapped/stage_us_total",
+            eng.stats.weight_stage_us as f64,
+        );
+        benchkit::json_note(
+            "weight swap overlapped/overlapped_commits",
+            eng.stats.overlapped_commits as f64,
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    logging::set_level(Level::Warn);
+    benchkit::json_begin("hotpath");
+
+    if runtime::runtime_available() {
+        engine_benches()?;
+    } else {
+        eprintln!(
+            "SKIP engine/trainer hot-path benches: PJRT runtime / AOT artifacts \
+             unavailable (see tier1.sh); running substrate benches only"
         );
     }
 
@@ -169,5 +282,7 @@ fn main() -> anyhow::Result<()> {
         rng.fill_gumbel(&mut buf);
         std::hint::black_box(&buf);
     });
+
+    benchkit::json_end();
     Ok(())
 }

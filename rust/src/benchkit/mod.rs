@@ -7,8 +7,99 @@
 //! * `table(...)` / `series(...)` — figure regeneration output: each
 //!   bench prints the same rows/series the paper's table or figure
 //!   reports, so `cargo bench` regenerates the evaluation section.
+//!
+//! **Machine-readable results:** a bench that calls [`json_begin`] gets
+//! every subsequent `time()` result and `table()` additionally recorded,
+//! and [`json_end`] appends them as one *run* to `BENCH_<name>.json`
+//! (next to the crate, or `$PIPELINE_RL_BENCH_DIR`). Runs accumulate
+//! across invocations, so the perf trajectory across PRs is a diffable
+//! artifact, not just scrollback.
 
+use crate::util::json::Json;
 use crate::util::timer::{Stats, Stopwatch};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+struct JsonSink {
+    name: String,
+    dir: PathBuf,
+    section: String,
+    tables_in_section: usize,
+    entries: Vec<(String, Json)>,
+}
+
+static SINK: Mutex<Option<JsonSink>> = Mutex::new(None);
+
+fn bench_dir() -> PathBuf {
+    std::env::var("PIPELINE_RL_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")))
+}
+
+/// Start recording results for `BENCH_<name>.json` next to the crate
+/// (or `$PIPELINE_RL_BENCH_DIR`). Idempotent per run: a second call
+/// discards anything recorded since the first.
+pub fn json_begin(name: &str) {
+    json_begin_at(name, bench_dir());
+}
+
+/// Explicit-directory variant of [`json_begin`] — for benches that want
+/// the artifact elsewhere, and for tests that must stay hermetic
+/// (mutating `PIPELINE_RL_BENCH_DIR` from a test would race parallel
+/// env reads).
+pub fn json_begin_at(name: &str, dir: PathBuf) {
+    *SINK.lock().unwrap() = Some(JsonSink {
+        name: name.to_string(),
+        dir,
+        section: String::new(),
+        tables_in_section: 0,
+        entries: Vec::new(),
+    });
+}
+
+/// Record a derived scalar (e.g. tokens/s) under `key` in the active
+/// JSON run. No-op when no sink is active.
+pub fn json_note(key: &str, value: f64) {
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.entries.push((key.to_string(), Json::Num(value)));
+    }
+}
+
+/// Flush the recorded run, appending it to `BENCH_<name>.json`. Returns
+/// the path written, or None when no sink was active.
+pub fn json_end() -> Option<PathBuf> {
+    let sink = SINK.lock().unwrap().take()?;
+    let path = sink.dir.join(format!("BENCH_{}.json", sink.name));
+    // append to prior runs when the existing file parses; start fresh
+    // (preserving nothing) otherwise
+    let mut runs: Vec<Json> = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|doc| doc.get("runs").and_then(|r| r.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    runs.push(Json::obj(vec![("results", Json::Obj(sink.entries))]));
+    let n = runs.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::str(sink.name.clone())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(&path, doc.to_string_compact()) {
+        Ok(()) => {
+            println!("json: appended run {n} to {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("json: failed to write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn json_record(name: &str, value: Json) {
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.entries.push((name.to_string(), value));
+    }
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -40,6 +131,15 @@ pub fn time<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchR
         "{:<44} {:>10.3} ms/iter  (±{:>7.3}, min {:>8.3}, n={})",
         r.name, r.mean_ms, r.std_ms, r.min_ms, r.iters
     );
+    json_record(
+        &r.name,
+        Json::obj(vec![
+            ("mean_ms", Json::Num(r.mean_ms)),
+            ("std_ms", Json::Num(r.std_ms)),
+            ("min_ms", Json::Num(r.min_ms)),
+            ("iters", Json::Num(r.iters as f64)),
+        ]),
+    );
     r
 }
 
@@ -48,6 +148,10 @@ pub fn section(title: &str) {
     println!("\n================================================================");
     println!("{title}");
     println!("================================================================");
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.section = title.to_string();
+        sink.tables_in_section = 0;
+    }
 }
 
 /// Print aligned rows: headers then each row of cells.
@@ -73,6 +177,24 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) {
     );
     for row in rows {
         println!("{}", fmt_row(row));
+    }
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.tables_in_section += 1;
+        let key = format!("{} [table {}]", sink.section, sink.tables_in_section);
+        let jrows: Vec<Json> = rows
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|c| Json::str(c.clone())).collect()))
+            .collect();
+        sink.entries.push((
+            key,
+            Json::obj(vec![
+                (
+                    "headers",
+                    Json::Arr(headers.iter().map(|h| Json::str(*h)).collect()),
+                ),
+                ("rows", Json::Arr(jrows)),
+            ]),
+        ));
     }
 }
 
@@ -113,5 +235,46 @@ mod tests {
         });
         assert!(r.mean_ms >= 0.0);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn json_sink_appends_runs() {
+        let dir = std::env::temp_dir().join(format!("prl_benchkit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // hermetic: explicit dir, no env mutation. Other tests in this
+        // binary may call time() concurrently and add extra entries to
+        // the active sink — assertions below are presence-based on our
+        // own keys, so that interleaving is harmless.
+        json_begin_at("sinktest", dir.clone());
+        let _ = time("sink entry", 0, 2, || {});
+        json_note("sink entry/tokens_per_s", 123.0);
+        section("sink section");
+        table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let path = json_end().expect("sink active");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "sinktest");
+        let runs1 = doc.get("runs").unwrap().as_arr().unwrap().len();
+        let results = doc.get("runs").unwrap().as_arr().unwrap()[runs1 - 1]
+            .get("results")
+            .unwrap();
+        let entry = results.get("sink entry").unwrap();
+        assert!(entry.get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(entry.get("iters").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            results.get("sink entry/tokens_per_s").unwrap().as_f64().unwrap(),
+            123.0
+        );
+        assert!(results.get("sink section [table 1]").is_some());
+
+        // a second run appends rather than overwrites
+        json_begin_at("sinktest", dir.clone());
+        let _ = time("sink entry", 0, 1, || {});
+        json_end().expect("sink active");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), runs1 + 1);
+
+        assert!(json_end().is_none(), "sink consumed");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

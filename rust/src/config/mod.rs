@@ -122,6 +122,18 @@ pub struct RunConfig {
     pub rollout_policy: Policy,
     /// batch topic capacity (preprocessor -> trainer)
     pub batch_queue: usize,
+    /// preprocessor: force-complete an incomplete advantage group after
+    /// this many seconds (0 = never). Guards against groups stranded by
+    /// ring eviction of a killed actor's Aborted members.
+    pub group_timeout_s: f64,
+    /// preprocessor: hard cap on incomplete groups held pending; beyond
+    /// it the oldest are force-completed (0 = unbounded)
+    pub max_pending_groups: usize,
+    /// actor: parameter tensors staged per decode step when absorbing an
+    /// in-flight weight update via the overlapped (shadow-buffer) path;
+    /// 0 = eager swap (stall for the whole transfer, the pre-overlap
+    /// behavior kept as an ablation baseline)
+    pub weight_stage_chunk: usize,
     pub checkpoint: CheckpointConfig,
     pub elastic: ElasticConfig,
     /// deterministic single-thread mode: actors and trainer are stepped
@@ -154,6 +166,9 @@ impl Default for RunConfig {
             rollout_queue: 256,
             rollout_policy: Policy::DropOldest,
             batch_queue: 4,
+            group_timeout_s: 30.0,
+            max_pending_groups: 1024,
+            weight_stage_chunk: 2,
             checkpoint: CheckpointConfig::default(),
             elastic: ElasticConfig::default(),
             log_every: 10,
@@ -229,6 +244,10 @@ impl RunConfig {
             rollout_queue: doc.usize_or("queues.rollout_capacity", d.rollout_queue)?,
             rollout_policy,
             batch_queue: doc.usize_or("queues.batch_capacity", d.batch_queue)?,
+            group_timeout_s: doc.f64_or("queues.group_timeout_s", d.group_timeout_s)?,
+            max_pending_groups: doc
+                .usize_or("queues.max_pending_groups", d.max_pending_groups)?,
+            weight_stage_chunk: doc.usize_or("run.weight_stage_chunk", d.weight_stage_chunk)?,
             checkpoint: CheckpointConfig {
                 // `trainer.checkpoint_*` kept as legacy aliases
                 every: doc.usize_or(

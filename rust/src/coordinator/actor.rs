@@ -1,8 +1,16 @@
 //! Actor stage (Alg. 2 lines 1–14).
 //!
 //! Owns one generation engine (= one generation GPU pool in the paper).
-//! Loop: poll the weight bus — on a new version, pause briefly (optional
-//! simulated broadcast latency), swap weights in-flight, resume; keep the
+//! Loop: poll the weight bus — on a new version, stage it *incrementally*
+//! into the engine's shadow buffer set, a few tensor chunks per decode
+//! step (`run.weight_stage_chunk`), and swap atomically at a step
+//! boundary: the transfer overlaps with decoding and the swap itself is
+//! a pointer exchange, so `weight_updates` no longer implies a decode
+//! stall. A publish that lands mid-transfer is picked up immediately
+//! after the in-progress transfer commits — transfers always run to
+//! completion, keeping version progress monotone (and livelock-free
+//! under a fast trainer). `weight_stage_chunk = 0` restores the eager
+//! stall-and-swap path as an ablation baseline. Meanwhile: keep the
 //! engine saturated with prompt groups; step the engine; verify rewards
 //! of finished sequences and stream them to the preprocessor.
 //!
@@ -22,7 +30,7 @@ use crate::rl::{FinishReason, Rollout};
 use crate::runtime::Runtime;
 use crate::util::logging::Logger;
 use crate::util::Rng;
-use crate::weights::WeightBus;
+use crate::weights::{WeightBus, WeightFetch};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -89,6 +97,18 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let target_load = engine.n_slots() + cfg.group_size;
     let mut version = initial.version;
     let mut steps_since_fill_metric = 0usize;
+    // in-progress overlapped weight transfer (None = up to date / eager).
+    // Overlapping only makes sense in pipeline mode: conventional RL's
+    // per-phase updates land while the engine is empty (nothing to
+    // overlap with), and a mid-sequence commit would break Alg. 1's
+    // strict on-policyness — so conventional always swaps eagerly.
+    let overlap_chunk = match cfg.mode {
+        Mode::Pipeline => cfg.weight_stage_chunk,
+        Mode::Conventional { .. } => 0,
+    };
+    let mut staging: Option<WeightFetch> = None;
+    // fractional carry of the simulated per-chunk broadcast pause
+    let mut pause_debt_us: f64 = 0.0;
 
     loop {
         if stop.load(Ordering::Relaxed) || halt.load(Ordering::Relaxed) {
@@ -96,16 +116,63 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
         }
 
         // ---- in-flight weight update (pipeline) / per-phase (conv) ----
-        if let Some(w) = bus.fetch_if_newer(version) {
-            if cfg.weight_transfer_ms > 0.0 {
-                // simulated NCCL broadcast pause
-                std::thread::sleep(Duration::from_micros(
-                    (cfg.weight_transfer_ms * 1000.0) as u64,
-                ));
+        if overlap_chunk == 0 {
+            // eager baseline: stall for the whole transfer, then swap
+            if let Some(w) = bus.fetch_if_newer(version) {
+                if cfg.weight_transfer_ms > 0.0 {
+                    // simulated NCCL broadcast pause
+                    std::thread::sleep(Duration::from_micros(
+                        (cfg.weight_transfer_ms * 1000.0) as u64,
+                    ));
+                }
+                engine.set_weights(w.version, &w.params)?;
+                version = w.version;
+                hub.add("weight_updates_received", 1.0);
             }
-            engine.set_weights(w.version, &w.params)?;
-            version = w.version;
-            hub.add("weight_updates_received", 1.0);
+        } else {
+            // overlapped path. An in-progress transfer always runs to
+            // completion even when a newer version lands mid-stage: the
+            // commit stays monotone and the actor then immediately starts
+            // on the newest version. (Abort-and-restart on every newer
+            // publish would livelock under a trainer that publishes
+            // faster than one transfer completes — the actor would never
+            // commit anything.)
+            if staging.is_none() {
+                if let Some(f) = bus.begin_fetch(version) {
+                    engine.begin_weight_update(f.version(), f.n_params())?;
+                    pause_debt_us = 0.0;
+                    staging = Some(f);
+                }
+            }
+            if let Some(f) = &mut staging {
+                // spread the simulated broadcast pause over the chunks so
+                // the transfer model matches the overlap it measures; a
+                // fractional per-chunk share accumulates as debt so the
+                // total sleep matches the eager path's
+                let pause_per_chunk_us = if cfg.weight_transfer_ms > 0.0 {
+                    cfg.weight_transfer_ms * 1000.0 / f.n_params().max(1) as f64
+                } else {
+                    0.0
+                };
+                for _ in 0..overlap_chunk {
+                    let Some((_, t)) = f.next_chunk() else { break };
+                    pause_debt_us += pause_per_chunk_us;
+                    if pause_debt_us >= 1.0 {
+                        let whole = pause_debt_us as u64;
+                        std::thread::sleep(Duration::from_micros(whole));
+                        pause_debt_us -= whole as f64;
+                    }
+                    engine.stage_weight_tensor(t)?;
+                }
+            }
+            if staging.as_ref().is_some_and(|f| f.done()) {
+                let v = staging.take().expect("checked above").version();
+                // step-boundary swap: a pointer exchange, zero decode stall
+                if engine.commit_weights()?.is_some() {
+                    version = v;
+                    hub.add("weight_updates_received", 1.0);
+                }
+            }
         }
 
         // ---- admission ----
@@ -186,8 +253,9 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     // can still complete (aborted members count toward group size but
     // are filtered out of the advantage computation). Best effort: a
     // saturated DropOldest ring may still evict these before the
-    // preprocessor sees them, stranding those groups in its pending map
-    // — bounded-pending eviction is a ROADMAP item.
+    // preprocessor sees them — the preprocessor's bounded-pending
+    // eviction (GroupCollector timeout/cap) then salvages the stranded
+    // groupmates instead of leaving them pending forever.
     let aborted = engine.drain();
     if !aborted.is_empty() {
         hub.add("rollouts_aborted_on_halt", aborted.len() as f64);

@@ -46,4 +46,5 @@ pub mod warmup;
 pub use conv::ConvSync;
 pub use orchestrator::{run, run_with_chaos, RunSummary};
 pub use packing::{Packer, TrainBatch};
+pub use preprocessor::GroupCollector;
 pub use supervisor::{ActorCtx, ActorPool, SpawnFn};

@@ -22,7 +22,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub struct PreprocessorArgs {
     pub cfg: RunConfig,
@@ -56,31 +56,100 @@ pub fn run_preprocessor(args: PreprocessorArgs) -> Result<()> {
     }
 }
 
-/// Collect rollouts into groups; on completion compute advantages and
-/// return (rollout, advantage) pairs ready for packing.
-struct GroupCollector {
-    group_size: usize,
-    normalize: bool,
-    pending: HashMap<u64, Vec<Rollout>>,
+struct PendingGroup {
+    members: Vec<Rollout>,
+    /// first arrival — orders overflow eviction (oldest first)
+    t_first: Instant,
+    /// last arrival — the staleness clock: a group still receiving
+    /// members is alive however long it takes, a group whose missing
+    /// members were ring-evicted stops progressing and goes stale
+    t_last: Instant,
 }
 
+/// Collect rollouts into groups; on completion compute advantages and
+/// return (rollout, advantage) pairs ready for packing.
+///
+/// **Stranded-group eviction:** a group normally completes when all
+/// `group_size` members arrive, but a saturated `DropOldest` ring can
+/// evict some members (typically a killed actor's `Aborted` rollouts)
+/// before the preprocessor sees them — without a guard, the surviving
+/// groupmates would sit in `pending` forever and their work would be
+/// lost. Two bounds force-complete incomplete groups from whatever
+/// members did arrive: a *staleness* timeout measured from the group's
+/// last arrival (so healthy-but-slow groups that keep progressing are
+/// never split) and a hard cap on the pending map (oldest evicted
+/// first). Advantages are computed over the present members only,
+/// exactly as a completed group with filtered aborted members would be.
+/// Members that straggle in *after* their group was force-completed are
+/// dropped (a bounded memory of recently evicted gids prevents them
+/// from re-pending as a fragment group that could never complete).
+pub struct GroupCollector {
+    group_size: usize,
+    normalize: bool,
+    /// force-complete groups with no new member for this long (None = never)
+    timeout: Option<Duration>,
+    /// pending-map cap; beyond it the oldest groups are force-completed
+    /// (0 = unbounded)
+    max_pending: usize,
+    pending: HashMap<u64, PendingGroup>,
+    /// recently force-completed gids (insertion order, bounded) — late
+    /// members of these are discarded instead of re-pending
+    evicted: std::collections::VecDeque<u64>,
+    /// throttle for the O(pending) staleness scan on busy paths
+    last_scan: Instant,
+}
+
+/// How many force-completed gids to remember for late-member discard.
+const EVICTED_MEMORY: usize = 1024;
+
 impl GroupCollector {
-    fn new(cfg: &RunConfig) -> Self {
+    pub fn new(cfg: &RunConfig) -> Self {
+        GroupCollector::with_limits(
+            cfg.group_size,
+            cfg.advantage == AdvantageMode::GroupNormalized,
+            cfg.group_timeout_s,
+            cfg.max_pending_groups,
+        )
+    }
+
+    pub fn with_limits(
+        group_size: usize,
+        normalize: bool,
+        timeout_s: f64,
+        max_pending: usize,
+    ) -> Self {
         GroupCollector {
-            group_size: cfg.group_size,
-            normalize: cfg.advantage == AdvantageMode::GroupNormalized,
+            group_size,
+            normalize,
+            timeout: (timeout_s > 0.0).then(|| Duration::from_secs_f64(timeout_s)),
+            max_pending,
             pending: HashMap::new(),
+            evicted: std::collections::VecDeque::new(),
+            last_scan: Instant::now(),
         }
     }
 
-    fn add(&mut self, r: Rollout, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+    pub fn add(&mut self, r: Rollout, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+        let gid = r.group_id;
+        // a straggler whose group was already force-completed: its
+        // groupmates' advantages are long since computed — re-pending it
+        // would create a fragment group that can never complete
+        if self.evicted.contains(&gid) {
+            hub.add("rollouts_late_after_eviction", 1.0);
+            return Vec::new();
+        }
         // aborted/empty rollouts still count towards group completion but
         // are filtered out of the advantage computation
         if matches!(r.finish, FinishReason::Aborted) || r.gen_tokens.is_empty() {
             hub.add("rollouts_discarded", 1.0);
         }
-        let gid = r.group_id;
-        self.pending.entry(gid).or_default().push(r);
+        let now = Instant::now();
+        let g = self
+            .pending
+            .entry(gid)
+            .or_insert_with(|| PendingGroup { members: Vec::new(), t_first: now, t_last: now });
+        g.t_last = now;
+        g.members.push(r);
         self.maybe_complete(hub, gid)
     }
 
@@ -88,15 +157,22 @@ impl GroupCollector {
         let done = self
             .pending
             .get(&gid)
-            .map(|v| v.len() >= self.group_size)
+            .map(|g| g.members.len() >= self.group_size)
             .unwrap_or(false);
         if !done {
             return Vec::new();
         }
-        let members: Vec<Rollout> = self
-            .pending
-            .remove(&gid)
-            .unwrap()
+        self.complete(hub, gid)
+    }
+
+    /// Remove `gid` unconditionally and compute advantages over whatever
+    /// members arrived (aborted/empty members filtered as usual).
+    fn complete(&mut self, hub: &MetricsHub, gid: u64) -> Vec<(Rollout, f32)> {
+        let Some(g) = self.pending.remove(&gid) else {
+            return Vec::new();
+        };
+        let members: Vec<Rollout> = g
+            .members
             .into_iter()
             .filter(|r| {
                 !r.gen_tokens.is_empty() && !matches!(r.finish, FinishReason::Aborted)
@@ -112,7 +188,72 @@ impl GroupCollector {
         members.into_iter().zip(advs).collect()
     }
 
-    fn n_pending(&self) -> usize {
+    /// Remember a force-completed gid (bounded) so stragglers are
+    /// discarded rather than re-pended as an uncompletable fragment.
+    fn remember_evicted(&mut self, gid: u64) {
+        if self.evicted.len() >= EVICTED_MEMORY {
+            self.evicted.pop_front();
+        }
+        self.evicted.push_back(gid);
+    }
+
+    /// Apply both eviction bounds: force-complete stale groups (no new
+    /// member for `timeout` — an O(pending) scan, call from idle paths),
+    /// then trim to the cap. Returns the salvaged (rollout, advantage)
+    /// pairs, ready for packing.
+    pub fn evict_stale(&mut self, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+        self.last_scan = Instant::now();
+        let mut out = Vec::new();
+        if let Some(to) = self.timeout {
+            let stale: Vec<u64> = self
+                .pending
+                .iter()
+                .filter(|(_, g)| g.t_last.elapsed() >= to)
+                .map(|(&gid, _)| gid)
+                .collect();
+            for gid in stale {
+                hub.add("groups_evicted_stale", 1.0);
+                self.remember_evicted(gid);
+                out.extend(self.complete(hub, gid));
+            }
+        }
+        out.extend(self.evict_overflow(hub));
+        out
+    }
+
+    /// Busy-path variant: always enforces the (cheap) cap, and runs the
+    /// O(pending) staleness scan at most once per quarter-timeout — so a
+    /// sustained rollout stream that never idles the receive loop still
+    /// salvages stranded groups.
+    pub fn evict_stale_throttled(&mut self, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+        if let Some(to) = self.timeout {
+            if self.last_scan.elapsed() >= to / 4 {
+                return self.evict_stale(hub);
+            }
+        }
+        self.evict_overflow(hub)
+    }
+
+    /// Enforce only the pending-map cap, oldest groups first. Cheap when
+    /// under the cap (a single len check) — safe to call per message.
+    pub fn evict_overflow(&mut self, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
+        if self.max_pending == 0 || self.pending.len() <= self.max_pending {
+            return Vec::new();
+        }
+        let excess = self.pending.len() - self.max_pending;
+        let mut by_age: Vec<(u64, Instant)> =
+            self.pending.iter().map(|(&gid, g)| (gid, g.t_first)).collect();
+        by_age.sort_by_key(|&(_, t)| t);
+        let mut out = Vec::new();
+        for &(gid, _) in by_age.iter().take(excess) {
+            hub.add("groups_evicted_overflow", 1.0);
+            self.remember_evicted(gid);
+            out.extend(self.complete(hub, gid));
+        }
+        out
+    }
+
+    pub fn n_pending(&self) -> usize {
         self.pending.len()
     }
 }
@@ -136,14 +277,25 @@ fn run_pipeline(
             break;
         }
         match rollout_rx.recv(Duration::from_millis(100)) {
-            Ok(r) => ready.extend(collector.add(r, &hub)),
+            Ok(r) => {
+                ready.extend(collector.add(r, &hub));
+                // a sustained stream never hits the Timeout arm below, so
+                // stranded-group salvage must also run here (cap check is
+                // cheap; the staleness scan is time-throttled)
+                ready.extend(collector.evict_stale_throttled(&hub));
+            }
             Err(RecvError::Closed) => break,
             Err(RecvError::Timeout) => {
+                // idle: salvage groups stranded by ring eviction of their
+                // missing members (see GroupCollector docs)
+                ready.extend(collector.evict_stale(&hub));
                 // trickle flush: don't let a partial batch starve the trainer
-                if !packer.is_empty() && ready.is_empty() && send(&mut packer, &batch_tx, &hub, false)? {
-                    break;
+                if ready.is_empty() {
+                    if !packer.is_empty() && send(&mut packer, &batch_tx, &hub, false)? {
+                        break;
+                    }
+                    continue;
                 }
-                continue;
             }
         }
         // pack everything that fits; flush when full
@@ -197,9 +349,14 @@ fn run_conventional(
                 return Ok(());
             }
             match rollout_rx.recv(Duration::from_millis(50)) {
-                Ok(r) => buffer.extend(collector.add(r, &hub)),
+                Ok(r) => {
+                    buffer.extend(collector.add(r, &hub));
+                    buffer.extend(collector.evict_stale_throttled(&hub));
+                }
                 Err(RecvError::Closed) => return Ok(()),
-                Err(RecvError::Timeout) => {}
+                Err(RecvError::Timeout) => {
+                    buffer.extend(collector.evict_stale(&hub));
+                }
             }
             // phase flipped to Train once every sequence landed
             if conv.wait_train(Duration::from_millis(0)).is_some()

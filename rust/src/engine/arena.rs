@@ -1,0 +1,149 @@
+//! Reusable input-staging arena for the decode hot loop.
+//!
+//! Before the §Perf pass, `Engine::step` allocated four fresh `Vec`s and
+//! cloned the whole `[B, V]` Gumbel buffer on every step just to build
+//! the per-step input literals. The arena owns those host buffers once,
+//! with fixed shapes, and the step writes them *in place*; the only
+//! per-step copies left are the literal constructions themselves (the
+//! host→device edge, which is irreducible).
+//!
+//! Invariants (property-tested device-free via the vendored stub):
+//! * buffer lengths are fixed at construction and never change;
+//! * slot writes never alias — writing slot `i` leaves slot `j` intact;
+//! * `reset` restores the idle defaults (pos 0, PAD tokens, force mask 1).
+
+use anyhow::Result;
+use xla::Literal;
+
+/// Host-side staging buffers for one decode step, shaped `[B]` (plus the
+/// `[B, V]` Gumbel noise and the scalar temperature).
+#[derive(Debug)]
+pub struct StepArena {
+    b: usize,
+    vocab: usize,
+    pad: i32,
+    /// cache position per slot
+    pub pos: Vec<i32>,
+    /// current token per slot
+    pub cur: Vec<i32>,
+    /// forced next token per slot (prefill-through-decode)
+    pub ftok: Vec<i32>,
+    /// 1.0 = forced (idle/stalled slots force PAD), 0.0 = sample
+    pub fmask: Vec<f32>,
+    /// Gumbel noise, `[B, V]` row-major
+    pub gumbel: Vec<f32>,
+    temp: f32,
+}
+
+/// The step's input literals, in decode-graph operand order
+/// (`pos, cur, gumbel, ftok, fmask, temp` — after params and KV).
+pub struct StepLiterals {
+    pub pos: Literal,
+    pub cur: Literal,
+    pub gumbel: Literal,
+    pub ftok: Literal,
+    pub fmask: Literal,
+    pub temp: Literal,
+}
+
+impl StepArena {
+    pub fn new(b: usize, vocab: usize, pad: i32, temp: f32) -> StepArena {
+        StepArena {
+            b,
+            vocab,
+            pad,
+            pos: vec![0; b],
+            cur: vec![pad; b],
+            ftok: vec![pad; b],
+            fmask: vec![1.0; b],
+            gumbel: vec![0.0; b * vocab],
+            temp,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Restore idle defaults in place (no reallocation). The Gumbel
+    /// buffer is left as-is: it is fully overwritten each step by either
+    /// `fill_gumbel` or `zero_gumbel`.
+    pub fn reset(&mut self) {
+        self.pos.iter_mut().for_each(|x| *x = 0);
+        self.cur.iter_mut().for_each(|x| *x = self.pad);
+        self.ftok.iter_mut().for_each(|x| *x = self.pad);
+        self.fmask.iter_mut().for_each(|x| *x = 1.0);
+    }
+
+    /// Zero the noise buffer (greedy decoding / replay).
+    pub fn zero_gumbel(&mut self) {
+        self.gumbel.iter_mut().for_each(|g| *g = 0.0);
+    }
+
+    /// Write one active slot's inputs. `forced` carries the prompt token
+    /// still being force-fed, or None once the slot is sampling.
+    pub fn set_slot(&mut self, i: usize, pos: usize, cur: i32, forced: Option<i32>) {
+        self.pos[i] = pos as i32;
+        self.cur[i] = cur;
+        match forced {
+            Some(t) => {
+                self.ftok[i] = t;
+                self.fmask[i] = 1.0;
+            }
+            None => {
+                self.ftok[i] = self.pad;
+                self.fmask[i] = 0.0;
+            }
+        }
+    }
+
+    /// Build the step's input literals from the arena buffers. Shapes are
+    /// fixed: `[B]` ×4, `[B, V]`, scalar.
+    pub fn to_literals(&self) -> Result<StepLiterals> {
+        let b = self.b as i64;
+        let v = self.vocab as i64;
+        Ok(StepLiterals {
+            pos: Literal::vec1(&self.pos),
+            cur: Literal::vec1(&self.cur),
+            gumbel: Literal::vec1(&self.gumbel).reshape(&[b, v])?,
+            ftok: Literal::vec1(&self.ftok),
+            fmask: Literal::vec1(&self.fmask),
+            temp: Literal::scalar(self.temp),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_reset() {
+        let mut a = StepArena::new(3, 4, -7, 0.8);
+        a.set_slot(1, 5, 42, None);
+        a.set_slot(2, 2, 9, Some(11));
+        assert_eq!(a.pos, vec![0, 5, 2]);
+        assert_eq!(a.cur, vec![-7, 42, 9]);
+        assert_eq!(a.ftok, vec![-7, -7, 11]);
+        assert_eq!(a.fmask, vec![1.0, 0.0, 1.0]);
+        a.reset();
+        assert_eq!(a.pos, vec![0, 0, 0]);
+        assert_eq!(a.cur, vec![-7, -7, -7]);
+        assert_eq!(a.ftok, vec![-7, -7, -7]);
+        assert_eq!(a.fmask, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn literal_shapes_fixed() {
+        let a = StepArena::new(2, 3, 0, 1.0);
+        let l = a.to_literals().unwrap();
+        assert_eq!(l.pos.array_shape().unwrap().dims(), &[2]);
+        assert_eq!(l.gumbel.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(l.temp.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(l.fmask.to_vec::<f32>().unwrap(), vec![1.0, 1.0]);
+    }
+}

@@ -1,18 +1,21 @@
 //! The engine proper: continuous-batching decode loop over the AOT
 //! decode graph, with in-flight request admission and in-flight weight
-//! updates. See module docs in engine/mod.rs.
+//! updates. See module docs in engine/mod.rs for the hot-path data flow.
 
+use super::arena::StepArena;
 use super::kvcache::BlockAllocator;
 use super::sequence::SeqState;
 use crate::data::task::Problem;
 use crate::model::tokenizer::{EOS_ID, PAD_ID};
 use crate::rl::Rollout;
-use crate::runtime::{HostTensor, Runtime, Variant};
+use crate::runtime::{DeviceVal, HostTensor, Runtime, Variant};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
-use anyhow::{Context, Result};
+use crate::weights::ShadowSet;
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
 use std::rc::Rc;
+use std::time::Instant;
 use xla::{Literal, PjRtBuffer};
 
 #[derive(Debug, Clone)]
@@ -60,6 +63,26 @@ pub struct EngineStats {
     pub recompute_steps: u64,
     pub stall_steps: u64,
     pub finished: u64,
+    // ---- §Perf breakdown (accumulated microseconds) ----
+    /// building + staging the per-step inputs (arena → device)
+    pub stage_us: u64,
+    /// decode-graph dispatch
+    pub execute_us: u64,
+    /// selective output readback (next_tok/chosen_lp, + lp_all when
+    /// capturing distributions)
+    pub readback_us: u64,
+    /// decode-blocking time inside eager `set_weights` calls (the full
+    /// transfer stall the overlapped path eliminates)
+    pub weight_stall_us: u64,
+    /// shadow-staging work done between decode steps by the overlapped
+    /// path (off the stall path by construction)
+    pub weight_stage_us: u64,
+    /// weight swaps that landed via the overlapped (zero-stall) path
+    pub overlapped_commits: u64,
+    /// times the KV cache had to be staged from a host literal (engine
+    /// init, recompute replay, or the tuple-readback fallback); the
+    /// device-resident steady state keeps this at 1 total
+    pub kv_restages: u64,
 }
 
 /// Captured distribution row (Fig 7): sampled token's full log-dist.
@@ -80,15 +103,41 @@ pub struct StepOutcome {
     pub idle: bool,
 }
 
+/// A staged parameter buffer with its source literal kept alive.
+///
+/// Buffer staging is asynchronous on the TFRT CPU client: the source
+/// literal must outlive any in-flight host→device copy. Pairing the two
+/// makes that structural, which is what lets weight staging skip the old
+/// per-buffer blocking readback. The host copy is transient, not pinned:
+/// the first execute that consumes the buffers awaits their readiness,
+/// after which the engine drops the sources (`release_param_sources`) —
+/// so steady state holds no host-side weight copy, same as before.
+struct StagedParam {
+    buf: PjRtBuffer,
+    src: Option<Literal>,
+}
+
+/// Where the KV cache currently lives.
+///
+/// Steady state is `Device`: the previous step's KV output buffer is fed
+/// straight back as the next step's operand — zero host traffic. `Host`
+/// occurs at init, after a recompute replay seeds fresh zeros, and on
+/// builds whose executable returns a single tuple (the readback
+/// fallback); it costs one staging on the next step.
+enum KvState {
+    Device(PjRtBuffer),
+    Host(Literal),
+}
+
 pub struct Engine {
     pub cfg: EngineCfg,
     variant: Variant,
     graph: Rc<crate::runtime::Graph>,
-    /// weights staged once per in-flight update and kept device-resident
-    /// across decode steps (loop-invariant — §Perf)
-    params_bufs: Vec<PjRtBuffer>,
-    version: u64,
-    kv: Literal,
+    /// double-buffered device-resident weights: the active set serves
+    /// decode; incoming versions stage into the shadow set between steps
+    /// and swap atomically at a step boundary (§Perf)
+    params: ShadowSet<StagedParam>,
+    kv: KvState,
     slots: Vec<Option<SeqState>>,
     stalled: Vec<bool>,
     pending: VecDeque<SeqState>,
@@ -99,32 +148,11 @@ pub struct Engine {
     actor_id: usize,
     pub stats: EngineStats,
     pub captured: Vec<DistRow>,
-    gumbel_buf: Vec<f32>,
-}
-
-/// Stage a parameter set, keeping the source literals alive until every
-/// async host->device copy must have landed (we force completion by
-/// reading one element back through a blocking call on the last buffer).
-fn stage_params(
-    graph: &crate::runtime::Graph,
-    params: &[HostTensor],
-) -> Result<Vec<PjRtBuffer>> {
-    let lits = params
-        .iter()
-        .map(|t| t.to_literal())
-        .collect::<Result<Vec<_>>>()?;
-    let bufs = lits
-        .iter()
-        .map(|l| graph.stage(l))
-        .collect::<Result<Vec<_>>>()?;
-    // force every pending host->device copy to completion before the
-    // source literals drop (a blocking readback per buffer; weights are
-    // staged once per in-flight update, so this is off the decode loop)
-    for b in &bufs {
-        let _ = b.to_literal_sync()?;
-    }
-    drop(lits);
-    Ok(bufs)
+    /// reusable per-step input staging buffers (no hot-loop allocation)
+    arena: StepArena,
+    /// true between a weight commit and the first execute that consumes
+    /// the new buffers (see `release_param_sources`)
+    param_sources_pending: bool,
 }
 
 impl Engine {
@@ -138,15 +166,15 @@ impl Engine {
         let variant = rt.manifest.variant(&cfg.variant)?.clone();
         crate::runtime::check_params(&variant, init_params)?;
         let graph = rt.graph(&cfg.variant, "decode")?;
-        let params_bufs = stage_params(&graph, init_params)?;
-        let kv = HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?;
+        let kv = KvState::Host(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?);
         let allocator = match cfg.kv_blocks {
             Some(n) => BlockAllocator::new(n, cfg.block_size),
             None => BlockAllocator::for_slots(variant.gen_batch, variant.max_seq, cfg.block_size),
         };
         let b = variant.gen_batch;
         let v = variant.vocab;
-        Ok(Engine {
+        let arena = StepArena::new(b, v, PAD_ID, cfg.temperature);
+        let mut eng = Engine {
             cfg,
             slots: (0..b).map(|_| None).collect(),
             stalled: vec![false; b],
@@ -158,13 +186,22 @@ impl Engine {
             actor_id,
             stats: EngineStats::default(),
             captured: Vec::new(),
-            gumbel_buf: vec![0.0; b * v],
+            arena,
             variant,
             graph,
-            params_bufs,
-            version: 0,
+            params: ShadowSet::new(),
             kv,
-        })
+            param_sources_pending: false,
+        };
+        // stage the initial parameter set (version 0) — not counted as a
+        // weight update
+        eng.params.begin(0, init_params.len());
+        for t in init_params {
+            eng.stage_tensor_into_shadow(t)?;
+        }
+        eng.params.commit().expect("initial parameter set complete");
+        eng.param_sources_pending = true;
+        Ok(eng)
     }
 
     pub fn variant(&self) -> &Variant {
@@ -172,7 +209,7 @@ impl Engine {
     }
 
     pub fn current_version(&self) -> u64 {
-        self.version
+        self.params.active_version()
     }
 
     pub fn n_active(&self) -> usize {
@@ -190,6 +227,11 @@ impl Engine {
 
     pub fn n_slots(&self) -> usize {
         self.slots.len()
+    }
+
+    /// True while the KV cache is device-resident (steady decode state).
+    pub fn kv_on_device(&self) -> bool {
+        matches!(self.kv, KvState::Device(_))
     }
 
     /// Paper API `/v1/chat/completions` (enqueue form): submit a prompt.
@@ -210,18 +252,144 @@ impl Engine {
         id
     }
 
-    /// Paper API `request_weight_update`: swap weights in-flight.
-    /// KV cache is retained (default) or recomputed (cfg flag, §5.1).
-    pub fn set_weights(&mut self, version: u64, params: &[HostTensor]) -> Result<()> {
-        crate::runtime::check_params(&self.variant, params)?;
-        self.params_bufs = stage_params(&self.graph, params)?;
-        self.version = version;
+    // ---------------- weight updates ----------------
+
+    /// Validate and stage one tensor into the shadow set, pairing the
+    /// buffer with its keep-alive source literal. Returns true when the
+    /// shadow set became complete.
+    fn stage_tensor_into_shadow(&mut self, t: &HostTensor) -> Result<bool> {
+        let idx = self.params.staged();
+        let specs = &self.variant.params;
+        if idx >= specs.len() {
+            bail!("weight update already fully staged ({} tensors)", specs.len());
+        }
+        let spec = &specs[idx];
+        if t.shape() != spec.shape.as_slice() {
+            bail!(
+                "param '{}' shape mismatch: got {:?}, want {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+        let lit = t.to_literal()?;
+        let buf = self.graph.stage(&lit)?;
+        self.params.push(StagedParam { buf, src: Some(lit) })
+    }
+
+    /// Drop the keep-alive source literals once the active buffers have
+    /// been consumed by at least one execute (which awaits their
+    /// readiness, so the async H2D copies are provably complete). Cheap
+    /// no-op after the first post-commit call.
+    fn release_param_sources(&mut self) {
+        if !self.param_sources_pending {
+            return;
+        }
+        for p in self.params.active_mut() {
+            p.src = None;
+        }
+        self.param_sources_pending = false;
+    }
+
+    /// Swap the complete shadow set in and run the post-swap bookkeeping.
+    /// The §5.1 recompute ablation, when enabled, blocks decoding on a
+    /// full replay in *both* swap paths — that time is recorded as
+    /// `weight_stall_us` here so the overlapped path's zero-stall claim
+    /// stays honest about what it does (and does not) eliminate.
+    fn finish_commit(&mut self) -> Result<()> {
+        self.params.commit().expect("finish_commit requires a ready shadow set");
+        self.param_sources_pending = true;
         self.stats.weight_updates += 1;
         if self.cfg.recompute_kv_on_update && self.n_active() > 0 {
+            let t0 = Instant::now();
             self.recompute_kv()?;
+            self.stats.weight_stall_us += t0.elapsed().as_micros() as u64;
         }
         Ok(())
     }
+
+    /// Paper API `request_weight_update`, eager form: stage the whole set
+    /// and swap before returning. Decoding stalls for the full transfer —
+    /// the time lands in `stats.weight_stall_us`. KV cache is retained
+    /// (default) or recomputed (cfg flag, §5.1).
+    pub fn set_weights(&mut self, version: u64, params: &[HostTensor]) -> Result<()> {
+        let t0 = Instant::now();
+        crate::runtime::check_params(&self.variant, params)?;
+        self.params.begin(version, params.len());
+        for t in params {
+            self.stage_tensor_into_shadow(t)?;
+        }
+        // the transfer stall (staging); recompute, if any, is accounted
+        // inside finish_commit
+        self.stats.weight_stall_us += t0.elapsed().as_micros() as u64;
+        self.finish_commit()?;
+        Ok(())
+    }
+
+    /// Overlapped form, step 1: open a shadow set for `version`.
+    /// `n_params` is the size of the incoming set — validated up front so
+    /// a malformed publish errors loudly here (like the eager path's
+    /// `check_params`) instead of leaving a shadow set that can never
+    /// complete. Any partially staged update is discarded.
+    pub fn begin_weight_update(&mut self, version: u64, n_params: usize) -> Result<()> {
+        let want = self.variant.params.len();
+        if n_params != want {
+            bail!("weight update param count mismatch: got {n_params}, manifest says {want}");
+        }
+        self.params.begin(version, want);
+        Ok(())
+    }
+
+    /// Overlapped form, step 2: stage one tensor chunk between decode
+    /// steps. Returns true once the shadow set is complete. The time
+    /// lands in `stats.weight_stage_us` — interleaved with decoding, not
+    /// a stall.
+    pub fn stage_weight_tensor(&mut self, t: &HostTensor) -> Result<bool> {
+        ensure!(
+            self.params.staging(),
+            "no weight update in progress (call begin_weight_update)"
+        );
+        let t0 = Instant::now();
+        let ready = self.stage_tensor_into_shadow(t)?;
+        self.stats.weight_stage_us += t0.elapsed().as_micros() as u64;
+        Ok(ready)
+    }
+
+    /// True when a fully staged shadow set is waiting for `commit_weights`.
+    pub fn weight_update_ready(&self) -> bool {
+        self.params.ready()
+    }
+
+    /// Version currently staging into the shadow set, if any.
+    pub fn weight_staging_version(&self) -> Option<u64> {
+        if self.params.staging() {
+            Some(self.params.staging_version())
+        } else {
+            None
+        }
+    }
+
+    /// Drop an in-progress overlapped update (a newer version appeared).
+    pub fn abort_weight_update(&mut self) {
+        self.params.abort();
+    }
+
+    /// Overlapped form, step 3: atomically swap the staged set in at a
+    /// step boundary. A pointer exchange — the transfer itself
+    /// contributes zero to `weight_stall_us` (the opt-in §5.1 KV
+    /// recompute, which stalls both paths equally, is still recorded).
+    /// Returns the committed version, or None when the shadow set is not
+    /// complete (nothing changes).
+    pub fn commit_weights(&mut self) -> Result<Option<u64>> {
+        if !self.params.ready() {
+            return Ok(None);
+        }
+        self.finish_commit()?;
+        self.stats.overlapped_commits += 1;
+        Ok(Some(self.params.active_version()))
+    }
+
+    // ---------------- decode loop ----------------
 
     /// Admit pending sequences into free slots (in-flight adds).
     fn admit(&mut self) {
@@ -263,73 +431,82 @@ impl Engine {
             }
         }
 
-        // build inputs
-        let mut pos = vec![0i32; b];
-        let mut cur = vec![PAD_ID; b];
-        let mut ftok = vec![PAD_ID; b];
-        let mut fmask = vec![1.0f32; b]; // idle/stalled slots: force PAD
+        // ---- build inputs in the reusable arena (no allocation) ----
+        let t_stage = Instant::now();
+        self.arena.reset();
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
                 if self.stalled[i] {
                     continue;
                 }
-                pos[i] = s.pos as i32;
-                cur[i] = s.cur_token();
-                match s.forced_next() {
-                    Some(t) => {
-                        ftok[i] = t;
-                        fmask[i] = 1.0;
-                    }
-                    None => {
-                        fmask[i] = 0.0;
-                    }
-                }
+                self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next());
             }
         }
         if self.cfg.greedy {
-            self.gumbel_buf.iter_mut().for_each(|g| *g = 0.0);
+            self.arena.zero_gumbel();
         } else {
-            self.rng.fill_gumbel(&mut self.gumbel_buf);
+            self.rng.fill_gumbel(&mut self.arena.gumbel);
         }
 
         // NOTE: buffer staging is asynchronous on the TFRT CPU client —
-        // the source literal must outlive the execute call (the upstream
-        // crate's execute() awaits readiness for the same reason), so the
-        // per-step literals are bound to locals that live past run_buffers.
-        let pos_l = HostTensor::from_i32(&[b], pos).to_literal()?;
-        let cur_l = HostTensor::from_i32(&[b], cur).to_literal()?;
-        let gum_l = HostTensor::from_f32(&[b, vsz], self.gumbel_buf.clone()).to_literal()?;
-        let ftok_l = HostTensor::from_i32(&[b], ftok).to_literal()?;
-        let fmask_l = HostTensor::from_f32(&[b], fmask.clone()).to_literal()?;
-        let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
-        let kv_b = self.graph.stage(&self.kv)?;
-        let pos_b = self.graph.stage(&pos_l)?;
-        let cur_b = self.graph.stage(&cur_l)?;
-        let gum_b = self.graph.stage(&gum_l)?;
-        let ftok_b = self.graph.stage(&ftok_l)?;
-        let fmask_b = self.graph.stage(&fmask_l)?;
-        let temp_b = self.graph.stage(&temp_l)?;
+        // the source literals must outlive the execute call (the upstream
+        // crate's execute() awaits readiness for the same reason), so
+        // `lits` is bound to a local that lives past run_buffers_b.
+        let lits = self.arena.to_literals()?;
+        let pos_b = self.graph.stage(&lits.pos)?;
+        let cur_b = self.graph.stage(&lits.cur)?;
+        let gum_b = self.graph.stage(&lits.gumbel)?;
+        let ftok_b = self.graph.stage(&lits.ftok)?;
+        let fmask_b = self.graph.stage(&lits.fmask)?;
+        let temp_b = self.graph.stage(&lits.temp)?;
+        // steady state feeds the previous step's KV output buffer straight
+        // back; only a host-resident KV (init/recompute/fallback) stages
+        let kv_staged: PjRtBuffer;
+        let kv_ref: &PjRtBuffer = match &self.kv {
+            KvState::Device(buf) => buf,
+            KvState::Host(l) => {
+                self.stats.kv_restages += 1;
+                kv_staged = self.graph.stage(l)?;
+                &kv_staged
+            }
+        };
 
-        let mut inputs: Vec<&PjRtBuffer> = self.params_bufs.iter().collect();
-        inputs.push(&kv_b);
+        let mut inputs: Vec<&PjRtBuffer> = self.params.active().iter().map(|p| &p.buf).collect();
+        let kv_idx = inputs.len();
+        inputs.push(kv_ref);
         inputs.push(&pos_b);
         inputs.push(&cur_b);
         inputs.push(&gum_b);
         inputs.push(&ftok_b);
         inputs.push(&fmask_b);
         inputs.push(&temp_b);
+        self.stats.stage_us += t_stage.elapsed().as_micros() as u64;
 
-        let mut outs = self.graph.run_buffers(&inputs).context("decode step")?;
-        // outputs: next_tok[B], chosen_lp[B], lp_all[B,V], kv', ent[B]
-        let kv_new = outs.swap_remove(3);
-        let next = outs[0].to_vec::<i32>()?;
-        let lps = outs[1].to_vec::<f32>()?;
+        let t_exec = Instant::now();
+        let mut outs = self.graph.run_buffers_b(&inputs, &[kv_idx]).context("decode step")?;
+        self.stats.execute_us += t_exec.elapsed().as_micros() as u64;
+
+        // ---- selective readback ----
+        // outputs: next_tok[B], chosen_lp[B], lp_all[B,V], kv', ent[B].
+        // Only the O(B) outputs cross the boundary each step; lp_all only
+        // under capture_dist, the KV and entropy never.
+        let t_read = Instant::now();
+        let next = outs.read_vec::<i32>(0)?;
+        let lps = outs.read_vec::<f32>(1)?;
         let lp_all = if self.cfg.capture_dist {
-            Some(outs[2].to_vec::<f32>()?)
+            Some(outs.read_vec::<f32>(2)?)
         } else {
             None
         };
-        self.kv = kv_new;
+        self.stats.readback_us += t_read.elapsed().as_micros() as u64;
+        drop(inputs);
+        self.kv = match outs.take(3)? {
+            DeviceVal::Buf(buf) => KvState::Device(buf),
+            DeviceVal::Lit(l) => KvState::Host(l),
+        };
+        // the execute consumed the active param buffers: their keep-alive
+        // host sources are no longer needed
+        self.release_param_sources();
         self.stats.steps += 1;
 
         // advance states, collect finishes
@@ -351,11 +528,17 @@ impl Engine {
                         seq_id: s.seq_id,
                         gen_index: s.gen_len(),
                         logdist: all[i * vsz..(i + 1) * vsz].to_vec(),
-                        version: self.version,
+                        version: self.params.active_version(),
                     });
                 }
             }
-            s.advance(next[i], lps[i], self.version, EOS_ID, self.variant.max_seq);
+            s.advance(
+                next[i],
+                lps[i],
+                self.params.active_version(),
+                EOS_ID,
+                self.variant.max_seq,
+            );
             if s.finished() {
                 let s = self.slots[i].take().unwrap();
                 self.allocator.release(s.seq_id).expect("release admitted seq");
@@ -369,11 +552,13 @@ impl Engine {
     /// Rebuild the KV cache for all active sequences under the current
     /// weights by force-replaying their streams (Fig 7 "KV cache
     /// recomputed" mode). Does not touch sequence state or stats other
-    /// than recompute counters.
+    /// than recompute counters. Cold path: keeps simple literal staging
+    /// for the replay inputs, but hoists the loop-invariant literals and
+    /// reuses the per-iteration index buffers.
     fn recompute_kv(&mut self) -> Result<()> {
         let b = self.variant.gen_batch;
         let vsz = self.variant.vocab;
-        self.kv = HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?;
+        self.kv = KvState::Host(HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?);
         let max_pos = self
             .slots
             .iter()
@@ -381,11 +566,16 @@ impl Engine {
             .map(|s| s.pos)
             .max()
             .unwrap_or(0);
+        // loop-invariant inputs staged once per replay, not per position
         let zero_gum = HostTensor::zeros_f32(&[b, vsz]).to_literal()?;
+        let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
+        let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
         let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
+        let mut pos = vec![0i32; b];
+        let mut cur = vec![PAD_ID; b];
         for p in 0..=max_pos {
-            let mut pos = vec![0i32; b];
-            let mut cur = vec![PAD_ID; b];
+            pos.iter_mut().for_each(|x| *x = 0);
+            cur.iter_mut().for_each(|x| *x = PAD_ID);
             for (i, slot) in self.slots.iter().enumerate() {
                 if let Some(s) = slot {
                     if p <= s.pos {
@@ -394,29 +584,43 @@ impl Engine {
                     }
                 }
             }
-            let pos_l = HostTensor::from_i32(&[b], pos).to_literal()?;
-            let cur_l = HostTensor::from_i32(&[b], cur).to_literal()?;
-            let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
-            let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
-            let kv_b = self.graph.stage(&self.kv)?;
+            let pos_l = Literal::vec1(&pos);
+            let cur_l = Literal::vec1(&cur);
+            let kv_staged: PjRtBuffer;
+            let kv_ref: &PjRtBuffer = match &self.kv {
+                KvState::Device(buf) => buf,
+                KvState::Host(l) => {
+                    self.stats.kv_restages += 1;
+                    kv_staged = self.graph.stage(l)?;
+                    &kv_staged
+                }
+            };
             let pos_b = self.graph.stage(&pos_l)?;
             let cur_b = self.graph.stage(&cur_l)?;
             let gum_b = self.graph.stage(&zero_gum)?;
             let ftok_b = self.graph.stage(&ftok_l)?;
             let fmask_b = self.graph.stage(&fmask_l)?;
             let temp_b = self.graph.stage(&temp_l)?;
-            let mut inputs: Vec<&PjRtBuffer> = self.params_bufs.iter().collect();
-            inputs.push(&kv_b);
+            let mut inputs: Vec<&PjRtBuffer> =
+                self.params.active().iter().map(|p| &p.buf).collect();
+            let kv_idx = inputs.len();
+            inputs.push(kv_ref);
             inputs.push(&pos_b);
             inputs.push(&cur_b);
             inputs.push(&gum_b);
             inputs.push(&ftok_b);
             inputs.push(&fmask_b);
             inputs.push(&temp_b);
-            let mut outs = self.graph.run_buffers(&inputs)?;
-            self.kv = outs.swap_remove(3);
+            let mut outs = self.graph.run_buffers_b(&inputs, &[kv_idx])?;
+            drop(inputs);
+            self.kv = match outs.take(3)? {
+                DeviceVal::Buf(buf) => KvState::Device(buf),
+                DeviceVal::Lit(l) => KvState::Host(l),
+            };
             self.stats.recompute_steps += 1;
         }
+        // replay executes consumed the active param buffers
+        self.release_param_sources();
         self.stats.kv_recomputes += 1;
         Ok(())
     }
@@ -434,6 +638,11 @@ impl Engine {
         }
         for s in self.pending.drain(..) {
             out.push(s.into_rollout(self.actor_id, t));
+        }
+        // clear stale stall flags: a drained slot must not carry its old
+        // occupant's stall state into the next admission cycle
+        for st in self.stalled.iter_mut() {
+            *st = false;
         }
         out
     }

@@ -8,21 +8,55 @@
 //! * **paged KV accounting** — a block allocator in the vLLM style
 //!   ([`kvcache`]) gates admission; the device-side cache itself is a
 //!   dense per-slot tensor (the AOT decode graph's layout);
-//! * **in-flight weight updates** — [`Engine::set_weights`] swaps the
-//!   parameter set between decode steps while *retaining* the KV cache
-//!   (the paper's §5.1 design choice), tagging subsequent tokens with the
-//!   new weight version;
+//! * **in-flight weight updates** — eager ([`Engine::set_weights`]) or
+//!   overlapped ([`Engine::begin_weight_update`] /
+//!   [`Engine::stage_weight_tensor`] / [`Engine::commit_weights`]) swaps
+//!   between decode steps while *retaining* the KV cache (the paper's
+//!   §5.1 design choice), tagging subsequent tokens with the new version;
 //! * **prefill-through-decode** — prompts are force-fed through the same
 //!   decode graph (the force_tok/force_mask inputs), so one compiled
 //!   executable serves the whole request path;
 //! * the paper's three-endpoint service API as a trait ([`api`]).
+//!
+//! # Hot-path data flow (§Perf)
+//!
+//! What lives **on device** across decode steps:
+//!
+//! * the **active parameter buffers** — staged once per weight version
+//!   into a [`crate::weights::ShadowSet`] and reused every step;
+//! * the **KV cache** — the previous step's KV output buffer is fed
+//!   straight back as the next step's operand
+//!   ([`crate::runtime::Graph::run_buffers_b`] keeps outputs
+//!   device-resident when the client untuples results). The KV tensor —
+//!   by far the largest operand — crosses the host boundary only at
+//!   engine init and recompute replays (`stats.kv_restages` counts).
+//!
+//! What crosses the boundary **per step**:
+//!
+//! * *host→device*: the `O(B)` index/force inputs and the `[B, V]`
+//!   Gumbel noise, written in place into a reusable [`arena::StepArena`]
+//!   (no per-step allocation) and staged as fresh literals;
+//! * *device→host*: `next_tok[B]` and `chosen_lp[B]` only — `lp_all` is
+//!   read back solely under `capture_dist`, the KV and entropy outputs
+//!   never (selective readback via [`crate::runtime::ExecOut`]).
+//!
+//! Where the **weight swap** lands: the actor stages incoming tensors
+//! into the shadow buffer set between decode steps
+//! ([`crate::weights::WeightBus::begin_fetch`] chunks), then the swap is
+//! a pointer exchange at a step boundary — `stats.weight_stall_us` stays
+//! at zero for overlapped swaps, vs. the full transfer stall the eager
+//! path records. On builds whose executable returns a single tuple
+//! (no PJRT untupling), every path degrades gracefully to the legacy
+//! stage-and-readback behavior.
 
 pub mod api;
+pub mod arena;
 pub mod engine;
 pub mod kvcache;
 pub mod sequence;
 
 pub use api::{CompletionRequest, GenerationService};
-pub use engine::{Engine, EngineCfg, StepOutcome};
+pub use arena::StepArena;
+pub use engine::{Engine, EngineCfg, EngineStats, StepOutcome};
 pub use kvcache::BlockAllocator;
 pub use sequence::{SeqPhase, SeqState};

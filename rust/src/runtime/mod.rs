@@ -58,6 +58,142 @@ pub struct Graph {
     pub n_inputs: usize,
 }
 
+/// One graph output that may still be device-resident.
+///
+/// The buffer-native execute path ([`Graph::run_buffers_b`]) keeps every
+/// output as a [`PjRtBuffer`] when the PJRT client untuples results; on
+/// builds where the executable returns a single tuple (the aot.py
+/// `return_tuple=True` lowering read back through `to_literal_sync`),
+/// outputs normalize to host [`Literal`]s instead. Callers that thread an
+/// output straight into the next execute (the engine's KV cache) branch on
+/// the variant; callers that only read scalars use [`DeviceVal::read_vec`].
+#[derive(Debug)]
+pub enum DeviceVal {
+    /// still on device — feed it back as an input without a host round-trip
+    Buf(xla::PjRtBuffer),
+    /// host literal (tuple-readback fallback; also the no-PJRT stub path)
+    Lit(Literal),
+}
+
+impl DeviceVal {
+    pub fn is_device(&self) -> bool {
+        matches!(self, DeviceVal::Buf(_))
+    }
+
+    /// Read this output back to the host (D2H for `Buf`, free for `Lit`).
+    pub fn read_vec<T: xla::NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            DeviceVal::Buf(b) => Ok(b.to_literal_sync()?.to_vec::<T>()?),
+            DeviceVal::Lit(l) => Ok(l.to_vec::<T>()?),
+        }
+    }
+}
+
+enum Slot {
+    Val(DeviceVal),
+    Taken,
+}
+
+/// Outputs of a buffer-native execute, with *selective* readback.
+///
+/// Two shapes are normalized behind one API:
+///
+/// * **untupled** — the PJRT client returned one `PjRtBuffer` per graph
+///   output. `read_vec(i)` reads back only output `i`; `take(i)` hands the
+///   buffer over still device-resident. This is the decode hot path: the
+///   KV output never crosses the host boundary.
+/// * **tupled fallback** — the executable returned a single tuple buffer.
+///   The first access reads the tuple back once and splits it into host
+///   literals (exactly what the legacy `run_buffers` did), so the API
+///   still works, just without the device-residency win.
+pub struct ExecOut {
+    slots: Vec<Slot>,
+    untupled: bool,
+}
+
+impl ExecOut {
+    fn from_buffers(row: Vec<xla::PjRtBuffer>) -> ExecOut {
+        let untupled = row.len() > 1;
+        ExecOut {
+            slots: row.into_iter().map(|b| Slot::Val(DeviceVal::Buf(b))).collect(),
+            untupled,
+        }
+    }
+
+    /// Build from host literals (the tuple-fallback shape; also used by
+    /// device-free tests of the selective-readback logic).
+    pub fn from_literals(lits: Vec<Literal>) -> ExecOut {
+        ExecOut {
+            slots: lits.into_iter().map(|l| Slot::Val(DeviceVal::Lit(l))).collect(),
+            untupled: false,
+        }
+    }
+
+    /// Number of addressable outputs *as currently known* — 1 until a
+    /// tupled fallback is split by the first access.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// True when outputs arrived as separate device buffers.
+    pub fn untupled(&self) -> bool {
+        self.untupled
+    }
+
+    /// Normalize a single tuple buffer/literal into per-output literals so
+    /// index `i` is addressable. No-op when already untupled/split.
+    fn ensure_addressable(&mut self, i: usize) -> Result<()> {
+        if i < self.slots.len() && (self.slots.len() > 1 || i != 0) {
+            return Ok(());
+        }
+        if self.slots.len() == 1 {
+            // the lone slot may be the whole output tuple: split lazily
+            let lit = match &self.slots[0] {
+                Slot::Val(DeviceVal::Buf(b)) => b.to_literal_sync()?,
+                Slot::Val(DeviceVal::Lit(l)) => l.clone(),
+                Slot::Taken => bail!("output 0 already taken"),
+            };
+            match lit.to_tuple() {
+                Ok(parts) => {
+                    self.slots = parts.into_iter().map(|l| Slot::Val(DeviceVal::Lit(l))).collect();
+                }
+                Err(_) => {
+                    // genuinely a single array output
+                    self.slots[0] = Slot::Val(DeviceVal::Lit(lit));
+                }
+            }
+        }
+        if i >= self.slots.len() {
+            bail!("output index {i} out of range ({} outputs)", self.slots.len());
+        }
+        Ok(())
+    }
+
+    /// Read output `i` back to the host. In untupled mode this touches
+    /// only that output's buffer.
+    pub fn read_vec<T: xla::NativeType>(&mut self, i: usize) -> Result<Vec<T>> {
+        self.ensure_addressable(i)?;
+        match &self.slots[i] {
+            Slot::Val(v) => v.read_vec::<T>(),
+            Slot::Taken => bail!("output {i} already taken"),
+        }
+    }
+
+    /// Take ownership of output `i` without reading it back (device-
+    /// resident in untupled mode). Each output can be taken once.
+    pub fn take(&mut self, i: usize) -> Result<DeviceVal> {
+        self.ensure_addressable(i)?;
+        match std::mem::replace(&mut self.slots[i], Slot::Taken) {
+            Slot::Val(v) => Ok(v),
+            Slot::Taken => bail!("output {i} already taken"),
+        }
+    }
+}
+
 impl Graph {
     /// Execute with host literals; returns the flattened output tuple.
     /// Accepts owned literals or references (`&[Literal]` / `&[&Literal]`).
@@ -90,6 +226,37 @@ impl Graph {
         let lit = bufs[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True: single tuple literal out.
         Ok(lit.to_tuple()?)
+    }
+
+    /// Buffer-native execute: outputs stay as device buffers when the
+    /// client untuples results (see [`ExecOut`]). This is the decode hot
+    /// path — the caller reads back only the outputs it needs and threads
+    /// device-resident ones (the KV cache) into the next step.
+    ///
+    /// `donated` marks input indices whose buffers the caller will not
+    /// reuse after this call (the KV operand). True PJRT donation is a
+    /// compile-time property (`input_output_alias` in the HLO, which
+    /// aot.py does not emit yet), so today the hook only sanity-checks the
+    /// indices; it exists so call sites already declare aliasing intent
+    /// and the AOT side can turn it on without touching the engine.
+    pub fn run_buffers_b<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+        donated: &[usize],
+    ) -> Result<ExecOut> {
+        for &d in donated {
+            if d >= inputs.len() {
+                bail!("donated index {d} out of range ({} inputs)", inputs.len());
+            }
+        }
+        let mut rows = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing graph '{}'", self.name))?;
+        if rows.is_empty() {
+            bail!("graph '{}' returned no output rows", self.name);
+        }
+        Ok(ExecOut::from_buffers(rows.swap_remove(0)))
     }
 
     /// Stage a literal into a device buffer on this graph's client.
@@ -195,6 +362,63 @@ pub fn check_params(v: &Variant, params: &[HostTensor]) -> Result<()> {
 }
 
 #[cfg(test)]
+mod exec_out_tests {
+    use super::*;
+
+    fn tuple_out() -> ExecOut {
+        // shape of the decode graph's fallback: one tuple literal
+        let tup = Literal::tuple(vec![
+            Literal::vec1(&[7i32, 8]),
+            Literal::vec1(&[-0.5f32, -0.25]),
+            Literal::vec1(&[0.0f32; 4]),
+            Literal::vec1(&[1.0f32; 8]),
+            Literal::vec1(&[0.1f32, 0.2]),
+        ]);
+        ExecOut::from_literals(vec![tup])
+    }
+
+    #[test]
+    fn tuple_fallback_splits_lazily() {
+        let mut out = tuple_out();
+        assert_eq!(out.len(), 1, "unsplit until first access");
+        assert!(!out.untupled());
+        assert_eq!(out.read_vec::<i32>(0).unwrap(), vec![7, 8]);
+        assert_eq!(out.len(), 5, "first access splits the tuple");
+        assert_eq!(out.read_vec::<f32>(1).unwrap(), vec![-0.5, -0.25]);
+    }
+
+    #[test]
+    fn take_hands_over_each_output_once() {
+        let mut out = tuple_out();
+        let kv = out.take(3).unwrap();
+        assert!(!kv.is_device(), "fallback outputs are host literals");
+        assert_eq!(kv.read_vec::<f32>().unwrap().len(), 8);
+        assert!(out.take(3).is_err(), "second take must fail");
+        // untaken outputs remain readable
+        assert_eq!(out.read_vec::<i32>(0).unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn out_of_range_index_errors() {
+        let mut out = tuple_out();
+        assert!(out.read_vec::<i32>(5).is_err());
+        let mut single = ExecOut::from_literals(vec![Literal::vec1(&[1i32])]);
+        assert_eq!(single.read_vec::<i32>(0).unwrap(), vec![1]);
+        assert!(single.read_vec::<i32>(1).is_err(), "single array output is not a tuple");
+    }
+
+    #[test]
+    fn pre_split_literals_address_directly() {
+        let mut out = ExecOut::from_literals(vec![
+            Literal::vec1(&[1i32]),
+            Literal::vec1(&[2.0f32]),
+        ]);
+        assert_eq!(out.read_vec::<f32>(1).unwrap(), vec![2.0]);
+        assert_eq!(out.read_vec::<i32>(0).unwrap(), vec![1]);
+    }
+}
+
+#[cfg(test)]
 mod perf_probe {
     use super::*;
 
@@ -235,6 +459,73 @@ mod perf_probe {
                 (t2 - t1).as_secs_f64() * 1e3,
                 (t3 - t2).as_secs_f64() * 1e3,
                 outs.len()
+            );
+        }
+    }
+
+    /// Device-resident counterpart of `decode_breakdown_base`: weights and
+    /// KV stay on device, only next_tok/chosen_lp are read back. The delta
+    /// between the two probes is the §Perf number recorded in ROADMAP.md.
+    #[test]
+    #[ignore]
+    fn decode_breakdown_resident() {
+        let mut rt = Runtime::new().unwrap();
+        let v = rt.manifest.variant("base").unwrap().clone();
+        let g = rt.graph("base", "decode").unwrap();
+        let params = rt.init_params("base", 1).unwrap();
+        let b = v.gen_batch;
+
+        // loop-invariant: parameter buffers staged once
+        let param_lits: Vec<Literal> = params.iter().map(|t| t.to_literal().unwrap()).collect();
+        let param_bufs: Vec<xla::PjRtBuffer> =
+            param_lits.iter().map(|l| g.stage(l).unwrap()).collect();
+        let kv_lit = HostTensor::zeros_f32(&v.kv_shape()).to_literal().unwrap();
+        let mut kv = DeviceVal::Buf(g.stage(&kv_lit).unwrap());
+
+        // per-step literals (small: O(B) + gumbel)
+        let pos_l = HostTensor::zeros_i32(&[b]).to_literal().unwrap();
+        let cur_l = HostTensor::from_i32(&[b], vec![1; b]).to_literal().unwrap();
+        let gum_l = HostTensor::zeros_f32(&[b, v.vocab]).to_literal().unwrap();
+        let ftok_l = HostTensor::zeros_i32(&[b]).to_literal().unwrap();
+        let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal().unwrap();
+        let temp_l = HostTensor::scalar_f32(1.0).to_literal().unwrap();
+
+        for round in 0..5 {
+            let t0 = std::time::Instant::now();
+            let kv_restage: xla::PjRtBuffer;
+            let kv_buf = match &kv {
+                DeviceVal::Buf(bf) => bf,
+                DeviceVal::Lit(l) => {
+                    kv_restage = g.stage(l).unwrap();
+                    &kv_restage
+                }
+            };
+            let pos_b = g.stage(&pos_l).unwrap();
+            let cur_b = g.stage(&cur_l).unwrap();
+            let gum_b = g.stage(&gum_l).unwrap();
+            let ftok_b = g.stage(&ftok_l).unwrap();
+            let fmask_b = g.stage(&fmask_l).unwrap();
+            let temp_b = g.stage(&temp_l).unwrap();
+            let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+            let kv_idx = inputs.len();
+            inputs.extend([kv_buf, &pos_b, &cur_b, &gum_b, &ftok_b, &fmask_b, &temp_b]);
+            let t1 = std::time::Instant::now();
+            let mut out = g.run_buffers_b(&inputs, &[kv_idx]).unwrap();
+            let t2 = std::time::Instant::now();
+            let next = out.read_vec::<i32>(0).unwrap();
+            let lps = out.read_vec::<f32>(1).unwrap();
+            let t3 = std::time::Instant::now();
+            drop(inputs);
+            kv = out.take(3).unwrap();
+            eprintln!(
+                "round {round}: stage {:.1}ms execute {:.1}ms selective-readback {:.1}ms \
+                 (kv on device: {}, {} next, {} lps)",
+                (t1 - t0).as_secs_f64() * 1e3,
+                (t2 - t1).as_secs_f64() * 1e3,
+                (t3 - t2).as_secs_f64() * 1e3,
+                kv.is_device(),
+                next.len(),
+                lps.len(),
             );
         }
     }

@@ -4,13 +4,24 @@
 //! Models the paper's NCCL-broadcast process group with shared-memory
 //! semantics: the trainer publishes a new *versioned* parameter set after
 //! every optimizer step (`request_weight_update` in the paper's API);
-//! each generation engine polls between decode steps, and on seeing a
-//! newer version briefly "pauses" (an optional simulated transfer delay
-//! models the real broadcast time), swaps weights, and resumes decoding
-//! the in-progress sequences — KV cache retained.
+//! each generation engine polls between decode steps and absorbs the new
+//! version — KV cache retained — by one of two paths:
+//!
+//! * **eager** ([`WeightBus::fetch_if_newer`] + `Engine::set_weights`):
+//!   decoding stalls while the whole set is staged — the pre-overlap
+//!   behavior, kept for the ablation baseline;
+//! * **overlapped** ([`WeightBus::begin_fetch`] → [`WeightFetch`] chunks
+//!   staged into a [`ShadowSet`] between decode steps, then an atomic
+//!   swap at a step boundary): the transfer rides along with decoding and
+//!   the swap itself is a pointer exchange — `minimal interruption`, the
+//!   paper's in-flight update as actually deployed.
 //!
 //! Versions are monotonically increasing optimizer-step counters; they
 //! are the clock the entire lag analysis (Fig 3a/6a) is measured against.
+
+pub mod shadow;
+
+pub use shadow::ShadowSet;
 
 use crate::runtime::HostTensor;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -116,12 +127,85 @@ impl WeightBus {
         }
     }
 
+    /// Incremental variant of [`fetch_if_newer`](Self::fetch_if_newer):
+    /// hand back a cursor that yields the new version one *tensor chunk*
+    /// at a time, so the receiver can interleave staging with decode
+    /// steps (the overlapped in-flight update path). Bytes are accounted
+    /// per chunk as they are pulled; a fully drained fetch costs exactly
+    /// what an eager fetch would.
+    pub fn begin_fetch(&self, have: u64) -> Option<WeightFetch> {
+        if self.latest_version() <= have {
+            return None;
+        }
+        let g = self.inner.read().unwrap();
+        let cur = g.current.clone()?;
+        if cur.version > have {
+            Some(WeightFetch {
+                version: cur.version,
+                params: cur.params,
+                next: 0,
+                bytes: self.bytes_fetched.clone(),
+            })
+        } else {
+            None
+        }
+    }
+
     pub fn bytes_fetched(&self) -> u64 {
         self.bytes_fetched.load(Ordering::Relaxed)
     }
 
     pub fn publishes(&self) -> u64 {
         self.publishes.load(Ordering::Relaxed)
+    }
+}
+
+/// In-progress incremental weight fetch (see [`WeightBus::begin_fetch`]).
+///
+/// Chunk granularity is one parameter tensor — the same unit the engine
+/// stages into its shadow buffer set, and the natural sub-message of the
+/// paper's NCCL broadcast (per-tensor collectives). Dropping a fetch
+/// mid-way (a newer version appeared) simply stops the byte accounting at
+/// the chunks actually pulled.
+#[derive(Debug)]
+pub struct WeightFetch {
+    version: u64,
+    params: Arc<Vec<HostTensor>>,
+    next: usize,
+    bytes: Arc<AtomicU64>,
+}
+
+impl WeightFetch {
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.params.len() - self.next
+    }
+
+    pub fn done(&self) -> bool {
+        self.next >= self.params.len()
+    }
+
+    /// Pull the next tensor chunk: `(param index, tensor)`. Accounts the
+    /// chunk's bytes on the bus. None once the fetch is drained.
+    pub fn next_chunk(&mut self) -> Option<(usize, &HostTensor)> {
+        let t = self.params.get(self.next)?;
+        let i = self.next;
+        self.next += 1;
+        self.bytes.fetch_add(t.nbytes() as u64, Ordering::Relaxed);
+        Some((i, t))
+    }
+
+    /// The full parameter set behind this fetch (the eager-path escape
+    /// hatch; does not advance the cursor or account bytes).
+    pub fn params(&self) -> &Arc<Vec<HostTensor>> {
+        &self.params
     }
 }
 
@@ -187,6 +271,65 @@ mod tests {
         bus.publish(1, params(1.0));
         let _ = bus.fetch_if_newer(0).unwrap();
         assert_eq!(bus.bytes_fetched(), 8);
+    }
+
+    #[test]
+    fn chunked_fetch_yields_tensors_in_order() {
+        let bus = WeightBus::new();
+        assert!(bus.begin_fetch(0).is_none(), "nothing published yet");
+        bus.publish(
+            3,
+            Arc::new(vec![
+                HostTensor::from_f32(&[2], vec![1.0, 2.0]),
+                HostTensor::from_i32(&[3], vec![4, 5, 6]),
+            ]),
+        );
+        assert!(bus.begin_fetch(3).is_none(), "already up to date");
+        let mut f = bus.begin_fetch(0).unwrap();
+        assert_eq!(f.version(), 3);
+        assert_eq!(f.n_params(), 2);
+        assert_eq!(f.remaining(), 2);
+        let (i, t) = f.next_chunk().unwrap();
+        assert_eq!((i, t.nbytes()), (0, 8));
+        assert!(!f.done());
+        let (i, t) = f.next_chunk().unwrap();
+        assert_eq!((i, t.nbytes()), (1, 12));
+        assert!(f.done());
+        assert!(f.next_chunk().is_none());
+    }
+
+    #[test]
+    fn chunked_fetch_bytes_match_eager_fetch() {
+        let bus = WeightBus::new();
+        bus.publish(
+            1,
+            Arc::new(vec![
+                HostTensor::zeros_f32(&[4]),
+                HostTensor::zeros_f32(&[8]),
+            ]),
+        );
+        let mut f = bus.begin_fetch(0).unwrap();
+        assert_eq!(bus.bytes_fetched(), 0, "begin_fetch itself transfers nothing");
+        while f.next_chunk().is_some() {}
+        let chunked = bus.bytes_fetched();
+        let _ = bus.fetch_if_newer(0).unwrap();
+        assert_eq!(bus.bytes_fetched(), chunked * 2, "drained fetch costs the same");
+    }
+
+    #[test]
+    fn abandoned_fetch_accounts_only_pulled_chunks() {
+        let bus = WeightBus::new();
+        bus.publish(
+            1,
+            Arc::new(vec![
+                HostTensor::zeros_f32(&[4]),
+                HostTensor::zeros_f32(&[8]),
+            ]),
+        );
+        let mut f = bus.begin_fetch(0).unwrap();
+        let _ = f.next_chunk().unwrap(); // 16 bytes
+        drop(f); // newer version appeared: transfer abandoned
+        assert_eq!(bus.bytes_fetched(), 16);
     }
 
     #[test]

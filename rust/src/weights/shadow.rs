@@ -1,0 +1,187 @@
+//! Double-buffered parameter-set bookkeeping for overlapped in-flight
+//! weight updates.
+//!
+//! The engine keeps two buffer sets: the **active** set the decode graph
+//! executes against, and a **shadow** set the incoming weight version is
+//! staged into, a few tensors at a time, *between* decode steps. When the
+//! shadow set is complete it is swapped in atomically at a step boundary
+//! — decoding never observes a half-staged parameter set, and never
+//! stalls for the whole transfer the way the eager path does.
+//!
+//! `ShadowSet` is generic over the buffer type so the swap/atomicity
+//! logic is testable device-free (property tests use plain integers; the
+//! engine instantiates it with staged PJRT buffers).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct ShadowSet<B> {
+    active: Vec<B>,
+    active_version: u64,
+    shadow: Vec<B>,
+    shadow_version: u64,
+    /// number of buffers a complete set must hold
+    expect: usize,
+    staging: bool,
+}
+
+impl<B> Default for ShadowSet<B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<B> ShadowSet<B> {
+    /// Empty set at version 0 (nothing staged, nothing active).
+    pub fn new() -> Self {
+        ShadowSet {
+            active: Vec::new(),
+            active_version: 0,
+            shadow: Vec::new(),
+            shadow_version: 0,
+            expect: 0,
+            staging: false,
+        }
+    }
+
+    /// Begin staging `version`, expecting `expect` buffers. Any partially
+    /// staged shadow set is discarded (the jump-to-latest semantics: a
+    /// newer publish obsoletes an in-flight transfer).
+    pub fn begin(&mut self, version: u64, expect: usize) {
+        self.shadow.clear();
+        self.shadow_version = version;
+        self.expect = expect;
+        self.staging = true;
+    }
+
+    /// Stage the next buffer. Returns true when the shadow set is complete
+    /// and ready to commit.
+    pub fn push(&mut self, buf: B) -> Result<bool> {
+        if !self.staging {
+            bail!("ShadowSet::push without begin");
+        }
+        if self.shadow.len() >= self.expect {
+            bail!("ShadowSet::push past expected size {}", self.expect);
+        }
+        self.shadow.push(buf);
+        Ok(self.ready())
+    }
+
+    /// Buffers staged so far (also the index of the next buffer to stage).
+    pub fn staged(&self) -> usize {
+        self.shadow.len()
+    }
+
+    pub fn staging(&self) -> bool {
+        self.staging
+    }
+
+    /// True when a complete shadow set is waiting for a commit.
+    pub fn ready(&self) -> bool {
+        self.staging && self.shadow.len() == self.expect
+    }
+
+    /// The version currently being staged (meaningful while `staging`).
+    pub fn staging_version(&self) -> u64 {
+        self.shadow_version
+    }
+
+    /// Discard any in-progress staging; the active set is untouched.
+    pub fn abort(&mut self) {
+        self.shadow.clear();
+        self.staging = false;
+    }
+
+    /// Atomically swap the complete shadow set in as active. Returns the
+    /// new active version, or None (and changes nothing) when the shadow
+    /// set is not complete — a commit can never expose a partial set.
+    pub fn commit(&mut self) -> Option<u64> {
+        if !self.ready() {
+            return None;
+        }
+        std::mem::swap(&mut self.active, &mut self.shadow);
+        self.active_version = self.shadow_version;
+        self.shadow.clear();
+        self.staging = false;
+        Some(self.active_version)
+    }
+
+    /// The live parameter set the decode graph executes against.
+    pub fn active(&self) -> &[B] {
+        &self.active
+    }
+
+    /// Mutable access to the active buffers, for in-place housekeeping on
+    /// committed entries (e.g. dropping keep-alive staging sources once
+    /// the copies are provably complete). The set itself — length,
+    /// version, membership — is still only changed by `commit`.
+    pub fn active_mut(&mut self) -> &mut [B] {
+        &mut self.active
+    }
+
+    pub fn active_version(&self) -> u64 {
+        self.active_version
+    }
+
+    /// Most recently staged (not yet committed) buffer, if any.
+    pub fn last_staged(&self) -> Option<&B> {
+        self.shadow.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_only_when_complete() {
+        let mut s: ShadowSet<u32> = ShadowSet::new();
+        s.begin(5, 3);
+        assert!(!s.push(10).unwrap());
+        assert!(!s.push(11).unwrap());
+        assert_eq!(s.commit(), None, "partial set must not commit");
+        assert_eq!(s.active(), &[] as &[u32], "active untouched by partial staging");
+        assert!(s.push(12).unwrap());
+        assert_eq!(s.commit(), Some(5));
+        assert_eq!(s.active(), &[10, 11, 12]);
+        assert_eq!(s.active_version(), 5);
+        assert!(!s.staging());
+    }
+
+    #[test]
+    fn begin_discards_partial_shadow() {
+        let mut s: ShadowSet<u32> = ShadowSet::new();
+        s.begin(1, 2);
+        s.push(1).unwrap();
+        // newer version published mid-stage: jump to latest
+        s.begin(2, 2);
+        assert_eq!(s.staged(), 0);
+        s.push(21).unwrap();
+        s.push(22).unwrap();
+        assert_eq!(s.commit(), Some(2));
+        assert_eq!(s.active(), &[21, 22]);
+    }
+
+    #[test]
+    fn push_guards() {
+        let mut s: ShadowSet<u32> = ShadowSet::new();
+        assert!(s.push(1).is_err(), "push before begin");
+        s.begin(1, 1);
+        s.push(1).unwrap();
+        assert!(s.push(2).is_err(), "push past expected size");
+    }
+
+    #[test]
+    fn abort_keeps_active() {
+        let mut s: ShadowSet<u32> = ShadowSet::new();
+        s.begin(1, 1);
+        s.push(7).unwrap();
+        s.commit().unwrap();
+        s.begin(2, 1);
+        s.push(8).unwrap();
+        s.abort();
+        assert_eq!(s.commit(), None);
+        assert_eq!(s.active(), &[7]);
+        assert_eq!(s.active_version(), 1);
+    }
+}

@@ -207,6 +207,161 @@ fn greedy_decoding_is_deterministic_at_zero_temperature() {
     assert_eq!(mk(), mk(), "same seeds => same generations");
 }
 
+/// In-flight weight-swap equivalence: the overlapped path (shadow
+/// staging spread across decode steps + commit at a step boundary) must
+/// produce *identical* rollouts — same tokens, same per-token version
+/// tags — as the eager path swapping at the same boundary. This is the
+/// behavior-preservation proof for the zero-stall swap semantics.
+#[test]
+fn overlapped_swap_matches_eager_swap() {
+    if !runtime_or_skip("overlapped_swap_matches_eager_swap") {
+        return;
+    }
+    let run = |overlapped: bool| {
+        let mut cfg = EngineCfg::new("tiny");
+        cfg.max_new_tokens = 16;
+        let mut rt = Runtime::new().expect("runtime");
+        let params0 = rt.init_params("tiny", 7).unwrap();
+        let mut eng = Engine::new(&mut rt, cfg, &params0, 0, Rng::new(1)).unwrap();
+        submit_n(&mut eng, 4);
+        let params1 = rt.init_params("tiny", 8).unwrap();
+        // six steps under v0; the swap lands at the boundary after them
+        let mut staged = 0usize;
+        for step in 0..6 {
+            if overlapped {
+                if step == 2 {
+                    eng.begin_weight_update(1, params1.len()).unwrap();
+                }
+                if step >= 2 {
+                    // stage a couple of tensor chunks between steps
+                    for _ in 0..2 {
+                        if staged < params1.len() {
+                            eng.stage_weight_tensor(&params1[staged]).unwrap();
+                            staged += 1;
+                        }
+                    }
+                }
+            }
+            eng.step().unwrap();
+        }
+        if overlapped {
+            while staged < params1.len() {
+                eng.stage_weight_tensor(&params1[staged]).unwrap();
+                staged += 1;
+            }
+            assert!(eng.weight_update_ready());
+            let v = eng.commit_weights().unwrap();
+            assert_eq!(v, Some(1));
+        } else {
+            eng.set_weights(1, &params1).unwrap();
+        }
+        let mut rollouts = Vec::new();
+        for _ in 0..600 {
+            rollouts.extend(eng.step().unwrap().finished);
+            if rollouts.len() >= 4 {
+                break;
+            }
+        }
+        assert_eq!(rollouts.len(), 4);
+        rollouts.sort_by_key(|r| r.seq_id);
+        let tokens: Vec<Vec<i32>> = rollouts.iter().map(|r| r.gen_tokens.clone()).collect();
+        let versions: Vec<Vec<u64>> =
+            rollouts.iter().map(|r| r.token_version.clone()).collect();
+        (tokens, versions, eng.stats.clone())
+    };
+    let (tok_eager, ver_eager, stats_eager) = run(false);
+    let (tok_over, ver_over, stats_over) = run(true);
+    assert_eq!(tok_eager, tok_over, "identical token streams");
+    assert_eq!(ver_eager, ver_over, "identical per-token version tags");
+    assert_eq!(stats_eager.weight_updates, 1);
+    assert_eq!(stats_over.weight_updates, 1);
+    assert_eq!(stats_eager.overlapped_commits, 0);
+    assert_eq!(stats_over.overlapped_commits, 1);
+    assert_eq!(
+        stats_over.weight_stall_us, 0,
+        "overlapped swaps must record zero decode stall"
+    );
+}
+
+/// Aborting a partially staged update must leave the active weights (and
+/// generation behavior) untouched; a jump-to-latest re-begin must land
+/// the newest version only.
+#[test]
+fn aborted_and_superseded_staging_leave_weights_intact() {
+    if !runtime_or_skip("aborted_and_superseded_staging_leave_weights_intact") {
+        return;
+    }
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 8;
+    let (mut rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 2);
+    for _ in 0..4 {
+        eng.step().unwrap();
+    }
+    let params1 = rt.init_params("tiny", 8).unwrap();
+    assert!(
+        eng.begin_weight_update(1, params1.len() + 1).is_err(),
+        "wrong param count must fail loudly at begin"
+    );
+    eng.begin_weight_update(1, params1.len()).unwrap();
+    eng.stage_weight_tensor(&params1[0]).unwrap();
+    assert_eq!(eng.commit_weights().unwrap(), None, "partial set must not commit");
+    assert_eq!(eng.current_version(), 0);
+    eng.abort_weight_update();
+    assert!(!eng.weight_update_ready());
+    assert_eq!(eng.stats.weight_updates, 0);
+    // supersede: begin v2 discards v1's partial staging
+    eng.begin_weight_update(1, params1.len()).unwrap();
+    eng.stage_weight_tensor(&params1[0]).unwrap();
+    eng.begin_weight_update(2, params1.len()).unwrap();
+    for t in &params1 {
+        eng.stage_weight_tensor(t).unwrap();
+    }
+    assert_eq!(eng.commit_weights().unwrap(), Some(2));
+    assert_eq!(eng.current_version(), 2);
+    assert_eq!(eng.stats.weight_updates, 1);
+    // engine still generates
+    let mut done = 0;
+    for _ in 0..300 {
+        done += eng.step().unwrap().finished.len();
+        if done >= 2 {
+            break;
+        }
+    }
+    assert!(done >= 2);
+}
+
+/// Steady-state decode keeps the KV cache off the host: once the engine
+/// is warm, `kv_restages` stays frozen when outputs are untupled (real
+/// PJRT), and degrades gracefully to once-per-step on tuple-fallback
+/// builds.
+#[test]
+fn kv_cache_stays_device_resident_in_steady_state() {
+    if !runtime_or_skip("kv_cache_stays_device_resident_in_steady_state") {
+        return;
+    }
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 64;
+    let (_rt, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 4);
+    for _ in 0..4 {
+        eng.step().unwrap();
+    }
+    let restages_warm = eng.stats.kv_restages;
+    let steps_warm = eng.stats.steps;
+    for _ in 0..16 {
+        eng.step().unwrap();
+    }
+    let delta_restages = eng.stats.kv_restages - restages_warm;
+    let delta_steps = eng.stats.steps - steps_warm;
+    if eng.kv_on_device() {
+        assert_eq!(delta_restages, 0, "device-resident KV must not restage");
+    } else {
+        assert_eq!(delta_restages, delta_steps, "tuple fallback restages per step");
+    }
+    assert!(eng.stats.execute_us > 0, "stats breakdown must accumulate");
+}
+
 #[test]
 fn drain_aborts_in_flight() {
     if !runtime_or_skip("drain_aborts_in_flight") {

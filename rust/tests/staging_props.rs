@@ -1,0 +1,175 @@
+//! Device-free property tests for the decode hot path's staging
+//! machinery (runs everywhere, including against the vendored no-PJRT
+//! `xla` stub):
+//!
+//! * [`StepArena`] — the reusable input-staging arena: slot writes never
+//!   alias across slots, buffer shapes are fixed for the arena's life,
+//!   and `reset` restores the idle defaults;
+//! * [`ShadowSet`] — the double-buffered weight set: the active set is
+//!   only ever replaced by a *complete* shadow set, atomically, at a
+//!   commit; partial staging, aborts, and version jumps never perturb it.
+
+use pipeline_rl::engine::StepArena;
+use pipeline_rl::testkit::check;
+use pipeline_rl::weights::ShadowSet;
+
+const PAD: i32 = 0;
+
+#[test]
+fn arena_slot_writes_never_alias() {
+    check("arena slot writes never alias", 64, 0xA1, 16, |c| {
+        let b = c.usize_in(1, 12);
+        let v = c.usize_in(1, 8);
+        let mut arena = StepArena::new(b, v, PAD, 1.0);
+        // shadow model: independent per-slot vectors
+        let mut pos = vec![0i32; b];
+        let mut cur = vec![PAD; b];
+        let mut ftok = vec![PAD; b];
+        let mut fmask = vec![1.0f32; b];
+        for _ in 0..c.usize_in(1, 48) {
+            let i = c.usize_in(0, b - 1);
+            let p = c.usize_in(0, 500);
+            let tok = c.usize_in(0, 63) as i32;
+            let forced = if c.rng.f32() < 0.5 { Some(tok + 1) } else { None };
+            arena.set_slot(i, p, tok, forced);
+            pos[i] = p as i32;
+            cur[i] = tok;
+            match forced {
+                Some(t) => {
+                    ftok[i] = t;
+                    fmask[i] = 1.0;
+                }
+                None => {
+                    ftok[i] = PAD;
+                    fmask[i] = 0.0;
+                }
+            }
+        }
+        if arena.pos != pos || arena.cur != cur || arena.ftok != ftok || arena.fmask != fmask {
+            return Err(format!(
+                "slot write leaked across slots: arena ({:?} {:?} {:?} {:?}) vs model \
+                 ({pos:?} {cur:?} {ftok:?} {fmask:?})",
+                arena.pos, arena.cur, arena.ftok, arena.fmask
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_shapes_fixed_and_reset_restores_defaults() {
+    check("arena shapes fixed, reset restores", 48, 0xA2, 16, |c| {
+        let b = c.usize_in(1, 10);
+        let v = c.usize_in(1, 6);
+        let mut arena = StepArena::new(b, v, PAD, 0.7);
+        for _ in 0..c.usize_in(0, 20) {
+            let i = c.usize_in(0, b - 1);
+            arena.set_slot(i, c.usize_in(0, 99), 3, None);
+        }
+        for g in arena.gumbel.iter_mut() {
+            *g = c.rng.f32();
+        }
+        let lits = arena.to_literals().map_err(|e| e.to_string())?;
+        let pos_shape = lits.pos.array_shape().map_err(|e| e.to_string())?;
+        if pos_shape.dims() != &[b as i64] {
+            return Err(format!("pos shape drifted: {:?}", pos_shape.dims()));
+        }
+        let gum_shape = lits.gumbel.array_shape().map_err(|e| e.to_string())?;
+        if gum_shape.dims() != &[b as i64, v as i64] {
+            return Err(format!("gumbel shape drifted: {:?}", gum_shape.dims()));
+        }
+        // buffer lengths never change
+        if arena.pos.len() != b || arena.gumbel.len() != b * v {
+            return Err("arena buffer length changed".into());
+        }
+        arena.reset();
+        if arena.pos != vec![0i32; b]
+            || arena.cur != vec![PAD; b]
+            || arena.ftok != vec![PAD; b]
+            || arena.fmask != vec![1.0f32; b]
+        {
+            return Err("reset did not restore idle defaults".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shadow_set_swap_is_atomic_at_boundaries() {
+    check("shadow swap atomic", 96, 0xB2, 32, |c| {
+        let mut s: ShadowSet<u64> = ShadowSet::new();
+        // shadow model of the invariant-relevant state
+        let mut active: Vec<u64> = Vec::new();
+        let mut active_version = 0u64;
+        let mut staged: Vec<u64> = Vec::new();
+        let mut staging = false;
+        let mut expect = 0usize;
+        let mut version = 0u64;
+        let mut next_val = 0u64;
+        for _ in 0..c.usize_in(1, 64) {
+            match c.usize_in(0, 3) {
+                0 => {
+                    // begin: a new version jumps past the current one and
+                    // discards any partial shadow
+                    version += 1 + c.usize_in(0, 3) as u64;
+                    expect = c.usize_in(1, 6);
+                    s.begin(version, expect);
+                    staged.clear();
+                    staging = true;
+                }
+                1 => {
+                    if staging && staged.len() < expect {
+                        next_val += 1;
+                        let ready = s.push(next_val).map_err(|e| e.to_string())?;
+                        staged.push(next_val);
+                        if ready != (staged.len() == expect) {
+                            return Err("push readiness mismatch".into());
+                        }
+                    } else if s.push(999).is_ok() {
+                        return Err("push must fail outside an open shadow set".into());
+                    }
+                }
+                2 => {
+                    let should_commit = staging && staged.len() == expect;
+                    match s.commit() {
+                        Some(v) => {
+                            if !should_commit {
+                                return Err("committed a partial shadow set".into());
+                            }
+                            if v != version {
+                                return Err(format!("committed version {v}, want {version}"));
+                            }
+                            active = staged.clone();
+                            active_version = version;
+                            staged.clear();
+                            staging = false;
+                        }
+                        None => {
+                            if should_commit {
+                                return Err("refused to commit a complete set".into());
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    s.abort();
+                    staged.clear();
+                    staging = false;
+                }
+            }
+            // the invariant: the active set only ever changes via a
+            // complete commit
+            if s.active() != active.as_slice() {
+                return Err(format!(
+                    "active set perturbed outside commit: {:?} vs {:?}",
+                    s.active(),
+                    active
+                ));
+            }
+            if s.active_version() != active_version {
+                return Err("active version perturbed outside commit".into());
+            }
+        }
+        Ok(())
+    });
+}

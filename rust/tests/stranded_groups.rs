@@ -1,0 +1,201 @@
+//! Regression tests for the stranded-group bug (ROADMAP, PR 1 triage):
+//! a saturated `DropOldest` rollout ring can evict a killed actor's
+//! `Aborted` rollouts before the preprocessor sees them, leaving their
+//! groupmates parked in `GroupCollector.pending` forever. The collector
+//! now force-completes incomplete groups on a timeout and bounds the
+//! pending map — these tests reproduce the eviction scenario end-to-end
+//! (device-free: rollouts are synthesized, no engine involved).
+
+use pipeline_rl::broker::{topic, Policy};
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator::preprocessor::{run_preprocessor, PreprocessorArgs};
+use pipeline_rl::coordinator::GroupCollector;
+use pipeline_rl::metrics::MetricsHub;
+use pipeline_rl::rl::{FinishReason, Rollout};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn rollout(seq_id: u64, group_id: u64, finish: FinishReason) -> Rollout {
+    let n = 6;
+    Rollout {
+        seq_id,
+        problem_id: 1,
+        group_id,
+        actor_id: 0,
+        prompt_tokens: vec![1, 10, 11],
+        gen_tokens: if matches!(finish, FinishReason::Aborted) {
+            Vec::new()
+        } else {
+            vec![5; n]
+        },
+        behavior_lp: if matches!(finish, FinishReason::Aborted) {
+            Vec::new()
+        } else {
+            vec![-0.5; n]
+        },
+        token_version: if matches!(finish, FinishReason::Aborted) {
+            Vec::new()
+        } else {
+            vec![1; n]
+        },
+        reward: 1.0,
+        finish,
+        t_start: 0.0,
+        t_end: 0.1,
+    }
+}
+
+/// The core scenario at collector level: a group of 4 whose Aborted
+/// member was ring-evicted. Only 3 members ever arrive; the timeout must
+/// salvage them.
+#[test]
+fn timed_out_group_is_force_completed() {
+    let hub = MetricsHub::new();
+    let mut gc = GroupCollector::with_limits(4, false, 0.03, 0);
+    for i in 0..3 {
+        assert!(
+            gc.add(rollout(i, 70, FinishReason::Eos), &hub).is_empty(),
+            "incomplete group must not complete early"
+        );
+    }
+    assert_eq!(gc.n_pending(), 1);
+    assert!(gc.evict_stale(&hub).is_empty(), "not stale yet");
+    std::thread::sleep(Duration::from_millis(60));
+    let salvaged = gc.evict_stale(&hub);
+    assert_eq!(salvaged.len(), 3, "present members are salvaged");
+    assert_eq!(gc.n_pending(), 0, "no group remains stranded");
+    assert_eq!(hub.counter("groups_evicted_stale"), 1.0);
+    assert_eq!(hub.counter("groups_completed"), 1.0);
+    // group-mean baseline over the present members only
+    for (_, adv) in &salvaged {
+        assert!(adv.is_finite());
+    }
+    // a straggler of the force-completed group is discarded, not
+    // re-pended as an uncompletable fragment group
+    assert!(gc.add(rollout(3, 70, FinishReason::Eos), &hub).is_empty());
+    assert_eq!(gc.n_pending(), 0, "late member must not re-pend its group");
+    assert_eq!(hub.counter("rollouts_late_after_eviction"), 1.0);
+}
+
+/// Staleness is measured from the *last* arrival: a slow group that
+/// keeps making progress is never split by the timeout.
+#[test]
+fn slow_but_progressing_group_is_not_split() {
+    let hub = MetricsHub::new();
+    let mut gc = GroupCollector::with_limits(4, true, 0.2, 0);
+    for i in 0..3 {
+        assert!(gc.add(rollout(i, 8, FinishReason::Eos), &hub).is_empty());
+        // each gap stays well below the 200ms staleness timeout, but the
+        // total exceeds it — a first-arrival clock would evict here
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(gc.evict_stale(&hub).is_empty(), "progressing group must survive");
+    }
+    let done = gc.add(rollout(3, 8, FinishReason::Eos), &hub);
+    assert_eq!(done.len(), 4, "group completes normally despite being slow");
+    assert_eq!(hub.counter("groups_evicted_stale"), 0.0);
+}
+
+/// Complete groups are unaffected by the eviction machinery, including
+/// ones completed by Aborted members (the healthy halt path).
+#[test]
+fn complete_groups_do_not_trip_eviction() {
+    let hub = MetricsHub::new();
+    let mut gc = GroupCollector::with_limits(4, false, 0.02, 2);
+    for i in 0..3 {
+        assert!(gc.add(rollout(i, 5, FinishReason::Eos), &hub).is_empty());
+    }
+    let done = gc.add(rollout(3, 5, FinishReason::Aborted), &hub);
+    assert_eq!(done.len(), 3, "aborted member completes the group, filtered from advantages");
+    assert_eq!(gc.n_pending(), 0);
+    std::thread::sleep(Duration::from_millis(40));
+    assert!(gc.evict_stale(&hub).is_empty());
+    assert_eq!(hub.counter("groups_evicted_stale"), 0.0);
+}
+
+/// The pending-map cap evicts oldest-first even before any timeout.
+#[test]
+fn pending_overflow_evicts_oldest_groups() {
+    let hub = MetricsHub::new();
+    let mut gc = GroupCollector::with_limits(4, false, 0.0, 2);
+    for gid in 0..5u64 {
+        gc.add(rollout(gid * 10, gid, FinishReason::Eos), &hub);
+        std::thread::sleep(Duration::from_millis(2)); // distinct ages
+    }
+    assert_eq!(gc.n_pending(), 5);
+    let salvaged = gc.evict_stale(&hub);
+    assert_eq!(gc.n_pending(), 2, "trimmed to the cap");
+    assert_eq!(salvaged.len(), 3, "each evicted group salvages its lone member");
+    assert_eq!(hub.counter("groups_evicted_overflow"), 3.0);
+    // the oldest groups went first: gids 0..3 evicted, 3 and 4 retained
+    assert!(gc.add(rollout(100, 3, FinishReason::Eos), &hub).is_empty());
+    assert_eq!(gc.n_pending(), 2, "gid 3 still pending (was not evicted)");
+}
+
+/// End-to-end through the real ring + preprocessor thread: a killed
+/// actor's Aborted member is evicted from the saturated DropOldest ring,
+/// its groupmates arrive, and the preprocessor still drains the group —
+/// nothing stays pending, batches keep flowing.
+#[test]
+fn preprocessor_recovers_group_stranded_by_ring_eviction() {
+    let mut cfg = RunConfig::default();
+    cfg.group_size = 4;
+    cfg.group_timeout_s = 0.15;
+    cfg.max_pending_groups = 64;
+
+    // ring so small that the burst below must evict its head
+    let (tx, rx) = topic::<Rollout>("rollouts", 4, Policy::DropOldest);
+    let (btx, brx) = topic("batches", 64, Policy::Block);
+    let hub = MetricsHub::new();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // the killed actor's Aborted member enters the ring first...
+    tx.send(rollout(1, 900, FinishReason::Aborted)).unwrap();
+    // ...and a burst of unrelated complete groups saturates the ring
+    // while no consumer is attached yet, deterministically evicting the
+    // Aborted head (the exact failure mode from the ROADMAP note)
+    let mut dropped = 0;
+    for g in 0..4u64 {
+        for s in 0..4u64 {
+            dropped += tx.send(rollout(100 + g * 4 + s, g, FinishReason::Eos)).unwrap();
+        }
+    }
+    assert!(dropped >= 13, "burst must overflow the ring ({dropped} dropped)");
+
+    let args = PreprocessorArgs {
+        cfg: cfg.clone(),
+        b: 4,
+        t: 64,
+        rollout_rx: rx,
+        batch_tx: btx,
+        hub: hub.clone(),
+        stop: stop.clone(),
+        conv: None,
+    };
+    let handle = std::thread::spawn(move || run_preprocessor(args).unwrap());
+
+    // the stranded groupmates arrive later, after the drain catches up
+    std::thread::sleep(Duration::from_millis(30));
+    for s in 0..3u64 {
+        tx.send(rollout(200 + s, 900, FinishReason::Eos)).unwrap();
+    }
+
+    // the group must not stay pending: the timeout salvages it
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while hub.counter("groups_evicted_stale") < 1.0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        hub.counter("groups_evicted_stale") >= 1.0,
+        "stranded group must be evicted (counters: {:?})",
+        hub.snapshot().counters
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    handle.join().unwrap();
+    // the salvaged members made it into packed batches (groups_completed
+    // counts the salvaged group too)
+    assert!(hub.counter("groups_completed") >= 1.0);
+    drop(brx);
+}

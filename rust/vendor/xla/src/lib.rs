@@ -103,6 +103,14 @@ impl Literal {
         Literal { dims: vec![v.len() as i64], data: T::store(v.to_vec()) }
     }
 
+    /// Build a tuple literal from element literals (the shape the decode
+    /// graph's `return_tuple=True` lowering produces). Fully functional in
+    /// the stub so the runtime's tuple-readback fallback path — and the
+    /// selective-readback logic layered on it — can be tested device-free.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elements.len() as i64], data: LitData::Tuple(elements) }
+    }
+
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
         let want: i64 = dims.iter().product();
         let have = self.element_count() as i64;
@@ -244,5 +252,15 @@ mod tests {
     #[test]
     fn pjrt_is_gated() {
         assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32, 2]), Literal::scalar(3.0f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![3.0]);
+        assert!(t.array_shape().is_err(), "tuple literal has no array shape");
     }
 }

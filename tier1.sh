@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification for the PipelineRL reproduction:
 #
-#   cargo build --release && cargo test -q && cargo fmt --check
+#   cargo build --release && cargo test -q
+#   cargo clippy --all-targets -- -D warnings   (when clippy is installed)
+#   cargo fmt --check                           (when rustfmt is installed)
 #
 # Environment notes
 # -----------------
@@ -31,6 +33,16 @@ cargo build --release
 
 echo "== tier1: cargo test -q =="
 cargo test -q
+
+# clippy over every target (benches/examples/tests included), warnings
+# fatal — the lint policy lives in [workspace.lints] in rust/Cargo.toml.
+# Toolchain is pinned via rust-toolchain.toml (components include clippy).
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== tier1: cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "tier1: clippy not installed; skipping lint check" >&2
+fi
 
 if command -v rustfmt >/dev/null 2>&1; then
     echo "== tier1: cargo fmt --check =="

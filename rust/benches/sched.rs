@@ -1,0 +1,134 @@
+//! Scheduler / migration / autoscale benchmarks — appended
+//! machine-readably to BENCH_sched.json (see benchkit docs).
+//!
+//! * snapshot export/import cost: serialize + deserialize + SeqState
+//!   rebuild across prefix lengths (the per-sequence price of a kill or
+//!   descale hand-off — entirely device-free);
+//! * autoscaler reaction time in the simulated cluster: flashes from the
+//!   outage that creates the rollout-queue backlog to the first spare
+//!   activation, plus the full add/remove trajectory;
+//! * `decide()` throughput (the supervisor-poll hot cost).
+//!
+//! `cargo bench --bench sched`
+
+use pipeline_rl::benchkit::{self, time};
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::SeqState;
+use pipeline_rl::sched::{AutoScaleCfg, AutoScaler, ScaleSignals, SeqSnapshot};
+use pipeline_rl::simcluster::{GpuFailure, SimAutoScale, SimCfg, Simulator};
+
+fn snapshot_with(gen: usize) -> SeqSnapshot {
+    SeqSnapshot {
+        seq_id: 42,
+        group_id: (3u64 << 40) | 7,
+        problem_id: 5,
+        prompt: vec![1; 16],
+        gen_tokens: (0..gen as i32).collect(),
+        behavior_lp: vec![-0.5; gen],
+        token_version: (0..gen as u64).collect(),
+        pos: if gen == 0 { 0 } else { 15 + gen },
+        max_new: gen + 8,
+        rng_words: [1, 2, 3, 4],
+        t_start: 0.0,
+    }
+}
+
+fn autoscaled_cluster() -> SimCfg {
+    // mirror of the sim acceptance scenario: 6/8 generation GPUs go dark
+    // at flash 50, flooding the regen queue; spares absorb the backlog
+    // and retire once the victims recover and the trainer inbox saturates
+    let mut c = SimCfg::pipeline(16, 8, 32, 64, 128);
+    c.rl_steps = 60;
+    c.migrate = true;
+    c.tau = 12.0;
+    c.failures = (0..6)
+        .map(|g| GpuFailure { gpu: g, at: 50.0, down_for: 3000.0 })
+        .collect();
+    c.autoscale = Some(SimAutoScale {
+        cfg: AutoScaleCfg {
+            enabled: true,
+            backlog_per_actor: 1.0,
+            supply_high_frac: 0.75,
+            up_patience: 2,
+            down_patience: 3,
+            cooldown: 2,
+            max_lag_steps: 0.0,
+            min_batch_fill: 0.0,
+            eval_every_ms: 0,
+        },
+        max_extra_gpus: 4,
+        eval_every_flashes: 20.0,
+        supply_capacity: 256,
+    });
+    c
+}
+
+fn main() {
+    benchkit::json_begin("sched");
+
+    benchkit::section("sched — snapshot export/import cost");
+    let problem = TaskGen::curriculum_small().problem(5);
+    for &n in &[16usize, 256, 4096] {
+        let snap = snapshot_with(n);
+        let bytes = snap.to_bytes();
+        benchkit::json_note(
+            &format!("snapshot serialize ({n} gen tokens)/bytes"),
+            bytes.len() as f64,
+        );
+        time(&format!("snapshot serialize ({n} gen tokens)"), 10, 200, || {
+            std::hint::black_box(snap.to_bytes());
+        });
+        time(&format!("snapshot deserialize ({n} gen tokens)"), 10, 200, || {
+            std::hint::black_box(SeqSnapshot::from_bytes(&bytes).unwrap());
+        });
+        time(&format!("snapshot import rebuild ({n} gen tokens)"), 10, 200, || {
+            std::hint::black_box(SeqState::from_snapshot(&snap, 1, problem.clone(), 0.0));
+        });
+    }
+
+    benchkit::section("sched — autoscaler reaction time (simulated cluster)");
+    {
+        let r = Simulator::new(autoscaled_cluster()).run();
+        let outage_at = 50.0;
+        let reaction = r
+            .scaleup_times
+            .first()
+            .map(|&t| t - outage_at)
+            .unwrap_or(f64::NAN);
+        println!(
+            "outage at {outage_at} flashes -> first spare at {:?} (reaction {reaction:.1} \
+             flashes); {} adds / {} removes, {} seqs migrated, {:.0} tokens salvaged",
+            r.scaleup_times.first(),
+            r.gpus_added,
+            r.gpus_removed,
+            r.seqs_migrated,
+            r.tokens_salvaged,
+        );
+        benchkit::json_note("autoscale/reaction_flashes", reaction);
+        benchkit::json_note("autoscale/gpus_added", r.gpus_added as f64);
+        benchkit::json_note("autoscale/gpus_removed", r.gpus_removed as f64);
+        benchkit::json_note("autoscale/seqs_migrated", r.seqs_migrated as f64);
+        benchkit::json_note("autoscale/tokens_salvaged", r.tokens_salvaged);
+        benchkit::json_note("autoscale/sim_t_end_flashes", r.t_end);
+    }
+
+    benchkit::section("sched — decision-loop cost");
+    {
+        let mut scaler = AutoScaler::new(AutoScaleCfg::default());
+        let sig = ScaleSignals {
+            backlog: 5,
+            supply_depth: 100,
+            supply_capacity: 256,
+            token_lag: 1.5,
+            batch_fill: 0.9,
+            pool: 4,
+        };
+        time("autoscaler decide()", 100, 2000, || {
+            std::hint::black_box(scaler.decide(&sig));
+        });
+    }
+
+    if let Some(p) = benchkit::json_end() {
+        println!("results -> {}", p.display());
+    }
+}

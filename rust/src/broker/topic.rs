@@ -117,6 +117,12 @@ impl<T> Publisher<T> {
         &self.shared.name
     }
 
+    /// Ring capacity (fixed at topic creation) — lets consumers of
+    /// `stats().depth` express saturation as a fraction.
+    pub fn capacity(&self) -> usize {
+        self.shared.inner.lock().unwrap().capacity
+    }
+
     /// Stall every publisher of this topic for `d` from now (chaos
     /// injection: models a broker hiccup / slow network). Send calls made
     /// while the stall is active sleep it off before enqueueing; consumers

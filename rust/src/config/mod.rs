@@ -13,6 +13,7 @@ pub use self::toml::{TomlDoc, TomlValue};
 use crate::broker::Policy;
 use crate::data::task::{RewardCfg, TaskKind};
 use crate::rl::AdvantageMode;
+use crate::sched::{AutoScaleCfg, SchedPolicy};
 use anyhow::{bail, Result};
 
 /// Training mode (paper §2.2 vs §4).
@@ -67,6 +68,10 @@ pub struct ElasticConfig {
     pub max_restarts: usize,
     /// supervisor health/chaos polling cadence
     pub poll_ms: u64,
+    /// killed/descaled actors export their in-flight sequences as
+    /// portable snapshots re-enqueued to surviving actors (false restores
+    /// the legacy abort-everything behavior)
+    pub migrate: bool,
 }
 
 impl Default for ElasticConfig {
@@ -77,6 +82,7 @@ impl Default for ElasticConfig {
             max_actors: 8,
             max_restarts: 3,
             poll_ms: 5,
+            migrate: true,
         }
     }
 }
@@ -134,8 +140,15 @@ pub struct RunConfig {
     /// 0 = eager swap (stall for the whole transfer, the pre-overlap
     /// behavior kept as an ablation baseline)
     pub weight_stage_chunk: usize,
+    /// engine admission policy (`[sched] policy`): which pending sequence
+    /// enters a freed decode slot. `fifo` is the legacy behavior;
+    /// `longest_prefix` prioritizes migrated prefixes
+    pub sched: SchedPolicy,
     pub checkpoint: CheckpointConfig,
     pub elastic: ElasticConfig,
+    /// `[autoscale]` — supervisor-driven pool resize from live signals
+    /// (requires `[elastic] enabled`, pipeline mode)
+    pub autoscale: AutoScaleCfg,
     /// deterministic single-thread mode: actors and trainer are stepped
     /// round-robin by the orchestrator (useful for tests & 1-core boxes)
     pub log_every: usize,
@@ -169,8 +182,10 @@ impl Default for RunConfig {
             group_timeout_s: 30.0,
             max_pending_groups: 1024,
             weight_stage_chunk: 2,
+            sched: SchedPolicy::Fifo,
             checkpoint: CheckpointConfig::default(),
             elastic: ElasticConfig::default(),
+            autoscale: AutoScaleCfg::default(),
             log_every: 10,
             weight_transfer_ms: 0.0,
         }
@@ -215,6 +230,11 @@ impl RunConfig {
             "block" => Policy::Block,
             p => bail!("unknown queue policy {p:?}"),
         };
+        let sched_name = doc.str_or("sched.policy", d.sched.name())?;
+        let Some(sched) = SchedPolicy::parse(&sched_name) else {
+            bail!("unknown sched.policy {sched_name:?} (fifo | longest_prefix)");
+        };
+        let da = &d.autoscale;
         Ok(RunConfig {
             variant: doc.str_or("run.variant", &d.variant)?,
             mode,
@@ -248,6 +268,25 @@ impl RunConfig {
             max_pending_groups: doc
                 .usize_or("queues.max_pending_groups", d.max_pending_groups)?,
             weight_stage_chunk: doc.usize_or("run.weight_stage_chunk", d.weight_stage_chunk)?,
+            sched,
+            autoscale: AutoScaleCfg {
+                enabled: doc.bool_or("autoscale.enabled", da.enabled)?,
+                backlog_per_actor: doc
+                    .f64_or("autoscale.backlog_per_actor", da.backlog_per_actor)?,
+                supply_high_frac: doc
+                    .f64_or("autoscale.supply_high_frac", da.supply_high_frac)?,
+                up_patience: doc.usize_or("autoscale.up_patience", da.up_patience as usize)?
+                    as u32,
+                down_patience: doc
+                    .usize_or("autoscale.down_patience", da.down_patience as usize)?
+                    as u32,
+                cooldown: doc.usize_or("autoscale.cooldown", da.cooldown as usize)? as u32,
+                max_lag_steps: doc.f64_or("autoscale.max_lag_steps", da.max_lag_steps)?,
+                min_batch_fill: doc.f64_or("autoscale.min_batch_fill", da.min_batch_fill)?,
+                eval_every_ms: doc
+                    .usize_or("autoscale.eval_every_ms", da.eval_every_ms as usize)?
+                    as u64,
+            },
             checkpoint: CheckpointConfig {
                 // `trainer.checkpoint_*` kept as legacy aliases
                 every: doc.usize_or(
@@ -272,6 +311,7 @@ impl RunConfig {
                 max_restarts: doc.usize_or("elastic.max_restarts", d.elastic.max_restarts)?,
                 // usize_or rejects negatives instead of wrapping
                 poll_ms: doc.usize_or("elastic.poll_ms", d.elastic.poll_ms as usize)? as u64,
+                migrate: doc.bool_or("elastic.migrate", d.elastic.migrate)?,
             },
             log_every: doc.usize_or("run.log_every", d.log_every)?,
             weight_transfer_ms: doc.f64_or("run.weight_transfer_ms", d.weight_transfer_ms)?,
@@ -334,6 +374,36 @@ impl RunConfig {
                     self.elastic.min_actors,
                     self.elastic.max_actors
                 );
+            }
+        }
+        if self.autoscale.enabled {
+            if !self.elastic.enabled {
+                bail!(
+                    "autoscale requires the elastic actor pool ([elastic] enabled = true): \
+                     only a supervised pool can be resized"
+                );
+            }
+            if !self.elastic.migrate {
+                bail!(
+                    "autoscale requires [elastic] migrate = true: scale-down hands a \
+                     descaled actor's in-flight sequences back through the migration \
+                     hub, and the hub's depth is the scale-up backlog signal — without \
+                     migration, descaling discards work and the pool can never grow"
+                );
+            }
+            if self.autoscale.backlog_per_actor <= 0.0 {
+                bail!("autoscale.backlog_per_actor must be positive");
+            }
+            if !(0.0..=1.0).contains(&self.autoscale.supply_high_frac)
+                || self.autoscale.supply_high_frac == 0.0
+            {
+                bail!(
+                    "autoscale.supply_high_frac must be in (0, 1], got {}",
+                    self.autoscale.supply_high_frac
+                );
+            }
+            if self.autoscale.up_patience == 0 || self.autoscale.down_patience == 0 {
+                bail!("autoscale patience values must be >= 1");
             }
         }
         Ok(())
@@ -438,6 +508,82 @@ mod tests {
         cfg.elastic.min_actors = 5;
         cfg.elastic.max_actors = 2;
         assert!(cfg.validate().is_err(), "min > max refused");
+    }
+
+    #[test]
+    fn parses_sched_and_autoscale_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            [run]
+            n_actors = 2
+            [sched]
+            policy = "longest_prefix"
+            [elastic]
+            enabled = true
+            [autoscale]
+            enabled = true
+            backlog_per_actor = 3.5
+            up_patience = 2
+            cooldown = 6
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sched, SchedPolicy::LongestPrefixFirst);
+        assert!(cfg.autoscale.enabled);
+        assert_eq!(cfg.autoscale.backlog_per_actor, 3.5);
+        assert_eq!(cfg.autoscale.up_patience, 2);
+        assert_eq!(cfg.autoscale.cooldown, 6);
+        // unset keys keep defaults
+        assert_eq!(cfg.autoscale.down_patience, AutoScaleCfg::default().down_patience);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn defaults_migrate_and_fifo() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.sched, SchedPolicy::Fifo);
+        assert!(cfg.elastic.migrate, "migration is the elastic default");
+        assert!(!cfg.autoscale.enabled);
+        // legacy abort-on-kill stays reachable (without autoscale)
+        let doc = TomlDoc::parse("[elastic]\nenabled = true\nmigrate = false").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(!cfg.elastic.migrate);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn autoscale_validation_rules() {
+        let mut cfg = RunConfig::default();
+        cfg.autoscale.enabled = true;
+        assert!(cfg.validate().is_err(), "autoscale without elastic refused");
+
+        cfg.elastic.enabled = true;
+        cfg.validate().unwrap();
+
+        cfg.elastic.migrate = false;
+        assert!(
+            cfg.validate().is_err(),
+            "autoscale without migration refused (descale would discard work)"
+        );
+        cfg.elastic.migrate = true;
+
+        cfg.autoscale.up_patience = 0;
+        assert!(cfg.validate().is_err(), "zero patience refused");
+        cfg.autoscale.up_patience = 1;
+
+        cfg.autoscale.supply_high_frac = 1.5;
+        assert!(cfg.validate().is_err(), "saturation fraction > 1 refused");
+        cfg.autoscale.supply_high_frac = 0.8;
+
+        cfg.autoscale.backlog_per_actor = 0.0;
+        assert!(cfg.validate().is_err(), "non-positive backlog threshold refused");
+    }
+
+    #[test]
+    fn rejects_unknown_sched_policy() {
+        let doc = TomlDoc::parse("[sched]\npolicy = \"srpt\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
     }
 
     #[test]

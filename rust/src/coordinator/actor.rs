@@ -28,6 +28,7 @@ use crate::metrics::MetricsHub;
 use crate::model::Tokenizer;
 use crate::rl::{FinishReason, Rollout};
 use crate::runtime::Runtime;
+use crate::sched::MigrationHub;
 use crate::util::logging::Logger;
 use crate::util::Rng;
 use crate::weights::{WeightBus, WeightFetch};
@@ -35,6 +36,19 @@ use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Bit offset of the opener field in group ids. Layout (see `run_actor`):
+/// `[actor_id + 1 : bits 40..] [generation & 0xff : bits 32..40]
+/// [counter : bits 0..32]`.
+const GROUP_OPENER_SHIFT: u64 = 40;
+
+/// The actor slot (as `actor_id + 1`) that opened a rollout group — the
+/// inverse of the `group_base` encoding below, kept next to it so the
+/// layout can only change in one place. The preprocessor compares this
+/// against the finishing `actor_id` to spot migrated completions.
+pub fn group_opener(group_id: u64) -> u64 {
+    group_id >> GROUP_OPENER_SHIFT
+}
 
 pub struct ActorArgs {
     pub actor_id: usize,
@@ -49,11 +63,27 @@ pub struct ActorArgs {
     /// restart count of this slot; folded into group ids so a restarted
     /// actor can never collide with its previous incarnation's groups
     pub generation: u64,
+    /// portable-rollout hand-off: claim orphaned snapshots each loop,
+    /// deposit our own in-flight sequences when killed/descaled. None =
+    /// legacy abort-on-halt behavior (plain runs, `[elastic] migrate =
+    /// false`, conventional mode)
+    pub migrate: Option<Arc<MigrationHub>>,
     pub conv: Option<Arc<ConvSync>>,
 }
 
 pub fn run_actor(args: ActorArgs) -> Result<()> {
-    let ActorArgs { actor_id, cfg, bus, rollout_tx, hub, stop, halt, generation, conv } = args;
+    let ActorArgs {
+        actor_id,
+        cfg,
+        bus,
+        rollout_tx,
+        hub,
+        stop,
+        halt,
+        generation,
+        migrate,
+        conv,
+    } = args;
     let log = Logger::new(format!("actor-{actor_id}"));
     let group_name = format!("actor-{actor_id}");
     let tokenizer = Tokenizer::new();
@@ -77,6 +107,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let mut ecfg = EngineCfg::new(&cfg.variant);
     ecfg.temperature = cfg.temperature as f32;
     ecfg.max_new_tokens = cfg.max_new_tokens;
+    ecfg.sched = cfg.sched;
     let mut engine = Engine::new(
         &mut rt,
         ecfg,
@@ -91,7 +122,8 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let mut dataset = Dataset::new(task_gen.clone(), cfg.task.pool, cfg.seed + actor_id as u64);
     // id layout: [actor+1 : bits 40..] [generation & 0xff : bits 32..40]
     // [counter : bits 0..32] — unique across restarts of the same slot
-    let group_base = ((actor_id as u64 + 1) << 40) | ((generation & 0xff) << 32);
+    let group_base =
+        ((actor_id as u64 + 1) << GROUP_OPENER_SHIFT) | ((generation & 0xff) << 32);
     let mut group_counter: u64 = 0;
     // target: slots full + one group queued so freed slots refill instantly
     let target_load = engine.n_slots() + cfg.group_size;
@@ -175,6 +207,44 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
             }
         }
 
+        // ---- migrated work: adopt orphaned in-flight rollouts first ----
+        // (before fresh admission, so salvaged prefixes — whose tokens
+        // accrue lag while queued — get slot capacity ahead of new
+        // prompts; the engine-side scheduler orders them within the
+        // pending queue)
+        if let Some(hub_m) = &migrate {
+            if hub_m.depth() > 0 {
+                let room = target_load.saturating_sub(engine.load());
+                for snap in hub_m.claim(room) {
+                    let salvaged = snap.salvaged_tokens();
+                    let problem = task_gen.problem(snap.problem_id);
+                    match engine.import_snapshot(&snap, problem) {
+                        Ok(_) => {
+                            // "completed" = the hand-off completed (the
+                            // snapshot is adopted into a live engine); a
+                            // sequence that migrates twice counts twice.
+                            // End-to-end completion is tracked by the
+                            // preprocessor's
+                            // rollouts_completed_after_migration.
+                            hub.add("migrations_completed", 1.0);
+                            hub.add("snapshot_tokens_salvaged", salvaged as f64);
+                        }
+                        Err(e) => {
+                            // a snapshot this engine cannot host (config
+                            // skew, malformed deposit): account it as
+                            // deliberately discarded — erroring out here
+                            // would drop every other claimed snapshot
+                            // unaccounted and burn a restart-budget slot
+                            log.warn(&format!("rejecting migrated snapshot: {e:#}"));
+                            hub_m.reject(&snap);
+                            hub.add("migration_snaps_rejected", 1.0);
+                            hub.add("migration_snaps_discarded", 1.0);
+                        }
+                    }
+                }
+            }
+        }
+
         // ---- admission ----
         match (&cfg.mode, &conv) {
             (Mode::Pipeline, _) => {
@@ -248,23 +318,43 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
         }
     }
 
-    // Shutdown/kill path: abort in-flight sequences and publish them as
-    // `Aborted` rollouts so the preprocessor's pending advantage groups
-    // can still complete (aborted members count toward group size but
-    // are filtered out of the advantage computation). Best effort: a
-    // saturated DropOldest ring may still evict these before the
-    // preprocessor sees them — the preprocessor's bounded-pending
-    // eviction (GroupCollector timeout/cap) then salvages the stranded
-    // groupmates instead of leaving them pending forever.
-    let aborted = engine.drain();
-    if !aborted.is_empty() {
-        hub.add("rollouts_aborted_on_halt", aborted.len() as f64);
-        for r in aborted {
-            if let Some(sync) = &conv {
-                sync.report_finished();
-            }
-            if rollout_tx.send(r).is_err() {
-                break; // preprocessor already gone
+    // Wind-down. Two cases:
+    //
+    // * **Kill/descale mid-run** (halt raised, run continuing) with a
+    //   migration hub: export every in-flight sequence as a portable
+    //   snapshot and deposit it for a surviving/replacement actor —
+    //   group ids and generated prefixes intact, so the preprocessor's
+    //   advantage groups complete normally and no salvageable token is
+    //   lost. Nothing is published as Aborted.
+    // * **Run shutdown** (global stop) or no hub: the legacy path —
+    //   abort in-flight sequences and publish them as `Aborted` rollouts
+    //   so pending advantage groups can still complete (aborted members
+    //   count toward group size but are filtered out of the advantage
+    //   computation). Best effort: a saturated DropOldest ring may still
+    //   evict these before the preprocessor sees them — the
+    //   preprocessor's bounded-pending eviction (GroupCollector
+    //   timeout/cap) then salvages the stranded groupmates.
+    let migrating = !stop.load(Ordering::Relaxed) && migrate.is_some();
+    if migrating {
+        let hub_m = migrate.as_ref().expect("checked above");
+        let snaps = engine.export_snapshots();
+        if !snaps.is_empty() {
+            let tokens: usize = snaps.iter().map(|s| s.salvaged_tokens()).sum();
+            hub.add("migration_snaps_exported", snaps.len() as f64);
+            hub.add("migration_tokens_exported", tokens as f64);
+            hub_m.deposit(snaps);
+        }
+    } else {
+        let aborted = engine.drain();
+        if !aborted.is_empty() {
+            hub.add("rollouts_aborted_on_halt", aborted.len() as f64);
+            for r in aborted {
+                if let Some(sync) = &conv {
+                    sync.report_finished();
+                }
+                if rollout_tx.send(r).is_err() {
+                    break; // preprocessor already gone
+                }
             }
         }
     }

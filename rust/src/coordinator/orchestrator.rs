@@ -18,7 +18,12 @@
 //! `[elastic] enabled = true` (or a chaos schedule) the supervisor
 //! instead restarts crashes within a respawn budget, resizes the pool,
 //! and injects the schedule's faults against the weight-bus version
-//! clock.
+//! clock. Elastic pipeline runs additionally get **partial-rollout
+//! migration** (a killed/descaled actor's in-flight sequences re-enqueue
+//! through a shared `sched::MigrationHub` instead of aborting) and, with
+//! `[autoscale] enabled = true`, **signal-driven pool resize**
+//! (`sched::AutoScaler` watching rollout-queue backlog, supply
+//! saturation, token lag and batch fill).
 //!
 //! With `[checkpoint] resume_from` set, the warmup is skipped entirely:
 //! the checkpoint's parameters are published at version `step + 1` and
@@ -37,6 +42,7 @@ use crate::metrics::{MetricsHub, RunReport};
 use crate::model::checkpoint::TrainState;
 use crate::rl::Rollout;
 use crate::runtime::{HostTensor, Runtime};
+use crate::sched::{AutoScaler, MigrationHub};
 use crate::testkit::chaos::ChaosSchedule;
 use crate::util::logging::Logger;
 use crate::util::timer::global_seconds;
@@ -142,12 +148,26 @@ pub fn run_with_chaos(
     // fixed-size, fail-fast pool that preserves the original
     // actor-error-fails-the-run semantics.
     let elastic = cfg.elastic.enabled || chaos.is_some();
+    // portable in-flight rollouts: supervised pipeline runs hand a killed
+    // or descaled actor's sequences to the survivors through this hub
+    // (`[elastic] migrate = false` restores abort-on-kill)
+    let migrate = if elastic && cfg.elastic.migrate && matches!(cfg.mode, Mode::Pipeline) {
+        Some(Arc::new(MigrationHub::new()))
+    } else {
+        None
+    };
+    let autoscale = if elastic && cfg.autoscale.enabled && matches!(cfg.mode, Mode::Pipeline) {
+        Some(AutoScaler::new(cfg.autoscale.clone()))
+    } else {
+        None
+    };
     let spawn: SpawnFn = {
         let cfg = cfg.clone();
         let bus = bus.clone();
         let hub = hub.clone();
         let conv = conv.clone();
         let rollout_tx = rollout_tx.clone();
+        let migrate = migrate.clone();
         Arc::new(move |ctx| {
             run_actor(ActorArgs {
                 actor_id: ctx.actor_id,
@@ -158,6 +178,7 @@ pub fn run_with_chaos(
                 stop: ctx.stop,
                 halt: ctx.halt,
                 generation: ctx.generation,
+                migrate: migrate.clone(),
                 conv: conv.clone(),
             })
         })
@@ -224,6 +245,8 @@ pub fn run_with_chaos(
         stop: stop.clone(),
         hub: hub.clone(),
         poll: Duration::from_millis(cfg.elastic.poll_ms.max(1)),
+        migrate,
+        autoscale,
     };
     let sup_handle = std::thread::Builder::new()
         .name("superv".into())

@@ -278,6 +278,19 @@ fn run_pipeline(
         }
         match rollout_rx.recv(Duration::from_millis(100)) {
             Ok(r) => {
+                // a rollout *finished* (not aborted) by a different actor
+                // than its group opener is a migrated prefix that
+                // completed elsewhere — the group itself is intact, so
+                // this is observability, not special-casing. Known
+                // undercount: a migration adopted by a restarted
+                // incarnation of the *same* slot is invisible here (the
+                // slot id matches); the MigrationHub's deposited/claimed
+                // books are the exact accounting
+                if super::actor::group_opener(r.group_id) != r.actor_id as u64 + 1
+                    && !matches!(r.finish, FinishReason::Aborted)
+                {
+                    hub.add("rollouts_completed_after_migration", 1.0);
+                }
                 ready.extend(collector.add(r, &hub));
                 // a sustained stream never hits the Timeout arm below, so
                 // stranded-group salvage must also run here (cap check is

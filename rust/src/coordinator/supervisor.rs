@@ -16,6 +16,14 @@
 //!   floor, and fires the events of a deterministic
 //!   [`ChaosSchedule`](crate::testkit::chaos::ChaosSchedule) against the
 //!   pipeline's logical clock (the weight bus's published version).
+//!   With a [`MigrationHub`] wired, every kill path (chaos, descale,
+//!   autoscale-down) hands the victim's in-flight sequences to the
+//!   surviving actors instead of aborting them; with an [`AutoScaler`],
+//!   the pool resizes from live signals (rollout-queue backlog, supply
+//!   saturation, token lag, batch fill) instead of only chaos events —
+//!   `pool_size`, `autoscale_ups`/`autoscale_downs`,
+//!   `migrations_completed` and `snapshot_tokens_salvaged` land in the
+//!   [`MetricsHub`] for scenario assertions.
 //!
 //! The pool is deliberately generic over a [`SpawnFn`] closure rather
 //! than hard-wired to [`super::actor::run_actor`]: the chaos tests drive
@@ -26,6 +34,7 @@
 use crate::broker::Publisher;
 use crate::metrics::MetricsHub;
 use crate::rl::Rollout;
+use crate::sched::{AutoScaler, MigrationHub, ScaleDecision, ScaleSignals};
 use crate::testkit::chaos::{ChaosKind, ChaosSchedule};
 use crate::util::logging::Logger;
 use crate::weights::WeightBus;
@@ -34,7 +43,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Identity handed to each spawned actor incarnation.
 pub struct ActorCtx {
@@ -142,8 +151,25 @@ impl ActorPool {
         Ok(Some(id))
     }
 
-    /// Halt one actor and join its thread. In-flight sequences are
-    /// aborted by the actor's own halt path. Returns false for unknown
+    /// Raise an actor's kill switch *without* joining its thread: the
+    /// actor winds down on its own time (exporting its portable in-flight
+    /// rollouts) while the rest of the system keeps running, and
+    /// [`ActorPool::reap`] collects the exit later as a clean retirement.
+    /// Models a SIGTERM-style slow kill — the race window between the
+    /// signal and the death is exactly what the chaos harness's
+    /// `SlowKillActor` events exercise. Returns true only when this call
+    /// *newly* raised the halt (false for unknown ids and for an actor
+    /// already winding down — callers count retirements off this).
+    pub fn halt_async(&mut self, actor_id: usize) -> bool {
+        match self.slots.get(&actor_id) {
+            Some(slot) => !slot.halt.swap(true, Ordering::Relaxed),
+            None => false,
+        }
+    }
+
+    /// Halt one actor and join its thread. The actor's own halt path
+    /// decides the fate of its in-flight sequences (snapshot export when
+    /// migration is wired, abort otherwise). Returns false for unknown
     /// ids. A crash surfaced at join time is recorded, not propagated —
     /// killing an already-dying actor is not an error.
     pub fn kill_actor(&mut self, actor_id: usize) -> bool {
@@ -284,13 +310,21 @@ impl ActorPool {
 pub struct SupervisorArgs {
     pub pool: ActorPool,
     pub bus: WeightBus,
-    /// live handle onto the rollout topic: keeps it open for hot-attach
-    /// and is the injection point for `TopicStall` chaos
+    /// live handle onto the rollout topic: keeps it open for hot-attach,
+    /// is the injection point for `TopicStall` chaos, and supplies the
+    /// autoscaler's supply-saturation signal
     pub rollout_tx: Publisher<Rollout>,
     pub schedule: Option<ChaosSchedule>,
     pub stop: Arc<AtomicBool>,
     pub hub: MetricsHub,
     pub poll: Duration,
+    /// portable-rollout hand-off queue shared with the actors; its depth
+    /// is the autoscaler's rollout-queue backlog signal. None = legacy
+    /// abort-on-kill behavior
+    pub migrate: Option<Arc<MigrationHub>>,
+    /// signal-driven pool resize (replaces chaos-only resize); None =
+    /// fixed topology outside chaos events
+    pub autoscale: Option<AutoScaler>,
 }
 
 /// Supervision loop. Runs until `stop` is raised (trainer done), then
@@ -298,7 +332,17 @@ pub struct SupervisorArgs {
 /// version passes their step — the logical clock shared with the trainer
 /// — so a schedule replays in the same order on every run of its seed.
 pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
-    let SupervisorArgs { mut pool, bus, rollout_tx, schedule, stop, hub, poll } = args;
+    let SupervisorArgs {
+        mut pool,
+        bus,
+        rollout_tx,
+        schedule,
+        stop,
+        hub,
+        poll,
+        migrate,
+        mut autoscale,
+    } = args;
     let log = Logger::new("superv");
     let events = schedule
         .as_ref()
@@ -308,6 +352,14 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
         log.info(&s.describe());
     }
     let mut next_event = 0usize;
+    // slow kills in flight: (deadline, actor id) — the halt lands when
+    // the deadline passes, the actor winds down asynchronously after that
+    let mut slow_kills: Vec<(Instant, usize)> = Vec::new();
+    let autoscale_every = match &autoscale {
+        Some(a) => Duration::from_millis(a.cfg().eval_every_ms.max(1)),
+        None => Duration::from_secs(3600),
+    };
+    let mut last_autoscale = Instant::now();
 
     loop {
         let stopping = stop.load(Ordering::Relaxed);
@@ -323,13 +375,27 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                         pool.kill_actor(id);
                     }
                 }
+                ChaosKind::SlowKillActor { delay_ms } => {
+                    // target resolved at fire time (deterministic given
+                    // the event sequence); the halt itself lands later,
+                    // racing the rest of the pipeline
+                    if let Some(id) = pool.lowest_live() {
+                        slow_kills.push((Instant::now() + Duration::from_millis(delay_ms), id));
+                    }
+                }
                 ChaosKind::RestartActor => {
                     if let Some(id) = pool.lowest_live() {
-                        pool.restart_actor(id)?;
+                        if let Err(e) = pool.restart_actor(id) {
+                            unwind_pool(pool, &stop, &hub, &migrate);
+                            return Err(e);
+                        }
                     }
                 }
                 ChaosKind::AddActor => {
-                    pool.add_actor()?;
+                    if let Err(e) = pool.add_actor() {
+                        unwind_pool(pool, &stop, &hub, &migrate);
+                        return Err(e);
+                    }
                 }
                 ChaosKind::RemoveActor => {
                     if pool.len() > pool.min_actors() {
@@ -346,22 +412,103 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                 }
             }
         }
+        // land expired slow kills (async: reap collects the exit later)
+        if !slow_kills.is_empty() {
+            let now = Instant::now();
+            slow_kills.retain(|&(due, id)| {
+                if due <= now {
+                    if pool.halt_async(id) {
+                        hub.add("chaos_slow_kills_landed", 1.0);
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // signal-driven resize (the OPPO-style rebalancing loop)
+        if let Some(scaler) = &mut autoscale {
+            if !stopping && last_autoscale.elapsed() >= autoscale_every {
+                last_autoscale = Instant::now();
+                let supply = rollout_tx.stats();
+                let sig = ScaleSignals {
+                    backlog: migrate.as_ref().map(|m| m.depth()).unwrap_or(0),
+                    supply_depth: supply.depth,
+                    supply_capacity: rollout_tx.capacity(),
+                    token_lag: hub
+                        .series_last("train/mean_lag_smoothed")
+                        .map(|p| p.value)
+                        .unwrap_or(0.0),
+                    batch_fill: hub
+                        .series_last("batch_fill")
+                        .map(|p| p.value)
+                        .unwrap_or(1.0),
+                    pool: pool.len(),
+                };
+                match scaler.decide(&sig) {
+                    ScaleDecision::Up => match pool.add_actor() {
+                        Ok(Some(id)) => {
+                            hub.add("autoscale_ups", 1.0);
+                            log.info(&format!(
+                                "autoscale up: +actor-{id} (backlog {}, pool {})",
+                                sig.backlog,
+                                pool.len()
+                            ));
+                        }
+                        Ok(None) => {} // at the ceiling
+                        Err(e) => {
+                            // spawn failure (resource exhaustion): unwind
+                            // like the fail-fast reap path so live actors
+                            // halt and the migration books still close
+                            unwind_pool(pool, &stop, &hub, &migrate);
+                            return Err(e);
+                        }
+                    },
+                    ScaleDecision::Down => {
+                        if pool.len() > pool.min_actors() {
+                            if let Some(id) = pool.highest_live() {
+                                // async SIGTERM-style retirement: the
+                                // victim deposits its in-flight sequences
+                                // into the migration hub and exits on its
+                                // own time; reap() collects it. Joining
+                                // here (kill_actor) would freeze chaos
+                                // firing / slow-kill deadlines / reap for
+                                // the whole wind-down. The still-counted
+                                // dying actor cannot re-trigger: the
+                                // scaler's cooldown spans the wind-down
+                                // and halt_async reports an already-
+                                // halted victim as false.
+                                if pool.halt_async(id) {
+                                    hub.add("autoscale_downs", 1.0);
+                                    log.info(&format!(
+                                        "autoscale down: -actor-{id} (supply {}/{}, pool {})",
+                                        sig.supply_depth,
+                                        sig.supply_capacity,
+                                        pool.len()
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    ScaleDecision::Hold => {}
+                }
+            }
+        }
         if let Err(e) = pool.reap() {
             // fail-fast crash (plain runs): unwind the whole topology
             // before surfacing the actor's error
-            stop.store(true, Ordering::Relaxed);
-            pool.shutdown().ok();
+            unwind_pool(pool, &stop, &hub, &migrate);
             return Err(e);
         }
+        hub.set("pool_size", pool.len() as f64);
         if !stop.load(Ordering::Relaxed) && pool.is_empty() {
             // no live actors and no respawn budget left: unwind the run
             // instead of letting the trainer wait on rollouts forever
-            stop.store(true, Ordering::Relaxed);
             let why = pool
                 .last_crash()
                 .map(str::to_string)
                 .unwrap_or_else(|| "all actors exited".into());
-            pool.shutdown().ok();
+            unwind_pool(pool, &stop, &hub, &migrate);
             anyhow::bail!("actor pool has no live actors left ({why})");
         }
         if stopping {
@@ -369,7 +516,39 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
         }
         std::thread::sleep(poll);
     }
-    pool.shutdown()
+    let out = pool.shutdown();
+    discard_leftover_snapshots(&hub, &migrate);
+    out
     // rollout_tx (and the pool's SpawnFn publisher clone) drop here,
     // closing the topic so the preprocessor drains and exits.
+}
+
+/// Fail-path teardown: raise `stop`, halt + join every actor, close the
+/// migration books. Every error exit from [`run_supervisor`] must go
+/// through here (the normal exit runs the same sequence inline at the
+/// tail) so `deposited == claimed + discarded` holds even on failed runs
+/// — where the accounting matters most.
+fn unwind_pool(
+    pool: ActorPool,
+    stop: &Arc<AtomicBool>,
+    hub: &MetricsHub,
+    migrate: &Option<Arc<MigrationHub>>,
+) {
+    stop.store(true, Ordering::Relaxed);
+    pool.shutdown().ok();
+    discard_leftover_snapshots(hub, migrate);
+}
+
+/// Snapshots still queued once every actor is down are deliberately
+/// discarded — the accounting counter closes the no-token-lost books
+/// (deposited == claimed + discarded). Runs on *every* supervisor exit,
+/// including the fail-fast and dead-pool error paths: the books matter
+/// most when diagnosing a failed run.
+fn discard_leftover_snapshots(hub: &MetricsHub, migrate: &Option<Arc<MigrationHub>>) {
+    if let Some(hub_m) = migrate {
+        let n = hub_m.discard_all();
+        if n > 0 {
+            hub.add("migration_snaps_discarded", n as f64);
+        }
+    }
 }

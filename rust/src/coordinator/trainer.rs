@@ -27,6 +27,7 @@ use crate::broker::{RecvError, Subscriber};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::MetricsHub;
 use crate::model::checkpoint::TrainState;
+use crate::rl::{BatchLag, LagTracker};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::logging::Logger;
 use crate::util::timer::global_seconds;
@@ -96,6 +97,11 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
             ),
         };
 
+    // running lag series (Fig 6a) + the smoothed live signal the
+    // supervisor's autoscaler polls via the hub
+    let mut lag_tracker = LagTracker::new();
+    const LAG_SMOOTH_WINDOW: usize = 8;
+
     for step in start_step..=cfg.rl_steps {
         // ---- get a batch ----
         let batch = loop {
@@ -121,6 +127,40 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
                 n_lag += 1;
             }
         }
+        // per-sequence weight-version span (the in-flight-update signature
+        // behind Fig 6a): a (row, segment) pair identifies one packed
+        // sequence — span = max − min version over its trained tokens
+        let mut span_sum = 0f64;
+        let mut span_n = 0usize;
+        for row in 0..batch.b {
+            let base = row * batch.t;
+            let mut cur_seg = 0i32; // 0 = padding, never a real segment
+            let (mut lo, mut hi) = (0u64, 0u64);
+            for k in 0..batch.t {
+                if batch.mask[base + k] != 1.0 {
+                    continue;
+                }
+                let seg = batch.seg[base + k];
+                let v = batch.versions[base + k];
+                if seg != cur_seg {
+                    if cur_seg != 0 {
+                        span_sum += (hi - lo) as f64;
+                        span_n += 1;
+                    }
+                    cur_seg = seg;
+                    lo = v;
+                    hi = v;
+                } else {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            if cur_seg != 0 {
+                span_sum += (hi - lo) as f64;
+                span_n += 1;
+            }
+        }
+        let mean_version_span = if span_n > 0 { span_sum / span_n as f64 } else { 0.0 };
 
         // ---- optimizer step ----
         let (b, t) = (batch.b, batch.t);
@@ -156,12 +196,22 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
         for (name, &val) in metric_names.iter().zip(mvec) {
             hub.record(&format!("train/{name}"), tnow, step as f64, val as f64);
         }
+        let mean_lag = if n_lag > 0 { sum_lag / n_lag as f64 } else { 0.0 };
+        lag_tracker.record(BatchLag {
+            max_steps: max_lag,
+            mean_steps: mean_lag,
+            max_samples: max_lag * b as u64,
+            mean_version_span,
+            n_tokens: n_lag,
+        });
         hub.record("train/max_lag", tnow, step as f64, max_lag as f64);
+        hub.record("train/mean_lag", tnow, step as f64, mean_lag);
+        hub.record("train/mean_version_span", tnow, step as f64, mean_version_span);
         hub.record(
-            "train/mean_lag",
+            "train/mean_lag_smoothed",
             tnow,
             step as f64,
-            if n_lag > 0 { sum_lag / n_lag as f64 } else { 0.0 },
+            lag_tracker.smoothed_mean_steps(LAG_SMOOTH_WINDOW),
         );
         hub.record("reward_vs_samples", tnow, samples_total, batch.mean_reward());
         hub.record("reward_vs_time", tnow, tnow, batch.mean_reward());

@@ -11,6 +11,7 @@
 use crate::data::task::Problem;
 use crate::rl::Rollout;
 use crate::runtime::HostTensor;
+use crate::sched::SeqSnapshot;
 use anyhow::Result;
 
 /// A generation request (the chat-completions analogue).
@@ -39,6 +40,16 @@ pub trait GenerationService {
     fn load(&self) -> usize;
 
     fn slots(&self) -> usize;
+
+    /// Drain every in-flight sequence into portable snapshots (the
+    /// kill/descale hand-off — nothing is aborted). Group ids and
+    /// generated prefixes are preserved, so the snapshots resume on any
+    /// other service instance.
+    fn export_snapshots(&mut self) -> Vec<SeqSnapshot>;
+
+    /// Adopt a sequence exported from another service instance; its KV
+    /// prefix is rebuilt locally. Returns the fresh local sequence id.
+    fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64>;
 }
 
 impl GenerationService for super::Engine {
@@ -64,5 +75,13 @@ impl GenerationService for super::Engine {
 
     fn slots(&self) -> usize {
         self.n_slots()
+    }
+
+    fn export_snapshots(&mut self) -> Vec<SeqSnapshot> {
+        self.export_snapshots()
+    }
+
+    fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64> {
+        self.import_snapshot(snap, problem)
     }
 }

@@ -10,7 +10,19 @@
 //! Invariants (property-tested device-free via the vendored stub):
 //! * buffer lengths are fixed at construction and never change;
 //! * slot writes never alias — writing slot `i` leaves slot `j` intact;
-//! * `reset` restores the idle defaults (pos 0, PAD tokens, force mask 1).
+//! * `reset` restores the idle defaults (pos parked, PAD tokens, force
+//!   mask 1).
+//!
+//! **The parking position.** The decode graph writes K/V at `pos[b]` for
+//! *every* row, every step (model.py's unconditional scatter) — including
+//! rows with nothing to do (empty slots, stalled slots, and replay rows
+//! that already finished their stream). Idle rows therefore must not
+//! point at cache position 0: that would overwrite the resident BOS K/V
+//! of whatever sequence owns the row (a stalled sequence resumes
+//! attending over a corrupted position 0). Instead they park at
+//! `max_seq - 1`, a position no real sequence ever writes or attends to
+//! (sequences finish — and are removed — the moment `pos + 1 == max_seq`,
+//! so the last position ever fed is `max_seq - 2`).
 
 use anyhow::Result;
 use xla::Literal;
@@ -22,6 +34,9 @@ pub struct StepArena {
     b: usize,
     vocab: usize,
     pad: i32,
+    /// cache position idle rows write their (discarded) K/V at — see the
+    /// module docs
+    park: i32,
     /// cache position per slot
     pub pos: Vec<i32>,
     /// current token per slot
@@ -47,12 +62,15 @@ pub struct StepLiterals {
 }
 
 impl StepArena {
-    pub fn new(b: usize, vocab: usize, pad: i32, temp: f32) -> StepArena {
+    /// `park` is the idle-row cache position (the engine passes
+    /// `max_seq - 1` — see module docs).
+    pub fn new(b: usize, vocab: usize, pad: i32, temp: f32, park: i32) -> StepArena {
         StepArena {
             b,
             vocab,
             pad,
-            pos: vec![0; b],
+            park,
+            pos: vec![park; b],
             cur: vec![pad; b],
             ftok: vec![pad; b],
             fmask: vec![1.0; b],
@@ -73,7 +91,7 @@ impl StepArena {
     /// buffer is left as-is: it is fully overwritten each step by either
     /// `fill_gumbel` or `zero_gumbel`.
     pub fn reset(&mut self) {
-        self.pos.iter_mut().for_each(|x| *x = 0);
+        self.pos.iter_mut().for_each(|x| *x = self.park);
         self.cur.iter_mut().for_each(|x| *x = self.pad);
         self.ftok.iter_mut().for_each(|x| *x = self.pad);
         self.fmask.iter_mut().for_each(|x| *x = 1.0);
@@ -123,15 +141,16 @@ mod tests {
 
     #[test]
     fn defaults_and_reset() {
-        let mut a = StepArena::new(3, 4, -7, 0.8);
+        let mut a = StepArena::new(3, 4, -7, 0.8, 95);
+        assert_eq!(a.pos, vec![95, 95, 95], "idle rows park off the live cache");
         a.set_slot(1, 5, 42, None);
         a.set_slot(2, 2, 9, Some(11));
-        assert_eq!(a.pos, vec![0, 5, 2]);
+        assert_eq!(a.pos, vec![95, 5, 2]);
         assert_eq!(a.cur, vec![-7, 42, 9]);
         assert_eq!(a.ftok, vec![-7, -7, 11]);
         assert_eq!(a.fmask, vec![1.0, 0.0, 1.0]);
         a.reset();
-        assert_eq!(a.pos, vec![0, 0, 0]);
+        assert_eq!(a.pos, vec![95, 95, 95]);
         assert_eq!(a.cur, vec![-7, -7, -7]);
         assert_eq!(a.ftok, vec![-7, -7, -7]);
         assert_eq!(a.fmask, vec![1.0, 1.0, 1.0]);
@@ -139,7 +158,7 @@ mod tests {
 
     #[test]
     fn literal_shapes_fixed() {
-        let a = StepArena::new(2, 3, 0, 1.0);
+        let a = StepArena::new(2, 3, 0, 1.0, 95);
         let l = a.to_literals().unwrap();
         assert_eq!(l.pos.array_shape().unwrap().dims(), &[2]);
         assert_eq!(l.gumbel.array_shape().unwrap().dims(), &[2, 3]);

@@ -1,6 +1,8 @@
 //! The engine proper: continuous-batching decode loop over the AOT
-//! decode graph, with in-flight request admission and in-flight weight
-//! updates. See module docs in engine/mod.rs for the hot-path data flow.
+//! decode graph, with in-flight request admission (pluggable via
+//! [`crate::sched::Scheduler`]), in-flight weight updates, and portable
+//! in-flight sequences ([`crate::sched::SeqSnapshot`] export/import).
+//! See module docs in engine/mod.rs for the hot-path data flow.
 
 use super::arena::StepArena;
 use super::kvcache::BlockAllocator;
@@ -8,7 +10,8 @@ use super::sequence::SeqState;
 use crate::data::task::Problem;
 use crate::model::tokenizer::{EOS_ID, PAD_ID};
 use crate::rl::Rollout;
-use crate::runtime::{DeviceVal, HostTensor, Runtime, Variant};
+use crate::runtime::{run_decode_step, DecodeInputs, DeviceVal, HostTensor, Runtime, Variant};
+use crate::sched::{SchedPolicy, Scheduler, SeqSnapshot, SeqView};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use crate::weights::ShadowSet;
@@ -27,6 +30,9 @@ pub struct EngineCfg {
     pub block_size: usize,
     /// total KV blocks; None = exactly enough for all slots at max_seq
     pub kv_blocks: Option<usize>,
+    /// admission policy (see `sched::scheduler`); Fifo reproduces the
+    /// legacy head-of-line behavior exactly
+    pub sched: SchedPolicy,
     /// record the full per-step log-distribution of sampled tokens
     /// (needed by the Fig 7 KL study; off on the hot path)
     pub capture_dist: bool,
@@ -46,6 +52,7 @@ impl EngineCfg {
             max_new_tokens: 48,
             block_size: 16,
             kv_blocks: None,
+            sched: SchedPolicy::Fifo,
             capture_dist: false,
             recompute_kv_on_update: false,
             greedy: false,
@@ -63,6 +70,12 @@ pub struct EngineStats {
     pub recompute_steps: u64,
     pub stall_steps: u64,
     pub finished: u64,
+    /// in-flight sequences exported as portable snapshots (drain/kill)
+    pub snapshots_exported: u64,
+    /// snapshots imported from another engine (migration adoptions)
+    pub snapshots_imported: u64,
+    /// full KV replays triggered by admitting an imported prefix
+    pub import_replays: u64,
     // ---- §Perf breakdown (accumulated microseconds) ----
     /// building + staging the per-step inputs (arena → device)
     pub stage_us: u64,
@@ -117,18 +130,6 @@ struct StagedParam {
     src: Option<Literal>,
 }
 
-/// Where the KV cache currently lives.
-///
-/// Steady state is `Device`: the previous step's KV output buffer is fed
-/// straight back as the next step's operand — zero host traffic. `Host`
-/// occurs at init, after a recompute replay seeds fresh zeros, and on
-/// builds whose executable returns a single tuple (the readback
-/// fallback); it costs one staging on the next step.
-enum KvState {
-    Device(PjRtBuffer),
-    Host(Literal),
-}
-
 pub struct Engine {
     pub cfg: EngineCfg,
     variant: Variant,
@@ -137,11 +138,22 @@ pub struct Engine {
     /// decode; incoming versions stage into the shadow set between steps
     /// and swap atomically at a step boundary (§Perf)
     params: ShadowSet<StagedParam>,
-    kv: KvState,
+    /// where the KV cache lives. Steady state is `Buf` (device): the
+    /// previous step's KV output buffer feeds straight back as the next
+    /// step's operand — zero host traffic. `Lit` (host) occurs at init,
+    /// after a recompute replay seeds fresh zeros, and on builds whose
+    /// executable returns a single tuple; it costs one staging.
+    kv: DeviceVal,
     slots: Vec<Option<SeqState>>,
     stalled: Vec<bool>,
     pending: VecDeque<SeqState>,
     allocator: BlockAllocator,
+    /// admission policy — owns the pending→slot decisions, including the
+    /// KV-block gate that used to be inlined here
+    scheduler: Box<dyn Scheduler>,
+    /// reusable scheduler-view buffer (admission runs inside the decode
+    /// hot loop: no per-step allocation, same rule as the StepArena)
+    view_buf: Vec<SeqView>,
     rng: Rng,
     clock: Stopwatch,
     next_seq_id: u64,
@@ -166,20 +178,27 @@ impl Engine {
         let variant = rt.manifest.variant(&cfg.variant)?.clone();
         crate::runtime::check_params(&variant, init_params)?;
         let graph = rt.graph(&cfg.variant, "decode")?;
-        let kv = KvState::Host(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?);
+        let kv = DeviceVal::Lit(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?);
         let allocator = match cfg.kv_blocks {
             Some(n) => BlockAllocator::new(n, cfg.block_size),
             None => BlockAllocator::for_slots(variant.gen_batch, variant.max_seq, cfg.block_size),
         };
+        let scheduler = cfg.sched.build();
         let b = variant.gen_batch;
         let v = variant.vocab;
-        let arena = StepArena::new(b, v, PAD_ID, cfg.temperature);
+        // idle rows park their (discarded) KV write at max_seq - 1: the
+        // decode graph scatters at pos[b] for every row, and position 0
+        // holds live BOS K/V (see arena module docs)
+        let park = (variant.max_seq - 1) as i32;
+        let arena = StepArena::new(b, v, PAD_ID, cfg.temperature, park);
         let mut eng = Engine {
             cfg,
             slots: (0..b).map(|_| None).collect(),
             stalled: vec![false; b],
             pending: VecDeque::new(),
             allocator,
+            scheduler,
+            view_buf: Vec::new(),
             rng,
             clock: Stopwatch::new(),
             next_seq_id: 1,
@@ -231,7 +250,12 @@ impl Engine {
 
     /// True while the KV cache is device-resident (steady decode state).
     pub fn kv_on_device(&self) -> bool {
-        matches!(self.kv, KvState::Device(_))
+        self.kv.is_device()
+    }
+
+    /// Name of the active admission policy.
+    pub fn sched_name(&self) -> &'static str {
+        self.scheduler.name()
     }
 
     /// Paper API `/v1/chat/completions` (enqueue form): submit a prompt.
@@ -250,6 +274,59 @@ impl Engine {
         );
         self.pending.push_back(seq);
         id
+    }
+
+    // ---------------- portable in-flight sequences ----------------
+
+    /// Adopt a sequence exported from another engine (migration). The
+    /// snapshot joins the pending queue; when the scheduler admits it,
+    /// its missing KV prefix is rebuilt by a full replay (the existing
+    /// `recompute_kv` path — `stats.import_replays` counts). Group id and
+    /// generated prefix are preserved verbatim; the engine assigns a
+    /// fresh local sequence id, which is returned.
+    pub fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64> {
+        snap.validate()?;
+        ensure!(
+            problem.id == snap.problem_id,
+            "problem {} does not match snapshot problem {}",
+            problem.id,
+            snap.problem_id
+        );
+        ensure!(
+            snap.total_len() < self.variant.max_seq,
+            "snapshot stream ({} tokens) leaves no room under max_seq {}",
+            snap.total_len(),
+            self.variant.max_seq
+        );
+        let id = self.next_seq_id;
+        self.next_seq_id += 1;
+        let seq = SeqState::from_snapshot(snap, id, problem, self.clock.seconds());
+        self.pending.push_back(seq);
+        self.stats.snapshots_imported += 1;
+        Ok(id)
+    }
+
+    /// Drain every in-flight sequence (active slots + pending queue) into
+    /// portable snapshots — the kill/descale path. Unlike [`Engine::drain`]
+    /// nothing is aborted: the snapshots resume on another engine with
+    /// group ids and generated prefixes intact. The engine is left empty.
+    pub fn export_snapshots(&mut self) -> Vec<SeqSnapshot> {
+        let words = self.rng.state_words();
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                self.allocator.release(s.seq_id).ok();
+                out.push(s.to_snapshot(words));
+            }
+        }
+        for s in self.pending.drain(..) {
+            out.push(s.to_snapshot(words));
+        }
+        for st in self.stalled.iter_mut() {
+            *st = false;
+        }
+        self.stats.snapshots_exported += out.len() as u64;
+        out
     }
 
     // ---------------- weight updates ----------------
@@ -391,32 +468,69 @@ impl Engine {
 
     // ---------------- decode loop ----------------
 
-    /// Admit pending sequences into free slots (in-flight adds).
-    fn admit(&mut self) {
+    /// Admit pending sequences into free slots (in-flight adds), one
+    /// scheduler pick per free slot. Returns true when any admitted
+    /// sequence carries progress made elsewhere (an imported snapshot),
+    /// i.e. its KV prefix must be replayed before the next decode step.
+    fn admit(&mut self) -> bool {
+        let mut needs_replay = false;
+        let mut views_built = false;
         for i in 0..self.slots.len() {
             if self.slots[i].is_some() {
                 continue;
             }
-            let Some(seq) = self.pending.front() else { break };
-            if !self.allocator.can_admit(seq.total_len()) {
-                break; // out of KV blocks: wait for a release
+            if self.pending.is_empty() {
+                break;
             }
-            let seq = self.pending.pop_front().unwrap();
+            if !views_built {
+                // built once per admit() into the reusable buffer, kept
+                // in sync with `pending` as picks are removed below
+                self.view_buf.clear();
+                self.view_buf.extend(self.pending.iter().map(|s| SeqView {
+                    seq_id: s.seq_id,
+                    group_id: s.group_id,
+                    total_len: s.total_len(),
+                    gen_len: s.gen_len(),
+                }));
+                views_built = true;
+            }
+            let allocator = &self.allocator;
+            let Some(idx) = self.scheduler.pick(&self.view_buf, &|len| allocator.can_admit(len))
+            else {
+                break; // policy admits nothing (e.g. out of KV blocks)
+            };
+            let Some(seq) = self.pending.remove(idx) else {
+                debug_assert!(false, "scheduler picked out-of-range index {idx}");
+                break;
+            };
+            self.view_buf.remove(idx);
             self.allocator
                 .admit(seq.seq_id, seq.total_len())
-                .expect("can_admit checked");
+                .expect("scheduler picked an admissible sequence");
+            if seq.pos > 0 {
+                needs_replay = true;
+            }
             self.slots[i] = Some(seq);
             self.stalled[i] = false;
         }
+        needs_replay
     }
 
     /// One decode step for every busy slot. Returns finished rollouts.
     pub fn step(&mut self) -> Result<StepOutcome> {
-        self.admit();
+        let needs_replay = self.admit();
         let b = self.variant.gen_batch;
         let vsz = self.variant.vocab;
         if self.n_active() == 0 {
             return Ok(StepOutcome { idle: true, ..Default::default() });
+        }
+        if needs_replay {
+            // a migrated prefix has no KV on this device: rebuild it via
+            // the replay path before decoding. The replay covers every
+            // active slot (same semantics as the §5.1 recompute), so
+            // healthy neighbors come out with KV under current weights.
+            self.stats.import_replays += 1;
+            self.recompute_kv()?;
         }
 
         // KV growth check: a slot whose next token needs a new block may
@@ -432,7 +546,7 @@ impl Engine {
         }
 
         // ---- build inputs in the reusable arena (no allocation) ----
-        let t_stage = Instant::now();
+        let t_arena = Instant::now();
         self.arena.reset();
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
@@ -447,49 +561,42 @@ impl Engine {
         } else {
             self.rng.fill_gumbel(&mut self.arena.gumbel);
         }
-
-        // NOTE: buffer staging is asynchronous on the TFRT CPU client —
-        // the source literals must outlive the execute call (the upstream
-        // crate's execute() awaits readiness for the same reason), so
-        // `lits` is bound to a local that lives past run_buffers_b.
+        // `lits` lives past the dispatch: staging inside run_decode_step
+        // is asynchronous and reads from these literals
         let lits = self.arena.to_literals()?;
-        let pos_b = self.graph.stage(&lits.pos)?;
-        let cur_b = self.graph.stage(&lits.cur)?;
-        let gum_b = self.graph.stage(&lits.gumbel)?;
-        let ftok_b = self.graph.stage(&lits.ftok)?;
-        let fmask_b = self.graph.stage(&lits.fmask)?;
-        let temp_b = self.graph.stage(&lits.temp)?;
-        // steady state feeds the previous step's KV output buffer straight
-        // back; only a host-resident KV (init/recompute/fallback) stages
-        let kv_staged: PjRtBuffer;
-        let kv_ref: &PjRtBuffer = match &self.kv {
-            KvState::Device(buf) => buf,
-            KvState::Host(l) => {
-                self.stats.kv_restages += 1;
-                kv_staged = self.graph.stage(l)?;
-                &kv_staged
-            }
-        };
+        self.stats.stage_us += t_arena.elapsed().as_micros() as u64;
 
-        let mut inputs: Vec<&PjRtBuffer> = self.params.active().iter().map(|p| &p.buf).collect();
-        let kv_idx = inputs.len();
-        inputs.push(kv_ref);
-        inputs.push(&pos_b);
-        inputs.push(&cur_b);
-        inputs.push(&gum_b);
-        inputs.push(&ftok_b);
-        inputs.push(&fmask_b);
-        inputs.push(&temp_b);
-        self.stats.stage_us += t_stage.elapsed().as_micros() as u64;
-
-        let t_exec = Instant::now();
-        let mut outs = self.graph.run_buffers_b(&inputs, &[kv_idx]).context("decode step")?;
-        self.stats.execute_us += t_exec.elapsed().as_micros() as u64;
+        let param_bufs: Vec<&PjRtBuffer> =
+            self.params.active().iter().map(|p| &p.buf).collect();
+        let d = run_decode_step(
+            &self.graph,
+            &param_bufs,
+            &mut self.kv,
+            DecodeInputs {
+                pos: &lits.pos,
+                cur: &lits.cur,
+                gumbel: &lits.gumbel,
+                ftok: &lits.ftok,
+                fmask: &lits.fmask,
+                temp: &lits.temp,
+            },
+        )
+        .context("decode step")?;
+        drop(param_bufs);
+        self.stats.stage_us += d.stage_us;
+        self.stats.execute_us += d.execute_us;
+        // ~0 on untupled builds; the full tuple readback on fallback ones
+        self.stats.readback_us += d.kv_take_us;
+        if d.kv_restaged {
+            self.stats.kv_restages += 1;
+        }
+        let mut outs = d.outs;
 
         // ---- selective readback ----
         // outputs: next_tok[B], chosen_lp[B], lp_all[B,V], kv', ent[B].
         // Only the O(B) outputs cross the boundary each step; lp_all only
-        // under capture_dist, the KV and entropy never.
+        // under capture_dist, the KV (already threaded back) and entropy
+        // never.
         let t_read = Instant::now();
         let next = outs.read_vec::<i32>(0)?;
         let lps = outs.read_vec::<f32>(1)?;
@@ -499,11 +606,6 @@ impl Engine {
             None
         };
         self.stats.readback_us += t_read.elapsed().as_micros() as u64;
-        drop(inputs);
-        self.kv = match outs.take(3)? {
-            DeviceVal::Buf(buf) => KvState::Device(buf),
-            DeviceVal::Lit(l) => KvState::Host(l),
-        };
         // the execute consumed the active param buffers: their keep-alive
         // host sources are no longer needed
         self.release_param_sources();
@@ -551,14 +653,15 @@ impl Engine {
 
     /// Rebuild the KV cache for all active sequences under the current
     /// weights by force-replaying their streams (Fig 7 "KV cache
-    /// recomputed" mode). Does not touch sequence state or stats other
-    /// than recompute counters. Cold path: keeps simple literal staging
-    /// for the replay inputs, but hoists the loop-invariant literals and
-    /// reuses the per-iteration index buffers.
+    /// recomputed" mode; also the snapshot-import path). Does not touch
+    /// sequence state or stats other than recompute counters. Cold path:
+    /// the per-position dispatch goes through the same `run_decode_step`
+    /// helper as the hot loop, with the loop-invariant literals hoisted
+    /// and the index vectors reused across positions.
     fn recompute_kv(&mut self) -> Result<()> {
         let b = self.variant.gen_batch;
         let vsz = self.variant.vocab;
-        self.kv = KvState::Host(HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?);
+        self.kv = DeviceVal::Lit(HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?);
         let max_pos = self
             .slots
             .iter()
@@ -566,15 +669,20 @@ impl Engine {
             .map(|s| s.pos)
             .max()
             .unwrap_or(0);
-        // loop-invariant inputs staged once per replay, not per position
+        // loop-invariant inputs built once per replay, not per position
         let zero_gum = HostTensor::zeros_f32(&[b, vsz]).to_literal()?;
         let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
         let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
         let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
-        let mut pos = vec![0i32; b];
+        // rows with no work at position p park at max_seq - 1 (writing
+        // pos 0 would clobber the BOS K/V a shorter neighbor already
+        // replayed — the heterogeneous-position case is the migration
+        // mainline, not just the §5.1 ablation)
+        let park = (self.variant.max_seq - 1) as i32;
+        let mut pos = vec![park; b];
         let mut cur = vec![PAD_ID; b];
         for p in 0..=max_pos {
-            pos.iter_mut().for_each(|x| *x = 0);
+            pos.iter_mut().for_each(|x| *x = park);
             cur.iter_mut().for_each(|x| *x = PAD_ID);
             for (i, slot) in self.slots.iter().enumerate() {
                 if let Some(s) = slot {
@@ -586,37 +694,25 @@ impl Engine {
             }
             let pos_l = Literal::vec1(&pos);
             let cur_l = Literal::vec1(&cur);
-            let kv_staged: PjRtBuffer;
-            let kv_ref: &PjRtBuffer = match &self.kv {
-                KvState::Device(buf) => buf,
-                KvState::Host(l) => {
-                    self.stats.kv_restages += 1;
-                    kv_staged = self.graph.stage(l)?;
-                    &kv_staged
-                }
-            };
-            let pos_b = self.graph.stage(&pos_l)?;
-            let cur_b = self.graph.stage(&cur_l)?;
-            let gum_b = self.graph.stage(&zero_gum)?;
-            let ftok_b = self.graph.stage(&ftok_l)?;
-            let fmask_b = self.graph.stage(&fmask_l)?;
-            let temp_b = self.graph.stage(&temp_l)?;
-            let mut inputs: Vec<&PjRtBuffer> =
-                self.params.active().iter().map(|p| &p.buf).collect();
-            let kv_idx = inputs.len();
-            inputs.push(kv_ref);
-            inputs.push(&pos_b);
-            inputs.push(&cur_b);
-            inputs.push(&gum_b);
-            inputs.push(&ftok_b);
-            inputs.push(&fmask_b);
-            inputs.push(&temp_b);
-            let mut outs = self.graph.run_buffers_b(&inputs, &[kv_idx])?;
-            drop(inputs);
-            self.kv = match outs.take(3)? {
-                DeviceVal::Buf(buf) => KvState::Device(buf),
-                DeviceVal::Lit(l) => KvState::Host(l),
-            };
+            let param_bufs: Vec<&PjRtBuffer> =
+                self.params.active().iter().map(|sp| &sp.buf).collect();
+            let d = run_decode_step(
+                &self.graph,
+                &param_bufs,
+                &mut self.kv,
+                DecodeInputs {
+                    pos: &pos_l,
+                    cur: &cur_l,
+                    gumbel: &zero_gum,
+                    ftok: &ftok_l,
+                    fmask: &fmask_l,
+                    temp: &temp_l,
+                },
+            )?;
+            drop(param_bufs);
+            if d.kv_restaged {
+                self.stats.kv_restages += 1;
+            }
             self.stats.recompute_steps += 1;
         }
         // replay executes consumed the active param buffers
@@ -625,8 +721,10 @@ impl Engine {
         Ok(())
     }
 
-    /// Abort everything in flight (shutdown path). Returns unfinished
-    /// rollouts with `FinishReason::Aborted`.
+    /// Abort everything in flight (run-shutdown path — the work is
+    /// deliberately discarded). Returns unfinished rollouts with
+    /// `FinishReason::Aborted`. For kill/descale paths that should *not*
+    /// lose the work, use [`Engine::export_snapshots`] instead.
     pub fn drain(&mut self) -> Vec<Rollout> {
         let t = self.clock.seconds();
         let mut out = Vec::new();

@@ -4,7 +4,17 @@
 //!
 //! * **continuous batching** — a fixed pool of `gen_batch` slots; new
 //!   requests are admitted *in-flight* the moment a slot (and its KV
-//!   blocks) frees, without stopping in-progress sequences;
+//!   blocks) frees, without stopping in-progress sequences. *Which*
+//!   pending sequence enters a freed slot is a pluggable
+//!   [`crate::sched::Scheduler`] policy (FIFO default; longest-prefix
+//!   first to prioritize migrated work);
+//! * **portable in-flight sequences** — [`Engine::export_snapshots`]
+//!   drains every in-flight sequence into serializable
+//!   [`crate::sched::SeqSnapshot`]s (prompt + generated prefix +
+//!   per-token logprobs/versions + RNG cursor) instead of aborting them;
+//!   [`Engine::import_snapshot`] adopts one on another engine, rebuilding
+//!   its KV prefix with the existing replay path — no salvageable token
+//!   is lost to actor churn or descaling;
 //! * **paged KV accounting** — a block allocator in the vLLM style
 //!   ([`kvcache`]) gates admission; the device-side cache itself is a
 //!   dense per-slot tensor (the AOT decode graph's layout);

@@ -9,6 +9,7 @@
 
 use crate::data::task::Problem;
 use crate::rl::{FinishReason, Rollout};
+use crate::sched::SeqSnapshot;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SeqPhase {
@@ -106,6 +107,56 @@ impl SeqState {
         matches!(self.phase, SeqPhase::Finished(_))
     }
 
+    /// Export as a portable snapshot (see `sched::snapshot`). `rng_words`
+    /// is the owning engine's RNG cursor at export time — a deterministic
+    /// harness that resumes from it continues the exact sampling stream.
+    pub fn to_snapshot(&self, rng_words: [u64; 4]) -> SeqSnapshot {
+        debug_assert!(!self.finished(), "finished sequences leave via into_rollout");
+        SeqSnapshot {
+            seq_id: self.seq_id,
+            group_id: self.group_id,
+            problem_id: self.problem.id,
+            prompt: self.stream[..self.prompt_len].to_vec(),
+            gen_tokens: self.gen_tokens.clone(),
+            behavior_lp: self.behavior_lp.clone(),
+            token_version: self.token_version.clone(),
+            pos: self.pos,
+            max_new: self.max_new,
+            rng_words,
+            t_start: self.t_start,
+        }
+    }
+
+    /// Rebuild an in-flight sequence from a snapshot exported elsewhere.
+    /// `seq_id` is the *importing* engine's fresh id (snapshot ids are
+    /// only unique per exporting engine); the group id travels verbatim.
+    /// The phase is re-derived from the position, matching the transition
+    /// in [`SeqState::advance`].
+    pub fn from_snapshot(snap: &SeqSnapshot, seq_id: u64, problem: Problem, t_start: f64) -> SeqState {
+        let mut stream = Vec::with_capacity(snap.total_len());
+        stream.extend_from_slice(&snap.prompt);
+        stream.extend_from_slice(&snap.gen_tokens);
+        let phase = if snap.pos + 1 < snap.prompt.len() {
+            SeqPhase::Prefill
+        } else {
+            SeqPhase::Decode
+        };
+        SeqState {
+            seq_id,
+            group_id: snap.group_id,
+            problem,
+            prompt_len: snap.prompt.len(),
+            stream,
+            gen_tokens: snap.gen_tokens.clone(),
+            behavior_lp: snap.behavior_lp.clone(),
+            token_version: snap.token_version.clone(),
+            pos: snap.pos,
+            phase,
+            max_new: snap.max_new,
+            t_start,
+        }
+    }
+
     pub fn into_rollout(self, actor_id: usize, t_end: f64) -> Rollout {
         let finish = match self.phase {
             SeqPhase::Finished(f) => f,
@@ -193,6 +244,52 @@ mod tests {
         }
         assert!(matches!(s.phase, SeqPhase::Finished(FinishReason::Length)));
         assert!(s.total_len() <= 8);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_mid_decode() {
+        let mut s = seq(8);
+        for _ in 0..3 {
+            s.advance(0, 0.0, 0, 2, 96); // prefill
+        }
+        s.advance(42, -0.7, 3, 2, 96);
+        s.advance(43, -0.9, 4, 2, 96);
+        let words = [1, 2, 3, 4];
+        let snap = s.to_snapshot(words);
+        snap.validate().unwrap();
+        assert_eq!(snap.prompt, vec![1, 10, 11, 12]);
+        assert_eq!(snap.gen_tokens, vec![42, 43]);
+        assert_eq!(snap.token_version, vec![3, 4]);
+        assert_eq!(snap.rng_words, words);
+
+        let p = TaskGen::curriculum_small().problem(snap.problem_id);
+        let r = SeqState::from_snapshot(&snap, 99, p, 5.0);
+        assert_eq!(r.seq_id, 99, "importer assigns its own id");
+        assert_eq!(r.group_id, s.group_id, "group id travels verbatim");
+        assert_eq!(r.stream, s.stream);
+        assert_eq!(r.pos, s.pos);
+        assert_eq!(r.phase, SeqPhase::Decode);
+        assert_eq!(r.cur_token(), 43);
+        assert_eq!(r.forced_next(), None, "resumes sampling, not forcing");
+        // continues exactly where the exporter stopped
+        let mut r = r;
+        r.advance(2, -0.1, 5, 2, 96); // EOS
+        let out = r.into_rollout(7, 6.0);
+        assert_eq!(out.gen_tokens, vec![42, 43, 2]);
+        assert_eq!(out.token_version, vec![3, 4, 5]);
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn snapshot_of_prefill_sequence_resumes_forcing() {
+        let mut s = seq(8);
+        s.advance(0, 0.0, 0, 2, 96); // one forced step: pos = 1
+        let snap = s.to_snapshot([0; 4]);
+        assert_eq!(snap.salvaged_tokens(), 0);
+        let p = TaskGen::curriculum_small().problem(snap.problem_id);
+        let r = SeqState::from_snapshot(&snap, 1, p, 0.0);
+        assert_eq!(r.phase, SeqPhase::Prefill);
+        assert_eq!(r.forced_next(), Some(11), "prompt forcing continues");
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod model;
 pub mod perfmodel;
 pub mod rl;
 pub mod runtime;
+pub mod sched;
 pub mod simcluster;
 pub mod testkit;
 pub mod util;

@@ -98,8 +98,27 @@ impl MetricsHub {
         *g.counters.entry(counter.to_string()).or_insert(0.0) += delta;
     }
 
+    /// Gauge semantics: overwrite a counter with the current value (pool
+    /// size, queue depth — things that go up *and* down).
+    pub fn set(&self, counter: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.insert(counter.to_string(), value);
+    }
+
     pub fn counter(&self, name: &str) -> f64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Latest point of a series without cloning its history — O(1) under
+    /// the lock, safe for high-cadence pollers (the autoscaler reads the
+    /// trainer's lag/fill series through this every evaluation).
+    pub fn series_last(&self, name: &str) -> Option<Point> {
+        self.inner
+            .lock()
+            .unwrap()
+            .series
+            .get(name)
+            .and_then(|s| s.points.last().copied())
     }
 
     pub fn series(&self, name: &str) -> Series {
@@ -197,6 +216,19 @@ mod tests {
         let rep = hub.snapshot();
         assert_eq!(rep.series("reward").unwrap().points.len(), 2);
         assert_eq!(rep.counters["samples"], 16.0);
+    }
+
+    #[test]
+    fn gauge_set_overwrites_and_series_last_is_latest() {
+        let hub = MetricsHub::new();
+        hub.set("pool_size", 3.0);
+        hub.set("pool_size", 2.0);
+        assert_eq!(hub.counter("pool_size"), 2.0, "set overwrites, not adds");
+        assert!(hub.series_last("nope").is_none());
+        hub.record("lag", 0.1, 1.0, 5.0);
+        hub.record("lag", 0.2, 2.0, 7.0);
+        let p = hub.series_last("lag").unwrap();
+        assert_eq!((p.x, p.value), (2.0, 7.0));
     }
 
     #[test]

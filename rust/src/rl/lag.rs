@@ -69,6 +69,27 @@ impl LagTracker {
         self.per_step.iter().map(|l| l.max_steps).max().unwrap_or(0)
     }
 
+    /// Lag profile of the most recently trained batch.
+    pub fn latest(&self) -> Option<&BatchLag> {
+        self.per_step.last()
+    }
+
+    /// Mean of `mean_steps` over the last `window` batches — the smoothed
+    /// token-lag signal the autoscaler's lag guard consumes (a single
+    /// batch's lag is spiky: one straggler sequence dominates `max_steps`
+    /// and skews `mean_steps` for that batch alone).
+    pub fn smoothed_mean_steps(&self, window: usize) -> f64 {
+        if self.per_step.is_empty() {
+            return 0.0;
+        }
+        let n = self.per_step.len().min(window.max(1));
+        self.per_step[self.per_step.len() - n..]
+            .iter()
+            .map(|l| l.mean_steps)
+            .sum::<f64>()
+            / n as f64
+    }
+
     /// Brute-force recount for the property tests: recompute from raw
     /// rollouts and compare with the recorded value.
     pub fn verify_step(
@@ -135,5 +156,26 @@ mod tests {
         t.record(batch_lag(&[&r2], 5, 8));
         assert_eq!(t.max_ever_steps(), 5);
         assert!(LagTracker::verify_step(&t.per_step[1], &[&r2], 5, 8));
+    }
+
+    #[test]
+    fn latest_and_smoothed_signal() {
+        let mut t = LagTracker::new();
+        assert!(t.latest().is_none());
+        assert_eq!(t.smoothed_mean_steps(4), 0.0, "empty tracker reads 0");
+        // mean lags 2.5, 1.5, 0.5 across three single-token batches
+        for v in [1u64, 2, 3] {
+            let r = rollout(vec![v]);
+            t.record(batch_lag(&[&r], 3 + (v - 1) / 2, 8));
+        }
+        let lags: Vec<f64> = t.per_step.iter().map(|l| l.mean_steps).collect();
+        assert_eq!(t.latest().unwrap().mean_steps, lags[2]);
+        let want2 = (lags[1] + lags[2]) / 2.0;
+        assert!((t.smoothed_mean_steps(2) - want2).abs() < 1e-12);
+        // window larger than history falls back to the whole history
+        let want_all = lags.iter().sum::<f64>() / 3.0;
+        assert!((t.smoothed_mean_steps(99) - want_all).abs() < 1e-12);
+        // window 0 clamps to 1 (latest batch)
+        assert_eq!(t.smoothed_mean_steps(0), lags[2]);
     }
 }

@@ -1,0 +1,215 @@
+//! Cross-actor hand-off of portable in-flight rollouts.
+//!
+//! When an actor is killed (chaos, crash-restart) or descaled (autoscale
+//! down, `RemoveActor`), its engine exports every in-flight sequence as a
+//! [`SeqSnapshot`] and *deposits* it here; surviving or replacement
+//! actors *claim* snapshots as slot capacity frees and resume them
+//! (group ids preserved, prefixes intact). The hub is therefore the
+//! system's **rollout queue**: its depth is the backlog of in-flight
+//! rollouts waiting for generation capacity — the autoscaler's primary
+//! scale-up signal.
+//!
+//! Accounting invariant (asserted by the chaos-harness tests): every
+//! deposited snapshot is eventually either *claimed* (its sequence
+//! completes on another actor) or *discarded* (deliberately dropped at
+//! run shutdown) — `deposited == claimed + discarded + depth` at all
+//! times, so no salvageable token can be silently lost.
+
+use super::snapshot::SeqSnapshot;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct HubState {
+    queue: VecDeque<SeqSnapshot>,
+    deposited: u64,
+    claimed: u64,
+    discarded: u64,
+    tokens_deposited: u64,
+    tokens_claimed: u64,
+}
+
+/// Thread-safe snapshot hand-off queue (see module docs). Shared as an
+/// `Arc<MigrationHub>` between the supervisor and every actor.
+#[derive(Debug, Default)]
+pub struct MigrationHub {
+    inner: Mutex<HubState>,
+}
+
+impl MigrationHub {
+    pub fn new() -> MigrationHub {
+        MigrationHub::default()
+    }
+
+    /// Queue snapshots for re-generation (kill/descale path). Returns the
+    /// number deposited.
+    pub fn deposit(&self, snaps: Vec<SeqSnapshot>) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let n = snaps.len();
+        g.deposited += n as u64;
+        for s in snaps {
+            g.tokens_deposited += s.salvaged_tokens() as u64;
+            g.queue.push_back(s);
+        }
+        n
+    }
+
+    /// Claim up to `max` snapshots for resumption (FIFO — oldest orphans
+    /// first; the engine-side scheduler decides their admission order).
+    pub fn claim(&self, max: usize) -> Vec<SeqSnapshot> {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.queue.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = g.queue.pop_front().expect("len checked");
+            g.tokens_claimed += s.salvaged_tokens() as u64;
+            out.push(s);
+        }
+        g.claimed += n as u64;
+        out
+    }
+
+    /// Return a claimed-but-unusable snapshot to the ledger as discarded
+    /// (the importer rejected it: config skew, malformed deposit). Moves
+    /// the sequence and its tokens from the claimed to the discarded
+    /// column, so the conservation books — and the tokens-salvaged
+    /// ledger — stay exact even when an import fails.
+    pub fn reject(&self, snap: &SeqSnapshot) {
+        let mut g = self.inner.lock().unwrap();
+        g.claimed = g.claimed.saturating_sub(1);
+        g.discarded += 1;
+        g.tokens_claimed = g
+            .tokens_claimed
+            .saturating_sub(snap.salvaged_tokens() as u64);
+    }
+
+    /// Drop everything still queued (run shutdown), accounting it as
+    /// deliberately discarded. Returns the number discarded.
+    pub fn discard_all(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.queue.len();
+        g.queue.clear();
+        g.discarded += n as u64;
+        n
+    }
+
+    /// Snapshots currently awaiting an actor — the rollout-queue backlog.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn deposited(&self) -> u64 {
+        self.inner.lock().unwrap().deposited
+    }
+
+    pub fn claimed(&self) -> u64 {
+        self.inner.lock().unwrap().claimed
+    }
+
+    pub fn discarded(&self) -> u64 {
+        self.inner.lock().unwrap().discarded
+    }
+
+    /// Generated tokens deposited / claimed so far (salvage accounting).
+    pub fn token_counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.tokens_deposited, g.tokens_claimed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(seq_id: u64, gen: usize) -> SeqSnapshot {
+        SeqSnapshot {
+            seq_id,
+            group_id: seq_id,
+            problem_id: seq_id,
+            prompt: vec![1, 2],
+            gen_tokens: vec![5; gen],
+            behavior_lp: vec![-0.5; gen],
+            token_version: vec![1; gen],
+            pos: if gen == 0 { 0 } else { 1 + gen },
+            max_new: 32,
+            rng_words: [0; 4],
+            t_start: 0.0,
+        }
+    }
+
+    #[test]
+    fn deposit_claim_conservation() {
+        let hub = MigrationHub::new();
+        assert_eq!(hub.deposit(vec![snap(1, 3), snap(2, 0), snap(3, 5)]), 3);
+        assert_eq!(hub.depth(), 3);
+        let got = hub.claim(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].seq_id, 1, "FIFO: oldest orphan first");
+        assert_eq!(hub.discard_all(), 1);
+        assert_eq!(hub.claim(5).len(), 0);
+        assert_eq!(
+            (hub.deposited(), hub.claimed(), hub.discarded(), hub.depth()),
+            (3, 2, 1, 0),
+            "deposited == claimed + discarded + depth"
+        );
+        let (dep_tok, cl_tok) = hub.token_counts();
+        assert_eq!(dep_tok, 8);
+        assert_eq!(cl_tok, 3, "seq 1 and 2 claimed: 3 + 0 tokens");
+    }
+
+    #[test]
+    fn reject_moves_books_from_claimed_to_discarded() {
+        let hub = MigrationHub::new();
+        hub.deposit(vec![snap(1, 4), snap(2, 2)]);
+        let got = hub.claim(2);
+        hub.reject(&got[0]);
+        assert_eq!(
+            (hub.deposited(), hub.claimed(), hub.discarded(), hub.depth()),
+            (2, 1, 1, 0),
+            "rejection keeps deposited == claimed + discarded + depth"
+        );
+        let (dep, cl) = hub.token_counts();
+        assert_eq!((dep, cl), (6, 2), "rejected tokens leave the salvage ledger");
+    }
+
+    #[test]
+    fn claim_respects_max_and_empty() {
+        let hub = MigrationHub::new();
+        assert!(hub.claim(4).is_empty());
+        hub.deposit(vec![snap(1, 1)]);
+        assert_eq!(hub.claim(0).len(), 0);
+        assert_eq!(hub.claim(10).len(), 1);
+    }
+
+    #[test]
+    fn concurrent_deposit_claim_loses_nothing() {
+        use std::sync::Arc;
+        let hub = Arc::new(MigrationHub::new());
+        let mut hands = Vec::new();
+        for a in 0..4u64 {
+            let hub = hub.clone();
+            hands.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    hub.deposit(vec![snap(a * 1000 + i, 2)]);
+                }
+            }));
+        }
+        let claimer = {
+            let hub = hub.clone();
+            std::thread::spawn(move || {
+                let mut got = 0usize;
+                while got < 200 {
+                    got += hub.claim(7).len();
+                }
+                got
+            })
+        };
+        for h in hands {
+            h.join().unwrap();
+        }
+        assert_eq!(claimer.join().unwrap(), 200);
+        assert_eq!(hub.deposited(), 200);
+        assert_eq!(hub.claimed(), 200);
+        assert_eq!(hub.depth(), 0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Sequence-level scheduling: portable in-flight rollouts, pluggable
+//! admission, and signal-driven pool autoscaling.
+//!
+//! PipelineRL's core claim (paper §4) is that the accelerators stay
+//! saturated because *sequences stay in flight across disruptions* — a
+//! weight swap interrupts nothing, and ideally neither does generator
+//! churn or a pool rescale. Before this module, that held only for
+//! weight swaps: admission was FIFO hard-wired into the engine, a killed
+//! actor aborted every in-flight sequence, and the pool resized only when
+//! a chaos schedule said so. This module is the missing layer:
+//!
+//! * [`Scheduler`] ([`scheduler`]) — the admission policy, extracted out
+//!   of `Engine::admit` behind a trait. [`scheduler::Fifo`] reproduces
+//!   the legacy head-of-line behavior exactly;
+//!   [`scheduler::LongestPrefixFirst`] prefers the queued sequence with
+//!   the most already-generated tokens, so salvaged (migrated) prefixes
+//!   re-enter decode first and their tokens accrue the least extra lag.
+//!   This is the hook where OPPO-style (arXiv 2509.25762) stage-aware
+//!   admission policies plug in without touching the engine.
+//!
+//! * [`SeqSnapshot`] ([`snapshot`]) — a *portable* in-flight sequence:
+//!   prompt, generated prefix, per-token behavior logprobs and weight
+//!   versions, cache position, budget, and the exporting engine's RNG
+//!   cursor. Serializes to a compact byte format (`PRLSNAP1`,
+//!   round-trips bit-exactly) so it can cross process boundaries. The
+//!   engine exports snapshots on drain/kill and imports them on another
+//!   actor, rebuilding the KV prefix with its existing replay path — the
+//!   paper's "interrupted sequences resume after the update" property
+//!   (§4), extended from weight swaps to actor churn (LlamaRL-style
+//!   fully-async generator reconfiguration, arXiv 2505.24034).
+//!
+//! * [`MigrationHub`] ([`migrate`]) — the supervisor-side hand-off queue
+//!   for exported snapshots. A killed or descaled actor deposits its
+//!   in-flight sequences; surviving or replacement actors claim them
+//!   (group ids preserved, so the preprocessor's advantage groups
+//!   complete normally — no phantom aborts). Its depth is the
+//!   *rollout-queue backlog*: in-flight rollouts waiting for generation
+//!   capacity.
+//!
+//! * [`AutoScaler`] ([`autoscale`]) — hysteresis-guarded scale decisions
+//!   from live pipeline signals, replacing chaos-only resize: sustained
+//!   rollout-queue backlog (work waiting for an actor) grows the pool;
+//!   a saturated rollout supply topic with zero backlog (generation
+//!   outrunning training — dropped/stale tokens) shrinks it. Token lag
+//!   and trainer batch fill act as guards. This is the OPPO dynamic
+//!   stage-rebalancing analogue: capacity follows the live occupancy
+//!   signals of the pipeline, not a static plan.
+//!
+//! Layering: this module depends only on `anyhow` — the engine
+//! (`engine::sequence` ↔ [`SeqSnapshot`]), the coordinator
+//! (supervisor ↔ [`AutoScaler`]/[`MigrationHub`]) and the cluster
+//! simulator (`simcluster` ↔ [`AutoScaler`]) all sit above it.
+
+pub mod autoscale;
+pub mod migrate;
+pub mod scheduler;
+pub mod snapshot;
+
+pub use autoscale::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
+pub use migrate::MigrationHub;
+pub use scheduler::{SchedPolicy, Scheduler, SeqView};
+pub use snapshot::SeqSnapshot;

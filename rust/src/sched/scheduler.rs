@@ -1,0 +1,186 @@
+//! Admission scheduling policies (extracted from `Engine::admit`).
+//!
+//! The engine owns a fixed pool of decode slots and a queue of pending
+//! sequences; whenever a slot is free it asks the scheduler which queued
+//! sequence to admit. The scheduler also owns the KV-block gate that used
+//! to be inlined in the engine: `can_admit(total_len)` reports whether
+//! the paged allocator can hold a sequence of that length *right now*,
+//! and a policy that returns `None` leaves the slot empty this round
+//! (admission backpressure — the vLLM-style "wait for a release").
+//!
+//! Policies are deliberately stateless views over the queue: preemption
+//! of *running* sequences stays with the engine (it stalls a slot whose
+//! KV growth fails, vLLM-style), so a policy's whole contract is the
+//! `pick` order.
+
+/// Read-only view of one queued sequence, handed to scheduling policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqView {
+    pub seq_id: u64,
+    pub group_id: u64,
+    /// current stream length (BOS + prompt + generated prefix) — what the
+    /// KV allocator must be able to hold at admission
+    pub total_len: usize,
+    /// generated-prefix length (> 0 only for imported snapshots)
+    pub gen_len: usize,
+}
+
+/// An admission policy: picks which pending sequence enters the next free
+/// decode slot.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Pick the queue index of the sequence to admit into the next free
+    /// slot, or `None` to leave the slot empty this round.
+    /// `can_admit(total_len)` is the live KV-block gate.
+    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize>;
+}
+
+/// The legacy policy, bit-for-bit: admit the queue head, and if the head
+/// cannot get KV blocks, admit nothing (head-of-line blocking — arrival
+/// order is completion-fairness under uniform lengths).
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize> {
+        let head = pending.first()?;
+        if can_admit(head.total_len) {
+            Some(0)
+        } else {
+            None
+        }
+    }
+}
+
+/// Longest-generated-prefix first: among admissible queued sequences,
+/// prefer the one with the most already-generated tokens (ties broken by
+/// total length, then queue order — deterministic).
+///
+/// Rationale: a migrated snapshot's prefix tokens were sampled under old
+/// weight versions; every decode round it spends queued adds one more
+/// optimizer step of lag to *all* of them. Admitting the longest salvaged
+/// prefix first minimizes the total extra lag across salvaged tokens, and
+/// also frees its KV blocks soonest (it is closest to finishing). Unlike
+/// [`Fifo`], an inadmissible head does not block shorter sequences behind
+/// it.
+#[derive(Debug, Default)]
+pub struct LongestPrefixFirst;
+
+impl Scheduler for LongestPrefixFirst {
+    fn name(&self) -> &'static str {
+        "longest_prefix"
+    }
+
+    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize> {
+        let mut best: Option<(usize, SeqView)> = None;
+        for (i, v) in pending.iter().enumerate() {
+            if !can_admit(v.total_len) {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, b)) => {
+                    v.gen_len > b.gen_len || (v.gen_len == b.gen_len && v.total_len > b.total_len)
+                }
+            };
+            if better {
+                best = Some((i, *v));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// Config-level selector for the admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    #[default]
+    Fifo,
+    LongestPrefixFirst,
+}
+
+impl SchedPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::LongestPrefixFirst => "longest_prefix",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedPolicy::Fifo => Box::new(Fifo),
+            SchedPolicy::LongestPrefixFirst => Box::new(LongestPrefixFirst),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "longest_prefix" => Some(SchedPolicy::LongestPrefixFirst),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(seq_id: u64, total_len: usize, gen_len: usize) -> SeqView {
+        SeqView { seq_id, group_id: seq_id, total_len, gen_len }
+    }
+
+    #[test]
+    fn fifo_admits_head_only() {
+        let mut s = Fifo;
+        let q = vec![view(1, 10, 0), view(2, 3, 0)];
+        assert_eq!(s.pick(&q, &|_| true), Some(0));
+        // head too long for the pool: nothing admitted even though the
+        // second sequence would fit (legacy head-of-line semantics)
+        assert_eq!(s.pick(&q, &|len| len <= 5), None);
+        assert_eq!(s.pick(&[], &|_| true), None);
+    }
+
+    #[test]
+    fn longest_prefix_prefers_salvaged_work() {
+        let mut s = LongestPrefixFirst;
+        let q = vec![view(1, 10, 0), view(2, 14, 6), view(3, 12, 6), view(4, 9, 2)];
+        // gen_len 6 twice: the longer total wins
+        assert_eq!(s.pick(&q, &|_| true), Some(1));
+        // block the winner: next-best admissible
+        assert_eq!(s.pick(&q, &|len| len < 14), Some(2));
+        // only fresh prompts fit
+        assert_eq!(s.pick(&q, &|len| len <= 10), Some(3));
+        assert_eq!(s.pick(&q, &|_| false), None);
+    }
+
+    #[test]
+    fn longest_prefix_ties_break_by_queue_order() {
+        let mut s = LongestPrefixFirst;
+        let q = vec![view(7, 10, 3), view(8, 10, 3)];
+        assert_eq!(s.pick(&q, &|_| true), Some(0));
+    }
+
+    #[test]
+    fn policy_parse_and_build() {
+        assert_eq!(SchedPolicy::parse("fifo"), Some(SchedPolicy::Fifo));
+        assert_eq!(
+            SchedPolicy::parse("longest_prefix"),
+            Some(SchedPolicy::LongestPrefixFirst)
+        );
+        assert_eq!(SchedPolicy::parse("srpt"), None);
+        assert_eq!(SchedPolicy::Fifo.build().name(), "fifo");
+        assert_eq!(
+            SchedPolicy::LongestPrefixFirst.build().name(),
+            "longest_prefix"
+        );
+        assert_eq!(SchedPolicy::default(), SchedPolicy::Fifo);
+    }
+}

@@ -1,0 +1,317 @@
+//! Portable in-flight sequences.
+//!
+//! A [`SeqSnapshot`] is everything another engine needs to *resume* a
+//! sequence mid-generation: the forced prompt, the generated prefix with
+//! its per-token behavior logprobs and weight-version tags (the rollout
+//! record's raw material — nothing sampled so far is lost), the cache
+//! position, the remaining generation budget, and the exporting engine's
+//! RNG cursor (PCG state words, see `util::Rng::state_words`). The
+//! importer rebuilds the KV prefix by replaying the stream under its own
+//! weights (the engine's existing recompute path), then continues
+//! sampling where the exporter stopped.
+//!
+//! The byte format (`PRLSNAP1`, all little-endian, fixed field order) is
+//! the process-boundary form: serialize → deserialize → serialize is
+//! byte-identical (property-tested in tests/migration.rs), so snapshots
+//! can be content-addressed, logged, or shipped over any transport
+//! without drift.
+//!
+//! ```text
+//! magic "PRLSNAP1"                      8 bytes
+//! seq_id, group_id, problem_id          u64 ×3
+//! pos, max_new                          u64 ×2
+//! rng_words                             u64 ×4
+//! t_start                               f64
+//! prompt_len, gen_len                   u32 ×2
+//! prompt                                i32 × prompt_len
+//! gen_tokens                            i32 × gen_len
+//! behavior_lp                           f32 × gen_len
+//! token_version                         u64 × gen_len
+//! ```
+
+use anyhow::{bail, Result};
+
+const MAGIC: &[u8; 8] = b"PRLSNAP1";
+
+/// A serializable, resumable in-flight sequence. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqSnapshot {
+    /// engine-local id on the *exporting* engine (informational: the
+    /// importer assigns its own)
+    pub seq_id: u64,
+    /// advantage-group id — preserved verbatim so the preprocessor's
+    /// group completes normally wherever the sequence finishes
+    pub group_id: u64,
+    /// stable problem id (problems regenerate deterministically from it)
+    pub problem_id: u64,
+    /// `[BOS, prompt...]` — the forced prefix
+    pub prompt: Vec<i32>,
+    /// generated prefix (the salvaged tokens)
+    pub gen_tokens: Vec<i32>,
+    /// behavior-policy logprob per generated token
+    pub behavior_lp: Vec<f32>,
+    /// weight version each generated token was sampled under
+    pub token_version: Vec<u64>,
+    /// next cache position to write (== tokens fed so far)
+    pub pos: usize,
+    /// total generation budget (the prefix counts against it)
+    pub max_new: usize,
+    /// exporting engine's RNG cursor at export time (PCG state words) —
+    /// lets a deterministic harness continue the exact sampling stream
+    pub rng_words: [u64; 4],
+    /// generation start on the exporter's clock (informational; importers
+    /// restart the clock)
+    pub t_start: f64,
+}
+
+impl SeqSnapshot {
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.gen_tokens.len()
+    }
+
+    /// Generated tokens this snapshot preserves (the "salvaged" count).
+    pub fn salvaged_tokens(&self) -> usize {
+        self.gen_tokens.len()
+    }
+
+    /// Structural consistency: parallel arrays parallel, position inside
+    /// the stream and consistent with the prefill/decode phase split.
+    pub fn validate(&self) -> Result<()> {
+        if self.prompt.is_empty() {
+            bail!("snapshot has an empty prompt (missing BOS)");
+        }
+        if self.gen_tokens.len() != self.behavior_lp.len()
+            || self.gen_tokens.len() != self.token_version.len()
+        {
+            bail!(
+                "snapshot arrays disagree: {} tokens, {} lps, {} versions",
+                self.gen_tokens.len(),
+                self.behavior_lp.len(),
+                self.token_version.len()
+            );
+        }
+        if self.pos >= self.total_len() {
+            bail!(
+                "snapshot pos {} outside stream of length {}",
+                self.pos,
+                self.total_len()
+            );
+        }
+        // once decoding has produced tokens, pos must sit at the stream end
+        if !self.gen_tokens.is_empty() && self.pos != self.total_len() - 1 {
+            bail!(
+                "snapshot pos {} inconsistent with {} generated tokens (want {})",
+                self.pos,
+                self.gen_tokens.len(),
+                self.total_len() - 1
+            );
+        }
+        if self.gen_tokens.len() > self.max_new {
+            bail!(
+                "snapshot prefix {} exceeds generation budget {}",
+                self.gen_tokens.len(),
+                self.max_new
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `PRLSNAP1` byte format (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let g = self.gen_tokens.len();
+        let mut out = Vec::with_capacity(8 + 9 * 8 + 8 + 8 + self.prompt.len() * 4 + g * 16);
+        out.extend_from_slice(MAGIC);
+        for x in [
+            self.seq_id,
+            self.group_id,
+            self.problem_id,
+            self.pos as u64,
+            self.max_new as u64,
+            self.rng_words[0],
+            self.rng_words[1],
+            self.rng_words[2],
+            self.rng_words[3],
+        ] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&self.t_start.to_le_bytes());
+        out.extend_from_slice(&(self.prompt.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(g as u32).to_le_bytes());
+        for t in &self.prompt {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        for t in &self.gen_tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        for l in &self.behavior_lp {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        for v in &self.token_version {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from [`SeqSnapshot::to_bytes`] output. Rejects bad
+    /// magic, truncation, and trailing garbage; the result is validated.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SeqSnapshot> {
+        let mut r = Reader { buf: bytes, at: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("not a PRLSNAP1 sequence snapshot");
+        }
+        let seq_id = r.u64()?;
+        let group_id = r.u64()?;
+        let problem_id = r.u64()?;
+        let pos = r.u64()? as usize;
+        let max_new = r.u64()? as usize;
+        let rng_words = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let t_start = f64::from_le_bytes(r.take(8)?.try_into().expect("8 bytes"));
+        let prompt_len = r.u32()? as usize;
+        let gen_len = r.u32()? as usize;
+        let prompt = r.i32s(prompt_len)?;
+        let gen_tokens = r.i32s(gen_len)?;
+        let mut behavior_lp = Vec::with_capacity(gen_len);
+        for _ in 0..gen_len {
+            behavior_lp.push(f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes")));
+        }
+        let mut token_version = Vec::with_capacity(gen_len);
+        for _ in 0..gen_len {
+            token_version.push(r.u64()?);
+        }
+        if r.at != bytes.len() {
+            bail!("snapshot has {} trailing bytes", bytes.len() - r.at);
+        }
+        let snap = SeqSnapshot {
+            seq_id,
+            group_id,
+            problem_id,
+            prompt,
+            gen_tokens,
+            behavior_lp,
+            token_version,
+            pos,
+            max_new,
+            rng_words,
+            t_start,
+        };
+        snap.validate()?;
+        Ok(snap)
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            bail!(
+                "snapshot truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.at,
+                self.buf.len() - self.at
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SeqSnapshot {
+        SeqSnapshot {
+            seq_id: 42,
+            group_id: (3u64 << 40) | 7,
+            problem_id: 99,
+            prompt: vec![1, 10, 11, 12],
+            gen_tokens: vec![20, 21, 22],
+            behavior_lp: vec![-0.5, -1.25, -0.0625],
+            token_version: vec![4, 4, 5],
+            pos: 6,
+            max_new: 16,
+            rng_words: [0xdead, 0xbeef, 0xf00d, 0xcafe],
+            t_start: 12.75,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let s = sample();
+        s.validate().unwrap();
+        let b = s.to_bytes();
+        let s2 = SeqSnapshot::from_bytes(&b).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(s2.to_bytes(), b, "re-serialization is byte-identical");
+    }
+
+    #[test]
+    fn prefill_snapshot_roundtrips() {
+        let mut s = sample();
+        s.gen_tokens.clear();
+        s.behavior_lp.clear();
+        s.token_version.clear();
+        s.pos = 1; // mid-prefill
+        s.validate().unwrap();
+        let s2 = SeqSnapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(s2.salvaged_tokens(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_trailing_bytes() {
+        let b = sample().to_bytes();
+        let mut bad = b.clone();
+        bad[0] = b'X';
+        assert!(SeqSnapshot::from_bytes(&bad).is_err(), "bad magic");
+        assert!(SeqSnapshot::from_bytes(&b[..b.len() - 1]).is_err(), "truncated");
+        let mut long = b.clone();
+        long.push(0);
+        assert!(SeqSnapshot::from_bytes(&long).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn validate_catches_inconsistencies() {
+        let mut s = sample();
+        s.behavior_lp.pop();
+        assert!(s.validate().is_err(), "skewed arrays");
+
+        let mut s = sample();
+        s.pos = 99;
+        assert!(s.validate().is_err(), "pos outside stream");
+
+        let mut s = sample();
+        s.pos = 3; // decode prefix present but pos not at stream end
+        assert!(s.validate().is_err(), "pos inconsistent with prefix");
+
+        let mut s = sample();
+        s.max_new = 2;
+        assert!(s.validate().is_err(), "prefix over budget");
+
+        let mut s = sample();
+        s.prompt.clear();
+        assert!(s.validate().is_err(), "empty prompt");
+    }
+}

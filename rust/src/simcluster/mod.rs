@@ -12,9 +12,17 @@
 //! Fig 2b (batch drain), Fig 2c (latency/throughput vs seqs per GPU),
 //! Fig 3a (token-lag structure), Fig 5c (samples vs time at scale), and
 //! cross-checks the analytic Fig 9 model with queueing effects included.
+//!
+//! The elastic tier is modeled too: with [`SimCfg::migrate`] a failed
+//! GPU's in-flight sequences re-enter a regeneration queue with prefixes
+//! intact (the cluster-scale mirror of `sched::SeqSnapshot` migration),
+//! and [`SimAutoScale`] runs the real `sched::AutoScaler` policy on
+//! simulated time to activate/retire spare generation GPUs from the
+//! backlog/saturation signals — deterministically, so scale trajectories
+//! replay per seed.
 
 pub mod scenarios;
 pub mod sim;
 
 pub use scenarios::{drain_scenario, generation_only, DrainPoint};
-pub use sim::{GpuFailure, SimCfg, SimMode, SimResult, Simulator};
+pub use sim::{GpuFailure, SimAutoScale, SimCfg, SimMode, SimResult, Simulator};

@@ -2,6 +2,7 @@
 
 use crate::metrics::Series;
 use crate::perfmodel::AccelModel;
+use crate::sched::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
 use crate::util::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -17,6 +18,8 @@ pub enum SimMode {
 /// sequence and generates nothing until `at + down_for` (generator
 /// churn, LlamaRL-style). Pipeline mode refills and keeps training;
 /// conventional mode cannot tolerate churn (its quota never drains).
+/// With [`SimCfg::migrate`] the dropped sequences re-enter the
+/// regeneration queue with prefixes intact instead of being lost.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GpuFailure {
     pub gpu: usize,
@@ -24,6 +27,22 @@ pub struct GpuFailure {
     pub at: f64,
     /// outage duration (flashes)
     pub down_for: f64,
+}
+
+/// Autoscaling for the simulated generation tier: the real
+/// [`AutoScaler`] policy, evaluated on simulated time, driving spare-GPU
+/// activation/retirement — the cluster-scale mirror of the supervisor's
+/// actor-pool resize.
+#[derive(Debug, Clone)]
+pub struct SimAutoScale {
+    pub cfg: AutoScaleCfg,
+    /// spare generation GPUs beyond `n_gen_gpus` the scaler may activate
+    pub max_extra_gpus: usize,
+    /// evaluation cadence in flashes (the supervisor-poll analogue)
+    pub eval_every_flashes: f64,
+    /// modeled trainer-inbox capacity the supply-saturation fraction is
+    /// measured against (the rollout-topic capacity analogue)
+    pub supply_capacity: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -49,6 +68,13 @@ pub struct SimCfg {
     pub weight_update_pause: f64,
     /// injected generation-GPU outages (empty = healthy cluster)
     pub failures: Vec<GpuFailure>,
+    /// partial-rollout migration: sequences dropped by outages (or a
+    /// retired spare GPU) re-enter the regeneration queue with their
+    /// generated prefixes and version runs intact, instead of counting
+    /// as `seqs_lost` (pipeline mode only)
+    pub migrate: bool,
+    /// signal-driven spare-GPU autoscaling (requires `migrate`)
+    pub autoscale: Option<SimAutoScale>,
 }
 
 impl SimCfg {
@@ -66,6 +92,8 @@ impl SimCfg {
             seed: 0,
             weight_update_pause: 0.0,
             failures: Vec::new(),
+            migrate: false,
+            autoscale: None,
         }
     }
 
@@ -83,6 +111,8 @@ impl SimCfg {
             seed: 0,
             weight_update_pause: 0.0,
             failures: Vec::new(),
+            migrate: false,
+            autoscale: None,
         }
     }
 
@@ -127,8 +157,22 @@ pub struct SimResult {
     pub throughput: f64,
     /// wall time (flashes) at completion
     pub t_end: f64,
-    /// sequences dropped by injected GPU outages
+    /// sequences dropped by injected GPU outages (migration off)
     pub seqs_lost: usize,
+    /// sequences handed to the regeneration queue with prefixes intact
+    /// (outages and retired spares, migration on; re-migrations count)
+    pub seqs_migrated: usize,
+    /// generated tokens preserved across those hand-offs (deposit-time
+    /// accounting)
+    pub tokens_salvaged: f64,
+    /// spare-GPU activations / retirements by the autoscaler
+    pub gpus_added: usize,
+    pub gpus_removed: usize,
+    /// sim times of each scale action (reaction-time measurements)
+    pub scaleup_times: Vec<f64>,
+    pub scaledown_times: Vec<f64>,
+    /// live (non-retired) generation GPUs at completion
+    pub gen_gpus_final: usize,
 }
 
 #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -142,8 +186,16 @@ enum Event {
 pub struct Simulator {
     cfg: SimCfg,
     rng: Rng,
-    /// per-GPU slot table
+    /// per-GPU slot table (grows when the autoscaler adds spares)
     slots: Vec<Vec<Option<Seq>>>,
+    /// retired spare GPUs (never refilled, rounds void)
+    retired: Vec<bool>,
+    /// a Round event is in the heap for this GPU (guards double
+    /// scheduling across retire/reactivate cycles)
+    scheduled: Vec<bool>,
+    /// regeneration queue: migrated in-flight sequences awaiting a slot
+    /// (the rollout-queue backlog signal)
+    regen: VecDeque<Seq>,
     queue: VecDeque<Seq>,
     version: u64,
     /// conventional: sequences left to start this RL step
@@ -153,6 +205,8 @@ pub struct Simulator {
     steps_done: usize,
     samples: usize,
     trainer_busy: bool,
+    scaler: Option<AutoScaler>,
+    next_autoscale_t: f64,
     result: SimResult,
     lag_sum_by_bucket: Vec<f64>,
     lag_n_by_bucket: Vec<f64>,
@@ -172,18 +226,40 @@ impl Simulator {
              never reopens after lost sequences, which would silently truncate \
              the simulation"
         );
+        assert!(
+            !cfg.migrate || matches!(cfg.mode, SimMode::Pipeline),
+            "partial-rollout migration requires SimMode::Pipeline"
+        );
+        let autoscale_on = cfg.autoscale.as_ref().is_some_and(|a| a.cfg.enabled);
+        assert!(
+            !autoscale_on || cfg.migrate,
+            "sim autoscaling requires migrate: retiring a spare hands its \
+             sequences back through the regen queue"
+        );
         let rng = Rng::with_stream(cfg.seed, 0x51u64);
-        let slots = (0..cfg.n_gen_gpus)
+        let slots: Vec<Vec<Option<Seq>>> = (0..cfg.n_gen_gpus)
             .map(|_| vec![None; cfg.slots_per_gpu])
             .collect();
         let quota = match cfg.mode {
             SimMode::Conventional { g } => cfg.batch_b * g,
             SimMode::Pipeline => usize::MAX,
         };
+        // the enabled flag gates the sim exactly like the orchestrator
+        // gates the supervisor: a present-but-disabled config must not
+        // scale (ablation runs compare against it)
+        let scaler = cfg
+            .autoscale
+            .as_ref()
+            .filter(|a| a.cfg.enabled)
+            .map(|a| AutoScaler::new(a.cfg.clone()));
+        let n = slots.len();
         Simulator {
             cfg,
             rng,
             slots,
+            retired: vec![false; n],
+            scheduled: vec![false; n],
+            regen: VecDeque::new(),
             queue: VecDeque::new(),
             version: 0,
             quota,
@@ -192,6 +268,8 @@ impl Simulator {
             steps_done: 0,
             samples: 0,
             trainer_busy: false,
+            scaler,
+            next_autoscale_t: 0.0,
             result: SimResult::default(),
             lag_sum_by_bucket: vec![0.0; BUCKETS],
             lag_n_by_bucket: vec![0.0; BUCKETS],
@@ -204,15 +282,40 @@ impl Simulator {
     }
 
     fn refill(&mut self, gpu: usize) {
+        if self.retired[gpu] {
+            return;
+        }
         for s in 0..self.cfg.slots_per_gpu {
-            if self.slots[gpu][s].is_none() && self.quota > 0 {
-                let seq = self.new_seq();
-                if self.quota != usize::MAX {
-                    self.quota -= 1;
+            if self.slots[gpu][s].is_none() {
+                // migrated prefixes re-enter ahead of fresh prompts (no
+                // quota charge: they were already admitted once)
+                if let Some(seq) = self.regen.pop_front() {
+                    self.slots[gpu][s] = Some(seq);
+                    continue;
                 }
-                self.slots[gpu][s] = Some(seq);
+                if self.quota > 0 {
+                    let seq = self.new_seq();
+                    if self.quota != usize::MAX {
+                        self.quota -= 1;
+                    }
+                    self.slots[gpu][s] = Some(seq);
+                }
             }
         }
+    }
+
+    /// Push a Round event for `gpu` unless one is already pending.
+    fn schedule_round(&mut self, gpu: usize, pause: f64) {
+        if self.scheduled[gpu] {
+            return;
+        }
+        let h = self.active(gpu);
+        if h == 0 {
+            return;
+        }
+        let dt = h as f64 / self.cfg.accel.u(h) + pause;
+        self.heap.push(key(self.t + dt, Event::Round(gpu)));
+        self.scheduled[gpu] = true;
     }
 
     fn active(&self, gpu: usize) -> usize {
@@ -237,11 +340,7 @@ impl Simulator {
         // prime
         for g in 0..self.cfg.n_gen_gpus {
             self.refill(g);
-            let h = self.active(g);
-            if h > 0 {
-                let dt = h as f64 / self.cfg.accel.u(h);
-                self.heap.push(key(self.t + dt, Event::Round(g)));
-            }
+            self.schedule_round(g, 0.0);
         }
         let mut gen_done_tokens = 0f64;
 
@@ -250,18 +349,39 @@ impl Simulator {
                 break; // deadlock guard (should not happen)
             };
             self.t = tk as f64 / 1e6;
+            // supervisor-poll analogue: evaluate the autoscaler on sim
+            // time, decoupled from the (possibly slow) trainer cadence
+            self.maybe_autoscale();
             match ev {
                 Event::Round(g) => {
+                    self.scheduled[g] = false;
+                    if self.retired[g] {
+                        // a round scheduled before retirement is void
+                        // (retire_spare already migrated the sequences)
+                        continue;
+                    }
                     // injected outage: drop live sequences, go dark until
-                    // the window ends, then resume (pipeline refills)
+                    // the window ends, then resume (pipeline refills).
+                    // With migration the dropped sequences keep their
+                    // prefixes and re-enter via the regen queue.
                     if let Some(end) = self.down_until(g) {
-                        let lost =
-                            self.slots[g].iter_mut().filter_map(|s| s.take()).count();
-                        self.result.seqs_lost += lost;
+                        let dropped: Vec<Seq> =
+                            self.slots[g].iter_mut().filter_map(|s| s.take()).collect();
+                        if self.cfg.migrate {
+                            self.result.seqs_migrated += dropped.len();
+                            for s in dropped {
+                                self.result.tokens_salvaged +=
+                                    (s.total - s.remaining) as f64;
+                                self.regen.push_back(s);
+                            }
+                        } else {
+                            self.result.seqs_lost += dropped.len();
+                        }
                         if g == 0 {
                             self.result.gpu0_active.push(self.t, self.t, 0.0);
                         }
                         self.heap.push(key(end, Event::Round(g)));
+                        self.scheduled[g] = true;
                         self.maybe_start_training();
                         continue;
                     }
@@ -286,12 +406,7 @@ impl Simulator {
                     if g == 0 {
                         self.result.gpu0_active.push(self.t, self.t, self.active(0) as f64);
                     }
-                    let h = self.active(g);
-                    if h > 0 {
-                        let pause = self.cfg.weight_update_pause; // amortized
-                        let dt = h as f64 / self.cfg.accel.u(h) + pause;
-                        self.heap.push(key(self.t + dt, Event::Round(g)));
-                    }
+                    self.schedule_round(g, self.cfg.weight_update_pause); // pause amortized
                     self.maybe_start_training();
                 }
                 Event::TrainDone => {
@@ -307,11 +422,7 @@ impl Simulator {
                             self.quota = self.cfg.batch_b * g;
                             for gpu in 0..self.cfg.n_gen_gpus {
                                 self.refill(gpu);
-                                let h = self.active(gpu);
-                                if h > 0 {
-                                    let dt = h as f64 / self.cfg.accel.u(h);
-                                    self.heap.push(key(self.t + dt, Event::Round(gpu)));
-                                }
+                                self.schedule_round(gpu, 0.0);
                             }
                         }
                     }
@@ -323,6 +434,7 @@ impl Simulator {
         self.result.tokens = gen_done_tokens;
         self.result.t_end = self.t;
         self.result.throughput = gen_done_tokens / self.t.max(1e-9);
+        self.result.gen_gpus_final = self.retired.iter().filter(|r| !**r).count();
         self.result.lag_by_relpos = self
             .lag_sum_by_bucket
             .iter()
@@ -330,6 +442,83 @@ impl Simulator {
             .map(|(s, n)| if *n > 0.0 { s / n } else { 0.0 })
             .collect();
         self.result
+    }
+
+    /// Evaluate the autoscaler at its configured sim-time cadence: the
+    /// regen queue is the rollout-queue backlog (scale-up pressure), the
+    /// trainer inbox is the supply buffer (scale-down pressure). Uses the
+    /// same [`AutoScaler`] the supervisor runs, so hysteresis behavior is
+    /// pinned by one implementation.
+    fn maybe_autoscale(&mut self) {
+        let Some(auto) = &self.cfg.autoscale else { return };
+        if self.scaler.is_none() || self.t < self.next_autoscale_t {
+            return;
+        }
+        self.next_autoscale_t = self.t + auto.eval_every_flashes.max(1e-6);
+        let live = self.retired.iter().filter(|r| !**r).count();
+        let cap = auto.supply_capacity.max(1);
+        let sig = ScaleSignals {
+            backlog: self.regen.len(),
+            supply_depth: self.queue.len().min(cap),
+            supply_capacity: cap,
+            token_lag: self.result.mean_lag.last().map(|p| p.value).unwrap_or(0.0),
+            batch_fill: 1.0,
+            pool: live,
+        };
+        let max_extra = auto.max_extra_gpus;
+        let decision = self.scaler.as_mut().expect("checked above").decide(&sig);
+        match decision {
+            ScaleDecision::Up => self.activate_spare(max_extra),
+            ScaleDecision::Down => self.retire_spare(),
+            ScaleDecision::Hold => {}
+        }
+    }
+
+    /// Bring up a spare generation GPU: reactivate a retired one, or add
+    /// a new row up to `n_gen_gpus + max_extra`. No-op at the ceiling.
+    fn activate_spare(&mut self, max_extra: usize) {
+        let g = if let Some(g) = self.retired.iter().position(|r| *r) {
+            self.retired[g] = false;
+            g
+        } else if self.slots.len() < self.cfg.n_gen_gpus + max_extra {
+            self.slots.push(vec![None; self.cfg.slots_per_gpu]);
+            self.retired.push(false);
+            self.scheduled.push(false);
+            self.slots.len() - 1
+        } else {
+            return;
+        };
+        // if a pre-retirement Round for this GPU is still in the heap, let
+        // it serve as the activation tick: it will find the slots empty
+        // (retire_spare migrated them out), refill, and reschedule.
+        // Refilling *now* would let that stale deadline — computed from
+        // the old occupancy and start time — credit a full decode round
+        // to sequences that were not resident for it.
+        if !self.scheduled[g] {
+            self.refill(g);
+            self.schedule_round(g, 0.0);
+        }
+        self.result.gpus_added += 1;
+        self.result.scaleup_times.push(self.t);
+    }
+
+    /// Retire the highest live spare (indices beyond the designed tier —
+    /// the configured topology is the floor). Its in-flight sequences
+    /// migrate back through the regen queue, prefixes intact.
+    fn retire_spare(&mut self) {
+        let Some(g) = (self.cfg.n_gen_gpus..self.slots.len()).rev().find(|&g| !self.retired[g])
+        else {
+            return;
+        };
+        self.retired[g] = true;
+        let moved: Vec<Seq> = self.slots[g].iter_mut().filter_map(|s| s.take()).collect();
+        self.result.seqs_migrated += moved.len();
+        for s in moved {
+            self.result.tokens_salvaged += (s.total - s.remaining) as f64;
+            self.regen.push_back(s);
+        }
+        self.result.gpus_removed += 1;
+        self.result.scaledown_times.push(self.t);
     }
 
     fn maybe_start_training(&mut self) {
@@ -506,6 +695,121 @@ mod tests {
             r.t_end,
             healthy.t_end
         );
+    }
+
+    #[test]
+    fn migration_salvages_outage_work() {
+        let healthy = Simulator::new(small_pipe()).run();
+        let mut cfg = small_pipe().with_churn(11, 6, healthy.t_end, healthy.t_end / 10.0);
+        cfg.migrate = true;
+        let r = Simulator::new(cfg).run();
+        assert_eq!(r.seqs_lost, 0, "migration leaves no sequence lost");
+        assert!(r.seqs_migrated > 0, "outages must have migrated sequences");
+        assert!(r.tokens_salvaged > 0.0, "prefixes carried generated tokens");
+        assert_eq!(
+            r.samples_vs_time.points.len(),
+            30,
+            "run still completes every optimizer step"
+        );
+    }
+
+    fn autoscaled_outage_cfg() -> SimCfg {
+        let mut c = SimCfg::pipeline(16, 8, 32, 64, 128);
+        c.rl_steps = 60;
+        c.migrate = true;
+        // train-bound cluster: once generation capacity recovers, the
+        // trainer inbox saturates and the scale-down pressure is real
+        c.tau = 12.0;
+        // knock out 6 of the 8 generation GPUs for a long window: their
+        // ~192 in-flight sequences flood the regen queue (the sustained
+        // rollout-queue backlog) while capacity is down
+        c.failures = (0..6)
+            .map(|g| GpuFailure { gpu: g, at: 50.0, down_for: 3000.0 })
+            .collect();
+        c.autoscale = Some(SimAutoScale {
+            cfg: AutoScaleCfg {
+                enabled: true,
+                backlog_per_actor: 1.0,
+                supply_high_frac: 0.75,
+                up_patience: 2,
+                down_patience: 3,
+                cooldown: 2,
+                max_lag_steps: 0.0,
+                min_batch_fill: 0.0,
+                eval_every_ms: 0,
+            },
+            max_extra_gpus: 4,
+            eval_every_flashes: 20.0,
+            supply_capacity: 256,
+        });
+        c
+    }
+
+    /// The acceptance scenario in the deterministic simulator: a
+    /// sustained rollout-queue backlog (outage-orphaned sequences) grows
+    /// the generation pool; once the backlog clears and the victims
+    /// recover — generation then overruns the trainer and saturates its
+    /// inbox — the spares retire back with hysteresis, and the whole
+    /// trajectory replays exactly.
+    #[test]
+    fn autoscaler_grows_under_backlog_and_shrinks_back() {
+        let r = Simulator::new(autoscaled_outage_cfg()).run();
+        assert!(r.gpus_added >= 1, "sustained backlog must activate spares");
+        assert!(r.gpus_removed >= 1, "cleared backlog must retire spares");
+        assert_eq!(r.seqs_lost, 0);
+        assert!(r.seqs_migrated > 0);
+        assert!(
+            r.gen_gpus_final <= 8 + (r.gpus_added - r.gpus_removed),
+            "live tier accounts for adds minus removes"
+        );
+        // no flapping: actions bounded by the spare tier crossed once in
+        // each direction (plus bounded re-trips), not proportional to
+        // evaluation count
+        assert!(
+            r.gpus_added + r.gpus_removed <= 12,
+            "flapping: {} adds / {} removes",
+            r.gpus_added,
+            r.gpus_removed
+        );
+        assert!(
+            r.scaleup_times.first() < r.scaledown_times.first(),
+            "growth precedes shrink: {:?} vs {:?}",
+            r.scaleup_times,
+            r.scaledown_times
+        );
+        assert_eq!(r.samples_vs_time.points.len(), 60, "training completes");
+        // deterministic: the exact same trajectory replays
+        let again = Simulator::new(autoscaled_outage_cfg()).run();
+        assert_eq!(r.t_end, again.t_end);
+        assert_eq!(r.gpus_added, again.gpus_added);
+        assert_eq!(r.gpus_removed, again.gpus_removed);
+        assert_eq!(r.scaleup_times, again.scaleup_times);
+        assert_eq!(r.seqs_migrated, again.seqs_migrated);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires migrate")]
+    fn autoscale_without_migrate_is_refused() {
+        let mut c = small_pipe();
+        c.autoscale = Some(SimAutoScale {
+            cfg: AutoScaleCfg { enabled: true, ..AutoScaleCfg::default() },
+            max_extra_gpus: 1,
+            eval_every_flashes: 10.0,
+            supply_capacity: 64,
+        });
+        let _ = Simulator::new(c);
+    }
+
+    #[test]
+    fn disabled_autoscale_config_never_scales() {
+        // present-but-disabled autoscale: the ablation baseline must not
+        // scale (and, being inert, needs no migrate either)
+        let mut c = autoscaled_outage_cfg();
+        c.autoscale.as_mut().unwrap().cfg.enabled = false;
+        let r = Simulator::new(c).run();
+        assert_eq!(r.gpus_added + r.gpus_removed, 0);
+        assert_eq!(r.gen_gpus_final, 8);
+        assert!(r.seqs_migrated > 0, "migration itself still works");
     }
 
     #[test]

@@ -21,10 +21,18 @@ use std::fmt;
 /// One failure to inject. Targets are resolved by the supervisor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ChaosKind {
-    /// abruptly halt the lowest-id live actor (in-flight work aborted);
-    /// the supervisor respawns one only if the pool would drop below its
-    /// floor, and only while the respawn budget lasts
+    /// abruptly halt the lowest-id live actor (in-flight work migrated
+    /// when a migration hub is wired, aborted otherwise); the supervisor
+    /// respawns one only if the pool would drop below its floor, and
+    /// only while the respawn budget lasts
     KillActor,
+    /// SIGTERM-style kill with injected latency: the target is resolved
+    /// when the event fires, but its halt lands only `delay_ms` later and
+    /// is *not* joined — the actor winds down (exporting its portable
+    /// rollouts) while the rest of the pipeline keeps running. Exercises
+    /// the slow-kill races that instant kills cannot: weight publishes,
+    /// migrations and autoscale decisions interleave with the teardown
+    SlowKillActor { delay_ms: u64 },
     /// kill the lowest-id live actor and immediately respawn it
     RestartActor,
     /// grow the pool by one actor (no-op at the ceiling)
@@ -61,10 +69,13 @@ impl ChaosSchedule {
         let mut events = Vec::with_capacity(n_events);
         for _ in 0..n_events {
             let at_step = 1 + rng.below(last as usize) as u64;
-            // weighted kinds: churn-heavy, with occasional transport faults
+            // weighted kinds: churn-heavy (instant and latency-injected
+            // kills), with occasional transport faults. Latencies are
+            // drawn from the same seeded stream, so jitter replays too.
             let kind = match rng.below(100) {
-                0..=29 => ChaosKind::KillActor,
-                30..=49 => ChaosKind::RestartActor,
+                0..=19 => ChaosKind::KillActor,
+                20..=34 => ChaosKind::SlowKillActor { delay_ms: 2 + rng.below(30) as u64 },
+                35..=49 => ChaosKind::RestartActor,
                 50..=64 => ChaosKind::AddActor,
                 65..=74 => ChaosKind::RemoveActor,
                 75..=84 => ChaosKind::BusDelay { ms: 5 + rng.below(45) as u64 },
@@ -89,6 +100,19 @@ impl ChaosSchedule {
         }
     }
 
+    /// Hand-written scenario: a latency-injected kill at `kill_step`
+    /// whose halt lands `delay_ms` after the event fires — the canonical
+    /// slow-kill migration race.
+    pub fn slow_kill(kill_step: u64, delay_ms: u64) -> ChaosSchedule {
+        ChaosSchedule {
+            seed: 0,
+            events: vec![ChaosEvent {
+                at_step: kill_step,
+                kind: ChaosKind::SlowKillActor { delay_ms },
+            }],
+        }
+    }
+
     /// Human-readable replay recipe; printed at run start so a failing
     /// schedule can be reproduced from its seed.
     pub fn describe(&self) -> String {
@@ -108,6 +132,9 @@ impl fmt::Display for ChaosKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             ChaosKind::KillActor => write!(f, "kill-actor"),
+            ChaosKind::SlowKillActor { delay_ms } => {
+                write!(f, "slow-kill-actor +{delay_ms}ms")
+            }
             ChaosKind::RestartActor => write!(f, "restart-actor"),
             ChaosKind::AddActor => write!(f, "add-actor"),
             ChaosKind::RemoveActor => write!(f, "remove-actor"),
@@ -149,6 +176,32 @@ mod tests {
         let d = s.describe();
         assert!(d.contains("seed 99"));
         assert_eq!(d.lines().count(), 4);
+    }
+
+    #[test]
+    fn generated_slow_kills_carry_seeded_latency() {
+        // latency injection must be seed-deterministic and bounded
+        let s = ChaosSchedule::generate(0x510_c4a0, 200, 256);
+        let delays: Vec<u64> = s
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                ChaosKind::SlowKillActor { delay_ms } => Some(delay_ms),
+                _ => None,
+            })
+            .collect();
+        assert!(!delays.is_empty(), "weighting must produce slow kills");
+        assert!(delays.iter().all(|&d| (2..32).contains(&d)));
+        let again = ChaosSchedule::generate(0x510_c4a0, 200, 256);
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn slow_kill_scenario_shape() {
+        let s = ChaosSchedule::slow_kill(4, 25);
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events[0].kind, ChaosKind::SlowKillActor { delay_ms: 25 });
+        assert!(s.describe().contains("slow-kill-actor +25ms"));
     }
 
     #[test]

@@ -150,6 +150,8 @@ fn chaos_kill_then_restart_keeps_pipeline_alive() {
         stop: stop.clone(),
         hub: hub.clone(),
         poll: Duration::from_millis(2),
+        migrate: None,
+        autoscale: None,
     };
     let sup = std::thread::spawn(move || run_supervisor(sup_args));
 

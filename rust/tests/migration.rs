@@ -1,0 +1,608 @@
+//! Portable in-flight rollouts: migration, scheduling and autoscaling.
+//!
+//! Three tiers:
+//!
+//! * **Device-free properties**: `SeqSnapshot` round-trips bit-exactly
+//!   through its byte format (the process-boundary contract).
+//! * **Substrate scenarios** (always run): the acceptance case — one of
+//!   three actors is slow-killed mid-run over the real supervisor /
+//!   `MigrationHub` machinery and *zero salvageable tokens are lost*:
+//!   every in-flight sequence of the victim completes on another actor
+//!   (same group id, prefix preserved) or is accounted as deliberately
+//!   discarded. Plus the supervisor-level autoscaler: the pool grows
+//!   under a sustained rollout-queue backlog and shrinks back once the
+//!   backlog clears and the supply topic saturates.
+//! * **Full-pipeline scenarios** (gated on `runtime_available()`): the
+//!   migration-equivalence proof — a sequence migrated mid-generation
+//!   across engines emits the same remaining tokens and version tags as
+//!   one that was never interrupted — and an end-to-end chaos run whose
+//!   migration books balance.
+
+use pipeline_rl::broker::{topic, Policy, Publisher};
+use pipeline_rl::config::RunConfig;
+use pipeline_rl::coordinator;
+use pipeline_rl::coordinator::supervisor::{
+    run_supervisor, ActorPool, SpawnFn, SupervisorArgs,
+};
+use pipeline_rl::data::task::{TaskGen, TaskKind};
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::metrics::MetricsHub;
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::{FinishReason, Rollout};
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::sched::{AutoScaleCfg, AutoScaler, MigrationHub, SeqSnapshot};
+use pipeline_rl::testkit::{self, chaos::ChaosSchedule, runtime_or_skip};
+use pipeline_rl::util::Rng;
+use pipeline_rl::weights::WeightBus;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// device-free properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_snapshot_roundtrips_bit_exactly() {
+    testkit::check("snapshot byte roundtrip", 300, 0x54a9, 64, |c| {
+        let prompt_len = c.usize_in(1, 12);
+        let gen_len = c.usize_in(0, 16);
+        let prompt: Vec<i32> = (0..prompt_len)
+            .map(|_| c.rng.range(-1_000_000, 1_000_000) as i32)
+            .collect();
+        let gen_tokens: Vec<i32> =
+            (0..gen_len).map(|_| c.rng.range(0, 65_535) as i32).collect();
+        let behavior_lp: Vec<f32> = (0..gen_len).map(|_| -c.rng.f32() * 20.0).collect();
+        let token_version: Vec<u64> = (0..gen_len).map(|_| c.rng.next_u64()).collect();
+        let pos = if gen_len == 0 {
+            c.rng.below(prompt_len)
+        } else {
+            prompt_len - 1 + gen_len
+        };
+        let snap = SeqSnapshot {
+            seq_id: c.rng.next_u64(),
+            group_id: c.rng.next_u64(),
+            problem_id: c.rng.next_u64(),
+            prompt,
+            gen_tokens,
+            behavior_lp,
+            token_version,
+            pos,
+            max_new: gen_len + c.rng.below(32),
+            rng_words: [
+                c.rng.next_u64(),
+                c.rng.next_u64(),
+                c.rng.next_u64(),
+                c.rng.next_u64(),
+            ],
+            t_start: c.rng.f64() * 1e6,
+        };
+        snap.validate().map_err(|e| format!("generated snapshot invalid: {e}"))?;
+        let bytes = snap.to_bytes();
+        let back = SeqSnapshot::from_bytes(&bytes).map_err(|e| format!("decode: {e}"))?;
+        if back != snap {
+            return Err("decoded snapshot differs from original".into());
+        }
+        if back.to_bytes() != bytes {
+            return Err("re-serialization is not byte-identical".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// substrate scenarios (always run)
+// ---------------------------------------------------------------------
+
+const GEN_TARGET: usize = 8;
+
+fn fresh_snap(actor: usize, n: u64) -> SeqSnapshot {
+    SeqSnapshot {
+        seq_id: n,
+        group_id: ((actor as u64 + 1) << 40) | n,
+        problem_id: n,
+        prompt: vec![1, 2, 3],
+        gen_tokens: Vec::new(),
+        behavior_lp: Vec::new(),
+        token_version: Vec::new(),
+        pos: 0,
+        max_new: GEN_TARGET,
+        rng_words: [0; 4],
+        t_start: 0.0,
+    }
+}
+
+/// Synthetic actor for migration tests: keeps 3 sequences "in flight"
+/// (one token per tick, actor-flavored token values), claims orphans
+/// from the migration hub ahead of fresh work — mirroring the real
+/// actor's metrics — and deposits its in-flight set when halted mid-run.
+fn migrating_spawn(
+    bus: WeightBus,
+    tx: Publisher<Rollout>,
+    hub: MetricsHub,
+    hub_m: Arc<MigrationHub>,
+    deposited_log: Arc<Mutex<Vec<SeqSnapshot>>>,
+) -> SpawnFn {
+    Arc::new(move |ctx| {
+        let name = format!("actor-{}", ctx.actor_id);
+        bus.init_process_group(&name);
+        let mut next_local = 0u64;
+        let mut inflight: Vec<SeqSnapshot> = Vec::new();
+        while !ctx.stop.load(Ordering::Relaxed) && !ctx.halt.load(Ordering::Relaxed) {
+            // adopt migrated work first (the real actor does the same)
+            while inflight.len() < 3 {
+                if let Some(s) = hub_m.claim(1).pop() {
+                    hub.add("migrations_completed", 1.0);
+                    hub.add("snapshot_tokens_salvaged", s.salvaged_tokens() as f64);
+                    inflight.push(s);
+                } else {
+                    inflight.push(fresh_snap(ctx.actor_id, next_local));
+                    next_local += 1;
+                }
+            }
+            // one decode tick per in-flight sequence
+            let mut i = 0;
+            while i < inflight.len() {
+                let s = &mut inflight[i];
+                let tok = (ctx.actor_id as i32) * 1000 + 100 + s.gen_tokens.len() as i32;
+                s.gen_tokens.push(tok);
+                s.behavior_lp.push(-0.5);
+                s.token_version.push(bus.latest_version());
+                s.pos = s.prompt.len() - 1 + s.gen_tokens.len();
+                if s.gen_tokens.len() >= GEN_TARGET {
+                    let done = inflight.swap_remove(i);
+                    let r = Rollout {
+                        seq_id: done.seq_id,
+                        problem_id: done.problem_id,
+                        group_id: done.group_id,
+                        actor_id: ctx.actor_id,
+                        prompt_tokens: done.prompt,
+                        gen_tokens: done.gen_tokens,
+                        behavior_lp: done.behavior_lp,
+                        token_version: done.token_version,
+                        reward: 0.0,
+                        finish: FinishReason::Eos,
+                        t_start: 0.0,
+                        t_end: 0.0,
+                    };
+                    if tx.send(r).is_err() {
+                        bus.leave_process_group(&name);
+                        return Ok(());
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // kill/descale mid-run: hand the in-flight set over, like the
+        // real actor's export_snapshots path. Run shutdown discards.
+        if ctx.halt.load(Ordering::Relaxed)
+            && !ctx.stop.load(Ordering::Relaxed)
+            && !inflight.is_empty()
+        {
+            deposited_log.lock().unwrap().extend(inflight.iter().cloned());
+            hub_m.deposit(inflight);
+        }
+        bus.leave_process_group(&name);
+        Ok(())
+    })
+}
+
+/// The acceptance scenario: one of three actors slow-killed mid-run,
+/// zero salvageable tokens lost — every in-flight sequence of the victim
+/// completes on a *different* actor with its group id and generated
+/// prefix intact, and the books (deposited == claimed, nothing
+/// discarded) balance in the metrics.
+#[test]
+fn chaos_kill_one_of_three_loses_no_salvageable_tokens() {
+    let hub = MetricsHub::new();
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(vec![]));
+    let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
+    let stop = Arc::new(AtomicBool::new(false));
+    let hub_m = Arc::new(MigrationHub::new());
+    let deposited = Arc::new(Mutex::new(Vec::new()));
+
+    let pool = ActorPool::new(
+        migrating_spawn(bus.clone(), tx.clone(), hub.clone(), hub_m.clone(), deposited.clone()),
+        stop.clone(),
+        hub.clone(),
+        3,     // initial
+        2,     // min: the victim is retired, survivors adopt
+        4,     // max
+        4,     // respawn budget
+        false, // tolerate churn
+    )
+    .unwrap();
+    // slow kill (satellite: latency-injected, not instant): fires once
+    // the version clock passes 2, halt lands 10ms later
+    let schedule = ChaosSchedule::slow_kill(2, 10);
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: tx.clone(),
+        schedule: Some(schedule),
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(2),
+        migrate: Some(hub_m.clone()),
+        autoscale: None,
+    };
+    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+    // fake trainer: consume rollouts, advance the version clock, and run
+    // until every deposited snapshot provably completed elsewhere
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut consumed: Vec<Rollout> = Vec::new();
+    let mut version = 1u64;
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "migration did not complete: {} consumed, {} deposited, {} claimed",
+            consumed.len(),
+            hub_m.deposited(),
+            hub_m.claimed()
+        );
+        if let Ok(r) = rx.recv(Duration::from_millis(500)) {
+            consumed.push(r);
+            if consumed.len() % 25 == 0 {
+                version += 1;
+                bus.publish(version, Arc::new(vec![]));
+            }
+        }
+        let dep = deposited.lock().unwrap();
+        let all_completed_elsewhere = !dep.is_empty()
+            && hub_m.depth() == 0
+            && dep.iter().all(|s| {
+                consumed.iter().any(|r| {
+                    r.group_id == s.group_id
+                        && r.actor_id != 0
+                        && r.gen_tokens.len() >= s.gen_tokens.len()
+                        && r.gen_tokens[..s.gen_tokens.len()] == s.gen_tokens[..]
+                })
+            });
+        if all_completed_elsewhere {
+            break;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    sup.join().unwrap().unwrap();
+
+    // zero salvageable tokens lost, asserted via the accounting
+    let (tok_dep, tok_claim) = hub_m.token_counts();
+    assert_eq!(hub_m.claimed(), hub_m.deposited(), "every snapshot adopted");
+    assert_eq!(hub_m.discarded(), 0, "nothing thrown away mid-run");
+    assert_eq!(tok_dep, tok_claim, "every salvaged token re-entered decode");
+    assert!(hub_m.deposited() >= 1, "the victim had work in flight");
+    // ... and via the new MetricsHub counters
+    assert_eq!(hub.counter("migrations_completed"), hub_m.claimed() as f64);
+    assert_eq!(hub.counter("snapshot_tokens_salvaged"), tok_claim as f64);
+    assert_eq!(hub.counter("chaos_events_fired"), 1.0);
+    assert!(hub.counter("chaos_slow_kills_landed") >= 1.0, "slow kill landed");
+}
+
+#[test]
+fn supervisor_autoscales_pool_from_backlog_then_saturation() {
+    // idle synthetic actors: the signals are driven entirely by the test
+    let hub = MetricsHub::new();
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(vec![]));
+    let (tx, rx) = topic::<Rollout>("rollouts", 8, Policy::DropOldest);
+    let stop = Arc::new(AtomicBool::new(false));
+    let hub_m = Arc::new(MigrationHub::new());
+    let spawn: SpawnFn = Arc::new(|ctx| {
+        while !ctx.stop.load(Ordering::Relaxed) && !ctx.halt.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    });
+    let pool = ActorPool::new(spawn, stop.clone(), hub.clone(), 1, 1, 4, 0, false).unwrap();
+    let scaler = AutoScaler::new(AutoScaleCfg {
+        enabled: true,
+        backlog_per_actor: 2.0,
+        supply_high_frac: 0.75,
+        up_patience: 2,
+        down_patience: 2,
+        cooldown: 1,
+        max_lag_steps: 0.0,
+        min_batch_fill: 0.0,
+        eval_every_ms: 2,
+    });
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: tx.clone(),
+        schedule: None,
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(1),
+        migrate: Some(hub_m.clone()),
+        autoscale: Some(scaler),
+    };
+    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+    // sustained rollout-queue backlog: 20 orphaned snapshots nobody claims
+    hub_m.deposit((0..20).map(|i| fresh_snap(7, i)).collect());
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while hub.counter("autoscale_ups") < 2.0 {
+        assert!(Instant::now() < deadline, "pool never grew under backlog");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(hub.counter("pool_size") >= 2.0, "grown pool visible as a gauge");
+
+    // backlog clears; the supply topic saturates (no consumer drains it):
+    // generation is outrunning training, shed actors back to the floor
+    hub_m.claim(1000);
+    for i in 0..8u64 {
+        tx.send(Rollout {
+            seq_id: i,
+            problem_id: i,
+            group_id: (8u64 << 40) | i,
+            actor_id: 7,
+            prompt_tokens: vec![1],
+            gen_tokens: vec![2],
+            behavior_lp: vec![-0.1],
+            token_version: vec![1],
+            reward: 0.0,
+            finish: FinishReason::Eos,
+            t_start: 0.0,
+            t_end: 0.0,
+        })
+        .unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        assert!(Instant::now() < deadline, "pool never shrank back");
+        if hub.counter("autoscale_downs") >= 1.0 && hub.counter("pool_size") <= 1.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // hysteresis: with the backlog gone and supply saturated, no further
+    // scale-ups fire (the saturation guard kills the thrash loop)
+    let ups_before = hub.counter("autoscale_ups");
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(hub.counter("autoscale_ups"), ups_before, "no flapping");
+
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    drop(rx);
+    sup.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// full-pipeline scenarios (need PJRT runtime + AOT artifacts)
+// ---------------------------------------------------------------------
+
+/// Satellite acceptance: a sequence migrated mid-generation emits the
+/// same remaining tokens and version tags as one that was never
+/// interrupted (same weight versions throughout).
+#[test]
+fn migrated_sequence_matches_uninterrupted() {
+    if !runtime_or_skip("migrated_sequence_matches_uninterrupted") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = rt.init_params("tiny", 1).unwrap();
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    let mk_cfg = || {
+        let mut c = EngineCfg::new("tiny");
+        c.max_new_tokens = 10;
+        c
+    };
+    let run_to_finish = |eng: &mut Engine| -> Option<Rollout> {
+        for _ in 0..500 {
+            let out = eng.step().unwrap();
+            if let Some(r) = out.finished.into_iter().next() {
+                return Some(r);
+            }
+        }
+        None
+    };
+
+    // uninterrupted reference: first problem whose rollout samples >= 3
+    // tokens (so an interruption after 2 leaves work to migrate)
+    let mut chosen = None;
+    for pid in 0..12u64 {
+        let p = gen.problem(pid);
+        let toks = tk.encode(&p.prompt).unwrap();
+        let mut a = Engine::new(&mut rt, mk_cfg(), &params, 0, Rng::new(7)).unwrap();
+        a.set_weights(1, &params).unwrap();
+        a.add_request(p.clone(), toks.clone(), 77);
+        let r = run_to_finish(&mut a).expect("reference finishes");
+        if r.gen_len() >= 3 {
+            chosen = Some((p, toks, r));
+            break;
+        }
+    }
+    let (p, toks, reference) = chosen.expect("some problem samples >= 3 tokens");
+
+    // interrupted twin: identical engine/seed, stopped after 2 sampled
+    // tokens, drained as a portable snapshot
+    let j = 2usize;
+    let prefill_steps = reference.prompt_tokens.len() - 1;
+    let mut b = Engine::new(&mut rt, mk_cfg(), &params, 0, Rng::new(7)).unwrap();
+    b.set_weights(1, &params).unwrap();
+    b.add_request(p.clone(), toks.clone(), 77);
+    for _ in 0..(prefill_steps + j) {
+        assert!(!b.step().unwrap().idle);
+    }
+    let snaps = b.export_snapshots();
+    assert_eq!(snaps.len(), 1);
+    assert_eq!(b.stats.snapshots_exported, 1);
+    assert_eq!(snaps[0].gen_tokens.len(), j);
+    assert_eq!(snaps[0].gen_tokens[..], reference.gen_tokens[..j]);
+
+    // cross the process boundary in bytes, resume on a fresh engine that
+    // continues the exporter's RNG cursor
+    let snap = SeqSnapshot::from_bytes(&snaps[0].to_bytes()).unwrap();
+    let mut c =
+        Engine::new(&mut rt, mk_cfg(), &params, 9, Rng::from_state_words(snap.rng_words))
+            .unwrap();
+    c.set_weights(1, &params).unwrap();
+    c.import_snapshot(&snap, p.clone()).unwrap();
+    let resumed = run_to_finish(&mut c).expect("migrated sequence finishes");
+
+    assert_eq!(resumed.group_id, reference.group_id, "group id preserved");
+    assert_eq!(resumed.gen_tokens, reference.gen_tokens, "same remaining tokens");
+    assert_eq!(resumed.token_version, reference.token_version, "same version tags");
+    for (x, y) in resumed.behavior_lp.iter().zip(&reference.behavior_lp) {
+        assert!((x - y).abs() < 1e-5, "behavior logprob continuity: {x} vs {y}");
+    }
+    assert_eq!(c.stats.snapshots_imported, 1);
+    assert!(c.stats.import_replays >= 1, "import forced a KV replay");
+    assert!(c.stats.kv_recomputes >= 1);
+}
+
+/// Adopting a migrated snapshot triggers a full KV replay over every
+/// active slot; the replay must leave *healthy neighbors* bit-identical
+/// — in particular, rows that finish their stream before `max_pos` must
+/// park their per-position KV writes off the live cache instead of
+/// clobbering the neighbor's position 0 (the decode graph scatters at
+/// `pos[b]` for every row unconditionally).
+#[test]
+fn import_replay_leaves_neighbor_sequences_intact() {
+    if !runtime_or_skip("import_replay_leaves_neighbor_sequences_intact") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = rt.init_params("tiny", 1).unwrap();
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    let mk_cfg = || {
+        let mut c = EngineCfg::new("tiny");
+        c.max_new_tokens = 10;
+        c
+    };
+    // find a "neighbor" problem with a reasonably long uninterrupted
+    // rollout (so it is still mid-flight when the import lands)
+    let mut chosen = None;
+    for pid in 20..32u64 {
+        let p = gen.problem(pid);
+        let toks = tk.encode(&p.prompt).unwrap();
+        let mut r_eng = Engine::new(&mut rt, mk_cfg(), &params, 0, Rng::new(11)).unwrap();
+        r_eng.set_weights(1, &params).unwrap();
+        r_eng.add_request(p.clone(), toks.clone(), 7);
+        let mut reference = None;
+        for _ in 0..500 {
+            if let Some(r) = r_eng.step().unwrap().finished.into_iter().next() {
+                reference = Some(r);
+                break;
+            }
+        }
+        let r = reference.expect("neighbor finishes");
+        if r.gen_len() >= 4 {
+            chosen = Some((p, toks, r));
+            break;
+        }
+    }
+    let (px, toks_x, x_ref) = chosen.expect("some neighbor samples >= 4 tokens");
+
+    // a donor engine produces a mid-generation snapshot to migrate (skip
+    // donor problems whose first sampled token is already EOS)
+    let mut donated = None;
+    for pid in 50..62u64 {
+        let pb = gen.problem(pid);
+        let toks_b = tk.encode(&pb.prompt).unwrap();
+        let mut donor = Engine::new(&mut rt, mk_cfg(), &params, 1, Rng::new(5)).unwrap();
+        donor.set_weights(1, &params).unwrap();
+        donor.add_request(pb.clone(), toks_b.clone(), 9);
+        for _ in 0..(toks_b.len() + 1) {
+            // prefill (toks + BOS - 1 forced steps) plus one sampled token
+            assert!(!donor.step().unwrap().idle);
+        }
+        let mut snaps = donor.export_snapshots();
+        if snaps.len() == 1 && snaps[0].salvaged_tokens() == 1 {
+            donated = Some((pb, snaps.remove(0)));
+            break;
+        }
+    }
+    let (pb, snap) = donated.expect("some donor survives its first sampled token");
+    let snap = &snap;
+
+    // twin of the reference engine, interrupted by an adoption: after the
+    // neighbor's first sampled token, the migrated sequence arrives and
+    // forces a replay; the neighbor's remaining tokens must not change
+    let mut c = Engine::new(&mut rt, mk_cfg(), &params, 0, Rng::new(11)).unwrap();
+    c.set_weights(1, &params).unwrap();
+    c.add_request(px.clone(), toks_x.clone(), 7);
+    for _ in 0..(x_ref.prompt_tokens.len() - 1 + 1) {
+        assert!(!c.step().unwrap().idle);
+    }
+    c.import_snapshot(snap, pb.clone()).unwrap();
+    let mut finished = Vec::new();
+    for _ in 0..1000 {
+        finished.extend(c.step().unwrap().finished);
+        if finished.iter().any(|r: &Rollout| r.group_id == 7)
+            && finished.iter().any(|r: &Rollout| r.group_id == 9)
+        {
+            break;
+        }
+    }
+    assert!(c.stats.import_replays >= 1, "adoption forced a replay");
+    let x_after = finished
+        .iter()
+        .find(|r| r.group_id == 7)
+        .expect("neighbor finishes alongside the migrant");
+    assert_eq!(
+        x_after.gen_tokens, x_ref.gen_tokens,
+        "replay must not perturb a healthy neighbor's tokens"
+    );
+    assert_eq!(x_after.token_version, x_ref.token_version);
+    let migrant = finished
+        .iter()
+        .find(|r| r.group_id == 9)
+        .expect("migrated sequence finishes");
+    assert_eq!(
+        migrant.gen_tokens[..snap.gen_tokens.len()],
+        snap.gen_tokens[..],
+        "migrated prefix preserved"
+    );
+}
+
+#[test]
+fn scenario_slow_kill_migrates_work_end_to_end() {
+    if !runtime_or_skip("scenario_slow_kill_migrates_work_end_to_end") {
+        return;
+    }
+    let mut cfg = RunConfig::default();
+    cfg.variant = "tiny".into();
+    cfg.sft_steps = 8;
+    cfg.rl_steps = 6;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 16;
+    cfg.task.kinds = vec![TaskKind::Copy];
+    cfg.task.max_operand = 9;
+    cfg.log_every = 0;
+    cfg.n_actors = 3;
+    cfg.elastic.enabled = true;
+    cfg.elastic.min_actors = 2;
+    cfg.elastic.max_actors = 4;
+    // migration is the elastic default; slow-kill one of the three
+    let schedule = ChaosSchedule::slow_kill(2, 5);
+    let summary =
+        coordinator::run_with_chaos(cfg, None, Some(schedule)).expect("chaos run completes");
+    let c = |k: &str| summary.report.counters.get(k).copied().unwrap_or(0.0);
+    assert_eq!(
+        summary.report.series("train/loss").unwrap().points.len(),
+        6,
+        "all optimizer steps ran despite the slow kill"
+    );
+    assert!(c("migration_snaps_exported") > 0.0, "the victim was mid-flight");
+    // zero salvageable sequences lost: every export was adopted or
+    // deliberately discarded at shutdown
+    assert_eq!(
+        c("migration_snaps_exported"),
+        c("migrations_completed") + c("migration_snaps_discarded"),
+        "migration books must balance"
+    );
+    assert!(
+        c("snapshot_tokens_salvaged") <= c("migration_tokens_exported"),
+        "salvage accounting is consistent"
+    );
+    // (rollouts_aborted_on_halt may still be nonzero: the global-stop
+    // shutdown path deliberately aborts — only mid-run kills migrate)
+}

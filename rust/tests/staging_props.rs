@@ -14,15 +14,17 @@ use pipeline_rl::testkit::check;
 use pipeline_rl::weights::ShadowSet;
 
 const PAD: i32 = 0;
+/// idle-row cache position (the engine passes max_seq - 1)
+const PARK: i32 = 95;
 
 #[test]
 fn arena_slot_writes_never_alias() {
     check("arena slot writes never alias", 64, 0xA1, 16, |c| {
         let b = c.usize_in(1, 12);
         let v = c.usize_in(1, 8);
-        let mut arena = StepArena::new(b, v, PAD, 1.0);
+        let mut arena = StepArena::new(b, v, PAD, 1.0, PARK);
         // shadow model: independent per-slot vectors
-        let mut pos = vec![0i32; b];
+        let mut pos = vec![PARK; b];
         let mut cur = vec![PAD; b];
         let mut ftok = vec![PAD; b];
         let mut fmask = vec![1.0f32; b];
@@ -61,7 +63,7 @@ fn arena_shapes_fixed_and_reset_restores_defaults() {
     check("arena shapes fixed, reset restores", 48, 0xA2, 16, |c| {
         let b = c.usize_in(1, 10);
         let v = c.usize_in(1, 6);
-        let mut arena = StepArena::new(b, v, PAD, 0.7);
+        let mut arena = StepArena::new(b, v, PAD, 0.7, PARK);
         for _ in 0..c.usize_in(0, 20) {
             let i = c.usize_in(0, b - 1);
             arena.set_slot(i, c.usize_in(0, 99), 3, None);
@@ -83,7 +85,7 @@ fn arena_shapes_fixed_and_reset_restores_defaults() {
             return Err("arena buffer length changed".into());
         }
         arena.reset();
-        if arena.pos != vec![0i32; b]
+        if arena.pos != vec![PARK; b]
             || arena.cur != vec![PAD; b]
             || arena.ftok != vec![PAD; b]
             || arena.fmask != vec![1.0f32; b]

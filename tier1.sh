@@ -28,6 +28,15 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 0
 fi
 
+# format first: the cheapest check gives the fastest feedback (CI also
+# runs it as a dedicated unconditional step, see .github/workflows/ci.yml)
+if command -v rustfmt >/dev/null 2>&1; then
+    echo "== tier1: cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "tier1: rustfmt not installed; skipping format check" >&2
+fi
+
 echo "== tier1: cargo build --release =="
 cargo build --release
 
@@ -42,13 +51,6 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "tier1: clippy not installed; skipping lint check" >&2
-fi
-
-if command -v rustfmt >/dev/null 2>&1; then
-    echo "== tier1: cargo fmt --check =="
-    cargo fmt --check
-else
-    echo "tier1: rustfmt not installed; skipping format check" >&2
 fi
 
 echo "tier1: OK"

@@ -1,0 +1,137 @@
+//! KV-memory benchmarks — appended machine-readably to BENCH_kvmem.json
+//! (see benchkit docs). Entirely device-free: the paged allocator and
+//! the park/resume bookkeeping are host-side.
+//!
+//! * blocks saved by prefix sharing at G ∈ {4, 8, 16} — the admission
+//!   headroom a GRPO group buys back (the dominant KV cost for long
+//!   prompts is the prompt itself);
+//! * preempt → resume round-trip cost: release + snapshot roundtrip +
+//!   re-admission across generated-prefix lengths (the per-sequence
+//!   price of shedding load under block pressure);
+//! * coalesced vs serial replay count: replays needed to land N
+//!   imported/parked sequences when slots free one at a time — the
+//!   N-replay quadratic the admission window kills.
+//!
+//! `cargo bench --bench kvmem`
+
+use pipeline_rl::benchkit::{self, time};
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::kvcache::{replay_window_open, BlockAllocator};
+use pipeline_rl::engine::SeqState;
+use pipeline_rl::sched::SeqSnapshot;
+
+/// Replays needed to land `n` pending pos>0 sequences when one slot
+/// frees per step (the mass-descale trickle): every step the window is
+/// consulted; an open window seats everything the free slots hold and
+/// costs one replay.
+fn replay_rounds(n: usize, batch: usize, n_slots: usize) -> usize {
+    let (mut waiting, mut free, mut rounds) = (n, 0usize, 0usize);
+    let mut steps = 0;
+    while waiting > 0 {
+        steps += 1;
+        assert!(steps < 10_000, "window starved");
+        free = (free + 1).min(n_slots);
+        if replay_window_open(waiting, free, batch, n_slots) {
+            let seated = waiting.min(free);
+            waiting -= seated;
+            free -= seated;
+            rounds += 1;
+        }
+    }
+    rounds
+}
+
+fn main() {
+    benchkit::json_begin("kvmem");
+
+    benchkit::section("kvmem — blocks saved by prefix sharing");
+    {
+        let (prompt, bs, budget_per) = (96usize, 16usize, 128usize / 16);
+        let mut rows = Vec::new();
+        for &g in &[4usize, 8, 16] {
+            let mut private = BlockAllocator::new(g * budget_per, bs);
+            for i in 0..g {
+                private.admit(i as u64, prompt).unwrap();
+            }
+            let mut shared = BlockAllocator::new(g * budget_per, bs);
+            for i in 0..g {
+                shared.admit_shared(i as u64, 1, prompt).unwrap();
+            }
+            let saved = shared.shared_saved_blocks();
+            assert_eq!(private.held_blocks(), g * prompt.div_ceil(bs));
+            assert_eq!(saved, (g - 1) * prompt.div_ceil(bs));
+            benchkit::json_note(&format!("prefix_share/G={g}/blocks_private"),
+                private.held_blocks() as f64);
+            benchkit::json_note(&format!("prefix_share/G={g}/blocks_shared"),
+                shared.held_blocks() as f64);
+            benchkit::json_note(&format!("prefix_share/G={g}/blocks_saved"), saved as f64);
+            rows.push(vec![
+                g.to_string(),
+                private.held_blocks().to_string(),
+                shared.held_blocks().to_string(),
+                saved.to_string(),
+                format!("{:.1}%", 100.0 * saved as f64 / private.held_blocks() as f64),
+            ]);
+        }
+        benchkit::table(
+            &["G", "blocks private", "blocks shared", "saved", "saved %"],
+            &rows,
+        );
+    }
+
+    benchkit::section("kvmem — preempt -> resume round-trip cost");
+    {
+        let problem = TaskGen::curriculum_small().problem(5);
+        for &gen_len in &[16usize, 256, 4096] {
+            let mut seq = SeqState::new(
+                7,
+                (1u64 << 40) | 7,
+                problem.clone(),
+                vec![11; 15],
+                1,
+                gen_len + 8,
+                0.0,
+            );
+            // fast-forward: prefill then gen_len sampled tokens
+            for _ in 0..15 {
+                seq.advance(0, 0.0, 1, -1, usize::MAX / 2);
+            }
+            for t in 0..gen_len as i32 {
+                seq.advance(100 + t, -0.5, 1, -1, usize::MAX / 2);
+            }
+            let total = seq.total_len();
+            let mut alloc = BlockAllocator::new(2 * total.div_ceil(16) + 4, 16);
+            alloc.admit(7, total).unwrap();
+            time(&format!("preempt+resume round-trip ({gen_len} gen tokens)"), 10, 200, || {
+                // park: free the blocks, export through the snapshot path
+                alloc.release(7).unwrap();
+                let snap: SeqSnapshot = seq.to_snapshot([1, 2, 3, 4]);
+                let parked = SeqState::from_snapshot(&snap, 7, problem.clone(), 0.0);
+                // resume: re-admit and rebuild the state
+                alloc.admit(7, parked.total_len()).unwrap();
+                std::hint::black_box(parked);
+            });
+        }
+    }
+
+    benchkit::section("kvmem — coalesced vs serial replay count");
+    {
+        let (n, slots) = (32usize, 8usize);
+        let mut rows = Vec::new();
+        for &batch in &[1usize, 4, 8] {
+            let rounds = replay_rounds(n, batch, slots);
+            assert!(rounds <= n.div_ceil(batch).max(n.div_ceil(slots)));
+            benchkit::json_note(&format!("replay_coalesce/batch={batch}/rounds"), rounds as f64);
+            rows.push(vec![batch.to_string(), n.to_string(), rounds.to_string()]);
+        }
+        benchkit::table(&["replay_batch", "imports", "replay rounds"], &rows);
+        println!(
+            "(serial batch=1 pays one full-batch replay per import; the window \
+             amortizes it to ceil(N/batch))"
+        );
+    }
+
+    if let Some(p) = benchkit::json_end() {
+        println!("results -> {}", p.display());
+    }
+}

@@ -13,7 +13,7 @@ pub use self::toml::{TomlDoc, TomlValue};
 use crate::broker::Policy;
 use crate::data::task::{RewardCfg, TaskKind};
 use crate::rl::AdvantageMode;
-use crate::sched::{AutoScaleCfg, SchedPolicy};
+use crate::sched::{AutoScaleCfg, PreemptPolicy, SchedPolicy};
 use anyhow::{bail, Result};
 
 /// Training mode (paper §2.2 vs §4).
@@ -87,6 +87,40 @@ impl Default for ElasticConfig {
     }
 }
 
+/// `[kv]` — the engine's paged KV-memory layer: block granularity, pool
+/// oversubscription, block-pressure preemption and replay coalescing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvConfig {
+    /// KV page size in tokens (the block allocator's granularity)
+    pub block_size: usize,
+    /// pool oversubscription factor: the engine's block pool holds
+    /// worst-case-demand / overcommit blocks. 1.0 = exact sizing (every
+    /// slot can reach max_seq, the legacy configuration); 2.0 = half the
+    /// blocks — admission throttles and growth hits block pressure like
+    /// a full HBM, which is what lets one actor run far more concurrent
+    /// long rollouts per GPU (prefix sharing + preemption absorb it)
+    pub overcommit: f64,
+    /// block-pressure victim rule: "none" stalls the starved slot in
+    /// place (legacy), "youngest" parks the least-progressed active
+    /// sequence through the snapshot path
+    pub preempt: PreemptPolicy,
+    /// coalesced-replay batch: pending pos>0 sequences (imports, parked
+    /// preemptees) are admitted min(waiting, batch, slots) at a time so
+    /// one KV replay covers the batch; 1 = legacy admit-eagerly
+    pub replay_batch: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            block_size: 16,
+            overcommit: 1.0,
+            preempt: PreemptPolicy::None,
+            replay_batch: 4,
+        }
+    }
+}
+
 /// `[checkpoint]` — trainer state snapshots and resume.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct CheckpointConfig {
@@ -144,6 +178,9 @@ pub struct RunConfig {
     /// enters a freed decode slot. `fifo` is the legacy behavior;
     /// `longest_prefix` prioritizes migrated prefixes
     pub sched: SchedPolicy,
+    /// `[kv]` — paged KV memory: block size, oversubscription,
+    /// preemption and replay coalescing
+    pub kv: KvConfig,
     pub checkpoint: CheckpointConfig,
     pub elastic: ElasticConfig,
     /// `[autoscale]` — supervisor-driven pool resize from live signals
@@ -183,6 +220,7 @@ impl Default for RunConfig {
             max_pending_groups: 1024,
             weight_stage_chunk: 2,
             sched: SchedPolicy::Fifo,
+            kv: KvConfig::default(),
             checkpoint: CheckpointConfig::default(),
             elastic: ElasticConfig::default(),
             autoscale: AutoScaleCfg::default(),
@@ -234,6 +272,10 @@ impl RunConfig {
         let Some(sched) = SchedPolicy::parse(&sched_name) else {
             bail!("unknown sched.policy {sched_name:?} (fifo | longest_prefix)");
         };
+        let preempt_name = doc.str_or("kv.preempt_policy", d.kv.preempt.name())?;
+        let Some(preempt) = PreemptPolicy::parse(&preempt_name) else {
+            bail!("unknown kv.preempt_policy {preempt_name:?} (none | youngest)");
+        };
         let da = &d.autoscale;
         Ok(RunConfig {
             variant: doc.str_or("run.variant", &d.variant)?,
@@ -269,6 +311,12 @@ impl RunConfig {
                 .usize_or("queues.max_pending_groups", d.max_pending_groups)?,
             weight_stage_chunk: doc.usize_or("run.weight_stage_chunk", d.weight_stage_chunk)?,
             sched,
+            kv: KvConfig {
+                block_size: doc.usize_or("kv.block_size", d.kv.block_size)?,
+                overcommit: doc.f64_or("kv.overcommit", d.kv.overcommit)?,
+                preempt,
+                replay_batch: doc.usize_or("kv.replay_batch", d.kv.replay_batch)?,
+            },
             autoscale: AutoScaleCfg {
                 enabled: doc.bool_or("autoscale.enabled", da.enabled)?,
                 backlog_per_actor: doc
@@ -340,6 +388,18 @@ impl RunConfig {
         if !(0.0..=100.0).contains(&self.clip_c) || self.clip_c <= 0.0 {
             bail!("clip_c must be positive");
         }
+        if self.kv.block_size == 0 {
+            bail!("kv.block_size must be >= 1");
+        }
+        if !self.kv.overcommit.is_finite() || self.kv.overcommit <= 0.0 {
+            bail!("kv.overcommit must be a positive factor, got {}", self.kv.overcommit);
+        }
+        if self.kv.replay_batch == 0 {
+            bail!("kv.replay_batch must be >= 1 (1 = admit eagerly)");
+        }
+        // overcommit > 1 with preempt = none is deliberately legal: the
+        // legacy stall-in-place path is the ablation baseline the
+        // preemption numbers compare against
         if self.elastic.enabled {
             if !matches!(self.mode, Mode::Pipeline) {
                 bail!(
@@ -584,6 +644,58 @@ mod tests {
     fn rejects_unknown_sched_policy() {
         let doc = TomlDoc::parse("[sched]\npolicy = \"srpt\"").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn parses_kv_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            [kv]
+            block_size = 8
+            overcommit = 2.5
+            preempt_policy = "youngest"
+            replay_batch = 6
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.kv.block_size, 8);
+        assert_eq!(cfg.kv.overcommit, 2.5);
+        assert_eq!(cfg.kv.preempt, PreemptPolicy::Youngest);
+        assert_eq!(cfg.kv.replay_batch, 6);
+        cfg.validate().unwrap();
+        // defaults: exact pool, no preemption, coalescing on
+        let d = RunConfig::default();
+        assert_eq!(d.kv.block_size, 16);
+        assert_eq!(d.kv.overcommit, 1.0);
+        assert_eq!(d.kv.preempt, PreemptPolicy::None);
+        assert_eq!(d.kv.replay_batch, 4);
+    }
+
+    #[test]
+    fn kv_validation_rules() {
+        let doc = TomlDoc::parse("[kv]\npreempt_policy = \"oldest\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "unknown victim rule refused");
+
+        let mut cfg = RunConfig::default();
+        cfg.kv.block_size = 0;
+        assert!(cfg.validate().is_err(), "zero block size refused");
+
+        let mut cfg = RunConfig::default();
+        cfg.kv.overcommit = 0.0;
+        assert!(cfg.validate().is_err(), "non-positive overcommit refused");
+        cfg.kv.overcommit = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN overcommit refused");
+
+        let mut cfg = RunConfig::default();
+        cfg.kv.replay_batch = 0;
+        assert!(cfg.validate().is_err(), "zero replay batch refused");
+
+        // oversubscription without preemption stays legal (the ablation
+        // baseline: legacy stall-in-place)
+        let mut cfg = RunConfig::default();
+        cfg.kv.overcommit = 2.0;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -108,6 +108,12 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     ecfg.temperature = cfg.temperature as f32;
     ecfg.max_new_tokens = cfg.max_new_tokens;
     ecfg.sched = cfg.sched;
+    // `[kv]`: paged-memory layer — block granularity, oversubscription,
+    // block-pressure preemption, coalesced replay
+    ecfg.block_size = cfg.kv.block_size;
+    ecfg.overcommit = cfg.kv.overcommit;
+    ecfg.preempt = cfg.kv.preempt;
+    ecfg.replay_batch = cfg.kv.replay_batch;
     let mut engine = Engine::new(
         &mut rt,
         ecfg,
@@ -280,11 +286,27 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
         steps_since_fill_metric += 1;
         if steps_since_fill_metric >= 16 {
             steps_since_fill_metric = 0;
+            let t = now(&hub);
+            let steps = engine.stats.steps as f64;
             hub.record(
                 &format!("actor{actor_id}/active_slots"),
-                now(&hub),
-                engine.stats.steps as f64,
+                t,
+                steps,
                 engine.n_active() as f64,
+            );
+            // KV-memory pressure: free pool + blocks saved by prefix
+            // sharing (the oversubscription headroom both signals feed)
+            hub.record(
+                &format!("actor{actor_id}/kv_free_blocks"),
+                t,
+                steps,
+                engine.kv_free_blocks() as f64,
+            );
+            hub.record(
+                &format!("actor{actor_id}/kv_shared_saved_blocks"),
+                t,
+                steps,
+                engine.kv_shared_saved_blocks() as f64,
             );
         }
 
@@ -357,6 +379,14 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
                 }
             }
         }
+    }
+    // lifetime KV-memory counters of this incarnation's engine (summed
+    // across actors/incarnations by the hub)
+    if engine.stats.preemptions > 0 {
+        hub.add("kv_preemptions", engine.stats.preemptions as f64);
+    }
+    if engine.kv_cow_forks() > 0 {
+        hub.add("kv_cow_forks", engine.kv_cow_forks() as f64);
     }
     bus.leave_process_group(&group_name);
     log.debug("actor stopping");

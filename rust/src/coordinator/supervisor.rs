@@ -410,6 +410,18 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                 ChaosKind::TopicStall { ms } => {
                     rollout_tx.stall_for(Duration::from_millis(ms))
                 }
+                ChaosKind::CorruptSnapshot => {
+                    // byzantine: bit-flipped PRLSNAP1 bytes enter the
+                    // migration hub as if a corrupt peer deposited an
+                    // in-flight rollout; the claim path must reject them
+                    // with the books balanced and the claimer alive
+                    if let Some(hub_m) = &migrate {
+                        hub_m.deposit_raw(crate::testkit::chaos::corrupt_snapshot_bytes(
+                            ev.at_step,
+                        ));
+                        hub.add("chaos_corrupt_snapshots_injected", 1.0);
+                    }
+                }
             }
         }
         // land expired slow kills (async: reap collects the exit later)

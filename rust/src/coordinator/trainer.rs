@@ -16,17 +16,21 @@
 //! **Checkpoint/resume:** every `[checkpoint] every` steps the trainer
 //! snapshots a full [`TrainState`] (params + both Adam moments + the
 //! sample/token counters) under `[checkpoint] dir` and updates the
-//! directory manifest. When [`TrainerArgs::resume`] is set the trainer
-//! continues from `state.step + 1` with the restored optimizer trajectory
-//! — identical inputs then produce bit-identical parameters (see
-//! tests/checkpoint_resume.rs).
+//! directory manifest. The snapshot is handed to an
+//! [`AsyncCheckpointer`] writer thread (latest-wins queue, manifest
+//! updated only after the state file fsyncs), so checkpoint I/O no
+//! longer stalls optimizer steps; the final state is always flushed
+//! before the trainer returns. When [`TrainerArgs::resume`] is set the
+//! trainer continues from `state.step + 1` with the restored optimizer
+//! trajectory — identical inputs then produce bit-identical parameters
+//! (see tests/checkpoint_resume.rs).
 
 use super::conv::ConvSync;
 use super::packing::TrainBatch;
 use crate::broker::{RecvError, Subscriber};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::MetricsHub;
-use crate::model::checkpoint::TrainState;
+use crate::model::checkpoint::{AsyncCheckpointer, TrainState};
 use crate::rl::{BatchLag, LagTracker};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::logging::Logger;
@@ -102,15 +106,27 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
     let mut lag_tracker = LagTracker::new();
     const LAG_SMOOTH_WINDOW: usize = 8;
 
+    // off-thread checkpoint writer: the hot loop only hands states over
+    let mut ckpt: Option<AsyncCheckpointer> = match (&cfg.checkpoint.dir, cfg.checkpoint.every) {
+        (Some(dir), every) if every > 0 => {
+            Some(AsyncCheckpointer::new(std::path::PathBuf::from(dir), cfg.checkpoint.keep_last))
+        }
+        _ => None,
+    };
+
     for step in start_step..=cfg.rl_steps {
         // ---- get a batch ----
         let batch = loop {
             if stop.load(Ordering::Relaxed) {
+                finish_checkpoints(ckpt.take(), &hub)?;
                 return Ok(params);
             }
             match batch_rx.recv(Duration::from_millis(200)) {
                 Ok(b) => break b,
-                Err(RecvError::Closed) => return Ok(params),
+                Err(RecvError::Closed) => {
+                    finish_checkpoints(ckpt.take(), &hub)?;
+                    return Ok(params);
+                }
                 Err(RecvError::Timeout) => continue,
             }
         };
@@ -240,10 +256,11 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
             }
         }
 
-        // ---- checkpoint (the stall the ring buffer absorbs) ----
+        // ---- checkpoint (handed off; serialization + fsync run on the
+        // writer thread, not this one) ----
         if cfg.checkpoint.every > 0 && step % cfg.checkpoint.every == 0 {
-            if let Some(dir) = &cfg.checkpoint.dir {
-                let st = TrainState {
+            if let Some(w) = &ckpt {
+                w.submit(TrainState {
                     variant: cfg.variant.clone(),
                     step: step as u64,
                     params: params.clone(),
@@ -252,18 +269,28 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
                     samples_total,
                     tokens_total,
                     rng: [0; 4], // trainer owns no RNG; harnesses fill this
-                };
-                st.save_with_manifest(
-                    std::path::Path::new(dir),
-                    cfg.checkpoint.keep_last,
-                )?;
-                hub.add("checkpoints_written", 1.0);
+                });
+                hub.add("checkpoints_submitted", 1.0);
             }
         }
     }
+    finish_checkpoints(ckpt.take(), &hub)?;
     log.info(&format!(
         "training done: {} steps, {} samples",
         cfg.rl_steps, samples_total
     ));
     Ok(params)
+}
+
+/// Drain + join the async checkpoint writer and record its books. Every
+/// trainer exit path runs through this, so the run's final submitted
+/// state is on disk (and a broken writer fails the run loudly) before
+/// `run_trainer` returns.
+fn finish_checkpoints(ckpt: Option<AsyncCheckpointer>, hub: &MetricsHub) -> Result<()> {
+    if let Some(w) = ckpt {
+        let stats = w.finish()?;
+        hub.add("checkpoints_written", stats.written as f64);
+        hub.add("checkpoints_superseded", stats.superseded as f64);
+    }
+    Ok(())
 }

@@ -22,6 +22,22 @@ pub struct CompletionRequest {
     pub group_id: u64,
 }
 
+/// Live KV-memory pressure of a generation service (the `/metrics`
+/// analogue a coordinator polls to decide admission, migration and
+/// autoscaling): paged-allocator occupancy, the savings bought by
+/// prefix sharing, and how often the service had to shed load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvPressure {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    /// distinct physical blocks held
+    pub held_blocks: usize,
+    /// block references deduplicated away by prefix sharing right now
+    pub saved_blocks: usize,
+    /// sequences parked under block pressure so far
+    pub preemptions: u64,
+}
+
 pub trait GenerationService {
     /// `/v1/chat/completions` (streaming form): enqueue a request.
     fn submit(&mut self, req: CompletionRequest) -> Result<u64>;
@@ -50,6 +66,9 @@ pub trait GenerationService {
     /// Adopt a sequence exported from another service instance; its KV
     /// prefix is rebuilt locally. Returns the fresh local sequence id.
     fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64>;
+
+    /// Live KV-memory pressure (see [`KvPressure`]).
+    fn kv_pressure(&self) -> KvPressure;
 }
 
 impl GenerationService for super::Engine {
@@ -83,5 +102,15 @@ impl GenerationService for super::Engine {
 
     fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64> {
         self.import_snapshot(snap, problem)
+    }
+
+    fn kv_pressure(&self) -> KvPressure {
+        KvPressure {
+            total_blocks: self.kv_total_blocks(),
+            free_blocks: self.kv_free_blocks(),
+            held_blocks: self.kv_held_blocks(),
+            saved_blocks: self.kv_shared_saved_blocks(),
+            preemptions: self.stats.preemptions,
+        }
     }
 }

@@ -47,6 +47,12 @@ pub struct StepArena {
     pub fmask: Vec<f32>,
     /// Gumbel noise, `[B, V]` row-major
     pub gumbel: Vec<f32>,
+    /// per-slot allocated KV capacity in tokens (block table length ×
+    /// block size; 0 for idle/parked rows) — not a graph operand, but
+    /// staged alongside `pos` so `run_decode_step` can validate every KV
+    /// write against the allocator's block tables (block-table-aware
+    /// staging)
+    pub cap: Vec<usize>,
     temp: f32,
 }
 
@@ -75,6 +81,7 @@ impl StepArena {
             ftok: vec![pad; b],
             fmask: vec![1.0; b],
             gumbel: vec![0.0; b * vocab],
+            cap: vec![0; b],
             temp,
         }
     }
@@ -95,6 +102,7 @@ impl StepArena {
         self.cur.iter_mut().for_each(|x| *x = self.pad);
         self.ftok.iter_mut().for_each(|x| *x = self.pad);
         self.fmask.iter_mut().for_each(|x| *x = 1.0);
+        self.cap.iter_mut().for_each(|x| *x = 0);
     }
 
     /// Zero the noise buffer (greedy decoding / replay).
@@ -103,10 +111,13 @@ impl StepArena {
     }
 
     /// Write one active slot's inputs. `forced` carries the prompt token
-    /// still being force-fed, or None once the slot is sampling.
-    pub fn set_slot(&mut self, i: usize, pos: usize, cur: i32, forced: Option<i32>) {
+    /// still being force-fed, or None once the slot is sampling. `cap` is
+    /// the slot's allocated KV capacity in tokens (the write at `pos`
+    /// must be backed by a block: `pos < cap`, validated at dispatch).
+    pub fn set_slot(&mut self, i: usize, pos: usize, cur: i32, forced: Option<i32>, cap: usize) {
         self.pos[i] = pos as i32;
         self.cur[i] = cur;
+        self.cap[i] = cap;
         match forced {
             Some(t) => {
                 self.ftok[i] = t;
@@ -143,17 +154,19 @@ mod tests {
     fn defaults_and_reset() {
         let mut a = StepArena::new(3, 4, -7, 0.8, 95);
         assert_eq!(a.pos, vec![95, 95, 95], "idle rows park off the live cache");
-        a.set_slot(1, 5, 42, None);
-        a.set_slot(2, 2, 9, Some(11));
+        a.set_slot(1, 5, 42, None, 8);
+        a.set_slot(2, 2, 9, Some(11), 16);
         assert_eq!(a.pos, vec![95, 5, 2]);
         assert_eq!(a.cur, vec![-7, 42, 9]);
         assert_eq!(a.ftok, vec![-7, -7, 11]);
         assert_eq!(a.fmask, vec![1.0, 0.0, 1.0]);
+        assert_eq!(a.cap, vec![0, 8, 16]);
         a.reset();
         assert_eq!(a.pos, vec![95, 95, 95]);
         assert_eq!(a.cur, vec![-7, -7, -7]);
         assert_eq!(a.ftok, vec![-7, -7, -7]);
         assert_eq!(a.fmask, vec![1.0, 1.0, 1.0]);
+        assert_eq!(a.cap, vec![0, 0, 0], "reset clears the staging capacities");
     }
 
     #[test]

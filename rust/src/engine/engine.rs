@@ -5,13 +5,15 @@
 //! See module docs in engine/mod.rs for the hot-path data flow.
 
 use super::arena::StepArena;
-use super::kvcache::BlockAllocator;
+use super::kvcache::{replay_window_open, BlockAllocator};
 use super::sequence::SeqState;
 use crate::data::task::Problem;
 use crate::model::tokenizer::{EOS_ID, PAD_ID};
 use crate::rl::Rollout;
-use crate::runtime::{run_decode_step, DecodeInputs, DeviceVal, HostTensor, Runtime, Variant};
-use crate::sched::{SchedPolicy, Scheduler, SeqSnapshot, SeqView};
+use crate::runtime::{
+    run_decode_step, DecodeInputs, DeviceVal, HostTensor, Runtime, StagePlan, Variant,
+};
+use crate::sched::{PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use crate::weights::ShadowSet;
@@ -28,11 +30,26 @@ pub struct EngineCfg {
     pub max_new_tokens: usize,
     /// KV page size for the block allocator
     pub block_size: usize,
-    /// total KV blocks; None = exactly enough for all slots at max_seq
+    /// total KV blocks; None = sized from `overcommit`
     pub kv_blocks: Option<usize>,
+    /// KV pool oversubscription factor (used when `kv_blocks` is None):
+    /// the pool holds worst-case-demand / overcommit blocks. 1.0 = exact
+    /// (every slot can reach max_seq); 2.0 = half the blocks — admission
+    /// and growth then throttle exactly like a full HBM, and the
+    /// preemption policy sheds load instead of stalling
+    pub overcommit: f64,
     /// admission policy (see `sched::scheduler`); Fifo reproduces the
     /// legacy head-of-line behavior exactly
     pub sched: SchedPolicy,
+    /// block-pressure victim rule (`[kv] preempt_policy`): None stalls
+    /// the starved slot in place (legacy), Youngest parks the
+    /// least-progressed active sequence through the snapshot path
+    pub preempt: PreemptPolicy,
+    /// coalesced-replay batch (`[kv] replay_batch`): pending pos>0
+    /// sequences (imports, parked preemptees) are batch-admitted —
+    /// admission holds free slots until min(waiting, batch, slots) can
+    /// land in a single `recompute_kv` pass. 1 = legacy admit-eagerly
+    pub replay_batch: usize,
     /// record the full per-step log-distribution of sampled tokens
     /// (needed by the Fig 7 KL study; off on the hot path)
     pub capture_dist: bool,
@@ -52,7 +69,10 @@ impl EngineCfg {
             max_new_tokens: 48,
             block_size: 16,
             kv_blocks: None,
+            overcommit: 1.0,
             sched: SchedPolicy::Fifo,
+            preempt: PreemptPolicy::None,
+            replay_batch: 4,
             capture_dist: false,
             recompute_kv_on_update: false,
             greedy: false,
@@ -69,6 +89,10 @@ pub struct EngineStats {
     pub kv_recomputes: u64,
     pub recompute_steps: u64,
     pub stall_steps: u64,
+    /// active sequences parked under KV block pressure (scheduler-driven
+    /// preemption): blocks freed, re-queued through the snapshot path,
+    /// resumed later via a coalesced replay
+    pub preemptions: u64,
     pub finished: u64,
     /// in-flight sequences exported as portable snapshots (drain/kill)
     pub snapshots_exported: u64,
@@ -179,11 +203,20 @@ impl Engine {
         crate::runtime::check_params(&variant, init_params)?;
         let graph = rt.graph(&cfg.variant, "decode")?;
         let kv = DeviceVal::Lit(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?);
+        ensure!(
+            cfg.overcommit > 0.0,
+            "kv overcommit must be positive, got {}",
+            cfg.overcommit
+        );
         let allocator = match cfg.kv_blocks {
             Some(n) => BlockAllocator::new(n, cfg.block_size),
-            None => BlockAllocator::for_slots(variant.gen_batch, variant.max_seq, cfg.block_size),
+            None => {
+                let full = variant.gen_batch * variant.max_seq.div_ceil(cfg.block_size);
+                let n = ((full as f64 / cfg.overcommit).ceil() as usize).max(1);
+                BlockAllocator::new(n, cfg.block_size)
+            }
         };
-        let scheduler = cfg.sched.build();
+        let scheduler = cfg.sched.build_with_preempt(cfg.preempt);
         let b = variant.gen_batch;
         let v = variant.vocab;
         // idle rows park their (discarded) KV write at max_seq - 1: the
@@ -258,8 +291,44 @@ impl Engine {
         self.scheduler.name()
     }
 
+    // ---- KV-memory pressure (the allocator's live accounting) ----
+
+    pub fn kv_total_blocks(&self) -> usize {
+        self.allocator.total_blocks()
+    }
+
+    pub fn kv_free_blocks(&self) -> usize {
+        self.allocator.free_blocks()
+    }
+
+    /// Distinct physical blocks currently held.
+    pub fn kv_held_blocks(&self) -> usize {
+        self.allocator.held_blocks()
+    }
+
+    /// Physical blocks saved right now by prefix sharing (logical table
+    /// references minus distinct blocks).
+    pub fn kv_shared_saved_blocks(&self) -> usize {
+        self.allocator.shared_saved_blocks()
+    }
+
+    /// Copy-on-write forks performed (first divergent writes into a
+    /// shared prompt block).
+    pub fn kv_cow_forks(&self) -> u64 {
+        self.allocator.cow_forks()
+    }
+
+    /// Run the allocator's conservation checks (tests/diagnostics).
+    pub fn kv_check(&self) -> Result<()> {
+        self.allocator.check_invariants()
+    }
+
     /// Paper API `/v1/chat/completions` (enqueue form): submit a prompt.
-    /// Rollouts sharing `group_id` form one advantage group.
+    /// Rollouts sharing `group_id` form one advantage group — and since
+    /// group members decode the same prompt, the group id doubles as the
+    /// KV prefix-sharing key (callers must not reuse a group id across
+    /// different prompts; everywhere in this codebase a group is one
+    /// problem).
     pub fn add_request(&mut self, problem: Problem, prompt_tokens: Vec<i32>, group_id: u64) -> u64 {
         let id = self.next_seq_id;
         self.next_seq_id += 1;
@@ -470,10 +539,39 @@ impl Engine {
 
     /// Admit pending sequences into free slots (in-flight adds), one
     /// scheduler pick per free slot. Returns true when any admitted
-    /// sequence carries progress made elsewhere (an imported snapshot),
-    /// i.e. its KV prefix must be replayed before the next decode step.
+    /// sequence carries progress made elsewhere (an imported snapshot or
+    /// a parked preemptee), i.e. its KV prefix must be replayed before
+    /// the next decode step.
+    ///
+    /// **Coalesced replay**: every admitted pos>0 sequence forces the
+    /// same full-batch `recompute_kv` pass, so N of them trickling into
+    /// slots as they free would cost up to N replays where one would do.
+    /// When any pos>0 sequence waits, admission holds *every* free slot
+    /// until min(waiting, replay_batch, slots) can be seated together —
+    /// then one replay covers the whole batch (`replay_batch = 1`
+    /// reproduces the legacy admit-eagerly behavior exactly).
+    ///
+    /// **Prefix sharing**: fresh sequences (nothing generated) admit
+    /// under their group id as the share key — the G members of a GRPO
+    /// group reference one set of prompt blocks (refcount G) instead of
+    /// allocating G copies; the gate the scheduler consults is
+    /// share-aware, so a group member can be admissible when a
+    /// same-length stranger is not.
     fn admit(&mut self) -> bool {
         let mut needs_replay = false;
+        let free_slots = self.slots.iter().filter(|s| s.is_none()).count();
+        if free_slots == 0 || self.pending.is_empty() {
+            return false;
+        }
+        let waiting_replay = self.pending.iter().filter(|s| s.pos > 0).count();
+        if !replay_window_open(
+            waiting_replay,
+            free_slots,
+            self.cfg.replay_batch,
+            self.slots.len(),
+        ) {
+            return false; // hold the slots for the coalesced batch
+        }
         let mut views_built = false;
         for i in 0..self.slots.len() {
             if self.slots[i].is_some() {
@@ -486,17 +584,18 @@ impl Engine {
                 // built once per admit() into the reusable buffer, kept
                 // in sync with `pending` as picks are removed below
                 self.view_buf.clear();
-                self.view_buf.extend(self.pending.iter().map(|s| SeqView {
-                    seq_id: s.seq_id,
-                    group_id: s.group_id,
-                    total_len: s.total_len(),
-                    gen_len: s.gen_len(),
-                }));
+                self.view_buf.extend(self.pending.iter().map(|s| s.view()));
                 views_built = true;
             }
             let allocator = &self.allocator;
-            let Some(idx) = self.scheduler.pick(&self.view_buf, &|len| allocator.can_admit(len))
-            else {
+            let gate = |v: &SeqView| {
+                if v.gen_len == 0 {
+                    allocator.can_admit_shared(v.group_id, v.total_len)
+                } else {
+                    allocator.can_admit(v.total_len)
+                }
+            };
+            let Some(idx) = self.scheduler.pick(&self.view_buf, &gate) else {
                 break; // policy admits nothing (e.g. out of KV blocks)
             };
             let Some(seq) = self.pending.remove(idx) else {
@@ -504,9 +603,16 @@ impl Engine {
                 break;
             };
             self.view_buf.remove(idx);
-            self.allocator
-                .admit(seq.seq_id, seq.total_len())
-                .expect("scheduler picked an admissible sequence");
+            if seq.gen_len() == 0 {
+                self.allocator
+                    .admit_shared(seq.seq_id, seq.group_id, seq.total_len())
+                    .expect("scheduler picked an admissible sequence");
+            } else {
+                // imports/parked sequences already diverged: private blocks
+                self.allocator
+                    .admit(seq.seq_id, seq.total_len())
+                    .expect("scheduler picked an admissible sequence");
+            }
             if seq.pos > 0 {
                 needs_replay = true;
             }
@@ -514,6 +620,63 @@ impl Engine {
             self.stalled[i] = false;
         }
         needs_replay
+    }
+
+    /// Block pressure on slot `i`: ask the scheduler for victims to park
+    /// until the starved sequence can grow (or the policy gives up).
+    /// Returns whether the growth finally succeeded; if the victim was
+    /// the starved sequence itself, its slot is simply left empty.
+    fn preempt_for_growth(&mut self, i: usize) -> Result<bool> {
+        loop {
+            let mut slot_of = Vec::new();
+            let mut views = Vec::new();
+            for (slot, s) in self.slots.iter().enumerate() {
+                if let Some(s) = s {
+                    slot_of.push(slot);
+                    views.push(s.view());
+                }
+            }
+            if views.len() <= 1 {
+                return Ok(false); // parking the only sequence helps no one
+            }
+            let stalled_idx = slot_of
+                .iter()
+                .position(|&sl| sl == i)
+                .expect("the starved slot is active");
+            let Some(vidx) = self.scheduler.pick_victim(&views, stalled_idx) else {
+                return Ok(false); // policy stalls in place (legacy)
+            };
+            let Some(&vslot) = slot_of.get(vidx) else {
+                debug_assert!(false, "scheduler picked out-of-range victim {vidx}");
+                return Ok(false);
+            };
+            self.park_slot(vslot)?;
+            if vslot == i {
+                return Ok(false); // the starved sequence itself was parked
+            }
+            let s = self.slots[i].as_ref().expect("starved sequence still resident");
+            if self.allocator.grow(s.seq_id, s.pos + 1).unwrap_or(false) {
+                return Ok(true);
+            }
+        }
+    }
+
+    /// Preempt one running sequence: release its blocks and send it back
+    /// to the pending queue *through the snapshot path* — a park is
+    /// exactly a migration export/import without the process boundary, so
+    /// the parked sequence re-enters via the same coalesced replay as an
+    /// imported one, with its generated prefix, version tags and phase
+    /// intact. The local sequence id is retained (its allocator entry is
+    /// gone, so nothing collides).
+    fn park_slot(&mut self, slot: usize) -> Result<()> {
+        let s = self.slots[slot].take().expect("park of an empty slot");
+        self.allocator.release(s.seq_id)?;
+        self.stalled[slot] = false;
+        let snap = s.to_snapshot(self.rng.state_words());
+        let parked = SeqState::from_snapshot(&snap, snap.seq_id, s.problem.clone(), s.t_start);
+        self.pending.push_back(parked);
+        self.stats.preemptions += 1;
+        Ok(())
     }
 
     /// One decode step for every busy slot. Returns finished rollouts.
@@ -533,16 +696,31 @@ impl Engine {
             self.recompute_kv()?;
         }
 
-        // KV growth check: a slot whose next token needs a new block may
-        // stall when the pool is over-committed (vLLM would preempt).
+        // KV growth check: a slot whose next token needs a new block (or
+        // a copy-on-write fork) may hit an exhausted pool when it is
+        // over-committed. With a preemption policy the scheduler picks a
+        // victim to park (blocks freed through the snapshot path, vLLM's
+        // preempt/swap) so the rest keep moving; without one the slot
+        // stalls in place (legacy).
         for i in 0..b {
-            if let Some(s) = &self.slots[i] {
-                let ok = self.allocator.grow(s.seq_id, s.pos + 1).unwrap_or(false);
-                self.stalled[i] = !ok;
-                if !ok {
-                    self.stats.stall_steps += 1;
-                }
+            let Some(s) = &self.slots[i] else { continue };
+            let (sid, need) = (s.seq_id, s.pos + 1);
+            let mut ok = self.allocator.grow(sid, need).unwrap_or(false);
+            if !ok {
+                ok = self.preempt_for_growth(i)?;
             }
+            if self.slots[i].is_none() {
+                continue; // the starved sequence itself was parked
+            }
+            self.stalled[i] = !ok;
+            if !ok {
+                self.stats.stall_steps += 1;
+            }
+        }
+        if self.n_active() == 0 {
+            // preemption can park the last active sequence; it waits in
+            // pending for the coalesced re-admission
+            return Ok(StepOutcome { idle: true, ..Default::default() });
         }
 
         // ---- build inputs in the reusable arena (no allocation) ----
@@ -553,7 +731,11 @@ impl Engine {
                 if self.stalled[i] {
                     continue;
                 }
-                self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next());
+                let cap = self
+                    .allocator
+                    .capacity_tokens(s.seq_id)
+                    .expect("active sequences hold a block table");
+                self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next(), cap);
             }
         }
         if self.cfg.greedy {
@@ -580,6 +762,11 @@ impl Engine {
                 fmask: &lits.fmask,
                 temp: &lits.temp,
             },
+            Some(&StagePlan {
+                park: (self.variant.max_seq - 1) as i32,
+                pos: &self.arena.pos,
+                cap: &self.arena.cap,
+            }),
         )
         .context("decode step")?;
         drop(param_bufs);
@@ -669,6 +856,13 @@ impl Engine {
             .map(|s| s.pos)
             .max()
             .unwrap_or(0);
+        if max_pos == 0 {
+            // nothing written yet anywhere: the zeroed cache *is* the
+            // rebuilt state, and with no dispatch the param sources must
+            // stay alive for the next consuming execute
+            self.stats.kv_recomputes += 1;
+            return Ok(());
+        }
         // loop-invariant inputs built once per replay, not per position
         let zero_gum = HostTensor::zeros_f32(&[b, vsz]).to_literal()?;
         let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
@@ -681,12 +875,29 @@ impl Engine {
         let park = (self.variant.max_seq - 1) as i32;
         let mut pos = vec![park; b];
         let mut cur = vec![PAD_ID; b];
-        for p in 0..=max_pos {
+        // block-table capacities are loop-invariant: the allocator covers
+        // every position the replay writes. The replay rebuilds positions
+        // 0..pos-1 only — position `pos` has never been written (it is
+        // the sequence's *next* write, landed by its next decode step
+        // after the growth check backs it with a block), so staging it
+        // here would both be redundant and trip the StagePlan validation
+        // for a sequence sitting exactly at a block boundary (cap == pos)
+        // or stalled.
+        let caps: Vec<usize> = self
+            .slots
+            .iter()
+            .map(|slot| {
+                slot.as_ref()
+                    .and_then(|s| self.allocator.capacity_tokens(s.seq_id))
+                    .unwrap_or(0)
+            })
+            .collect();
+        for p in 0..max_pos {
             pos.iter_mut().for_each(|x| *x = park);
             cur.iter_mut().for_each(|x| *x = PAD_ID);
             for (i, slot) in self.slots.iter().enumerate() {
                 if let Some(s) = slot {
-                    if p <= s.pos {
+                    if p < s.pos {
                         pos[i] = p as i32;
                         cur[i] = s.stream[p];
                     }
@@ -708,6 +919,7 @@ impl Engine {
                     fmask: &fmask_l,
                     temp: &temp_l,
                 },
+                Some(&StagePlan { park, pos: &pos, cap: &caps }),
             )?;
             drop(param_bufs);
             if d.kv_restaged {

@@ -1,27 +1,88 @@
-//! Paged KV-cache block allocator (vLLM's PagedAttention bookkeeping).
+//! Paged KV-cache allocator with refcounted copy-on-write prefix sharing
+//! (vLLM's PagedAttention bookkeeping, upgraded from per-sequence block
+//! tables to a shared-block economy).
 //!
-//! The device-side cache of the AOT decode graph is dense per slot, but
-//! admission control and memory accounting work exactly like vLLM: the
-//! cache is divided into fixed-size blocks; a sequence holds
-//! ceil(len / block_size) blocks, acquired incrementally as it grows and
-//! released when it finishes. A new request is admitted only when a slot
-//! *and* enough blocks for its prompt are available — with an
-//! over-committed pool this throttles admission exactly like a full HBM.
+//! The device-side cache of the AOT decode graph is dense per slot, so
+//! physically every sequence owns its own cache plane; this allocator is
+//! the *admission-capacity model* layered on top, and it works exactly
+//! like vLLM's: the cache is divided into fixed-size blocks, a sequence
+//! references ceil(len / block_size) blocks, and a request is admitted
+//! only when a slot *and* enough blocks are available. With an
+//! over-committed pool (`[kv] overcommit`) this throttles admission and
+//! growth exactly like a full HBM — which is what lets one actor run far
+//! more concurrent long rollouts per GPU than the worst case would allow
+//! (paper §4: KV memory is the binding resource at saturation).
 //!
-//! Invariants (property-tested): no double-free, no leak: free +
-//! held == total at all times; a sequence never holds more blocks than
-//! ceil(max_seq / block_size).
+//! **Prefix sharing.** The G members of a GRPO group decode the same
+//! prompt — the dominant KV cost for long prompts. The first member
+//! admitted under a share key (the group id) registers its prompt blocks
+//! as the key's shared prefix; every later fresh member admitted under
+//! the same key *references the same physical blocks* (refcount G, held
+//! once) instead of allocating its own copy. This is vLLM's
+//! fork-on-sampling layout: only the divergent suffix costs memory.
+//!
+//! **Copy-on-write.** Shared blocks are read-only past the shared prefix
+//! length: prefill and replay re-write prompt positions with identical
+//! content (allowed — each slot's dense plane holds its own copy of the
+//! identical prompt K/V), but a sequence's first *divergent* write (its
+//! first sampled token landing in the partial last prompt block) forks
+//! that block — a fresh block replaces the shared one in the writer's
+//! table, the shared refcount drops by one, and divergent sequences never
+//! alias a shared block again (property-tested below).
+//!
+//! **Preemption.** Growth returning `false` is the block-pressure signal;
+//! the engine forwards it to the scheduler's victim hook
+//! ([`crate::sched::Scheduler::pick_victim`]) instead of just stalling
+//! the slot — the vLLM preempt/swap analogue, with
+//! [`crate::sched::SeqSnapshot`] as the swap space.
+//!
+//! Invariants (property-tested): refcount conservation — every physical
+//! block is either on the free list (refcount 0) or held (refcount ≥ 1),
+//! free + held == total, and Σ table references == Σ refcounts; no
+//! double-free; fork-on-write never leaves a shared block aliased across
+//! divergent sequences.
 
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+
+/// A share key's registered prompt blocks. Lives while at least one
+/// constituent block is still referenced; purged the moment any of them
+/// drops to refcount 0 (the group is gone) or a sole holder diverges
+/// into it (see [`BlockAllocator::grow`]).
+#[derive(Debug)]
+struct SharedPrefix {
+    blocks: Vec<u32>,
+    /// prompt length (tokens) this prefix covers; a later admission
+    /// shares only on an exact match
+    len: usize,
+}
+
+#[derive(Debug)]
+struct SeqBlocks {
+    table: Vec<u32>,
+    /// tokens of this sequence's stream covered by a *shared* prefix
+    /// (0 for private admissions): writes at positions >= shared_len into
+    /// a block with refcount > 1 are divergent and fork
+    shared_len: usize,
+}
 
 #[derive(Debug)]
 pub struct BlockAllocator {
     block_size: usize,
     total: usize,
     free: Vec<u32>,
-    /// sequence id -> block table (ordered physical block ids)
-    tables: HashMap<u64, Vec<u32>>,
+    /// per-physical-block reference count (0 = on the free list)
+    refs: Vec<u32>,
+    tables: HashMap<u64, SeqBlocks>,
+    /// share key -> registered prompt prefix
+    prefixes: HashMap<u64, SharedPrefix>,
+    /// physical block -> owning share key, for the blocks currently
+    /// registered in `prefixes` (purge index)
+    block_home: HashMap<u32, u64>,
+    /// copy-on-write forks performed (first divergent writes)
+    cow_forks: u64,
+    /// admissions that reused a registered prefix
+    shared_admits: u64,
 }
 
 impl BlockAllocator {
@@ -31,7 +92,12 @@ impl BlockAllocator {
             block_size,
             total: total_blocks,
             free: (0..total_blocks as u32).rev().collect(),
+            refs: vec![0; total_blocks],
             tables: HashMap::new(),
+            prefixes: HashMap::new(),
+            block_home: HashMap::new(),
+            cow_forks: 0,
+            shared_admits: 0,
         }
     }
 
@@ -46,74 +112,252 @@ impl BlockAllocator {
         self.block_size
     }
 
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Distinct physical blocks currently referenced.
     pub fn held_blocks(&self) -> usize {
-        self.tables.values().map(|t| t.len()).sum()
+        self.refs.iter().filter(|r| **r > 0).count()
+    }
+
+    /// Block references summed over all sequence tables (what `held`
+    /// would be without sharing).
+    pub fn logical_blocks(&self) -> usize {
+        self.tables.values().map(|t| t.table.len()).sum()
+    }
+
+    /// Physical blocks saved by prefix sharing right now: logical table
+    /// references minus the distinct blocks behind them — and since every
+    /// refcount comes from exactly one table reference (`check_invariants`
+    /// enforces it), the distinct count is `held_blocks()`.
+    pub fn shared_saved_blocks(&self) -> usize {
+        self.logical_blocks() - self.held_blocks()
+    }
+
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
+    }
+
+    pub fn shared_admits(&self) -> u64 {
+        self.shared_admits
+    }
+
+    /// Allocated capacity of a live sequence, in tokens.
+    pub fn capacity_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.tables
+            .get(&seq_id)
+            .map(|t| t.table.len() * self.block_size)
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Can a new sequence of `prompt_len` tokens be admitted now?
-    pub fn can_admit(&self, prompt_len: usize) -> bool {
-        self.blocks_for(prompt_len.max(1)) <= self.free.len()
+    fn alloc_one(&mut self) -> u32 {
+        let b = self.free.pop().expect("caller checked free headroom");
+        self.refs[b as usize] = 1;
+        b
     }
 
-    /// Register a new sequence and allocate blocks for its prompt.
-    pub fn admit(&mut self, seq_id: u64, prompt_len: usize) -> Result<()> {
+    /// Decrement one reference; a block hitting zero returns to the free
+    /// list, and if it was part of a registered shared prefix the whole
+    /// registration is purged (its group is gone — nothing left to share
+    /// with).
+    fn dec_ref(&mut self, b: u32) {
+        let r = &mut self.refs[b as usize];
+        debug_assert!(*r > 0, "double free of block {b}");
+        *r -= 1;
+        if *r == 0 {
+            if let Some(key) = self.block_home.get(&b).copied() {
+                self.purge_prefix(key);
+            }
+            self.free.push(b);
+        }
+    }
+
+    fn purge_prefix(&mut self, key: u64) {
+        if let Some(p) = self.prefixes.remove(&key) {
+            for b in p.blocks {
+                self.block_home.remove(&b);
+            }
+        }
+    }
+
+    /// Can a new *private* sequence of `total_len` tokens be admitted now?
+    pub fn can_admit(&self, total_len: usize) -> bool {
+        self.blocks_for(total_len.max(1)) <= self.free.len()
+    }
+
+    /// Can a fresh sequence with `prompt_len` prompt tokens be admitted
+    /// under `share_key`? A registered matching prefix costs zero new
+    /// blocks.
+    pub fn can_admit_shared(&self, share_key: u64, prompt_len: usize) -> bool {
+        match self.prefixes.get(&share_key) {
+            Some(p) if p.len == prompt_len => true,
+            _ => self.can_admit(prompt_len),
+        }
+    }
+
+    /// Register a new sequence and allocate private blocks for its whole
+    /// stream (no sharing — imports carrying a generated prefix use this:
+    /// their streams already diverged).
+    pub fn admit(&mut self, seq_id: u64, total_len: usize) -> Result<()> {
         if self.tables.contains_key(&seq_id) {
             bail!("sequence {seq_id} already admitted");
         }
-        let need = self.blocks_for(prompt_len.max(1));
+        let need = self.blocks_for(total_len.max(1));
         if need > self.free.len() {
             bail!("out of KV blocks: need {need}, free {}", self.free.len());
         }
-        let table: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.tables.insert(seq_id, table);
+        let table: Vec<u32> = (0..need).map(|_| self.alloc_one()).collect();
+        self.tables.insert(seq_id, SeqBlocks { table, shared_len: 0 });
         Ok(())
     }
 
-    /// Grow a sequence to `new_len` tokens, acquiring blocks as needed.
-    /// Returns false (and leaves state unchanged) if the pool is exhausted
-    /// — the engine then stalls that sequence (vLLM would preempt/swap).
+    /// Admit a *fresh* sequence (stream = its prompt, nothing generated)
+    /// under a share key. The first admission under a key allocates and
+    /// registers the prompt blocks; later admissions with the same
+    /// `prompt_len` reference them (refcount += 1 each, zero new blocks).
+    pub fn admit_shared(&mut self, seq_id: u64, share_key: u64, prompt_len: usize) -> Result<()> {
+        if self.tables.contains_key(&seq_id) {
+            bail!("sequence {seq_id} already admitted");
+        }
+        let prompt_len = prompt_len.max(1);
+        if let Some(p) = self.prefixes.get(&share_key) {
+            if p.len == prompt_len {
+                let table = p.blocks.clone();
+                for &b in &table {
+                    self.refs[b as usize] += 1;
+                }
+                self.shared_admits += 1;
+                self.tables
+                    .insert(seq_id, SeqBlocks { table, shared_len: prompt_len });
+                return Ok(());
+            }
+            // length skew (a diverged/shrunk registration): fall through
+            // to a private admission — correctness over sharing
+        }
+        let need = self.blocks_for(prompt_len);
+        if need > self.free.len() {
+            bail!("out of KV blocks: need {need}, free {}", self.free.len());
+        }
+        let table: Vec<u32> = (0..need).map(|_| self.alloc_one()).collect();
+        if !self.prefixes.contains_key(&share_key) {
+            for &b in &table {
+                self.block_home.insert(b, share_key);
+            }
+            self.prefixes
+                .insert(share_key, SharedPrefix { blocks: table.clone(), len: prompt_len });
+        }
+        self.tables
+            .insert(seq_id, SeqBlocks { table, shared_len: prompt_len });
+        Ok(())
+    }
+
+    /// Grow a sequence so position `new_len - 1` is writable, acquiring
+    /// tail blocks and **forking the write block** when it is shared and
+    /// the write is divergent (position >= the shared prefix length —
+    /// identical prompt re-writes during prefill/replay do not fork).
+    /// Returns false (state unchanged) when the pool cannot cover the
+    /// growth — the block-pressure signal the engine forwards to the
+    /// scheduler's preemption hook (vLLM would preempt/swap here too).
     pub fn grow(&mut self, seq_id: u64, new_len: usize) -> Result<bool> {
-        let Some(table) = self.tables.get_mut(&seq_id) else {
+        let Some(sb) = self.tables.get(&seq_id) else {
             bail!("grow on unknown sequence {seq_id}");
         };
-        let need = new_len.div_ceil(self.block_size);
-        if need <= table.len() {
-            return Ok(true);
-        }
-        let extra = need - table.len();
-        if extra > self.free.len() {
+        let new_len = new_len.max(1);
+        let need = self.blocks_for(new_len);
+        let extra = need.saturating_sub(sb.table.len());
+        let widx = (new_len - 1) / self.block_size;
+        let divergent = new_len - 1 >= sb.shared_len;
+        let fork = widx < sb.table.len()
+            && divergent
+            && self.refs[sb.table[widx] as usize] > 1;
+        if extra + fork as usize > self.free.len() {
             return Ok(false);
         }
         for _ in 0..extra {
-            table.push(self.free.pop().unwrap());
+            let b = self.alloc_one();
+            self.tables.get_mut(&seq_id).expect("checked above").table.push(b);
+        }
+        if fork {
+            let nb = self.alloc_one();
+            let sb = self.tables.get_mut(&seq_id).expect("checked above");
+            let old = std::mem::replace(&mut sb.table[widx], nb);
+            self.dec_ref(old);
+            self.cow_forks += 1;
+        } else if divergent
+            && !self.block_home.is_empty()
+            && widx < self.tables[&seq_id].table.len()
+        {
+            // sole holder diverging into a still-registered shared block:
+            // the registration no longer describes a clean prompt prefix
+            // past this point — shrink it so later admissions cannot
+            // alias the now-private content
+            let b = self.tables[&seq_id].table[widx];
+            if let Some(key) = self.block_home.get(&b).copied() {
+                let p = self.prefixes.get_mut(&key).expect("block_home in sync");
+                if let Some(at) = p.blocks.iter().position(|&x| x == b) {
+                    for dropped in p.blocks.split_off(at) {
+                        self.block_home.remove(&dropped);
+                    }
+                    p.len = p.len.min(at * self.block_size);
+                    if p.blocks.is_empty() {
+                        self.prefixes.remove(&key);
+                    }
+                }
+            }
         }
         Ok(true)
     }
 
-    /// Release every block of a finished sequence.
+    /// Release every block reference of a finished/parked sequence.
     pub fn release(&mut self, seq_id: u64) -> Result<()> {
-        let Some(table) = self.tables.remove(&seq_id) else {
+        let Some(sb) = self.tables.remove(&seq_id) else {
             bail!("release of unknown sequence {seq_id}");
         };
-        self.free.extend(table);
+        for b in sb.table {
+            self.dec_ref(b);
+        }
         Ok(())
     }
 
     /// The block table of a live sequence (for tests/inspection).
     pub fn table(&self, seq_id: u64) -> Option<&[u32]> {
-        self.tables.get(&seq_id).map(|t| t.as_slice())
+        self.tables.get(&seq_id).map(|t| t.table.as_slice())
     }
 
-    /// Invariant check used by the property tests.
+    /// Invariant check used by the property tests: refcount conservation
+    /// (free + held == total; Σ table references == Σ refcounts), free
+    /// list exactly the refcount-0 blocks with no duplicates, and the
+    /// share registry only pointing at live blocks.
     pub fn check_invariants(&self) -> Result<()> {
+        let mut expect = vec![0u32; self.total];
+        for sb in self.tables.values() {
+            for &b in &sb.table {
+                let Some(slot) = expect.get_mut(b as usize) else {
+                    bail!("table references out-of-range block {b}");
+                };
+                *slot += 1;
+            }
+        }
+        if expect != self.refs {
+            bail!("refcounts drifted from table references: {:?} vs {:?}", self.refs, expect);
+        }
+        let mut seen = HashSet::new();
+        for &b in &self.free {
+            if !seen.insert(b) {
+                bail!("block {b} on the free list twice");
+            }
+            if self.refs[b as usize] != 0 {
+                bail!("block {b} free with refcount {}", self.refs[b as usize]);
+            }
+        }
         let held = self.held_blocks();
         if held + self.free.len() != self.total {
             bail!(
@@ -122,14 +366,37 @@ impl BlockAllocator {
                 self.total
             );
         }
-        let mut seen = std::collections::HashSet::new();
-        for b in self.free.iter().chain(self.tables.values().flatten()) {
-            if !seen.insert(*b) {
-                bail!("block {b} appears twice");
+        for (key, p) in &self.prefixes {
+            for &b in &p.blocks {
+                if self.refs[b as usize] == 0 {
+                    bail!("share key {key} registers freed block {b}");
+                }
+                if self.block_home.get(&b) != Some(key) {
+                    bail!("block_home out of sync for block {b}");
+                }
             }
+        }
+        if self.block_home.len() != self.prefixes.values().map(|p| p.blocks.len()).sum::<usize>() {
+            bail!("block_home holds stale entries");
         }
         Ok(())
     }
+}
+
+/// Coalesced-replay admission window (see `Engine::admit`). Every
+/// admitted pos>0 sequence (imported snapshot or preempted-and-parked
+/// local) forces a full KV replay in the step that seats it, so N
+/// sequences trickling into slots as they free cost up to N replays
+/// where ceil(N/batch) would do. The window holds every free slot until
+/// `free_slots` can seat `min(waiting, batch, n_slots)` of them at once,
+/// so one replay covers the whole batch. `batch = 1` reproduces the
+/// legacy admit-eagerly behavior exactly; the cap at `n_slots` keeps the
+/// window satisfiable (a fully drained engine always opens it).
+pub fn replay_window_open(waiting: usize, free_slots: usize, batch: usize, n_slots: usize) -> bool {
+    if waiting == 0 {
+        return true;
+    }
+    free_slots >= waiting.min(batch.max(1)).min(n_slots.max(1))
 }
 
 #[cfg(test)]
@@ -176,45 +443,232 @@ mod tests {
         let mut a = BlockAllocator::new(4, 4);
         a.admit(1, 1).unwrap();
         assert!(a.admit(1, 1).is_err());
+        assert!(a.admit_shared(1, 9, 1).is_err());
         assert!(a.release(99).is_err());
         assert!(a.grow(99, 10).is_err());
     }
 
     #[test]
-    fn property_no_leak_no_double_use() {
+    fn group_shares_prompt_blocks_once_with_refcount_g() {
+        // the acceptance shape: G rollouts over a shared prompt hold
+        // ceil(prompt/block_size) blocks once (refcount G), not G times
+        let (g, prompt, bs) = (4usize, 37usize, 16usize);
+        let per = prompt.div_ceil(bs);
+        let mut a = BlockAllocator::new(32, bs);
+        for i in 0..g {
+            a.admit_shared(i as u64, 700, prompt).unwrap();
+        }
+        a.check_invariants().unwrap();
+        assert_eq!(a.held_blocks(), per, "prompt blocks held once");
+        assert_eq!(a.logical_blocks(), g * per);
+        assert_eq!(a.shared_saved_blocks(), (g - 1) * per);
+        assert_eq!(a.shared_admits() as usize, g - 1);
+        let t0 = a.table(0).unwrap().to_vec();
+        for i in 1..g {
+            assert_eq!(a.table(i as u64).unwrap(), &t0[..], "identical shared tables");
+        }
+        // prefill re-writes (positions < prompt) never fork
+        for i in 0..g {
+            assert!(a.grow(i as u64, prompt).unwrap());
+        }
+        assert_eq!(a.cow_forks(), 0, "identical prompt re-writes are not divergent");
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn first_divergent_write_forks_and_never_aliases() {
+        let (g, prompt, bs) = (3usize, 20usize, 8usize);
+        let mut a = BlockAllocator::new(32, bs);
+        for i in 0..g {
+            a.admit_shared(i as u64, 55, prompt).unwrap();
+        }
+        let shared_last = a.table(0).unwrap()[prompt.div_ceil(bs) - 1];
+        // first sampled token of member 0 lands in the partial last
+        // prompt block (position 20, block 2) -> copy-on-write fork
+        assert!(a.grow(0, prompt + 1).unwrap());
+        assert_eq!(a.cow_forks(), 1);
+        a.check_invariants().unwrap();
+        let forked = a.table(0).unwrap()[2];
+        assert_ne!(forked, shared_last, "writer got a private copy");
+        for i in 1..g {
+            assert!(
+                !a.table(i as u64).unwrap().contains(&forked),
+                "forked block aliased into member {i}"
+            );
+            assert!(a.table(i as u64).unwrap().contains(&shared_last));
+        }
+        // the remaining members still share it (refcount g-1), and their
+        // own divergence forks again
+        assert!(a.grow(1, prompt + 1).unwrap());
+        assert_eq!(a.cow_forks(), 2);
+        // last holder diverges without a fork (sole owner keeps the block)
+        assert!(a.grow(2, prompt + 1).unwrap());
+        assert_eq!(a.cow_forks(), 2, "sole holder writes in place");
+        a.check_invariants().unwrap();
+        for i in 0..g {
+            a.release(i as u64).unwrap();
+        }
+        assert_eq!(a.free_blocks(), 32);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_respects_pool_exhaustion() {
+        let (prompt, bs) = (6usize, 8usize); // partial block: divergence forks
+        let mut a = BlockAllocator::new(2, bs); // shared prompt takes 1, 1 spare
+        a.admit_shared(1, 9, prompt).unwrap();
+        a.admit_shared(2, 9, prompt).unwrap();
+        assert!(a.grow(1, prompt + 1).unwrap(), "the fork fits the spare block");
+        assert_eq!(a.cow_forks(), 1);
+        // member 2's divergence also needs a fork and the pool is empty
+        assert!(!a.grow(2, prompt + 1).unwrap(), "exhausted pool stalls, not panics");
+        a.check_invariants().unwrap();
+        // a release frees the forked copy and member 2 can proceed
+        a.release(1).unwrap();
+        assert!(a.grow(2, prompt + 1).unwrap());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sole_holder_divergence_shrinks_the_registration() {
+        let (prompt, bs) = (12usize, 8usize); // 2 blocks, second partial
+        let mut a = BlockAllocator::new(8, bs);
+        a.admit_shared(1, 4, prompt).unwrap();
+        // sole member diverges into the partial block before anyone shares
+        assert!(a.grow(1, prompt + 1).unwrap());
+        assert_eq!(a.cow_forks(), 0);
+        // a later member must not alias the diverged block: registration
+        // shrank, so it admits privately (len mismatch)
+        a.admit_shared(2, 4, prompt).unwrap();
+        assert!(
+            a.table(2).unwrap().iter().all(|b| !a.table(1).unwrap().contains(b)),
+            "diverged content never aliased into a new member"
+        );
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn registry_purged_when_group_is_gone() {
+        let (prompt, bs) = (16usize, 8usize);
+        let mut a = BlockAllocator::new(4, bs);
+        a.admit_shared(1, 3, prompt).unwrap();
+        a.release(1).unwrap();
+        a.check_invariants().unwrap();
+        assert_eq!(a.free_blocks(), 4, "all blocks back");
+        // the key is reusable afresh (no stale registration)
+        a.admit_shared(2, 3, prompt).unwrap();
+        a.check_invariants().unwrap();
+        assert_eq!(a.held_blocks(), 2);
+    }
+
+    #[test]
+    fn replay_window_semantics() {
+        // no pending replays: always open
+        assert!(replay_window_open(0, 0, 4, 8));
+        // legacy batch=1: open whenever a slot is free
+        assert!(replay_window_open(5, 1, 1, 8));
+        assert!(!replay_window_open(5, 0, 1, 8));
+        // batching holds slots until the window fills
+        assert!(!replay_window_open(8, 3, 4, 8));
+        assert!(replay_window_open(8, 4, 4, 8));
+        // fewer waiting than the batch: the tail does not starve
+        assert!(replay_window_open(2, 2, 4, 8));
+        assert!(!replay_window_open(2, 1, 4, 8));
+        // the slot cap keeps the window satisfiable on tiny engines
+        assert!(replay_window_open(10, 2, 8, 2));
+    }
+
+    #[test]
+    fn property_refcount_conservation_under_churn() {
         testkit::check("kv allocator invariants", 200, 0xb10c, 64, |c| {
             let total = c.usize_in(2, 24);
             let bs = c.usize_in(1, 8);
             let mut a = BlockAllocator::new(total, bs);
-            let mut live: Vec<u64> = Vec::new();
+            let mut live: Vec<(u64, usize)> = Vec::new(); // (id, len)
             let mut next_id = 0u64;
             for _ in 0..c.usize_in(1, 60) {
-                match c.rng.below(3) {
+                match c.rng.below(4) {
                     0 => {
                         let len = c.usize_in(1, bs * 4);
                         if a.can_admit(len) {
                             a.admit(next_id, len).map_err(|e| e.to_string())?;
-                            live.push(next_id);
+                            live.push((next_id, len));
                             next_id += 1;
                         }
                     }
                     1 => {
+                        // shared admission under a small key space so
+                        // hits, misses and skewed lengths all occur
+                        let key = c.rng.below(3) as u64 + 500;
+                        let len = c.usize_in(1, bs * 3);
+                        if a.can_admit_shared(key, len) {
+                            a.admit_shared(next_id, key, len).map_err(|e| e.to_string())?;
+                            live.push((next_id, len));
+                            next_id += 1;
+                        }
+                    }
+                    2 => {
                         if !live.is_empty() {
                             let idx = c.rng.below(live.len());
-                            let id = live[idx];
-                            let len = c.usize_in(1, bs * 8);
-                            a.grow(id, len).map_err(|e| e.to_string())?;
+                            let (id, len) = live[idx];
+                            let new_len = len + c.usize_in(0, bs * 2);
+                            if a.grow(id, new_len).map_err(|e| e.to_string())? {
+                                live[idx].1 = new_len;
+                            }
                         }
                     }
                     _ => {
                         if !live.is_empty() {
                             let idx = c.rng.below(live.len());
-                            let id = live.swap_remove(idx);
+                            let (id, _) = live.swap_remove(idx);
                             a.release(id).map_err(|e| e.to_string())?;
                         }
                     }
                 }
                 a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_divergent_writes_never_alias_shared_blocks() {
+        testkit::check("cow fork never aliases", 150, 0xc0f0, 48, |c| {
+            let bs = c.usize_in(1, 6);
+            let prompt = c.usize_in(1, bs * 3);
+            let g = c.usize_in(2, 5);
+            // sized for the worst case: shared prompt blocks + one block
+            // per divergent token (bs = 1) + one fork per member per
+            // shared block — the property asserts growth never stalls
+            let mut a = BlockAllocator::new(64, bs);
+            for i in 0..g {
+                a.admit_shared(i as u64, 1, prompt).map_err(|e| e.to_string())?;
+            }
+            // every member writes a random number of divergent tokens
+            let mut lens = vec![prompt; g];
+            for _ in 0..c.usize_in(1, 24) {
+                let i = c.rng.below(g);
+                lens[i] += 1;
+                if !a.grow(i as u64, lens[i]).map_err(|e| e.to_string())? {
+                    return Err("sized pool must never stall".into());
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+                // no divergent position's block may be shared with any
+                // other member
+                for i in 0..g {
+                    if lens[i] == prompt {
+                        continue;
+                    }
+                    let widx = (lens[i] - 1) / bs;
+                    let b = a.table(i as u64).unwrap()[widx];
+                    for j in 0..g {
+                        if j != i && a.table(j as u64).unwrap().contains(&b) {
+                            return Err(format!(
+                                "divergent block {b} of member {i} aliased by member {j}"
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         });

@@ -15,9 +15,18 @@
 //!   [`Engine::import_snapshot`] adopts one on another engine, rebuilding
 //!   its KV prefix with the existing replay path — no salvageable token
 //!   is lost to actor churn or descaling;
-//! * **paged KV accounting** — a block allocator in the vLLM style
-//!   ([`kvcache`]) gates admission; the device-side cache itself is a
-//!   dense per-slot tensor (the AOT decode graph's layout);
+//! * **paged KV accounting with shared-prefix memory** — a refcounted
+//!   block allocator in the vLLM style ([`kvcache`]) gates admission and
+//!   growth: the G members of a GRPO group reference one set of prompt
+//!   blocks (copy-on-write, forking on first divergent write), an
+//!   over-committed pool (`[kv] overcommit`) throttles exactly like a
+//!   full HBM, and under block pressure the scheduler's preemption hook
+//!   parks a victim through the snapshot path (blocks freed, resumed via
+//!   a coalesced replay) instead of stalling the slot. The device-side
+//!   cache itself is a dense per-slot tensor (the AOT decode graph's
+//!   layout), so the allocator is the admission-capacity model — but its
+//!   block tables are enforced at dispatch time
+//!   (`runtime::StagePlan`);
 //! * **in-flight weight updates** — eager ([`Engine::set_weights`]) or
 //!   overlapped ([`Engine::begin_weight_update`] /
 //!   [`Engine::stage_weight_tensor`] / [`Engine::commit_weights`]) swaps
@@ -65,7 +74,7 @@ pub mod engine;
 pub mod kvcache;
 pub mod sequence;
 
-pub use api::{CompletionRequest, GenerationService};
+pub use api::{CompletionRequest, GenerationService, KvPressure};
 pub use arena::StepArena;
 pub use engine::{Engine, EngineCfg, EngineStats, StepOutcome};
 pub use kvcache::BlockAllocator;

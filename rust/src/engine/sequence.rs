@@ -78,6 +78,17 @@ impl SeqState {
         self.gen_tokens.len()
     }
 
+    /// Scheduler-facing view of this sequence — what admission picks and
+    /// preemption victim rules see (`sched::SeqView`).
+    pub fn view(&self) -> crate::sched::SeqView {
+        crate::sched::SeqView {
+            seq_id: self.seq_id,
+            group_id: self.group_id,
+            total_len: self.total_len(),
+            gen_len: self.gen_len(),
+        }
+    }
+
     /// Advance after a decode step produced `next_tok` with `lp` under
     /// weight `version`. `eos`/`max_seq` close the sequence.
     pub fn advance(&mut self, next_tok: i32, lp: f32, version: u64, eos_id: i32, max_seq: usize) {

@@ -21,11 +21,16 @@
 //! `TrainState::save_with_manifest` additionally maintains a
 //! `manifest.json` in the checkpoint directory (latest + history with
 //! optional pruning) so `[checkpoint] resume_from = "<dir>"` can pick up
-//! the newest state without knowing file names.
+//! the newest state without knowing file names. State files are fsynced
+//! *before* the manifest points at them, and the manifest itself is
+//! fsynced and renamed into place — no reader ever resumes from a torn
+//! state.
 //!
-//! The trainer's periodic checkpoint write is also the canonical stall
-//! the broker's ring buffers must absorb — see the failure-injection
-//! suite.
+//! The trainer no longer writes on its hot thread: it hands states to an
+//! [`AsyncCheckpointer`] — a writer thread with a latest-wins queue — so
+//! checkpoint I/O overlaps optimizer steps instead of stalling them (the
+//! stall the broker's ring buffers used to absorb; the failure-injection
+//! suite still exercises a synchronous-write stall via its own harness).
 
 use crate::runtime::HostTensor;
 use crate::util::Json;
@@ -181,6 +186,12 @@ impl TrainState {
         write_tensor_data(&mut f, &self.params)?;
         write_tensor_data(&mut f, &self.opt_m)?;
         write_tensor_data(&mut f, &self.opt_v)?;
+        // durability before visibility: the state file is fsynced here,
+        // and save_with_manifest only points the manifest at it afterwards
+        // — a crash mid-write can never leave the manifest naming a
+        // torn state
+        f.flush()?;
+        f.get_ref().sync_all()?;
         Ok(())
     }
 
@@ -252,9 +263,14 @@ impl TrainState {
                 Json::Arr(history.into_iter().map(Json::Str).collect()),
             ),
         ]);
-        // atomic-ish update: write sidecar then rename over
+        // atomic update: write + fsync the sidecar, then rename over —
+        // readers only ever see a complete manifest naming fsynced states
         let tmp = dir.join(format!("{MANIFEST}.tmp"));
-        std::fs::write(&tmp, manifest.to_string_compact())?;
+        {
+            let mut tf = std::fs::File::create(&tmp)?;
+            tf.write_all(manifest.to_string_compact().as_bytes())?;
+            tf.sync_all()?;
+        }
         std::fs::rename(&tmp, dir.join(MANIFEST))?;
         Ok(path)
     }
@@ -296,6 +312,132 @@ pub fn load_params_any(path: &Path) -> Result<(String, u64, Vec<HostTensor>)> {
     } else {
         let ck = Checkpoint::load(path)?;
         Ok((ck.variant, ck.step, ck.params))
+    }
+}
+
+/// Final accounting of an [`AsyncCheckpointer`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CkptWriterStats {
+    /// states fully written (fsynced, manifest updated)
+    pub written: u64,
+    /// states replaced in the queue before the writer got to them
+    /// (latest-wins: a fast trainer never queues more than one)
+    pub superseded: u64,
+}
+
+#[derive(Default)]
+struct CkptPending {
+    next: Option<TrainState>,
+    closing: bool,
+    written: u64,
+    superseded: u64,
+    last_err: Option<String>,
+}
+
+struct CkptShared {
+    pending: std::sync::Mutex<CkptPending>,
+    cv: std::sync::Condvar,
+}
+
+/// Off-thread [`TrainState`] writer with a latest-wins queue.
+///
+/// The trainer's periodic checkpoint used to serialize + write + fsync a
+/// full parameter/optimizer snapshot *on the hot thread*, stalling the
+/// optimizer step (the ring buffers absorbed it, but the step time spiked
+/// every `[checkpoint] every` steps). [`AsyncCheckpointer::submit`] is
+/// now just a state hand-off: the writer thread does the serialization
+/// and disk I/O. The queue holds at most one state — a newer submission
+/// replaces an unwritten older one (latest wins; checkpoints are
+/// recovery points, not an archive, so only the freshest matters), and
+/// the `superseded` count keeps the books. The manifest is updated only
+/// after the state file is fsynced (see [`TrainState::save`] /
+/// `save_with_manifest`), so a crash of either thread never publishes a
+/// torn state. [`AsyncCheckpointer::finish`] drains the queue before
+/// returning — the final state of a run is always on disk.
+pub struct AsyncCheckpointer {
+    shared: std::sync::Arc<CkptShared>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncCheckpointer {
+    pub fn new(dir: PathBuf, keep_last: usize) -> AsyncCheckpointer {
+        let shared = std::sync::Arc::new(CkptShared {
+            pending: std::sync::Mutex::new(CkptPending::default()),
+            cv: std::sync::Condvar::new(),
+        });
+        let worker = shared.clone();
+        let join = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || loop {
+                let st = {
+                    let mut g = worker.pending.lock().unwrap();
+                    loop {
+                        if let Some(st) = g.next.take() {
+                            break st;
+                        }
+                        if g.closing {
+                            return;
+                        }
+                        g = worker.cv.wait(g).unwrap();
+                    }
+                };
+                let res = st.save_with_manifest(&dir, keep_last);
+                let mut g = worker.pending.lock().unwrap();
+                match res {
+                    Ok(_) => g.written += 1,
+                    Err(e) => g.last_err = Some(format!("step {}: {e:#}", st.step)),
+                }
+                // wake a finish() waiting on the drain
+                worker.cv.notify_all();
+            })
+            .expect("spawning ckpt-writer");
+        AsyncCheckpointer { shared, join: Some(join) }
+    }
+
+    /// Hand a state to the writer (non-blocking). An unwritten older
+    /// state still queued is replaced — latest wins.
+    pub fn submit(&self, st: TrainState) {
+        let mut g = self.shared.pending.lock().unwrap();
+        if g.next.replace(st).is_some() {
+            g.superseded += 1;
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Drain the queue, stop the writer and join it. Returns the write
+    /// accounting; a failed write surfaces here (the run should know its
+    /// recovery points are broken).
+    pub fn finish(mut self) -> Result<CkptWriterStats> {
+        {
+            let mut g = self.shared.pending.lock().unwrap();
+            g.closing = true;
+            self.shared.cv.notify_all();
+        }
+        if let Some(j) = self.join.take() {
+            j.join().ok();
+        }
+        let g = self.shared.pending.lock().unwrap();
+        let stats = CkptWriterStats { written: g.written, superseded: g.superseded };
+        match &g.last_err {
+            Some(e) => bail!("async checkpoint write failed ({e})"),
+            None => Ok(stats),
+        }
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        // error-path teardown (finish() takes the handle on the happy
+        // path): stop the writer without blocking the unwinding thread
+        // on pending disk I/O beyond the in-flight write
+        if let Some(j) = self.join.take() {
+            {
+                let mut g = self.shared.pending.lock().unwrap();
+                g.closing = true;
+                self.shared.cv.notify_all();
+            }
+            j.join().ok();
+        }
     }
 }
 
@@ -382,6 +524,51 @@ mod tests {
         let explicit = TrainState::load_resume(&dir.join(TrainState::file_name(6))).unwrap();
         assert_eq!(explicit.step, 6);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_writer_flushes_latest_on_finish() {
+        let dir = std::env::temp_dir().join(format!("prl_actp_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let w = AsyncCheckpointer::new(dir.clone(), 2);
+        for step in [2, 4, 6] {
+            w.submit(state(step, step as f32));
+        }
+        let stats = w.finish().unwrap();
+        // latest-wins: everything submitted is either on disk or was
+        // superseded by a newer state — never silently dropped
+        assert_eq!(stats.written + stats.superseded, 3);
+        assert!(stats.written >= 1);
+        let latest = TrainState::load_latest(&dir).unwrap();
+        assert_eq!(latest.step, 6, "the final state always lands");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_writer_latest_wins_under_a_fast_producer() {
+        let dir = std::env::temp_dir().join(format!("prl_actq_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let w = AsyncCheckpointer::new(dir.clone(), 0);
+        // submit a burst without yielding: the queue holds at most one
+        for step in 1..=20 {
+            w.submit(state(step, 1.0));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.written + stats.superseded, 20);
+        let latest = TrainState::load_latest(&dir).unwrap();
+        assert_eq!(latest.step, 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_writer_surfaces_write_failures() {
+        // a file where the checkpoint dir should be: every write fails
+        let bad = std::env::temp_dir().join(format!("prl_actbad_{}", std::process::id()));
+        std::fs::write(&bad, b"not a directory").unwrap();
+        let w = AsyncCheckpointer::new(bad.clone(), 0);
+        w.submit(state(1, 1.0));
+        assert!(w.finish().is_err(), "broken recovery points must surface");
+        std::fs::remove_file(&bad).ok();
     }
 
     #[test]

@@ -290,6 +290,52 @@ pub struct DecodeInputs<'a> {
     pub temp: &'a Literal,
 }
 
+/// Block-table-aware staging contract for one decode dispatch.
+///
+/// The decode graph scatters K/V at `pos[b]` for *every* row, every step
+/// (model.py's unconditional write). The engine's paged allocator
+/// ([`crate::engine::BlockAllocator`]) decides which cache positions a
+/// sequence is actually entitled to write; this plan carries that
+/// entitlement to the dispatch boundary so [`run_decode_step`] can refuse
+/// a staging whose writes are not backed by allocated blocks — the bug
+/// class where bookkeeping (double-free, premature release, a missed
+/// park) and the device cache drift apart, caught loudly at the one choke
+/// point every decode path shares instead of as silent KV corruption.
+pub struct StagePlan<'a> {
+    /// the off-cache parking position idle/stalled/parked rows must use
+    pub park: i32,
+    /// host-side copy of the `pos` operand, row-parallel
+    pub pos: &'a [i32],
+    /// per-row allocated KV capacity in tokens (block table length ×
+    /// block size); 0 for rows with no live sequence
+    pub cap: &'a [usize],
+}
+
+impl StagePlan<'_> {
+    /// Every row either parks or writes a block-backed position.
+    fn validate(&self) -> Result<()> {
+        if self.pos.len() != self.cap.len() {
+            bail!(
+                "stage plan shape skew: {} positions vs {} capacities",
+                self.pos.len(),
+                self.cap.len()
+            );
+        }
+        for (row, (&pos, &cap)) in self.pos.iter().zip(self.cap).enumerate() {
+            if pos == self.park {
+                continue;
+            }
+            if pos < 0 || pos as usize >= cap {
+                bail!(
+                    "row {row} stages a KV write at position {pos} with only {cap} \
+                     block-backed tokens (allocator and cache drifted apart)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Result of [`run_decode_step`]: the remaining outputs (the KV output is
 /// already moved back into the caller's `kv` slot), whether the KV had to
 /// be restaged from a host literal, and the stage/execute timing split
@@ -318,6 +364,11 @@ pub struct DecodeStep {
 /// donation intent declared on the KV operand, and thread the returned KV
 /// (output [`DECODE_KV_OUT`]) back into `kv` for the next step.
 ///
+/// `plan`, when given, is the block-table-aware staging contract: the
+/// host-side write positions are checked against the allocator's per-row
+/// block capacities *before* the dispatch (see [`StagePlan`]). Callers
+/// without paged bookkeeping (probes, benches) pass `None`.
+///
 /// NOTE: buffer staging is asynchronous on the TFRT CPU client — the
 /// caller's literals in `inp` (and a host-resident `kv`) must live across
 /// this call, which the reference parameters make structural.
@@ -326,7 +377,11 @@ pub fn run_decode_step(
     param_bufs: &[&xla::PjRtBuffer],
     kv: &mut DeviceVal,
     inp: DecodeInputs<'_>,
+    plan: Option<&StagePlan<'_>>,
 ) -> Result<DecodeStep> {
+    if let Some(p) = plan {
+        p.validate()?;
+    }
     let t_stage = std::time::Instant::now();
     let pos_b = graph.stage(inp.pos)?;
     let cur_b = graph.stage(inp.cur)?;
@@ -510,6 +565,29 @@ mod exec_out_tests {
 }
 
 #[cfg(test)]
+mod stage_plan_tests {
+    use super::*;
+
+    #[test]
+    fn parked_and_backed_rows_pass() {
+        let plan = StagePlan { park: 95, pos: &[95, 0, 7], cap: &[0, 4, 8] };
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn unbacked_write_is_refused() {
+        let plan = StagePlan { park: 95, pos: &[4], cap: &[4] };
+        assert!(plan.validate().is_err(), "position 4 needs 5 tokens of capacity");
+        let plan = StagePlan { park: 95, pos: &[0], cap: &[0] };
+        assert!(plan.validate().is_err(), "no live sequence, no write");
+        let plan = StagePlan { park: 95, pos: &[-3], cap: &[8] };
+        assert!(plan.validate().is_err(), "negative positions are never backed");
+        let plan = StagePlan { park: 95, pos: &[0, 1], cap: &[4] };
+        assert!(plan.validate().is_err(), "shape skew is refused");
+    }
+}
+
+#[cfg(test)]
 mod perf_probe {
     use super::*;
 
@@ -598,6 +676,7 @@ mod perf_probe {
                     fmask: &fmask_l,
                     temp: &temp_l,
                 },
+                None,
             )
             .unwrap();
             let mut out = d.outs;

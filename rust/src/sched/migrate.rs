@@ -12,19 +12,38 @@
 //! Accounting invariant (asserted by the chaos-harness tests): every
 //! deposited snapshot is eventually either *claimed* (its sequence
 //! completes on another actor) or *discarded* (deliberately dropped at
-//! run shutdown) — `deposited == claimed + discarded + depth` at all
-//! times, so no salvageable token can be silently lost.
+//! run shutdown, rejected by an importer, or refused at decode) —
+//! `deposited == claimed + discarded + depth` at all times, so no
+//! salvageable token can be silently lost.
+//!
+//! **Byzantine deposits.** Snapshots that crossed a process boundary
+//! arrive as `PRLSNAP1` bytes ([`MigrationHub::deposit_raw`]) and are
+//! decoded at *claim* time: a corrupt blob (bit flips, truncation —
+//! `ChaosKind::CorruptSnapshot` injects exactly this) is rejected by
+//! `SeqSnapshot::from_bytes`, counted as discarded (+
+//! `corrupt_rejected`), and never reaches an actor — the books stay
+//! balanced and the claimer survives.
 
 use super::snapshot::SeqSnapshot;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
+/// A queued deposit: typed (in-process hand-off) or wire-form bytes
+/// (cross-process / byzantine path, decoded at claim time).
+#[derive(Debug)]
+enum Entry {
+    Snap(SeqSnapshot),
+    Raw(Vec<u8>),
+}
+
 #[derive(Debug, Default)]
 struct HubState {
-    queue: VecDeque<SeqSnapshot>,
+    queue: VecDeque<Entry>,
     deposited: u64,
     claimed: u64,
     discarded: u64,
+    /// wire-form deposits rejected at decode (byzantine)
+    corrupt_rejected: u64,
     tokens_deposited: u64,
     tokens_claimed: u64,
 }
@@ -49,23 +68,52 @@ impl MigrationHub {
         g.deposited += n as u64;
         for s in snaps {
             g.tokens_deposited += s.salvaged_tokens() as u64;
-            g.queue.push_back(s);
+            g.queue.push_back(Entry::Snap(s));
         }
         n
     }
 
+    /// Queue one wire-form (`PRLSNAP1` bytes) deposit — the
+    /// process-boundary path. The blob is decoded at claim time; a
+    /// corrupt one is rejected there and accounted as discarded, so a
+    /// byzantine peer can waste a queue slot but never poison a claimer
+    /// or unbalance the books.
+    pub fn deposit_raw(&self, bytes: Vec<u8>) {
+        let mut g = self.inner.lock().unwrap();
+        g.deposited += 1;
+        g.queue.push_back(Entry::Raw(bytes));
+    }
+
     /// Claim up to `max` snapshots for resumption (FIFO — oldest orphans
     /// first; the engine-side scheduler decides their admission order).
+    /// Wire-form deposits are decoded here; rejects are discarded with
+    /// the books updated and do not count against `max`.
     pub fn claim(&self, max: usize) -> Vec<SeqSnapshot> {
         let mut g = self.inner.lock().unwrap();
-        let n = max.min(g.queue.len());
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let s = g.queue.pop_front().expect("len checked");
-            g.tokens_claimed += s.salvaged_tokens() as u64;
-            out.push(s);
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(entry) = g.queue.pop_front() else { break };
+            let snap = match entry {
+                Entry::Snap(s) => s,
+                Entry::Raw(bytes) => match SeqSnapshot::from_bytes(&bytes) {
+                    Ok(s) => {
+                        // deposit-time token accounting was deferred (the
+                        // blob was opaque); land both sides together so
+                        // the salvage ledger stays conservative
+                        g.tokens_deposited += s.salvaged_tokens() as u64;
+                        s
+                    }
+                    Err(_) => {
+                        g.discarded += 1;
+                        g.corrupt_rejected += 1;
+                        continue;
+                    }
+                },
+            };
+            g.tokens_claimed += snap.salvaged_tokens() as u64;
+            g.claimed += 1;
+            out.push(snap);
         }
-        g.claimed += n as u64;
         out
     }
 
@@ -108,6 +156,12 @@ impl MigrationHub {
 
     pub fn discarded(&self) -> u64 {
         self.inner.lock().unwrap().discarded
+    }
+
+    /// Wire-form deposits rejected at decode (byzantine injections,
+    /// truncated transfers). A subset of `discarded`.
+    pub fn corrupt_rejected(&self) -> u64 {
+        self.inner.lock().unwrap().corrupt_rejected
     }
 
     /// Generated tokens deposited / claimed so far (salvage accounting).
@@ -170,6 +224,41 @@ mod tests {
         );
         let (dep, cl) = hub.token_counts();
         assert_eq!((dep, cl), (6, 2), "rejected tokens leave the salvage ledger");
+    }
+
+    #[test]
+    fn raw_deposits_decode_at_claim_and_corrupt_ones_are_rejected() {
+        let hub = MigrationHub::new();
+        let good = snap(1, 3);
+        hub.deposit_raw(good.to_bytes());
+        // bit-flipped + truncated PRLSNAP1 bytes: the byzantine shape
+        let mut bad = snap(2, 5).to_bytes();
+        bad[3] ^= 0x40;
+        bad.truncate(bad.len() - 2);
+        hub.deposit_raw(bad);
+        assert_eq!(hub.depth(), 2);
+
+        let got = hub.claim(10);
+        assert_eq!(got.len(), 1, "only the intact deposit reaches a claimer");
+        assert_eq!(got[0], good);
+        assert_eq!(
+            (hub.deposited(), hub.claimed(), hub.discarded(), hub.depth()),
+            (2, 1, 1, 0),
+            "corrupt deposit lands in discarded; books balance"
+        );
+        assert_eq!(hub.corrupt_rejected(), 1);
+        let (dep, cl) = hub.token_counts();
+        assert_eq!((dep, cl), (3, 3), "corrupt bytes contribute no phantom tokens");
+    }
+
+    #[test]
+    fn corrupt_entries_do_not_count_against_claim_max() {
+        let hub = MigrationHub::new();
+        hub.deposit_raw(vec![0xff; 16]); // garbage ahead of real work
+        hub.deposit(vec![snap(1, 2)]);
+        let got = hub.claim(1);
+        assert_eq!(got.len(), 1, "the reject is skipped, the claim still fills");
+        assert_eq!(hub.corrupt_rejected(), 1);
     }
 
     #[test]

@@ -9,14 +9,19 @@
 //! actor aborted every in-flight sequence, and the pool resized only when
 //! a chaos schedule said so. This module is the missing layer:
 //!
-//! * [`Scheduler`] ([`scheduler`]) — the admission policy, extracted out
-//!   of `Engine::admit` behind a trait. [`scheduler::Fifo`] reproduces
-//!   the legacy head-of-line behavior exactly;
+//! * [`Scheduler`] ([`scheduler`]) — the admission *and eviction* policy,
+//!   extracted out of `Engine::admit` behind a trait. [`scheduler::Fifo`]
+//!   reproduces the legacy head-of-line behavior exactly;
 //!   [`scheduler::LongestPrefixFirst`] prefers the queued sequence with
 //!   the most already-generated tokens, so salvaged (migrated) prefixes
 //!   re-enter decode first and their tokens accrue the least extra lag.
-//!   This is the hook where OPPO-style (arXiv 2509.25762) stage-aware
-//!   admission policies plug in without touching the engine.
+//!   Under KV block pressure the engine consults the trait's
+//!   `pick_victim` hook ([`PreemptPolicy`], `[kv] preempt_policy`): the
+//!   victim is parked through the snapshot path — blocks freed,
+//!   re-admitted later via a coalesced replay — instead of stalling its
+//!   slot, the vLLM preempt/swap analogue. This is the hook where
+//!   OPPO-style (arXiv 2509.25762) stage-aware admission policies plug
+//!   in without touching the engine.
 //!
 //! * [`SeqSnapshot`] ([`snapshot`]) — a *portable* in-flight sequence:
 //!   prompt, generated prefix, per-token behavior logprobs and weight
@@ -58,5 +63,5 @@ pub mod snapshot;
 
 pub use autoscale::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
 pub use migrate::MigrationHub;
-pub use scheduler::{SchedPolicy, Scheduler, SeqView};
+pub use scheduler::{PreemptPolicy, SchedPolicy, Scheduler, SeqView};
 pub use snapshot::SeqSnapshot;

@@ -1,19 +1,27 @@
-//! Admission scheduling policies (extracted from `Engine::admit`).
+//! Admission scheduling and preemption policies (extracted from
+//! `Engine::admit` / `Engine::step`).
 //!
 //! The engine owns a fixed pool of decode slots and a queue of pending
 //! sequences; whenever a slot is free it asks the scheduler which queued
 //! sequence to admit. The scheduler also owns the KV-block gate that used
-//! to be inlined in the engine: `can_admit(total_len)` reports whether
-//! the paged allocator can hold a sequence of that length *right now*,
-//! and a policy that returns `None` leaves the slot empty this round
+//! to be inlined in the engine: `can_admit(&SeqView)` reports whether the
+//! paged allocator can hold that sequence *right now* (a view-based gate,
+//! because the cost depends on more than length — a fresh group member
+//! sharing a registered prompt prefix costs zero new blocks), and a
+//! policy that returns `None` leaves the slot empty this round
 //! (admission backpressure — the vLLM-style "wait for a release").
 //!
-//! Policies are deliberately stateless views over the queue: preemption
-//! of *running* sequences stays with the engine (it stalls a slot whose
-//! KV growth fails, vLLM-style), so a policy's whole contract is the
-//! `pick` order.
+//! Since the shared-prefix/preemption refactor the scheduler also owns
+//! **eviction**: when a running sequence cannot grow (the allocator's
+//! block-pressure signal), the engine asks [`Scheduler::pick_victim`]
+//! which active sequence to preempt. The victim is parked through the
+//! [`super::SeqSnapshot`] path — blocks freed, re-admitted later through
+//! a coalesced replay — instead of the slot just stalling. The
+//! [`PreemptPolicy`] (config `[kv] preempt_policy`) selects the victim
+//! rule; `none` reproduces the legacy stall-in-place behavior exactly.
 
-/// Read-only view of one queued sequence, handed to scheduling policies.
+/// Read-only view of one queued or active sequence, handed to scheduling
+/// policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SeqView {
     pub seq_id: u64,
@@ -21,39 +29,107 @@ pub struct SeqView {
     /// current stream length (BOS + prompt + generated prefix) — what the
     /// KV allocator must be able to hold at admission
     pub total_len: usize,
-    /// generated-prefix length (> 0 only for imported snapshots)
+    /// generated-prefix length (> 0 only for imported snapshots and
+    /// preempted-and-parked sequences)
     pub gen_len: usize,
 }
 
+/// Victim-selection rule for scheduler-driven preemption under KV block
+/// pressure (`[kv] preempt_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptPolicy {
+    /// never preempt: a sequence that cannot grow stalls its slot in
+    /// place (the legacy behavior, bit-for-bit)
+    #[default]
+    None,
+    /// park the active sequence with the fewest generated tokens — the
+    /// least salvaged work lost and the cheapest replay on resume
+    /// (vLLM preempts the latest-arrived for the same reason)
+    Youngest,
+}
+
+impl PreemptPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptPolicy::None => "none",
+            PreemptPolicy::Youngest => "youngest",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PreemptPolicy> {
+        match s {
+            "none" => Some(PreemptPolicy::None),
+            "youngest" => Some(PreemptPolicy::Youngest),
+            _ => None,
+        }
+    }
+
+    /// Shared victim rule used by the built-in schedulers.
+    fn pick(&self, active: &[SeqView]) -> Option<usize> {
+        match self {
+            PreemptPolicy::None => None,
+            PreemptPolicy::Youngest => active
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, v)| (v.gen_len, v.total_len, *i))
+                .map(|(i, _)| i),
+        }
+    }
+}
+
 /// An admission policy: picks which pending sequence enters the next free
-/// decode slot.
+/// decode slot, and which active sequence to evict under block pressure.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Pick the queue index of the sequence to admit into the next free
     /// slot, or `None` to leave the slot empty this round.
-    /// `can_admit(total_len)` is the live KV-block gate.
-    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize>;
+    /// `can_admit` is the live KV-block gate (share-aware: cost depends
+    /// on the whole view, not just length).
+    fn pick(
+        &mut self,
+        pending: &[SeqView],
+        can_admit: &dyn Fn(&SeqView) -> bool,
+    ) -> Option<usize>;
+
+    /// Under block pressure — the sequence at `active[stalled]` cannot
+    /// grow — pick the index (into `active`) of the sequence to preempt:
+    /// it is parked (blocks freed, re-queued through the snapshot path)
+    /// so the rest can make progress. `None` stalls the slot in place
+    /// (the legacy behavior, and the default).
+    fn pick_victim(&mut self, _active: &[SeqView], _stalled: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// The legacy policy, bit-for-bit: admit the queue head, and if the head
 /// cannot get KV blocks, admit nothing (head-of-line blocking — arrival
 /// order is completion-fairness under uniform lengths).
 #[derive(Debug, Default)]
-pub struct Fifo;
+pub struct Fifo {
+    pub preempt: PreemptPolicy,
+}
 
 impl Scheduler for Fifo {
     fn name(&self) -> &'static str {
         "fifo"
     }
 
-    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize> {
+    fn pick(
+        &mut self,
+        pending: &[SeqView],
+        can_admit: &dyn Fn(&SeqView) -> bool,
+    ) -> Option<usize> {
         let head = pending.first()?;
-        if can_admit(head.total_len) {
+        if can_admit(head) {
             Some(0)
         } else {
             None
         }
+    }
+
+    fn pick_victim(&mut self, active: &[SeqView], _stalled: usize) -> Option<usize> {
+        self.preempt.pick(active)
     }
 }
 
@@ -69,17 +145,23 @@ impl Scheduler for Fifo {
 /// [`Fifo`], an inadmissible head does not block shorter sequences behind
 /// it.
 #[derive(Debug, Default)]
-pub struct LongestPrefixFirst;
+pub struct LongestPrefixFirst {
+    pub preempt: PreemptPolicy,
+}
 
 impl Scheduler for LongestPrefixFirst {
     fn name(&self) -> &'static str {
         "longest_prefix"
     }
 
-    fn pick(&mut self, pending: &[SeqView], can_admit: &dyn Fn(usize) -> bool) -> Option<usize> {
+    fn pick(
+        &mut self,
+        pending: &[SeqView],
+        can_admit: &dyn Fn(&SeqView) -> bool,
+    ) -> Option<usize> {
         let mut best: Option<(usize, SeqView)> = None;
         for (i, v) in pending.iter().enumerate() {
-            if !can_admit(v.total_len) {
+            if !can_admit(v) {
                 continue;
             }
             let better = match &best {
@@ -93,6 +175,10 @@ impl Scheduler for LongestPrefixFirst {
             }
         }
         best.map(|(i, _)| i)
+    }
+
+    fn pick_victim(&mut self, active: &[SeqView], _stalled: usize) -> Option<usize> {
+        self.preempt.pick(active)
     }
 }
 
@@ -112,11 +198,17 @@ impl SchedPolicy {
         }
     }
 
-    /// Instantiate the policy.
+    /// Instantiate the policy with the legacy stall-in-place preemption.
     pub fn build(&self) -> Box<dyn Scheduler> {
+        self.build_with_preempt(PreemptPolicy::None)
+    }
+
+    /// Instantiate the policy with a victim rule for block-pressure
+    /// preemption.
+    pub fn build_with_preempt(&self, preempt: PreemptPolicy) -> Box<dyn Scheduler> {
         match self {
-            SchedPolicy::Fifo => Box::new(Fifo),
-            SchedPolicy::LongestPrefixFirst => Box::new(LongestPrefixFirst),
+            SchedPolicy::Fifo => Box::new(Fifo { preempt }),
+            SchedPolicy::LongestPrefixFirst => Box::new(LongestPrefixFirst { preempt }),
         }
     }
 
@@ -139,33 +231,73 @@ mod tests {
 
     #[test]
     fn fifo_admits_head_only() {
-        let mut s = Fifo;
+        let mut s = Fifo::default();
         let q = vec![view(1, 10, 0), view(2, 3, 0)];
         assert_eq!(s.pick(&q, &|_| true), Some(0));
         // head too long for the pool: nothing admitted even though the
         // second sequence would fit (legacy head-of-line semantics)
-        assert_eq!(s.pick(&q, &|len| len <= 5), None);
+        assert_eq!(s.pick(&q, &|v| v.total_len <= 5), None);
         assert_eq!(s.pick(&[], &|_| true), None);
     }
 
     #[test]
     fn longest_prefix_prefers_salvaged_work() {
-        let mut s = LongestPrefixFirst;
+        let mut s = LongestPrefixFirst::default();
         let q = vec![view(1, 10, 0), view(2, 14, 6), view(3, 12, 6), view(4, 9, 2)];
         // gen_len 6 twice: the longer total wins
         assert_eq!(s.pick(&q, &|_| true), Some(1));
         // block the winner: next-best admissible
-        assert_eq!(s.pick(&q, &|len| len < 14), Some(2));
+        assert_eq!(s.pick(&q, &|v| v.total_len < 14), Some(2));
         // only fresh prompts fit
-        assert_eq!(s.pick(&q, &|len| len <= 10), Some(3));
+        assert_eq!(s.pick(&q, &|v| v.total_len <= 10), Some(3));
         assert_eq!(s.pick(&q, &|_| false), None);
     }
 
     #[test]
     fn longest_prefix_ties_break_by_queue_order() {
-        let mut s = LongestPrefixFirst;
+        let mut s = LongestPrefixFirst::default();
         let q = vec![view(7, 10, 3), view(8, 10, 3)];
         assert_eq!(s.pick(&q, &|_| true), Some(0));
+    }
+
+    #[test]
+    fn gate_sees_the_whole_view_not_just_length() {
+        // share-aware admission: the gate can admit a group member whose
+        // prompt blocks are already registered even when a same-length
+        // stranger would not fit
+        let mut s = LongestPrefixFirst::default();
+        let q = vec![view(1, 40, 0), view(2, 40, 0)];
+        let pick = s.pick(&q, &|v| v.seq_id == 2);
+        assert_eq!(pick, Some(1));
+    }
+
+    #[test]
+    fn preempt_none_stalls_in_place() {
+        let mut f = Fifo::default();
+        let active = vec![view(1, 10, 4), view(2, 8, 1)];
+        assert_eq!(f.pick_victim(&active, 0), None, "legacy: no eviction");
+        let mut l = LongestPrefixFirst::default();
+        assert_eq!(l.pick_victim(&active, 0), None);
+    }
+
+    #[test]
+    fn preempt_youngest_picks_least_salvage() {
+        let mut s = Fifo { preempt: PreemptPolicy::Youngest };
+        let active = vec![view(1, 20, 9), view(2, 12, 2), view(3, 30, 2)];
+        // gen_len tie at 2: the shorter total (cheapest replay) wins
+        assert_eq!(s.pick_victim(&active, 0), Some(1));
+        // the stalled sequence itself is a legitimate victim
+        let active = vec![view(1, 20, 0), view(2, 12, 5)];
+        assert_eq!(s.pick_victim(&active, 0), Some(0));
+    }
+
+    #[test]
+    fn preempt_policy_parse_and_names() {
+        assert_eq!(PreemptPolicy::parse("none"), Some(PreemptPolicy::None));
+        assert_eq!(PreemptPolicy::parse("youngest"), Some(PreemptPolicy::Youngest));
+        assert_eq!(PreemptPolicy::parse("oldest"), None);
+        assert_eq!(PreemptPolicy::default(), PreemptPolicy::None);
+        assert_eq!(PreemptPolicy::Youngest.name(), "youngest");
     }
 
     #[test]
@@ -182,5 +314,10 @@ mod tests {
             "longest_prefix"
         );
         assert_eq!(SchedPolicy::default(), SchedPolicy::Fifo);
+        // built-with-preempt schedulers actually evict
+        let mut s = SchedPolicy::Fifo.build_with_preempt(PreemptPolicy::Youngest);
+        assert!(s.pick_victim(&[view(1, 4, 0), view(2, 5, 1)], 1).is_some());
+        let mut s = SchedPolicy::Fifo.build();
+        assert!(s.pick_victim(&[view(1, 4, 0), view(2, 5, 1)], 1).is_none());
     }
 }

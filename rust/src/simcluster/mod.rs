@@ -19,7 +19,14 @@
 //! and [`SimAutoScale`] runs the real `sched::AutoScaler` policy on
 //! simulated time to activate/retire spare generation GPUs from the
 //! backlog/saturation signals — deterministically, so scale trajectories
-//! replay per seed.
+//! replay per seed. `SimCfg::kv_blocks_per_gpu` adds the KV
+//! memory-pressure model (the engine's paged allocator at cluster
+//! scale): resident sequences consume blocks as they grow, admission is
+//! block-gated, and an over-budget GPU preempts its youngest sequences
+//! into the regen queue — so autoscale scenarios exercise
+//! preemption-driven backlog on sim time. Conventional mode survives
+//! churn too: dropped sequences refund the phase quota and regenerate
+//! from scratch.
 
 pub mod scenarios;
 pub mod sim;

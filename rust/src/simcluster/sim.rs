@@ -16,10 +16,13 @@ pub enum SimMode {
 
 /// A generation-GPU outage: at flash `at`, `gpu` drops every live
 /// sequence and generates nothing until `at + down_for` (generator
-/// churn, LlamaRL-style). Pipeline mode refills and keeps training;
-/// conventional mode cannot tolerate churn (its quota never drains).
-/// With [`SimCfg::migrate`] the dropped sequences re-enter the
-/// regeneration queue with prefixes intact instead of being lost.
+/// churn, LlamaRL-style). Pipeline mode refills and keeps training.
+/// Conventional mode refunds the dropped sequences' quota — they
+/// regenerate *from scratch* once capacity recovers (the phase barrier
+/// cannot salvage partial work), so the drain still completes; the lost
+/// progress lands in `seqs_lost`. With [`SimCfg::migrate`] (pipeline
+/// only) the dropped sequences instead re-enter the regeneration queue
+/// with prefixes intact.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GpuFailure {
     pub gpu: usize,
@@ -75,6 +78,17 @@ pub struct SimCfg {
     pub migrate: bool,
     /// signal-driven spare-GPU autoscaling (requires `migrate`)
     pub autoscale: Option<SimAutoScale>,
+    /// KV page size (tokens per block) for the memory-pressure model
+    pub kv_block_size: usize,
+    /// per-GPU KV block budget (None = unbounded, the legacy model).
+    /// A resident sequence consumes ceil((progress+1)/kv_block_size)
+    /// blocks, growing as it decodes; when a GPU's demand outgrows the
+    /// budget it preempts its *youngest* (least-progressed) sequences
+    /// into the regen queue — the engine's scheduler-driven preemption on
+    /// sim time — and admission respects the remaining headroom, so
+    /// memory pressure feeds the autoscaler's backlog signal. Requires
+    /// pipeline + `migrate` (preempted prefixes must survive).
+    pub kv_blocks_per_gpu: Option<usize>,
 }
 
 impl SimCfg {
@@ -94,6 +108,8 @@ impl SimCfg {
             failures: Vec::new(),
             migrate: false,
             autoscale: None,
+            kv_block_size: 16,
+            kv_blocks_per_gpu: None,
         }
     }
 
@@ -113,6 +129,8 @@ impl SimCfg {
             failures: Vec::new(),
             migrate: false,
             autoscale: None,
+            kv_block_size: 16,
+            kv_blocks_per_gpu: None,
         }
     }
 
@@ -162,6 +180,9 @@ pub struct SimResult {
     /// sequences handed to the regeneration queue with prefixes intact
     /// (outages and retired spares, migration on; re-migrations count)
     pub seqs_migrated: usize,
+    /// sequences preempted by the KV memory-pressure model (youngest
+    /// parked into the regen queue; re-preemptions count)
+    pub seqs_preempted: usize,
     /// generated tokens preserved across those hand-offs (deposit-time
     /// accounting)
     pub tokens_salvaged: f64,
@@ -221,15 +242,25 @@ fn key(t: f64, e: Event) -> Reverse<(u64, Event)> {
 impl Simulator {
     pub fn new(cfg: SimCfg) -> Self {
         assert!(
-            cfg.failures.is_empty() || matches!(cfg.mode, SimMode::Pipeline),
-            "GPU churn requires SimMode::Pipeline: conventional mode's quota \
-             never reopens after lost sequences, which would silently truncate \
-             the simulation"
-        );
-        assert!(
             !cfg.migrate || matches!(cfg.mode, SimMode::Pipeline),
             "partial-rollout migration requires SimMode::Pipeline"
         );
+        assert!(cfg.kv_block_size > 0, "kv_block_size must be >= 1");
+        assert!(
+            cfg.kv_blocks_per_gpu.is_none()
+                || (cfg.migrate && matches!(cfg.mode, SimMode::Pipeline)),
+            "the KV memory-pressure model requires SimMode::Pipeline with \
+             migrate: preempted sequences park their prefixes in the regen \
+             queue"
+        );
+        if let Some(budget) = cfg.kv_blocks_per_gpu {
+            assert!(
+                budget >= cfg.l_max.div_ceil(cfg.kv_block_size),
+                "kv_blocks_per_gpu must cover at least one max-length \
+                 sequence ({} blocks), got {budget}",
+                cfg.l_max.div_ceil(cfg.kv_block_size)
+            );
+        }
         let autoscale_on = cfg.autoscale.as_ref().is_some_and(|a| a.cfg.enabled);
         assert!(
             !autoscale_on || cfg.migrate,
@@ -281,26 +312,81 @@ impl Simulator {
         Seq { remaining: len, versions: Vec::new(), total: len }
     }
 
+    /// KV blocks a resident sequence consumes (its next write included).
+    fn seq_blocks(&self, seq: &Seq) -> usize {
+        let progress = seq.total - seq.remaining;
+        (progress + 1).div_ceil(self.cfg.kv_block_size)
+    }
+
+    /// Current KV block demand of a GPU's resident sequences.
+    fn gpu_kv_demand(&self, gpu: usize) -> usize {
+        self.slots[gpu].iter().flatten().map(|s| self.seq_blocks(s)).sum()
+    }
+
     fn refill(&mut self, gpu: usize) {
         if self.retired[gpu] {
             return;
         }
+        // admission respects the GPU's KV budget headroom (block-gated
+        // admission, exactly like the engine's paged allocator)
+        let budget = self.cfg.kv_blocks_per_gpu;
+        let mut demand = match budget {
+            Some(_) => self.gpu_kv_demand(gpu),
+            None => 0,
+        };
         for s in 0..self.cfg.slots_per_gpu {
-            if self.slots[gpu][s].is_none() {
-                // migrated prefixes re-enter ahead of fresh prompts (no
-                // quota charge: they were already admitted once)
-                if let Some(seq) = self.regen.pop_front() {
+            if self.slots[gpu][s].is_some() {
+                continue;
+            }
+            // migrated prefixes re-enter ahead of fresh prompts (no
+            // quota charge: they were already admitted once)
+            if let Some(head) = self.regen.front() {
+                let need = self.seq_blocks(head);
+                if budget.is_none_or(|b| demand + need <= b) {
+                    demand += need;
+                    let seq = self.regen.pop_front().expect("peeked above");
                     self.slots[gpu][s] = Some(seq);
                     continue;
                 }
-                if self.quota > 0 {
-                    let seq = self.new_seq();
-                    if self.quota != usize::MAX {
-                        self.quota -= 1;
-                    }
-                    self.slots[gpu][s] = Some(seq);
-                }
+                // the queue head's prefix does not fit the headroom:
+                // hold it (FIFO) — a fresh prompt may still fit below
             }
+            if self.quota > 0 {
+                if budget.is_some_and(|b| demand + 1 > b) {
+                    break; // no headroom left for even a fresh prompt
+                }
+                demand += 1;
+                let seq = self.new_seq();
+                if self.quota != usize::MAX {
+                    self.quota -= 1;
+                }
+                self.slots[gpu][s] = Some(seq);
+            }
+        }
+    }
+
+    /// Memory-pressure eviction: while a GPU's resident demand exceeds
+    /// its KV budget, park the *youngest* (least-progressed) sequence
+    /// into the regen queue — the engine's scheduler-driven preemption
+    /// (`[kv] preempt_policy = "youngest"`) on sim time. The last
+    /// resident is never parked (it must be able to finish; the budget
+    /// floor asserted at construction guarantees it can).
+    fn enforce_kv_budget(&mut self, gpu: usize) {
+        let Some(budget) = self.cfg.kv_blocks_per_gpu else { return };
+        while self.gpu_kv_demand(gpu) > budget {
+            if self.slots[gpu].iter().flatten().count() <= 1 {
+                return;
+            }
+            let victim = self.slots[gpu]
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|s| (s.total - s.remaining, i)))
+                .min();
+            let Some((_, vi)) = victim else { return };
+            let seq = self.slots[gpu][vi].take().expect("victim resident");
+            self.result.seqs_preempted += 1;
+            self.result.tokens_salvaged += (seq.total - seq.remaining) as f64;
+            self.regen.push_back(seq);
         }
     }
 
@@ -375,7 +461,27 @@ impl Simulator {
                                 self.regen.push_back(s);
                             }
                         } else {
-                            self.result.seqs_lost += dropped.len();
+                            let n_dropped = dropped.len();
+                            self.result.seqs_lost += n_dropped;
+                            if matches!(self.cfg.mode, SimMode::Conventional { .. })
+                                && n_dropped > 0
+                            {
+                                // conventional churn: refund the phase
+                                // quota so the generate phase still
+                                // drains — the work regenerates from
+                                // scratch (the barrier cannot salvage
+                                // partial sequences) on whichever GPU
+                                // has room, starting now
+                                if self.quota != usize::MAX {
+                                    self.quota += n_dropped;
+                                }
+                                for gpu in 0..self.cfg.n_gen_gpus {
+                                    if gpu != g {
+                                        self.refill(gpu);
+                                        self.schedule_round(gpu, 0.0);
+                                    }
+                                }
+                            }
                         }
                         if g == 0 {
                             self.result.gpu0_active.push(self.t, self.t, 0.0);
@@ -401,6 +507,10 @@ impl Simulator {
                         }
                     }
                     self.queue.extend(finished);
+                    // memory pressure first (this round's tokens may have
+                    // outgrown the KV budget), then refill into whatever
+                    // slots and block headroom remain
+                    self.enforce_kv_budget(g);
                     // in-flight refill (pipeline) / quota refill (conv)
                     self.refill(g);
                     if g == 0 {
@@ -785,6 +895,114 @@ mod tests {
         assert_eq!(r.gpus_removed, again.gpus_removed);
         assert_eq!(r.scaleup_times, again.scaleup_times);
         assert_eq!(r.seqs_migrated, again.seqs_migrated);
+    }
+
+    #[test]
+    fn conventional_churn_refunds_quota_and_completes() {
+        // the documented GpuFailure gap, closed: conventional mode now
+        // refunds dropped sequences' quota so the generate phase still
+        // drains around outages (work restarts from scratch — the phase
+        // barrier cannot salvage partial sequences)
+        // generation-heavy shape (fast trainer, long sequences) so the
+        // seeded outages land in generate phases, where slots are busy
+        let base = || {
+            let mut c = SimCfg::conventional(8, 2, 16, 32, 64);
+            c.rl_steps = 8;
+            c.tau = 0.5;
+            c
+        };
+        let mk = || {
+            let healthy_end = Simulator::new(base()).run().t_end;
+            base().with_churn(17, 6, healthy_end, healthy_end / 8.0)
+        };
+        let r = Simulator::new(mk()).run();
+        assert_eq!(
+            r.samples_vs_time.points.len(),
+            8,
+            "quota refund lets every optimizer step complete despite churn"
+        );
+        assert!(r.seqs_lost > 0, "outages must have dropped live sequences");
+        assert_eq!(r.seqs_migrated, 0, "conventional cannot salvage partial work");
+        let again = Simulator::new(mk()).run();
+        assert_eq!(r.t_end, again.t_end);
+        assert_eq!(r.seqs_lost, again.seqs_lost);
+    }
+
+    fn kv_pressure_cfg() -> SimCfg {
+        let mut c = SimCfg::pipeline(16, 8, 32, 64, 128);
+        c.rl_steps = 30;
+        c.migrate = true;
+        c.kv_block_size = 16;
+        // worst case per GPU is 32 slots × 8 blocks = 256; a 64-block
+        // budget is a 4× oversubscription — sustained memory pressure
+        c.kv_blocks_per_gpu = Some(64);
+        c
+    }
+
+    #[test]
+    fn kv_pressure_preempts_youngest_and_run_completes() {
+        let r = Simulator::new(kv_pressure_cfg()).run();
+        assert!(r.seqs_preempted > 0, "the budget must have forced preemptions");
+        assert_eq!(r.seqs_lost, 0, "preemption parks, never loses");
+        assert_eq!(
+            r.samples_vs_time.points.len(),
+            30,
+            "training completes under sustained memory pressure"
+        );
+        assert!(r.tokens_salvaged > 0.0, "parked prefixes carried tokens");
+        let again = Simulator::new(kv_pressure_cfg()).run();
+        assert_eq!(r.t_end, again.t_end);
+        assert_eq!(r.seqs_preempted, again.seqs_preempted);
+    }
+
+    #[test]
+    fn kv_pressure_backlog_activates_spares() {
+        // memory pressure, not an outage, is the backlog source: homeless
+        // preempted sequences pile into the regen queue and the same
+        // autoscaler policy the supervisor runs brings up spare GPUs
+        let mk = || {
+            let mut c = kv_pressure_cfg();
+            c.rl_steps = 40;
+            c.tau = 12.0;
+            c.autoscale = Some(SimAutoScale {
+                cfg: AutoScaleCfg {
+                    enabled: true,
+                    backlog_per_actor: 1.0,
+                    supply_high_frac: 0.75,
+                    up_patience: 2,
+                    down_patience: 3,
+                    cooldown: 2,
+                    max_lag_steps: 0.0,
+                    min_batch_fill: 0.0,
+                    eval_every_ms: 0,
+                },
+                max_extra_gpus: 4,
+                eval_every_flashes: 20.0,
+                supply_capacity: 256,
+            });
+            c
+        };
+        let r = Simulator::new(mk()).run();
+        assert!(r.seqs_preempted > 0);
+        assert!(
+            r.gpus_added >= 1,
+            "sustained preemption backlog must activate spares ({} preempted)",
+            r.seqs_preempted
+        );
+        assert_eq!(r.seqs_lost, 0);
+        assert_eq!(r.samples_vs_time.points.len(), 40);
+        let again = Simulator::new(mk()).run();
+        assert_eq!(r.t_end, again.t_end);
+        assert_eq!(r.gpus_added, again.gpus_added);
+        assert_eq!(r.seqs_preempted, again.seqs_preempted);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires SimMode::Pipeline")]
+    fn kv_pressure_requires_pipeline_and_migrate() {
+        let mut c = SimCfg::pipeline(8, 4, 16, 32, 64);
+        c.kv_blocks_per_gpu = Some(16); // migrate off
+        let _ = Simulator::new(c);
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub enum ChaosKind {
     BusHeal,
     /// stall all rollout-topic publishers for this long
     TopicStall { ms: u64 },
+    /// byzantine injection: deposit bit-flipped/truncated `PRLSNAP1`
+    /// bytes into the migration hub, as if a corrupt peer (or a torn
+    /// transfer) handed off an in-flight rollout. The claim path must
+    /// reject it, keep the hub's books balanced, and the claiming actor
+    /// must survive. No-op without a migration hub.
+    CorruptSnapshot,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,8 +84,9 @@ impl ChaosSchedule {
                 35..=49 => ChaosKind::RestartActor,
                 50..=64 => ChaosKind::AddActor,
                 65..=74 => ChaosKind::RemoveActor,
-                75..=84 => ChaosKind::BusDelay { ms: 5 + rng.below(45) as u64 },
-                85..=89 => ChaosKind::BusHeal,
+                75..=82 => ChaosKind::BusDelay { ms: 5 + rng.below(45) as u64 },
+                83..=86 => ChaosKind::BusHeal,
+                87..=91 => ChaosKind::CorruptSnapshot,
                 _ => ChaosKind::TopicStall { ms: 5 + rng.below(45) as u64 },
             };
             events.push(ChaosEvent { at_step, kind });
@@ -113,6 +120,17 @@ impl ChaosSchedule {
         }
     }
 
+    /// Hand-written scenario: `n` byzantine snapshot deposits starting at
+    /// `at_step`, one per step.
+    pub fn byzantine(at_step: u64, n: usize) -> ChaosSchedule {
+        ChaosSchedule {
+            seed: 0,
+            events: (0..n as u64)
+                .map(|i| ChaosEvent { at_step: at_step + i, kind: ChaosKind::CorruptSnapshot })
+                .collect(),
+        }
+    }
+
     /// Human-readable replay recipe; printed at run start so a failing
     /// schedule can be reproduced from its seed.
     pub fn describe(&self) -> String {
@@ -141,8 +159,39 @@ impl fmt::Display for ChaosKind {
             ChaosKind::BusDelay { ms } => write!(f, "bus-delay {ms}ms"),
             ChaosKind::BusHeal => write!(f, "bus-heal"),
             ChaosKind::TopicStall { ms } => write!(f, "topic-stall {ms}ms"),
+            ChaosKind::CorruptSnapshot => write!(f, "corrupt-snapshot"),
         }
     }
+}
+
+/// Deterministic byzantine payload for a [`ChaosKind::CorruptSnapshot`]
+/// event: a structurally valid `PRLSNAP1` snapshot, bit-flipped at a
+/// seed-derived offset *and* truncated by a seed-derived amount — so
+/// `SeqSnapshot::from_bytes` always rejects it (truncation alone
+/// guarantees that; the bit flip adds in-band damage), and the exact
+/// bytes replay from the event's step like every other chaos latency.
+pub fn corrupt_snapshot_bytes(seed: u64) -> Vec<u8> {
+    let mut rng = Rng::with_stream(seed, 0xbad5_0a9);
+    let gen = 1 + rng.below(6);
+    let snap = crate::sched::SeqSnapshot {
+        seq_id: seed,
+        group_id: (0xbad << 40) | seed,
+        problem_id: seed,
+        prompt: vec![1, 2, 3],
+        gen_tokens: (0..gen as i32).collect(),
+        behavior_lp: vec![-0.25; gen],
+        token_version: vec![1; gen],
+        pos: 2 + gen,
+        max_new: gen + 4,
+        rng_words: [seed; 4],
+        t_start: 0.0,
+    };
+    let mut bytes = snap.to_bytes();
+    let at = rng.below(bytes.len());
+    bytes[at] ^= 1 << rng.below(8);
+    let cut = 1 + rng.below(7);
+    bytes.truncate(bytes.len().saturating_sub(cut));
+    bytes
 }
 
 #[cfg(test)]
@@ -202,6 +251,27 @@ mod tests {
         assert_eq!(s.events.len(), 1);
         assert_eq!(s.events[0].kind, ChaosKind::SlowKillActor { delay_ms: 25 });
         assert!(s.describe().contains("slow-kill-actor +25ms"));
+    }
+
+    #[test]
+    fn corrupt_snapshot_bytes_always_reject_and_replay() {
+        for seed in 0..64u64 {
+            let bytes = corrupt_snapshot_bytes(seed);
+            assert!(
+                crate::sched::SeqSnapshot::from_bytes(&bytes).is_err(),
+                "seed {seed}: byzantine bytes must never decode"
+            );
+            assert_eq!(bytes, corrupt_snapshot_bytes(seed), "payload replays from its seed");
+        }
+    }
+
+    #[test]
+    fn byzantine_scenario_shape() {
+        let s = ChaosSchedule::byzantine(3, 4);
+        assert_eq!(s.events.len(), 4);
+        assert!(s.events.iter().all(|e| e.kind == ChaosKind::CorruptSnapshot));
+        assert_eq!(s.events[0].at_step, 3);
+        assert!(s.describe().contains("corrupt-snapshot"));
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Shared-prefix paged KV memory, scheduler-driven preemption and
+//! coalesced replay — the engine-gated acceptance suite.
+//!
+//! Three tiers mirror tests/migration.rs:
+//!
+//! * device-free allocator properties live in `engine/kvcache.rs` (unit
+//!   tests + property tests for refcount conservation, no double-free
+//!   and fork-on-write never aliasing);
+//! * this file's scenarios need a PJRT runtime + AOT artifacts and gate
+//!   on `runtime_or_skip`:
+//!   - **prefix sharing**: a group of G rollouts over one prompt holds
+//!     ceil(prompt/block_size) shared blocks once (refcount G), not G
+//!     times, and the books rebalance to empty when the group finishes;
+//!   - **preempt/resume equivalence**: a sequence preempted under
+//!     synthetic block pressure and later resumed emits the same
+//!     remaining tokens and version tags as an uninterrupted run;
+//!   - **coalesced replay**: importing N snapshots triggers at most
+//!     ceil(N/replay_batch) replays, proven by `stats.import_replays`.
+
+use pipeline_rl::data::task::TaskGen;
+use pipeline_rl::engine::{Engine, EngineCfg};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::rl::Rollout;
+use pipeline_rl::runtime::Runtime;
+use pipeline_rl::sched::PreemptPolicy;
+use pipeline_rl::testkit::runtime_or_skip;
+use pipeline_rl::util::Rng;
+
+/// Greedy decode (zero Gumbel): token streams depend only on weights and
+/// the per-row inputs, never on RNG draw order or co-resident rows — the
+/// determinism the preemption-equivalence proof rests on (interruption
+/// changes both).
+fn greedy_cfg(block_size: usize) -> EngineCfg {
+    let mut c = EngineCfg::new("tiny");
+    c.max_new_tokens = 8;
+    c.greedy = true;
+    c.block_size = block_size;
+    c
+}
+
+/// Reference rollout: the problem decoded greedily, alone, with an
+/// exactly-sized pool (no pressure possible).
+fn solo_reference(rt: &mut Runtime, pid: u64, block_size: usize) -> Rollout {
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    let p = gen.problem(pid);
+    let toks = tk.encode(&p.prompt).unwrap();
+    let params = init_params(rt);
+    let mut eng = Engine::new(rt, greedy_cfg(block_size), &params, 0, Rng::new(3)).unwrap();
+    eng.set_weights(1, &params).unwrap();
+    eng.add_request(p, toks, 1000 + pid);
+    for _ in 0..500 {
+        if let Some(r) = eng.step().unwrap().finished.into_iter().next() {
+            return r;
+        }
+    }
+    panic!("reference rollout for problem {pid} never finished");
+}
+
+fn init_params(rt: &mut Runtime) -> Vec<pipeline_rl::runtime::HostTensor> {
+    rt.init_params("tiny", 1).unwrap()
+}
+
+#[test]
+fn group_holds_shared_prompt_blocks_once() {
+    if !runtime_or_skip("group_holds_shared_prompt_blocks_once") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = init_params(&mut rt);
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    let bs = 4usize;
+    let mut eng = Engine::new(&mut rt, greedy_cfg(bs), &params, 0, Rng::new(9)).unwrap();
+    eng.set_weights(1, &params).unwrap();
+    let g = eng.n_slots().min(4);
+    if g < 2 {
+        eprintln!("SKIP group_holds_shared_prompt_blocks_once: engine has {g} slot(s)");
+        return;
+    }
+    let p = gen.problem(5);
+    let toks = tk.encode(&p.prompt).unwrap();
+    let stream_len = toks.len() + 1; // + BOS
+    for _ in 0..g {
+        eng.add_request(p.clone(), toks.clone(), 777);
+    }
+    // first step admits the whole group (and decodes one position —
+    // still prefill, nothing divergent yet)
+    assert!(!eng.step().unwrap().idle);
+    let per = stream_len.div_ceil(bs);
+    assert_eq!(
+        eng.kv_shared_saved_blocks(),
+        (g - 1) * per,
+        "G members reference ceil(prompt/bs) = {per} blocks once, not {g} times"
+    );
+    assert_eq!(eng.kv_held_blocks(), per, "prompt blocks held exactly once");
+    eng.kv_check().unwrap();
+
+    // run the group to completion: members diverge (copy-on-write forks
+    // when the first sampled token lands in a shared partial block) and
+    // everything rebalances to an empty pool
+    let mut finished: Vec<Rollout> = Vec::new();
+    for _ in 0..1000 {
+        finished.extend(eng.step().unwrap().finished);
+        if finished.len() == g {
+            break;
+        }
+    }
+    assert_eq!(finished.len(), g, "every group member finishes");
+    eng.kv_check().unwrap();
+    assert_eq!(eng.kv_free_blocks(), eng.kv_total_blocks(), "all blocks returned");
+    assert_eq!(eng.kv_shared_saved_blocks(), 0);
+    // the first sampled token's K/V is written while producing the
+    // second, so divergence into the shared partial last prompt block
+    // needs gen_len >= 2 (an immediate EOS never writes it)
+    if stream_len % bs != 0 && finished[0].gen_tokens.len() >= 2 {
+        assert_eq!(
+            eng.kv_cow_forks(),
+            (g - 1) as u64,
+            "divergence forks all but the sole remaining holder"
+        );
+    }
+}
+
+#[test]
+fn preempted_sequence_matches_uninterrupted() {
+    if !runtime_or_skip("preempted_sequence_matches_uninterrupted") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = init_params(&mut rt);
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+    let bs = 2usize;
+
+    // find two problems with enough sampled tokens and similar stream
+    // lengths: co-resident peak demand then exceeds what either needs
+    // alone, so a pool sized one block short of the peak forces a
+    // preemption while both can still finish solo
+    let mut refs: Vec<(u64, Rollout)> = Vec::new();
+    for pid in 0..16u64 {
+        let r = solo_reference(&mut rt, pid, bs);
+        if r.gen_tokens.len() >= 3 {
+            refs.push((pid, r));
+        }
+    }
+    let mut pair = None;
+    'outer: for i in 0..refs.len() {
+        for j in (i + 1)..refs.len() {
+            let li = refs[i].1.prompt_tokens.len() + refs[i].1.gen_tokens.len();
+            let lj = refs[j].1.prompt_tokens.len() + refs[j].1.gen_tokens.len();
+            let (lmin, lmax) = (li.min(lj), li.max(lj));
+            // one block short of the co-resident peak: pressure strikes
+            // before the shorter finishes
+            let pool = 2 * lmin.div_ceil(bs) - 1;
+            let admit_both = refs[i].1.prompt_tokens.len().div_ceil(bs)
+                + refs[j].1.prompt_tokens.len().div_ceil(bs)
+                <= pool;
+            // ... while each still fits (and can resume) alone
+            if admit_both && pool >= lmax.div_ceil(bs) {
+                pair = Some((i, j, pool));
+                break 'outer;
+            }
+        }
+    }
+    let Some((i, j, pool)) = pair else {
+        eprintln!("SKIP preempted_sequence_matches_uninterrupted: no suitable problem pair");
+        return;
+    };
+    let (pid_a, ref_a) = (refs[i].0, refs[i].1.clone());
+    let (pid_b, ref_b) = (refs[j].0, refs[j].1.clone());
+
+    let mut cfg = greedy_cfg(bs);
+    cfg.kv_blocks = Some(pool);
+    cfg.preempt = PreemptPolicy::Youngest;
+    let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(3)).unwrap();
+    if eng.n_slots() < 2 {
+        eprintln!("SKIP preempted_sequence_matches_uninterrupted: single-slot engine");
+        return;
+    }
+    eng.set_weights(1, &params).unwrap();
+    let pa = gen.problem(pid_a);
+    let pb = gen.problem(pid_b);
+    eng.add_request(pa.clone(), tk.encode(&pa.prompt).unwrap(), 11);
+    eng.add_request(pb.clone(), tk.encode(&pb.prompt).unwrap(), 22);
+
+    let mut finished: Vec<Rollout> = Vec::new();
+    for _ in 0..3000 {
+        finished.extend(eng.step().unwrap().finished);
+        if finished.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(finished.len(), 2, "both sequences finish under block pressure");
+    assert!(
+        eng.stats.preemptions >= 1,
+        "the undersized pool must have forced a preemption"
+    );
+    assert!(
+        eng.stats.import_replays >= 1,
+        "the parked sequence resumed through a coalesced replay"
+    );
+    eng.kv_check().unwrap();
+
+    // equivalence: preemption + resume is invisible in the output
+    for (gid, r) in [(11u64, &ref_a), (22u64, &ref_b)] {
+        let got = finished.iter().find(|f| f.group_id == gid).expect("rollout present");
+        assert_eq!(got.gen_tokens, r.gen_tokens, "same tokens as the uninterrupted run");
+        assert_eq!(got.token_version, r.token_version, "same version tags");
+    }
+}
+
+#[test]
+fn importing_n_snapshots_coalesces_replays() {
+    if !runtime_or_skip("importing_n_snapshots_coalesces_replays") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = init_params(&mut rt);
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+
+    // donor: saturate every slot, make some progress, export everything
+    let mut donor = Engine::new(&mut rt, greedy_cfg(16), &params, 0, Rng::new(4)).unwrap();
+    donor.set_weights(1, &params).unwrap();
+    let slots = donor.n_slots();
+    if slots < 3 {
+        eprintln!("SKIP importing_n_snapshots_coalesces_replays: engine has {slots} slot(s)");
+        return;
+    }
+    for i in 0..slots {
+        let p = gen.problem(30 + i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        donor.add_request(p, toks, 500 + i as u64);
+    }
+    for _ in 0..2 {
+        assert!(!donor.step().unwrap().idle);
+    }
+    let snaps = donor.export_snapshots();
+    let n = snaps.len();
+    if n < 2 {
+        eprintln!("SKIP importing_n_snapshots_coalesces_replays: only {n} in flight");
+        return;
+    }
+    assert!(snaps.iter().all(|s| s.pos > 0), "every snapshot carries progress");
+
+    // importer: its own sequences occupy every slot and finish at
+    // staggered times — the serial-replay worst case (one slot frees at
+    // a time) that coalescing exists for
+    let batch = 4usize;
+    let mut cfg = greedy_cfg(16);
+    cfg.replay_batch = batch;
+    let mut imp = Engine::new(&mut rt, cfg, &params, 1, Rng::new(5)).unwrap();
+    imp.set_weights(1, &params).unwrap();
+    for i in 0..slots {
+        let p = gen.problem(60 + i as u64);
+        let toks = tk.encode(&p.prompt).unwrap();
+        imp.add_request(p, toks, 900 + i as u64);
+    }
+    assert!(!imp.step().unwrap().idle); // seat the locals
+    for s in &snaps {
+        imp.import_snapshot(s, gen.problem(s.problem_id)).unwrap();
+    }
+
+    let want_groups: Vec<u64> = snaps.iter().map(|s| s.group_id).collect();
+    let mut done: Vec<u64> = Vec::new();
+    for _ in 0..5000 {
+        for r in imp.step().unwrap().finished {
+            if want_groups.contains(&r.group_id) {
+                // migrated prefix preserved verbatim
+                let s = snaps.iter().find(|s| s.group_id == r.group_id).unwrap();
+                assert_eq!(&r.gen_tokens[..s.gen_tokens.len()], &s.gen_tokens[..]);
+                done.push(r.group_id);
+            }
+        }
+        if done.len() == n {
+            break;
+        }
+    }
+    assert_eq!(done.len(), n, "every imported sequence finishes");
+    let bound = n.div_ceil(batch) as u64;
+    assert!(
+        (1..=bound).contains(&imp.stats.import_replays),
+        "coalescing: {} imports took {} replays, bound {bound}",
+        n,
+        imp.stats.import_replays
+    );
+    assert_eq!(imp.stats.snapshots_imported, n as u64);
+    imp.kv_check().unwrap();
+}

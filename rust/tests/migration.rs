@@ -283,6 +283,89 @@ fn chaos_kill_one_of_three_loses_no_salvageable_tokens() {
     assert!(hub.counter("chaos_slow_kills_landed") >= 1.0, "slow kill landed");
 }
 
+/// Byzantine chaos (satellite): `CorruptSnapshot` events feed
+/// bit-flipped `PRLSNAP1` bytes through the migration hub while three
+/// actors keep claiming from it. `SeqSnapshot::from_bytes` rejects every
+/// blob at claim time, the hub's conservation books still balance
+/// (deposited == claimed + discarded + depth, with the corrupt deposits
+/// in `discarded`), and the actor pool survives untouched.
+#[test]
+fn byzantine_corrupt_snapshots_rejected_books_balance_actors_survive() {
+    let hub = MetricsHub::new();
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(vec![]));
+    let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
+    let stop = Arc::new(AtomicBool::new(false));
+    let hub_m = Arc::new(MigrationHub::new());
+    let deposited = Arc::new(Mutex::new(Vec::new()));
+
+    let pool = ActorPool::new(
+        migrating_spawn(bus.clone(), tx.clone(), hub.clone(), hub_m.clone(), deposited.clone()),
+        stop.clone(),
+        hub.clone(),
+        3,
+        3,
+        3,
+        0, // no respawn budget: a byzantine blob crashing an actor would fail the run
+        false,
+    )
+    .unwrap();
+    const N_POISON: usize = 3;
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: tx.clone(),
+        schedule: Some(ChaosSchedule::byzantine(2, N_POISON)),
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(2),
+        migrate: Some(hub_m.clone()),
+        autoscale: None,
+    };
+    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+    // drive the version clock past every event and wait for the poison
+    // to be injected and rejected
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut consumed = 0usize;
+    let mut version = 1u64;
+    while hub_m.corrupt_rejected() < N_POISON as u64 || hub_m.depth() > 0 {
+        assert!(
+            Instant::now() < deadline,
+            "poison never fully rejected: {} injected, {} rejected, depth {}",
+            hub.counter("chaos_corrupt_snapshots_injected"),
+            hub_m.corrupt_rejected(),
+            hub_m.depth()
+        );
+        if let Ok(_r) = rx.recv(Duration::from_millis(200)) {
+            consumed += 1;
+            if consumed % 10 == 0 {
+                version += 1;
+                bus.publish(version, Arc::new(vec![]));
+            }
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    drop(tx);
+    sup.join().unwrap().expect("supervisor exits clean: no actor died");
+
+    assert_eq!(hub.counter("chaos_corrupt_snapshots_injected"), N_POISON as f64);
+    assert_eq!(hub_m.corrupt_rejected(), N_POISON as u64);
+    // books: every deposit (all of them poison) accounted as discarded
+    assert_eq!(
+        hub_m.deposited(),
+        hub_m.claimed() + hub_m.discarded(),
+        "conservation holds with byzantine deposits in the mix"
+    );
+    assert_eq!(hub_m.discarded(), N_POISON as u64);
+    let (tok_dep, tok_claim) = hub_m.token_counts();
+    assert_eq!((tok_dep, tok_claim), (0, 0), "no phantom salvage from poison");
+    // the pool was never perturbed: no crashes, no restarts
+    assert_eq!(hub.counter("actor_crashes"), 0.0);
+    assert_eq!(hub.counter("actor_restarts"), 0.0);
+    assert_eq!(hub.counter("pool_size"), 3.0);
+}
+
 #[test]
 fn supervisor_autoscales_pool_from_backlog_then_saturation() {
     // idle synthetic actors: the signals are driven entirely by the test

@@ -28,14 +28,17 @@ fn arena_slot_writes_never_alias() {
         let mut cur = vec![PAD; b];
         let mut ftok = vec![PAD; b];
         let mut fmask = vec![1.0f32; b];
+        let mut cap = vec![0usize; b];
         for _ in 0..c.usize_in(1, 48) {
             let i = c.usize_in(0, b - 1);
             let p = c.usize_in(0, 500);
             let tok = c.usize_in(0, 63) as i32;
             let forced = if c.rng.f32() < 0.5 { Some(tok + 1) } else { None };
-            arena.set_slot(i, p, tok, forced);
+            let kv_cap = c.usize_in(1, 600);
+            arena.set_slot(i, p, tok, forced, kv_cap);
             pos[i] = p as i32;
             cur[i] = tok;
+            cap[i] = kv_cap;
             match forced {
                 Some(t) => {
                     ftok[i] = t;
@@ -47,11 +50,16 @@ fn arena_slot_writes_never_alias() {
                 }
             }
         }
-        if arena.pos != pos || arena.cur != cur || arena.ftok != ftok || arena.fmask != fmask {
+        if arena.pos != pos
+            || arena.cur != cur
+            || arena.ftok != ftok
+            || arena.fmask != fmask
+            || arena.cap != cap
+        {
             return Err(format!(
-                "slot write leaked across slots: arena ({:?} {:?} {:?} {:?}) vs model \
-                 ({pos:?} {cur:?} {ftok:?} {fmask:?})",
-                arena.pos, arena.cur, arena.ftok, arena.fmask
+                "slot write leaked across slots: arena ({:?} {:?} {:?} {:?} {:?}) vs model \
+                 ({pos:?} {cur:?} {ftok:?} {fmask:?} {cap:?})",
+                arena.pos, arena.cur, arena.ftok, arena.fmask, arena.cap
             ));
         }
         Ok(())
@@ -66,7 +74,7 @@ fn arena_shapes_fixed_and_reset_restores_defaults() {
         let mut arena = StepArena::new(b, v, PAD, 0.7, PARK);
         for _ in 0..c.usize_in(0, 20) {
             let i = c.usize_in(0, b - 1);
-            arena.set_slot(i, c.usize_in(0, 99), 3, None);
+            arena.set_slot(i, c.usize_in(0, 99), 3, None, 100);
         }
         for g in arena.gumbel.iter_mut() {
             *g = c.rng.f32();

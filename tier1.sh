@@ -43,6 +43,14 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# KV-memory bench: entirely device-free (paged allocator + park/resume
+# bookkeeping), so unlike the engine benches it runs everywhere and
+# appends its numbers (prefix-sharing savings, preempt->resume cost,
+# coalesced vs serial replay counts) to rust/BENCH_kvmem.json on every
+# tier-1 pass — the perf trajectory stays a diffable artifact.
+echo "== tier1: cargo bench --bench kvmem =="
+cargo bench --bench kvmem
+
 # clippy over every target (benches/examples/tests included), warnings
 # fatal — the lint policy lives in [workspace.lints] in rust/Cargo.toml.
 # Toolchain is pinned via rust-toolchain.toml (components include clippy).

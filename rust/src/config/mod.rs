@@ -72,6 +72,12 @@ pub struct ElasticConfig {
     /// portable snapshots re-enqueued to surviving actors (false restores
     /// the legacy abort-everything behavior)
     pub migrate: bool,
+    /// supervisor-driven in-process trainer failover: a killed or crashed
+    /// trainer restarts from the latest checkpoint manifest while the
+    /// actors keep running (requires `[checkpoint] every > 0` and `dir`)
+    pub trainer_failover: bool,
+    /// trainer restarts the supervisor performs before giving up
+    pub trainer_restarts: usize,
 }
 
 impl Default for ElasticConfig {
@@ -83,6 +89,8 @@ impl Default for ElasticConfig {
             max_restarts: 3,
             poll_ms: 5,
             migrate: true,
+            trainer_failover: false,
+            trainer_restarts: 1,
         }
     }
 }
@@ -360,10 +368,81 @@ impl RunConfig {
                 // usize_or rejects negatives instead of wrapping
                 poll_ms: doc.usize_or("elastic.poll_ms", d.elastic.poll_ms as usize)? as u64,
                 migrate: doc.bool_or("elastic.migrate", d.elastic.migrate)?,
+                trainer_failover: doc
+                    .bool_or("elastic.trainer_failover", d.elastic.trainer_failover)?,
+                trainer_restarts: doc
+                    .usize_or("elastic.trainer_restarts", d.elastic.trainer_restarts)?,
             },
             log_every: doc.usize_or("run.log_every", d.log_every)?,
             weight_transfer_ms: doc.f64_or("run.weight_transfer_ms", d.weight_transfer_ms)?,
         })
+    }
+
+    /// Serialize the `[sched]` / `[kv]` / `[checkpoint]` / `[elastic]` /
+    /// `[autoscale]` sections back to TOML text that [`RunConfig::from_doc`]
+    /// parses to the same values — the round-trip contract the config
+    /// property test pins (a field added to one of these sections without
+    /// a serializer line here fails that test, not a production run).
+    pub fn sections_to_toml(&self) -> String {
+        use std::fmt::Write;
+        // inverse of toml::parse_value's unescaping (quotes, newlines).
+        // Lone backslashes are outside the minimal TOML subset the
+        // parser supports in either direction.
+        fn esc(s: &str) -> String {
+            s.replace('"', "\\\"").replace('\n', "\\n")
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "[sched]\npolicy = \"{}\"", self.sched.name());
+        let _ = writeln!(
+            s,
+            "[kv]\nblock_size = {}\novercommit = {}\npreempt_policy = \"{}\"\nreplay_batch = {}",
+            self.kv.block_size,
+            self.kv.overcommit,
+            self.kv.preempt.name(),
+            self.kv.replay_batch
+        );
+        let _ = writeln!(
+            s,
+            "[checkpoint]\nevery = {}\nkeep_last = {}",
+            self.checkpoint.every, self.checkpoint.keep_last
+        );
+        if let Some(dir) = &self.checkpoint.dir {
+            let _ = writeln!(s, "dir = \"{}\"", esc(dir));
+        }
+        if let Some(from) = &self.checkpoint.resume_from {
+            let _ = writeln!(s, "resume_from = \"{}\"", esc(from));
+        }
+        let e = &self.elastic;
+        let _ = writeln!(
+            s,
+            "[elastic]\nenabled = {}\nmin_actors = {}\nmax_actors = {}\nmax_restarts = {}\n\
+             poll_ms = {}\nmigrate = {}\ntrainer_failover = {}\ntrainer_restarts = {}",
+            e.enabled,
+            e.min_actors,
+            e.max_actors,
+            e.max_restarts,
+            e.poll_ms,
+            e.migrate,
+            e.trainer_failover,
+            e.trainer_restarts
+        );
+        let a = &self.autoscale;
+        let _ = writeln!(
+            s,
+            "[autoscale]\nenabled = {}\nbacklog_per_actor = {}\nsupply_high_frac = {}\n\
+             up_patience = {}\ndown_patience = {}\ncooldown = {}\nmax_lag_steps = {}\n\
+             min_batch_fill = {}\neval_every_ms = {}",
+            a.enabled,
+            a.backlog_per_actor,
+            a.supply_high_frac,
+            a.up_patience,
+            a.down_patience,
+            a.cooldown,
+            a.max_lag_steps,
+            a.min_batch_fill,
+            a.eval_every_ms
+        );
+        s
     }
 
     pub fn from_file(path: &std::path::Path, overrides: &[String]) -> Result<RunConfig> {
@@ -434,6 +513,31 @@ impl RunConfig {
                     self.elastic.min_actors,
                     self.elastic.max_actors
                 );
+            }
+        }
+        if self.elastic.trainer_failover {
+            if !matches!(self.mode, Mode::Pipeline) {
+                bail!(
+                    "trainer failover requires pipeline mode: conventional RL's \
+                     phase barrier cannot straddle a trainer restart"
+                );
+            }
+            if !self.elastic.enabled {
+                bail!(
+                    "trainer failover requires the elastic supervisor ([elastic] \
+                     enabled = true): only a supervisor-owned trainer slot can be \
+                     respawned — without it the flag would silently do nothing"
+                );
+            }
+            if self.checkpoint.every == 0 || self.checkpoint.dir.is_none() {
+                bail!(
+                    "trainer failover requires durable recovery points: set \
+                     [checkpoint] every > 0 and [checkpoint] dir — a respawned \
+                     trainer resumes from the latest manifest state"
+                );
+            }
+            if self.elastic.trainer_restarts == 0 {
+                bail!("elastic.trainer_restarts must be >= 1 when trainer_failover is on");
             }
         }
         if self.autoscale.enabled {
@@ -696,6 +800,155 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.kv.overcommit = 2.0;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_and_validates_trainer_failover() {
+        let doc = TomlDoc::parse(
+            r#"
+            [elastic]
+            enabled = true
+            trainer_failover = true
+            trainer_restarts = 3
+            [checkpoint]
+            every = 2
+            dir = "ckpts"
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(cfg.elastic.trainer_failover);
+        assert_eq!(cfg.elastic.trainer_restarts, 3);
+        cfg.validate().unwrap();
+        // defaults: off, one restart budgeted
+        let d = RunConfig::default();
+        assert!(!d.elastic.trainer_failover);
+        assert_eq!(d.elastic.trainer_restarts, 1);
+    }
+
+    #[test]
+    fn trainer_failover_requires_durable_checkpoints() {
+        // failover without the elastic supervisor would be silently inert
+        let mut cfg = RunConfig::default();
+        cfg.elastic.trainer_failover = true;
+        cfg.checkpoint.every = 2;
+        cfg.checkpoint.dir = Some("ckpts".into());
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("elastic supervisor"), "{err}");
+
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.elastic.trainer_failover = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("durable recovery points"), "{err}");
+
+        cfg.checkpoint.every = 2;
+        cfg.checkpoint.dir = Some("ckpts".into());
+        cfg.validate().unwrap();
+
+        cfg.elastic.trainer_restarts = 0;
+        assert!(cfg.validate().is_err(), "zero failover budget refused");
+        cfg.elastic.trainer_restarts = 1;
+
+        cfg.mode = Mode::Conventional { g: 4 };
+        cfg.elastic.enabled = false;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("pipeline mode"), "{err}");
+    }
+
+    /// Satellite: every `[kv]`/`[autoscale]`/`[sched]`/`[checkpoint]`
+    /// (and `[elastic]`) field survives parse → serialize → parse.
+    #[test]
+    fn property_config_sections_roundtrip() {
+        crate::testkit::check("config section roundtrip", 120, 0xc0f6, 32, |c| {
+            let mut cfg = RunConfig::default();
+            cfg.sched = *c.rng.choice(&[SchedPolicy::Fifo, SchedPolicy::LongestPrefixFirst]);
+            cfg.kv.block_size = c.usize_in(1, 64);
+            cfg.kv.overcommit = (1 + c.rng.below(80)) as f64 / 16.0;
+            cfg.kv.preempt = *c.rng.choice(&[PreemptPolicy::None, PreemptPolicy::Youngest]);
+            cfg.kv.replay_batch = c.usize_in(1, 12);
+            cfg.checkpoint.every = c.usize_in(0, 9);
+            cfg.checkpoint.keep_last = c.usize_in(0, 5);
+            if c.rng.below(2) == 1 {
+                // occasionally exercise the escaping path (quotes are the
+                // one special character the minimal TOML subset supports)
+                let quirk = if c.rng.below(4) == 0 { "\"q\"" } else { "" };
+                cfg.checkpoint.dir = Some(format!("ckpt_dir_{}{quirk}", c.rng.below(100)));
+            }
+            if c.rng.below(2) == 1 {
+                cfg.checkpoint.resume_from = Some(format!("resume_{}", c.rng.below(100)));
+            }
+            cfg.elastic.enabled = c.rng.below(2) == 1;
+            cfg.elastic.min_actors = c.usize_in(1, 3);
+            cfg.elastic.max_actors = c.usize_in(3, 9);
+            cfg.elastic.max_restarts = c.usize_in(0, 200);
+            cfg.elastic.poll_ms = c.usize_in(1, 50) as u64;
+            cfg.elastic.migrate = c.rng.below(2) == 1;
+            cfg.elastic.trainer_failover = c.rng.below(2) == 1;
+            cfg.elastic.trainer_restarts = c.usize_in(1, 5);
+            cfg.autoscale.enabled = c.rng.below(2) == 1;
+            cfg.autoscale.backlog_per_actor = (1 + c.rng.below(64)) as f64 / 8.0;
+            cfg.autoscale.supply_high_frac = (1 + c.rng.below(16)) as f64 / 16.0;
+            cfg.autoscale.up_patience = c.usize_in(1, 9) as u32;
+            cfg.autoscale.down_patience = c.usize_in(1, 9) as u32;
+            cfg.autoscale.cooldown = c.usize_in(0, 9) as u32;
+            cfg.autoscale.max_lag_steps = c.rng.below(10) as f64;
+            cfg.autoscale.min_batch_fill = c.rng.below(16) as f64 / 16.0;
+            cfg.autoscale.eval_every_ms = c.usize_in(0, 100) as u64;
+
+            let text = cfg.sections_to_toml();
+            let doc = TomlDoc::parse(&text).map_err(|e| format!("emitted TOML: {e}"))?;
+            let back = RunConfig::from_doc(&doc).map_err(|e| format!("reparse: {e}"))?;
+            if back.sched != cfg.sched {
+                return Err(format!("[sched] drift: {:?} vs {:?}", back.sched, cfg.sched));
+            }
+            if back.kv != cfg.kv {
+                return Err(format!("[kv] drift: {:?} vs {:?}", back.kv, cfg.kv));
+            }
+            if back.checkpoint != cfg.checkpoint {
+                return Err(format!(
+                    "[checkpoint] drift: {:?} vs {:?}",
+                    back.checkpoint, cfg.checkpoint
+                ));
+            }
+            if back.elastic != cfg.elastic {
+                return Err(format!(
+                    "[elastic] drift: {:?} vs {:?}",
+                    back.elastic, cfg.elastic
+                ));
+            }
+            if back.autoscale != cfg.autoscale {
+                return Err(format!(
+                    "[autoscale] drift: {:?} vs {:?}",
+                    back.autoscale, cfg.autoscale
+                ));
+            }
+            // a second serialize must be byte-stable (no format drift)
+            if back.sections_to_toml() != text {
+                return Err("serialize → parse → serialize is not a fixpoint".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: the documented refusal messages for invalid combos.
+    #[test]
+    fn invalid_combos_fail_with_documented_messages() {
+        let mut cfg = RunConfig::default();
+        cfg.autoscale.enabled = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("autoscale requires the elastic actor pool"),
+            "documented autoscale-without-elastic message, got: {err}"
+        );
+
+        let mut cfg = RunConfig::default();
+        cfg.kv.replay_batch = 0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("kv.replay_batch must be >= 1"),
+            "documented replay_batch message, got: {err}"
+        );
     }
 
     #[test]

@@ -33,13 +33,15 @@ use super::actor::{run_actor, ActorArgs};
 use super::conv::ConvSync;
 use super::packing::TrainBatch;
 use super::preprocessor::{run_preprocessor, PreprocessorArgs};
-use super::supervisor::{run_supervisor, ActorPool, SpawnFn, SupervisorArgs};
-use super::trainer::{run_trainer, TrainerArgs};
+use super::supervisor::{
+    run_supervisor, ActorPool, SpawnFn, SupervisorArgs, TrainerSlot, TrainerSpawnFn,
+};
+use super::trainer::{run_trainer, TrainerArgs, TrainerExit};
 use super::warmup;
 use crate::broker::{topic, Policy};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::{MetricsHub, RunReport};
-use crate::model::checkpoint::TrainState;
+use crate::model::checkpoint::{read_manifest, TrainState};
 use crate::rl::Rollout;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sched::{AutoScaler, MigrationHub};
@@ -51,6 +53,15 @@ use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// True when an error chain bottoms out in io::ErrorKind::NotFound —
+/// the one load failure that legitimately means "no checkpoint has
+/// landed yet" on the trainer-failover respawn path.
+fn io_not_found(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound)
+}
 
 pub struct RunSummary {
     pub report: RunReport,
@@ -217,22 +228,94 @@ pub fn run_with_chaos(
         .name("preproc".into())
         .spawn(move || run_preprocessor(pre_args))?;
 
-    let trainer_args = TrainerArgs {
-        // on resume the trainer takes its params from the state instead;
-        // don't ship a third copy of the weights
-        initial_params: if resume.is_some() { Vec::new() } else { initial_params.clone() },
-        cfg: cfg.clone(),
-        batch_rx,
-        bus: bus.clone(),
-        hub: hub.clone(),
-        stop: stop.clone(),
-        conv: conv.clone(),
-        conv_groups,
-        resume,
-    };
-    let trainer_handle = std::thread::Builder::new()
-        .name("trainer".into())
-        .spawn(move || run_trainer(trainer_args))?;
+    // ---- trainer: orchestrator-owned thread (plain runs) or a
+    // supervisor-owned TrainerSlot (trainer failover: a killed/crashed
+    // trainer respawns from the latest checkpoint manifest without
+    // tearing the run down) ----
+    let failover = elastic && cfg.elastic.trainer_failover;
+    let mut trainer_slot: Option<TrainerSlot> = None;
+    let mut trainer_handle = None;
+    if failover {
+        let cfg_t = cfg.clone();
+        let bus_t = bus.clone();
+        let hub_t = hub.clone();
+        let stop_t = stop.clone();
+        let conv_t = conv.clone();
+        // Shared (not per-incarnation) copies of the start state: one
+        // clone at setup, reachable only by a respawn that lands before
+        // the first checkpoint. Deliberately retained for the whole run
+        // (one extra params copy + one TrainState on small models) —
+        // there is no in-process "first checkpoint landed" hook here,
+        // and a take-on-first-use scheme would either lose the state a
+        // pre-checkpoint respawn still needs or add a lock + panic path
+        // for a marginal win.
+        let initial_t: Arc<Vec<HostTensor>> =
+            Arc::new(if resume.is_some() { Vec::new() } else { initial_params.clone() });
+        let resume_t: Arc<Option<TrainState>> = Arc::new(resume);
+        let spawn: TrainerSpawnFn = Arc::new(move |ctx| {
+            // Respawns resume from the manifest. Only a genuinely absent
+            // *manifest* (no checkpoint has ever landed) falls back to
+            // the run's own start state — any other failure, including a
+            // readable manifest naming a missing state file, means
+            // checkpointed progress exists but cannot be recovered, and
+            // silently restarting from step 0 would discard the whole
+            // optimizer trajectory.
+            let resume_state = if ctx.resume_latest {
+                let dir = cfg_t
+                    .checkpoint
+                    .dir
+                    .as_ref()
+                    .expect("validated: trainer failover requires a checkpoint dir");
+                let dir = std::path::Path::new(dir);
+                match read_manifest(dir) {
+                    Err(e) if io_not_found(&e) => resume_t.as_ref().clone(),
+                    _ => Some(TrainState::load_resume(dir).context(
+                        "trainer failover: a checkpoint manifest exists but the \
+                         latest state cannot be loaded",
+                    )?),
+                }
+            } else {
+                resume_t.as_ref().clone()
+            };
+            run_trainer(TrainerArgs {
+                initial_params: if resume_state.is_some() {
+                    Vec::new()
+                } else {
+                    initial_t.as_ref().clone()
+                },
+                cfg: cfg_t.clone(),
+                batch_rx: batch_rx.clone(),
+                bus: bus_t.clone(),
+                hub: hub_t.clone(),
+                stop: stop_t.clone(),
+                halt: ctx.halt,
+                conv: conv_t.clone(),
+                conv_groups,
+                resume: resume_state,
+            })
+        });
+        trainer_slot = Some(TrainerSlot::new(spawn, cfg.elastic.trainer_restarts)?);
+    } else {
+        let trainer_args = TrainerArgs {
+            // on resume the trainer takes its params from the state
+            // instead; don't ship a third copy of the weights
+            initial_params: if resume.is_some() { Vec::new() } else { initial_params.clone() },
+            cfg: cfg.clone(),
+            batch_rx,
+            bus: bus.clone(),
+            hub: hub.clone(),
+            stop: stop.clone(),
+            halt: Arc::new(AtomicBool::new(false)), // nobody halts plain trainers
+            conv: conv.clone(),
+            conv_groups,
+            resume,
+        };
+        trainer_handle = Some(
+            std::thread::Builder::new()
+                .name("trainer".into())
+                .spawn(move || run_trainer(trainer_args))?,
+        );
+    }
 
     // The pool (via its SpawnFn) holds the rollout topic open from here
     // on; the supervisor's shutdown path closes it so the preprocessor
@@ -247,6 +330,7 @@ pub fn run_with_chaos(
         poll: Duration::from_millis(cfg.elastic.poll_ms.max(1)),
         migrate,
         autoscale,
+        trainer: trainer_slot,
     };
     let sup_handle = std::thread::Builder::new()
         .name("superv".into())
@@ -254,26 +338,51 @@ pub fn run_with_chaos(
     drop(rollout_tx);
 
     // ---- run to completion ----
-    // Join the trainer but raise `stop` and tear the other stages down
-    // *before* propagating any trainer error — otherwise a failing
-    // trainer (e.g. a resume/variant mismatch) would leak a supervisor
-    // that keeps restarting actors forever. Propagation order after
-    // that: trainer, preprocessor, supervisor — the supervisor's
-    // "pool died" escalation is usually a symptom, so upstream root
-    // causes surface first.
-    let trainer_out = trainer_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("trainer panicked"));
-    stop.store(true, Ordering::Relaxed);
-    let sup_out = sup_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("supervisor panicked"));
-    let pre_out = pre_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("preprocessor panicked"));
-    let final_params = trainer_out??;
-    pre_out??;
-    sup_out??;
+    let final_params = match trainer_handle {
+        // Plain runs: join the trainer but raise `stop` and tear the
+        // other stages down *before* propagating any trainer error —
+        // otherwise a failing trainer (e.g. a resume/variant mismatch)
+        // would leak a supervisor that keeps restarting actors forever.
+        // Propagation order after that: trainer, preprocessor,
+        // supervisor — the supervisor's "pool died" escalation is
+        // usually a symptom, so upstream root causes surface first.
+        Some(handle) => {
+            let trainer_out = handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("trainer panicked"));
+            stop.store(true, Ordering::Relaxed);
+            let sup_out = sup_handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("supervisor panicked"));
+            let pre_out = pre_handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("preprocessor panicked"));
+            let exit = trainer_out??;
+            pre_out??;
+            sup_out??;
+            match exit {
+                TrainerExit::Completed(params) => params,
+                TrainerExit::Halted => {
+                    anyhow::bail!("trainer halted without a supervisor-owned slot")
+                }
+            }
+        }
+        // Failover runs: the supervisor owns the trainer — it raises
+        // `stop` itself once the (possibly respawned) trainer completes
+        // and returns the final parameters.
+        None => {
+            let sup_out = sup_handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("supervisor panicked"));
+            stop.store(true, Ordering::Relaxed);
+            let pre_out = pre_handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("preprocessor panicked"));
+            let params = sup_out??;
+            pre_out??;
+            params.context("supervisor exited without the trainer's final parameters")?
+        }
+    };
 
     let wall = global_seconds() - t0;
     hub.add("wall_seconds", wall);

@@ -24,6 +24,13 @@
 //!   `pool_size`, `autoscale_ups`/`autoscale_downs`,
 //!   `migrations_completed` and `snapshot_tokens_salvaged` land in the
 //!   [`MetricsHub`] for scenario assertions.
+//! * [`TrainerSlot`] — supervisor-owned **trainer failover**
+//!   (`[elastic] trainer_failover`): a `ChaosKind::KillTrainer` event or
+//!   a trainer crash restarts the trainer *in process* from the latest
+//!   `AsyncCheckpointer` manifest state, within its own restart budget —
+//!   actors keep decoding and the topics stay open throughout
+//!   (`trainer_failovers` / `trainer_crashes` counters). The supervisor
+//!   then returns the (possibly respawned) trainer's final parameters.
 //!
 //! The pool is deliberately generic over a [`SpawnFn`] closure rather
 //! than hard-wired to [`super::actor::run_actor`]: the chaos tests drive
@@ -31,9 +38,11 @@
 //! kill/restart/hot-attach logic is exercised even in environments where
 //! the PJRT engine is unavailable.
 
+use super::trainer::TrainerExit;
 use crate::broker::Publisher;
 use crate::metrics::MetricsHub;
 use crate::rl::Rollout;
+use crate::runtime::HostTensor;
 use crate::sched::{AutoScaler, MigrationHub, ScaleDecision, ScaleSignals};
 use crate::testkit::chaos::{ChaosKind, ChaosSchedule};
 use crate::util::logging::Logger;
@@ -307,6 +316,138 @@ impl ActorPool {
     }
 }
 
+/// Identity handed to each trainer incarnation (the trainer analogue of
+/// [`ActorCtx`]).
+pub struct TrainerCtx {
+    /// restart count of the trainer slot (0 = first spawn)
+    pub generation: u64,
+    /// kill-switch for this incarnation only
+    pub halt: Arc<AtomicBool>,
+    /// respawns set this: resume from the latest checkpoint manifest
+    /// instead of the run's initial state
+    pub resume_latest: bool,
+}
+
+/// Trainer body. Must poll its `halt` (and the global stop) and return
+/// promptly when either is raised.
+pub type TrainerSpawnFn = Arc<dyn Fn(TrainerCtx) -> Result<TrainerExit> + Send + Sync + 'static>;
+
+/// A supervisor-owned trainer: the ROADMAP "trainer failover" follow-on.
+/// When the trainer is killed (`ChaosKind::KillTrainer`) or crashes, the
+/// supervisor respawns it with `resume_latest = true` — the replacement
+/// reloads the newest [`crate::model::checkpoint::TrainState`] named by
+/// the checkpoint manifest and continues the run *in process*: actors
+/// keep decoding, topics stay open, nothing is torn down. (The resumed
+/// trainer may republish versions below the bus's latest while it
+/// re-runs the steps since the last checkpoint; actors ignore versions
+/// they already have, so the republish window is harmless.)
+pub struct TrainerSlot {
+    spawn: TrainerSpawnFn,
+    halt: Arc<AtomicBool>,
+    join: Option<JoinHandle<Result<TrainerExit>>>,
+    generation: u64,
+    /// remaining failover budget (restarts after kills or crashes)
+    restarts_left: usize,
+    log: Logger,
+}
+
+impl TrainerSlot {
+    /// Spawn the first trainer incarnation with a failover budget.
+    pub fn new(spawn: TrainerSpawnFn, restart_budget: usize) -> Result<TrainerSlot> {
+        let mut slot = TrainerSlot {
+            spawn,
+            halt: Arc::new(AtomicBool::new(false)),
+            join: None,
+            generation: 0,
+            restarts_left: restart_budget,
+            log: Logger::new("trainslot"),
+        };
+        slot.spawn_incarnation(false)?;
+        Ok(slot)
+    }
+
+    fn spawn_incarnation(&mut self, resume_latest: bool) -> Result<()> {
+        self.halt = Arc::new(AtomicBool::new(false));
+        let ctx = TrainerCtx {
+            generation: self.generation,
+            halt: self.halt.clone(),
+            resume_latest,
+        };
+        let body = self.spawn.clone();
+        self.join = Some(
+            std::thread::Builder::new()
+                .name(format!("trainer.g{}", self.generation))
+                .spawn(move || body(ctx))
+                .context("spawning trainer")?,
+        );
+        Ok(())
+    }
+
+    /// True when a restart is still within budget.
+    fn can_restart(&self) -> bool {
+        self.restarts_left > 0
+    }
+
+    /// Kill the live incarnation (halt + join) and respawn a successor
+    /// that resumes from the latest checkpoint manifest. If the dying
+    /// incarnation had already *completed*, its final parameters are
+    /// returned instead and nothing is respawned — killing a finished
+    /// trainer is not a failover.
+    fn restart(&mut self) -> Result<Option<Vec<HostTensor>>> {
+        self.halt.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            match j.join() {
+                Ok(Ok(TrainerExit::Completed(params))) => return Ok(Some(params)),
+                Ok(Ok(TrainerExit::Halted)) => {}
+                // a kill racing a crash: the failover below covers both,
+                // but the dying incarnation's error — e.g. a checkpoint
+                // writer reporting broken recovery points — must not
+                // vanish silently
+                Ok(Err(e)) => self.log.warn(&format!(
+                    "trainer generation {} died during failover kill: {e:#}",
+                    self.generation
+                )),
+                Err(_) => self.log.warn(&format!(
+                    "trainer generation {} panicked during failover kill",
+                    self.generation
+                )),
+            }
+        }
+        self.restarts_left -= 1;
+        self.generation += 1;
+        self.spawn_incarnation(true)?;
+        Ok(None)
+    }
+
+    /// Non-blocking: collect the incarnation's exit if its thread has
+    /// finished.
+    fn poll(&mut self) -> Option<Result<TrainerExit>> {
+        if self.join.as_ref().is_some_and(|j| j.is_finished()) {
+            let j = self.join.take().expect("checked above");
+            return Some(match j.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("trainer panicked")),
+            });
+        }
+        None
+    }
+
+    /// Blocking teardown: join whatever incarnation is live (the global
+    /// stop is already raised, so it returns promptly) and surface its
+    /// final parameters / error.
+    fn finish(&mut self) -> Result<Option<Vec<HostTensor>>> {
+        match self.join.take() {
+            Some(j) => match j.join() {
+                Ok(Ok(TrainerExit::Completed(params))) => Ok(Some(params)),
+                Ok(Ok(TrainerExit::Halted)) => Ok(None),
+                Ok(Err(e)) => Err(e),
+                Err(_) => Err(anyhow::anyhow!("trainer panicked")),
+            },
+            None => Ok(None),
+        }
+    }
+}
+
 pub struct SupervisorArgs {
     pub pool: ActorPool,
     pub bus: WeightBus,
@@ -325,13 +466,21 @@ pub struct SupervisorArgs {
     /// signal-driven pool resize (replaces chaos-only resize); None =
     /// fixed topology outside chaos events
     pub autoscale: Option<AutoScaler>,
+    /// supervisor-owned trainer (trainer failover): the supervisor
+    /// restarts a killed/crashed trainer from the latest checkpoint
+    /// manifest and returns its final parameters. None = the orchestrator
+    /// owns the trainer thread (plain runs)
+    pub trainer: Option<TrainerSlot>,
 }
 
 /// Supervision loop. Runs until `stop` is raised (trainer done), then
 /// shuts the pool down. Chaos events fire once the weight bus's published
 /// version passes their step — the logical clock shared with the trainer
 /// — so a schedule replays in the same order on every run of its seed.
-pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
+///
+/// Returns the trainer's final parameters when the supervisor owns the
+/// trainer slot (trainer failover mode), None otherwise.
+pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
     let SupervisorArgs {
         mut pool,
         bus,
@@ -342,7 +491,9 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
         poll,
         migrate,
         mut autoscale,
+        mut trainer,
     } = args;
+    let mut final_params: Option<Vec<HostTensor>> = None;
     let log = Logger::new("superv");
     let events = schedule
         .as_ref()
@@ -386,14 +537,14 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                 ChaosKind::RestartActor => {
                     if let Some(id) = pool.lowest_live() {
                         if let Err(e) = pool.restart_actor(id) {
-                            unwind_pool(pool, &stop, &hub, &migrate);
+                            unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
                             return Err(e);
                         }
                     }
                 }
                 ChaosKind::AddActor => {
                     if let Err(e) = pool.add_actor() {
-                        unwind_pool(pool, &stop, &hub, &migrate);
+                        unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
                         return Err(e);
                     }
                 }
@@ -420,6 +571,46 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                             ev.at_step,
                         ));
                         hub.add("chaos_corrupt_snapshots_injected", 1.0);
+                    }
+                }
+                ChaosKind::KillTrainer => {
+                    // trainer failover: halt + join the live incarnation
+                    // and respawn it from the latest checkpoint manifest
+                    // — the run (actors, topics, migration hub) is never
+                    // torn down. No-op without a supervisor-owned trainer
+                    // or once the failover budget is spent.
+                    match trainer.as_ref().map(|s| s.can_restart()) {
+                        Some(true) => {
+                            let res =
+                                trainer.as_mut().expect("slot present").restart();
+                            match res {
+                                Ok(Some(params)) => {
+                                    // the kill raced completion: the run
+                                    // is simply done
+                                    final_params = Some(params);
+                                    stop.store(true, Ordering::Relaxed);
+                                }
+                                Ok(None) => {
+                                    hub.add("trainer_failovers", 1.0);
+                                    log.info(
+                                        "trainer killed; failover from the \
+                                         latest checkpoint manifest",
+                                    );
+                                }
+                                Err(e) => {
+                                    unwind_pool(
+                                        pool, &stop, &hub, &migrate, trainer.take(),
+                                    );
+                                    return Err(e);
+                                }
+                            }
+                        }
+                        Some(false) => {
+                            log.warn("kill-trainer skipped: failover budget spent")
+                        }
+                        None => {
+                            log.info("kill-trainer no-op: no supervisor-owned trainer")
+                        }
                     }
                 }
             }
@@ -472,7 +663,7 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                             // spawn failure (resource exhaustion): unwind
                             // like the fail-fast reap path so live actors
                             // halt and the migration books still close
-                            unwind_pool(pool, &stop, &hub, &migrate);
+                            unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
                             return Err(e);
                         }
                     },
@@ -506,10 +697,53 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                 }
             }
         }
+        // supervisor-owned trainer: completion stops the run; a crash
+        // fails over to the latest checkpoint within the restart budget
+        match trainer.as_mut().and_then(|s| s.poll()) {
+            None => {}
+            Some(Ok(TrainerExit::Completed(params))) => {
+                final_params = Some(params);
+                stop.store(true, Ordering::Relaxed);
+            }
+            Some(outcome) => {
+                let why = match outcome {
+                    Ok(TrainerExit::Halted) => {
+                        anyhow::anyhow!("trainer halted outside a supervisor restart")
+                    }
+                    Err(e) => e,
+                    Ok(TrainerExit::Completed(_)) => unreachable!("handled above"),
+                };
+                hub.add("trainer_crashes", 1.0);
+                log.warn(&format!("trainer died: {why:#}"));
+                if trainer.as_ref().is_some_and(|s| s.can_restart()) {
+                    let res = trainer.as_mut().expect("slot present").restart();
+                    match res {
+                        Ok(Some(params)) => {
+                            final_params = Some(params);
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                        Ok(None) => {
+                            hub.add("trainer_failovers", 1.0);
+                            log.info(
+                                "trainer crash failover: resumed from the latest \
+                                 checkpoint manifest",
+                            );
+                        }
+                        Err(e) => {
+                            unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
+                            return Err(e);
+                        }
+                    }
+                } else {
+                    unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
+                    return Err(why);
+                }
+            }
+        }
         if let Err(e) = pool.reap() {
             // fail-fast crash (plain runs): unwind the whole topology
             // before surfacing the actor's error
-            unwind_pool(pool, &stop, &hub, &migrate);
+            unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
             return Err(e);
         }
         hub.set("pool_size", pool.len() as f64);
@@ -520,7 +754,7 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
                 .last_crash()
                 .map(str::to_string)
                 .unwrap_or_else(|| "all actors exited".into());
-            unwind_pool(pool, &stop, &hub, &migrate);
+            unwind_pool(pool, &stop, &hub, &migrate, trainer.take());
             anyhow::bail!("actor pool has no live actors left ({why})");
         }
         if stopping {
@@ -528,25 +762,39 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<()> {
         }
         std::thread::sleep(poll);
     }
+    // trainer teardown first: stop is raised, so a live incarnation
+    // returns promptly, and its error — the likely root cause — outranks
+    // pool-shutdown noise
+    let trainer_res = match &mut trainer {
+        Some(slot) => slot.finish(),
+        None => Ok(None),
+    };
     let out = pool.shutdown();
     discard_leftover_snapshots(&hub, &migrate);
-    out
+    let joined = trainer_res?;
+    out?;
+    Ok(final_params.or(joined))
     // rollout_tx (and the pool's SpawnFn publisher clone) drop here,
     // closing the topic so the preprocessor drains and exits.
 }
 
-/// Fail-path teardown: raise `stop`, halt + join every actor, close the
-/// migration books. Every error exit from [`run_supervisor`] must go
-/// through here (the normal exit runs the same sequence inline at the
-/// tail) so `deposited == claimed + discarded` holds even on failed runs
-/// — where the accounting matters most.
+/// Fail-path teardown: raise `stop`, join the supervisor-owned trainer
+/// (if any), halt + join every actor, close the migration books. Every
+/// error exit from [`run_supervisor`] must go through here (the normal
+/// exit runs the same sequence inline at the tail) so `deposited ==
+/// claimed + discarded` holds even on failed runs — where the accounting
+/// matters most.
 fn unwind_pool(
     pool: ActorPool,
     stop: &Arc<AtomicBool>,
     hub: &MetricsHub,
     migrate: &Option<Arc<MigrationHub>>,
+    trainer: Option<TrainerSlot>,
 ) {
     stop.store(true, Ordering::Relaxed);
+    if let Some(mut slot) = trainer {
+        slot.finish().ok();
+    }
     pool.shutdown().ok();
     discard_leftover_snapshots(hub, migrate);
 }

@@ -48,6 +48,10 @@ pub struct TrainerArgs {
     pub bus: WeightBus,
     pub hub: MetricsHub,
     pub stop: Arc<AtomicBool>,
+    /// kill-switch for this trainer *incarnation* only (supervisor-driven
+    /// failover: the run keeps going while a replacement resumes from the
+    /// latest checkpoint). Plain runs pass a flag nobody raises.
+    pub halt: Arc<AtomicBool>,
     pub conv: Option<Arc<ConvSync>>,
     /// groups per conventional Generate phase (quota)
     pub conv_groups: usize,
@@ -55,10 +59,22 @@ pub struct TrainerArgs {
     pub resume: Option<TrainState>,
 }
 
-/// Returns the final parameters.
-pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
+/// How a trainer incarnation ended.
+#[derive(Debug)]
+pub enum TrainerExit {
+    /// ran to completion (all steps, run stop, or upstream close): the
+    /// final parameters
+    Completed(Vec<HostTensor>),
+    /// this incarnation's halt switch was raised (trainer failover): the
+    /// checkpoint writer was drained, so the supervisor can respawn from
+    /// the latest manifest
+    Halted,
+}
+
+/// Returns how the incarnation ended (final parameters on completion).
+pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
     let TrainerArgs {
-        cfg, initial_params, batch_rx, bus, hub, stop, conv, conv_groups, resume,
+        cfg, initial_params, batch_rx, bus, hub, stop, halt, conv, conv_groups, resume,
     } = args;
     let log = Logger::new("trainer");
     let mut rt = Runtime::new().context("trainer runtime")?;
@@ -119,13 +135,21 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
         let batch = loop {
             if stop.load(Ordering::Relaxed) {
                 finish_checkpoints(ckpt.take(), &hub)?;
-                return Ok(params);
+                return Ok(TrainerExit::Completed(params));
+            }
+            if halt.load(Ordering::Relaxed) {
+                // failover kill: drain the checkpoint writer so the
+                // freshest durable state is on disk, then step aside —
+                // the supervisor respawns a successor from the manifest
+                log.info(&format!("halted at step {step} (trainer failover)"));
+                finish_checkpoints(ckpt.take(), &hub)?;
+                return Ok(TrainerExit::Halted);
             }
             match batch_rx.recv(Duration::from_millis(200)) {
                 Ok(b) => break b,
                 Err(RecvError::Closed) => {
                     finish_checkpoints(ckpt.take(), &hub)?;
-                    return Ok(params);
+                    return Ok(TrainerExit::Completed(params));
                 }
                 Err(RecvError::Timeout) => continue,
             }
@@ -268,7 +292,12 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
                     opt_v: v.clone(),
                     samples_total,
                     tokens_total,
-                    rng: [0; 4], // trainer owns no RNG; harnesses fill this
+                    // the real trainer owns no RNG and no engine; the
+                    // deterministic harnesses (tests/checkpoint_resume.rs,
+                    // testkit::golden) fill these cursors
+                    rng: [0; 4],
+                    engine_rng: [0; 4],
+                    sched_cursor: 0,
                 });
                 hub.add("checkpoints_submitted", 1.0);
             }
@@ -279,7 +308,7 @@ pub fn run_trainer(args: TrainerArgs) -> Result<Vec<HostTensor>> {
         "training done: {} steps, {} samples",
         cfg.rl_steps, samples_total
     ));
-    Ok(params)
+    Ok(TrainerExit::Completed(params))
 }
 
 /// Drain + join the async checkpoint writer and record its books. Every

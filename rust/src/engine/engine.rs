@@ -291,6 +291,54 @@ impl Engine {
         self.scheduler.name()
     }
 
+    // ---- deterministic-resume cursors (PRLCKPT3) ----
+    //
+    // Together these two cursors are the engine's contribution to a
+    // full-run bit-identical resume: the sampling-RNG cursor continues
+    // the exact Gumbel stream, and the admission cursor keeps local
+    // sequence ids (and therefore admission order and victim tie-breaks)
+    // collision-free across the restart. Checkpoint harnesses carry them
+    // in `TrainState::{engine_rng, sched_cursor}`.
+
+    /// The sampling-RNG cursor ([`crate::util::Rng::state_words`]).
+    pub fn rng_words(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore the sampling stream from a saved cursor. Refuses the
+    /// all-zero cursor: that is the PRLCKPT2-compat sentinel for "this
+    /// state carries no engine cursor", and a zero PCG state is
+    /// degenerate (a constant stream; `below()` would spin forever).
+    pub fn restore_rng(&mut self, words: [u64; 4]) -> Result<()> {
+        ensure!(
+            words != [0u64; 4],
+            "all-zero engine RNG cursor (a PRLCKPT2-era state?) — refusing a \
+             degenerate sampling stream"
+        );
+        self.rng = Rng::from_state_words(words);
+        Ok(())
+    }
+
+    /// The scheduler admission cursor: the next local sequence id (==
+    /// sequences ever enqueued on this engine).
+    pub fn admission_cursor(&self) -> u64 {
+        self.next_seq_id
+    }
+
+    /// Restore the admission cursor. Refuses to move backwards — a
+    /// rewound cursor would hand out ids that collide with sequences
+    /// already tracked by the allocator and scheduler.
+    pub fn restore_admission_cursor(&mut self, cursor: u64) -> Result<()> {
+        ensure!(
+            cursor >= self.next_seq_id,
+            "admission cursor {} would rewind below the engine's next id {}",
+            cursor,
+            self.next_seq_id
+        );
+        self.next_seq_id = cursor;
+        Ok(())
+    }
+
     // ---- KV-memory pressure (the allocator's live accounting) ----
 
     pub fn kv_total_blocks(&self) -> usize {

@@ -3,7 +3,7 @@
 //! Own compact binary format (offline env — no serde/safetensors):
 //!
 //! ```text
-//! magic  "PRLCKPT1" / "PRLCKPT2"          8 bytes
+//! magic  "PRLCKPT1" / "PRLCKPT2" / "PRLCKPT3"   8 bytes
 //! meta   u32 json_len, json bytes         variant name, step, tensor index
 //! data   for each tensor: f32 LE values   (shapes live in the json index)
 //! ```
@@ -12,11 +12,17 @@
 //!
 //! * [`Checkpoint`] (`PRLCKPT1`) — parameters only. Portable export used
 //!   by `pipeline-rl eval` and anything that just needs weights.
-//! * [`TrainState`] (`PRLCKPT2`) — the trainer's **full resume state**:
-//!   parameters, both Adam moments, the sample/token counters and an RNG
-//!   cursor. A run resumed from a `TrainState` continues the optimizer
-//!   trajectory exactly (see tests/checkpoint_resume.rs for the
-//!   bit-identity property).
+//! * [`TrainState`] (`PRLCKPT3`, reading `PRLCKPT2` too) — the trainer's
+//!   **full resume state**: parameters, both Adam moments, the
+//!   sample/token counters and an RNG cursor. `PRLCKPT3` additionally
+//!   carries the *generation-side* cursors — the engine sampling-RNG
+//!   cursor and the scheduler admission cursor — which is what extends
+//!   bit-identical resume from the optimizer trajectory to whole
+//!   deterministic runs (see `testkit::golden` and tests/determinism.rs).
+//!   A `PRLCKPT2` file loads with those cursors zeroed, so pre-existing
+//!   checkpoints stay readable. A run resumed from a `TrainState`
+//!   continues the optimizer trajectory exactly (see
+//!   tests/checkpoint_resume.rs for the bit-identity property).
 //!
 //! `TrainState::save_with_manifest` additionally maintains a
 //! `manifest.json` in the checkpoint directory (latest + history with
@@ -40,7 +46,27 @@ use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"PRLCKPT1";
 const MAGIC_STATE: &[u8; 8] = b"PRLCKPT2";
+const MAGIC_STATE3: &[u8; 8] = b"PRLCKPT3";
 const MANIFEST: &str = "manifest.json";
+
+/// Write-path crash injection for the checkpoint durability property
+/// (tests/checkpoint_resume.rs): abort the save at one specific stage of
+/// the submit → write → fsync → rename protocol, leaving on disk exactly
+/// what a crash at that point would. "Crash before fsync" is modeled by
+/// truncating the file tail — the page-cache bytes a real crash loses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptFault {
+    /// die mid-way through writing the state file (torn state)
+    StateWrite,
+    /// state bytes fully written but the fsync never ran
+    StateFsync,
+    /// die mid-way through writing the manifest sidecar
+    ManifestWrite,
+    /// manifest sidecar written but its fsync never ran
+    ManifestFsync,
+    /// durable sidecar, but the rename into place never happened
+    ManifestRename,
+}
 
 fn shapes_json(tensors: &[HostTensor]) -> Json {
     Json::Arr(
@@ -130,8 +156,9 @@ impl Checkpoint {
     }
 }
 
-/// Full trainer resume state (`PRLCKPT2`): everything the trainer needs
-/// to continue a run as if it had never stopped.
+/// Full trainer resume state (`PRLCKPT3`; `PRLCKPT2` still loads with
+/// the generation-side cursors zeroed): everything the trainer needs to
+/// continue a run as if it had never stopped.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainState {
     pub variant: String,
@@ -144,9 +171,20 @@ pub struct TrainState {
     pub opt_v: Vec<HostTensor>,
     pub samples_total: f64,
     pub tokens_total: f64,
-    /// RNG cursor ([`crate::util::Rng::state_words`]) for deterministic
-    /// replay harnesses; all-zero when the producer owns no RNG.
+    /// trainer RNG cursor ([`crate::util::Rng::state_words`]) for
+    /// deterministic replay harnesses; all-zero when the producer owns no
+    /// RNG.
     pub rng: [u64; 4],
+    /// generation-side sampling/admission RNG cursor (the engine's
+    /// stream): restoring it makes a resumed run draw the exact same
+    /// prompts/samples the uninterrupted run would have (PRLCKPT3;
+    /// all-zero when loaded from a PRLCKPT2 file).
+    pub engine_rng: [u64; 4],
+    /// scheduler admission cursor — how many sequences were ever admitted
+    /// (the engine's next local sequence id). Restoring it keeps local
+    /// ids and admission order collision-free across a full-run resume
+    /// (PRLCKPT3; zero when loaded from a PRLCKPT2 file).
+    pub sched_cursor: u64,
 }
 
 impl TrainState {
@@ -156,20 +194,27 @@ impl TrainState {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_faulted(path, None)
+    }
+
+    /// [`TrainState::save`] with an optional injected crash (see
+    /// [`CkptFault`]). Test-facing: the durability property drives every
+    /// stage of the write protocol through this hook.
+    pub fn save_faulted(&self, path: &Path, fault: Option<CkptFault>) -> Result<()> {
+        fn hex_words(w: &[u64; 4]) -> Json {
+            // full-width u64 words: hex strings, f64 would truncate
+            Json::Arr(w.iter().map(|w| Json::Str(format!("{w:016x}"))).collect())
+        }
         let index = Json::Obj(vec![
             ("variant".into(), Json::Str(self.variant.clone())),
             ("step".into(), Json::Num(self.step as f64)),
             ("samples_total".into(), Json::Num(self.samples_total)),
             ("tokens_total".into(), Json::Num(self.tokens_total)),
-            // full-width u64 words: hex strings, f64 would truncate
+            ("rng".into(), hex_words(&self.rng)),
+            ("engine_rng".into(), hex_words(&self.engine_rng)),
             (
-                "rng".into(),
-                Json::Arr(
-                    self.rng
-                        .iter()
-                        .map(|w| Json::Str(format!("{w:016x}")))
-                        .collect(),
-                ),
+                "sched_cursor".into(),
+                Json::Str(format!("{:016x}", self.sched_cursor)),
             ),
             ("params".into(), shapes_json(&self.params)),
             ("opt_m".into(), shapes_json(&self.opt_m)),
@@ -180,10 +225,16 @@ impl TrainState {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC_STATE)?;
+        f.write_all(MAGIC_STATE3)?;
         f.write_all(&(meta.len() as u32).to_le_bytes())?;
         f.write_all(&meta)?;
         write_tensor_data(&mut f, &self.params)?;
+        if fault == Some(CkptFault::StateWrite) {
+            // die mid-write: flush what the kernel already has, skip the
+            // rest — a torn state file with no fsync and no manifest entry
+            f.flush()?;
+            bail!("injected crash: state write torn at {path:?}");
+        }
         write_tensor_data(&mut f, &self.opt_m)?;
         write_tensor_data(&mut f, &self.opt_v)?;
         // durability before visibility: the state file is fsynced here,
@@ -191,6 +242,13 @@ impl TrainState {
         // — a crash mid-write can never leave the manifest naming a
         // torn state
         f.flush()?;
+        if fault == Some(CkptFault::StateFsync) {
+            // crash before the fsync: the tail of the write never left the
+            // page cache
+            let len = f.get_ref().metadata()?.len();
+            f.get_ref().set_len(len.saturating_sub(8))?;
+            bail!("injected crash: state file never fsynced at {path:?}");
+        }
         f.get_ref().sync_all()?;
         Ok(())
     }
@@ -201,27 +259,44 @@ impl TrainState {
         );
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC_STATE {
-            bail!("{path:?} is not a PipelineRL train state (PRLCKPT2)");
+        let v3 = &magic == MAGIC_STATE3;
+        if !v3 && &magic != MAGIC_STATE {
+            bail!("{path:?} is not a PipelineRL train state (PRLCKPT2/PRLCKPT3)");
         }
         let mut len4 = [0u8; 4];
         f.read_exact(&mut len4)?;
         let mut meta = vec![0u8; u32::from_le_bytes(len4) as usize];
         f.read_exact(&mut meta)?;
         let j = Json::parse(std::str::from_utf8(&meta)?)?;
-        let words = j.req("rng")?.as_arr()?;
-        if words.len() != 4 {
-            bail!(
-                "{path:?}: rng cursor must be 4 words, found {} — refusing a \
-                 state that would silently break deterministic resume",
-                words.len()
-            );
-        }
-        let mut rng = [0u64; 4];
-        for (i, w) in words.iter().enumerate() {
-            rng[i] = u64::from_str_radix(w.as_str()?, 16)
-                .context("rng cursor must be a hex word")?;
-        }
+        let read_words = |j: &Json, key: &str| -> Result<[u64; 4]> {
+            let words = j.req(key)?.as_arr()?;
+            if words.len() != 4 {
+                bail!(
+                    "{path:?}: {key} cursor must be 4 words, found {} — refusing a \
+                     state that would silently break deterministic resume",
+                    words.len()
+                );
+            }
+            let mut out = [0u64; 4];
+            for (i, w) in words.iter().enumerate() {
+                out[i] = u64::from_str_radix(w.as_str()?, 16)
+                    .with_context(|| format!("{key} cursor must be a hex word"))?;
+            }
+            Ok(out)
+        };
+        let rng = read_words(&j, "rng")?;
+        // generation-side cursors: mandatory in PRLCKPT3, zeroed for a
+        // legacy PRLCKPT2 file (which never carried them)
+        let (engine_rng, sched_cursor) = if v3 {
+            let cursor = j.req("sched_cursor")?.as_str()?;
+            (
+                read_words(&j, "engine_rng")?,
+                u64::from_str_radix(cursor, 16)
+                    .context("sched_cursor must be a hex word")?,
+            )
+        } else {
+            ([0u64; 4], 0)
+        };
         let params = read_tensor_list(&mut f, j.req("params")?)?;
         let opt_m = read_tensor_list(&mut f, j.req("opt_m")?)?;
         let opt_v = read_tensor_list(&mut f, j.req("opt_v")?)?;
@@ -231,6 +306,8 @@ impl TrainState {
             samples_total: j.req("samples_total")?.as_f64()?,
             tokens_total: j.req("tokens_total")?.as_f64()?,
             rng,
+            engine_rng,
+            sched_cursor,
             params,
             opt_m,
             opt_v,
@@ -241,18 +318,34 @@ impl TrainState {
     /// (latest pointer + history). With `keep_last > 0`, prunes the oldest
     /// state files beyond the window. Returns the state file path.
     pub fn save_with_manifest(&self, dir: &Path, keep_last: usize) -> Result<PathBuf> {
+        self.save_with_manifest_faulted(dir, keep_last, None)
+    }
+
+    /// [`TrainState::save_with_manifest`] with an optional injected crash
+    /// at one stage of the write protocol (see [`CkptFault`]). The
+    /// durability invariant under test: *no matter where the crash lands,
+    /// the manifest on disk only ever names fully-fsynced state files.*
+    /// That is why pruning runs strictly **after** the manifest rename —
+    /// deleting old states first would leave a crash window in which the
+    /// still-current manifest names files that no longer exist.
+    pub fn save_with_manifest_faulted(
+        &self,
+        dir: &Path,
+        keep_last: usize,
+        fault: Option<CkptFault>,
+    ) -> Result<PathBuf> {
         std::fs::create_dir_all(dir)?;
         let name = Self::file_name(self.step);
         let path = dir.join(&name);
-        self.save(&path)?;
+        self.save_faulted(&path, fault)?;
 
         let mut history = read_manifest(dir).map(|(_, h)| h).unwrap_or_default();
         history.retain(|h| h != &name);
         history.push(name.clone());
+        let mut prune = Vec::new();
         if keep_last > 0 {
             while history.len() > keep_last {
-                let victim = history.remove(0);
-                std::fs::remove_file(dir.join(&victim)).ok();
+                prune.push(history.remove(0));
             }
         }
         let manifest = Json::Obj(vec![
@@ -267,11 +360,29 @@ impl TrainState {
         // readers only ever see a complete manifest naming fsynced states
         let tmp = dir.join(format!("{MANIFEST}.tmp"));
         {
+            let bytes = manifest.to_string_compact().into_bytes();
             let mut tf = std::fs::File::create(&tmp)?;
-            tf.write_all(manifest.to_string_compact().as_bytes())?;
+            if fault == Some(CkptFault::ManifestWrite) {
+                tf.write_all(&bytes[..bytes.len() / 2])?;
+                bail!("injected crash: manifest sidecar torn in {dir:?}");
+            }
+            tf.write_all(&bytes)?;
+            if fault == Some(CkptFault::ManifestFsync) {
+                tf.set_len(bytes.len().saturating_sub(4) as u64)?;
+                bail!("injected crash: manifest sidecar never fsynced in {dir:?}");
+            }
             tf.sync_all()?;
         }
+        if fault == Some(CkptFault::ManifestRename) {
+            bail!("injected crash: manifest rename never happened in {dir:?}");
+        }
         std::fs::rename(&tmp, dir.join(MANIFEST))?;
+        // prune only once the new manifest is durable: until the rename
+        // lands, the *old* manifest is authoritative and must keep naming
+        // files that exist
+        for victim in prune {
+            std::fs::remove_file(dir.join(&victim)).ok();
+        }
         Ok(path)
     }
 
@@ -293,12 +404,13 @@ impl TrainState {
     }
 }
 
-/// Load parameters from either record type: a `TrainState` (PRLCKPT2,
-/// what the trainer writes) or a params-only `Checkpoint` (PRLCKPT1).
-/// Returns (variant, step, params). Dispatches on the file magic so a
-/// damaged file of either format reports its real parse error instead
-/// of a misleading wrong-format message. The `pipeline-rl eval` path
-/// and any external consumer should use this instead of guessing.
+/// Load parameters from either record type: a `TrainState` (PRLCKPT3 or
+/// the older PRLCKPT2, what the trainer writes) or a params-only
+/// `Checkpoint` (PRLCKPT1). Returns (variant, step, params). Dispatches
+/// on the file magic so a damaged file of either format reports its real
+/// parse error instead of a misleading wrong-format message. The
+/// `pipeline-rl eval` path and any external consumer should use this
+/// instead of guessing.
 pub fn load_params_any(path: &Path) -> Result<(String, u64, Vec<HostTensor>)> {
     let mut magic = [0u8; 8];
     {
@@ -306,7 +418,7 @@ pub fn load_params_any(path: &Path) -> Result<(String, u64, Vec<HostTensor>)> {
         f.read_exact(&mut magic)
             .with_context(|| format!("{path:?} is too short to be a checkpoint"))?;
     }
-    if &magic == MAGIC_STATE {
+    if &magic == MAGIC_STATE || &magic == MAGIC_STATE3 {
         let st = TrainState::load(path)?;
         Ok((st.variant, st.step, st.params))
     } else {
@@ -332,6 +444,9 @@ struct CkptPending {
     written: u64,
     superseded: u64,
     last_err: Option<String>,
+    /// crash injection for the durability property: consumed by the
+    /// writer's next save
+    fault_next: Option<CkptFault>,
 }
 
 struct CkptShared {
@@ -369,11 +484,11 @@ impl AsyncCheckpointer {
         let join = std::thread::Builder::new()
             .name("ckpt-writer".into())
             .spawn(move || loop {
-                let st = {
+                let (st, fault) = {
                     let mut g = worker.pending.lock().unwrap();
                     loop {
                         if let Some(st) = g.next.take() {
-                            break st;
+                            break (st, g.fault_next.take());
                         }
                         if g.closing {
                             return;
@@ -381,7 +496,7 @@ impl AsyncCheckpointer {
                         g = worker.cv.wait(g).unwrap();
                     }
                 };
-                let res = st.save_with_manifest(&dir, keep_last);
+                let res = st.save_with_manifest_faulted(&dir, keep_last, fault);
                 let mut g = worker.pending.lock().unwrap();
                 match res {
                     Ok(_) => g.written += 1,
@@ -402,6 +517,13 @@ impl AsyncCheckpointer {
             g.superseded += 1;
         }
         self.shared.cv.notify_all();
+    }
+
+    /// Inject a crash ([`CkptFault`]) into the writer's *next* save —
+    /// the durability property drives every stage of the submit → write
+    /// → fsync → rename protocol through this.
+    pub fn inject_fault_next(&self, fault: CkptFault) {
+        self.shared.pending.lock().unwrap().fault_next = Some(fault);
     }
 
     /// Drain the queue, stop the writer and join it. Returns the write
@@ -441,7 +563,10 @@ impl Drop for AsyncCheckpointer {
     }
 }
 
-fn read_manifest(dir: &Path) -> Result<(String, Vec<String>)> {
+/// Read `dir/manifest.json`: (latest state file name, full history).
+/// Public so durability tests (and external tooling) can audit exactly
+/// what the manifest claims without going through a full state load.
+pub fn read_manifest(dir: &Path) -> Result<(String, Vec<String>)> {
     let text = std::fs::read_to_string(dir.join(MANIFEST))?;
     let j = Json::parse(&text)?;
     let latest = j.req("latest")?.as_str()?.to_string();
@@ -488,7 +613,71 @@ mod tests {
             samples_total: 128.0 * step as f64,
             tokens_total: 4096.0 * step as f64,
             rng: [u64::MAX, 0x0123_4567_89ab_cdef, 1, 0],
+            engine_rng: [0xfeed_f00d, u64::MAX - 1, 7, step],
+            sched_cursor: 40 + step,
         }
+    }
+
+    /// Hand-written PRLCKPT2 writer (the pre-cursor format): what an old
+    /// checkpoint on disk looks like to the new loader.
+    fn write_legacy_v2(st: &TrainState, path: &Path) {
+        let index = Json::Obj(vec![
+            ("variant".into(), Json::Str(st.variant.clone())),
+            ("step".into(), Json::Num(st.step as f64)),
+            ("samples_total".into(), Json::Num(st.samples_total)),
+            ("tokens_total".into(), Json::Num(st.tokens_total)),
+            (
+                "rng".into(),
+                Json::Arr(st.rng.iter().map(|w| Json::Str(format!("{w:016x}"))).collect()),
+            ),
+            ("params".into(), shapes_json(&st.params)),
+            ("opt_m".into(), shapes_json(&st.opt_m)),
+            ("opt_v".into(), shapes_json(&st.opt_v)),
+        ]);
+        let meta = index.to_string_compact().into_bytes();
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(MAGIC_STATE).unwrap();
+        f.write_all(&(meta.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&meta).unwrap();
+        write_tensor_data(&mut f, &st.params).unwrap();
+        write_tensor_data(&mut f, &st.opt_m).unwrap();
+        write_tensor_data(&mut f, &st.opt_v).unwrap();
+        f.flush().unwrap();
+    }
+
+    #[test]
+    fn legacy_prlckpt2_loads_with_zeroed_cursors() {
+        let dir = std::env::temp_dir().join(format!("prl_v2_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let st = state(3, 2.0);
+        let path = dir.join("legacy.state");
+        write_legacy_v2(&st, &path);
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back.params, st.params, "tensor payload identical");
+        assert_eq!(back.rng, st.rng, "trainer cursor identical");
+        assert_eq!(back.engine_rng, [0u64; 4], "v2 carries no engine cursor");
+        assert_eq!(back.sched_cursor, 0, "v2 carries no admission cursor");
+        // load_params_any dispatches on the v2 magic too
+        let (variant, step, params) = load_params_any(&path).unwrap();
+        assert_eq!((variant.as_str(), step), ("tiny", 3));
+        assert_eq!(params, st.params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_roundtrips_generation_cursors() {
+        let dir = std::env::temp_dir().join(format!("prl_v3_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let st = state(9, 1.5);
+        let path = dir.join(TrainState::file_name(9));
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back, st, "PRLCKPT3 carries the generation cursors bit-exactly");
+        let (variant, step, params) = load_params_any(&path).unwrap();
+        assert_eq!((variant.as_str(), step), ("tiny", 9));
+        assert_eq!(params, st.params);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -64,14 +64,20 @@ impl PreemptPolicy {
         }
     }
 
-    /// Shared victim rule used by the built-in schedulers.
+    /// Shared victim rule used by the built-in schedulers. Final
+    /// tie-break is the sequence's *local id*, not its slot index: slot
+    /// placement depends on admission interleaving (which slot freed
+    /// first), so an index tie-break would pick different victims across
+    /// otherwise-identical runs — the id makes victim choice a pure
+    /// function of the sequence set, which is what replay-stable chaos
+    /// runs (tests/determinism.rs) assert.
     fn pick(&self, active: &[SeqView]) -> Option<usize> {
         match self {
             PreemptPolicy::None => None,
             PreemptPolicy::Youngest => active
                 .iter()
                 .enumerate()
-                .min_by_key(|(i, v)| (v.gen_len, v.total_len, *i))
+                .min_by_key(|(_, v)| (v.gen_len, v.total_len, v.seq_id))
                 .map(|(i, _)| i),
         }
     }
@@ -289,6 +295,29 @@ mod tests {
         // the stalled sequence itself is a legitimate victim
         let active = vec![view(1, 20, 0), view(2, 12, 5)];
         assert_eq!(s.pick_victim(&active, 0), Some(0));
+    }
+
+    #[test]
+    fn preempt_youngest_tiebreak_is_admission_order_invariant() {
+        // regression: identical (gen_len, total_len) ties used to break on
+        // the slot index, so the victim depended on which slot each
+        // sequence happened to land in. The id tie-break makes the choice
+        // a pure function of the sequence set: every permutation of the
+        // active array must name the same victim sequence.
+        let mut s = Fifo { preempt: PreemptPolicy::Youngest };
+        let a = SeqView { seq_id: 31, group_id: 1, total_len: 12, gen_len: 2 };
+        let b = SeqView { seq_id: 17, group_id: 2, total_len: 12, gen_len: 2 };
+        let c = SeqView { seq_id: 54, group_id: 3, total_len: 12, gen_len: 2 };
+        let perms: [[SeqView; 3]; 6] = [
+            [a, b, c], [a, c, b], [b, a, c], [b, c, a], [c, a, b], [c, b, a],
+        ];
+        for p in perms {
+            let vi = s.pick_victim(&p, 0).expect("youngest always names a victim");
+            assert_eq!(
+                p[vi].seq_id, 17,
+                "victim must be the lowest-id tied sequence regardless of slot order"
+            );
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use crate::metrics::Series;
 use crate::perfmodel::AccelModel;
 use crate::sched::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
+use crate::testkit::golden::{DigestEvent, EventLog, RunDigest};
 use crate::util::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -89,6 +90,12 @@ pub struct SimCfg {
     /// memory pressure feeds the autoscaler's backlog signal. Requires
     /// pipeline + `migrate` (preempted prefixes must survive).
     pub kv_blocks_per_gpu: Option<usize>,
+    /// emit the golden-run digest events (`testkit::golden`) on sim time:
+    /// per-round tokens with version tags in canonical sequence-id order,
+    /// sequence completions, optimizer steps and publishes, folded into
+    /// `SimResult::digest`. The same replay-stability vocabulary as the
+    /// token-level harness, at cluster scale.
+    pub digest: bool,
 }
 
 impl SimCfg {
@@ -110,6 +117,7 @@ impl SimCfg {
             autoscale: None,
             kv_block_size: 16,
             kv_blocks_per_gpu: None,
+            digest: false,
         }
     }
 
@@ -131,6 +139,7 @@ impl SimCfg {
             autoscale: None,
             kv_block_size: 16,
             kv_blocks_per_gpu: None,
+            digest: false,
         }
     }
 
@@ -151,6 +160,9 @@ impl SimCfg {
 
 #[derive(Debug, Clone)]
 struct Seq {
+    /// stable sequence id (survives migration/preemption) — the digest's
+    /// canonical ordering key
+    uid: u64,
     remaining: usize,
     /// (version, count) runs of generated tokens
     versions: Vec<(u64, usize)>,
@@ -194,6 +206,9 @@ pub struct SimResult {
     pub scaledown_times: Vec<f64>,
     /// live (non-retired) generation GPUs at completion
     pub gen_gpus_final: usize,
+    /// golden-run fingerprint of the whole simulated trajectory
+    /// (Some iff `SimCfg::digest`)
+    pub digest: Option<RunDigest>,
 }
 
 #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -231,6 +246,9 @@ pub struct Simulator {
     result: SimResult,
     lag_sum_by_bucket: Vec<f64>,
     lag_n_by_bucket: Vec<f64>,
+    next_uid: u64,
+    /// hash-only digest log (Some iff `SimCfg::digest`)
+    log: Option<EventLog>,
 }
 
 const BUCKETS: usize = 16;
@@ -284,6 +302,7 @@ impl Simulator {
             .filter(|a| a.cfg.enabled)
             .map(|a| AutoScaler::new(a.cfg.clone()));
         let n = slots.len();
+        let digest_on = cfg.digest;
         Simulator {
             cfg,
             rng,
@@ -304,12 +323,16 @@ impl Simulator {
             result: SimResult::default(),
             lag_sum_by_bucket: vec![0.0; BUCKETS],
             lag_n_by_bucket: vec![0.0; BUCKETS],
+            next_uid: 0,
+            log: if digest_on { Some(EventLog::hash_only()) } else { None },
         }
     }
 
     fn new_seq(&mut self) -> Seq {
         let len = 1 + self.rng.below(self.cfg.l_max);
-        Seq { remaining: len, versions: Vec::new(), total: len }
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        Seq { uid, remaining: len, versions: Vec::new(), total: len }
     }
 
     /// KV blocks a resident sequence consumes (its next write included).
@@ -492,6 +515,9 @@ impl Simulator {
                         continue;
                     }
                     let mut finished = Vec::new();
+                    // digest: the round's tokens in canonical sequence-id
+                    // order (slot placement must not affect the hash)
+                    let mut round_log: Vec<(u64, u32)> = Vec::new();
                     for slot in self.slots[g].iter_mut() {
                         if let Some(seq) = slot {
                             // one token generated under the current version
@@ -501,9 +527,26 @@ impl Simulator {
                             }
                             seq.remaining -= 1;
                             gen_done_tokens += 1.0;
+                            if self.log.is_some() {
+                                round_log
+                                    .push((seq.uid, (seq.total - seq.remaining - 1) as u32));
+                            }
                             if seq.remaining == 0 {
                                 finished.push(slot.take().unwrap());
                             }
+                        }
+                    }
+                    if let Some(log) = &mut self.log {
+                        round_log.sort_unstable();
+                        let version = self.version;
+                        for (uid, index) in round_log {
+                            log.record(DigestEvent::Token { seq: uid, index, tok: 0, version });
+                        }
+                        let mut done: Vec<(u64, u64)> =
+                            finished.iter().map(|s| (s.uid, s.total as u64)).collect();
+                        done.sort_unstable();
+                        for (uid, total) in done {
+                            log.record(DigestEvent::GroupComplete { group: uid, tokens: total });
                         }
                     }
                     self.queue.extend(finished);
@@ -524,6 +567,13 @@ impl Simulator {
                     self.steps_done += 1;
                     self.version += 1;
                     self.samples += self.cfg.batch_b;
+                    if let Some(log) = &mut self.log {
+                        log.record(DigestEvent::TrainerStep {
+                            step: self.steps_done as u64,
+                            param_hash: self.samples as u64,
+                        });
+                        log.record(DigestEvent::WeightPublish { version: self.version });
+                    }
                     self.result.samples_vs_time.push(self.t, self.t, self.samples as f64);
                     if let SimMode::Conventional { g } = self.cfg.mode {
                         // RL step boundary: reopen generation quota
@@ -541,6 +591,7 @@ impl Simulator {
             }
         }
 
+        self.result.digest = self.log.as_ref().map(|l| l.digest());
         self.result.tokens = gen_done_tokens;
         self.result.t_end = self.t;
         self.result.throughput = gen_done_tokens / self.t.max(1e-9);
@@ -779,6 +830,44 @@ mod tests {
         let b = Simulator::new(small_pipe()).run();
         assert_eq!(a.t_end, b.t_end);
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn digest_fingerprints_the_whole_trajectory() {
+        let mk = |seed: u64| {
+            let mut c = small_pipe();
+            c.seed = seed;
+            c.digest = true;
+            Simulator::new(c).run()
+        };
+        let a = mk(1);
+        let b = mk(1);
+        let d = a.digest.expect("digest requested");
+        assert_eq!(Some(d), b.digest, "same seed replays to the same digest");
+        assert!(d.events > 0);
+        // a different seed must be distinguishable — the digest is a
+        // fingerprint, not a parity bit
+        let c = mk(2);
+        assert_ne!(a.digest, c.digest);
+        // churn + migration replays deterministically too, and its
+        // perturbed timing is visible in the fingerprint
+        let healthy_end = a.t_end;
+        let churned = || {
+            let mut c = small_pipe();
+            c.seed = 1;
+            c.migrate = true;
+            let mut c = c.with_churn(5, 4, healthy_end, healthy_end / 8.0);
+            c.digest = true;
+            Simulator::new(c).run()
+        };
+        let e = churned();
+        let f = churned();
+        assert_eq!(e.digest, f.digest, "churn replays deterministically");
+        assert!(e.seqs_migrated > 0, "the outages must have hit live work");
+        assert_ne!(a.digest, e.digest, "outages visibly change sim timing");
+        // digest off: no fingerprint
+        let plain = Simulator::new(small_pipe()).run();
+        assert!(plain.digest.is_none());
     }
 
     #[test]

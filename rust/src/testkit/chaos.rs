@@ -51,6 +51,13 @@ pub enum ChaosKind {
     /// reject it, keep the hub's books balanced, and the claiming actor
     /// must survive. No-op without a migration hub.
     CorruptSnapshot,
+    /// kill the trainer mid-run. With trainer failover wired (a
+    /// supervisor-owned trainer slot and a checkpoint dir), the
+    /// supervisor restarts it from the latest `AsyncCheckpointer`
+    /// manifest *without tearing the run down* — actors keep decoding,
+    /// topics stay open, and the restored optimizer trajectory continues
+    /// from the last durable state. No-op without a trainer slot.
+    KillTrainer,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +94,7 @@ impl ChaosSchedule {
                 75..=82 => ChaosKind::BusDelay { ms: 5 + rng.below(45) as u64 },
                 83..=86 => ChaosKind::BusHeal,
                 87..=91 => ChaosKind::CorruptSnapshot,
+                92..=94 => ChaosKind::KillTrainer,
                 _ => ChaosKind::TopicStall { ms: 5 + rng.below(45) as u64 },
             };
             events.push(ChaosEvent { at_step, kind });
@@ -117,6 +125,16 @@ impl ChaosSchedule {
                 at_step: kill_step,
                 kind: ChaosKind::SlowKillActor { delay_ms },
             }],
+        }
+    }
+
+    /// Hand-written scenario: kill the trainer once the version clock
+    /// passes `at_step` — the canonical failover case (the supervisor
+    /// restarts it from the latest checkpoint manifest mid-run).
+    pub fn kill_trainer(at_step: u64) -> ChaosSchedule {
+        ChaosSchedule {
+            seed: 0,
+            events: vec![ChaosEvent { at_step, kind: ChaosKind::KillTrainer }],
         }
     }
 
@@ -160,6 +178,7 @@ impl fmt::Display for ChaosKind {
             ChaosKind::BusHeal => write!(f, "bus-heal"),
             ChaosKind::TopicStall { ms } => write!(f, "topic-stall {ms}ms"),
             ChaosKind::CorruptSnapshot => write!(f, "corrupt-snapshot"),
+            ChaosKind::KillTrainer => write!(f, "kill-trainer"),
         }
     }
 }
@@ -263,6 +282,24 @@ mod tests {
             );
             assert_eq!(bytes, corrupt_snapshot_bytes(seed), "payload replays from its seed");
         }
+    }
+
+    #[test]
+    fn kill_trainer_scenario_shape() {
+        let s = ChaosSchedule::kill_trainer(5);
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events[0].kind, ChaosKind::KillTrainer);
+        assert_eq!(s.events[0].at_step, 5);
+        assert!(s.describe().contains("kill-trainer"));
+    }
+
+    #[test]
+    fn generated_schedules_include_trainer_kills() {
+        let s = ChaosSchedule::generate(0x7a11, 500, 512);
+        assert!(
+            s.events.iter().any(|e| e.kind == ChaosKind::KillTrainer),
+            "the weighted kinds must produce trainer kills at this sample size"
+        );
     }
 
     #[test]

@@ -1,0 +1,1316 @@
+//! Golden-run conformance: deterministic, device-free pipeline runs
+//! fingerprinted into a [`RunDigest`].
+//!
+//! PipelineRL's core claim — in-flight updates keep everything
+//! concurrent without corrupting on-policy data — is only testable if a
+//! *perturbed* run (crash, preempt, migrate, failover, resume) can be
+//! proven **equivalent** to an unperturbed one. The per-sequence
+//! equivalence tests (tests/migration.rs, tests/kvmem.rs) prove it for
+//! one sequence at a time; this module proves it for a whole run:
+//!
+//! * [`EventLog`] — an ordered log of digest events (sampled tokens with
+//!   their version tags, group completions, optimizer steps with a
+//!   parameter hash, weight publishes, RNG cursors, checkpoint cuts),
+//!   folded into an FNV-64 [`RunDigest`] as they are recorded. Two runs
+//!   with equal digests produced the same data in the same canonical
+//!   order; on mismatch [`explain_divergence`] names the first
+//!   diverging event.
+//!
+//! * [`GoldenPipeline`] — a single-threaded, device-free model of the
+//!   full pipeline that composes the *real* substrates: admission and
+//!   preemption run through [`crate::sched::Scheduler`], kills and
+//!   preemptions travel as wire-form `PRLSNAP1` bytes through a real
+//!   [`MigrationHub`], checkpoints are real `PRLCKPT3` [`TrainState`]s
+//!   with the engine sampling-RNG cursor and the scheduler admission
+//!   cursor, written through the real manifest protocol.
+//!
+//! **Why equivalence is a theorem here, not luck.** The model fixes two
+//! invariants that the real system aims for and the digest then checks:
+//! (1) every token of a sequence comes from the sequence's *own* RNG
+//! stream, whose cursor travels inside its snapshot — so *where* a
+//! sequence decodes can never change *what* it decodes; (2) the per-tick
+//! event order is canonical (ascending sequence id), so placement is
+//! digest-invariant by construction. Under those two rules a perturbed
+//! run diverges **iff** the machinery under test (snapshot round-trips,
+//! hub bookkeeping, scheduler victim choice, checkpoint cursor
+//! fidelity, manifest recovery) loses or corrupts state — which is
+//! exactly what the conformance tests in tests/determinism.rs assert
+//! it never does.
+//!
+//! The cluster simulator emits the same event vocabulary on sim time
+//! (`SimCfg::digest`), so coarse-grained scenarios get the same
+//! replay-stability check.
+
+use crate::model::checkpoint::TrainState;
+use crate::runtime::HostTensor;
+use crate::sched::{MigrationHub, PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
+use crate::testkit::chaos::{corrupt_snapshot_bytes, ChaosKind, ChaosSchedule};
+use crate::util::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------
+// digest events
+// ---------------------------------------------------------------------
+
+/// One entry of the canonical run fingerprint. Every field is part of
+/// the hash — a run that produces the same events in the same order has
+/// the same [`RunDigest`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DigestEvent {
+    /// one sampled token: which sequence, its index within the generated
+    /// stream, the token value, and the weight version it sampled under
+    Token { seq: u64, index: u32, tok: i32, version: u64 },
+    /// an advantage group completed with this many generated tokens
+    GroupComplete { group: u64, tokens: u64 },
+    /// one optimizer step, fingerprinted by the post-step parameter hash
+    TrainerStep { step: u64, param_hash: u64 },
+    /// a weight version became visible to generation
+    WeightPublish { version: u64 },
+    /// an RNG cursor observation (trainer stream, by convention, once
+    /// per optimizer step — the replay anchor)
+    RngCursor { words: [u64; 4] },
+    /// a checkpoint landed for this step
+    CheckpointCut { step: u64 },
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// FNV-1a over a byte slice (the digest hash primitive).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    fnv64_fold(FNV_OFFSET, bytes)
+}
+
+fn fnv64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl DigestEvent {
+    /// Canonical byte encoding (tag + fixed-order LE fields) — what the
+    /// digest actually hashes, so the fingerprint is representation-
+    /// stable across platforms.
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match self {
+            DigestEvent::Token { seq, index, tok, version } => {
+                out.push(0x01);
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&index.to_le_bytes());
+                out.extend_from_slice(&tok.to_le_bytes());
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            DigestEvent::GroupComplete { group, tokens } => {
+                out.push(0x02);
+                out.extend_from_slice(&group.to_le_bytes());
+                out.extend_from_slice(&tokens.to_le_bytes());
+            }
+            DigestEvent::TrainerStep { step, param_hash } => {
+                out.push(0x03);
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&param_hash.to_le_bytes());
+            }
+            DigestEvent::WeightPublish { version } => {
+                out.push(0x04);
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            DigestEvent::RngCursor { words } => {
+                out.push(0x05);
+                for w in words {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            DigestEvent::CheckpointCut { step } => {
+                out.push(0x06);
+                out.extend_from_slice(&step.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// The fingerprint of a run: the folded event hash plus the event count
+/// (so an empty suffix can never alias a truncated run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunDigest {
+    pub hash: u64,
+    pub events: u64,
+}
+
+impl std::fmt::Display for RunDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}/{}", self.hash, self.events)
+    }
+}
+
+/// Ordered digest-event log. Events fold into the running hash as they
+/// are recorded; the events themselves are retained (unless constructed
+/// with [`EventLog::hash_only`]) so a digest mismatch can be explained
+/// by its first diverging event instead of just two hex strings.
+#[derive(Debug, Clone)]
+pub struct EventLog {
+    hash: u64,
+    count: u64,
+    /// absolute index of `events[0]` — a log resumed from a checkpoint
+    /// continues the stream without holding the pre-crash prefix
+    base: u64,
+    events: Option<Vec<DigestEvent>>,
+    scratch: Vec<u8>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog::new()
+    }
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog {
+            hash: FNV_OFFSET,
+            count: 0,
+            base: 0,
+            events: Some(Vec::new()),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Hash-only log (no event retention) — for long runs where only the
+    /// digest matters, e.g. the cluster simulator.
+    pub fn hash_only() -> EventLog {
+        EventLog { events: None, ..EventLog::new() }
+    }
+
+    /// Continue a stream from a checkpointed digest: the hash and count
+    /// carry on, the pre-crash events themselves are gone (they died
+    /// with the process).
+    pub fn resumed(from: RunDigest) -> EventLog {
+        EventLog {
+            hash: from.hash,
+            count: from.events,
+            base: from.events,
+            events: Some(Vec::new()),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, ev: DigestEvent) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        ev.encode(&mut scratch);
+        self.hash = fnv64_fold(self.hash, &scratch);
+        self.scratch = scratch;
+        self.count += 1;
+        if let Some(events) = &mut self.events {
+            events.push(ev);
+        }
+    }
+
+    pub fn digest(&self) -> RunDigest {
+        RunDigest { hash: self.hash, events: self.count }
+    }
+
+    /// Retained events (empty for a hash-only log).
+    pub fn events(&self) -> &[DigestEvent] {
+        self.events.as_deref().unwrap_or(&[])
+    }
+
+    /// Absolute index of the first retained event.
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+}
+
+/// Human-readable account of where a perturbed event stream first left
+/// the baseline. `perturbed` is the run in segment order (a kill+resume
+/// run has two segments: pre-kill and post-resume). Only meaningful for
+/// retaining logs.
+pub fn explain_divergence(baseline: &EventLog, perturbed: &[&EventLog]) -> String {
+    let base_events = baseline.events();
+    for part in perturbed {
+        for (i, ev) in part.events().iter().enumerate() {
+            let at = part.base() as usize + i;
+            match base_events.get(at) {
+                Some(b) if b == ev => continue,
+                Some(b) => {
+                    return format!(
+                        "first divergence at event {at}: baseline {b:?}, perturbed {ev:?}"
+                    );
+                }
+                None => {
+                    return format!(
+                        "perturbed run produced extra event {at}: {ev:?} \
+                         (baseline ended at {})",
+                        base_events.len()
+                    );
+                }
+            }
+        }
+    }
+    let perturbed_total = perturbed.last().map(|p| p.digest().events).unwrap_or(0);
+    if (base_events.len() as u64) > perturbed_total {
+        return format!(
+            "perturbed run stopped early: {perturbed_total} events vs baseline {}; \
+             next baseline event: {:?}",
+            base_events.len(),
+            base_events.get(perturbed_total as usize)
+        );
+    }
+    "event streams match on every retained event (divergence must be in a \
+     non-retained prefix)"
+        .to_string()
+}
+
+/// Persist a failure report for CI to upload (tier1.sh runs the
+/// determinism suite repeatedly; on mismatch the seed + digest diff land
+/// under target/determinism/). Best-effort: returns the path when the
+/// write succeeded.
+pub fn write_failure_report(name: &str, seed: u64, body: &str) -> Option<PathBuf> {
+    let dir = Path::new("target").join("determinism");
+    std::fs::create_dir_all(&dir).ok()?;
+    let path = dir.join(format!("{name}-seed-{seed:016x}.txt"));
+    let mut f = std::fs::File::create(&path).ok()?;
+    writeln!(f, "{name}: replay seed = {seed:#x} ({seed})\n{body}").ok()?;
+    Some(path)
+}
+
+// ---------------------------------------------------------------------
+// the golden pipeline model
+// ---------------------------------------------------------------------
+
+/// Configuration of a golden run. One logical *tick* = one decode round
+/// for every live sequence, then a trainer drain.
+#[derive(Debug, Clone)]
+pub struct GoldenCfg {
+    pub seed: u64,
+    /// optimizer steps to run
+    pub steps: u64,
+    /// advantage groups consumed per optimizer step
+    pub groups_per_step: usize,
+    /// sequences per advantage group
+    pub group_size: usize,
+    /// initial actor count (placement shards; capacity is global)
+    pub n_actors: usize,
+    /// global in-flight sequence count the admission loop maintains
+    pub live_target: usize,
+    /// per-sequence generation budget: target lengths draw from
+    /// `1..=max_new` off the admission RNG
+    pub max_new: usize,
+    pub vocab: usize,
+    /// checkpoint cadence in optimizer steps (0 = no checkpoints)
+    pub checkpoint_every: u64,
+    /// checkpoint directory (required for checkpointing / failover)
+    pub dir: Option<PathBuf>,
+    pub sched: SchedPolicy,
+    pub preempt: PreemptPolicy,
+}
+
+impl GoldenCfg {
+    pub fn new(seed: u64) -> GoldenCfg {
+        GoldenCfg {
+            seed,
+            steps: 10,
+            groups_per_step: 2,
+            group_size: 2,
+            n_actors: 3,
+            live_target: 6,
+            max_new: 6,
+            vocab: 97,
+            checkpoint_every: 0,
+            dir: None,
+            sched: SchedPolicy::Fifo,
+            preempt: PreemptPolicy::Youngest,
+        }
+    }
+}
+
+/// A perturbation schedule: real chaos events fired against the weight
+/// version clock, plus tick-indexed forced preemptions (the engine's
+/// block-pressure parks have no version-clock analogue, so they key on
+/// the tick counter instead).
+#[derive(Debug, Clone, Default)]
+pub struct Perturbation {
+    pub chaos: Option<ChaosSchedule>,
+    /// ticks at which one scheduler-chosen victim is parked through the
+    /// wire-form snapshot path and re-admitted the same tick
+    pub preempt_ticks: Vec<u64>,
+}
+
+impl Perturbation {
+    pub fn none() -> Perturbation {
+        Perturbation::default()
+    }
+
+    pub fn chaos(schedule: ChaosSchedule) -> Perturbation {
+        Perturbation { chaos: Some(schedule), preempt_ticks: Vec::new() }
+    }
+
+    /// Seed-derived mixed schedule: `n_chaos` chaos events over the
+    /// version clock plus `n_preempts` forced preemptions over roughly
+    /// the run's tick horizon. Pure in `seed` — equal seeds replay the
+    /// exact same perturbations.
+    pub fn generate(
+        seed: u64,
+        total_steps: u64,
+        n_chaos: usize,
+        n_preempts: usize,
+    ) -> Perturbation {
+        let chaos = ChaosSchedule::generate(seed, total_steps, n_chaos);
+        let mut rng = Rng::with_stream(seed, 0x9e13_7791);
+        let horizon = (total_steps.max(1) as usize) * 8;
+        let mut ticks: Vec<u64> =
+            (0..n_preempts).map(|_| 1 + rng.below(horizon) as u64).collect();
+        ticks.sort_unstable();
+        Perturbation { chaos: Some(chaos), preempt_ticks: ticks }
+    }
+}
+
+/// Accounting of one golden run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GoldenStats {
+    pub ticks: u64,
+    pub fresh_admitted: u64,
+    /// sequences re-seated from the migration hub (kills, preemptions)
+    pub migrated: u64,
+    pub preemptions: u64,
+    pub trainer_failovers: u64,
+    pub corrupt_rejected: u64,
+    pub checkpoints: u64,
+}
+
+/// Result of a golden run (completed, or stopped at an injected
+/// checkpoint-boundary kill).
+#[derive(Debug)]
+pub struct GoldenRun {
+    pub log: EventLog,
+    pub steps_done: u64,
+    pub stats: GoldenStats,
+    /// Some(step): the run was killed right after this checkpoint landed
+    /// (resume with [`GoldenPipeline::resume`])
+    pub stopped_at_checkpoint: Option<u64>,
+}
+
+/// One in-flight sequence of the model. Its token stream comes from its
+/// *own* RNG (cursor travels in its snapshot), so placement and
+/// migration cannot change what it generates — the invariant the digest
+/// then verifies end to end.
+struct GSeq {
+    uid: u64,
+    group: u64,
+    target: usize,
+    toks: Vec<i32>,
+    versions: Vec<u64>,
+    rng: Rng,
+}
+
+impl GSeq {
+    fn fresh(cfg: &GoldenCfg, uid: u64, group: u64, target: usize) -> GSeq {
+        GSeq {
+            uid,
+            group,
+            target,
+            toks: Vec::new(),
+            versions: Vec::new(),
+            rng: Rng::with_stream(cfg.seed ^ 0x601d_5eed, uid + 1),
+        }
+    }
+
+    fn view(&self) -> SeqView {
+        SeqView {
+            seq_id: self.uid,
+            group_id: self.group,
+            total_len: 2 + self.toks.len(),
+            gen_len: self.toks.len(),
+        }
+    }
+
+    /// Portable form: the real `PRLSNAP1` record. The target length is
+    /// encoded in the prompt (problems regenerate from their id in the
+    /// real system; here the prompt *is* the problem) and the sampling
+    /// cursor rides in `rng_words`.
+    fn to_snapshot(&self) -> SeqSnapshot {
+        let gen = self.toks.len();
+        SeqSnapshot {
+            seq_id: self.uid,
+            group_id: self.group,
+            problem_id: self.uid,
+            prompt: vec![1, self.target as i32],
+            gen_tokens: self.toks.clone(),
+            behavior_lp: vec![-0.125; gen],
+            token_version: self.versions.clone(),
+            pos: 1 + gen,
+            max_new: self.target,
+            rng_words: self.rng.state_words(),
+            t_start: 0.0,
+        }
+    }
+
+    fn from_snapshot(s: &SeqSnapshot) -> Result<GSeq> {
+        ensure!(
+            s.prompt.len() == 2 && s.prompt[0] == 1,
+            "not a golden-model snapshot (prompt {:?})",
+            s.prompt
+        );
+        Ok(GSeq {
+            uid: s.seq_id,
+            group: s.group_id,
+            target: s.prompt[1] as usize,
+            toks: s.gen_tokens.clone(),
+            versions: s.token_version.clone(),
+            rng: Rng::from_state_words(s.rng_words),
+        })
+    }
+}
+
+const GOLDEN_VARIANT: &str = "golden";
+const TRAINER_PARAMS: usize = 8;
+
+/// The model trainer: an Adam-shaped update whose gradient mixes the
+/// trainer RNG with a hash of the consumed batch, so the parameter
+/// trajectory — and therefore the digest — is sensitive to *which*
+/// groups trained in *which* order, not just to how many.
+///
+/// Deliberately *not* [`crate::testkit::synth::SynthTrainer`]: this one
+/// couples the gradient to the batch content (the digest-sensitivity
+/// requirement), tracks plain `f32` vectors, hashes its parameters, and
+/// its exact arithmetic is pinned by the equivalence digests — folding
+/// the two together would put a gradient-hook parameter on the shared
+/// trainer's API and risk perturbing a verified trajectory for no
+/// behavioral gain. If `TrainState` grows a field, the compiler flags
+/// both `to_state` sites.
+struct GTrainer {
+    step: u64,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    samples: f64,
+    tokens: f64,
+    rng: Rng,
+}
+
+impl GTrainer {
+    fn new(seed: u64) -> GTrainer {
+        let mut init = Rng::with_stream(seed, 0x7124_1e12);
+        GTrainer {
+            step: 0,
+            params: (0..TRAINER_PARAMS).map(|_| init.f32() - 0.5).collect(),
+            m: vec![0.0; TRAINER_PARAMS],
+            v: vec![0.0; TRAINER_PARAMS],
+            samples: 0.0,
+            tokens: 0.0,
+            rng: Rng::with_stream(seed, 0x7124_57e9),
+        }
+    }
+
+    fn update(&mut self, batch: &[(u64, u64)], group_size: usize) {
+        let mut bytes = Vec::with_capacity(batch.len() * 16);
+        for (gid, toks) in batch {
+            bytes.extend_from_slice(&gid.to_le_bytes());
+            bytes.extend_from_slice(&toks.to_le_bytes());
+        }
+        let bh = fnv64(&bytes);
+        let lr = 0.05f32;
+        for i in 0..self.params.len() {
+            let data = ((bh >> ((i % 8) * 8)) & 0xff) as f32 / 1024.0 - 0.124;
+            let g = (self.rng.f32() - 0.5) + data;
+            self.m[i] = 0.9 * self.m[i] + 0.1 * g;
+            self.v[i] = 0.99 * self.v[i] + 0.01 * g * g;
+            self.params[i] -= lr * self.m[i] / (self.v[i].sqrt() + 1e-8);
+        }
+        self.step += 1;
+        self.samples += (batch.len() * group_size) as f64;
+        self.tokens += batch.iter().map(|(_, t)| *t as f64).sum::<f64>();
+    }
+
+    fn param_hash(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.params.len() * 4);
+        for p in &self.params {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        fnv64(&bytes)
+    }
+
+    /// `PRLCKPT3` form: the trainer trajectory plus the generation-side
+    /// cursors the caller passes in.
+    fn to_state(&self, engine_rng: [u64; 4], sched_cursor: u64) -> TrainState {
+        TrainState {
+            variant: GOLDEN_VARIANT.into(),
+            step: self.step,
+            params: vec![HostTensor::from_f32(&[self.params.len()], self.params.clone())],
+            opt_m: vec![HostTensor::from_f32(&[self.m.len()], self.m.clone())],
+            opt_v: vec![HostTensor::from_f32(&[self.v.len()], self.v.clone())],
+            samples_total: self.samples,
+            tokens_total: self.tokens,
+            rng: self.rng.state_words(),
+            engine_rng,
+            sched_cursor,
+        }
+    }
+
+    fn from_state(st: &TrainState) -> Result<GTrainer> {
+        ensure!(
+            st.variant == GOLDEN_VARIANT,
+            "state is for variant {:?}, not the golden model",
+            st.variant
+        );
+        let f32s = |ts: &[HostTensor]| -> Result<Vec<f32>> {
+            ensure!(ts.len() == 1, "golden trainer state holds one tensor per slot");
+            Ok(ts[0].f32s()?.to_vec())
+        };
+        Ok(GTrainer {
+            step: st.step,
+            params: f32s(&st.params)?,
+            m: f32s(&st.opt_m)?,
+            v: f32s(&st.opt_v)?,
+            samples: st.samples_total,
+            tokens: st.tokens_total,
+            rng: Rng::from_state_words(st.rng),
+        })
+    }
+}
+
+/// Namespace for running golden pipelines (see module docs).
+pub struct GoldenPipeline;
+
+struct Golden<'a> {
+    cfg: &'a GoldenCfg,
+    pert: &'a Perturbation,
+    actors: BTreeMap<usize, Vec<GSeq>>,
+    next_actor_id: usize,
+    hub: MigrationHub,
+    pending: Vec<GSeq>,
+    scheduler: Box<dyn Scheduler>,
+    /// the "engine RNG": draws each fresh sequence's target length; its
+    /// cursor is what PRLCKPT3 carries as `engine_rng`
+    admission_rng: Rng,
+    /// the scheduler admission cursor: sequences ever admitted (== the
+    /// next local sequence id); PRLCKPT3's `sched_cursor`
+    next_uid: u64,
+    group_ctr: u64,
+    group_fill: usize,
+    /// incomplete groups: gid -> (finished members, token sum)
+    gdone: BTreeMap<u64, (usize, u64)>,
+    /// completed groups awaiting the trainer: (gid, token sum)
+    inbox: VecDeque<(u64, u64)>,
+    trainer: GTrainer,
+    version: u64,
+    tick: u64,
+    next_chaos: usize,
+    next_preempt: usize,
+    log: EventLog,
+    stats: GoldenStats,
+}
+
+impl GoldenPipeline {
+    /// Run to completion under a perturbation schedule.
+    pub fn run(cfg: &GoldenCfg, pert: &Perturbation) -> Result<GoldenRun> {
+        let mut g = Golden::fresh(cfg, pert);
+        g.log.record(DigestEvent::WeightPublish { version: g.version });
+        g.run_loop(None)
+    }
+
+    /// Run until the checkpoint for step `stop_after` has landed, then
+    /// stop dead — the in-memory pipeline state is discarded, modeling a
+    /// process kill *at* a checkpoint boundary. Resume with
+    /// [`GoldenPipeline::resume`].
+    pub fn run_until_checkpoint(
+        cfg: &GoldenCfg,
+        pert: &Perturbation,
+        stop_after: u64,
+    ) -> Result<GoldenRun> {
+        ensure!(
+            cfg.checkpoint_every > 0 && cfg.dir.is_some(),
+            "run_until_checkpoint needs checkpointing enabled"
+        );
+        ensure!(
+            stop_after >= cfg.checkpoint_every && stop_after % cfg.checkpoint_every == 0,
+            "stop_after ({stop_after}) must land on the checkpoint cadence ({})",
+            cfg.checkpoint_every
+        );
+        let mut g = Golden::fresh(cfg, pert);
+        g.log.record(DigestEvent::WeightPublish { version: g.version });
+        g.run_loop(Some(stop_after))
+    }
+
+    /// Resume a killed run from its checkpoint directory: the `PRLCKPT3`
+    /// state restores the trainer trajectory, the engine sampling-RNG
+    /// cursor, and the scheduler admission cursor; the aux sidecar
+    /// restores the digest continuation, the group/inbox bookkeeping and
+    /// every in-flight sequence (as wire-form `PRLSNAP1` bytes that
+    /// re-enter through the migration hub). The resumed run finishes
+    /// with the same [`RunDigest`] as an uninterrupted one.
+    pub fn resume(cfg: &GoldenCfg, pert: &Perturbation) -> Result<GoldenRun> {
+        let dir = cfg.dir.as_ref().context("resume needs GoldenCfg::dir")?;
+        let st = TrainState::load_latest(dir).context("loading golden resume state")?;
+        ensure!(
+            st.engine_rng != [0u64; 4],
+            "state carries no generation cursors (PRLCKPT2-era?) — a zero PCG \
+             cursor is degenerate and cannot continue the sampling stream"
+        );
+        let aux = read_aux(dir, st.step).context("loading golden aux sidecar")?;
+        let mut g = Golden::fresh(cfg, pert);
+        g.trainer = GTrainer::from_state(&st)?;
+        g.admission_rng = Rng::from_state_words(st.engine_rng);
+        g.next_uid = st.sched_cursor;
+        g.version = aux.version;
+        g.tick = aux.tick;
+        g.group_ctr = aux.group_ctr;
+        g.group_fill = aux.group_fill as usize;
+        g.next_chaos = aux.fired_chaos as usize;
+        g.next_preempt = aux.fired_preempts as usize;
+        g.inbox = aux.inbox;
+        g.gdone = aux.gdone;
+        for bytes in aux.snaps {
+            g.hub.deposit_raw(bytes);
+        }
+        g.log = EventLog::resumed(RunDigest { hash: aux.hash, events: aux.events });
+        g.run_loop(None)
+    }
+}
+
+impl<'a> Golden<'a> {
+    fn fresh(cfg: &'a GoldenCfg, pert: &'a Perturbation) -> Golden<'a> {
+        assert!(cfg.steps > 0 && cfg.groups_per_step > 0 && cfg.group_size > 0);
+        assert!(cfg.n_actors > 0 && cfg.live_target > 0 && cfg.max_new > 0 && cfg.vocab > 1);
+        Golden {
+            cfg,
+            pert,
+            actors: (0..cfg.n_actors).map(|id| (id, Vec::new())).collect(),
+            next_actor_id: cfg.n_actors,
+            hub: MigrationHub::new(),
+            pending: Vec::new(),
+            scheduler: cfg.sched.build_with_preempt(cfg.preempt),
+            admission_rng: Rng::with_stream(cfg.seed, 0xad31_5510),
+            next_uid: 0,
+            group_ctr: 0,
+            group_fill: 0,
+            gdone: BTreeMap::new(),
+            inbox: VecDeque::new(),
+            trainer: GTrainer::new(cfg.seed),
+            version: 1,
+            tick: 0,
+            next_chaos: 0,
+            next_preempt: 0,
+            log: EventLog::new(),
+            stats: GoldenStats::default(),
+        }
+    }
+
+    fn live_count(&self) -> usize {
+        self.actors.values().map(|v| v.len()).sum()
+    }
+
+    fn run_loop(mut self, stop_after: Option<u64>) -> Result<GoldenRun> {
+        // a resume may land mid-drain (the uninterrupted run kept
+        // consuming ready batches right after the checkpoint): finish the
+        // trainer work before the next generation round
+        if self.drain_trainer(stop_after)? {
+            return Ok(self.finish(stop_after));
+        }
+        let deadline = self.tick + self.cfg.steps * 1000 + 1000;
+        while self.trainer.step < self.cfg.steps {
+            ensure!(
+                self.tick < deadline,
+                "golden run stopped making progress (step {} of {})",
+                self.trainer.step,
+                self.cfg.steps
+            );
+            self.tick += 1;
+            self.stats.ticks += 1;
+            // admission first, perturbations second, then a re-admission
+            // pass: kills and preemptions always strike a *full* pool (so
+            // every kill provably moves live sequences — the hand-off
+            // machinery is exercised on every seed, not just lucky ones)
+            // and their deposits re-seat within the same tick, which is
+            // what keeps perturbations content-invariant
+            self.admit()?;
+            self.fire_chaos()?;
+            self.fire_preempts();
+            self.admit()?;
+            self.generate();
+            if self.drain_trainer(stop_after)? {
+                break;
+            }
+        }
+        Ok(self.finish(stop_after))
+    }
+
+    fn finish(mut self, stop_after: Option<u64>) -> GoldenRun {
+        self.stats.corrupt_rejected = self.hub.corrupt_rejected();
+        self.hub.discard_all();
+        let stopped = stop_after
+            .filter(|&k| self.trainer.step >= k && self.trainer.step < self.cfg.steps);
+        GoldenRun {
+            steps_done: self.trainer.step,
+            stats: self.stats,
+            stopped_at_checkpoint: stopped,
+            log: self.log,
+        }
+    }
+
+    // ---- perturbations ----
+
+    fn fire_chaos(&mut self) -> Result<()> {
+        // copy the &'a reference out so the schedule borrow is tied to
+        // the perturbation's lifetime, not to &mut self
+        let pert: &Perturbation = self.pert;
+        let Some(schedule) = &pert.chaos else { return Ok(()) };
+        while self.next_chaos < schedule.events.len()
+            && self.version > schedule.events[self.next_chaos].at_step
+        {
+            let ev = schedule.events[self.next_chaos];
+            self.next_chaos += 1;
+            match ev.kind {
+                // a slow kill's latency has no logical-time meaning here:
+                // both resolve to "the busiest live shard dies, its
+                // sequences travel as bytes through the hub"
+                ChaosKind::KillActor | ChaosKind::SlowKillActor { .. } => {
+                    self.kill_busiest();
+                    if self.actors.is_empty() {
+                        self.add_actor();
+                    }
+                }
+                ChaosKind::RestartActor => {
+                    self.kill_busiest();
+                    self.add_actor();
+                }
+                ChaosKind::AddActor => {
+                    if self.actors.len() < self.cfg.n_actors + 4 {
+                        self.add_actor();
+                    }
+                }
+                ChaosKind::RemoveActor => {
+                    if self.actors.len() > 1 {
+                        self.kill_highest();
+                    }
+                }
+                // transport latency does not exist on logical time; the
+                // digest claim is precisely that *content* is
+                // latency-invariant
+                ChaosKind::BusDelay { .. } | ChaosKind::BusHeal | ChaosKind::TopicStall { .. } => {}
+                ChaosKind::CorruptSnapshot => {
+                    // byzantine bytes enter the same hub the real deposits
+                    // use; the claim path must reject them without
+                    // perturbing anything digest-visible
+                    self.hub.deposit_raw(corrupt_snapshot_bytes(ev.at_step));
+                }
+                ChaosKind::KillTrainer => self.trainer_failover()?,
+            }
+        }
+        Ok(())
+    }
+
+    /// In-process trainer failover: only the trainer restarts — from the
+    /// latest manifest state — while generation keeps its live state.
+    /// With a checkpoint every step the restored trajectory is the
+    /// current one bit-for-bit, which is what the failover-equivalence
+    /// test asserts through the digest.
+    fn trainer_failover(&mut self) -> Result<()> {
+        self.trainer = match &self.cfg.dir {
+            Some(dir) => match TrainState::load_latest(dir) {
+                Ok(st) => GTrainer::from_state(&st)?,
+                // killed before the first checkpoint: restart from the
+                // initial (seed-derived) state, like a cold trainer boot
+                Err(_) => GTrainer::new(self.cfg.seed),
+            },
+            None => return Ok(()), // no failover wiring: event is a no-op
+        };
+        self.stats.trainer_failovers += 1;
+        Ok(())
+    }
+
+    fn fire_preempts(&mut self) {
+        while self.next_preempt < self.pert.preempt_ticks.len()
+            && self.pert.preempt_ticks[self.next_preempt] <= self.tick
+        {
+            self.next_preempt += 1;
+            if self.live_count() <= 1 {
+                continue; // never park the last live sequence
+            }
+            // the real victim rule picks; the park travels the wire-form
+            // snapshot path and re-enters through admission this tick
+            let mut where_of: Vec<(usize, usize)> = Vec::new();
+            let mut views: Vec<SeqView> = Vec::new();
+            for (&id, seqs) in &self.actors {
+                for (i, s) in seqs.iter().enumerate() {
+                    where_of.push((id, i));
+                    views.push(s.view());
+                }
+            }
+            let Some(vi) = self.scheduler.pick_victim(&views, 0) else { continue };
+            let (aid, idx) = where_of[vi];
+            let victim = self.actors.get_mut(&aid).expect("victim shard live").remove(idx);
+            self.hub.deposit_raw(victim.to_snapshot().to_bytes());
+            self.stats.preemptions += 1;
+        }
+    }
+
+    /// Kill victim: the busiest shard (most live sequences, lowest id on
+    /// ties). Deterministic, and — because kills fire against a full pool
+    /// — guaranteed to have work in flight, so every kill exercises the
+    /// serialize → hub → decode → resume path.
+    fn kill_busiest(&mut self) {
+        let victim = self
+            .actors
+            .iter()
+            .max_by_key(|(id, v)| (v.len(), std::cmp::Reverse(**id)))
+            .map(|(id, _)| *id);
+        if let Some(id) = victim {
+            self.kill_actor(id);
+        }
+    }
+
+    fn kill_highest(&mut self) {
+        if let Some(&id) = self.actors.keys().next_back() {
+            self.kill_actor(id);
+        }
+    }
+
+    /// A killed shard's in-flight sequences cross the "process boundary"
+    /// as wire-form `PRLSNAP1` bytes — so every kill exercises the full
+    /// serialize → hub → decode → resume machinery, not a shortcut.
+    fn kill_actor(&mut self, id: usize) {
+        let Some(mut seqs) = self.actors.remove(&id) else { return };
+        seqs.sort_by_key(|s| s.uid);
+        for s in seqs {
+            self.hub.deposit_raw(s.to_snapshot().to_bytes());
+        }
+    }
+
+    fn add_actor(&mut self) {
+        let id = self.next_actor_id;
+        self.next_actor_id += 1;
+        self.actors.insert(id, Vec::new());
+    }
+
+    // ---- admission ----
+
+    /// Seat a sequence on the least-loaded shard (lowest id on ties).
+    /// Placement is canonicalized out of the digest, so this rule only
+    /// has to be deterministic, not clever.
+    fn seat(&mut self, seq: GSeq) {
+        let id = self
+            .actors
+            .iter()
+            .min_by_key(|(id, v)| (v.len(), **id))
+            .map(|(id, _)| *id)
+            .expect("pool never empty");
+        self.actors.get_mut(&id).expect("chosen shard live").push(seq);
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        // portable arrivals first: claims decode the wire bytes (corrupt
+        // deposits are rejected inside the hub with the books balanced)
+        let live = self.live_count();
+        let need = self.cfg.live_target.saturating_sub(live + self.pending.len());
+        if need > 0 {
+            for snap in self.hub.claim(need) {
+                self.pending.push(GSeq::from_snapshot(&snap)?);
+                self.stats.migrated += 1;
+            }
+        }
+        // the real admission policy orders the pending queue; fresh
+        // prompts fill whatever capacity remains
+        while self.live_count() < self.cfg.live_target {
+            if self.pending.is_empty() {
+                let seq = self.fresh_seq();
+                self.seat(seq);
+                continue;
+            }
+            let views: Vec<SeqView> = self.pending.iter().map(|s| s.view()).collect();
+            let Some(idx) = self.scheduler.pick(&views, &|_| true) else {
+                bail!("scheduler refused to admit with an always-open gate");
+            };
+            let seq = self.pending.remove(idx);
+            self.seat(seq);
+        }
+        Ok(())
+    }
+
+    fn fresh_seq(&mut self) -> GSeq {
+        if self.group_fill == 0 {
+            self.group_ctr += 1;
+        }
+        let group = 1000 + self.group_ctr;
+        self.group_fill = (self.group_fill + 1) % self.cfg.group_size;
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        let target = 1 + self.admission_rng.below(self.cfg.max_new);
+        self.stats.fresh_admitted += 1;
+        GSeq::fresh(self.cfg, uid, group, target)
+    }
+
+    // ---- generation ----
+
+    fn generate(&mut self) {
+        // canonical per-tick order: ascending sequence id, independent of
+        // placement — a migrated sequence logs exactly where it would have
+        let mut order: Vec<(u64, usize)> = self
+            .actors
+            .iter()
+            .flat_map(|(&id, seqs)| seqs.iter().map(move |s| (s.uid, id)))
+            .collect();
+        order.sort_unstable();
+        for (uid, aid) in order {
+            let seqs = self.actors.get_mut(&aid).expect("shard live");
+            let s = seqs.iter_mut().find(|s| s.uid == uid).expect("seq resident");
+            let tok = s.rng.below(self.cfg.vocab) as i32;
+            s.toks.push(tok);
+            s.versions.push(self.version);
+            self.log.record(DigestEvent::Token {
+                seq: uid,
+                index: (s.toks.len() - 1) as u32,
+                tok,
+                version: self.version,
+            });
+        }
+        // finishes, in ascending-id order across all shards
+        let mut done: Vec<GSeq> = Vec::new();
+        for seqs in self.actors.values_mut() {
+            let mut i = 0;
+            while i < seqs.len() {
+                if seqs[i].toks.len() >= seqs[i].target {
+                    done.push(seqs.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        done.sort_by_key(|s| s.uid);
+        for s in done {
+            let entry = self.gdone.entry(s.group).or_insert((0, 0));
+            entry.0 += 1;
+            entry.1 += s.toks.len() as u64;
+            if entry.0 == self.cfg.group_size {
+                let tokens = entry.1;
+                self.gdone.remove(&s.group);
+                self.log.record(DigestEvent::GroupComplete { group: s.group, tokens });
+                self.inbox.push_back((s.group, tokens));
+            }
+        }
+    }
+
+    // ---- trainer ----
+
+    /// Consume every ready batch. Returns true when an injected
+    /// checkpoint-boundary kill stopped the run.
+    fn drain_trainer(&mut self, stop_after: Option<u64>) -> Result<bool> {
+        while self.trainer.step < self.cfg.steps && self.inbox.len() >= self.cfg.groups_per_step {
+            let batch: Vec<(u64, u64)> =
+                self.inbox.drain(..self.cfg.groups_per_step).collect();
+            self.trainer.update(&batch, self.cfg.group_size);
+            self.version = self.trainer.step + 1;
+            self.log.record(DigestEvent::TrainerStep {
+                step: self.trainer.step,
+                param_hash: self.trainer.param_hash(),
+            });
+            self.log.record(DigestEvent::RngCursor { words: self.trainer.rng.state_words() });
+            self.log.record(DigestEvent::WeightPublish { version: self.version });
+            if self.cfg.checkpoint_every > 0
+                && self.trainer.step % self.cfg.checkpoint_every == 0
+            {
+                self.checkpoint()?;
+                if stop_after == Some(self.trainer.step) {
+                    return Ok(true); // the process dies here
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// A checkpoint is the digest cut plus everything a resumed process
+    /// needs: the `PRLCKPT3` state (trainer trajectory + engine RNG
+    /// cursor + admission cursor) through the real manifest protocol,
+    /// and an aux sidecar with the digest continuation, group/inbox
+    /// bookkeeping and the in-flight sequences as `PRLSNAP1` bytes. The
+    /// sidecar is fsynced *before* the manifest names its step — the
+    /// same durability-before-visibility rule as the state file.
+    fn checkpoint(&mut self) -> Result<()> {
+        let dir = self.cfg.dir.as_ref().context("checkpointing needs GoldenCfg::dir")?;
+        self.log.record(DigestEvent::CheckpointCut { step: self.trainer.step });
+        self.write_aux(dir)?;
+        let st = self.trainer.to_state(self.admission_rng.state_words(), self.next_uid);
+        st.save_with_manifest(dir, 0)?;
+        self.stats.checkpoints += 1;
+        Ok(())
+    }
+
+    fn write_aux(&mut self, dir: &Path) -> Result<()> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(b"PRLGOLD1");
+        let digest = self.log.digest();
+        for x in [
+            digest.hash,
+            digest.events,
+            self.version,
+            self.tick,
+            self.group_ctr,
+            self.group_fill as u64,
+            self.next_chaos as u64,
+            self.next_preempt as u64,
+        ] {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.inbox.len() as u32).to_le_bytes());
+        for (gid, toks) in &self.inbox {
+            b.extend_from_slice(&gid.to_le_bytes());
+            b.extend_from_slice(&toks.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.gdone.len() as u32).to_le_bytes());
+        for (gid, (done, toks)) in &self.gdone {
+            b.extend_from_slice(&gid.to_le_bytes());
+            b.extend_from_slice(&(*done as u64).to_le_bytes());
+            b.extend_from_slice(&toks.to_le_bytes());
+        }
+        // in-flight sequences in canonical id order: live, then pending,
+        // then anything still queued in the hub (claims re-deposit below)
+        let mut snaps: Vec<Vec<u8>> = Vec::new();
+        let mut live: Vec<&GSeq> = self.actors.values().flatten().collect();
+        live.sort_by_key(|s| s.uid);
+        for s in live {
+            snaps.push(s.to_snapshot().to_bytes());
+        }
+        let mut queued: Vec<&GSeq> = self.pending.iter().collect();
+        queued.sort_by_key(|s| s.uid);
+        for s in queued {
+            snaps.push(s.to_snapshot().to_bytes());
+        }
+        for snap in self.hub.claim(usize::MAX) {
+            let bytes = snap.to_bytes();
+            self.hub.deposit_raw(bytes.clone());
+            snaps.push(bytes);
+        }
+        b.extend_from_slice(&(snaps.len() as u32).to_le_bytes());
+        for s in &snaps {
+            b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            b.extend_from_slice(s);
+        }
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(aux_name(self.trainer.step));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(&b)?;
+        f.sync_all()?;
+        Ok(())
+    }
+}
+
+fn aux_name(step: u64) -> String {
+    format!("step{step:05}.aux")
+}
+
+struct Aux {
+    hash: u64,
+    events: u64,
+    version: u64,
+    tick: u64,
+    group_ctr: u64,
+    group_fill: u64,
+    fired_chaos: u64,
+    fired_preempts: u64,
+    inbox: VecDeque<(u64, u64)>,
+    gdone: BTreeMap<u64, (usize, u64)>,
+    snaps: Vec<Vec<u8>>,
+}
+
+fn aux_take<'b>(bytes: &'b [u8], at: &mut usize, n: usize) -> Result<&'b [u8]> {
+    ensure!(*at + n <= bytes.len(), "aux sidecar truncated at offset {at}");
+    let s = &bytes[*at..*at + n];
+    *at += n;
+    Ok(s)
+}
+
+fn aux_u64(bytes: &[u8], at: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(aux_take(bytes, at, 8)?.try_into().expect("8 bytes")))
+}
+
+fn aux_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(aux_take(bytes, at, 4)?.try_into().expect("4 bytes")))
+}
+
+fn read_aux(dir: &Path, step: u64) -> Result<Aux> {
+    let path = dir.join(aux_name(step));
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+    let b = bytes.as_slice();
+    let mut at = 0usize;
+    ensure!(
+        aux_take(b, &mut at, 8)? == b"PRLGOLD1",
+        "{path:?} is not a golden aux sidecar"
+    );
+    let hash = aux_u64(b, &mut at)?;
+    let events = aux_u64(b, &mut at)?;
+    let version = aux_u64(b, &mut at)?;
+    let tick = aux_u64(b, &mut at)?;
+    let group_ctr = aux_u64(b, &mut at)?;
+    let group_fill = aux_u64(b, &mut at)?;
+    let fired_chaos = aux_u64(b, &mut at)?;
+    let fired_preempts = aux_u64(b, &mut at)?;
+    let n_inbox = aux_u32(b, &mut at)? as usize;
+    let mut inbox = VecDeque::with_capacity(n_inbox);
+    for _ in 0..n_inbox {
+        let gid = aux_u64(b, &mut at)?;
+        let toks = aux_u64(b, &mut at)?;
+        inbox.push_back((gid, toks));
+    }
+    let n_gdone = aux_u32(b, &mut at)? as usize;
+    let mut gdone = BTreeMap::new();
+    for _ in 0..n_gdone {
+        let gid = aux_u64(b, &mut at)?;
+        let done = aux_u64(b, &mut at)? as usize;
+        let toks = aux_u64(b, &mut at)?;
+        gdone.insert(gid, (done, toks));
+    }
+    let n_snaps = aux_u32(b, &mut at)? as usize;
+    let mut snaps = Vec::with_capacity(n_snaps);
+    for _ in 0..n_snaps {
+        let len = aux_u32(b, &mut at)? as usize;
+        snaps.push(aux_take(b, &mut at, len)?.to_vec());
+    }
+    ensure!(at == bytes.len(), "aux sidecar has trailing bytes");
+    Ok(Aux {
+        hash,
+        events,
+        version,
+        tick,
+        group_ctr,
+        group_fill,
+        fired_chaos,
+        fired_preempts,
+        inbox,
+        gdone,
+        snaps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_encodings_are_distinct_and_stable() {
+        let evs = [
+            DigestEvent::Token { seq: 1, index: 0, tok: 5, version: 1 },
+            DigestEvent::Token { seq: 1, index: 0, tok: 5, version: 2 },
+            DigestEvent::GroupComplete { group: 1, tokens: 5 },
+            DigestEvent::TrainerStep { step: 1, param_hash: 5 },
+            DigestEvent::WeightPublish { version: 1 },
+            DigestEvent::RngCursor { words: [1, 0, 5, 0] },
+            DigestEvent::CheckpointCut { step: 1 },
+        ];
+        let mut seen = Vec::new();
+        for ev in evs {
+            let mut log = EventLog::new();
+            log.record(ev);
+            let d = log.digest();
+            assert!(!seen.contains(&d.hash), "encoding collision for {ev:?}");
+            seen.push(d.hash);
+        }
+    }
+
+    #[test]
+    fn event_log_resume_continues_the_hash() {
+        let evs = [
+            DigestEvent::WeightPublish { version: 1 },
+            DigestEvent::Token { seq: 0, index: 0, tok: 9, version: 1 },
+            DigestEvent::TrainerStep { step: 1, param_hash: 42 },
+        ];
+        let mut whole = EventLog::new();
+        for ev in evs {
+            whole.record(ev);
+        }
+        let mut first = EventLog::new();
+        first.record(evs[0]);
+        first.record(evs[1]);
+        let mut second = EventLog::resumed(first.digest());
+        second.record(evs[2]);
+        assert_eq!(second.digest(), whole.digest(), "split log folds to the same digest");
+        assert_eq!(second.base(), 2);
+    }
+
+    #[test]
+    fn explain_divergence_names_the_first_mismatch() {
+        let mut a = EventLog::new();
+        let mut b = EventLog::new();
+        a.record(DigestEvent::WeightPublish { version: 1 });
+        b.record(DigestEvent::WeightPublish { version: 1 });
+        a.record(DigestEvent::Token { seq: 3, index: 0, tok: 7, version: 1 });
+        b.record(DigestEvent::Token { seq: 3, index: 0, tok: 8, version: 1 });
+        let why = explain_divergence(&a, &[&b]);
+        assert!(why.contains("event 1"), "{why}");
+        assert!(why.contains("tok: 7") && why.contains("tok: 8"), "{why}");
+    }
+
+    #[test]
+    fn golden_run_is_seed_deterministic() {
+        let cfg = GoldenCfg::new(0x90_1d_e2);
+        let a = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        let b = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        assert_eq!(a.log.digest(), b.log.digest(), "same seed, same digest");
+        assert_eq!(a.steps_done, cfg.steps);
+        assert!(a.stats.fresh_admitted > 0 && a.stats.ticks > 0);
+
+        let other = GoldenCfg::new(0x90_1d_e3);
+        let c = GoldenPipeline::run(&other, &Perturbation::none()).unwrap();
+        assert_ne!(a.log.digest(), c.log.digest(), "different seed, different digest");
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_version_tags() {
+        // the same tokens trained under a different publish cadence must
+        // not alias: version tags are part of every Token event
+        let mut cfg = GoldenCfg::new(7);
+        let a = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        cfg.groups_per_step = 3; // later publishes => different tags
+        let b = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        assert_ne!(a.log.digest(), b.log.digest());
+    }
+
+    #[test]
+    fn kill_and_migrate_is_digest_equivalent() {
+        // the in-module smoke test of the tentpole claim (the full
+        // matrix lives in tests/determinism.rs): a mid-run shard kill
+        // whose sequences travel as bytes through the hub changes nothing
+        let cfg = GoldenCfg::new(0xbee5);
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        let pert = Perturbation::chaos(ChaosSchedule::kill_then_restart(2, 4));
+        let run = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert!(run.stats.migrated > 0, "the kill had sequences in flight");
+        assert_eq!(
+            base.log.digest(),
+            run.log.digest(),
+            "{}",
+            explain_divergence(&base.log, &[&run.log])
+        );
+    }
+
+    #[test]
+    fn corrupt_deposits_never_perturb_the_digest() {
+        let cfg = GoldenCfg::new(0x0bad);
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        let pert = Perturbation::chaos(ChaosSchedule::byzantine(1, 4));
+        let run = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert_eq!(run.stats.corrupt_rejected, 4, "all poison rejected at claim");
+        assert_eq!(base.log.digest(), run.log.digest());
+    }
+
+    #[test]
+    fn aux_sidecar_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("prl_gold_aux_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = GoldenCfg::new(0xa0a0);
+        cfg.steps = 4;
+        cfg.checkpoint_every = 2;
+        cfg.dir = Some(dir.clone());
+        let run = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        assert_eq!(run.stats.checkpoints, 2);
+        let aux = read_aux(&dir, 4).unwrap();
+        assert!(aux.events > 0 && aux.version == 5);
+        for s in &aux.snaps {
+            SeqSnapshot::from_bytes(s).expect("sidecar snapshots decode");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

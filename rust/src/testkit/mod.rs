@@ -11,10 +11,38 @@
 //! supervisor executes against a live run.
 
 pub mod chaos;
+pub mod golden;
+pub mod synth;
 
 pub use chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
+pub use golden::{DigestEvent, EventLog, RunDigest};
 
 use crate::util::Rng;
+
+/// Run a seeded test body and guarantee the replay seed reaches the
+/// failure output. Chaos scenarios used to print their seed through the
+/// supervisor's schedule banner — which only happens *after* the schedule
+/// is materialized and a supervisor is running, so an assertion that
+/// fired earlier (building the harness, pre-flight checks) or on a path
+/// with no supervisor lost the one number needed to replay it. Every
+/// seeded chaos/determinism test should wrap its body in this instead:
+/// on panic the seed is printed unconditionally, then the panic resumes.
+pub fn with_seed<T>(name: &str, seed: u64, body: impl FnOnce(u64) -> T) -> T {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(seed))) {
+        Ok(v) => v,
+        Err(payload) => {
+            // seed 0 is the hand-written-scenario convention
+            // (ChaosSchedule::{kill_then_restart, slow_kill, ...}): the
+            // schedule is fully deterministic, nothing to re-derive
+            if seed == 0 {
+                eprintln!("REPLAY {name}: hand-written deterministic scenario (seed 0)");
+            } else {
+                eprintln!("REPLAY {name}: failing seed = {seed:#x} ({seed})");
+            }
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
 
 /// Integration-test gate: true when a PJRT runtime + AOT artifacts are
 /// present; otherwise prints a `SKIP <test>` line with the reason and
@@ -122,6 +150,20 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn failing_property_panics_with_seed() {
         check("always fails", 5, 2, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn with_seed_passes_value_through() {
+        let v = with_seed("unit", 42, |s| s * 2);
+        assert_eq!(v, 84);
+    }
+
+    #[test]
+    fn with_seed_reprints_seed_and_repanics() {
+        let caught = std::panic::catch_unwind(|| {
+            with_seed("unit", 7, |_| panic!("inner failure"));
+        });
+        assert!(caught.is_err(), "the original panic must propagate");
     }
 
     #[test]

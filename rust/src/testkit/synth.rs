@@ -1,0 +1,111 @@
+//! Shared deterministic synthetic trainer for checkpoint/failover tests.
+//!
+//! An Adam-shaped update on a small parameter set, gradients synthesized
+//! from a seeded RNG whose cursor is checkpointed — everything that
+//! affects the trajectory lives in [`TrainState`], so "resume from a
+//! manifest" is bit-identical iff the state round-trips completely.
+//! tests/checkpoint_resume.rs pins that property (and its negative
+//! controls); tests/determinism.rs drives the same trainer through the
+//! real supervisor's failover slot.
+
+use crate::model::checkpoint::TrainState;
+use crate::runtime::HostTensor;
+use crate::util::Rng;
+
+pub struct SynthTrainer {
+    pub variant: String,
+    /// completed optimizer steps
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub samples: f64,
+    pub tokens: f64,
+    pub rng: Rng,
+}
+
+impl SynthTrainer {
+    pub fn new(seed: u64) -> SynthTrainer {
+        let n = 6;
+        let mut rng = Rng::new(seed);
+        let init: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        SynthTrainer {
+            variant: "synthetic".into(),
+            step: 0,
+            params: vec![HostTensor::from_f32(&[n], init)],
+            m: vec![HostTensor::zeros_f32(&[n])],
+            v: vec![HostTensor::zeros_f32(&[n])],
+            samples: 0.0,
+            tokens: 0.0,
+            rng,
+        }
+    }
+
+    pub fn step(&mut self) {
+        self.step += 1;
+        let lr = 0.05f32;
+        for i in 0..self.params.len() {
+            let n = self.params[i].numel();
+            let grads: Vec<f32> = (0..n).map(|_| self.rng.f32() - 0.5).collect();
+            let p = self.params[i].f32s_mut().unwrap();
+            let m = self.m[i].f32s_mut().unwrap();
+            let v = self.v[i].f32s_mut().unwrap();
+            for j in 0..p.len() {
+                m[j] = 0.9 * m[j] + 0.1 * grads[j];
+                v[j] = 0.99 * v[j] + 0.01 * grads[j] * grads[j];
+                p[j] -= lr * m[j] / (v[j].sqrt() + 1e-8);
+            }
+        }
+        self.samples += 16.0;
+        self.tokens += 512.0;
+    }
+
+    pub fn to_state(&self) -> TrainState {
+        TrainState {
+            variant: self.variant.clone(),
+            step: self.step,
+            params: self.params.clone(),
+            opt_m: self.m.clone(),
+            opt_v: self.v.clone(),
+            samples_total: self.samples,
+            tokens_total: self.tokens,
+            rng: self.rng.state_words(),
+            // this trainer owns no engine; the generation-side cursors
+            // are exercised by the golden harness (testkit::golden)
+            engine_rng: [0; 4],
+            sched_cursor: 0,
+        }
+    }
+
+    pub fn from_state(st: TrainState) -> SynthTrainer {
+        SynthTrainer {
+            variant: st.variant,
+            step: st.step,
+            params: st.params,
+            m: st.opt_m,
+            v: st.opt_v,
+            samples: st.samples_total,
+            tokens: st.tokens_total,
+            rng: Rng::from_state_words(st.rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrip_is_lossless_in_memory() {
+        let mut t = SynthTrainer::new(11);
+        for _ in 0..5 {
+            t.step();
+        }
+        let back = SynthTrainer::from_state(t.to_state());
+        assert_eq!(back.step, 5);
+        assert_eq!(back.params, t.params);
+        assert_eq!(back.m, t.m);
+        assert_eq!(back.v, t.v);
+        assert_eq!(back.samples, t.samples);
+    }
+}

@@ -17,88 +17,16 @@
 use pipeline_rl::config::RunConfig;
 use pipeline_rl::coordinator;
 use pipeline_rl::data::task::TaskKind;
-use pipeline_rl::model::checkpoint::TrainState;
+use pipeline_rl::model::checkpoint::{
+    read_manifest, AsyncCheckpointer, CkptFault, TrainState,
+};
 use pipeline_rl::runtime::HostTensor;
-use pipeline_rl::testkit::runtime_or_skip;
+// the shared deterministic trainer: everything that affects its
+// trajectory lives in `TrainState`, which is exactly what these tests pin
+use pipeline_rl::testkit::synth::SynthTrainer as SyntheticTrainer;
+use pipeline_rl::testkit::{self, runtime_or_skip};
 use pipeline_rl::util::Rng;
 use std::path::Path;
-
-/// Minimal deterministic "trainer": Adam-ish update on a small parameter
-/// set, gradients synthesized from a seeded RNG. Everything that affects
-/// the trajectory lives in `TrainState`.
-struct SyntheticTrainer {
-    variant: String,
-    step: u64,
-    params: Vec<HostTensor>,
-    m: Vec<HostTensor>,
-    v: Vec<HostTensor>,
-    samples: f64,
-    tokens: f64,
-    rng: Rng,
-}
-
-impl SyntheticTrainer {
-    fn new(seed: u64) -> Self {
-        let n = 6;
-        let mut rng = Rng::new(seed);
-        let init: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
-        SyntheticTrainer {
-            variant: "synthetic".into(),
-            step: 0,
-            params: vec![HostTensor::from_f32(&[n], init)],
-            m: vec![HostTensor::zeros_f32(&[n])],
-            v: vec![HostTensor::zeros_f32(&[n])],
-            samples: 0.0,
-            tokens: 0.0,
-            rng,
-        }
-    }
-
-    fn step(&mut self) {
-        self.step += 1;
-        let lr = 0.05f32;
-        for i in 0..self.params.len() {
-            let n = self.params[i].numel();
-            let grads: Vec<f32> = (0..n).map(|_| self.rng.f32() - 0.5).collect();
-            let p = self.params[i].f32s_mut().unwrap();
-            let m = self.m[i].f32s_mut().unwrap();
-            let v = self.v[i].f32s_mut().unwrap();
-            for j in 0..p.len() {
-                m[j] = 0.9 * m[j] + 0.1 * grads[j];
-                v[j] = 0.99 * v[j] + 0.01 * grads[j] * grads[j];
-                p[j] -= lr * m[j] / (v[j].sqrt() + 1e-8);
-            }
-        }
-        self.samples += 16.0;
-        self.tokens += 512.0;
-    }
-
-    fn to_state(&self) -> TrainState {
-        TrainState {
-            variant: self.variant.clone(),
-            step: self.step,
-            params: self.params.clone(),
-            opt_m: self.m.clone(),
-            opt_v: self.v.clone(),
-            samples_total: self.samples,
-            tokens_total: self.tokens,
-            rng: self.rng.state_words(),
-        }
-    }
-
-    fn from_state(st: TrainState) -> Self {
-        SyntheticTrainer {
-            variant: st.variant,
-            step: st.step,
-            params: st.params,
-            m: st.opt_m,
-            v: st.opt_v,
-            samples: st.samples_total,
-            tokens: st.tokens_total,
-            rng: Rng::from_state_words(st.rng),
-        }
-    }
-}
 
 #[test]
 fn resume_replays_uninterrupted_run_bit_identically() {
@@ -174,6 +102,111 @@ fn dropping_any_state_piece_breaks_the_replay() {
         b3.step();
     }
     assert_ne!(a.params, b3.params, "zeroed optimizer state must be detectable");
+}
+
+/// Everything the durability property needs to hold after a crash at an
+/// arbitrary protocol stage: the manifest (if present) parses, every
+/// state it names loads fully, and its latest state is the last save
+/// that *completed* — a crash can lose the newest state, never corrupt
+/// the recoverable one.
+fn assert_recoverable(dir: &Path, expect_latest: u64) -> Result<(), String> {
+    let (latest, history) =
+        read_manifest(dir).map_err(|e| format!("manifest unreadable after crash: {e}"))?;
+    for name in history.iter().chain(std::iter::once(&latest)) {
+        let st = TrainState::load(&dir.join(name))
+            .map_err(|e| format!("manifest names unloadable state {name}: {e}"))?;
+        if TrainState::file_name(st.step) != *name {
+            return Err(format!("state {name} claims step {}", st.step));
+        }
+    }
+    let st = TrainState::load_latest(dir).map_err(|e| format!("load_latest: {e}"))?;
+    if st.step != expect_latest {
+        return Err(format!(
+            "latest resolves to step {}, want {expect_latest}",
+            st.step
+        ));
+    }
+    Ok(())
+}
+
+/// Satellite: the crash-window property — inject a failure at *each*
+/// stage of the submit → write → fsync → rename protocol, at a random
+/// point in a sequence of checkpoints, and the manifest must never name
+/// a state file that was not fully fsynced. Exercises the prune-after-
+/// rename ordering too (keep_last windows small enough to prune).
+#[test]
+fn property_manifest_never_names_an_unfsynced_state() {
+    const FAULTS: [CkptFault; 5] = [
+        CkptFault::StateWrite,
+        CkptFault::StateFsync,
+        CkptFault::ManifestWrite,
+        CkptFault::ManifestFsync,
+        CkptFault::ManifestRename,
+    ];
+    testkit::check("ckpt crash-window", 60, 0xc4a5_11, 16, |c| {
+        let dir = std::env::temp_dir().join(format!(
+            "prl_crashwin_{}_{}",
+            std::process::id(),
+            c.rng.next_u64()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let keep_last = c.usize_in(0, 3);
+        let n_good = c.usize_in(1, 5);
+        let fault = *c.rng.choice(&FAULTS);
+        let mut trainer = SyntheticTrainer::new(0x5eed ^ n_good as u64);
+        let mut last_good = 0u64;
+        for _ in 0..n_good {
+            trainer.step();
+            trainer
+                .to_state()
+                .save_with_manifest(&dir, keep_last)
+                .map_err(|e| format!("good save failed: {e}"))?;
+            last_good = trainer.step;
+        }
+        // the crash: one more checkpoint dies mid-protocol
+        trainer.step();
+        let crashed = trainer
+            .to_state()
+            .save_with_manifest_faulted(&dir, keep_last, Some(fault));
+        if crashed.is_ok() {
+            return Err(format!("injected {fault:?} did not surface"));
+        }
+        let res = assert_recoverable(&dir, last_good);
+        std::fs::remove_dir_all(&dir).ok();
+        res.map_err(|e| format!("after {fault:?} at step {}: {e}", last_good + 1))
+    });
+}
+
+/// The async writer path hits the same crash windows through its own
+/// thread: the injected fault surfaces at finish(), and the directory
+/// still resolves to the last fully-written state.
+#[test]
+fn async_writer_crash_window_leaves_recoverable_state() {
+    for fault in [CkptFault::StateFsync, CkptFault::ManifestRename] {
+        let dir = std::env::temp_dir().join(format!(
+            "prl_acrash_{}_{fault:?}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut trainer = SyntheticTrainer::new(9);
+        let w = AsyncCheckpointer::new(dir.clone(), 2);
+        trainer.step();
+        w.submit(trainer.to_state());
+        // wait for the good write to land before injecting the crash:
+        // latest-wins would otherwise supersede it
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while read_manifest(&dir).is_err() {
+            assert!(std::time::Instant::now() < deadline, "first write never landed");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        w.inject_fault_next(fault);
+        trainer.step();
+        w.submit(trainer.to_state());
+        let err = w.finish();
+        assert!(err.is_err(), "{fault:?} must surface at finish()");
+        assert_recoverable(&dir, 1).unwrap_or_else(|e| panic!("{fault:?}: {e}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 #[test]

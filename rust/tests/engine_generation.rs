@@ -383,3 +383,71 @@ fn drain_aborts_in_flight() {
     let out = eng.step().unwrap();
     assert!(!out.idle);
 }
+
+#[test]
+fn resume_cursors_continue_the_sampling_stream() {
+    if !runtime_or_skip("resume_cursors_continue_the_sampling_stream") {
+        return;
+    }
+    // The PRLCKPT3 cursor contract on the real engine: exporting
+    // (rng_words, admission_cursor) from one engine and restoring them
+    // into a fresh one continues the exact sampling stream and id space
+    // — the full-run-resume building block the golden harness models
+    // device-free (tests/determinism.rs).
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 10;
+    let (mut rt, mut a) = mk_engine(cfg.clone());
+    let params = rt.init_params("tiny", 7).unwrap();
+    a.set_weights(1, &params).unwrap();
+    submit_n(&mut a, 2);
+    let mut finished = Vec::new();
+    for _ in 0..400 {
+        finished.extend(a.step().unwrap().finished);
+        if finished.len() >= 2 {
+            break;
+        }
+    }
+    assert_eq!(finished.len(), 2);
+    let words = a.rng_words();
+    let cursor = a.admission_cursor();
+    assert!(cursor >= 3, "two admissions moved the cursor past its start");
+
+    // reference: the donor engine keeps going
+    submit_n(&mut a, 2);
+    let mut ref_rolls = Vec::new();
+    for _ in 0..400 {
+        ref_rolls.extend(a.step().unwrap().finished);
+        if ref_rolls.len() >= 2 {
+            break;
+        }
+    }
+
+    // resumed twin: fresh engine, cursors restored — same ids, same
+    // tokens, same logprobs as the donor's continuation
+    let (_rt2, mut b) = mk_engine(cfg);
+    b.set_weights(1, &params).unwrap();
+    b.restore_rng(words).unwrap();
+    b.restore_admission_cursor(cursor).unwrap();
+    assert_eq!(b.admission_cursor(), cursor);
+    submit_n(&mut b, 2);
+    let mut res_rolls = Vec::new();
+    for _ in 0..400 {
+        res_rolls.extend(b.step().unwrap().finished);
+        if res_rolls.len() >= 2 {
+            break;
+        }
+    }
+    ref_rolls.sort_by_key(|r| r.seq_id);
+    res_rolls.sort_by_key(|r| r.seq_id);
+    assert_eq!(ref_rolls.len(), res_rolls.len());
+    for (x, y) in ref_rolls.iter().zip(&res_rolls) {
+        assert_eq!(x.seq_id, y.seq_id, "admission cursor keeps the id space aligned");
+        assert_eq!(x.gen_tokens, y.gen_tokens, "restored RNG continues the stream");
+        assert_eq!(x.token_version, y.token_version);
+    }
+
+    // the guards: a rewound admission cursor and the degenerate all-zero
+    // RNG cursor (the PRLCKPT2-compat sentinel) must both be refused
+    assert!(b.restore_admission_cursor(0).is_err(), "rewind refused");
+    assert!(b.restore_rng([0; 4]).is_err(), "zero RNG cursor refused");
+}

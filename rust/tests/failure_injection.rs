@@ -29,7 +29,7 @@ use pipeline_rl::model::Tokenizer;
 use pipeline_rl::rl::{FinishReason, Rollout};
 use pipeline_rl::runtime::Runtime;
 use pipeline_rl::testkit::chaos::ChaosSchedule;
-use pipeline_rl::testkit::runtime_or_skip;
+use pipeline_rl::testkit::{runtime_or_skip, with_seed};
 use pipeline_rl::util::Rng;
 use pipeline_rl::weights::WeightBus;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -124,63 +124,68 @@ fn chaos_kill_then_restart_keeps_pipeline_alive() {
     // synthetic actors: one actor, killed at step 3, replacement added at
     // step 6, a fake trainer advancing the version clock to 10. The run
     // must keep producing rollouts throughout — no deadlock, no Closed.
-    let hub = MetricsHub::new();
-    let bus = WeightBus::new();
-    bus.publish(1, Arc::new(vec![]));
-    let (tx, rx) = topic::<Rollout>("rollouts", 64, Policy::DropOldest);
-    let stop = Arc::new(AtomicBool::new(false));
-
-    let pool = ActorPool::new(
-        synthetic_spawn(bus.clone(), tx.clone()),
-        stop.clone(),
-        hub.clone(),
-        1,     // initial
-        1,     // min
-        4,     // max
-        2,     // respawn budget
-        false, // tolerate crashes
-    )
-    .unwrap();
+    // with_seed: the replay seed reaches the output even if an assertion
+    // fires before the supervisor prints its schedule banner.
     let schedule = ChaosSchedule::kill_then_restart(3, 6);
-    let sup_args = SupervisorArgs {
-        pool,
-        bus: bus.clone(),
-        rollout_tx: tx.clone(),
-        schedule: Some(schedule),
-        stop: stop.clone(),
-        hub: hub.clone(),
-        poll: Duration::from_millis(2),
-        migrate: None,
-        autoscale: None,
-    };
-    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+    with_seed("chaos_kill_then_restart", schedule.seed, move |_| {
+        let hub = MetricsHub::new();
+        let bus = WeightBus::new();
+        bus.publish(1, Arc::new(vec![]));
+        let (tx, rx) = topic::<Rollout>("rollouts", 64, Policy::DropOldest);
+        let stop = Arc::new(AtomicBool::new(false));
 
-    // fake trainer: 20 rollouts per "optimizer step", 10 steps
-    let mut consumed = 0u64;
-    let mut version = 1u64;
-    while version <= 10 {
-        match rx.recv(Duration::from_secs(10)) {
-            Ok(_) => {
-                consumed += 1;
-                if consumed % 20 == 0 {
-                    version += 1;
-                    bus.publish(version, Arc::new(vec![]));
+        let pool = ActorPool::new(
+            synthetic_spawn(bus.clone(), tx.clone()),
+            stop.clone(),
+            hub.clone(),
+            1,     // initial
+            1,     // min
+            4,     // max
+            2,     // respawn budget
+            false, // tolerate crashes
+        )
+        .unwrap();
+        let sup_args = SupervisorArgs {
+            pool,
+            bus: bus.clone(),
+            rollout_tx: tx.clone(),
+            schedule: Some(schedule),
+            stop: stop.clone(),
+            hub: hub.clone(),
+            poll: Duration::from_millis(2),
+            migrate: None,
+            autoscale: None,
+            trainer: None,
+        };
+        let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+        // fake trainer: 20 rollouts per "optimizer step", 10 steps
+        let mut consumed = 0u64;
+        let mut version = 1u64;
+        while version <= 10 {
+            match rx.recv(Duration::from_secs(10)) {
+                Ok(_) => {
+                    consumed += 1;
+                    if consumed % 20 == 0 {
+                        version += 1;
+                        bus.publish(version, Arc::new(vec![]));
+                    }
                 }
+                Err(e) => panic!("pipeline stalled at version {version}: {e:?}"),
             }
-            Err(e) => panic!("pipeline stalled at version {version}: {e:?}"),
         }
-    }
-    stop.store(true, Ordering::Relaxed);
-    drop(tx);
-    sup.join().unwrap().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        drop(tx);
+        sup.join().unwrap().unwrap();
 
-    assert!(consumed >= 200, "rollouts flowed the whole run: {consumed}");
-    assert_eq!(hub.counter("chaos_events_fired"), 2.0);
-    assert!(hub.counter("actors_killed") >= 1.0, "kill event fired");
-    // initial + (floor top-up after the kill) + scheduled add
-    assert!(hub.counter("actors_spawned") >= 2.0);
-    // every incarnation de-registered on halt
-    assert!(bus.receivers().is_empty(), "left: {:?}", bus.receivers());
+        assert!(consumed >= 200, "rollouts flowed the whole run: {consumed}");
+        assert_eq!(hub.counter("chaos_events_fired"), 2.0);
+        assert!(hub.counter("actors_killed") >= 1.0, "kill event fired");
+        // initial + (floor top-up after the kill) + scheduled add
+        assert!(hub.counter("actors_spawned") >= 2.0);
+        // every incarnation de-registered on halt
+        assert!(bus.receivers().is_empty(), "left: {:?}", bus.receivers());
+    });
 }
 
 #[test]
@@ -340,17 +345,21 @@ fn scenario_seeded_schedule_runs_to_completion() {
     if !runtime_or_skip("scenario_seeded_schedule") {
         return;
     }
-    // a generated (seed-derived) schedule with mixed fault kinds; the
-    // seed is printed by the supervisor, so any failure here replays.
-    let mut cfg = small_pipeline_cfg();
-    cfg.rl_steps = 6;
-    cfg.n_actors = 2;
-    cfg.elastic.enabled = true;
-    let schedule = ChaosSchedule::generate(0xdead_beef, 6, 4);
-    let summary =
-        coordinator::run_with_chaos(cfg, None, Some(schedule)).expect("seeded chaos run");
-    assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 6);
-    assert!(summary.report.counters["samples_trained"] > 0.0);
+    // a generated (seed-derived) schedule with mixed fault kinds. The
+    // with_seed wrapper (not just the supervisor's banner, which only
+    // prints once a supervisor is running) guarantees the replay seed
+    // reaches the failure output from every path.
+    with_seed("scenario_seeded_schedule", 0xdead_beef, |seed| {
+        let mut cfg = small_pipeline_cfg();
+        cfg.rl_steps = 6;
+        cfg.n_actors = 2;
+        cfg.elastic.enabled = true;
+        let schedule = ChaosSchedule::generate(seed, 6, 4);
+        let summary =
+            coordinator::run_with_chaos(cfg, None, Some(schedule)).expect("seeded chaos run");
+        assert_eq!(summary.report.series("train/loss").unwrap().points.len(), 6);
+        assert!(summary.report.counters["samples_trained"] > 0.0);
+    });
 }
 
 #[test]

@@ -196,91 +196,101 @@ fn migrating_spawn(
 /// discarded) balance in the metrics.
 #[test]
 fn chaos_kill_one_of_three_loses_no_salvageable_tokens() {
-    let hub = MetricsHub::new();
-    let bus = WeightBus::new();
-    bus.publish(1, Arc::new(vec![]));
-    let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
-    let stop = Arc::new(AtomicBool::new(false));
-    let hub_m = Arc::new(MigrationHub::new());
-    let deposited = Arc::new(Mutex::new(Vec::new()));
-
-    let pool = ActorPool::new(
-        migrating_spawn(bus.clone(), tx.clone(), hub.clone(), hub_m.clone(), deposited.clone()),
-        stop.clone(),
-        hub.clone(),
-        3,     // initial
-        2,     // min: the victim is retired, survivors adopt
-        4,     // max
-        4,     // respawn budget
-        false, // tolerate churn
-    )
-    .unwrap();
     // slow kill (satellite: latency-injected, not instant): fires once
-    // the version clock passes 2, halt lands 10ms later
+    // the version clock passes 2, halt lands 10ms later. with_seed puts
+    // the replay seed in the failure output on every path.
     let schedule = ChaosSchedule::slow_kill(2, 10);
-    let sup_args = SupervisorArgs {
-        pool,
-        bus: bus.clone(),
-        rollout_tx: tx.clone(),
-        schedule: Some(schedule),
-        stop: stop.clone(),
-        hub: hub.clone(),
-        poll: Duration::from_millis(2),
-        migrate: Some(hub_m.clone()),
-        autoscale: None,
-    };
-    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+    testkit::with_seed("chaos_kill_one_of_three", schedule.seed, move |_| {
+        let hub = MetricsHub::new();
+        let bus = WeightBus::new();
+        bus.publish(1, Arc::new(vec![]));
+        let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
+        let stop = Arc::new(AtomicBool::new(false));
+        let hub_m = Arc::new(MigrationHub::new());
+        let deposited = Arc::new(Mutex::new(Vec::new()));
 
-    // fake trainer: consume rollouts, advance the version clock, and run
-    // until every deposited snapshot provably completed elsewhere
-    let deadline = Instant::now() + Duration::from_secs(30);
-    let mut consumed: Vec<Rollout> = Vec::new();
-    let mut version = 1u64;
-    loop {
-        assert!(
-            Instant::now() < deadline,
-            "migration did not complete: {} consumed, {} deposited, {} claimed",
-            consumed.len(),
-            hub_m.deposited(),
-            hub_m.claimed()
-        );
-        if let Ok(r) = rx.recv(Duration::from_millis(500)) {
-            consumed.push(r);
-            if consumed.len() % 25 == 0 {
-                version += 1;
-                bus.publish(version, Arc::new(vec![]));
+        let pool = ActorPool::new(
+            migrating_spawn(
+                bus.clone(),
+                tx.clone(),
+                hub.clone(),
+                hub_m.clone(),
+                deposited.clone(),
+            ),
+            stop.clone(),
+            hub.clone(),
+            3,     // initial
+            2,     // min: the victim is retired, survivors adopt
+            4,     // max
+            4,     // respawn budget
+            false, // tolerate churn
+        )
+        .unwrap();
+        let sup_args = SupervisorArgs {
+            pool,
+            bus: bus.clone(),
+            rollout_tx: tx.clone(),
+            schedule: Some(schedule),
+            stop: stop.clone(),
+            hub: hub.clone(),
+            poll: Duration::from_millis(2),
+            migrate: Some(hub_m.clone()),
+            autoscale: None,
+            trainer: None,
+        };
+        let sup = std::thread::spawn(move || run_supervisor(sup_args));
+
+        // fake trainer: consume rollouts, advance the version clock, and run
+        // until every deposited snapshot provably completed elsewhere
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut consumed: Vec<Rollout> = Vec::new();
+        let mut version = 1u64;
+        loop {
+            assert!(
+                Instant::now() < deadline,
+                "migration did not complete: {} consumed, {} deposited, {} claimed",
+                consumed.len(),
+                hub_m.deposited(),
+                hub_m.claimed()
+            );
+            if let Ok(r) = rx.recv(Duration::from_millis(500)) {
+                consumed.push(r);
+                if consumed.len() % 25 == 0 {
+                    version += 1;
+                    bus.publish(version, Arc::new(vec![]));
+                }
+            }
+            let dep = deposited.lock().unwrap();
+            let all_completed_elsewhere = !dep.is_empty()
+                && hub_m.depth() == 0
+                && dep.iter().all(|s| {
+                    consumed.iter().any(|r| {
+                        r.group_id == s.group_id
+                            && r.actor_id != 0
+                            && r.gen_tokens.len() >= s.gen_tokens.len()
+                            && r.gen_tokens[..s.gen_tokens.len()] == s.gen_tokens[..]
+                    })
+                });
+            if all_completed_elsewhere {
+                break;
             }
         }
-        let dep = deposited.lock().unwrap();
-        let all_completed_elsewhere = !dep.is_empty()
-            && hub_m.depth() == 0
-            && dep.iter().all(|s| {
-                consumed.iter().any(|r| {
-                    r.group_id == s.group_id
-                        && r.actor_id != 0
-                        && r.gen_tokens.len() >= s.gen_tokens.len()
-                        && r.gen_tokens[..s.gen_tokens.len()] == s.gen_tokens[..]
-                })
-            });
-        if all_completed_elsewhere {
-            break;
-        }
-    }
-    stop.store(true, Ordering::Relaxed);
-    drop(tx);
-    sup.join().unwrap().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        drop(tx);
+        sup.join().unwrap().unwrap();
 
-    // zero salvageable tokens lost, asserted via the accounting
-    let (tok_dep, tok_claim) = hub_m.token_counts();
-    assert_eq!(hub_m.claimed(), hub_m.deposited(), "every snapshot adopted");
-    assert_eq!(hub_m.discarded(), 0, "nothing thrown away mid-run");
-    assert_eq!(tok_dep, tok_claim, "every salvaged token re-entered decode");
-    assert!(hub_m.deposited() >= 1, "the victim had work in flight");
-    // ... and via the new MetricsHub counters
-    assert_eq!(hub.counter("migrations_completed"), hub_m.claimed() as f64);
-    assert_eq!(hub.counter("snapshot_tokens_salvaged"), tok_claim as f64);
-    assert_eq!(hub.counter("chaos_events_fired"), 1.0);
-    assert!(hub.counter("chaos_slow_kills_landed") >= 1.0, "slow kill landed");
+        // zero salvageable tokens lost, asserted via the accounting
+        let (tok_dep, tok_claim) = hub_m.token_counts();
+        assert_eq!(hub_m.claimed(), hub_m.deposited(), "every snapshot adopted");
+        assert_eq!(hub_m.discarded(), 0, "nothing thrown away mid-run");
+        assert_eq!(tok_dep, tok_claim, "every salvaged token re-entered decode");
+        assert!(hub_m.deposited() >= 1, "the victim had work in flight");
+        // ... and via the new MetricsHub counters
+        assert_eq!(hub.counter("migrations_completed"), hub_m.claimed() as f64);
+        assert_eq!(hub.counter("snapshot_tokens_salvaged"), tok_claim as f64);
+        assert_eq!(hub.counter("chaos_events_fired"), 1.0);
+        assert!(hub.counter("chaos_slow_kills_landed") >= 1.0, "slow kill landed");
+    });
 }
 
 /// Byzantine chaos (satellite): `CorruptSnapshot` events feed
@@ -291,79 +301,90 @@ fn chaos_kill_one_of_three_loses_no_salvageable_tokens() {
 /// in `discarded`), and the actor pool survives untouched.
 #[test]
 fn byzantine_corrupt_snapshots_rejected_books_balance_actors_survive() {
-    let hub = MetricsHub::new();
-    let bus = WeightBus::new();
-    bus.publish(1, Arc::new(vec![]));
-    let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
-    let stop = Arc::new(AtomicBool::new(false));
-    let hub_m = Arc::new(MigrationHub::new());
-    let deposited = Arc::new(Mutex::new(Vec::new()));
+    let schedule = ChaosSchedule::byzantine(2, 3);
+    testkit::with_seed("byzantine_corrupt_snapshots", schedule.seed, move |_| {
+        let hub = MetricsHub::new();
+        let bus = WeightBus::new();
+        bus.publish(1, Arc::new(vec![]));
+        let (tx, rx) = topic::<Rollout>("rollouts", 1024, Policy::DropOldest);
+        let stop = Arc::new(AtomicBool::new(false));
+        let hub_m = Arc::new(MigrationHub::new());
+        let deposited = Arc::new(Mutex::new(Vec::new()));
 
-    let pool = ActorPool::new(
-        migrating_spawn(bus.clone(), tx.clone(), hub.clone(), hub_m.clone(), deposited.clone()),
-        stop.clone(),
-        hub.clone(),
-        3,
-        3,
-        3,
-        0, // no respawn budget: a byzantine blob crashing an actor would fail the run
-        false,
-    )
-    .unwrap();
-    const N_POISON: usize = 3;
-    let sup_args = SupervisorArgs {
-        pool,
-        bus: bus.clone(),
-        rollout_tx: tx.clone(),
-        schedule: Some(ChaosSchedule::byzantine(2, N_POISON)),
-        stop: stop.clone(),
-        hub: hub.clone(),
-        poll: Duration::from_millis(2),
-        migrate: Some(hub_m.clone()),
-        autoscale: None,
-    };
-    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+        let pool = ActorPool::new(
+            migrating_spawn(
+                bus.clone(),
+                tx.clone(),
+                hub.clone(),
+                hub_m.clone(),
+                deposited.clone(),
+            ),
+            stop.clone(),
+            hub.clone(),
+            3,
+            3,
+            3,
+            0, // no respawn budget: a byzantine blob crashing an actor would fail the run
+            false,
+        )
+        .unwrap();
+        const N_POISON: usize = 3;
+        assert_eq!(schedule.events.len(), N_POISON);
+        let sup_args = SupervisorArgs {
+            pool,
+            bus: bus.clone(),
+            rollout_tx: tx.clone(),
+            schedule: Some(schedule),
+            stop: stop.clone(),
+            hub: hub.clone(),
+            poll: Duration::from_millis(2),
+            migrate: Some(hub_m.clone()),
+            autoscale: None,
+            trainer: None,
+        };
+        let sup = std::thread::spawn(move || run_supervisor(sup_args));
 
-    // drive the version clock past every event and wait for the poison
-    // to be injected and rejected
-    let deadline = Instant::now() + Duration::from_secs(30);
-    let mut consumed = 0usize;
-    let mut version = 1u64;
-    while hub_m.corrupt_rejected() < N_POISON as u64 || hub_m.depth() > 0 {
-        assert!(
-            Instant::now() < deadline,
-            "poison never fully rejected: {} injected, {} rejected, depth {}",
-            hub.counter("chaos_corrupt_snapshots_injected"),
-            hub_m.corrupt_rejected(),
-            hub_m.depth()
-        );
-        if let Ok(_r) = rx.recv(Duration::from_millis(200)) {
-            consumed += 1;
-            if consumed % 10 == 0 {
-                version += 1;
-                bus.publish(version, Arc::new(vec![]));
+        // drive the version clock past every event and wait for the poison
+        // to be injected and rejected
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut consumed = 0usize;
+        let mut version = 1u64;
+        while hub_m.corrupt_rejected() < N_POISON as u64 || hub_m.depth() > 0 {
+            assert!(
+                Instant::now() < deadline,
+                "poison never fully rejected: {} injected, {} rejected, depth {}",
+                hub.counter("chaos_corrupt_snapshots_injected"),
+                hub_m.corrupt_rejected(),
+                hub_m.depth()
+            );
+            if let Ok(_r) = rx.recv(Duration::from_millis(200)) {
+                consumed += 1;
+                if consumed % 10 == 0 {
+                    version += 1;
+                    bus.publish(version, Arc::new(vec![]));
+                }
             }
         }
-    }
-    stop.store(true, Ordering::Relaxed);
-    drop(tx);
-    sup.join().unwrap().expect("supervisor exits clean: no actor died");
+        stop.store(true, Ordering::Relaxed);
+        drop(tx);
+        sup.join().unwrap().expect("supervisor exits clean: no actor died");
 
-    assert_eq!(hub.counter("chaos_corrupt_snapshots_injected"), N_POISON as f64);
-    assert_eq!(hub_m.corrupt_rejected(), N_POISON as u64);
-    // books: every deposit (all of them poison) accounted as discarded
-    assert_eq!(
-        hub_m.deposited(),
-        hub_m.claimed() + hub_m.discarded(),
-        "conservation holds with byzantine deposits in the mix"
-    );
-    assert_eq!(hub_m.discarded(), N_POISON as u64);
-    let (tok_dep, tok_claim) = hub_m.token_counts();
-    assert_eq!((tok_dep, tok_claim), (0, 0), "no phantom salvage from poison");
-    // the pool was never perturbed: no crashes, no restarts
-    assert_eq!(hub.counter("actor_crashes"), 0.0);
-    assert_eq!(hub.counter("actor_restarts"), 0.0);
-    assert_eq!(hub.counter("pool_size"), 3.0);
+        assert_eq!(hub.counter("chaos_corrupt_snapshots_injected"), N_POISON as f64);
+        assert_eq!(hub_m.corrupt_rejected(), N_POISON as u64);
+        // books: every deposit (all of them poison) accounted as discarded
+        assert_eq!(
+            hub_m.deposited(),
+            hub_m.claimed() + hub_m.discarded(),
+            "conservation holds with byzantine deposits in the mix"
+        );
+        assert_eq!(hub_m.discarded(), N_POISON as u64);
+        let (tok_dep, tok_claim) = hub_m.token_counts();
+        assert_eq!((tok_dep, tok_claim), (0, 0), "no phantom salvage from poison");
+        // the pool was never perturbed: no crashes, no restarts
+        assert_eq!(hub.counter("actor_crashes"), 0.0);
+        assert_eq!(hub.counter("actor_restarts"), 0.0);
+        assert_eq!(hub.counter("pool_size"), 3.0);
+    });
 }
 
 #[test]
@@ -403,6 +424,7 @@ fn supervisor_autoscales_pool_from_backlog_then_saturation() {
         poll: Duration::from_millis(1),
         migrate: Some(hub_m.clone()),
         autoscale: Some(scaler),
+        trainer: None,
     };
     let sup = std::thread::spawn(move || run_supervisor(sup_args));
 

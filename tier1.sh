@@ -43,6 +43,18 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# Golden-run conformance: re-run the determinism suite under distinct
+# seeds (DETERMINISM_SEED) so a digest regression cannot hide behind one
+# lucky seed. On a mismatch the failing seed + first diverging event are
+# written to rust/target/determinism/ — CI uploads that directory as an
+# artifact, so a red run ships its own replay recipe.
+echo "== tier1: determinism conformance (x${DETERMINISM_REPEATS:-3}) =="
+for i in $(seq 1 "${DETERMINISM_REPEATS:-3}"); do
+    seed=$(( 0xD17E + i * 7919 ))
+    echo "-- determinism pass $i/${DETERMINISM_REPEATS:-3} (DETERMINISM_SEED=$seed)"
+    DETERMINISM_SEED=$seed cargo test -q --test determinism
+done
+
 # KV-memory bench: entirely device-free (paged allocator + park/resume
 # bookkeeping), so unlike the engine benches it runs everywhere and
 # appends its numbers (prefix-sharing savings, preempt->resume cost,

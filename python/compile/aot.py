@@ -72,10 +72,12 @@ def graph_signatures(cfg: configs.ModelConfig):
             ("adv_in", (bt, t), "f32"),
             ("reward", (bt, t), "f32"),
             ("mask", (bt, t), "f32"),
+            ("is_w", (bt, t), "f32"),
             ("lr", (), "f32"),
             ("clip_c", (), "f32"),
             ("adv_mode", (), "f32"),
             ("vf_coef", (), "f32"),
+            ("is_flag", (), "f32"),
         ],
         "sft": [
             ("step", (), "f32"),

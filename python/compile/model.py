@@ -160,12 +160,20 @@ def _targets(tokens):
 
 
 def train_step(cfg, params, m, v, step, tokens, seg, pos, behavior_lp,
-               adv_in, reward, mask, lr, clip_c, adv_mode, vf_coef):
+               adv_in, reward, mask, is_w, lr, clip_c, adv_mode, vf_coef,
+               is_flag):
     """One optimizer step of Eq. (5) with truncated IS weights.
 
     adv_mode = 0: use adv_in (preprocessor group baseline, GRPO-style);
     adv_mode = 1: use R - v_phi (Eq. 4 learned value baseline, trained
     in the same step with coefficient vf_coef).
+
+    is_flag selects the IS-weight source (`[rl] is_correction`):
+      0 — uncorrected: every trained token weighs 1 (the ablation arm);
+      1 — device truncated weights min(c, pi/mu) recomputed from the
+          current policy's logprobs (the default; matches Eq. 5 exactly);
+      2 — take the host-filled is_w lane verbatim (harness / replay runs
+          that computed weights against a pinned scorer).
 
     reward is per-token [B, T] (constant across each packed segment) so
     that online sequence packing — multiple sequences per row — stays
@@ -176,7 +184,9 @@ def train_step(cfg, params, m, v, step, tokens, seg, pos, behavior_lp,
 
     def loss_fn(ps):
         h = forward_hidden(cfg, ps, tokens, seg, pos, use_pallas_attn=False)
-        lp, w, ent = loss_k.fused_loss(h, ps[0], targets, behavior_lp, clip_c)
+        lp, w_dev, ent = loss_k.fused_loss(h, ps[0], targets, behavior_lp, clip_c)
+        w = jnp.where(is_flag == 1.0, w_dev,
+                      jnp.where(is_flag == 2.0, is_w, 1.0))
         values = h @ unpack(cfg, ps)["value_head"]           # [B, T]
         adv_value = reward - jax.lax.stop_gradient(values)
         adv_used = adv_mode * adv_value + (1.0 - adv_mode) * adv_in
@@ -192,8 +202,10 @@ def train_step(cfg, params, m, v, step, tokens, seg, pos, behavior_lp,
     gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
     p2, m2, v2 = adam_k.adam_update_tree(params, m, v, grads, lr, step)
 
-    # on-policyness metrics (Fig 6): masked ESS of the truncated weights,
-    # k3 KL estimator, clip fraction.
+    # on-policyness metrics (Fig 6): masked ESS of the weights actually
+    # applied (is_flag=0 therefore reports ESS 1), k3 KL estimator, clip
+    # fraction. The rust trainer cross-checks ess against its host-side
+    # oracle computed from the is_w lane (train/ess_host).
     sw = jnp.sum(w * mask)
     sw2 = jnp.sum(jnp.square(w) * mask)
     ess = jnp.square(sw) / (nm * sw2 + 1e-12)

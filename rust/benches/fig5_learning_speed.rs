@@ -47,7 +47,13 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut rows = Vec::new();
-    for mode in [Mode::Pipeline, Mode::Conventional { g: 4 }] {
+    // periodic k=4 sits between the two: pipeline-style overlap, but
+    // weights publish only every 4th optimizer step
+    for mode in [
+        Mode::Pipeline,
+        Mode::Periodic { k: 4 },
+        Mode::Conventional { g: 4 },
+    ] {
         let mut cfg = base.clone();
         cfg.mode = mode;
         let s = coordinator::run(cfg.clone(), Some(warm.clone()))?;

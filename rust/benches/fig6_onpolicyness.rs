@@ -38,8 +38,11 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut summary_rows = Vec::new();
+    // periodic k=4 probes the middle of the dial: overlap like pipeline,
+    // publish cadence like a small conventional G
     for mode in [
         Mode::Pipeline,
+        Mode::Periodic { k: 4 },
         Mode::Conventional { g: 2 },
         Mode::Conventional { g: 8 },
     ] {

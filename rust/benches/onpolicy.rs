@@ -1,0 +1,230 @@
+//! Off-policyness-dial benchmarks — appended machine-readably to
+//! BENCH_onpolicy.json (see benchkit docs). Entirely device-free.
+//!
+//! Three sweeps, one per layer of the dial:
+//!
+//! * **ESS vs lag** (Eq. 5/6): a synthetic lagged policy drifts away
+//!   from the behavior logprobs — bias ∝ lag, noise ∝ √lag (the policy
+//!   random-walks between published versions) — and the truncated-IS
+//!   weights' effective sample size is measured at each depth. This is
+//!   the ESS(lag) table every other section prices corrections with.
+//! * **mode × correction learning curves**: pipeline / periodic(k) /
+//!   conventional cadences simulated with and without IS correction.
+//!   Uncorrected tokens pay the paper's bias discount 1/(1 + α·lag);
+//!   corrected tokens are unbiased but pay the variance price instead —
+//!   their effectiveness is exactly the ESS fraction at their lag. The
+//!   headline artifact: the deepest lag each (mode, correction) pair
+//!   sustains at equal learning-curve shape, which must be deeper for
+//!   the corrected runs.
+//! * **autoscaler freshness guards**: a replayed signal schedule with
+//!   ramping lag, scored by a `max_lag_steps` guard vs an `ess_floor`
+//!   guard — the ESS guard keeps scaling long past the raw step cap
+//!   because the correction has already paid for the lag.
+//!
+//! `cargo bench --bench onpolicy`
+
+use pipeline_rl::benchkit;
+use pipeline_rl::perfmodel::learning::simulate;
+use pipeline_rl::perfmodel::{conventional, search_pipeline_configs, LearnCfg, Workload};
+use pipeline_rl::rl::{effective_sample_size, truncated_weights};
+use pipeline_rl::sched::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
+use pipeline_rl::util::Rng;
+
+const CLIP_C: f32 = 2.0;
+const MAX_LAG: usize = 160;
+
+/// Measured ESS of truncated-IS weights at one lag depth. Per-token
+/// drift model: E[lp_pi - lp_mu] = -0.005·lag (systematic bias) with
+/// std ≈ 0.087·√lag (version-to-version random walk), ~16k tokens.
+fn ess_at_lag(lag: f64, rng: &mut Rng) -> f64 {
+    const SEQS: usize = 128;
+    const LEN: usize = 128;
+    let l = lag as f32;
+    let mut weights = Vec::with_capacity(SEQS * LEN);
+    for _ in 0..SEQS {
+        let lp_mu: Vec<f32> = (0..LEN).map(|_| -0.05 - 2.0 * rng.f32()).collect();
+        let lp_pi: Vec<f32> = lp_mu
+            .iter()
+            .map(|&lp| {
+                // Irwin-Hall(4) recentred: mean 0, std ~0.577
+                let n = rng.f32() + rng.f32() + rng.f32() + rng.f32() - 2.0;
+                lp - 0.005 * l + 0.15 * l.sqrt() * n
+            })
+            .collect();
+        weights.extend(truncated_weights(&lp_pi, &lp_mu, CLIP_C));
+    }
+    effective_sample_size(&weights)
+}
+
+/// ESS(lag) lookup for 0..=MAX_LAG optimizer steps of lag.
+fn ess_table(seed: u64) -> Vec<f64> {
+    let mut rng = Rng::with_stream(seed, 0xe55);
+    (0..=MAX_LAG).map(|l| ess_at_lag(l as f64, &mut rng)).collect()
+}
+
+fn ess_of(tab: &[f64], lag: f64) -> f64 {
+    tab[(lag.round() as usize).min(MAX_LAG)]
+}
+
+/// The uncorrected per-token bias discount the learning model uses
+/// (perfmodel::learning): 1/(1 + α·lag).
+fn bias_discount(alpha: f64, lag: f64) -> f64 {
+    1.0 / (1.0 + alpha * lag)
+}
+
+/// Mean of `bias_discount` over token lags Uniform(0..g) — the Fig 3a
+/// pipeline ramp.
+fn ramp_discount(alpha: f64, g: f64) -> f64 {
+    if g > 0.0 {
+        (1.0 + alpha * g).ln() / (alpha * g)
+    } else {
+        1.0
+    }
+}
+
+fn main() {
+    benchkit::json_begin("onpolicy");
+    let seed = 0x0ff_d1a1u64; // the off-policyness dial
+    let tab = ess_table(seed);
+
+    benchkit::section("onpolicy — ESS vs lag (truncated IS, Eq. 5/6)");
+    for &lag in &[0usize, 1, 2, 4, 8, 16, 32, 64, 128] {
+        let ess = ess_of(&tab, lag as f64);
+        println!("lag {lag:>3} steps -> ESS {ess:.3}");
+        benchkit::json_note(&format!("ess/lag_{lag}"), ess);
+    }
+
+    benchkit::section("onpolicy — mode x correction learning-curve sweep");
+    let w = Workload::paper_a4();
+    let lc = LearnCfg::default();
+    let a = lc.alpha;
+    let grid: Vec<usize> = (4..=512).step_by(4).collect();
+    let lag_budgets = [8usize, 16, 32, 64, 128];
+    let k = 4usize; // periodic publish cadence
+
+    // equal-shape criterion: a (mode, correction, g) point "sustains"
+    // its lag when its final reward stays within 10% of the zero-lag
+    // curve at the same sample count — shape, not wall-clock (reward per
+    // optimizer step is independent of tokens/flash, which only scales
+    // the time axis)
+    let zero_lag = simulate(&w, &lc, 10.0, |_| 1.0).final_reward();
+    let sustains = |final_reward: f64| final_reward >= 0.9 * zero_lag;
+
+    let mut deepest = [[0usize; 2]; 3]; // [mode][corrected] -> max sustained g
+    let modes = ["pipeline", "periodic_k4", "conventional"];
+    for &g in &lag_budgets {
+        let pipe = search_pipeline_configs(&w, &[g], &grid)[0]
+            .1
+            .expect("pipeline config within lag budget");
+        let conv = conventional(&w, g);
+        let gp = pipe.lag_steps as f64;
+
+        for (mi, mode) in modes.iter().enumerate() {
+            for corrected in [false, true] {
+                // per-step effectiveness under this mode's token-lag
+                // distribution: bias discount when uncorrected, ESS
+                // fraction (unbiased, variance-priced) when corrected
+                let tab_ref = &tab;
+                let eff: Box<dyn Fn(usize) -> f64 + '_> = match (mi, corrected) {
+                    // pipeline: lags mix uniformly over 0..g_max
+                    (0, false) => Box::new(move |_| ramp_discount(a, gp)),
+                    (0, true) => Box::new(move |_| ess_of(tab_ref, gp / 2.0)),
+                    // periodic(k): the uniform ramp plus 0..k-1 steps of
+                    // publish staleness cycling with the cadence
+                    (1, false) => Box::new(move |s| ramp_discount(a, gp + (s % k) as f64)),
+                    (1, true) => {
+                        Box::new(move |s| ess_of(tab_ref, gp / 2.0 + (s % k) as f64))
+                    }
+                    // conventional: batch j of each RL step sits at lag j
+                    (_, false) => Box::new(move |s| bias_discount(a, (s % g) as f64)),
+                    (_, true) => Box::new(move |s| ess_of(tab_ref, (s % g) as f64)),
+                };
+                let r = if mi == 2 { conv.r } else { pipe.r };
+                let curve = simulate(&w, &lc, r, &eff);
+                let t_half = curve.time_to(0.5 * lc.r_max).unwrap_or(f64::NAN);
+                let shape = curve.final_reward();
+                let tag = if corrected { "truncated" } else { "none" };
+                benchkit::json_note(
+                    &format!("curve/{mode}/g{g}/{tag}/t_half_flashes"),
+                    t_half,
+                );
+                benchkit::json_note(
+                    &format!("curve/{mode}/g{g}/{tag}/final_reward"),
+                    shape,
+                );
+                if sustains(shape) {
+                    deepest[mi][corrected as usize] = g;
+                }
+            }
+        }
+    }
+    for (mi, mode) in modes.iter().enumerate() {
+        let [plain, corr] = deepest[mi];
+        println!(
+            "{mode}: deepest sustained lag — uncorrected {plain} steps, \
+             truncated-IS {corr} steps"
+        );
+        benchkit::json_note(&format!("sustain/{mode}/none"), plain as f64);
+        benchkit::json_note(&format!("sustain/{mode}/truncated"), corr as f64);
+        assert!(
+            corr >= plain,
+            "{mode}: correction must never sustain less lag than none"
+        );
+    }
+
+    benchkit::section("onpolicy — autoscaler freshness guards under ramping lag");
+    {
+        let mk_cfg = |max_lag_steps: f64, ess_floor: f64| AutoScaleCfg {
+            enabled: true,
+            backlog_per_actor: 1.0,
+            supply_high_frac: 0.75,
+            up_patience: 1,
+            down_patience: 3,
+            cooldown: 0,
+            max_lag_steps,
+            ess_floor,
+            min_batch_fill: 0.0,
+            eval_every_ms: 0,
+        };
+        // lag ramps 0 -> 158 optimizer steps over 80 evaluations while
+        // backlog pressure stays on; each guard decides when to stop
+        let replay = |cfg: AutoScaleCfg| -> (u64, f64) {
+            let mut scaler = AutoScaler::new(cfg);
+            let mut last_up_lag = 0.0;
+            for i in 0..80u64 {
+                let lag = i as f64 * 2.0;
+                let sig = ScaleSignals {
+                    backlog: 64,
+                    supply_depth: 10,
+                    supply_capacity: 256,
+                    token_lag: lag,
+                    ess: ess_of(&tab, lag),
+                    batch_fill: 1.0,
+                    pool: 4,
+                };
+                if scaler.decide(&sig) == ScaleDecision::Up {
+                    last_up_lag = lag;
+                }
+            }
+            (scaler.ups(), last_up_lag)
+        };
+        let (ups_lag, depth_lag) = replay(mk_cfg(4.0, 0.0));
+        let (ups_ess, depth_ess) = replay(mk_cfg(0.0, 0.55));
+        println!(
+            "lag guard (cap 4): {ups_lag} scale-ups, last at lag {depth_lag}; \
+             ESS guard (floor 0.55): {ups_ess} scale-ups, last at lag {depth_ess}"
+        );
+        benchkit::json_note("autoscale/ups_lag_guard", ups_lag as f64);
+        benchkit::json_note("autoscale/last_up_lag_guard", depth_lag);
+        benchkit::json_note("autoscale/ups_ess_guard", ups_ess as f64);
+        benchkit::json_note("autoscale/last_up_ess_guard", depth_ess);
+        assert!(
+            ups_ess > ups_lag && depth_ess > depth_lag,
+            "the ESS floor must admit scaling deeper into lag than the step cap"
+        );
+    }
+
+    if let Some(p) = benchkit::json_end() {
+        println!("results -> {}", p.display());
+    }
+}

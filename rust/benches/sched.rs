@@ -53,6 +53,7 @@ fn autoscaled_cluster() -> SimCfg {
             down_patience: 3,
             cooldown: 2,
             max_lag_steps: 0.0,
+            ess_floor: 0.0,
             min_batch_fill: 0.0,
             eval_every_ms: 0,
         },
@@ -120,6 +121,7 @@ fn main() {
             supply_depth: 100,
             supply_capacity: 256,
             token_lag: 1.5,
+            ess: 1.0,
             batch_fill: 0.9,
             pool: 4,
         };

@@ -1,10 +1,41 @@
 //! Typed run configuration for the PipelineRL system.
 //!
 //! A `RunConfig` fully determines a training run: model variant (must
-//! match an AOT artifact set), pipeline vs conventional mode, actor
-//! topology, RL hyper-parameters, task curriculum and queue policies.
-//! Configs load from TOML files (see configs/*.toml) with CLI
-//! `key=value` overrides, and are echoed into every RunReport.
+//! match an AOT artifact set), training mode, actor topology, RL
+//! hyper-parameters, task curriculum and queue policies. Configs load
+//! from TOML files (see configs/*.toml) with CLI `key=value` overrides,
+//! and are echoed into every RunReport.
+//!
+//! Three training modes span the paper's freshness/efficiency axis
+//! (`run.mode`):
+//!
+//! * `pipeline` — Algorithm 2: concurrent generation/training, weights
+//!   published after **every** optimizer step (in-flight updates);
+//! * `periodic` (+ `run.k`) — pipeline-style concurrency, but weights
+//!   publish only every `k`-th optimizer step: a middle point that
+//!   amortizes the weight-transfer pause at the cost of `k−1` extra
+//!   steps of lag;
+//! * `conventional` (+ `run.g`) — Algorithm 1: generate B·G sequences,
+//!   then G optimizer steps behind a phase barrier.
+//!
+//! The `[rl]` section holds the off-policyness dial alongside the usual
+//! hyper-parameters:
+//!
+//! * `is_correction = "none" | "truncated"` (default `"truncated"`) —
+//!   whether training applies Eq. (5)'s truncated importance weights to
+//!   lagged tokens. `"truncated"` is the paper's corrected objective
+//!   (computed exactly on-device at train time, or taken from the
+//!   preprocessor's host-side weight lane when one is wired);
+//!   `"none"` trains on raw logprob gradients — the uncorrected
+//!   ablation;
+//! * `clip_c` — the truncation constant c (paper uses 5);
+//! * `ess_floor` — alert floor in (0, 1] for the host-side ESS oracle:
+//!   each optimizer step whose batch ESS falls below it increments the
+//!   `ess_floor_trips` counter (0 disables). The autoscaler has its own
+//!   `[autoscale] ess_floor` that *replaces* the `max_lag_steps` guard;
+//! * `train_truncated = true` — admit `FinishReason::Truncated` partial
+//!   rollouts as trainable group members (Truncated-PPO style) instead
+//!   of discarding them.
 
 pub mod toml;
 
@@ -16,11 +47,15 @@ use crate::rl::AdvantageMode;
 use crate::sched::{AutoScaleCfg, PreemptPolicy, SchedPolicy};
 use anyhow::{bail, Result};
 
-/// Training mode (paper §2.2 vs §4).
+/// Training mode (paper §2.2 vs §4; see the module docs for the
+/// freshness/efficiency axis the three points span).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// Algorithm 2: concurrent generation/training, in-flight updates.
     Pipeline,
+    /// Pipeline concurrency with a periodic publish cadence: weights go
+    /// out every `k`-th optimizer step (`k = 1` behaves like pipeline).
+    Periodic { k: usize },
     /// Algorithm 1: generate B·G sequences, then G optimizer steps.
     Conventional { g: usize },
 }
@@ -29,7 +64,46 @@ impl Mode {
     pub fn name(&self) -> String {
         match self {
             Mode::Pipeline => "pipeline".into(),
+            Mode::Periodic { k } => format!("periodic_k{k}"),
             Mode::Conventional { g } => format!("conventional_g{g}"),
+        }
+    }
+}
+
+/// `[rl] is_correction` — how training handles off-policy (lagged)
+/// tokens. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsCorrection {
+    /// raw logprob gradients, no reweighting (the uncorrected ablation)
+    None,
+    /// Eq. (5) truncated importance weights `min(c, exp(lp_pi - lp_mu))`
+    Truncated,
+}
+
+impl IsCorrection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsCorrection::None => "none",
+            IsCorrection::Truncated => "truncated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IsCorrection> {
+        match s {
+            "none" => Some(IsCorrection::None),
+            "truncated" => Some(IsCorrection::Truncated),
+            _ => None,
+        }
+    }
+
+    /// The train graph's `is_flag` scalar selecting the weight source:
+    /// 0 = no correction (w ≡ 1), 1 = device-computed truncated weights,
+    /// 2 = host-supplied weight lane (`TrainBatch::is_w`).
+    pub fn graph_flag(&self, host_weighted: bool) -> f32 {
+        match (self, host_weighted) {
+            (IsCorrection::None, _) => 0.0,
+            (IsCorrection::Truncated, false) => 1.0,
+            (IsCorrection::Truncated, true) => 2.0,
         }
     }
 }
@@ -156,6 +230,15 @@ pub struct RunConfig {
     pub sft_lr: f64,
     /// IS truncation constant c (paper uses 5)
     pub clip_c: f64,
+    /// off-policyness correction applied to lagged tokens (`[rl]
+    /// is_correction`, default truncated — the paper's objective)
+    pub is_correction: IsCorrection,
+    /// host-ESS alert floor in (0, 1]; steps whose batch ESS falls below
+    /// it bump the `ess_floor_trips` counter (0 = off)
+    pub ess_floor: f64,
+    /// admit `FinishReason::Truncated` partial rollouts as trainable
+    /// group members (Truncated-PPO style; default off)
+    pub train_truncated: bool,
     pub advantage: AdvantageMode,
     pub vf_coef: f64,
     pub temperature: f64,
@@ -214,6 +297,9 @@ impl Default for RunConfig {
             lr: 3e-4,
             sft_lr: 1e-3,
             clip_c: 5.0,
+            is_correction: IsCorrection::Truncated,
+            ess_floor: 0.0,
+            train_truncated: false,
             advantage: AdvantageMode::Group,
             vf_coef: 0.0,
             temperature: 1.0,
@@ -243,10 +329,17 @@ impl RunConfig {
         let d = RunConfig::default();
         let mode = match doc.str_or("run.mode", "pipeline")?.as_str() {
             "pipeline" => Mode::Pipeline,
+            "periodic" => Mode::Periodic {
+                k: doc.usize_or("run.k", 4)?,
+            },
             "conventional" => Mode::Conventional {
                 g: doc.usize_or("run.g", 8)?,
             },
-            m => bail!("unknown run.mode {m:?}"),
+            m => bail!("unknown run.mode {m:?} (pipeline | periodic | conventional)"),
+        };
+        let is_name = doc.str_or("rl.is_correction", d.is_correction.name())?;
+        let Some(is_correction) = IsCorrection::parse(&is_name) else {
+            bail!("unknown rl.is_correction {is_name:?} (none | truncated)");
         };
         let advantage = match doc.str_or("rl.advantage", "group")?.as_str() {
             "group" => AdvantageMode::Group,
@@ -295,6 +388,9 @@ impl RunConfig {
             lr: doc.f64_or("rl.lr", d.lr)?,
             sft_lr: doc.f64_or("rl.sft_lr", d.sft_lr)?,
             clip_c: doc.f64_or("rl.clip_c", d.clip_c)?,
+            is_correction,
+            ess_floor: doc.f64_or("rl.ess_floor", d.ess_floor)?,
+            train_truncated: doc.bool_or("rl.train_truncated", d.train_truncated)?,
             advantage,
             vf_coef: doc.f64_or("rl.vf_coef", d.vf_coef)?,
             temperature: doc.f64_or("rl.temperature", d.temperature)?,
@@ -338,6 +434,7 @@ impl RunConfig {
                     as u32,
                 cooldown: doc.usize_or("autoscale.cooldown", da.cooldown as usize)? as u32,
                 max_lag_steps: doc.f64_or("autoscale.max_lag_steps", da.max_lag_steps)?,
+                ess_floor: doc.f64_or("autoscale.ess_floor", da.ess_floor)?,
                 min_batch_fill: doc.f64_or("autoscale.min_batch_fill", da.min_batch_fill)?,
                 eval_every_ms: doc
                     .usize_or("autoscale.eval_every_ms", da.eval_every_ms as usize)?
@@ -378,11 +475,12 @@ impl RunConfig {
         })
     }
 
-    /// Serialize the `[sched]` / `[kv]` / `[checkpoint]` / `[elastic]` /
-    /// `[autoscale]` sections back to TOML text that [`RunConfig::from_doc`]
-    /// parses to the same values — the round-trip contract the config
-    /// property test pins (a field added to one of these sections without
-    /// a serializer line here fails that test, not a production run).
+    /// Serialize the `[rl]` (off-policyness dial) / `[sched]` / `[kv]` /
+    /// `[checkpoint]` / `[elastic]` / `[autoscale]` sections back to TOML
+    /// text that [`RunConfig::from_doc`] parses to the same values — the
+    /// round-trip contract the config property test pins (a field added
+    /// to one of these sections without a serializer line here fails that
+    /// test, not a production run).
     pub fn sections_to_toml(&self) -> String {
         use std::fmt::Write;
         // inverse of toml::parse_value's unescaping (quotes, newlines).
@@ -392,6 +490,14 @@ impl RunConfig {
             s.replace('"', "\\\"").replace('\n', "\\n")
         }
         let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "[rl]\nclip_c = {}\nis_correction = \"{}\"\ness_floor = {}\ntrain_truncated = {}",
+            self.clip_c,
+            self.is_correction.name(),
+            self.ess_floor,
+            self.train_truncated
+        );
         let _ = writeln!(s, "[sched]\npolicy = \"{}\"", self.sched.name());
         let _ = writeln!(
             s,
@@ -431,7 +537,7 @@ impl RunConfig {
             s,
             "[autoscale]\nenabled = {}\nbacklog_per_actor = {}\nsupply_high_frac = {}\n\
              up_patience = {}\ndown_patience = {}\ncooldown = {}\nmax_lag_steps = {}\n\
-             min_batch_fill = {}\neval_every_ms = {}",
+             ess_floor = {}\nmin_batch_fill = {}\neval_every_ms = {}",
             a.enabled,
             a.backlog_per_actor,
             a.supply_high_frac,
@@ -439,6 +545,7 @@ impl RunConfig {
             a.down_patience,
             a.cooldown,
             a.max_lag_steps,
+            a.ess_floor,
             a.min_batch_fill,
             a.eval_every_ms
         );
@@ -461,11 +568,26 @@ impl RunConfig {
                 bail!("conventional mode needs g >= 1");
             }
         }
+        if let Mode::Periodic { k } = self.mode {
+            if k == 0 {
+                bail!("periodic mode needs k >= 1 (k = 1 is pipeline's publish cadence)");
+            }
+        }
         if self.group_size == 0 {
             bail!("group_size must be >= 1");
         }
         if !(0.0..=100.0).contains(&self.clip_c) || self.clip_c <= 0.0 {
             bail!("clip_c must be positive");
+        }
+        if !self.ess_floor.is_finite() || !(0.0..=1.0).contains(&self.ess_floor) {
+            bail!("rl.ess_floor must be in [0, 1], got {}", self.ess_floor);
+        }
+        if self.ess_floor > 0.0 && self.is_correction == IsCorrection::None {
+            bail!(
+                "rl.ess_floor requires is_correction = \"truncated\": without \
+                 correction every weight is 1 and the batch ESS is identically \
+                 1.0, so the floor could never trip"
+            );
         }
         if self.kv.block_size == 0 {
             bail!("kv.block_size must be >= 1");
@@ -568,6 +690,14 @@ impl RunConfig {
             }
             if self.autoscale.up_patience == 0 || self.autoscale.down_patience == 0 {
                 bail!("autoscale patience values must be >= 1");
+            }
+            if !self.autoscale.ess_floor.is_finite()
+                || !(0.0..=1.0).contains(&self.autoscale.ess_floor)
+            {
+                bail!(
+                    "autoscale.ess_floor must be in [0, 1], got {}",
+                    self.autoscale.ess_floor
+                );
             }
         }
         Ok(())
@@ -893,8 +1023,14 @@ mod tests {
             cfg.autoscale.down_patience = c.usize_in(1, 9) as u32;
             cfg.autoscale.cooldown = c.usize_in(0, 9) as u32;
             cfg.autoscale.max_lag_steps = c.rng.below(10) as f64;
+            cfg.autoscale.ess_floor = c.rng.below(16) as f64 / 16.0;
             cfg.autoscale.min_batch_fill = c.rng.below(16) as f64 / 16.0;
             cfg.autoscale.eval_every_ms = c.usize_in(0, 100) as u64;
+            cfg.clip_c = (1 + c.rng.below(64)) as f64 / 8.0;
+            cfg.is_correction =
+                *c.rng.choice(&[IsCorrection::None, IsCorrection::Truncated]);
+            cfg.ess_floor = c.rng.below(16) as f64 / 16.0;
+            cfg.train_truncated = c.rng.below(2) == 1;
 
             let text = cfg.sections_to_toml();
             let doc = TomlDoc::parse(&text).map_err(|e| format!("emitted TOML: {e}"))?;
@@ -921,6 +1057,23 @@ mod tests {
                 return Err(format!(
                     "[autoscale] drift: {:?} vs {:?}",
                     back.autoscale, cfg.autoscale
+                ));
+            }
+            if back.clip_c != cfg.clip_c
+                || back.is_correction != cfg.is_correction
+                || back.ess_floor != cfg.ess_floor
+                || back.train_truncated != cfg.train_truncated
+            {
+                return Err(format!(
+                    "[rl] drift: ({}, {}, {}, {}) vs ({}, {}, {}, {})",
+                    back.clip_c,
+                    back.is_correction.name(),
+                    back.ess_floor,
+                    back.train_truncated,
+                    cfg.clip_c,
+                    cfg.is_correction.name(),
+                    cfg.ess_floor,
+                    cfg.train_truncated
                 ));
             }
             // a second serialize must be byte-stable (no format drift)
@@ -960,6 +1113,80 @@ mod tests {
     #[test]
     fn mode_names() {
         assert_eq!(Mode::Pipeline.name(), "pipeline");
+        assert_eq!(Mode::Periodic { k: 4 }.name(), "periodic_k4");
         assert_eq!(Mode::Conventional { g: 8 }.name(), "conventional_g8");
+    }
+
+    #[test]
+    fn parses_periodic_mode() {
+        let doc = TomlDoc::parse("[run]\nmode = \"periodic\"\nk = 3").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.mode, Mode::Periodic { k: 3 });
+        cfg.validate().unwrap();
+        // k defaults to 4 when omitted
+        let doc = TomlDoc::parse("[run]\nmode = \"periodic\"").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().mode, Mode::Periodic { k: 4 });
+        // k = 0 is refused at validation
+        let mut cfg = RunConfig::default();
+        cfg.mode = Mode::Periodic { k: 0 };
+        assert!(cfg.validate().is_err(), "periodic k = 0 refused");
+        // elastic stays pipeline-only: periodic is rejected like
+        // conventional (the chaos/failover machinery assumes per-step
+        // publishes)
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.mode = Mode::Periodic { k: 2 };
+        assert!(cfg.validate().is_err(), "elastic + periodic refused");
+    }
+
+    #[test]
+    fn parses_rl_correction_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            [rl]
+            is_correction = "none"
+            train_truncated = true
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.is_correction, IsCorrection::None);
+        assert!(cfg.train_truncated);
+        cfg.validate().unwrap();
+        // defaults: the paper's corrected objective, no floor, whole
+        // rollouts only
+        let d = RunConfig::default();
+        assert_eq!(d.is_correction, IsCorrection::Truncated);
+        assert_eq!(d.ess_floor, 0.0);
+        assert!(!d.train_truncated);
+
+        let doc = TomlDoc::parse("[rl]\nis_correction = \"clipped\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "unknown correction refused");
+    }
+
+    #[test]
+    fn ess_floor_validation_rules() {
+        let mut cfg = RunConfig::default();
+        cfg.ess_floor = 0.5;
+        cfg.validate().unwrap();
+
+        cfg.ess_floor = 1.5;
+        assert!(cfg.validate().is_err(), "floor above 1 refused");
+        cfg.ess_floor = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN floor refused");
+
+        cfg.ess_floor = 0.5;
+        cfg.is_correction = IsCorrection::None;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("could never trip"), "{err}");
+
+        // the autoscaler's own floor is range-checked too
+        let mut cfg = RunConfig::default();
+        cfg.elastic.enabled = true;
+        cfg.autoscale.enabled = true;
+        cfg.autoscale.ess_floor = 2.0;
+        assert!(cfg.validate().is_err(), "autoscale floor above 1 refused");
+        cfg.autoscale.ess_floor = 0.25;
+        cfg.validate().unwrap();
     }
 }

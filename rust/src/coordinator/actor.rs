@@ -141,7 +141,9 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     // overlap with), and a mid-sequence commit would break Alg. 1's
     // strict on-policyness — so conventional always swaps eagerly.
     let overlap_chunk = match cfg.mode {
-        Mode::Pipeline => cfg.weight_stage_chunk,
+        // periodic mode decodes straight through publishes exactly like
+        // pipeline — only the trainer's publish cadence differs
+        Mode::Pipeline | Mode::Periodic { .. } => cfg.weight_stage_chunk,
         Mode::Conventional { .. } => 0,
     };
     let mut staging: Option<WeightFetch> = None;
@@ -253,7 +255,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
 
         // ---- admission ----
         match (&cfg.mode, &conv) {
-            (Mode::Pipeline, _) => {
+            (Mode::Pipeline | Mode::Periodic { .. }, _) => {
                 while engine.load() < target_load {
                     submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
                                  group_base, &mut group_counter)?;
@@ -359,7 +361,51 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let migrating = !stop.load(Ordering::Relaxed) && migrate.is_some();
     if migrating {
         let hub_m = migrate.as_ref().expect("checked above");
-        let snaps = engine.export_snapshots();
+        let mut snaps = engine.export_snapshots();
+        if cfg.train_truncated {
+            // `[rl] train_truncated`: sequences that already generated a
+            // prefix leave as *trainable* `Truncated` rollouts instead of
+            // portable snapshots — the prefix is graded on what it wrote
+            // so far and trains now rather than migrating to finish
+            // later. Publishing XOR depositing per sequence means a
+            // truncated prefix and its continuation can never both train;
+            // the preprocessor's prefix ledger backstops the invariant
+            // against replayed deposits. Prefix-less sequences (still in
+            // prompt prefill) carry no trainable tokens and migrate as
+            // before.
+            let (publish, deposit): (Vec<_>, Vec<_>) =
+                snaps.into_iter().partition(|s| !s.gen_tokens.is_empty());
+            snaps = deposit;
+            for snap in publish {
+                let problem = task_gen.problem(snap.problem_id);
+                let completion = tokenizer.decode(&snap.gen_tokens);
+                let reward = cfg.reward.reward(
+                    &problem,
+                    &completion,
+                    snap.gen_tokens.len(),
+                    cfg.max_new_tokens,
+                );
+                hub.add("rollouts_truncated_published", 1.0);
+                hub.add("truncated_tokens_published", snap.gen_tokens.len() as f64);
+                let r = Rollout {
+                    seq_id: snap.seq_id,
+                    problem_id: snap.problem_id,
+                    group_id: snap.group_id,
+                    actor_id,
+                    prompt_tokens: snap.prompt,
+                    gen_tokens: snap.gen_tokens,
+                    behavior_lp: snap.behavior_lp,
+                    token_version: snap.token_version,
+                    reward,
+                    finish: FinishReason::Truncated,
+                    t_start: snap.t_start,
+                    t_end: now(&hub),
+                };
+                if rollout_tx.send(r).is_err() {
+                    break; // preprocessor already gone
+                }
+            }
+        }
         if !snaps.is_empty() {
             let tokens: usize = snaps.iter().map(|s| s.salvaged_tokens()).sum();
             hub.add("migration_snaps_exported", snaps.len() as f64);

@@ -141,14 +141,16 @@ pub fn run_with_chaos(
         (v.train_batch, v.seq_len)
     };
 
-    // conventional quota: ~G optimizer batches' worth of sequences
+    // conventional quota: ~G optimizer batches' worth of sequences.
+    // Periodic mode has no phase barrier — actors stream exactly like
+    // pipeline; only the trainer's publish cadence differs.
     let conv_groups = match cfg.mode {
         Mode::Conventional { g } => (g * b).div_ceil(cfg.group_size).max(1),
-        Mode::Pipeline => 0,
+        Mode::Pipeline | Mode::Periodic { .. } => 0,
     };
     let conv = match cfg.mode {
         Mode::Conventional { .. } => Some(Arc::new(ConvSync::new(conv_groups))),
-        Mode::Pipeline => None,
+        Mode::Pipeline | Mode::Periodic { .. } => None,
     };
 
     // ---- actor pool ----
@@ -223,6 +225,11 @@ pub fn run_with_chaos(
         hub: hub.clone(),
         stop: stop.clone(),
         conv: conv.clone(),
+        // real runs leave the host scorer unset: the device train graph
+        // recomputes truncated IS weights from current-policy logprobs at
+        // train time (is_flag = 1), which is exactly fresh. A host scorer
+        // (is_flag = 2) is for device-free harnesses and tests.
+        scorer: None,
     };
     let pre_handle = std::thread::Builder::new()
         .name("preproc".into())

@@ -9,10 +9,12 @@
 //! Layout per placed sequence (stream = [BOS, prompt..., gen...]):
 //! row cells [o, o+L) hold the stream; position o+i-1 is the *target
 //! slot* predicting stream[i]; target slots of generated tokens carry
-//! mask=1, the recorded behavior logprob, weight version, advantage and
-//! per-token reward. Everything else is masked out — including the last
-//! cell of each segment, whose prediction would cross into the next
-//! segment.
+//! mask=1, the recorded behavior logprob, weight version, advantage,
+//! per-token reward and (when the preprocessor computed one) the
+//! truncated importance weight in the `is_w` lane — 1.0 everywhere
+//! otherwise, so an unweighted batch is exactly the uncorrected
+//! objective. Everything else is masked out — including the last cell of
+//! each segment, whose prediction would cross into the next segment.
 //!
 //! Property-tested invariant: packing is lossless — the multiset of
 //! (gen token, behavior_lp, version) triples in == out.
@@ -31,6 +33,14 @@ pub struct TrainBatch {
     pub adv: Vec<f32>,
     pub reward: Vec<f32>,
     pub mask: Vec<f32>,
+    /// per-token truncated IS weight lane (1.0 = uncorrected). Only
+    /// meaningful where mask = 1; `host_weighted` says whether any
+    /// sequence actually carried computed weights.
+    pub is_w: Vec<f32>,
+    /// at least one packed sequence brought host-computed IS weights
+    /// (the trainer then tells the graph to use the lane instead of
+    /// recomputing on-device)
+    pub host_weighted: bool,
     /// weight version per target slot (0 where mask = 0)
     pub versions: Vec<u64>,
     pub n_seqs: usize,
@@ -86,6 +96,8 @@ impl Packer {
             adv: vec![0.0; b * t],
             reward: vec![0.0; b * t],
             mask: vec![0.0; b * t],
+            is_w: vec![1.0; b * t],
+            host_weighted: false,
             versions: vec![0; b * t],
             n_seqs: 0,
             n_gen_tokens: 0,
@@ -116,6 +128,25 @@ impl Packer {
     /// Place a rollout (first-fit). Returns false when it doesn't fit —
     /// flush and retry. Rollouts with no generated tokens are rejected.
     pub fn try_add(&mut self, r: &Rollout, advantage: f32) -> bool {
+        self.try_add_weighted(r, advantage, None)
+    }
+
+    /// [`Packer::try_add`] with an optional per-token truncated-IS weight
+    /// vector (parallel to `r.gen_tokens`) destined for the batch's
+    /// `is_w` lane. `None` leaves the lane at its neutral 1.0.
+    pub fn try_add_weighted(
+        &mut self,
+        r: &Rollout,
+        advantage: f32,
+        weights: Option<&[f32]>,
+    ) -> bool {
+        if let Some(w) = weights {
+            assert_eq!(
+                w.len(),
+                r.gen_tokens.len(),
+                "IS weight vector must parallel gen_tokens"
+            );
+        }
         let len = r.prompt_tokens.len() + r.gen_tokens.len();
         if r.gen_tokens.is_empty() || len > self.t {
             return false;
@@ -148,6 +179,12 @@ impl Packer {
             bt.versions[slot] = r.token_version[j];
             bt.adv[slot] = advantage;
             bt.reward[slot] = r.reward;
+            if let Some(w) = weights {
+                bt.is_w[slot] = w[j];
+            }
+        }
+        if weights.is_some() {
+            bt.host_weighted = true;
         }
         self.used[row] += len;
         self.next_seg[row] += 1;
@@ -241,6 +278,36 @@ mod tests {
     fn empty_gen_rejected() {
         let mut p = Packer::new(1, 8);
         assert!(!p.try_add(&rollout(vec![1, 5], vec![], 0.0), 0.0));
+    }
+
+    #[test]
+    fn weight_lane_lands_on_target_slots() {
+        let mut p = Packer::new(1, 16);
+        let r1 = rollout(vec![1, 5], vec![7, 2], 1.0);
+        let r2 = rollout(vec![1, 6], vec![8, 2], 0.0);
+        assert!(p.try_add_weighted(&r1, 1.0, Some(&[0.25, 4.5])));
+        assert!(p.try_add_weighted(&r2, 0.0, None));
+        let b = p.flush();
+        assert!(b.host_weighted, "weighted sequence marks the batch");
+        // r1's targets sit at slots 1,2 (see packs_multiple_per_row test)
+        assert_eq!(b.is_w[1], 0.25);
+        assert_eq!(b.is_w[2], 4.5);
+        // r2 (unweighted) keeps the neutral lane at its targets 5,6
+        assert_eq!(b.is_w[5], 1.0);
+        assert_eq!(b.is_w[6], 1.0);
+        // a flushed packer starts the next batch unweighted + neutral
+        assert!(p.try_add(&rollout(vec![1, 5], vec![7, 2], 0.0), 0.0));
+        let b2 = p.flush();
+        assert!(!b2.host_weighted);
+        assert!(b2.is_w.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel gen_tokens")]
+    fn skewed_weight_vector_panics() {
+        let mut p = Packer::new(1, 16);
+        let r = rollout(vec![1, 5], vec![7, 8, 2], 0.0);
+        p.try_add_weighted(&r, 0.0, Some(&[1.0]));
     }
 
     #[test]

@@ -4,6 +4,26 @@
 //! group-baseline advantages, packs sequences online into fixed [B, T]
 //! training batches and publishes them to the trainer topic.
 //!
+//! **IS-correction weight lane:** with `[rl] is_correction =
+//! "truncated"` and a [`PolicyScorer`] wired (device-free harnesses and
+//! tests; the real orchestrator passes `None` and lets the train graph
+//! correct exactly at train time), each admitted rollout's per-token
+//! truncated weights `min(c, exp(lp_pi - lp_mu))` are computed here and
+//! packed into the batch's `is_w` lane; the batch is flagged
+//! `host_weighted` so the trainer tells the graph to consume the lane.
+//!
+//! **Truncated rollouts** (`[rl] train_truncated = true`): sequences cut
+//! off mid-generation arrive as `FinishReason::Truncated` and are
+//! admitted as full group members (they count toward completion *and*
+//! enter the advantage baseline). Conservation books guarantee a trained
+//! prefix and its later continuation are never both trained: the
+//! collector remembers each admitted prefix's (group, length, token
+//! hash) and drops any later rollout in the same group whose generated
+//! tokens extend one.
+//!
+//! **Periodic mode** shares the pipeline path — grouping, packing and
+//! shipping are identical; only the trainer's publish cadence differs.
+//!
 //! **Conventional mode** implements the paper's §5 tweak: it accumulates
 //! the whole RL step's buffer (every sequence the Generate phase
 //! produced), shuffles it, packs it into ~G batches, marks the last one,
@@ -13,9 +33,12 @@
 use super::conv::ConvSync;
 use super::packing::{Packer, TrainBatch};
 use crate::broker::{Publisher, RecvError, Subscriber};
-use crate::config::{Mode, RunConfig};
+use crate::config::{IsCorrection, Mode, RunConfig};
 use crate::metrics::MetricsHub;
-use crate::rl::{group_advantages, AdvantageMode, FinishReason, Rollout};
+use crate::rl::{
+    effective_sample_size, group_advantages, truncated_weights, AdvantageMode, FinishReason,
+    Rollout,
+};
 use crate::util::logging::Logger;
 use crate::util::Rng;
 use anyhow::Result;
@@ -23,6 +46,13 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Current-policy scorer: returns lp_pi per generated token (parallel to
+/// `gen_tokens`). Device-free harnesses wire synthetic scorers; the real
+/// orchestrator passes `None` — the AOT train graph recomputes lp_pi
+/// under the exact parameters being optimized, which is strictly fresher
+/// than anything the preprocessor could score with.
+pub type PolicyScorer = Arc<dyn Fn(&Rollout) -> Vec<f32> + Send + Sync>;
 
 pub struct PreprocessorArgs {
     pub cfg: RunConfig,
@@ -34,13 +64,17 @@ pub struct PreprocessorArgs {
     pub hub: MetricsHub,
     pub stop: Arc<AtomicBool>,
     pub conv: Option<Arc<ConvSync>>,
+    /// optional host-side lp_pi source for the `is_w` weight lane
+    pub scorer: Option<PolicyScorer>,
 }
 
 pub fn run_preprocessor(args: PreprocessorArgs) -> Result<()> {
-    let PreprocessorArgs { cfg, b, t, rollout_rx, batch_tx, hub, stop, conv } = args;
+    let PreprocessorArgs { cfg, b, t, rollout_rx, batch_tx, hub, stop, conv, scorer } = args;
     let log = Logger::new("preproc");
     match cfg.mode {
-        Mode::Pipeline => run_pipeline(&cfg, b, t, rollout_rx, batch_tx, hub, stop, log),
+        Mode::Pipeline | Mode::Periodic { .. } => {
+            run_pipeline(&cfg, b, t, rollout_rx, batch_tx, hub, stop, scorer, log)
+        }
         Mode::Conventional { g } => run_conventional(
             &cfg,
             g,
@@ -51,9 +85,41 @@ pub fn run_preprocessor(args: PreprocessorArgs) -> Result<()> {
             hub,
             stop,
             conv.expect("conventional mode requires ConvSync"),
+            scorer,
             log,
         ),
     }
+}
+
+/// Per-token truncated IS weights for the batch's `is_w` lane, when the
+/// config asks for correction and a scorer is wired. Records the
+/// rollout's host-side ESS to `preproc/rollout_ess` (the admission
+/// metric `rl::ess`'s module doc promises).
+pub(crate) fn is_weights(
+    cfg: &RunConfig,
+    scorer: Option<&PolicyScorer>,
+    r: &Rollout,
+    hub: &MetricsHub,
+) -> Option<Vec<f32>> {
+    let scorer = scorer?;
+    if cfg.is_correction != IsCorrection::Truncated || r.gen_tokens.is_empty() {
+        return None;
+    }
+    let lp_pi = scorer(r);
+    assert_eq!(
+        lp_pi.len(),
+        r.gen_tokens.len(),
+        "policy scorer must return one logprob per generated token"
+    );
+    let w = truncated_weights(&lp_pi, &r.behavior_lp, cfg.clip_c as f32);
+    hub.record(
+        "preproc/rollout_ess",
+        crate::util::timer::global_seconds(),
+        hub.counter("rollouts_weighted"),
+        effective_sample_size(&w),
+    );
+    hub.add("rollouts_weighted", 1.0);
+    Some(w)
 }
 
 struct PendingGroup {
@@ -91,16 +157,42 @@ pub struct GroupCollector {
     /// pending-map cap; beyond it the oldest groups are force-completed
     /// (0 = unbounded)
     max_pending: usize,
+    /// admit `FinishReason::Truncated` partial rollouts as trainable
+    /// members (`[rl] train_truncated`); off = treat them like Aborted
+    train_truncated: bool,
     pending: HashMap<u64, PendingGroup>,
     /// recently force-completed gids (insertion order, bounded) — late
     /// members of these are discarded instead of re-pending
     evicted: std::collections::VecDeque<u64>,
+    /// conservation books for truncated training: group → admitted
+    /// prefixes as (gen length, FNV-1a hash of the gen tokens). A later
+    /// rollout in the same group whose generated tokens extend a
+    /// recorded prefix is dropped — a prefix and its continuation must
+    /// never both be trained (the actor's publish path already makes
+    /// this exclusive at the source; the books are the defensive,
+    /// testable invariant)
+    trained_prefixes: HashMap<u64, Vec<(usize, u64)>>,
+    /// insertion order of `trained_prefixes` keys (bounds the ledger)
+    prefix_order: std::collections::VecDeque<u64>,
     /// throttle for the O(pending) staleness scan on busy paths
     last_scan: Instant,
 }
 
 /// How many force-completed gids to remember for late-member discard.
 const EVICTED_MEMORY: usize = 1024;
+
+/// FNV-1a over token streams — the prefix identity in the conservation
+/// books (cheap, deterministic, no allocation).
+fn fnv64_tokens(toks: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in toks {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
 
 impl GroupCollector {
     pub fn new(cfg: &RunConfig) -> Self {
@@ -110,6 +202,7 @@ impl GroupCollector {
             cfg.group_timeout_s,
             cfg.max_pending_groups,
         )
+        .admit_truncated(cfg.train_truncated)
     }
 
     pub fn with_limits(
@@ -123,10 +216,57 @@ impl GroupCollector {
             normalize,
             timeout: (timeout_s > 0.0).then(|| Duration::from_secs_f64(timeout_s)),
             max_pending,
+            train_truncated: false,
             pending: HashMap::new(),
             evicted: std::collections::VecDeque::new(),
+            trained_prefixes: HashMap::new(),
+            prefix_order: std::collections::VecDeque::new(),
             last_scan: Instant::now(),
         }
+    }
+
+    /// Builder toggle for `[rl] train_truncated` (see field docs).
+    pub fn admit_truncated(mut self, on: bool) -> Self {
+        self.train_truncated = on;
+        self
+    }
+
+    /// Is this rollout trainable under the current admission rules?
+    fn trainable(&self, r: &Rollout) -> bool {
+        if r.gen_tokens.is_empty() {
+            return false;
+        }
+        match r.finish {
+            FinishReason::Aborted => false,
+            FinishReason::Truncated => self.train_truncated,
+            _ => true,
+        }
+    }
+
+    /// Does `gen` extend (or equal) a truncated prefix this collector
+    /// already admitted for training in group `gid`?
+    fn extends_trained_prefix(&self, gid: u64, gen: &[i32]) -> bool {
+        self.trained_prefixes.get(&gid).is_some_and(|v| {
+            v.iter()
+                .any(|&(len, h)| gen.len() >= len && fnv64_tokens(&gen[..len]) == h)
+        })
+    }
+
+    /// Record an admitted truncated prefix in the conservation books
+    /// (bounded: oldest groups forgotten first).
+    fn remember_trained_prefix(&mut self, gid: u64, gen: &[i32]) {
+        if !self.trained_prefixes.contains_key(&gid) {
+            if self.prefix_order.len() >= EVICTED_MEMORY {
+                if let Some(old) = self.prefix_order.pop_front() {
+                    self.trained_prefixes.remove(&old);
+                }
+            }
+            self.prefix_order.push_back(gid);
+        }
+        self.trained_prefixes
+            .entry(gid)
+            .or_default()
+            .push((gen.len(), fnv64_tokens(gen)));
     }
 
     pub fn add(&mut self, r: Rollout, hub: &MetricsHub) -> Vec<(Rollout, f32)> {
@@ -138,9 +278,24 @@ impl GroupCollector {
             hub.add("rollouts_late_after_eviction", 1.0);
             return Vec::new();
         }
-        // aborted/empty rollouts still count towards group completion but
-        // are filtered out of the advantage computation
-        if matches!(r.finish, FinishReason::Aborted) || r.gen_tokens.is_empty() {
+        if self.train_truncated && !r.gen_tokens.is_empty() {
+            // conservation: never train both a truncated prefix and a
+            // later continuation of it. Dropped continuations don't count
+            // toward completion — the prefix already took the group slot,
+            // and stranded-group eviction salvages any imbalance.
+            if self.extends_trained_prefix(gid, &r.gen_tokens) {
+                hub.add("rollouts_continuation_dropped", 1.0);
+                return Vec::new();
+            }
+            if matches!(r.finish, FinishReason::Truncated) {
+                self.remember_trained_prefix(gid, &r.gen_tokens);
+                hub.add("rollouts_truncated_admitted", 1.0);
+            }
+        }
+        // untrainable rollouts (aborted/empty — and truncated while the
+        // dial is off) still count towards group completion but are
+        // filtered out of the advantage computation
+        if !self.trainable(&r) {
             hub.add("rollouts_discarded", 1.0);
         }
         let now = Instant::now();
@@ -171,13 +326,8 @@ impl GroupCollector {
         let Some(g) = self.pending.remove(&gid) else {
             return Vec::new();
         };
-        let members: Vec<Rollout> = g
-            .members
-            .into_iter()
-            .filter(|r| {
-                !r.gen_tokens.is_empty() && !matches!(r.finish, FinishReason::Aborted)
-            })
-            .collect();
+        let members: Vec<Rollout> =
+            g.members.into_iter().filter(|r| self.trainable(r)).collect();
         if members.is_empty() {
             return Vec::new();
         }
@@ -267,11 +417,23 @@ fn run_pipeline(
     batch_tx: Publisher<TrainBatch>,
     hub: MetricsHub,
     stop: Arc<AtomicBool>,
+    scorer: Option<PolicyScorer>,
     log: Logger,
 ) -> Result<()> {
     let mut collector = GroupCollector::new(cfg);
     let mut packer = Packer::new(b, t);
-    let mut ready: Vec<(Rollout, f32)> = Vec::new();
+    // (rollout, advantage, optional is_w lane) — weights are computed
+    // once at admission, not per pack attempt
+    let mut ready: Vec<(Rollout, f32, Option<Vec<f32>>)> = Vec::new();
+    let weigh = |pairs: Vec<(Rollout, f32)>, hub: &MetricsHub| {
+        pairs
+            .into_iter()
+            .map(|(r, a)| {
+                let w = is_weights(cfg, scorer.as_ref(), &r, hub);
+                (r, a, w)
+            })
+            .collect::<Vec<_>>()
+    };
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -291,17 +453,17 @@ fn run_pipeline(
                 {
                     hub.add("rollouts_completed_after_migration", 1.0);
                 }
-                ready.extend(collector.add(r, &hub));
+                ready.extend(weigh(collector.add(r, &hub), &hub));
                 // a sustained stream never hits the Timeout arm below, so
                 // stranded-group salvage must also run here (cap check is
                 // cheap; the staleness scan is time-throttled)
-                ready.extend(collector.evict_stale_throttled(&hub));
+                ready.extend(weigh(collector.evict_stale_throttled(&hub), &hub));
             }
             Err(RecvError::Closed) => break,
             Err(RecvError::Timeout) => {
                 // idle: salvage groups stranded by ring eviction of their
                 // missing members (see GroupCollector docs)
-                ready.extend(collector.evict_stale(&hub));
+                ready.extend(weigh(collector.evict_stale(&hub), &hub));
                 // trickle flush: don't let a partial batch starve the trainer
                 if ready.is_empty() {
                     if !packer.is_empty() && send(&mut packer, &batch_tx, &hub, false)? {
@@ -314,8 +476,8 @@ fn run_pipeline(
         // pack everything that fits; flush when full
         let i = 0;
         while i < ready.len() {
-            let (r, adv) = &ready[i];
-            if packer.try_add(r, *adv) {
+            let (r, adv, w) = &ready[i];
+            if packer.try_add_weighted(r, *adv, w.as_deref()) {
                 ready.swap_remove(i);
             } else if !packer.is_empty() {
                 if send(&mut packer, &batch_tx, &hub, false)? {
@@ -350,6 +512,7 @@ fn run_conventional(
     hub: MetricsHub,
     stop: Arc<AtomicBool>,
     conv: Arc<ConvSync>,
+    scorer: Option<PolicyScorer>,
     log: Logger,
 ) -> Result<()> {
     let mut collector = GroupCollector::new(cfg);
@@ -397,11 +560,12 @@ fn run_conventional(
         let chunk = buffer.len().div_ceil(_g.max(1)).max(1);
         for group in buffer.chunks(chunk) {
             for (r, adv) in group {
-                if !packer.try_add(r, *adv) {
+                let w = is_weights(cfg, scorer.as_ref(), r, &hub);
+                if !packer.try_add_weighted(r, *adv, w.as_deref()) {
                     if !packer.is_empty() {
                         batches.push(packer.flush());
                     }
-                    if !packer.try_add(r, *adv) {
+                    if !packer.try_add_weighted(r, *adv, w.as_deref()) {
                         hub.add("rollouts_too_long", 1.0);
                     }
                 }
@@ -440,4 +604,95 @@ fn send(
     );
     // a send failure means the trainer is done and disconnected: shut down
     Ok(batch_tx.send(batch).is_err())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout(gid: u64, gen: Vec<i32>, reward: f32, finish: FinishReason) -> Rollout {
+        let n = gen.len();
+        Rollout {
+            seq_id: 1,
+            problem_id: 1,
+            group_id: gid,
+            actor_id: 0,
+            prompt_tokens: vec![1, 4],
+            gen_tokens: gen,
+            behavior_lp: vec![-0.25; n],
+            token_version: vec![3; n],
+            reward,
+            finish,
+            t_start: 0.0,
+            t_end: 0.0,
+        }
+    }
+
+    #[test]
+    fn truncated_treated_like_aborted_when_dial_off() {
+        let hub = MetricsHub::new();
+        let mut gc = GroupCollector::with_limits(2, false, 0.0, 0);
+        assert!(gc.add(rollout(7, vec![5, 6], 1.0, FinishReason::Truncated), &hub).is_empty());
+        let done = gc.add(rollout(7, vec![8, 9], 1.0, FinishReason::Eos), &hub);
+        // the truncated member counted toward completion but was filtered
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0].0.finish, FinishReason::Eos));
+        assert_eq!(hub.counter("rollouts_discarded"), 1.0);
+    }
+
+    #[test]
+    fn truncated_admitted_as_full_member_when_dial_on() {
+        let hub = MetricsHub::new();
+        let mut gc = GroupCollector::with_limits(2, false, 0.0, 0).admit_truncated(true);
+        assert!(gc.add(rollout(7, vec![5, 6], 0.0, FinishReason::Truncated), &hub).is_empty());
+        let done = gc.add(rollout(7, vec![8, 9], 1.0, FinishReason::Eos), &hub);
+        assert_eq!(done.len(), 2, "truncated prefix trains alongside its groupmate");
+        assert_eq!(hub.counter("rollouts_truncated_admitted"), 1.0);
+        assert_eq!(hub.counter("rollouts_discarded"), 0.0);
+        // group baseline includes the truncated member's reward:
+        // advantages are ±0.5 around the (0.0 + 1.0)/2 mean
+        let mut advs: Vec<f32> = done.iter().map(|(_, a)| *a).collect();
+        advs.sort_by(f32::total_cmp);
+        assert_eq!(advs, vec![-0.5, 0.5]);
+    }
+
+    #[test]
+    fn continuation_of_trained_prefix_is_dropped() {
+        let hub = MetricsHub::new();
+        let mut gc = GroupCollector::with_limits(2, false, 0.0, 0).admit_truncated(true);
+        assert!(gc.add(rollout(9, vec![5, 6], 0.0, FinishReason::Truncated), &hub).is_empty());
+        // a later rollout extending the trained prefix [5, 6] must not
+        // train those tokens again — dropped, no group progress
+        let dup = gc.add(rollout(9, vec![5, 6, 7], 1.0, FinishReason::Eos), &hub);
+        assert!(dup.is_empty());
+        assert_eq!(hub.counter("rollouts_continuation_dropped"), 1.0);
+        assert_eq!(gc.n_pending(), 1, "dropped continuation takes no group slot");
+        // an unrelated sibling (different tokens) completes the group
+        let done = gc.add(rollout(9, vec![8, 6, 7], 1.0, FinishReason::Eos), &hub);
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn is_weights_respects_dial_and_scorer() {
+        let hub = MetricsHub::new();
+        let mut cfg = RunConfig::default();
+        cfg.clip_c = 2.0;
+        let r = rollout(1, vec![5, 6, 7], 1.0, FinishReason::Eos);
+        // no scorer → no lane, regardless of the dial
+        assert!(is_weights(&cfg, None, &r, &hub).is_none());
+        // scorer + truncated correction → clamped ratios
+        let scorer: PolicyScorer = Arc::new(|r: &Rollout| {
+            // lp_pi = behavior + [0, +10, -1]: on-policy, way-up, down
+            let d = [0.0f32, 10.0, -1.0];
+            r.behavior_lp.iter().zip(d).map(|(b, d)| b + d).collect()
+        });
+        let w = is_weights(&cfg, Some(&scorer), &r, &hub).unwrap();
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert_eq!(w[1], 2.0, "clipped at c");
+        assert!((w[2] - (-1.0f32).exp()).abs() < 1e-6);
+        assert_eq!(hub.counter("rollouts_weighted"), 1.0);
+        // dial off → no lane even with a scorer
+        cfg.is_correction = IsCorrection::None;
+        assert!(is_weights(&cfg, Some(&scorer), &r, &hub).is_none());
+    }
 }

@@ -646,6 +646,15 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
                         .series_last("batch_fill")
                         .map(|p| p.value)
                         .unwrap_or(1.0),
+                    // batch ESS for the ess_floor guard: prefer the device
+                    // metric, fall back to the trainer's host oracle;
+                    // before the first trained batch report 1.0 (fully
+                    // on-policy) so the guard doesn't pin itself shut
+                    ess: hub
+                        .series_last("train/ess")
+                        .or_else(|| hub.series_last("train/ess_host"))
+                        .map(|p| p.value)
+                        .unwrap_or(1.0),
                     pool: pool.len(),
                 };
                 match scaler.decide(&sig) {

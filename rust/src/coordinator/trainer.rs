@@ -6,12 +6,18 @@
 //!
 //! * pipeline mode — publish after **every** optimizer step
 //!   (`request_weight_update`, the in-flight mechanism);
+//! * periodic mode — publish after every k-th step (bounded asynchrony
+//!   between the two extremes, the ablation axis of Fig 6);
 //! * conventional mode — publish only when the RL step's last batch is
 //!   done, then reopen the Generate phase.
 //!
 //! Records the full metric suite: loss/ESS/KL/clip from the device
 //! metrics vector, token-lag profiles computed from the per-token weight
 //! versions (Fig 6a), reward-vs-samples and reward-vs-time (Fig 5).
+//! Additionally computes a host-side ESS oracle (Eq. 6) over the batch's
+//! IS-weight lane — `train/ess_host` — which the supervisor feeds to the
+//! autoscaler's `ess_floor` guard, and which backs the step log when the
+//! compiled artifact exports no "ess" device metric.
 //!
 //! **Checkpoint/resume:** every `[checkpoint] every` steps the trainer
 //! snapshots a full [`TrainState`] (params + both Adam moments + the
@@ -31,7 +37,7 @@ use crate::broker::{RecvError, Subscriber};
 use crate::config::{Mode, RunConfig};
 use crate::metrics::MetricsHub;
 use crate::model::checkpoint::{AsyncCheckpointer, TrainState};
-use crate::rl::{BatchLag, LagTracker};
+use crate::rl::{effective_sample_size, BatchLag, LagTracker};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::logging::Logger;
 use crate::util::timer::global_seconds;
@@ -118,9 +124,20 @@ pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
         };
 
     // running lag series (Fig 6a) + the smoothed live signal the
-    // supervisor's autoscaler polls via the hub
-    let mut lag_tracker = LagTracker::new();
+    // supervisor's autoscaler polls via the hub. The smoothing window is
+    // preloaded from the hub's own history: the hub outlives trainer
+    // incarnations, so a failover respawn continues the smoothed signal
+    // instead of restarting it from 0.0 (which let the autoscaler's lag
+    // guard trivially pass for up to a full window after a trainer death).
     const LAG_SMOOTH_WINDOW: usize = 8;
+    let mut lag_tracker = preload_lag_tracker(&hub, LAG_SMOOTH_WINDOW);
+    if !lag_tracker.per_step.is_empty() {
+        log.info(&format!(
+            "lag tracker preloaded {} batches from hub history (smoothed {:.3})",
+            lag_tracker.per_step.len(),
+            lag_tracker.smoothed_mean_steps(LAG_SMOOTH_WINDOW)
+        ));
+    }
 
     // off-thread checkpoint writer: the hot loop only hands states over
     let mut ckpt: Option<AsyncCheckpointer> = match (&cfg.checkpoint.dir, cfg.checkpoint.every) {
@@ -204,7 +221,7 @@ pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
 
         // ---- optimizer step ----
         let (b, t) = (batch.b, batch.t);
-        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 12);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * p + 14);
         inputs.extend(params.iter().cloned());
         inputs.extend(m.iter().cloned());
         inputs.extend(v.iter().cloned());
@@ -216,10 +233,17 @@ pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
         inputs.push(HostTensor::from_f32(&[b, t], batch.adv.clone()));
         inputs.push(HostTensor::from_f32(&[b, t], batch.reward.clone()));
         inputs.push(HostTensor::from_f32(&[b, t], batch.mask.clone()));
+        inputs.push(HostTensor::from_f32(&[b, t], batch.is_w.clone()));
         inputs.push(HostTensor::scalar_f32(cfg.lr as f32));
         inputs.push(HostTensor::scalar_f32(cfg.clip_c as f32));
         inputs.push(HostTensor::scalar_f32(cfg.advantage.graph_flag()));
         inputs.push(HostTensor::scalar_f32(cfg.vf_coef as f32));
+        // IS-correction selector: 0 = uncorrected, 1 = device recomputes
+        // truncated weights from current-policy logprobs, 2 = take the
+        // host-filled is_w lane verbatim (preprocessor already scored it)
+        inputs.push(HostTensor::scalar_f32(
+            cfg.is_correction.graph_flag(batch.host_weighted),
+        ));
         let mut out = graph.run_host(&inputs).context("train step")?;
         let metrics = out.split_off(3 * p).remove(0);
         let v_new = out.split_off(2 * p);
@@ -260,20 +284,38 @@ pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
         hub.record("batch_fill", tnow, step as f64, batch.fill());
         hub.add("samples_trained", batch.n_seqs as f64);
 
+        // ---- host-side ESS oracle (Eq. 6) over the packed weight lane.
+        // With correction off (or no scorer upstream) the lane is all-1.0
+        // and the oracle reads a flat 1.0; otherwise it is the live
+        // off-policyness signal the autoscaler's ess_floor guard consumes.
+        let lane: Vec<f32> = batch
+            .is_w
+            .iter()
+            .zip(&batch.mask)
+            .filter(|&(_, &mk)| mk == 1.0)
+            .map(|(&w, _)| w)
+            .collect();
+        let ess_host = effective_sample_size(&lane);
+        hub.record("train/ess_host", tnow, step as f64, ess_host);
+        if !metric_names.iter().any(|n| n == "ess") {
+            // artifact exports no device ESS — the oracle is the only source
+            hub.record("train/ess", tnow, step as f64, ess_host);
+        }
+        if cfg.ess_floor > 0.0 && ess_host < cfg.ess_floor {
+            hub.add("ess_floor_trips", 1.0);
+        }
+
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            let ess_i = metric_names.iter().position(|n| n == "ess").unwrap_or(0);
+            let ess_s = ess_display(&metric_names, mvec, Some(ess_host));
             log.info(&format!(
-                "step {step:4} loss {:+.4} ess {:.3} reward {:+.3} max_lag {max_lag} samples {samples_total}",
-                mvec[0], mvec[ess_i], batch.mean_reward()
+                "step {step:4} loss {:+.4} ess {ess_s} reward {:+.3} max_lag {max_lag} samples {samples_total}",
+                mvec[0],
+                batch.mean_reward()
             ));
         }
 
         // ---- publish weights ----
-        let publish = match cfg.mode {
-            Mode::Pipeline => true,
-            Mode::Conventional { .. } => batch.last_of_rl_step,
-        };
-        if publish {
+        if should_publish(&cfg.mode, step, batch.last_of_rl_step) {
             bus.publish(step as u64 + 1, Arc::new(params.clone()));
             if let (Mode::Conventional { .. }, Some(sync)) = (&cfg.mode, &conv) {
                 sync.begin_generate(conv_groups);
@@ -322,4 +364,131 @@ fn finish_checkpoints(ckpt: Option<AsyncCheckpointer>, hub: &MetricsHub) -> Resu
         hub.add("checkpoints_superseded", stats.superseded as f64);
     }
     Ok(())
+}
+
+/// Publish cadence per mode — the run-mode dial in one place: pipeline
+/// publishes after every optimizer step (maximum freshness), periodic
+/// after every k-th step (bounded asynchrony), conventional only when
+/// the RL step's last batch is done (fully synchronous loop).
+pub(crate) fn should_publish(mode: &Mode, step: usize, last_of_rl_step: bool) -> bool {
+    match mode {
+        Mode::Pipeline => true,
+        Mode::Periodic { k } => step % (*k).max(1) == 0,
+        Mode::Conventional { .. } => last_of_rl_step,
+    }
+}
+
+/// What the step log prints for ESS. The old code indexed
+/// `metric_names.position("ess").unwrap_or(0)`, so an artifact whose
+/// metric vector lacks "ess" silently printed the *loss* labelled as
+/// ess. Now: the device metric when the artifact exports one, else the
+/// host oracle (marked `*`), else `n/a`.
+pub(crate) fn ess_display(metric_names: &[String], mvec: &[f32], host_ess: Option<f64>) -> String {
+    match metric_names.iter().position(|n| n == "ess") {
+        Some(i) if i < mvec.len() => format!("{:.3}", mvec[i]),
+        _ => match host_ess {
+            Some(e) => format!("{e:.3}*"),
+            None => "n/a".to_string(),
+        },
+    }
+}
+
+/// Rebuild a [`LagTracker`]'s smoothing window from the metrics hub.
+/// The hub outlives trainer incarnations, so after a failover respawn
+/// `train/mean_lag_smoothed` continues where the dead incarnation left
+/// off instead of restarting from 0.0. Only the fields the smoothed
+/// signal and `max_ever_steps` consume are reconstructed exactly;
+/// `max_samples`/`n_tokens` are not recoverable from the hub series and
+/// stay 0 (they feed no live decision).
+pub(crate) fn preload_lag_tracker(hub: &MetricsHub, window: usize) -> LagTracker {
+    let mut tracker = LagTracker::new();
+    let mean = hub.series("train/mean_lag");
+    let maxs = hub.series("train/max_lag");
+    let spans = hub.series("train/mean_version_span");
+    let n = mean.points.len();
+    for i in n.saturating_sub(window)..n {
+        tracker.record(BatchLag {
+            max_steps: maxs.points.get(i).map(|p| p.value as u64).unwrap_or(0),
+            mean_steps: mean.points[i].value,
+            max_samples: 0,
+            mean_version_span: spans.points.get(i).map(|p| p.value).unwrap_or(0.0),
+            n_tokens: 0,
+        });
+    }
+    tracker
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn publish_cadence_mode_matrix() {
+        // pipeline: every step, regardless of batch position
+        assert!((1..=6).all(|s| should_publish(&Mode::Pipeline, s, false)));
+        // conventional: only the RL step's last batch
+        let conv = Mode::Conventional { g: 4 };
+        assert!(!should_publish(&conv, 3, false));
+        assert!(should_publish(&conv, 3, true));
+        // periodic k=3: steps 3 and 6, nothing in between — and
+        // last_of_rl_step plays no role
+        let m = Mode::Periodic { k: 3 };
+        let got: Vec<bool> = (1..=6).map(|s| should_publish(&m, s, true)).collect();
+        assert_eq!(got, [false, false, true, false, false, true]);
+        // k=1 degenerates to pipeline cadence
+        assert!((1..=5).all(|s| should_publish(&Mode::Periodic { k: 1 }, s, false)));
+    }
+
+    #[test]
+    fn ess_display_never_mislabels_loss() {
+        let mvec = [0.42_f32, 7.0, 0.9];
+        // device metric present: index it
+        let n = names(&["loss", "pg_loss", "ess"]);
+        assert_eq!(ess_display(&n, &mvec, Some(0.5)), "0.900");
+        // absent: fall back to the host oracle — never to mvec[0] (the
+        // old unwrap_or(0) bug printed the loss labelled as ess)
+        let n = names(&["loss", "pg_loss"]);
+        assert_eq!(ess_display(&n, &mvec, Some(0.512)), "0.512*");
+        // ...or to n/a when there is no oracle either
+        assert_eq!(ess_display(&n, &mvec, None), "n/a");
+        // "ess" listed but the device vector is too short: same fallback
+        let n = names(&["loss", "pg_loss", "x", "ess"]);
+        assert_eq!(ess_display(&n, &mvec, None), "n/a");
+    }
+
+    #[test]
+    fn lag_tracker_preload_continues_smoothed_signal() {
+        let hub = MetricsHub::new();
+        // a prior incarnation recorded 10 steps of lag history
+        let mut prior = LagTracker::new();
+        for s in 1..=10u64 {
+            prior.record(BatchLag {
+                max_steps: s + 2,
+                mean_steps: s as f64,
+                max_samples: 64,
+                mean_version_span: 0.5,
+                n_tokens: 7,
+            });
+            hub.record("train/mean_lag", s as f64, s as f64, s as f64);
+            hub.record("train/max_lag", s as f64, s as f64, (s + 2) as f64);
+            hub.record("train/mean_version_span", s as f64, s as f64, 0.5);
+        }
+        let reborn = preload_lag_tracker(&hub, 8);
+        assert_eq!(reborn.per_step.len(), 8, "only the smoothing window is rebuilt");
+        assert!(
+            (reborn.smoothed_mean_steps(8) - prior.smoothed_mean_steps(8)).abs() < 1e-12,
+            "smoothed signal is continuous across the respawn"
+        );
+        assert_eq!(reborn.max_ever_steps(), 12);
+        assert!(
+            (reborn.latest().unwrap().mean_version_span - 0.5).abs() < 1e-12,
+            "version span survives the round trip"
+        );
+        // a hub with no history yields a fresh-start tracker
+        assert!(preload_lag_tracker(&MetricsHub::new(), 8).per_step.is_empty());
+    }
 }

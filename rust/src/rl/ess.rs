@@ -1,17 +1,48 @@
 //! Truncated importance weights and Effective Sample Size (Eq. 5–6).
 //!
-//! The trainer's AOT graph computes these on-device for the batch it
-//! optimizes; this host-side implementation is used by the preprocessor
-//! (for admission metrics), the simulator and the test suite, and is the
-//! oracle the device metrics are checked against.
+//! Three consumers share this host-side implementation:
+//!
+//! * the **preprocessor** (`coordinator/preprocessor.rs`) — when
+//!   `[rl] is_correction = "truncated"` and a policy scorer is wired
+//!   (device-free harnesses and tests), it fills the packed batch's
+//!   `is_w` lane with [`truncated_weights`] of the scorer's logprobs vs.
+//!   the recorded `behavior_lp`;
+//! * the **trainer** (`coordinator/trainer.rs`) — computes the host-side
+//!   ESS oracle over the batch's weight lane every optimizer step
+//!   (`train/ess_host`), the value the autoscaler's `ess_floor` guard
+//!   consumes and the reference the device `ess` metric is checked
+//!   against;
+//! * the **simulator / benches / tests** — `simcluster`, the onpolicy
+//!   bench and the property suite replay the same math device-free.
+//!
+//! The trainer's AOT graph computes the same quantities on-device for
+//! the batch it optimizes (exact at train time); the host path is the
+//! oracle and the admission-time approximation.
 
 /// w_i = min(c, exp(lp_pi - lp_mu)) — Eq. (5)'s truncated IS weights.
+///
+/// The log-ratio is taken in f64 and clamped to `ln(c)` *before*
+/// exponentiation, so arbitrarily large logprob gaps saturate exactly at
+/// `c` instead of overflowing to `inf` (f32 `exp` overflows past ~88
+/// nats). Non-finite inputs (NaN/inf logprobs are corrupt data) produce
+/// weight 0.0 — the token is excluded from the gradient rather than
+/// trained under a fabricated ratio. Every returned weight is finite and
+/// in `[0, c]`.
 pub fn truncated_weights(lp_pi: &[f32], lp_mu: &[f32], clip_c: f32) -> Vec<f32> {
     assert_eq!(lp_pi.len(), lp_mu.len());
+    let c = clip_c as f64;
+    let ln_c = c.ln();
     lp_pi
         .iter()
         .zip(lp_mu)
-        .map(|(p, m)| (p - m).exp().min(clip_c))
+        .map(|(&p, &m)| {
+            let lr = p as f64 - m as f64;
+            if !lr.is_finite() {
+                return 0.0;
+            }
+            // clamped in log space: exp never sees an argument > ln(c)
+            (lr.min(ln_c).exp().min(c)) as f32
+        })
         .collect()
 }
 
@@ -88,5 +119,70 @@ mod tests {
         let lp = vec![-0.5, -0.7];
         assert_eq!(kl_k3(&lp, &lp), 0.0);
         assert!(kl_k3(&[-0.5, -0.7], &[-1.5, -0.2]) > 0.0);
+    }
+
+    #[test]
+    fn huge_gaps_saturate_at_c_instead_of_overflowing() {
+        // 200 nats overflows f32 exp (~88 nats); the clamp-before-exp
+        // path must land exactly on c
+        let w = truncated_weights(&[0.0], &[-200.0], 5.0);
+        assert_eq!(w, vec![5.0]);
+        let w = truncated_weights(&[f32::MAX / 2.0], &[f32::MIN / 2.0], 3.0);
+        assert_eq!(w, vec![3.0]);
+        // huge gaps the other way underflow to 0, not NaN
+        let w = truncated_weights(&[-200.0], &[0.0], 5.0);
+        assert_eq!(w, vec![0.0]);
+    }
+
+    #[test]
+    fn non_finite_inputs_yield_zero_weight_not_c() {
+        // a NaN logprob used to clip silently to c (NaN.min(c) == c);
+        // corrupt tokens must instead drop out of the gradient
+        for (p, m) in [
+            (f32::NAN, -1.0),
+            (-1.0, f32::NAN),
+            (f32::INFINITY, -1.0),
+            (-1.0, f32::NEG_INFINITY),
+            (f32::INFINITY, f32::INFINITY),
+        ] {
+            let w = truncated_weights(&[p], &[m], 5.0);
+            assert_eq!(w, vec![0.0], "lp_pi={p} lp_mu={m}");
+        }
+    }
+
+    #[test]
+    fn property_no_non_finite_weight_escapes() {
+        crate::testkit::check("truncated weights finite", 200, 0x15e5, 64, |c| {
+            let n = c.usize_in(1, 32);
+            // arbitrary finite logprobs across the full f32 magnitude
+            // range, including pairs whose gap overflows f32 exp
+            let wild = |c: &mut crate::testkit::Case| -> Vec<f32> {
+                (0..n)
+                    .map(|_| {
+                        let mag = 10f32.powi(c.rng.below(39) as i32 - 19);
+                        let s = if c.rng.below(2) == 0 { -1.0 } else { 1.0 };
+                        s * mag * c.rng.f32()
+                    })
+                    .collect()
+            };
+            let lp_pi = wild(c);
+            let lp_mu = wild(c);
+            let clip_c = 0.5 + c.rng.f32() * 20.0;
+            let w = truncated_weights(&lp_pi, &lp_mu, clip_c);
+            for (i, &x) in w.iter().enumerate() {
+                if !x.is_finite() || x < 0.0 || x > clip_c + 1e-4 {
+                    return Err(format!(
+                        "weight {x} escaped [0, {clip_c}] at {i}: \
+                         lp_pi={} lp_mu={}",
+                        lp_pi[i], lp_mu[i]
+                    ));
+                }
+            }
+            let e = effective_sample_size(&w);
+            if !e.is_finite() || e < 0.0 || e > 1.0 + 1e-9 {
+                return Err(format!("ESS {e} out of (0,1]"));
+            }
+            Ok(())
+        });
     }
 }

@@ -91,7 +91,10 @@ impl LagTracker {
     }
 
     /// Brute-force recount for the property tests: recompute from raw
-    /// rollouts and compare with the recorded value.
+    /// rollouts and compare with the recorded value. Checks *every*
+    /// `BatchLag` field — a fabricated entry that fakes any one of
+    /// `max_samples` or `mean_version_span` (the PR 3 bug class) fails
+    /// here, not just the steps/token counts.
     pub fn verify_step(
         recorded: &BatchLag,
         rollouts: &[&Rollout],
@@ -101,7 +104,9 @@ impl LagTracker {
         let fresh = batch_lag(rollouts, train_version, batch_size);
         fresh.max_steps == recorded.max_steps
             && fresh.n_tokens == recorded.n_tokens
+            && fresh.max_samples == recorded.max_samples
             && (fresh.mean_steps - recorded.mean_steps).abs() < 1e-9
+            && (fresh.mean_version_span - recorded.mean_version_span).abs() < 1e-9
     }
 }
 
@@ -156,6 +161,26 @@ mod tests {
         t.record(batch_lag(&[&r2], 5, 8));
         assert_eq!(t.max_ever_steps(), 5);
         assert!(LagTracker::verify_step(&t.per_step[1], &[&r2], 5, 8));
+    }
+
+    #[test]
+    fn verify_step_pins_every_field() {
+        let r = rollout(vec![10, 11, 13]);
+        let honest = batch_lag(&[&r], 15, 64);
+        assert!(LagTracker::verify_step(&honest, &[&r], 15, 64));
+        // fabricating any single field must be caught
+        let mut fake = honest.clone();
+        fake.max_samples = 1;
+        assert!(!LagTracker::verify_step(&fake, &[&r], 15, 64));
+        let mut fake = honest.clone();
+        fake.mean_version_span += 0.5;
+        assert!(!LagTracker::verify_step(&fake, &[&r], 15, 64));
+        let mut fake = honest.clone();
+        fake.max_steps += 1;
+        assert!(!LagTracker::verify_step(&fake, &[&r], 15, 64));
+        let mut fake = honest;
+        fake.mean_steps += 0.25;
+        assert!(!LagTracker::verify_step(&fake, &[&r], 15, 64));
     }
 
     #[test]

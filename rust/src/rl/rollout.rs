@@ -13,6 +13,12 @@ pub enum FinishReason {
     Length,
     /// actor shut down mid-sequence
     Aborted,
+    /// cut off mid-generation but *trainable*: the generated prefix
+    /// carries full behavior logprobs + version tags (the PR 3
+    /// portability layer's `SeqSnapshot` raw material), so under
+    /// `[rl] train_truncated = true` the preprocessor admits it as a
+    /// partial rollout instead of discarding it (Truncated-PPO style)
+    Truncated,
 }
 
 #[derive(Debug, Clone)]

@@ -21,6 +21,13 @@
 //!   exceeds `max_lag_steps`: extra actors raise rollout throughput and
 //!   with it the lag of every in-flight token (paper §2.2), so adding
 //!   capacity under high lag buys negative on-policyness.
+//! * **batch ESS** (guard, alternative) — when `ess_floor > 0` the lag
+//!   guard above is *replaced* by an effective-sample-size floor: scale
+//!   up only while the trained batches' ESS (the host oracle,
+//!   `train/ess_host`) stays at or above the floor. With truncated-IS
+//!   correction on, lag per se is harmless — what matters is how much
+//!   the correction costs in effective samples — so corrected runs may
+//!   scale deeper into lag than a step-count cap would ever allow.
 //! * **trainer batch fill** (guard) — never scale down while the trainer
 //!   is packing starved batches (`batch_fill < min_batch_fill`).
 //!
@@ -52,6 +59,11 @@ pub struct AutoScaleCfg {
     pub cooldown: u32,
     /// token-lag ceiling for scale-up (optimizer steps); 0 disables
     pub max_lag_steps: f64,
+    /// batch-ESS floor for scale-up in (0, 1]; when > 0 it *replaces*
+    /// `max_lag_steps` as the freshness guard (IS-corrected runs cap the
+    /// correction's cost in effective samples instead of raw lag). 0
+    /// keeps the lag guard.
+    pub ess_floor: f64,
     /// batch-fill floor for scale-down; 0 disables
     pub min_batch_fill: f64,
     /// evaluation cadence in the supervisor loop, milliseconds
@@ -68,6 +80,7 @@ impl Default for AutoScaleCfg {
             down_patience: 5,
             cooldown: 8,
             max_lag_steps: 0.0,
+            ess_floor: 0.0,
             min_batch_fill: 0.0,
             eval_every_ms: 25,
         }
@@ -86,6 +99,11 @@ pub struct ScaleSignals {
     pub supply_capacity: usize,
     /// mean token lag of the latest trained batch, optimizer steps
     pub token_lag: f64,
+    /// latest trained batch's effective sample size in (0, 1] — the
+    /// `train/ess` (device) or `train/ess_host` (oracle) series.
+    /// Suppliers must set 1.0 when unknown; the derived `Default` is 0.0,
+    /// which reads as "all samples wasted" and pins the ESS guard shut.
+    pub ess: f64,
     /// latest trainer batch fill fraction (1.0 when unknown)
     pub batch_fill: f64,
     /// live actors
@@ -158,7 +176,15 @@ impl AutoScaler {
         // up/down thrash loop.
         let up_pressure = s.backlog as f64 > self.cfg.backlog_per_actor * pool
             && supply_frac < self.cfg.supply_high_frac;
-        let lag_ok = self.cfg.max_lag_steps <= 0.0 || s.token_lag < self.cfg.max_lag_steps;
+        // freshness guard: ESS floor (IS-corrected runs) replaces the raw
+        // lag cap when configured — the two measure the same risk, and
+        // applying both would re-impose the step cap the correction is
+        // meant to relax
+        let lag_ok = if self.cfg.ess_floor > 0.0 {
+            s.ess >= self.cfg.ess_floor
+        } else {
+            self.cfg.max_lag_steps <= 0.0 || s.token_lag < self.cfg.max_lag_steps
+        };
         let down_pressure = s.backlog == 0 && supply_frac >= self.cfg.supply_high_frac;
         let fill_ok = s.batch_fill >= self.cfg.min_batch_fill;
 
@@ -201,6 +227,7 @@ mod tests {
             down_patience: 3,
             cooldown: 4,
             max_lag_steps: 0.0,
+            ess_floor: 0.0,
             min_batch_fill: 0.0,
             eval_every_ms: 0,
         }
@@ -212,6 +239,7 @@ mod tests {
             supply_depth: 0,
             supply_capacity: 16,
             token_lag: 0.0,
+            ess: 1.0,
             batch_fill: 1.0,
             pool,
         }
@@ -223,6 +251,7 @@ mod tests {
             supply_depth: 16,
             supply_capacity: 16,
             token_lag: 0.0,
+            ess: 1.0,
             batch_fill: 1.0,
             pool,
         }
@@ -311,6 +340,61 @@ mod tests {
     }
 
     #[test]
+    fn ess_floor_blocks_scale_up_below_floor() {
+        let mut c = cfg();
+        c.ess_floor = 0.5;
+        let mut a = AutoScaler::new(c);
+        let mut s = backlog(10, 1);
+        s.ess = 0.3; // correction is burning half the batch: hold
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups(), 0);
+        s.ess = 0.8;
+        for _ in 0..2 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.decide(&s), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn ess_floor_replaces_the_lag_guard() {
+        // an IS-corrected run deep into lag but with healthy ESS may
+        // still scale up — the whole point of the corrected dial
+        let mut c = cfg();
+        c.max_lag_steps = 4.0;
+        c.ess_floor = 0.5;
+        let mut a = AutoScaler::new(c);
+        let mut s = backlog(10, 1);
+        s.token_lag = 50.0; // way past the (inactive) lag cap
+        s.ess = 0.9;
+        assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        assert_eq!(a.decide(&s), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn default_zero_ess_reads_as_guard_shut() {
+        // ScaleSignals::default() leaves ess = 0.0 — a supplier that
+        // forgets the signal must fail safe (never scale up), not
+        // trivially pass
+        let mut c = cfg();
+        c.ess_floor = 0.5;
+        let mut a = AutoScaler::new(c);
+        let s = ScaleSignals {
+            backlog: 10,
+            supply_capacity: 16,
+            batch_fill: 1.0,
+            pool: 1,
+            ..ScaleSignals::default()
+        };
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups(), 0);
+    }
+
+    #[test]
     fn fill_guard_blocks_scale_down() {
         let mut c = cfg();
         c.min_batch_fill = 0.5;
@@ -348,6 +432,7 @@ mod tests {
                     supply_depth: supply,
                     supply_capacity: cap,
                     token_lag: 0.0,
+                    ess: 1.0,
                     batch_fill: 1.0,
                     pool,
                 };

@@ -623,6 +623,9 @@ impl Simulator {
             supply_depth: self.queue.len().min(cap),
             supply_capacity: cap,
             token_lag: self.result.mean_lag.last().map(|p| p.value).unwrap_or(0.0),
+            // the simulator models no IS weighting: report fully on-policy
+            // so an ess_floor config can't pin its guard shut
+            ess: 1.0,
             batch_fill: 1.0,
             pool: live,
         };
@@ -934,6 +937,7 @@ mod tests {
                 down_patience: 3,
                 cooldown: 2,
                 max_lag_steps: 0.0,
+                ess_floor: 0.0,
                 min_batch_fill: 0.0,
                 eval_every_ms: 0,
             },
@@ -1062,6 +1066,7 @@ mod tests {
                     down_patience: 3,
                     cooldown: 2,
                     max_lag_steps: 0.0,
+                    ess_floor: 0.0,
                     min_batch_fill: 0.0,
                     eval_every_ms: 0,
                 },

@@ -301,6 +301,11 @@ pub struct GoldenCfg {
     /// `1..=max_new` off the admission RNG
     pub max_new: usize,
     pub vocab: usize,
+    /// trainer publish cadence in optimizer steps: 1 = after every step
+    /// (the pipeline default), k > 1 models `run.mode = periodic { k }`
+    /// — between publishes tokens keep sampling under the stale version,
+    /// which the digest's per-token version tags make visible
+    pub publish_every: u64,
     /// checkpoint cadence in optimizer steps (0 = no checkpoints)
     pub checkpoint_every: u64,
     /// checkpoint directory (required for checkpointing / failover)
@@ -320,6 +325,7 @@ impl GoldenCfg {
             live_target: 6,
             max_new: 6,
             vocab: 97,
+            publish_every: 1,
             checkpoint_every: 0,
             dir: None,
             sched: SchedPolicy::Fifo,
@@ -1003,13 +1009,17 @@ impl<'a> Golden<'a> {
             let batch: Vec<(u64, u64)> =
                 self.inbox.drain(..self.cfg.groups_per_step).collect();
             self.trainer.update(&batch, self.cfg.group_size);
-            self.version = self.trainer.step + 1;
             self.log.record(DigestEvent::TrainerStep {
                 step: self.trainer.step,
                 param_hash: self.trainer.param_hash(),
             });
             self.log.record(DigestEvent::RngCursor { words: self.trainer.rng.state_words() });
-            self.log.record(DigestEvent::WeightPublish { version: self.version });
+            // publish cadence: every step at publish_every = 1 (pipeline),
+            // every k-th step otherwise (periodic mode's bounded staleness)
+            if self.trainer.step % self.cfg.publish_every.max(1) == 0 {
+                self.version = self.trainer.step + 1;
+                self.log.record(DigestEvent::WeightPublish { version: self.version });
+            }
             if self.cfg.checkpoint_every > 0
                 && self.trainer.step % self.cfg.checkpoint_every == 0
             {
@@ -1266,6 +1276,20 @@ mod tests {
         cfg.groups_per_step = 3; // later publishes => different tags
         let b = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
         assert_ne!(a.log.digest(), b.log.digest());
+    }
+
+    #[test]
+    fn periodic_publish_cadence_is_digest_visible() {
+        // publish_every > 1 keeps tokens on stale version tags between
+        // publishes — a different run, not an alias of the pipeline one,
+        // and still seed-deterministic
+        let mut cfg = GoldenCfg::new(0x9e10);
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        cfg.publish_every = 3;
+        let per = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        assert_ne!(base.log.digest(), per.log.digest(), "stale version tags must show");
+        let again = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        assert_eq!(per.log.digest(), again.log.digest());
     }
 
     #[test]

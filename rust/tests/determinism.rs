@@ -26,6 +26,15 @@
 //! `TrainerSlot` trainer is chaos-killed mid-run and the supervisor's
 //! manifest failover must reproduce the uninterrupted trainer's final
 //! parameters bit-identically.
+//!
+//! The off-policyness dial adds three more claims: (4) every publish
+//! cadence — pipeline (every step), periodic k=3, conventional-shaped
+//! (per RL batch) — is chaos-equivalent *and* the three cadences yield
+//! mutually distinct trajectories; (5) the truncated-IS weight lane is
+//! arrival-order-invariant and degrades exactly to the uncorrected
+//! batch when the scorer reports zero lag; (6) replaying a continuation
+//! of an already-trained truncated prefix changes nothing (the
+//! conservation books drop it before it reaches a group slot).
 
 use pipeline_rl::broker::{topic, Policy};
 use pipeline_rl::coordinator::supervisor::{
@@ -33,9 +42,10 @@ use pipeline_rl::coordinator::supervisor::{
     TrainerSpawnFn,
 };
 use pipeline_rl::coordinator::trainer::TrainerExit;
+use pipeline_rl::coordinator::{GroupCollector, Packer, TrainBatch};
 use pipeline_rl::metrics::MetricsHub;
 use pipeline_rl::model::checkpoint::TrainState;
-use pipeline_rl::rl::Rollout;
+use pipeline_rl::rl::{truncated_weights, FinishReason, Rollout};
 use pipeline_rl::sched::{PreemptPolicy, SchedPolicy};
 // shared deterministic trainer (Adam-shaped, checkpointed RNG cursor):
 // one manifest save per step, publishing the version clock the chaos
@@ -43,8 +53,8 @@ use pipeline_rl::sched::{PreemptPolicy, SchedPolicy};
 use pipeline_rl::testkit::synth::SynthTrainer;
 use pipeline_rl::testkit::chaos::ChaosSchedule;
 use pipeline_rl::testkit::golden::{
-    explain_divergence, write_failure_report, EventLog, GoldenCfg, GoldenPipeline,
-    Perturbation,
+    explain_divergence, fnv64, write_failure_report, EventLog, GoldenCfg,
+    GoldenPipeline, Perturbation,
 };
 use pipeline_rl::testkit::with_seed;
 use pipeline_rl::util::Rng;
@@ -411,5 +421,228 @@ fn supervisor_failover_reproduces_uninterrupted_trainer_bit_identically() {
         let latest = TrainState::load_latest(&dir).unwrap();
         assert_eq!(latest.step, TOTAL, "the respawned trainer checkpointed to the end");
         std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+// ---------------------------------------------------------------------
+// equivalence 4: the off-policyness dial — all three run modes survive
+// chaos at their own publish cadence, and the cadences are distinct
+// ---------------------------------------------------------------------
+
+#[test]
+fn publish_cadence_matrix_is_digest_equivalent_under_chaos() {
+    let seed = seed_from_env(0xca_de_2c_e5);
+    with_seed("publish_cadence_matrix", seed, |seed| {
+        let mk_cfg = |publish_every: u64| {
+            let mut cfg = GoldenCfg::new(seed);
+            cfg.steps = 12;
+            cfg.n_actors = 3;
+            cfg.live_target = 8;
+            cfg.preempt = PreemptPolicy::Youngest;
+            cfg.publish_every = publish_every;
+            cfg
+        };
+        // pipeline publishes every step, periodic(k=3) every third,
+        // conventional-shaped cadence once per 6-step RL batch
+        let modes = [("pipeline", 1u64), ("periodic_k3", 3), ("conventional", 6)];
+        let mut digests = Vec::new();
+        for (tag, publish_every) in modes {
+            let cfg = mk_cfg(publish_every);
+            let base = GoldenPipeline::run(&cfg, &Perturbation::none())
+                .unwrap_or_else(|e| panic!("{tag}: baseline run: {e:?}"));
+            let pert = Perturbation {
+                chaos: Some(ChaosSchedule::kill_then_restart(2, 5)),
+                preempt_ticks: vec![3, 9, 15],
+            };
+            let run = GoldenPipeline::run(&cfg, &pert)
+                .unwrap_or_else(|e| panic!("{tag}: perturbed run: {e:?}"));
+            assert!(run.stats.migrated > 0, "{tag}: kills moved live sequences");
+            assert_digest_eq(
+                &format!("publish_cadence_{tag}"),
+                seed,
+                &base.log,
+                &[&run.log],
+            );
+            digests.push((tag, base.log.digest()));
+        }
+        // the cadence is load-bearing: staler weights reach actors under
+        // sparser publishing, so the three trajectories must all differ
+        for i in 0..digests.len() {
+            for j in i + 1..digests.len() {
+                assert_ne!(
+                    digests[i].1, digests[j].1,
+                    "{} and {} cadences must produce distinct trajectories",
+                    digests[i].0, digests[j].0
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// equivalence 5: IS weight lane + truncated-rollout conservation
+// (device-free through the real GroupCollector + Packer hot path)
+// ---------------------------------------------------------------------
+
+fn synth_rollout(rng: &mut Rng, seq_id: u64, group_id: u64, finish: FinishReason) -> Rollout {
+    let n = 4 + rng.below(5);
+    Rollout {
+        seq_id,
+        problem_id: seq_id,
+        group_id,
+        actor_id: 0,
+        prompt_tokens: vec![1, 7],
+        gen_tokens: (0..n).map(|_| 2 + rng.below(96) as i32).collect(),
+        behavior_lp: (0..n).map(|_| -0.05 - 2.0 * rng.f32()).collect(),
+        token_version: vec![1 + seq_id % 4; n],
+        reward: rng.f32(),
+        finish,
+        t_start: 0.0,
+        t_end: 0.0,
+    }
+}
+
+/// Canonical content digest over everything the trainer consumes from a
+/// packed batch: token stream, segment ids, mask, advantages, behavior
+/// logprobs, the IS weight lane, and the host-weighted flag.
+fn digest_batches(batches: &[TrainBatch]) -> u64 {
+    let mut bytes = Vec::new();
+    for b in batches {
+        for &v in &b.tokens {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &b.seg {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &b.mask {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &b.adv {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &b.behavior_lp {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &b.is_w {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.push(b.host_weighted as u8);
+    }
+    fnv64(&bytes)
+}
+
+#[test]
+fn is_weight_lane_is_arrival_order_invariant() {
+    let seed = seed_from_env(0x15_c0_4e);
+    with_seed("is_weight_lane", seed, |seed| {
+        let mut rng = Rng::with_stream(seed, 0x15);
+        let rollouts: Vec<Rollout> = (0..4)
+            .map(|i| synth_rollout(&mut rng, i, 100 + i / 2, FinishReason::Eos))
+            .collect();
+        let clip_c = 2.0f32;
+        // a lagged current policy: deterministic per-token drift away
+        // from the behavior logprobs, as stale weights would produce
+        let lagged = |r: &Rollout| -> Vec<f32> {
+            r.behavior_lp
+                .iter()
+                .enumerate()
+                .map(|(j, lp)| lp + 0.25 * (j as f32) - 0.4)
+                .collect()
+        };
+        // lag-free scorer: lp_pi == lp_mu, so every weight is exactly 1
+        let unit = |r: &Rollout| -> Vec<f32> { r.behavior_lp.clone() };
+        type Scorer<'a> = Option<&'a dyn Fn(&Rollout) -> Vec<f32>>;
+        let pack = |order: &[usize], scorer: Scorer| -> TrainBatch {
+            let hub = MetricsHub::new();
+            let mut gc = GroupCollector::with_limits(2, false, 0.0, 0);
+            let mut ready = Vec::new();
+            for &i in order {
+                ready.extend(gc.add(rollouts[i].clone(), &hub));
+            }
+            assert_eq!(ready.len(), 4, "both groups complete");
+            // canonical pack order, as placement-independent packing
+            // would produce regardless of which actor finished first
+            ready.sort_by_key(|(r, _)| r.seq_id);
+            let mut p = Packer::new(4, 32);
+            for (r, adv) in &ready {
+                let w = scorer.map(|s| truncated_weights(&s(r), &r.behavior_lp, clip_c));
+                assert!(p.try_add_weighted(r, *adv, w.as_deref()));
+            }
+            p.flush()
+        };
+        let a = pack(&[0, 1, 2, 3], Some(&lagged));
+        let b = pack(&[2, 0, 3, 1], Some(&lagged)); // interleaved arrival
+        assert!(a.host_weighted);
+        // the lane is clipped and neutral off-mask
+        for (slot, &w) in a.is_w.iter().enumerate() {
+            assert!(
+                w > 0.0 && w <= clip_c,
+                "slot {slot}: weight {w} outside (0, clip_c]"
+            );
+            if a.mask[slot] == 0.0 {
+                assert_eq!(w, 1.0, "slot {slot}: off-mask weight must stay neutral");
+            }
+        }
+        assert_eq!(
+            digest_batches(std::slice::from_ref(&a)),
+            digest_batches(std::slice::from_ref(&b)),
+            "arrival order must not leak into the IS weight lane"
+        );
+        // degradation: unit weights reproduce the uncorrected batch
+        // bit-for-bit, modulo the host_weighted flag itself
+        let mut lag_free = pack(&[0, 1, 2, 3], Some(&unit));
+        let uncorrected = pack(&[0, 1, 2, 3], None);
+        assert!(lag_free.host_weighted && !uncorrected.host_weighted);
+        lag_free.host_weighted = false;
+        assert_eq!(
+            digest_batches(std::slice::from_ref(&lag_free)),
+            digest_batches(std::slice::from_ref(&uncorrected)),
+            "a lag-free scorer must degrade to the uncorrected batch"
+        );
+    });
+}
+
+#[test]
+fn truncated_continuation_replay_is_digest_equivalent() {
+    let seed = seed_from_env(0x7bc5);
+    with_seed("truncated_conservation", seed, |seed| {
+        let mut rng = Rng::with_stream(seed, 0x7b);
+        let prefix = synth_rollout(&mut rng, 10, 500, FinishReason::Truncated);
+        let sibling = synth_rollout(&mut rng, 11, 500, FinishReason::Eos);
+        // the same sequence finishing later: its gen stream extends the
+        // already-trained prefix verbatim by one token
+        let mut cont = prefix.clone();
+        cont.seq_id = 12;
+        cont.finish = FinishReason::Eos;
+        cont.gen_tokens.push(42);
+        cont.behavior_lp.push(-0.25);
+        cont.token_version.push(9);
+
+        let run = |inject: bool| -> (u64, MetricsHub) {
+            let hub = MetricsHub::new();
+            let mut gc =
+                GroupCollector::with_limits(2, false, 0.0, 0).admit_truncated(true);
+            let mut ready = Vec::new();
+            ready.extend(gc.add(prefix.clone(), &hub));
+            if inject {
+                ready.extend(gc.add(cont.clone(), &hub));
+            }
+            ready.extend(gc.add(sibling.clone(), &hub));
+            ready.sort_by_key(|(r, _)| r.seq_id);
+            let mut p = Packer::new(4, 32);
+            for (r, adv) in &ready {
+                assert!(p.try_add_weighted(r, *adv, None));
+            }
+            (digest_batches(&[p.flush()]), hub)
+        };
+        let (base, _) = run(false);
+        let (pert, hub) = run(true);
+        assert_eq!(
+            base, pert,
+            "a replayed continuation of a trained prefix must train nothing"
+        );
+        assert_eq!(hub.counter("rollouts_continuation_dropped"), 1.0);
+        assert_eq!(hub.counter("rollouts_truncated_admitted"), 1.0);
+        assert_eq!(hub.counter("groups_completed"), 1.0);
     });
 }

@@ -411,6 +411,7 @@ fn supervisor_autoscales_pool_from_backlog_then_saturation() {
         down_patience: 2,
         cooldown: 1,
         max_lag_steps: 0.0,
+        ess_floor: 0.0,
         min_batch_fill: 0.0,
         eval_every_ms: 2,
     });

@@ -171,6 +171,7 @@ fn preprocessor_recovers_group_stranded_by_ring_eviction() {
         hub: hub.clone(),
         stop: stop.clone(),
         conv: None,
+        scorer: None,
     };
     let handle = std::thread::spawn(move || run_preprocessor(args).unwrap());
 

@@ -63,6 +63,14 @@ done
 echo "== tier1: cargo bench --bench kvmem =="
 cargo bench --bench kvmem
 
+# On-policyness bench: device-free mode x correction sweep (truncated-IS
+# ESS vs lag, learning-curve shape under each publish cadence, autoscaler
+# guard behavior) -> rust/BENCH_onpolicy.json. The acceptance artifact
+# for the off-policyness dial: corrected runs must sustain deeper lag
+# than uncorrected ones at equal learning-curve shape.
+echo "== tier1: cargo bench --bench onpolicy =="
+cargo bench --bench onpolicy
+
 # clippy over every target (benches/examples/tests included), warnings
 # fatal — the lint policy lives in [workspace.lints] in rust/Cargo.toml.
 # Toolchain is pinned via rust-toolchain.toml (components include clippy).

@@ -204,7 +204,7 @@ impl Default for KvConfig {
 }
 
 /// `[checkpoint]` — trainer state snapshots and resume.
-#[derive(Debug, Clone, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CheckpointConfig {
     /// snapshot every N optimizer steps (0 = off)
     pub every: usize,
@@ -214,6 +214,63 @@ pub struct CheckpointConfig {
     pub resume_from: Option<String>,
     /// prune all but the newest K states (0 = keep everything)
     pub keep_last: usize,
+    /// async-writer retries on a transient state/manifest write error
+    /// before the failure surfaces (0 = fail on first error)
+    pub write_retries: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        CheckpointConfig {
+            every: 0,
+            dir: None,
+            resume_from: None,
+            keep_last: 0,
+            write_retries: 2,
+        }
+    }
+}
+
+/// `[control]` — the run control plane (see `crate::control`): operator
+/// commands (pause / resume / drain / rollback / stop) quiescing actors
+/// through the snapshot/migration path, plus the guardrail engine that
+/// watches the metrics hub and auto-triggers pause-then-rollback to the
+/// latest healthy checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlConfig {
+    /// wire a `RunController` + `Guardrail` into the supervisor
+    pub enabled: bool,
+    /// sliding-window length (points) for the reward-regression and
+    /// lag-runaway checks
+    pub window: usize,
+    /// trip when the newest window's mean reward falls more than this
+    /// fraction below the previous window's mean (0 disables)
+    pub reward_drop: f64,
+    /// trip when `ess_floor_trips` grows by at least this many between
+    /// guardrail evaluations (0 disables)
+    pub ess_trip_limit: f64,
+    /// trip when the smoothed token lag exceeds this many optimizer
+    /// steps (0 disables)
+    pub max_lag_steps: f64,
+    /// guardrail-triggered rollbacks budgeted before the fail-safe
+    /// transition to `Drained`
+    pub rollback_budget: usize,
+    /// base backoff between bounded rollback retries (doubles per retry)
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            window: 8,
+            reward_drop: 0.5,
+            ess_trip_limit: 0.0,
+            max_lag_steps: 0.0,
+            rollback_budget: 2,
+            retry_backoff_ms: 50,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -277,6 +334,9 @@ pub struct RunConfig {
     /// `[autoscale]` — supervisor-driven pool resize from live signals
     /// (requires `[elastic] enabled`, pipeline mode)
     pub autoscale: AutoScaleCfg,
+    /// `[control]` — run control plane: pause/drain/rollback commands +
+    /// guardrail auto-rollback (requires `[elastic] trainer_failover`)
+    pub control: ControlConfig,
     /// deterministic single-thread mode: actors and trainer are stepped
     /// round-robin by the orchestrator (useful for tests & 1-core boxes)
     pub log_every: usize,
@@ -318,6 +378,7 @@ impl Default for RunConfig {
             checkpoint: CheckpointConfig::default(),
             elastic: ElasticConfig::default(),
             autoscale: AutoScaleCfg::default(),
+            control: ControlConfig::default(),
             log_every: 10,
             weight_transfer_ms: 0.0,
         }
@@ -456,6 +517,22 @@ impl RunConfig {
                     .map(|v| v.as_str().map(String::from))
                     .transpose()?,
                 keep_last: doc.usize_or("checkpoint.keep_last", d.checkpoint.keep_last)?,
+                write_retries: doc
+                    .usize_or("checkpoint.write_retries", d.checkpoint.write_retries)?,
+            },
+            control: ControlConfig {
+                enabled: doc.bool_or("control.enabled", d.control.enabled)?,
+                window: doc.usize_or("control.window", d.control.window)?,
+                reward_drop: doc.f64_or("control.reward_drop", d.control.reward_drop)?,
+                ess_trip_limit: doc
+                    .f64_or("control.ess_trip_limit", d.control.ess_trip_limit)?,
+                max_lag_steps: doc
+                    .f64_or("control.max_lag_steps", d.control.max_lag_steps)?,
+                rollback_budget: doc
+                    .usize_or("control.rollback_budget", d.control.rollback_budget)?,
+                retry_backoff_ms: doc
+                    .usize_or("control.retry_backoff_ms", d.control.retry_backoff_ms as usize)?
+                    as u64,
             },
             elastic: ElasticConfig {
                 enabled: doc.bool_or("elastic.enabled", d.elastic.enabled)?,
@@ -476,7 +553,7 @@ impl RunConfig {
     }
 
     /// Serialize the `[rl]` (off-policyness dial) / `[sched]` / `[kv]` /
-    /// `[checkpoint]` / `[elastic]` / `[autoscale]` sections back to TOML
+    /// `[checkpoint]` / `[elastic]` / `[autoscale]` / `[control]` sections back to TOML
     /// text that [`RunConfig::from_doc`] parses to the same values — the
     /// round-trip contract the config property test pins (a field added
     /// to one of these sections without a serializer line here fails that
@@ -509,8 +586,8 @@ impl RunConfig {
         );
         let _ = writeln!(
             s,
-            "[checkpoint]\nevery = {}\nkeep_last = {}",
-            self.checkpoint.every, self.checkpoint.keep_last
+            "[checkpoint]\nevery = {}\nkeep_last = {}\nwrite_retries = {}",
+            self.checkpoint.every, self.checkpoint.keep_last, self.checkpoint.write_retries
         );
         if let Some(dir) = &self.checkpoint.dir {
             let _ = writeln!(s, "dir = \"{}\"", esc(dir));
@@ -548,6 +625,19 @@ impl RunConfig {
             a.ess_floor,
             a.min_batch_fill,
             a.eval_every_ms
+        );
+        let c = &self.control;
+        let _ = writeln!(
+            s,
+            "[control]\nenabled = {}\nwindow = {}\nreward_drop = {}\ness_trip_limit = {}\n\
+             max_lag_steps = {}\nrollback_budget = {}\nretry_backoff_ms = {}",
+            c.enabled,
+            c.window,
+            c.reward_drop,
+            c.ess_trip_limit,
+            c.max_lag_steps,
+            c.rollback_budget,
+            c.retry_backoff_ms
         );
         s
     }
@@ -697,6 +787,46 @@ impl RunConfig {
                 bail!(
                     "autoscale.ess_floor must be in [0, 1], got {}",
                     self.autoscale.ess_floor
+                );
+            }
+        }
+        if self.control.enabled {
+            if !self.elastic.trainer_failover {
+                bail!(
+                    "run control plane requires [elastic] trainer_failover = true: \
+                     guardrail-triggered rollback restores the trainer through the \
+                     supervisor's failover slot — without it a trip could only stop \
+                     the run, never recover it"
+                );
+            }
+            if self.control.window == 0 {
+                bail!("control.window must be >= 1 (sliding-window length in steps)");
+            }
+            if !self.control.reward_drop.is_finite()
+                || !(0.0..=1.0).contains(&self.control.reward_drop)
+            {
+                bail!(
+                    "control.reward_drop must be a fraction in [0, 1] (0 disables), got {}",
+                    self.control.reward_drop
+                );
+            }
+            if !self.control.ess_trip_limit.is_finite() || self.control.ess_trip_limit < 0.0 {
+                bail!(
+                    "control.ess_trip_limit must be >= 0 (0 disables), got {}",
+                    self.control.ess_trip_limit
+                );
+            }
+            if !self.control.max_lag_steps.is_finite() || self.control.max_lag_steps < 0.0 {
+                bail!(
+                    "control.max_lag_steps must be >= 0 (0 disables), got {}",
+                    self.control.max_lag_steps
+                );
+            }
+            if self.control.rollback_budget == 0 {
+                bail!(
+                    "control.rollback_budget must be >= 1 when the control plane is \
+                     enabled: a zero budget would turn every guardrail trip into an \
+                     immediate drain, which is spelled [control] enabled = false"
                 );
             }
         }
@@ -999,6 +1129,7 @@ mod tests {
             cfg.kv.replay_batch = c.usize_in(1, 12);
             cfg.checkpoint.every = c.usize_in(0, 9);
             cfg.checkpoint.keep_last = c.usize_in(0, 5);
+            cfg.checkpoint.write_retries = c.usize_in(0, 4);
             if c.rng.below(2) == 1 {
                 // occasionally exercise the escaping path (quotes are the
                 // one special character the minimal TOML subset supports)
@@ -1031,6 +1162,13 @@ mod tests {
                 *c.rng.choice(&[IsCorrection::None, IsCorrection::Truncated]);
             cfg.ess_floor = c.rng.below(16) as f64 / 16.0;
             cfg.train_truncated = c.rng.below(2) == 1;
+            cfg.control.enabled = c.rng.below(2) == 1;
+            cfg.control.window = c.usize_in(1, 16);
+            cfg.control.reward_drop = c.rng.below(16) as f64 / 16.0;
+            cfg.control.ess_trip_limit = c.rng.below(8) as f64;
+            cfg.control.max_lag_steps = c.rng.below(10) as f64;
+            cfg.control.rollback_budget = c.usize_in(1, 5);
+            cfg.control.retry_backoff_ms = c.usize_in(0, 500) as u64;
 
             let text = cfg.sections_to_toml();
             let doc = TomlDoc::parse(&text).map_err(|e| format!("emitted TOML: {e}"))?;
@@ -1059,6 +1197,12 @@ mod tests {
                     back.autoscale, cfg.autoscale
                 ));
             }
+            if back.control != cfg.control {
+                return Err(format!(
+                    "[control] drift: {:?} vs {:?}",
+                    back.control, cfg.control
+                ));
+            }
             if back.clip_c != cfg.clip_c
                 || back.is_correction != cfg.is_correction
                 || back.ess_floor != cfg.ess_floor
@@ -1082,6 +1226,86 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parses_control_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            [elastic]
+            enabled = true
+            trainer_failover = true
+            [checkpoint]
+            every = 2
+            dir = "ckpts"
+            write_retries = 3
+            [control]
+            enabled = true
+            window = 12
+            reward_drop = 0.25
+            ess_trip_limit = 2
+            max_lag_steps = 6
+            rollback_budget = 4
+            retry_backoff_ms = 125
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(cfg.control.enabled);
+        assert_eq!(cfg.control.window, 12);
+        assert_eq!(cfg.control.reward_drop, 0.25);
+        assert_eq!(cfg.control.ess_trip_limit, 2.0);
+        assert_eq!(cfg.control.max_lag_steps, 6.0);
+        assert_eq!(cfg.control.rollback_budget, 4);
+        assert_eq!(cfg.control.retry_backoff_ms, 125);
+        assert_eq!(cfg.checkpoint.write_retries, 3);
+        cfg.validate().unwrap();
+        // defaults: control plane off, two write retries budgeted
+        let d = RunConfig::default();
+        assert!(!d.control.enabled);
+        assert_eq!(d.control.window, 8);
+        assert_eq!(d.control.rollback_budget, 2);
+        assert_eq!(d.checkpoint.write_retries, 2);
+    }
+
+    #[test]
+    fn control_plane_requires_trainer_failover() {
+        // a guardrail that cannot roll back would be a silent no-op
+        let mut cfg = RunConfig::default();
+        cfg.control.enabled = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("trainer_failover"), "{err}");
+
+        cfg.elastic.enabled = true;
+        cfg.elastic.trainer_failover = true;
+        cfg.checkpoint.every = 2;
+        cfg.checkpoint.dir = Some("ckpts".into());
+        cfg.validate().unwrap();
+
+        cfg.control.window = 0;
+        assert!(cfg.validate().is_err(), "zero window refused");
+        cfg.control.window = 8;
+
+        cfg.control.reward_drop = 1.5;
+        assert!(cfg.validate().is_err(), "reward_drop above 1 refused");
+        cfg.control.reward_drop = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN reward_drop refused");
+        cfg.control.reward_drop = 0.5;
+
+        cfg.control.max_lag_steps = -1.0;
+        assert!(cfg.validate().is_err(), "negative lag limit refused");
+        cfg.control.max_lag_steps = 0.0;
+
+        cfg.control.rollback_budget = 0;
+        assert!(cfg.validate().is_err(), "zero rollback budget refused");
+        cfg.control.rollback_budget = 1;
+        cfg.validate().unwrap();
+
+        // disabled control plane never constrains the rest of the config
+        let mut cfg = RunConfig::default();
+        cfg.control.window = 0;
+        cfg.control.rollback_budget = 0;
+        cfg.validate().unwrap();
     }
 
     /// Satellite: the documented refusal messages for invalid combos.

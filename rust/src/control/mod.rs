@@ -1,0 +1,642 @@
+//! Guardrail-driven run control plane: pause / drain / rollback with
+//! provably clean recovery.
+//!
+//! The supervisor (PRs 3–6) can already survive faults it did not choose
+//! — actor crashes, trainer kills, corrupt snapshots. This module adds
+//! the *operator* side of run management: deliberate, commanded state
+//! transitions with the same conservation guarantees the fault paths
+//! carry. It maps onto the rsBot milestone-24 "True RL Wave" operational
+//! controls contract (pause/resume/rollback/recovery; see SNIPPETS.md §1,
+//! issues #1661 "Safety-Constrained RL and Policy Guardrails" and #1663
+//! "RL Operations, Rollout Control, and Failure Recovery"):
+//!
+//! * [`RunController`] — the command channel. `Pause` parks every
+//!   in-flight sequence through the `SeqSnapshot`/`MigrationHub` path
+//!   (deposited == claimed + discarded books stay closed); `Resume`
+//!   reclaims them; `Drain` admits nothing new, lets active sequences
+//!   finish, and flushes truncated prefixes under `[rl] train_truncated`;
+//!   `Rollback` restores the trainer from a checkpoint manifest through
+//!   the `TrainerSlot` failover machinery; `Stop` ends the run cleanly.
+//! * [`ControlGate`] — the shared admission gate actors consult every
+//!   loop iteration, plus the per-actor load ledger the supervisor uses
+//!   to detect drain quiescence.
+//! * [`Guardrail`] — the watchdog over the [`MetricsHub`]: non-finite
+//!   loss, reward regression over a sliding window, `ess_floor` trip
+//!   budget, and token-lag runaway each auto-trigger pause-then-rollback
+//!   to the latest healthy checkpoint, within a bounded
+//!   retry-with-backoff budget; an exhausted budget fails safe into
+//!   `Drained` rather than looping.
+//! * [`RunState`] — the `run/state` gauge vocabulary. Every
+//!   `run_supervisor` exit path records a terminal value
+//!   (completed / failed / drained / rolled_back), so post-mortems can
+//!   read how a run ended from the metrics snapshot alone.
+//!
+//! Guardrail trips additionally write human-readable reports under
+//! `target/control/` — CI uploads them as failure artifacts.
+
+use crate::config::ControlConfig;
+use crate::metrics::MetricsHub;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Operator commands accepted by the supervisor's control plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunCommand {
+    /// Quiesce: actors park their in-flight sequences into the migration
+    /// hub (books stay closed) and admit nothing until `Resume`.
+    Pause,
+    /// Leave `Paused`: actors reclaim parked sequences and admit again.
+    Resume,
+    /// Stop admitting, let active sequences finish, flush truncated
+    /// prefixes under `[rl] train_truncated`, then end the run as
+    /// `Drained`.
+    Drain,
+    /// Pause, then restore the trainer from a checkpoint manifest via
+    /// the failover slot. `None` targets the latest manifest state; a
+    /// specific step is honored when it is the manifest's latest and
+    /// logged (with rollback to latest) otherwise.
+    Rollback { checkpoint: Option<u64> },
+    /// End the run cleanly (terminal state `Completed`).
+    Stop,
+}
+
+impl std::fmt::Display for RunCommand {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunCommand::Pause => write!(f, "pause"),
+            RunCommand::Resume => write!(f, "resume"),
+            RunCommand::Drain => write!(f, "drain"),
+            RunCommand::Rollback { checkpoint: None } => write!(f, "rollback(latest)"),
+            RunCommand::Rollback { checkpoint: Some(s) } => write!(f, "rollback(step {s})"),
+            RunCommand::Stop => write!(f, "stop"),
+        }
+    }
+}
+
+/// Cloneable command channel into a running supervisor. Commands are
+/// applied in submission order at the next supervisor poll.
+#[derive(Clone, Default)]
+pub struct RunController {
+    queue: Arc<Mutex<VecDeque<RunCommand>>>,
+}
+
+impl RunController {
+    pub fn new() -> RunController {
+        RunController::default()
+    }
+
+    /// Enqueue a command. Never blocks; the supervisor drains the queue
+    /// once per poll.
+    pub fn send(&self, cmd: RunCommand) {
+        self.queue.lock().unwrap().push_back(cmd);
+    }
+
+    /// Take every pending command, in submission order.
+    pub fn drain(&self) -> Vec<RunCommand> {
+        self.queue.lock().unwrap().drain(..).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+/// Admission phase actors observe through the [`ControlGate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPhase {
+    /// Normal operation: admit, decode, publish.
+    Running,
+    /// Park: export in-flight sequences to the migration hub, admit and
+    /// decode nothing, idle until the phase changes.
+    Paused,
+    /// Admit nothing new; keep decoding what is already in flight.
+    Draining,
+}
+
+impl AdmissionPhase {
+    fn from_u8(x: u8) -> AdmissionPhase {
+        match x {
+            1 => AdmissionPhase::Paused,
+            2 => AdmissionPhase::Draining,
+            _ => AdmissionPhase::Running,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            AdmissionPhase::Running => 0,
+            AdmissionPhase::Paused => 1,
+            AdmissionPhase::Draining => 2,
+        }
+    }
+}
+
+struct GateInner {
+    phase: AtomicU8,
+    /// per-actor in-flight load (active + pending engine sequences),
+    /// reported every actor loop iteration; the supervisor's drain
+    /// quiescence signal
+    loads: Mutex<BTreeMap<usize, usize>>,
+}
+
+/// Shared gate between the supervisor (writer) and the actors (readers).
+#[derive(Clone)]
+pub struct ControlGate {
+    inner: Arc<GateInner>,
+}
+
+impl Default for ControlGate {
+    fn default() -> ControlGate {
+        ControlGate::new()
+    }
+}
+
+impl ControlGate {
+    pub fn new() -> ControlGate {
+        ControlGate {
+            inner: Arc::new(GateInner {
+                phase: AtomicU8::new(AdmissionPhase::Running.as_u8()),
+                loads: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    pub fn phase(&self) -> AdmissionPhase {
+        AdmissionPhase::from_u8(self.inner.phase.load(Ordering::Relaxed))
+    }
+
+    pub fn set_phase(&self, p: AdmissionPhase) {
+        self.inner.phase.store(p.as_u8(), Ordering::Relaxed);
+    }
+
+    /// True in the only phase that admits new prompt groups.
+    pub fn admitting(&self) -> bool {
+        self.phase() == AdmissionPhase::Running
+    }
+
+    /// Actors report their engine load here once per loop iteration.
+    pub fn report_load(&self, actor_id: usize, load: usize) {
+        self.inner.loads.lock().unwrap().insert(actor_id, load);
+    }
+
+    /// Drop an actor's ledger entry on exit, so a dead incarnation's
+    /// stale load can never hold a drain open.
+    pub fn clear_load(&self, actor_id: usize) {
+        self.inner.loads.lock().unwrap().remove(&actor_id);
+    }
+
+    /// Total reported in-flight load across live actors.
+    pub fn total_load(&self) -> usize {
+        self.inner.loads.lock().unwrap().values().sum()
+    }
+}
+
+/// `run/state` gauge vocabulary. Live transitions (running / paused /
+/// draining / rolled_back) are recorded as they happen; every supervisor
+/// exit records one of the four terminal values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Running,
+    Paused,
+    Draining,
+    Completed,
+    Failed,
+    Drained,
+    RolledBack,
+}
+
+/// Metric name of the run-state gauge.
+pub const RUN_STATE_GAUGE: &str = "run/state";
+
+impl RunState {
+    /// Stable numeric encoding for the gauge (assertable in tests).
+    pub fn gauge(self) -> f64 {
+        match self {
+            RunState::Running => 0.0,
+            RunState::Paused => 1.0,
+            RunState::Draining => 2.0,
+            RunState::Completed => 3.0,
+            RunState::Failed => 4.0,
+            RunState::Drained => 5.0,
+            RunState::RolledBack => 6.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RunState::Running => "running",
+            RunState::Paused => "paused",
+            RunState::Draining => "draining",
+            RunState::Completed => "completed",
+            RunState::Failed => "failed",
+            RunState::Drained => "drained",
+            RunState::RolledBack => "rolled_back",
+        }
+    }
+}
+
+/// Record a run-state transition on the hub.
+pub fn record_state(hub: &MetricsHub, s: RunState) {
+    hub.set(RUN_STATE_GAUGE, s.gauge());
+}
+
+/// Why a guardrail fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TripReason {
+    /// `train/loss` produced a NaN/inf.
+    NonFiniteLoss,
+    /// Mean reward over the newest window dropped more than
+    /// `control.reward_drop` below the preceding window's mean.
+    RewardRegression,
+    /// The `ess_floor_trips` counter advanced past
+    /// `control.ess_trip_limit` since the last healthy point.
+    EssFloor,
+    /// `train/mean_lag_smoothed` ran past `control.max_lag_steps`.
+    LagRunaway,
+    /// Injected (`ChaosKind::GuardrailTrip` or an operator `Rollback`).
+    Injected,
+}
+
+impl TripReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            TripReason::NonFiniteLoss => "non_finite_loss",
+            TripReason::RewardRegression => "reward_regression",
+            TripReason::EssFloor => "ess_floor",
+            TripReason::LagRunaway => "lag_runaway",
+            TripReason::Injected => "injected",
+        }
+    }
+}
+
+/// One guardrail firing: the reason plus a human-readable detail line
+/// (written into the `target/control/` report).
+#[derive(Debug, Clone)]
+pub struct Trip {
+    pub reason: TripReason,
+    pub detail: String,
+}
+
+/// Watchdog over the [`MetricsHub`]. All checks are armed only for
+/// metric points that arrived *after* the last [`Guardrail::acknowledge`]
+/// — otherwise the very data that justified a rollback would re-trip the
+/// guardrail forever on the next poll.
+pub struct Guardrail {
+    cfg: ControlConfig,
+    /// `x` (sample coordinate) of the newest `train/loss` point at the
+    /// last acknowledge; points at or before it are spent evidence
+    armed_after_x: f64,
+    /// `ess_floor_trips` counter value at the last acknowledge
+    ess_trips_base: f64,
+}
+
+impl Guardrail {
+    pub fn new(cfg: ControlConfig) -> Guardrail {
+        Guardrail {
+            cfg,
+            armed_after_x: f64::NEG_INFINITY,
+            ess_trips_base: 0.0,
+        }
+    }
+
+    /// Run every enabled check against the hub's current metrics.
+    /// Returns the first trip found (severity order: non-finite loss,
+    /// ESS budget, lag runaway, reward regression).
+    pub fn check(&mut self, hub: &MetricsHub) -> Option<Trip> {
+        // 1. non-finite loss: always on while the control plane runs —
+        //    a NaN loss poisons the optimizer state within one step
+        if let Some(p) = hub.series_last("train/loss") {
+            if p.x > self.armed_after_x && !p.value.is_finite() {
+                return Some(Trip {
+                    reason: TripReason::NonFiniteLoss,
+                    detail: format!("train/loss = {} at x = {}", p.value, p.x),
+                });
+            }
+        }
+        // 2. ESS-floor trip budget
+        if self.cfg.ess_trip_limit > 0.0 {
+            let trips = hub.counter("ess_floor_trips") - self.ess_trips_base;
+            if trips > self.cfg.ess_trip_limit {
+                return Some(Trip {
+                    reason: TripReason::EssFloor,
+                    detail: format!(
+                        "{trips} ess_floor trips since last healthy point \
+                         (limit {})",
+                        self.cfg.ess_trip_limit
+                    ),
+                });
+            }
+        }
+        // 3. token-lag runaway
+        if self.cfg.max_lag_steps > 0.0 {
+            if let Some(p) = hub.series_last("train/mean_lag_smoothed") {
+                if p.x > self.armed_after_x && p.value > self.cfg.max_lag_steps {
+                    return Some(Trip {
+                        reason: TripReason::LagRunaway,
+                        detail: format!(
+                            "train/mean_lag_smoothed = {:.3} > {} at x = {}",
+                            p.value, self.cfg.max_lag_steps, p.x
+                        ),
+                    });
+                }
+            }
+        }
+        // 4. reward regression over a sliding window: the newest
+        //    `window` points vs the `window` before them
+        if self.cfg.reward_drop > 0.0 {
+            let n = self.cfg.window;
+            let pts: Vec<_> = hub
+                .series_window("reward_vs_samples", 2 * n)
+                .into_iter()
+                .filter(|p| p.x > self.armed_after_x)
+                .collect();
+            if pts.len() == 2 * n {
+                let older: f64 = pts[..n].iter().map(|p| p.value).sum::<f64>() / n as f64;
+                let newer: f64 = pts[n..].iter().map(|p| p.value).sum::<f64>() / n as f64;
+                // only a drop from a positive baseline is a regression —
+                // early training hovering near zero reward is not
+                if older > 0.0 && newer < older * (1.0 - self.cfg.reward_drop) {
+                    return Some(Trip {
+                        reason: TripReason::RewardRegression,
+                        detail: format!(
+                            "mean reward {newer:.4} < {:.4} ({}% drop over \
+                             {n}-step windows, limit {}%)",
+                            older * (1.0 - self.cfg.reward_drop),
+                            ((1.0 - newer / older) * 100.0).round(),
+                            self.cfg.reward_drop * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-arm after a completed rollback (or a deliberate operator
+    /// override): evidence recorded up to now no longer counts.
+    pub fn acknowledge(&mut self, hub: &MetricsHub) {
+        self.armed_after_x = hub
+            .series_last("train/loss")
+            .map(|p| p.x)
+            .unwrap_or(f64::NEG_INFINITY)
+            .max(self.armed_after_x);
+        // the regression window keys off reward_vs_samples' x coordinate
+        if let Some(p) = hub.series_last("reward_vs_samples") {
+            self.armed_after_x = self.armed_after_x.max(p.x);
+        }
+        if let Some(p) = hub.series_last("train/mean_lag_smoothed") {
+            self.armed_after_x = self.armed_after_x.max(p.x);
+        }
+        self.ess_trips_base = hub.counter("ess_floor_trips");
+    }
+}
+
+/// Everything the supervisor needs to run the control plane: the command
+/// channel, the shared actor gate, the guardrail watchdog, and the
+/// rollback retry budget.
+pub struct ControlPlane {
+    pub controller: RunController,
+    pub gate: ControlGate,
+    pub guardrail: Guardrail,
+    pub cfg: ControlConfig,
+    /// remaining pause-then-rollback attempts; exhausted → fail-safe
+    /// transition to `Drained`
+    pub rollbacks_left: usize,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: ControlConfig) -> ControlPlane {
+        ControlPlane::with_controller(cfg, RunController::new())
+    }
+
+    /// Build around an externally-held [`RunController`] so the caller
+    /// keeps a handle to command the run.
+    pub fn with_controller(cfg: ControlConfig, controller: RunController) -> ControlPlane {
+        ControlPlane {
+            controller,
+            gate: ControlGate::new(),
+            guardrail: Guardrail::new(cfg.clone()),
+            rollbacks_left: cfg.rollback_budget,
+            cfg,
+        }
+    }
+
+    /// Exponential backoff before rollback attempt `attempt` (0-based;
+    /// the first attempt never waits).
+    pub fn backoff(&self, attempt: usize) -> std::time::Duration {
+        if attempt == 0 {
+            return std::time::Duration::ZERO;
+        }
+        let shift = (attempt - 1).min(6) as u32;
+        std::time::Duration::from_millis(self.cfg.retry_backoff_ms.saturating_mul(1 << shift))
+    }
+}
+
+/// Write a guardrail trip report under `target/control/` (CI uploads the
+/// directory as a failure artifact). Returns the path, or None when the
+/// directory cannot be created — reporting must never take the run down.
+pub fn write_trip_report(name: &str, trip: &Trip, context: &str) -> Option<PathBuf> {
+    let dir = std::path::Path::new("target").join("control");
+    std::fs::create_dir_all(&dir).ok()?;
+    let path = dir.join(format!("{name}-{}.txt", trip.reason.name()));
+    let body = format!(
+        "guardrail trip: {}\nreason: {}\ndetail: {}\n\n{}\n",
+        name,
+        trip.reason.name(),
+        trip.detail,
+        context
+    );
+    std::fs::write(&path, body).ok()?;
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_cfg() -> ControlConfig {
+        let mut cfg = ControlConfig::default();
+        cfg.enabled = true;
+        cfg
+    }
+
+    #[test]
+    fn controller_preserves_submission_order() {
+        let ctl = RunController::new();
+        ctl.send(RunCommand::Pause);
+        ctl.send(RunCommand::Rollback { checkpoint: Some(3) });
+        ctl.send(RunCommand::Resume);
+        assert_eq!(ctl.pending(), 3);
+        assert_eq!(
+            ctl.drain(),
+            vec![
+                RunCommand::Pause,
+                RunCommand::Rollback { checkpoint: Some(3) },
+                RunCommand::Resume,
+            ]
+        );
+        assert_eq!(ctl.pending(), 0);
+        assert!(ctl.drain().is_empty());
+    }
+
+    #[test]
+    fn gate_phases_and_load_ledger() {
+        let gate = ControlGate::new();
+        assert!(gate.admitting());
+        assert_eq!(gate.phase(), AdmissionPhase::Running);
+        gate.set_phase(AdmissionPhase::Paused);
+        assert!(!gate.admitting());
+        gate.set_phase(AdmissionPhase::Draining);
+        assert!(!gate.admitting());
+        assert_eq!(gate.phase(), AdmissionPhase::Draining);
+
+        gate.report_load(0, 5);
+        gate.report_load(1, 3);
+        assert_eq!(gate.total_load(), 8);
+        gate.report_load(0, 0);
+        assert_eq!(gate.total_load(), 3);
+        gate.clear_load(1);
+        assert_eq!(gate.total_load(), 0);
+        // a clone observes the same shared state
+        let twin = gate.clone();
+        twin.set_phase(AdmissionPhase::Running);
+        assert!(gate.admitting());
+    }
+
+    #[test]
+    fn run_state_gauge_values_are_distinct_and_stable() {
+        let all = [
+            RunState::Running,
+            RunState::Paused,
+            RunState::Draining,
+            RunState::Completed,
+            RunState::Failed,
+            RunState::Drained,
+            RunState::RolledBack,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for s in all {
+            assert!(seen.insert(s.gauge() as i64), "duplicate gauge for {}", s.name());
+        }
+        // pinned encodings: changing one silently breaks scenario asserts
+        assert_eq!(RunState::Completed.gauge(), 3.0);
+        assert_eq!(RunState::Failed.gauge(), 4.0);
+        assert_eq!(RunState::Drained.gauge(), 5.0);
+        assert_eq!(RunState::RolledBack.gauge(), 6.0);
+        let hub = MetricsHub::new();
+        record_state(&hub, RunState::Drained);
+        assert_eq!(hub.series_last(RUN_STATE_GAUGE).unwrap().value, 5.0);
+    }
+
+    #[test]
+    fn guardrail_trips_on_non_finite_loss_once() {
+        let hub = MetricsHub::new();
+        let mut g = Guardrail::new(enabled_cfg());
+        hub.record("train/loss", 0.0, 1.0, 0.5);
+        assert!(g.check(&hub).is_none(), "finite loss is healthy");
+        hub.record("train/loss", 0.0, 2.0, f64::NAN);
+        let trip = g.check(&hub).expect("NaN loss trips");
+        assert_eq!(trip.reason, TripReason::NonFiniteLoss);
+        // acknowledged evidence no longer re-trips
+        g.acknowledge(&hub);
+        assert!(g.check(&hub).is_none(), "spent evidence must not re-trip");
+        // but fresh bad data does
+        hub.record("train/loss", 0.0, 3.0, f64::INFINITY);
+        assert!(g.check(&hub).is_some());
+    }
+
+    #[test]
+    fn guardrail_reward_regression_window() {
+        let hub = MetricsHub::new();
+        let mut cfg = enabled_cfg();
+        cfg.window = 4;
+        cfg.reward_drop = 0.5;
+        let mut g = Guardrail::new(cfg);
+        // healthy plateau at 0.8
+        for i in 0..4 {
+            hub.record("reward_vs_samples", 0.0, i as f64, 0.8);
+        }
+        assert!(g.check(&hub).is_none(), "needs two full windows");
+        // collapse to 0.2: a 75% drop over the 4-step window
+        for i in 4..8 {
+            hub.record("reward_vs_samples", 0.0, i as f64, 0.2);
+        }
+        let trip = g.check(&hub).expect("reward collapse trips");
+        assert_eq!(trip.reason, TripReason::RewardRegression);
+        // a shallow dip (0.8 -> 0.6, 25% < 50% limit) stays healthy
+        let hub2 = MetricsHub::new();
+        let mut cfg2 = enabled_cfg();
+        cfg2.window = 4;
+        cfg2.reward_drop = 0.5;
+        let mut g2 = Guardrail::new(cfg2);
+        for i in 0..4 {
+            hub2.record("reward_vs_samples", 0.0, i as f64, 0.8);
+        }
+        for i in 4..8 {
+            hub2.record("reward_vs_samples", 0.0, i as f64, 0.6);
+        }
+        assert!(g2.check(&hub2).is_none());
+        // zero-reward early training never counts as a regression
+        let hub3 = MetricsHub::new();
+        let mut g3 = Guardrail::new(enabled_cfg());
+        for i in 0..16 {
+            hub3.record("reward_vs_samples", 0.0, i as f64, 0.0);
+        }
+        assert!(g3.check(&hub3).is_none());
+    }
+
+    #[test]
+    fn guardrail_ess_budget_and_lag_runaway() {
+        let hub = MetricsHub::new();
+        let mut cfg = enabled_cfg();
+        cfg.ess_trip_limit = 2.0;
+        cfg.max_lag_steps = 10.0;
+        let mut g = Guardrail::new(cfg);
+        hub.add("ess_floor_trips", 2.0);
+        assert!(g.check(&hub).is_none(), "at the limit is still healthy");
+        hub.add("ess_floor_trips", 1.0);
+        let trip = g.check(&hub).expect("budget exceeded");
+        assert_eq!(trip.reason, TripReason::EssFloor);
+        g.acknowledge(&hub);
+        assert!(g.check(&hub).is_none(), "acknowledge rebases the counter");
+
+        hub.record("train/mean_lag_smoothed", 0.0, 1.0, 25.0);
+        let trip = g.check(&hub).expect("lag runaway");
+        assert_eq!(trip.reason, TripReason::LagRunaway);
+        g.acknowledge(&hub);
+        assert!(g.check(&hub).is_none());
+        // disabled checks (limit 0) never fire
+        let mut g_off = Guardrail::new(enabled_cfg());
+        assert!(g_off.check(&hub).is_none());
+    }
+
+    #[test]
+    fn control_plane_backoff_is_bounded_exponential() {
+        let mut cfg = enabled_cfg();
+        cfg.retry_backoff_ms = 50;
+        let plane = ControlPlane::new(cfg);
+        assert_eq!(plane.backoff(0).as_millis(), 0, "first attempt is immediate");
+        assert_eq!(plane.backoff(1).as_millis(), 50);
+        assert_eq!(plane.backoff(2).as_millis(), 100);
+        assert_eq!(plane.backoff(3).as_millis(), 200);
+        // capped shift: no overflow however deep the retry goes
+        assert_eq!(plane.backoff(50).as_millis(), 50 * 64);
+        assert_eq!(plane.rollbacks_left, ControlConfig::default().rollback_budget);
+    }
+
+    #[test]
+    fn trip_reports_land_under_target_control() {
+        let trip = Trip {
+            reason: TripReason::LagRunaway,
+            detail: "train/mean_lag_smoothed = 99".into(),
+        };
+        let path = write_trip_report("control_mod_unit", &trip, "ctx: unit test")
+            .expect("report written");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("lag_runaway"));
+        assert!(body.contains("ctx: unit test"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -22,6 +22,7 @@
 use super::conv::ConvSync;
 use crate::broker::Publisher;
 use crate::config::{Mode, RunConfig};
+use crate::control::{AdmissionPhase, ControlGate};
 use crate::data::{Dataset, task::TaskGen};
 use crate::engine::{Engine, EngineCfg};
 use crate::metrics::MetricsHub;
@@ -69,6 +70,10 @@ pub struct ActorArgs {
     /// false`, conventional mode)
     pub migrate: Option<Arc<MigrationHub>>,
     pub conv: Option<Arc<ConvSync>>,
+    /// run control plane gate (`[control] enabled`): pause parks the
+    /// in-flight sequences through the migration hub, drain closes
+    /// admission while active sequences finish. None = ungated
+    pub control: Option<ControlGate>,
 }
 
 pub fn run_actor(args: ActorArgs) -> Result<()> {
@@ -83,6 +88,7 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
         generation,
         migrate,
         conv,
+        control,
     } = args;
     let log = Logger::new(format!("actor-{actor_id}"));
     let group_name = format!("actor-{actor_id}");
@@ -149,10 +155,44 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     let mut staging: Option<WeightFetch> = None;
     // fractional carry of the simulated per-chunk broadcast pause
     let mut pause_debt_us: f64 = 0.0;
+    // whether this incarnation currently sits parked behind a control-
+    // plane pause (in-flight sequences exported to the migration hub)
+    let mut parked = false;
 
     loop {
         if stop.load(Ordering::Relaxed) || halt.load(Ordering::Relaxed) {
             break;
+        }
+
+        // ---- control gate: pause parks, resume reclaims ----
+        if let Some(gate) = &control {
+            if gate.phase() == AdmissionPhase::Paused {
+                if !parked {
+                    parked = true;
+                    // park: in-flight sequences leave as portable
+                    // snapshots through the conservation-booked migration
+                    // hub (the resume path reclaims them via the ordinary
+                    // migrated-claim block below); without a hub they
+                    // simply stall in place until resume
+                    if let Some(hub_m) = &migrate {
+                        let snaps = engine.export_snapshots();
+                        if !snaps.is_empty() {
+                            let tokens: usize =
+                                snaps.iter().map(|s| s.salvaged_tokens()).sum();
+                            hub.add("control_seqs_parked", snaps.len() as f64);
+                            hub.add("control_tokens_parked", tokens as f64);
+                            hub_m.deposit(snaps);
+                        }
+                    }
+                }
+                gate.report_load(actor_id, engine.load());
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            if parked {
+                parked = false;
+                hub.add("control_unparks", 1.0);
+            }
         }
 
         // ---- in-flight weight update (pipeline) / per-phase (conv) ----
@@ -256,9 +296,13 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
         // ---- admission ----
         match (&cfg.mode, &conv) {
             (Mode::Pipeline | Mode::Periodic { .. }, _) => {
-                while engine.load() < target_load {
-                    submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
-                                 group_base, &mut group_counter)?;
+                // the draining phase closes admission while the engine
+                // runs its remaining sequences to completion
+                if control.as_ref().map_or(true, |g| g.admitting()) {
+                    while engine.load() < target_load {
+                        submit_group(&mut engine, &mut dataset, &tokenizer, &cfg,
+                                     group_base, &mut group_counter)?;
+                    }
                 }
             }
             (Mode::Conventional { .. }, Some(sync)) => {
@@ -276,6 +320,12 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
             (Mode::Conventional { .. }, None) => {
                 anyhow::bail!("conventional mode requires a ConvSync")
             }
+        }
+
+        // drain-quiescence signal: the supervisor sums these to know when
+        // every in-flight sequence has finished
+        if let Some(gate) = &control {
+            gate.report_load(actor_id, engine.load());
         }
 
         // ---- decode step ----
@@ -335,6 +385,9 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
                 }
                 Ok(_) => {}
                 Err(_) => {
+                    if let Some(gate) = &control {
+                        gate.clear_load(actor_id);
+                    }
                     bus.leave_process_group(&group_name);
                     return Ok(()); // preprocessor gone: shutdown
                 }
@@ -433,6 +486,10 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     }
     if engine.kv_cow_forks() > 0 {
         hub.add("kv_cow_forks", engine.kv_cow_forks() as f64);
+    }
+    // a dead incarnation's stale load must never hold a drain open
+    if let Some(gate) = &control {
+        gate.clear_load(actor_id);
     }
     bus.leave_process_group(&group_name);
     log.debug("actor stopping");

@@ -40,6 +40,7 @@ use super::trainer::{run_trainer, TrainerArgs, TrainerExit};
 use super::warmup;
 use crate::broker::{topic, Policy};
 use crate::config::{Mode, RunConfig};
+use crate::control::{ControlPlane, RunController};
 use crate::metrics::{MetricsHub, RunReport};
 use crate::model::checkpoint::{read_manifest, TrainState};
 use crate::rl::Rollout;
@@ -85,6 +86,19 @@ pub fn run_with_chaos(
     cfg: RunConfig,
     warm_params: Option<Vec<HostTensor>>,
     chaos: Option<ChaosSchedule>,
+) -> Result<RunSummary> {
+    run_controlled(cfg, warm_params, chaos, None)
+}
+
+/// [`run_with_chaos`] with an externally-held [`RunController`]: the
+/// caller keeps the command channel and can pause / resume / drain /
+/// roll back / stop the run while it executes. The controller is only
+/// wired when `[control] enabled = true`; it is ignored otherwise.
+pub fn run_controlled(
+    cfg: RunConfig,
+    warm_params: Option<Vec<HostTensor>>,
+    chaos: Option<ChaosSchedule>,
+    controller: Option<RunController>,
 ) -> Result<RunSummary> {
     cfg.validate()?;
     if chaos.is_some() && !matches!(cfg.mode, Mode::Pipeline) {
@@ -174,6 +188,18 @@ pub fn run_with_chaos(
     } else {
         None
     };
+    // run control plane: operator commands + guardrail watchdog. Only
+    // built when enabled (validated: requires trainer failover, which
+    // transitively requires elastic + pipeline + durable checkpoints)
+    let control = if cfg.control.enabled {
+        Some(match controller {
+            Some(c) => ControlPlane::with_controller(cfg.control.clone(), c),
+            None => ControlPlane::new(cfg.control.clone()),
+        })
+    } else {
+        None
+    };
+    let control_gate = control.as_ref().map(|c| c.gate.clone());
     let spawn: SpawnFn = {
         let cfg = cfg.clone();
         let bus = bus.clone();
@@ -181,6 +207,7 @@ pub fn run_with_chaos(
         let conv = conv.clone();
         let rollout_tx = rollout_tx.clone();
         let migrate = migrate.clone();
+        let control_gate = control_gate.clone();
         Arc::new(move |ctx| {
             run_actor(ActorArgs {
                 actor_id: ctx.actor_id,
@@ -193,6 +220,7 @@ pub fn run_with_chaos(
                 generation: ctx.generation,
                 migrate: migrate.clone(),
                 conv: conv.clone(),
+                control: control_gate.clone(),
             })
         })
     };
@@ -338,6 +366,7 @@ pub fn run_with_chaos(
         migrate,
         autoscale,
         trainer: trainer_slot,
+        control,
     };
     let sup_handle = std::thread::Builder::new()
         .name("superv".into())

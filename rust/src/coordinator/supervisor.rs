@@ -31,6 +31,17 @@
 //!   actors keep decoding and the topics stay open throughout
 //!   (`trainer_failovers` / `trainer_crashes` counters). The supervisor
 //!   then returns the (possibly respawned) trainer's final parameters.
+//! * **Run control plane** (`[control] enabled`, see [`crate::control`]):
+//!   the supervisor additionally drains a [`RunController`] command
+//!   queue (pause/resume/drain/rollback/stop), polls a [`Guardrail`]
+//!   watchdog each iteration, and executes pause-then-rollback through
+//!   the same [`TrainerSlot`] failover machinery — with bounded
+//!   retry-with-backoff and a fail-safe transition to `Drained` when the
+//!   rollback budget is exhausted. Every exit path records a terminal
+//!   `run/state` gauge.
+//!
+//! [`RunController`]: crate::control::RunController
+//! [`Guardrail`]: crate::control::Guardrail
 //!
 //! The pool is deliberately generic over a [`SpawnFn`] closure rather
 //! than hard-wired to [`super::actor::run_actor`]: the chaos tests drive
@@ -40,6 +51,10 @@
 
 use super::trainer::TrainerExit;
 use crate::broker::Publisher;
+use crate::control::{
+    record_state, write_trip_report, AdmissionPhase, ControlPlane, RunCommand, RunState, Trip,
+    TripReason,
+};
 use crate::metrics::MetricsHub;
 use crate::rl::Rollout;
 use crate::runtime::HostTensor;
@@ -217,6 +232,18 @@ impl ActorPool {
 
     pub fn min_actors(&self) -> usize {
         self.min_actors
+    }
+
+    /// Lower (or raise) the pool's floor mid-run. The forced-drain path
+    /// drops it to zero so [`ActorPool::reap`] stops topping halted
+    /// actors back up while the run winds down.
+    pub fn set_min_actors(&mut self, n: usize) {
+        self.min_actors = n;
+    }
+
+    /// Snapshot of the live slot ids.
+    pub fn live_ids(&self) -> Vec<usize> {
+        self.slots.keys().copied().collect()
     }
 
     pub fn lowest_live(&self) -> Option<usize> {
@@ -471,6 +498,10 @@ pub struct SupervisorArgs {
     /// manifest and returns its final parameters. None = the orchestrator
     /// owns the trainer thread (plain runs)
     pub trainer: Option<TrainerSlot>,
+    /// run control plane (`[control] enabled`): operator commands
+    /// (pause/resume/drain/rollback/stop) plus the guardrail watchdog
+    /// that auto-triggers pause-then-rollback. None = no control plane
+    pub control: Option<ControlPlane>,
 }
 
 /// Supervision loop. Runs until `stop` is raised (trainer done), then
@@ -492,9 +523,16 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
         migrate,
         mut autoscale,
         mut trainer,
+        mut control,
     } = args;
     let mut final_params: Option<Vec<HostTensor>> = None;
     let log = Logger::new("superv");
+    // run/state gauge: transitions recorded live, a terminal value on
+    // every exit path (completed / failed / drained / rolled_back)
+    record_state(&hub, RunState::Running);
+    let mut terminal: Option<RunState> = None;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut drain_forced = false;
     let events = schedule
         .as_ref()
         .map(|s| s.events.clone())
@@ -611,6 +649,138 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
                         None => {
                             log.info("kill-trainer no-op: no supervisor-owned trainer")
                         }
+                    }
+                }
+                ChaosKind::GuardrailTrip => {
+                    // forced guardrail firing: exercises the very same
+                    // pause-then-rollback path a metric-driven trip takes.
+                    // No-op without a control plane (like KillTrainer
+                    // without a supervisor-owned trainer).
+                    match control.as_mut() {
+                        Some(ctl) => {
+                            hub.add("guardrail_trips", 1.0);
+                            hub.add("chaos_guardrail_trips", 1.0);
+                            let trip = Trip {
+                                reason: TripReason::Injected,
+                                detail: format!(
+                                    "chaos-injected guardrail trip at version clock {}",
+                                    ev.at_step
+                                ),
+                            };
+                            write_trip_report("chaos_guardrail_trip", &trip, "");
+                            if attempt_rollback(
+                                ctl,
+                                &mut trainer,
+                                &hub,
+                                &log,
+                                &stop,
+                                &mut final_params,
+                                &trip,
+                            ) == RollbackOutcome::FailSafe
+                            {
+                                start_drain(
+                                    ctl,
+                                    &hub,
+                                    &log,
+                                    &mut drain_deadline,
+                                    &mut drain_forced,
+                                );
+                            }
+                        }
+                        None => {
+                            log.info("guardrail-trip no-op: control plane not attached")
+                        }
+                    }
+                }
+            }
+        }
+        // ---- control plane: operator commands + guardrail watchdog ----
+        if let Some(ctl) = control.as_mut() {
+            for cmd in ctl.controller.drain() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                log.info(&format!("control command: {cmd}"));
+                match cmd {
+                    RunCommand::Pause => {
+                        if ctl.gate.phase() == AdmissionPhase::Running {
+                            ctl.gate.set_phase(AdmissionPhase::Paused);
+                            record_state(&hub, RunState::Paused);
+                            hub.add("control_pauses", 1.0);
+                        }
+                    }
+                    RunCommand::Resume => {
+                        if ctl.gate.phase() == AdmissionPhase::Paused {
+                            ctl.gate.set_phase(AdmissionPhase::Running);
+                            record_state(&hub, RunState::Running);
+                            hub.add("control_resumes", 1.0);
+                        }
+                    }
+                    RunCommand::Drain => {
+                        if ctl.gate.phase() != AdmissionPhase::Draining {
+                            start_drain(ctl, &hub, &log, &mut drain_deadline, &mut drain_forced);
+                        }
+                    }
+                    RunCommand::Rollback { checkpoint } => {
+                        let trip = Trip {
+                            reason: TripReason::Injected,
+                            detail: match checkpoint {
+                                Some(step) => format!(
+                                    "operator rollback to step {step} (restored \
+                                     through the latest manifest state)"
+                                ),
+                                None => "operator rollback to the latest manifest state"
+                                    .into(),
+                            },
+                        };
+                        if attempt_rollback(
+                            ctl,
+                            &mut trainer,
+                            &hub,
+                            &log,
+                            &stop,
+                            &mut final_params,
+                            &trip,
+                        ) == RollbackOutcome::FailSafe
+                        {
+                            start_drain(ctl, &hub, &log, &mut drain_deadline, &mut drain_forced);
+                        }
+                    }
+                    RunCommand::Stop => {
+                        hub.add("control_stops", 1.0);
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            // watchdog: only while actually running — a paused or
+            // draining run produces no fresh evidence worth tripping on
+            if !stopping
+                && !stop.load(Ordering::Relaxed)
+                && ctl.gate.phase() == AdmissionPhase::Running
+            {
+                if let Some(trip) = ctl.guardrail.check(&hub) {
+                    hub.add("guardrail_trips", 1.0);
+                    log.warn(&format!(
+                        "guardrail trip: {} — {}",
+                        trip.reason.name(),
+                        trip.detail
+                    ));
+                    if let Some(p) =
+                        write_trip_report(trip.reason.name(), &trip, &format!("clock {clock}"))
+                    {
+                        log.info(&format!("trip report: {}", p.display()));
+                    }
+                    if attempt_rollback(
+                        ctl,
+                        &mut trainer,
+                        &hub,
+                        &log,
+                        &stop,
+                        &mut final_params,
+                        &trip,
+                    ) == RollbackOutcome::FailSafe
+                    {
+                        start_drain(ctl, &hub, &log, &mut drain_deadline, &mut drain_forced);
                     }
                 }
             }
@@ -756,7 +926,45 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
             return Err(e);
         }
         hub.set("pool_size", pool.len() as f64);
-        if !stop.load(Ordering::Relaxed) && pool.is_empty() {
+        // ---- drain progress ----
+        let draining = control
+            .as_ref()
+            .is_some_and(|c| c.gate.phase() == AdmissionPhase::Draining);
+        if draining && !stop.load(Ordering::Relaxed) {
+            let ctl = control.as_ref().expect("checked above");
+            // quiesced: no actor holds in-flight sequences and nothing
+            // portable is parked in the migration hub
+            let quiet = ctl.gate.total_load() == 0
+                && migrate.as_ref().map_or(true, |m| m.depth() == 0);
+            let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
+            if !drain_forced {
+                if quiet {
+                    terminal = Some(RunState::Drained);
+                    stop.store(true, Ordering::Relaxed);
+                    log.info("drain complete: run quiesced");
+                } else if expired {
+                    // grace expired with stragglers: force the wind-down.
+                    // Halting with the global stop still low routes each
+                    // actor through its migrating exit — truncated
+                    // prefixes flush as trainable rollouts under
+                    // `[rl] train_truncated`, the rest deposit into the
+                    // hub with the conservation books closed.
+                    drain_forced = true;
+                    drain_deadline = Some(Instant::now() + DRAIN_GRACE);
+                    pool.set_min_actors(0);
+                    for id in pool.live_ids() {
+                        pool.halt_async(id);
+                    }
+                    hub.add("control_drains_forced", 1.0);
+                    log.warn("drain grace expired: force-halting actors to flush prefixes");
+                }
+            } else if pool.is_empty() || expired {
+                terminal = Some(RunState::Drained);
+                stop.store(true, Ordering::Relaxed);
+                log.info("forced drain complete");
+            }
+        }
+        if !stop.load(Ordering::Relaxed) && pool.is_empty() && !draining {
             // no live actors and no respawn budget left: unwind the run
             // instead of letting the trainer wait on rollouts forever
             let why = pool
@@ -780,11 +988,118 @@ pub fn run_supervisor(args: SupervisorArgs) -> Result<Option<Vec<HostTensor>>> {
     };
     let out = pool.shutdown();
     discard_leftover_snapshots(&hub, &migrate);
-    let joined = trainer_res?;
-    out?;
-    Ok(final_params.or(joined))
+    // terminal run/state: a drained run stays Drained; a tail error is a
+    // Failed run even though the books above already closed
+    match (trainer_res, out) {
+        (Ok(joined), Ok(())) => {
+            record_state(&hub, terminal.unwrap_or(RunState::Completed));
+            Ok(final_params.or(joined))
+        }
+        (Err(e), _) | (Ok(_), Err(e)) => {
+            record_state(&hub, RunState::Failed);
+            Err(e)
+        }
+    }
     // rollout_tx (and the pool's SpawnFn publisher clone) drop here,
     // closing the topic so the preprocessor drains and exits.
+}
+
+/// How long a drain waits for in-flight sequences before force-halting
+/// the stragglers (and then again for the forced wind-down itself).
+const DRAIN_GRACE: Duration = Duration::from_secs(10);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RollbackOutcome {
+    /// Trainer restored from the checkpoint manifest; run resumed.
+    RolledBack,
+    /// The restart raced the trainer's completion: the run is done.
+    Completed,
+    /// Budget exhausted (or no restartable trainer): the caller must
+    /// fail safe into a drain.
+    FailSafe,
+}
+
+/// Pause-then-rollback: quiesce the actors through the gate (they park
+/// in-flight sequences into the migration hub with the conservation
+/// books closed), then restore the trainer from the latest checkpoint
+/// manifest through the failover slot, retrying with exponential
+/// backoff within the control plane's rollback budget. Never errors:
+/// an unrecoverable rollback degrades to [`RollbackOutcome::FailSafe`].
+fn attempt_rollback(
+    ctl: &mut ControlPlane,
+    trainer: &mut Option<TrainerSlot>,
+    hub: &MetricsHub,
+    log: &Logger,
+    stop: &Arc<AtomicBool>,
+    final_params: &mut Option<Vec<HostTensor>>,
+    trip: &Trip,
+) -> RollbackOutcome {
+    // quiesce first so no actor trains forward on the poisoned policy
+    // while the trainer is being restored
+    ctl.gate.set_phase(AdmissionPhase::Paused);
+    record_state(hub, RunState::Paused);
+    let mut attempt = 0usize;
+    loop {
+        let restartable = trainer.as_ref().is_some_and(|s| s.can_restart());
+        if !restartable || ctl.rollbacks_left == 0 {
+            log.warn(&format!(
+                "rollback for {} abandoned ({}): failing safe into a drain",
+                trip.reason.name(),
+                if restartable { "rollback budget exhausted" } else { "no restartable trainer" }
+            ));
+            hub.add("control_failsafe_drains", 1.0);
+            return RollbackOutcome::FailSafe;
+        }
+        ctl.rollbacks_left -= 1;
+        std::thread::sleep(ctl.backoff(attempt));
+        match trainer.as_mut().expect("checked above").restart() {
+            Ok(Some(params)) => {
+                *final_params = Some(params);
+                stop.store(true, Ordering::Relaxed);
+                return RollbackOutcome::Completed;
+            }
+            Ok(None) => {
+                hub.add("control_rollbacks", 1.0);
+                hub.add("trainer_failovers", 1.0);
+                record_state(hub, RunState::RolledBack);
+                // the evidence that justified this rollback is spent —
+                // without the acknowledge, the same points would re-trip
+                // the guardrail on the very next poll, forever
+                ctl.guardrail.acknowledge(hub);
+                ctl.gate.set_phase(AdmissionPhase::Running);
+                log.info(&format!(
+                    "rolled back to the latest checkpoint manifest ({}); run resumed",
+                    trip.reason.name()
+                ));
+                return RollbackOutcome::RolledBack;
+            }
+            Err(e) => {
+                log.warn(&format!(
+                    "rollback attempt {} failed: {e:#}; retrying with backoff",
+                    attempt + 1
+                ));
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Enter the draining phase: admissions close, active sequences run to
+/// completion, and the grace clock starts (see the drain-progress block
+/// in [`run_supervisor`]).
+fn start_drain(
+    ctl: &ControlPlane,
+    hub: &MetricsHub,
+    log: &Logger,
+    drain_deadline: &mut Option<Instant>,
+    drain_forced: &mut bool,
+) {
+    ctl.gate.set_phase(AdmissionPhase::Draining);
+    record_state(hub, RunState::Draining);
+    hub.add("control_drains", 1.0);
+    *drain_deadline = Some(Instant::now() + DRAIN_GRACE);
+    *drain_forced = false;
+    log.info("draining: admissions closed; letting in-flight sequences finish");
 }
 
 /// Fail-path teardown: raise `stop`, join the supervisor-owned trainer
@@ -806,6 +1121,7 @@ fn unwind_pool(
     }
     pool.shutdown().ok();
     discard_leftover_snapshots(hub, migrate);
+    record_state(hub, RunState::Failed);
 }
 
 /// Snapshots still queued once every actor is down are deliberately

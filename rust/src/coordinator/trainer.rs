@@ -142,7 +142,11 @@ pub fn run_trainer(args: TrainerArgs) -> Result<TrainerExit> {
     // off-thread checkpoint writer: the hot loop only hands states over
     let mut ckpt: Option<AsyncCheckpointer> = match (&cfg.checkpoint.dir, cfg.checkpoint.every) {
         (Some(dir), every) if every > 0 => {
-            Some(AsyncCheckpointer::new(std::path::PathBuf::from(dir), cfg.checkpoint.keep_last))
+            Some(AsyncCheckpointer::new(
+                std::path::PathBuf::from(dir),
+                cfg.checkpoint.keep_last,
+                cfg.checkpoint.write_retries,
+            ))
         }
         _ => None,
     };

@@ -18,6 +18,7 @@
 pub mod benchkit;
 pub mod broker;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

@@ -6,6 +6,16 @@
 //! The figure benches slice these series exactly the way the paper's
 //! plots do: reward-vs-time (Fig 5a), reward-vs-samples (Fig 5b),
 //! samples-vs-time (Fig 5c), max-lag and ESS vs step (Fig 6).
+//!
+//! Per-series retention is bounded (ring-buffer semantics): once a
+//! series exceeds its retention cap the oldest points are dropped in
+//! amortized-O(1) chunks, so a multi-hour production run cannot grow the
+//! hub without limit. The default cap (65536 points) is far above
+//! anything the figure harnesses record; control-plane deployments can
+//! tighten it via [`MetricsHub::with_retention`]. Sliding-window
+//! consumers (the `control::Guardrail` health checks) read the newest
+//! `n` points through [`MetricsHub::series_window`] without cloning the
+//! whole history.
 
 use crate::util::Json;
 use std::collections::BTreeMap;
@@ -26,6 +36,19 @@ pub struct Series {
 impl Series {
     pub fn push(&mut self, t: f64, x: f64, value: f64) {
         self.points.push(Point { t, x, value });
+    }
+
+    /// Push with ring-buffer retention: once the series holds `2 * cap`
+    /// points everything but the newest `cap` is dropped in one drain —
+    /// amortized O(1) per push, memory bounded by `2 * cap`, and the
+    /// newest `cap` points are always intact (`cap == 0` disables the
+    /// bound).
+    fn push_bounded(&mut self, t: f64, x: f64, value: f64, cap: usize) {
+        self.points.push(Point { t, x, value });
+        if cap > 0 && self.points.len() >= cap * 2 {
+            let excess = self.points.len() - cap;
+            self.points.drain(..excess);
+        }
     }
 
     pub fn last(&self) -> Option<&Point> {
@@ -71,10 +94,27 @@ impl Series {
     }
 }
 
-#[derive(Debug, Default)]
+/// Default per-series retention (points). Generous: the figure benches
+/// and every existing harness stay far below it, so only genuinely
+/// unbounded producers (multi-hour runs) ever hit the ring.
+pub const DEFAULT_RETENTION: usize = 65536;
+
+#[derive(Debug)]
 struct HubInner {
     series: BTreeMap<String, Series>,
     counters: BTreeMap<String, f64>,
+    /// per-series point cap (ring-buffer retention; 0 = unbounded)
+    retention: usize,
+}
+
+impl Default for HubInner {
+    fn default() -> Self {
+        HubInner {
+            series: BTreeMap::new(),
+            counters: BTreeMap::new(),
+            retention: DEFAULT_RETENTION,
+        }
+    }
 }
 
 /// Clone-able, thread-safe metrics sink.
@@ -88,9 +128,21 @@ impl MetricsHub {
         Self::default()
     }
 
+    /// A hub with a custom per-series retention cap (`0` = unbounded —
+    /// the pre-bounded behavior, for harnesses that audit full history).
+    pub fn with_retention(cap: usize) -> Self {
+        let hub = Self::default();
+        hub.inner.lock().unwrap().retention = cap;
+        hub
+    }
+
     pub fn record(&self, series: &str, t: f64, x: f64, value: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.series.entry(series.to_string()).or_default().push(t, x, value);
+        let cap = g.retention;
+        g.series
+            .entry(series.to_string())
+            .or_default()
+            .push_bounded(t, x, value, cap);
     }
 
     pub fn add(&self, counter: &str, delta: f64) {
@@ -119,6 +171,20 @@ impl MetricsHub {
             .series
             .get(name)
             .and_then(|s| s.points.last().copied())
+    }
+
+    /// The newest `n` points of a series, oldest-first — the guardrail's
+    /// sliding-window view. Clones only the window, not the history, and
+    /// returns fewer (possibly zero) points when the series is shorter.
+    pub fn series_window(&self, name: &str, n: usize) -> Vec<Point> {
+        let g = self.inner.lock().unwrap();
+        match g.series.get(name) {
+            Some(s) => {
+                let len = s.points.len();
+                s.points[len.saturating_sub(n)..].to_vec()
+            }
+            None => Vec::new(),
+        }
     }
 
     pub fn series(&self, name: &str) -> Series {
@@ -261,6 +327,51 @@ mod tests {
         }
         assert_eq!(hub.series("s").points.len(), 400);
         assert_eq!(hub.counter("c"), 400.0);
+    }
+
+    #[test]
+    fn series_window_returns_newest_points_oldest_first() {
+        let hub = MetricsHub::new();
+        assert!(hub.series_window("missing", 4).is_empty());
+        for i in 0..10 {
+            hub.record("w", i as f64, i as f64, i as f64 * 2.0);
+        }
+        let win = hub.series_window("w", 3);
+        assert_eq!(win.len(), 3);
+        assert_eq!(
+            win.iter().map(|p| p.value).collect::<Vec<_>>(),
+            vec![14.0, 16.0, 18.0],
+            "the newest 3, oldest-first"
+        );
+        // asking for more than exists returns what's there
+        assert_eq!(hub.series_window("w", 100).len(), 10);
+    }
+
+    #[test]
+    fn retention_bounds_series_and_keeps_the_newest() {
+        let hub = MetricsHub::with_retention(8);
+        for i in 0..1000 {
+            hub.record("r", i as f64, i as f64, i as f64);
+        }
+        let s = hub.series("r");
+        assert!(
+            s.points.len() < 16,
+            "ring retention must bound the series below 2*cap, got {}",
+            s.points.len()
+        );
+        // the newest cap points survive intact and in order
+        let win = hub.series_window("r", 8);
+        assert_eq!(
+            win.iter().map(|p| p.value).collect::<Vec<_>>(),
+            (992..1000).map(|v| v as f64).collect::<Vec<_>>()
+        );
+        assert_eq!(hub.series_last("r").unwrap().value, 999.0);
+        // retention 0 = unbounded (audit harnesses)
+        let unbounded = MetricsHub::with_retention(0);
+        for i in 0..1000 {
+            unbounded.record("r", i as f64, i as f64, i as f64);
+        }
+        assert_eq!(unbounded.series("r").points.len(), 1000);
     }
 
     #[test]

@@ -435,6 +435,9 @@ pub struct CkptWriterStats {
     /// states replaced in the queue before the writer got to them
     /// (latest-wins: a fast trainer never queues more than one)
     pub superseded: u64,
+    /// transient write errors absorbed by retry-with-backoff before a
+    /// save eventually landed (or was given up on)
+    pub retried: u64,
 }
 
 #[derive(Default)]
@@ -443,6 +446,7 @@ struct CkptPending {
     closing: bool,
     written: u64,
     superseded: u64,
+    retried: u64,
     last_err: Option<String>,
     /// crash injection for the durability property: consumed by the
     /// writer's next save
@@ -475,7 +479,14 @@ pub struct AsyncCheckpointer {
 }
 
 impl AsyncCheckpointer {
-    pub fn new(dir: PathBuf, keep_last: usize) -> AsyncCheckpointer {
+    /// `write_retries` bounds the retry-with-backoff on transient
+    /// write/fsync/rename errors: each failed save is re-attempted up to
+    /// that many more times (2–4–8 ms backoff) before the error is
+    /// recorded and surfaced at `finish()`. Injected [`CkptFault`]s are
+    /// one-shot — they hit only the first attempt — which is exactly the
+    /// transient-error shape the retry is for; a persistent fault (bad
+    /// directory, full disk) still fails every attempt and surfaces.
+    pub fn new(dir: PathBuf, keep_last: usize, write_retries: usize) -> AsyncCheckpointer {
         let shared = std::sync::Arc::new(CkptShared {
             pending: std::sync::Mutex::new(CkptPending::default()),
             cv: std::sync::Condvar::new(),
@@ -496,8 +507,26 @@ impl AsyncCheckpointer {
                         g = worker.cv.wait(g).unwrap();
                     }
                 };
-                let res = st.save_with_manifest_faulted(&dir, keep_last, fault);
+                let mut retries_used = 0u64;
+                let res = loop {
+                    // the injected fault models a transient error: it is
+                    // consumed by the first attempt only
+                    let this_fault = if retries_used == 0 { fault } else { None };
+                    match st.save_with_manifest_faulted(&dir, keep_last, this_fault) {
+                        Ok(p) => break Ok(p),
+                        Err(e) => {
+                            if retries_used >= write_retries as u64 {
+                                break Err(e);
+                            }
+                            retries_used += 1;
+                            std::thread::sleep(std::time::Duration::from_millis(
+                                1u64 << retries_used.min(6),
+                            ));
+                        }
+                    }
+                };
                 let mut g = worker.pending.lock().unwrap();
+                g.retried += retries_used;
                 match res {
                     Ok(_) => g.written += 1,
                     Err(e) => g.last_err = Some(format!("step {}: {e:#}", st.step)),
@@ -539,7 +568,11 @@ impl AsyncCheckpointer {
             j.join().ok();
         }
         let g = self.shared.pending.lock().unwrap();
-        let stats = CkptWriterStats { written: g.written, superseded: g.superseded };
+        let stats = CkptWriterStats {
+            written: g.written,
+            superseded: g.superseded,
+            retried: g.retried,
+        };
         match &g.last_err {
             Some(e) => bail!("async checkpoint write failed ({e})"),
             None => Ok(stats),
@@ -719,7 +752,7 @@ mod tests {
     fn async_writer_flushes_latest_on_finish() {
         let dir = std::env::temp_dir().join(format!("prl_actp_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        let w = AsyncCheckpointer::new(dir.clone(), 2);
+        let w = AsyncCheckpointer::new(dir.clone(), 2, 2);
         for step in [2, 4, 6] {
             w.submit(state(step, step as f32));
         }
@@ -737,7 +770,7 @@ mod tests {
     fn async_writer_latest_wins_under_a_fast_producer() {
         let dir = std::env::temp_dir().join(format!("prl_actq_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        let w = AsyncCheckpointer::new(dir.clone(), 0);
+        let w = AsyncCheckpointer::new(dir.clone(), 0, 2);
         // submit a burst without yielding: the queue holds at most one
         for step in 1..=20 {
             w.submit(state(step, 1.0));
@@ -751,13 +784,43 @@ mod tests {
 
     #[test]
     fn async_writer_surfaces_write_failures() {
-        // a file where the checkpoint dir should be: every write fails
+        // a file where the checkpoint dir should be: every write fails —
+        // a *persistent* fault, so retry-with-backoff burns its budget
+        // and the error still surfaces
         let bad = std::env::temp_dir().join(format!("prl_actbad_{}", std::process::id()));
         std::fs::write(&bad, b"not a directory").unwrap();
-        let w = AsyncCheckpointer::new(bad.clone(), 0);
+        let w = AsyncCheckpointer::new(bad.clone(), 0, 2);
         w.submit(state(1, 1.0));
         assert!(w.finish().is_err(), "broken recovery points must surface");
         std::fs::remove_file(&bad).ok();
+    }
+
+    #[test]
+    fn async_writer_retries_transient_faults_and_succeeds() {
+        // an injected CkptFault is one-shot (transient): with a retry
+        // budget the save lands on the second attempt and finish() is
+        // clean, with the retry on the books
+        let dir = std::env::temp_dir().join(format!("prl_actretry_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let w = AsyncCheckpointer::new(dir.clone(), 0, 2);
+        w.inject_fault_next(CkptFault::ManifestRename);
+        w.submit(state(5, 2.0));
+        let stats = w.finish().expect("transient fault absorbed by retry");
+        assert_eq!(stats.written, 1);
+        assert_eq!(stats.retried, 1, "exactly one retry was needed");
+        let latest = TrainState::load_latest(&dir).unwrap();
+        assert_eq!(latest.step, 5);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // with a zero budget the same fault surfaces (the pre-retry
+        // behavior stays reachable for the crash-window property tests)
+        let dir2 = std::env::temp_dir().join(format!("prl_actretry0_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir2).ok();
+        let w = AsyncCheckpointer::new(dir2.clone(), 0, 0);
+        w.inject_fault_next(CkptFault::ManifestRename);
+        w.submit(state(5, 2.0));
+        assert!(w.finish().is_err(), "zero retry budget must surface the fault");
+        std::fs::remove_dir_all(&dir2).ok();
     }
 
     #[test]

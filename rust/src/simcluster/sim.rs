@@ -33,6 +33,22 @@ pub struct GpuFailure {
     pub down_for: f64,
 }
 
+/// A control-plane pause window: from `at` until `at + hold_for` every
+/// generation GPU parks *in place* — live sequences stay resident with
+/// their prefixes and version runs intact, decode rounds reschedule at
+/// the window end, and nothing is dropped or migrated (contrast
+/// [`GpuFailure`], which evicts). The supervisor's
+/// `RunCommand::Pause`/`Resume` on sim time: the trainer keeps draining
+/// whatever finished before the pause, generation resumes exactly where
+/// it stopped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PauseWindow {
+    /// pause start (flashes)
+    pub at: f64,
+    /// pause duration (flashes)
+    pub hold_for: f64,
+}
+
 /// Autoscaling for the simulated generation tier: the real
 /// [`AutoScaler`] policy, evaluated on simulated time, driving spare-GPU
 /// activation/retirement — the cluster-scale mirror of the supervisor's
@@ -72,6 +88,9 @@ pub struct SimCfg {
     pub weight_update_pause: f64,
     /// injected generation-GPU outages (empty = healthy cluster)
     pub failures: Vec<GpuFailure>,
+    /// control-plane pause windows (generation parks in place, nothing
+    /// is dropped; empty = never paused)
+    pub pauses: Vec<PauseWindow>,
     /// partial-rollout migration: sequences dropped by outages (or a
     /// retired spare GPU) re-enter the regeneration queue with their
     /// generated prefixes and version runs intact, instead of counting
@@ -113,6 +132,7 @@ impl SimCfg {
             seed: 0,
             weight_update_pause: 0.0,
             failures: Vec::new(),
+            pauses: Vec::new(),
             migrate: false,
             autoscale: None,
             kv_block_size: 16,
@@ -135,6 +155,7 @@ impl SimCfg {
             seed: 0,
             weight_update_pause: 0.0,
             failures: Vec::new(),
+            pauses: Vec::new(),
             migrate: false,
             autoscale: None,
             kv_block_size: 16,
@@ -195,6 +216,9 @@ pub struct SimResult {
     /// sequences preempted by the KV memory-pressure model (youngest
     /// parked into the regen queue; re-preemptions count)
     pub seqs_preempted: usize,
+    /// decode rounds deferred by control-plane pause windows (sequences
+    /// parked in place, nothing dropped)
+    pub rounds_paused: usize,
     /// generated tokens preserved across those hand-offs (deposit-time
     /// accounting)
     pub tokens_salvaged: f64,
@@ -445,6 +469,20 @@ impl Simulator {
             })
     }
 
+    /// End of the control-plane pause window covering `now`, if any.
+    /// Pauses are run-wide (every generation GPU parks), with the same
+    /// micro-flash tolerance as [`Simulator::down_until`].
+    fn paused_until(&self) -> Option<f64> {
+        self.cfg
+            .pauses
+            .iter()
+            .filter(|p| p.at <= self.t && self.t + 2e-6 < p.at + p.hold_for)
+            .map(|p| p.at + p.hold_for)
+            .fold(None, |acc: Option<f64>, end| {
+                Some(acc.map_or(end, |a| a.max(end)))
+            })
+    }
+
     pub fn run(mut self) -> SimResult {
         // prime
         for g in 0..self.cfg.n_gen_gpus {
@@ -467,6 +505,22 @@ impl Simulator {
                     if self.retired[g] {
                         // a round scheduled before retirement is void
                         // (retire_spare already migrated the sequences)
+                        continue;
+                    }
+                    // control-plane pause: park in place — the resident
+                    // sequences keep their slots, prefixes and version
+                    // runs, and the round simply re-arms at the window
+                    // end. Unlike an outage, nothing is dropped or
+                    // migrated; the trainer keeps draining whatever
+                    // finished before the pause.
+                    if let Some(end) = self.paused_until() {
+                        self.result.rounds_paused += 1;
+                        if g == 0 {
+                            self.result.gpu0_active.push(self.t, self.t, self.active(0) as f64);
+                        }
+                        self.heap.push(key(end, Event::Round(g)));
+                        self.scheduled[g] = true;
+                        self.maybe_start_training();
                         continue;
                     }
                     // injected outage: drop live sequences, go dark until
@@ -871,6 +925,38 @@ mod tests {
         // digest off: no fingerprint
         let plain = Simulator::new(small_pipe()).run();
         assert!(plain.digest.is_none());
+    }
+
+    #[test]
+    fn pause_windows_park_in_place_and_lose_nothing() {
+        // a control-plane pause defers decode rounds but drops nothing:
+        // the run completes every optimizer step, seqs_lost stays zero,
+        // generated work is identical to the healthy run, and the paused
+        // trajectory replays deterministically
+        let healthy = Simulator::new(small_pipe()).run();
+        let mk = || {
+            let mut c = small_pipe();
+            c.pauses = vec![
+                PauseWindow { at: healthy.t_end / 4.0, hold_for: healthy.t_end / 8.0 },
+                PauseWindow { at: healthy.t_end / 2.0, hold_for: healthy.t_end / 8.0 },
+            ];
+            c
+        };
+        let r = Simulator::new(mk()).run();
+        assert!(r.rounds_paused > 0, "the windows must have deferred rounds");
+        assert_eq!(r.seqs_lost, 0, "a pause parks in place, it never drops");
+        assert_eq!(r.seqs_migrated, 0, "nothing re-enters the regen queue");
+        assert_eq!(r.samples_vs_time.points.len(), 30, "every step completes");
+        assert!(
+            r.t_end >= healthy.t_end,
+            "pausing cannot make the run faster: {} vs {}",
+            r.t_end,
+            healthy.t_end
+        );
+        let again = Simulator::new(mk()).run();
+        assert_eq!(r.t_end, again.t_end);
+        assert_eq!(r.rounds_paused, again.rounds_paused);
+        assert_eq!(r.tokens, again.tokens);
     }
 
     #[test]

@@ -58,6 +58,12 @@ pub enum ChaosKind {
     /// topics stay open, and the restored optimizer trajectory continues
     /// from the last durable state. No-op without a trainer slot.
     KillTrainer,
+    /// force a guardrail trip: the control plane reacts exactly as if a
+    /// live health check (non-finite loss, reward regression, ESS floor,
+    /// lag runaway — see `control::Guardrail`) had fired on its own —
+    /// pause, roll the trainer back to the latest healthy checkpoint,
+    /// resume. No-op without a wired `RunController`.
+    GuardrailTrip,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +101,7 @@ impl ChaosSchedule {
                 83..=86 => ChaosKind::BusHeal,
                 87..=91 => ChaosKind::CorruptSnapshot,
                 92..=94 => ChaosKind::KillTrainer,
+                95..=97 => ChaosKind::GuardrailTrip,
                 _ => ChaosKind::TopicStall { ms: 5 + rng.below(45) as u64 },
             };
             events.push(ChaosEvent { at_step, kind });
@@ -135,6 +142,17 @@ impl ChaosSchedule {
         ChaosSchedule {
             seed: 0,
             events: vec![ChaosEvent { at_step, kind: ChaosKind::KillTrainer }],
+        }
+    }
+
+    /// Hand-written scenario: force a guardrail trip once the version
+    /// clock passes `at_step` — the canonical pause-then-rollback case
+    /// (the control plane rewinds the trainer to the latest healthy
+    /// checkpoint and the run continues).
+    pub fn guardrail_trip(at_step: u64) -> ChaosSchedule {
+        ChaosSchedule {
+            seed: 0,
+            events: vec![ChaosEvent { at_step, kind: ChaosKind::GuardrailTrip }],
         }
     }
 
@@ -179,6 +197,7 @@ impl fmt::Display for ChaosKind {
             ChaosKind::TopicStall { ms } => write!(f, "topic-stall {ms}ms"),
             ChaosKind::CorruptSnapshot => write!(f, "corrupt-snapshot"),
             ChaosKind::KillTrainer => write!(f, "kill-trainer"),
+            ChaosKind::GuardrailTrip => write!(f, "guardrail-trip"),
         }
     }
 }
@@ -299,6 +318,24 @@ mod tests {
         assert!(
             s.events.iter().any(|e| e.kind == ChaosKind::KillTrainer),
             "the weighted kinds must produce trainer kills at this sample size"
+        );
+    }
+
+    #[test]
+    fn guardrail_trip_scenario_shape() {
+        let s = ChaosSchedule::guardrail_trip(6);
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events[0].kind, ChaosKind::GuardrailTrip);
+        assert_eq!(s.events[0].at_step, 6);
+        assert!(s.describe().contains("guardrail-trip"));
+    }
+
+    #[test]
+    fn generated_schedules_include_guardrail_trips() {
+        let s = ChaosSchedule::generate(0x7a11, 500, 512);
+        assert!(
+            s.events.iter().any(|e| e.kind == ChaosKind::GuardrailTrip),
+            "the weighted kinds must produce guardrail trips at this sample size"
         );
     }
 

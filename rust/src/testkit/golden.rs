@@ -47,7 +47,7 @@ use crate::sched::{MigrationHub, PreemptPolicy, SchedPolicy, Scheduler, SeqSnaps
 use crate::testkit::chaos::{corrupt_snapshot_bytes, ChaosKind, ChaosSchedule};
 use crate::util::Rng;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -312,6 +312,9 @@ pub struct GoldenCfg {
     pub dir: Option<PathBuf>,
     pub sched: SchedPolicy,
     pub preempt: PreemptPolicy,
+    /// guardrail rollbacks allowed before a trip falls through to the
+    /// fail-safe drain (mirrors `[control] rollback_budget`)
+    pub rollback_budget: usize,
 }
 
 impl GoldenCfg {
@@ -330,6 +333,7 @@ impl GoldenCfg {
             dir: None,
             sched: SchedPolicy::Fifo,
             preempt: PreemptPolicy::Youngest,
+            rollback_budget: 2,
         }
     }
 }
@@ -344,6 +348,12 @@ pub struct Perturbation {
     /// ticks at which one scheduler-chosen victim is parked through the
     /// wire-form snapshot path and re-admitted the same tick
     pub preempt_ticks: Vec<u64>,
+    /// control-plane pause windows `[start, end)` in ticks: at `start`
+    /// every in-flight sequence parks into the migration hub (books
+    /// balanced) and admission closes; at `end` admission reopens and
+    /// reclaims. A pause is a uniform time shift of the event stream, so
+    /// it is digest-invariant — the conformance tests assert exactly that.
+    pub pause_spans: Vec<(u64, u64)>,
 }
 
 impl Perturbation {
@@ -352,7 +362,16 @@ impl Perturbation {
     }
 
     pub fn chaos(schedule: ChaosSchedule) -> Perturbation {
-        Perturbation { chaos: Some(schedule), preempt_ticks: Vec::new() }
+        Perturbation { chaos: Some(schedule), ..Perturbation::default() }
+    }
+
+    /// Control-plane pause windows only (no chaos, no preempts).
+    pub fn pauses(spans: Vec<(u64, u64)>) -> Perturbation {
+        Perturbation { pause_spans: spans, ..Perturbation::default() }
+    }
+
+    fn paused_at(&self, tick: u64) -> bool {
+        self.pause_spans.iter().any(|&(start, end)| start <= tick && tick < end)
     }
 
     /// Seed-derived mixed schedule: `n_chaos` chaos events over the
@@ -371,7 +390,7 @@ impl Perturbation {
         let mut ticks: Vec<u64> =
             (0..n_preempts).map(|_| 1 + rng.below(horizon) as u64).collect();
         ticks.sort_unstable();
-        Perturbation { chaos: Some(chaos), preempt_ticks: ticks }
+        Perturbation { chaos: Some(chaos), preempt_ticks: ticks, ..Perturbation::default() }
     }
 }
 
@@ -386,6 +405,22 @@ pub struct GoldenStats {
     pub trainer_failovers: u64,
     pub corrupt_rejected: u64,
     pub checkpoints: u64,
+    /// control-plane pause windows entered
+    pub pauses: u64,
+    /// sequences parked into the hub by pause windows
+    pub parked: u64,
+    /// guardrail trips fired (each either rolls back or drains)
+    pub guardrail_trips: u64,
+    /// trips resolved by rolling back to the latest checkpoint
+    pub rollbacks: u64,
+    /// trips that fell through to the fail-safe drain (budget exhausted
+    /// or no checkpoint to roll back to)
+    pub failsafe_drains: u64,
+    /// migration-hub conservation books at run end (after the final
+    /// discard): `deposited == claimed + discarded` always holds
+    pub hub_deposited: u64,
+    pub hub_claimed: u64,
+    pub hub_discarded: u64,
 }
 
 /// Result of a golden run (completed, or stopped at an injected
@@ -398,6 +433,9 @@ pub struct GoldenRun {
     /// Some(step): the run was killed right after this checkpoint landed
     /// (resume with [`GoldenPipeline::resume`])
     pub stopped_at_checkpoint: Option<u64>,
+    /// the run ended in the fail-safe drain (guardrail trip with no
+    /// rollback path left): live work finished, nothing new admitted
+    pub drained: bool,
 }
 
 /// One in-flight sequence of the model. Its token stream comes from its
@@ -609,6 +647,18 @@ struct Golden<'a> {
     next_preempt: usize,
     log: EventLog,
     stats: GoldenStats,
+    /// guardrail rollbacks still allowed (counts down from the budget)
+    rollbacks_left: usize,
+    /// chaos-schedule indices whose guardrail trip already fired. A
+    /// rollback restores `next_chaos` from the checkpoint, so the replay
+    /// re-walks the schedule — this set (deliberately *not* part of the
+    /// restored image) is what keeps the causing trip from refiring.
+    tripped: BTreeSet<usize>,
+    /// inside a control-plane pause window (admission closed, everything
+    /// parked in the hub)
+    paused: bool,
+    /// fail-safe drain: nothing new admitted, live work runs to finish
+    draining: bool,
 }
 
 impl GoldenPipeline {
@@ -674,6 +724,10 @@ impl GoldenPipeline {
             g.hub.deposit_raw(bytes);
         }
         g.log = EventLog::resumed(RunDigest { hash: aux.hash, events: aux.events });
+        // a checkpoint cut inside a pause window restores parked: the
+        // in-flight sequences are already in the hub, so the resumed run
+        // must not re-park — only reopen admission when the window ends
+        g.paused = pert.paused_at(aux.tick);
         g.run_loop(None)
     }
 }
@@ -703,6 +757,10 @@ impl<'a> Golden<'a> {
             next_preempt: 0,
             log: EventLog::new(),
             stats: GoldenStats::default(),
+            rollbacks_left: cfg.rollback_budget,
+            tripped: BTreeSet::new(),
+            paused: false,
+            draining: false,
         }
     }
 
@@ -727,19 +785,45 @@ impl<'a> Golden<'a> {
             );
             self.tick += 1;
             self.stats.ticks += 1;
+            // control-plane pause windows: on entry every in-flight
+            // sequence parks into the hub with its RNG cursor; while
+            // paused nothing admits or generates (the trainer stays idle
+            // too — the previous tick's drain already consumed every
+            // ready batch), so the window is a pure time shift
+            let in_pause = self.pert.paused_at(self.tick);
+            if in_pause && !self.paused {
+                self.paused = true;
+                self.park_all();
+            } else if !in_pause && self.paused {
+                self.paused = false;
+            }
             // admission first, perturbations second, then a re-admission
             // pass: kills and preemptions always strike a *full* pool (so
             // every kill provably moves live sequences — the hand-off
             // machinery is exercised on every seed, not just lucky ones)
             // and their deposits re-seat within the same tick, which is
             // what keeps perturbations content-invariant
-            self.admit()?;
+            if !self.paused {
+                self.admit()?;
+            }
             self.fire_chaos()?;
+            if self.trainer.step >= self.cfg.steps {
+                break; // a rollback's replay drain finished the run
+            }
             self.fire_preempts();
-            self.admit()?;
-            self.generate();
+            if !self.paused {
+                self.admit()?;
+                self.generate();
+            }
             if self.drain_trainer(stop_after)? {
                 break;
+            }
+            if self.draining
+                && self.live_count() == 0
+                && self.pending.is_empty()
+                && self.hub.depth() == 0
+            {
+                break; // fail-safe drain complete: nothing left in flight
             }
         }
         Ok(self.finish(stop_after))
@@ -748,12 +832,16 @@ impl<'a> Golden<'a> {
     fn finish(mut self, stop_after: Option<u64>) -> GoldenRun {
         self.stats.corrupt_rejected = self.hub.corrupt_rejected();
         self.hub.discard_all();
+        self.stats.hub_deposited = self.hub.deposited();
+        self.stats.hub_claimed = self.hub.claimed();
+        self.stats.hub_discarded = self.hub.discarded();
         let stopped = stop_after
             .filter(|&k| self.trainer.step >= k && self.trainer.step < self.cfg.steps);
         GoldenRun {
             steps_done: self.trainer.step,
             stats: self.stats,
             stopped_at_checkpoint: stopped,
+            drained: self.draining,
             log: self.log,
         }
     }
@@ -805,9 +893,102 @@ impl<'a> Golden<'a> {
                     self.hub.deposit_raw(corrupt_snapshot_bytes(ev.at_step));
                 }
                 ChaosKind::KillTrainer => self.trainer_failover()?,
+                ChaosKind::GuardrailTrip => {
+                    // a rollback rewinds next_chaos, so the replay walks
+                    // this index again — the tripped set (not part of the
+                    // restored image) keeps the causing trip from refiring
+                    // without checkpoint wiring a trip is a no-op, like
+                    // an unwired KillTrainer
+                    let idx = self.next_chaos - 1;
+                    if self.tripped.insert(idx) && self.cfg.dir.is_some() {
+                        self.guardrail_trip()?;
+                    }
+                }
             }
         }
         Ok(())
+    }
+
+    /// A guardrail trip: roll back to the latest checkpoint — the exact
+    /// restore [`GoldenPipeline::resume`] performs, in-process — or, when
+    /// the rollback budget is exhausted or there is nothing to roll back
+    /// to, fall through to the fail-safe drain.
+    ///
+    /// The restore discards every in-flight sequence (hub books stay
+    /// balanced: the depth is *discarded*, never leaked), rewinds the
+    /// digest to the checkpoint's continuation, and replays. Replay is
+    /// deterministic from the restored cursors, so the run's final digest
+    /// equals that of a run in which the trip never fired — rollback is a
+    /// pure retry, which is what the conformance tests assert.
+    fn guardrail_trip(&mut self) -> Result<()> {
+        self.stats.guardrail_trips += 1;
+        if self.rollbacks_left == 0 {
+            return self.fail_safe();
+        }
+        let Some(dir) = self.cfg.dir.clone() else { return self.fail_safe() };
+        let Ok(st) = TrainState::load_latest(&dir) else {
+            return self.fail_safe(); // tripped before the first checkpoint
+        };
+        if st.engine_rng == [0u64; 4] {
+            return self.fail_safe(); // degenerate cursors cannot replay
+        }
+        let aux = read_aux(&dir, st.step).context("loading rollback aux sidecar")?;
+        self.rollbacks_left -= 1;
+        self.stats.rollbacks += 1;
+        // discard in-flight work and restore the checkpoint image, field
+        // for field what resume() does after Golden::fresh
+        self.actors = (0..self.cfg.n_actors).map(|id| (id, Vec::new())).collect();
+        self.next_actor_id = self.cfg.n_actors;
+        self.pending.clear();
+        self.hub.discard_all();
+        self.scheduler = self.cfg.sched.build_with_preempt(self.cfg.preempt);
+        self.trainer = GTrainer::from_state(&st)?;
+        self.admission_rng = Rng::from_state_words(st.engine_rng);
+        self.next_uid = st.sched_cursor;
+        self.version = aux.version;
+        self.tick = aux.tick;
+        self.group_ctr = aux.group_ctr;
+        self.group_fill = aux.group_fill as usize;
+        self.next_chaos = aux.fired_chaos as usize;
+        self.next_preempt = aux.fired_preempts as usize;
+        self.inbox = aux.inbox;
+        self.gdone = aux.gdone;
+        for bytes in aux.snaps {
+            self.hub.deposit_raw(bytes);
+        }
+        self.log = EventLog::resumed(RunDigest { hash: aux.hash, events: aux.events });
+        self.paused = self.pert.paused_at(self.tick);
+        // the resume() twin finishes the checkpoint tick's trainer drain
+        // before its first generation round — replay must match its order
+        self.drain_trainer(None)?;
+        Ok(())
+    }
+
+    /// Fail-safe: stop admitting, let live sequences finish, then stop.
+    fn fail_safe(&mut self) -> Result<()> {
+        if !self.draining {
+            self.draining = true;
+            self.stats.failsafe_drains += 1;
+        }
+        Ok(())
+    }
+
+    /// Pause entry: park every in-flight sequence (live and pending) into
+    /// the migration hub as wire-form bytes, in canonical id order. The
+    /// cursors travel in the snapshots, so reopening admission resumes
+    /// the exact streams.
+    fn park_all(&mut self) {
+        let mut all: Vec<GSeq> = Vec::new();
+        for seqs in self.actors.values_mut() {
+            all.append(seqs);
+        }
+        all.append(&mut self.pending);
+        all.sort_by_key(|s| s.uid);
+        self.stats.pauses += 1;
+        self.stats.parked += all.len() as u64;
+        for s in &all {
+            self.hub.deposit_raw(s.to_snapshot().to_bytes());
+        }
     }
 
     /// In-process trainer failover: only the trainer restarts — from the
@@ -923,6 +1104,9 @@ impl<'a> Golden<'a> {
         // prompts fill whatever capacity remains
         while self.live_count() < self.cfg.live_target {
             if self.pending.is_empty() {
+                if self.draining {
+                    break; // fail-safe drain: nothing new is admitted
+                }
                 let seq = self.fresh_seq();
                 self.seat(seq);
                 continue;
@@ -1318,6 +1502,115 @@ mod tests {
         let run = GoldenPipeline::run(&cfg, &pert).unwrap();
         assert_eq!(run.stats.corrupt_rejected, 4, "all poison rejected at claim");
         assert_eq!(base.log.digest(), run.log.digest());
+    }
+
+    #[test]
+    fn pause_window_is_digest_invariant() {
+        // a control-plane pause is a uniform time shift: everything parks
+        // into the hub with its cursors, admission closes, and on resume
+        // the event stream continues exactly where it left off
+        let cfg = GoldenCfg::new(0x9a05e);
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        let pert = Perturbation::pauses(vec![(4, 10), (14, 17)]);
+        let run = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert_eq!(run.stats.pauses, 2, "both pause windows entered");
+        assert!(run.stats.parked > 0, "the pauses had sequences in flight");
+        assert_eq!(run.steps_done, cfg.steps);
+        assert_eq!(
+            run.stats.hub_deposited,
+            run.stats.hub_claimed + run.stats.hub_discarded,
+            "pause parking must close the conservation books"
+        );
+        assert_eq!(
+            base.log.digest(),
+            run.log.digest(),
+            "{}",
+            explain_divergence(&base.log, &[&run.log])
+        );
+    }
+
+    #[test]
+    fn guardrail_rollback_is_a_pure_retry() {
+        // trip → roll back to the latest checkpoint → replay: the final
+        // digest equals the same run with the trip never firing, because
+        // the restore is exactly the resume() image and replay is
+        // deterministic from the restored cursors
+        let tmp = std::env::temp_dir().join(format!("prl_gold_rb_{}", std::process::id()));
+        let (dir_a, dir_b) = (tmp.join("base"), tmp.join("trip"));
+        std::fs::remove_dir_all(&tmp).ok();
+        let mut cfg = GoldenCfg::new(0x6a8d);
+        cfg.steps = 8;
+        cfg.checkpoint_every = 2;
+        cfg.dir = Some(dir_a);
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).unwrap();
+        cfg.dir = Some(dir_b);
+        let pert = Perturbation::chaos(ChaosSchedule::guardrail_trip(4));
+        let run = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert_eq!(run.stats.guardrail_trips, 1);
+        assert_eq!(run.stats.rollbacks, 1, "the trip resolved by rolling back");
+        assert!(!run.drained, "budget left: no fail-safe drain");
+        assert_eq!(run.steps_done, cfg.steps);
+        assert_eq!(
+            base.log.digest(),
+            run.log.digest(),
+            "{}",
+            explain_divergence(&base.log, &[&run.log])
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn trip_without_a_checkpoint_drains_fail_safe() {
+        // checkpointing is wired but the trip fires before the first cut
+        // lands: nothing to roll back to, so the run drains — admission
+        // closes, live sequences finish, the books balance — and the
+        // drained outcome is itself deterministic
+        let tmp = std::env::temp_dir().join(format!("prl_gold_fs_{}", std::process::id()));
+        std::fs::remove_dir_all(&tmp).ok();
+        let mut cfg = GoldenCfg::new(0xd8a1);
+        cfg.checkpoint_every = 4; // first cut at step 4 ...
+        cfg.dir = Some(tmp.clone());
+        let pert = Perturbation::chaos(ChaosSchedule::guardrail_trip(1)); // ... trip at version 2
+        let run = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert!(run.drained, "no checkpoint to roll back to: fail-safe drain");
+        assert_eq!(run.stats.failsafe_drains, 1);
+        assert_eq!(run.stats.rollbacks, 0);
+        assert!(run.steps_done < cfg.steps, "the drain stopped the run early");
+        assert_eq!(
+            run.stats.hub_deposited,
+            run.stats.hub_claimed + run.stats.hub_discarded,
+            "the drain must close the conservation books"
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+        let again = GoldenPipeline::run(&cfg, &pert).unwrap();
+        assert_eq!(run.log.digest(), again.log.digest(), "drained runs replay exactly");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn exhausted_rollback_budget_falls_through_to_drain() {
+        use crate::testkit::chaos::ChaosEvent;
+        let tmp = std::env::temp_dir().join(format!("prl_gold_budget_{}", std::process::id()));
+        std::fs::remove_dir_all(&tmp).ok();
+        let mut cfg = GoldenCfg::new(0xb4d6e7);
+        cfg.steps = 8;
+        cfg.checkpoint_every = 2;
+        cfg.rollback_budget = 2;
+        cfg.dir = Some(tmp.clone());
+        let trips = ChaosSchedule {
+            seed: 0,
+            events: vec![
+                ChaosEvent { at_step: 2, kind: ChaosKind::GuardrailTrip },
+                ChaosEvent { at_step: 3, kind: ChaosKind::GuardrailTrip },
+                ChaosEvent { at_step: 5, kind: ChaosKind::GuardrailTrip },
+            ],
+        };
+        let run = GoldenPipeline::run(&cfg, &Perturbation::chaos(trips)).unwrap();
+        assert_eq!(run.stats.guardrail_trips, 3, "each trip fires exactly once");
+        assert_eq!(run.stats.rollbacks, 2, "the budget allows two rollbacks");
+        assert_eq!(run.stats.failsafe_drains, 1, "the third trip drains");
+        assert!(run.drained);
+        std::fs::remove_dir_all(&tmp).ok();
     }
 
     #[test]

@@ -189,7 +189,10 @@ fn async_writer_crash_window_leaves_recoverable_state() {
         ));
         std::fs::remove_dir_all(&dir).ok();
         let mut trainer = SyntheticTrainer::new(9);
-        let w = AsyncCheckpointer::new(dir.clone(), 2);
+        // retries disabled: the crash-window property needs the injected
+        // fault to surface, not be absorbed (the one-shot fault models a
+        // transient error the retry path would otherwise recover from)
+        let w = AsyncCheckpointer::new(dir.clone(), 2, 0);
         trainer.step();
         w.submit(trainer.to_state());
         // wait for the good write to land before injecting the crash:

@@ -16,7 +16,8 @@
 //! printed seed replays the identical fault sequence.
 
 use pipeline_rl::broker::{topic, Policy, RecvError};
-use pipeline_rl::config::RunConfig;
+use pipeline_rl::config::{ControlConfig, RunConfig};
+use pipeline_rl::control::{ControlPlane, RunCommand, RunController, RunState, RUN_STATE_GAUGE};
 use pipeline_rl::coordinator::supervisor::{
     run_supervisor, ActorPool, SpawnFn, SupervisorArgs,
 };
@@ -156,6 +157,7 @@ fn chaos_kill_then_restart_keeps_pipeline_alive() {
             migrate: None,
             autoscale: None,
             trainer: None,
+            control: None,
         };
         let sup = std::thread::spawn(move || run_supervisor(sup_args));
 
@@ -185,6 +187,130 @@ fn chaos_kill_then_restart_keeps_pipeline_alive() {
         assert!(hub.counter("actors_spawned") >= 2.0);
         // every incarnation de-registered on halt
         assert!(bus.receivers().is_empty(), "left: {:?}", bus.receivers());
+    });
+}
+
+#[test]
+fn control_plane_pause_resume_drain_lifecycle() {
+    // the operator command channel against the real supervisor with
+    // synthetic actors: pause and resume flip the admission gate and
+    // the run/state gauge, a second Pause while paused is a no-op, and
+    // Drain quiesces the run into the Drained terminal state — the
+    // supervisor winds itself down without the test raising `stop`
+    let hub = MetricsHub::new();
+    let bus = WeightBus::new();
+    bus.publish(1, Arc::new(vec![]));
+    let (tx, _rx) = topic::<Rollout>("rollouts", 64, Policy::DropOldest);
+    let stop = Arc::new(AtomicBool::new(false));
+    let pool = ActorPool::new(
+        synthetic_spawn(bus.clone(), tx.clone()),
+        stop.clone(),
+        hub.clone(),
+        1,
+        1,
+        2,
+        0,
+        false,
+    )
+    .unwrap();
+    let controller = RunController::new();
+    let mut ctl_cfg = ControlConfig::default();
+    ctl_cfg.enabled = true;
+    let plane = ControlPlane::with_controller(ctl_cfg, controller.clone());
+    let sup_args = SupervisorArgs {
+        pool,
+        bus: bus.clone(),
+        rollout_tx: tx.clone(),
+        schedule: None,
+        stop: stop.clone(),
+        hub: hub.clone(),
+        poll: Duration::from_millis(2),
+        migrate: None,
+        autoscale: None,
+        trainer: None,
+        control: Some(plane),
+    };
+    let sup = std::thread::spawn(move || run_supervisor(sup_args));
+    let wait_for = |counter: &str| {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while hub.counter(counter) < 1.0 {
+            assert!(std::time::Instant::now() < deadline, "{counter} never fired");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+    let gauge = || hub.series_last(RUN_STATE_GAUGE).expect("gauge recorded").value;
+
+    controller.send(RunCommand::Pause);
+    wait_for("control_pauses");
+    assert_eq!(gauge(), RunState::Paused.gauge());
+    controller.send(RunCommand::Pause); // ignored: already paused
+    controller.send(RunCommand::Resume);
+    wait_for("control_resumes");
+    assert_eq!(gauge(), RunState::Running.gauge());
+    controller.send(RunCommand::Drain);
+    wait_for("control_drains");
+    let out = sup.join().unwrap().expect("a drained run is a clean exit");
+    assert!(out.is_none(), "no supervisor-owned trainer, no params");
+    drop(tx);
+    assert_eq!(hub.counter("control_pauses"), 1.0, "re-pause while paused is a no-op");
+    assert_eq!(hub.counter("control_resumes"), 1.0);
+    assert_eq!(gauge(), RunState::Drained.gauge());
+    assert!(bus.receivers().is_empty(), "actors de-registered on the drain");
+}
+
+#[test]
+fn guardrail_trip_without_restartable_trainer_fails_safe_into_drain() {
+    // chaos-injected guardrail trip with no supervisor-owned trainer:
+    // nothing can roll back, so the control plane must fail safe —
+    // admissions close, the run drains, and the terminal run/state is
+    // Drained (never a crash, never a retry loop)
+    with_seed("guardrail_failsafe_drain", 0x6a4d, |_| {
+        let hub = MetricsHub::new();
+        let bus = WeightBus::new();
+        // version clock already past the trip step: the event fires on
+        // the supervisor's first chaos poll
+        bus.publish(5, Arc::new(vec![]));
+        let (tx, _rx) = topic::<Rollout>("rollouts", 64, Policy::DropOldest);
+        let stop = Arc::new(AtomicBool::new(false));
+        let pool = ActorPool::new(
+            synthetic_spawn(bus.clone(), tx.clone()),
+            stop.clone(),
+            hub.clone(),
+            1,
+            1,
+            2,
+            0,
+            false,
+        )
+        .unwrap();
+        let mut ctl_cfg = ControlConfig::default();
+        ctl_cfg.enabled = true;
+        let sup_args = SupervisorArgs {
+            pool,
+            bus: bus.clone(),
+            rollout_tx: tx.clone(),
+            schedule: Some(ChaosSchedule::guardrail_trip(2)),
+            stop: stop.clone(),
+            hub: hub.clone(),
+            poll: Duration::from_millis(2),
+            migrate: None,
+            autoscale: None,
+            trainer: None,
+            control: Some(ControlPlane::new(ctl_cfg)),
+        };
+        let sup = std::thread::spawn(move || run_supervisor(sup_args));
+        let out = sup.join().unwrap().expect("fail-safe drain is a clean exit");
+        assert!(out.is_none());
+        drop(tx);
+        assert_eq!(hub.counter("chaos_guardrail_trips"), 1.0);
+        assert_eq!(hub.counter("guardrail_trips"), 1.0);
+        assert_eq!(hub.counter("control_failsafe_drains"), 1.0);
+        assert_eq!(hub.counter("control_drains"), 1.0);
+        assert_eq!(
+            hub.series_last(RUN_STATE_GAUGE).unwrap().value,
+            RunState::Drained.gauge(),
+            "an unrecoverable trip must end the run as Drained"
+        );
     });
 }
 

@@ -237,6 +237,7 @@ fn chaos_kill_one_of_three_loses_no_salvageable_tokens() {
             migrate: Some(hub_m.clone()),
             autoscale: None,
             trainer: None,
+            control: None,
         };
         let sup = std::thread::spawn(move || run_supervisor(sup_args));
 
@@ -341,6 +342,7 @@ fn byzantine_corrupt_snapshots_rejected_books_balance_actors_survive() {
             migrate: Some(hub_m.clone()),
             autoscale: None,
             trainer: None,
+            control: None,
         };
         let sup = std::thread::spawn(move || run_supervisor(sup_args));
 
@@ -426,6 +428,7 @@ fn supervisor_autoscales_pool_from_backlog_then_saturation() {
         migrate: Some(hub_m.clone()),
         autoscale: Some(scaler),
         trainer: None,
+        control: None,
     };
     let sup = std::thread::spawn(move || run_supervisor(sup_args));
 

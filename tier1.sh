@@ -45,9 +45,13 @@ cargo test -q
 
 # Golden-run conformance: re-run the determinism suite under distinct
 # seeds (DETERMINISM_SEED) so a digest regression cannot hide behind one
-# lucky seed. On a mismatch the failing seed + first diverging event are
-# written to rust/target/determinism/ — CI uploads that directory as an
-# artifact, so a red run ships its own replay recipe.
+# lucky seed. The suite includes the control-plane scenarios (pause
+# windows, guardrail rollback, the stale-manifest negative control), so
+# every seed also proves pause/rollback recovery is digest-clean.
+# On a mismatch the failing seed + first diverging event are written to
+# rust/target/determinism/, and guardrail trips leave their forensics
+# reports under rust/target/control/ — CI uploads both directories as
+# artifacts, so a red run ships its own replay recipe.
 echo "== tier1: determinism conformance (x${DETERMINISM_REPEATS:-3}) =="
 for i in $(seq 1 "${DETERMINISM_REPEATS:-3}"); do
     seed=$(( 0xD17E + i * 7919 ))

@@ -12,7 +12,11 @@ cleanly (see /opt/xla-example/README.md).
 
 Outputs (per variant v in {tiny, small, base}):
     artifacts/<v>_init.hlo.txt      seed -> params
-    artifacts/<v>_decode.hlo.txt    engine decode step
+    artifacts/<v>_decode.hlo.txt    engine decode step (dense KV layout)
+    artifacts/<v>_decode_paged.hlo.txt  block-indexed decode step against
+                                    the paged KV pool; both decode
+                                    variants donate their cache operand
+                                    (input_output_alias in the HLO text)
     artifacts/<v>_train.hlo.txt     IS-REINFORCE + Adam optimizer step
     artifacts/<v>_sft.hlo.txt       cross-entropy warmup step
     artifacts/<v>_score.hlo.txt     per-token logprobs
@@ -52,10 +56,24 @@ def graph_signatures(cfg: configs.ModelConfig):
     bg, bt = cfg.gen_batch, cfg.train_batch
     t, tm, v = cfg.seq_len, cfg.max_seq, cfg.vocab
     kv = model.kv_shape(cfg)
+    pool = model.kv_pool_shape(cfg)
+    nb = model.blocks_per_row(cfg)
     return {
         "init": [("seed", (), "i32")],
         "decode": [
             ("kv", kv, "f32"),
+            ("pos", (bg,), "i32"),
+            ("cur_tok", (bg,), "i32"),
+            ("gumbel", (bg, v), "f32"),
+            ("force_tok", (bg,), "i32"),
+            ("force_mask", (bg,), "f32"),
+            ("temp", (), "f32"),
+        ],
+        "decode_paged": [
+            ("kv_pool", pool, "f32"),
+            ("block_table", (bg, nb), "i32"),
+            ("copy_src", (bg,), "i32"),
+            ("copy_dst", (bg,), "i32"),
             ("pos", (bg,), "i32"),
             ("cur_tok", (bg,), "i32"),
             ("gumbel", (bg, v), "f32"),
@@ -121,11 +139,32 @@ def graph_fns(cfg: configs.ModelConfig):
     return {
         "init": (lambda seed: tuple(model.init_params(cfg, seed)), 0),
         "decode": (with_params(model.decode_step, 1), 1),
+        "decode_paged": (with_params(model.decode_step_paged, 1), 1),
         "train": (with_params(model.train_step, 3), 3),
         "sft": (with_params(model.sft_step, 3), 3),
         "score": (with_params(model.score, 1), 1),
         "score_full": (with_params(model.score_full, 1), 1),
     }
+
+
+# Donation plan: both decode variants update their cache operand (dense kv
+# / paged pool — the first runtime input, flat argument index P = number
+# of params) and return it at output tuple index 3 (DECODE_KV_OUT on the
+# rust side). donate_argnums survives the stablehlo -> HLO-text path as a
+# real `input_output_alias={ {3}: (P, {}, may-alias) }` header, which is
+# what lets PJRT satisfy the declared donation at `run_buffers_b` call
+# sites with a true in-place update instead of a copy.
+DONATED_CACHE_GRAPHS = ("decode", "decode_paged")
+DECODE_KV_OUT = 3
+
+
+def donation_plan(cfg: configs.ModelConfig, name: str):
+    """(donate_argnums, alias record) for a graph; (None, None) if the
+    graph donates nothing."""
+    if name not in DONATED_CACHE_GRAPHS:
+        return None, None
+    P = len(cfg.param_specs())
+    return (P,), {"param": P, "output": DECODE_KV_OUT}
 
 
 def lower_variant(cfg: configs.ModelConfig, out_dir: str, only=None):
@@ -149,7 +188,13 @@ def lower_variant(cfg: configs.ModelConfig, out_dir: str, only=None):
             return tuple(jax.tree_util.tree_leaves(out))
         # keep_unused: graphs like decode never touch value_head, but the
         # rust ABI passes the full canonical param list to every graph.
-        lowered = jax.jit(flat_fn, keep_unused=True).lower(*example)
+        donate, _ = donation_plan(cfg, name)
+        jitted = (
+            jax.jit(flat_fn, keep_unused=True, donate_argnums=donate)
+            if donate
+            else jax.jit(flat_fn, keep_unused=True)
+        )
+        lowered = jitted.lower(*example)
         text = to_hlo_text(lowered)
         fname = f"{cfg.name}_{name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
@@ -177,6 +222,16 @@ def build_manifest(variants, files_by_variant):
             "seq_len": cfg.seq_len,
             "vocab": cfg.vocab,
             "n_params": cfg.n_params(),
+            "kv_block_size": cfg.kv_block_size,
+            "kv_blocks_per_row": model.blocks_per_row(cfg),
+            # pool block count includes the trash block (last index)
+            "kv_pool_blocks": model.kv_pool_shape(cfg)[0],
+            "aliases": {
+                g: rec
+                for g in sigs
+                for rec in [donation_plan(cfg, g)[1]]
+                if rec is not None
+            },
             "params": [
                 {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
             ],

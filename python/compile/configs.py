@@ -28,6 +28,11 @@ class ModelConfig:
     train_batch: int  # optimizer batch rows (packed)
     seq_len: int      # packed training sequence length
     vocab: int = vocab.V
+    # Physical KV page size (tokens per device block) for the paged decode
+    # graph. Must divide max_seq so the block-gathered view is exactly the
+    # dense [max_seq] timeline — that equality is what makes the paged
+    # kernel bit-identical to the dense one (tests/test_model.py).
+    kv_block_size: int = 16
 
     @property
     def head_dim(self) -> int:

@@ -15,6 +15,14 @@ and trainer (DESIGN.md §3):
   KV cache, the per-token hot op of the engine's decode loop. Grid walks
   heads only; all slots are processed vectorized per grid step.
 
+* `paged_decode_attention` — the same single-query op against a shared
+  device *block pool* addressed through a per-row block table (vLLM-style
+  paged KV). Each grid step gathers the row's blocks from the pool into a
+  dense [B, T] timeline and then runs *exactly* `_decode_kernel`'s math,
+  so paged output is bit-identical to dense whenever the gathered values
+  match — the allocator's prefix sharing and CoW forks govern physical
+  memory without touching numerics.
+
 Grid-shape rationale (§Perf): batch-vectorized bodies keep the VMEM
 footprint per grid step modest (≤ ~2 MiB at the base variant — table in
 EXPERIMENTS.md §Perf) while minimizing the *number* of grid steps, which
@@ -148,3 +156,58 @@ def decode_attention(q, k_cache, v_cache, pos):
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=True,
     )(q, k_cache, v_cache, pos)
+
+
+def _paged_decode_kernel(q_ref, k_ref, v_ref, tbl_ref, pos_ref, o_ref, *, scale):
+    """One head per grid step, vectorized over slots.
+    q [B,1,hd]; k,v pool planes [N,bs,1,hd]; tbl [B,NB]; pos [B].
+
+    Gather-then-dense: `k[tbl]` pulls each row's blocks into a contiguous
+    [B, NB*bs, hd] timeline where gathered index i IS logical position i
+    (block i//bs, offset i%bs). From there the math is byte-for-byte
+    `_decode_kernel` — the proof obligation for dense/paged bit parity.
+    Entries past pos[b] (unwritten tail, trash-block garbage) are masked
+    exactly like the dense kernel masks its unwritten tail.
+    """
+    bs = k_ref.shape[1]
+    q = q_ref[:, 0, :].astype(jnp.float32)             # [B, hd]
+    tbl = tbl_ref[...]                                 # [B, NB]
+    b, nb = tbl.shape
+    t = nb * bs
+    k = k_ref[:, :, 0, :].astype(jnp.float32)[tbl].reshape(b, t, -1)
+    v = v_ref[:, :, 0, :].astype(jnp.float32)[tbl].reshape(b, t, -1)
+    s = jnp.einsum("bd,btd->bt", q, k) * scale         # [B, T]
+    valid = jax.lax.iota(jnp.int32, t)[None, :] <= pos_ref[...][:, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bt,btd->bd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, pos):
+    """q: [B, H, D]; k_pool, v_pool: [N, bs, H, D] (one layer/plane of the
+    device block pool); table: [B, NB] int32 physical block ids (logical
+    block j of row b lives at table[b, j]); pos: [B] int32.
+
+    Equivalent to ref.paged_decode_attention, and bit-identical to
+    decode_attention on the densified cache when NB*bs == max_seq.
+    """
+    n, bs, h, d = k_pool.shape
+    b, nb = table.shape
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, 1, d), lambda hi: (0, hi, 0)),
+            pl.BlockSpec((n, bs, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((n, bs, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, nb), lambda hi: (0, 0)),
+            pl.BlockSpec((b,), lambda hi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, d), lambda hi: (0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, k_pool, v_pool, table, pos)

@@ -66,6 +66,27 @@ def decode_attention(q, k_cache, v_cache, pos):
     return jnp.einsum("bhj,bjhd->bhd", p, v_cache)
 
 
+def gather_kv_blocks(pool_plane, table):
+    """Densify one K or V pool plane through a block table.
+
+    pool_plane: [N, bs, H, D] (all physical blocks of one layer/plane);
+    table: [B, NB] int32 — logical block j of row b is physical block
+    table[b, j]. Returns the dense per-row view [B, NB*bs, H, D] where
+    index i along the time axis is logical position i.
+    """
+    b, nb = table.shape
+    g = pool_plane[table]                                  # [B, NB, bs, H, D]
+    return g.reshape(b, nb * g.shape[2], *g.shape[3:])
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, pos):
+    """Oracle for kernels.attention.paged_decode_attention: densify the
+    pool through the table, then it IS dense decode attention."""
+    return decode_attention(
+        q, gather_kv_blocks(k_pool, table), gather_kv_blocks(v_pool, table), pos
+    )
+
+
 def fused_loss_fwd(h, embed, targets, behavior_lp, clip_c):
     """Reference for the fused IS-REINFORCE head+loss kernel (forward).
 

@@ -12,6 +12,14 @@ Five computations are exported by aot.py, one HLO artifact each:
               request-path hot loop; calls kernels.decode_attention and
               samples in-graph via Gumbel-max so one PJRT execution
               produces the next token AND its behavior logprob)
+  decode_paged  the same step against a *paged* physical KV layout: a
+              shared device block pool [n_blocks, L, 2, bs, H, hd]
+              addressed through a per-row block-table input, with CoW
+              forks as real device block copies (copy_src/copy_dst
+              lanes) and the pool operand donated (input_output_alias)
+              for true in-place update. Token-for-token identical to
+              `decode` — `[kv] layout = dense|paged` on the rust side
+              picks the artifact; dense stays the bit-for-bit fallback
   train       fused fwd+bwd+Adam IS-REINFORCE optimizer step (calls
               kernels.reinforce_loss with its custom-VJP Pallas backward
               and kernels.adam)
@@ -110,6 +118,31 @@ def kv_shape(cfg):
     return (cfg.n_layers, 2, cfg.gen_batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
 
 
+def blocks_per_row(cfg):
+    """Logical blocks per slot. kv_block_size must divide max_seq: the
+    gathered paged view is then exactly the dense timeline, which is the
+    precondition for bit-for-bit dense/paged parity."""
+    assert cfg.max_seq % cfg.kv_block_size == 0, (cfg.max_seq, cfg.kv_block_size)
+    return cfg.max_seq // cfg.kv_block_size
+
+
+def kv_pool_shape(cfg):
+    """Device block pool [n_blocks, L, 2, block_size, H, hd].
+
+    The pool is sized for worst-case zero sharing (every slot holds its
+    full private timeline) plus one *trash block*: physical index
+    n_blocks-1 is never handed out by the rust allocator and every parked
+    row's table points at it, so parked scatters land somewhere harmless
+    and identical (parked rows all write the PAD token at the park
+    position — duplicate scatters of equal values are deterministic).
+    The allocator's refcounted sharing means real runs use strictly fewer
+    blocks than this worst case; the pool bound is what lets the graph
+    stay static while sharing/CoW govern the *working set*.
+    """
+    n_blocks = cfg.gen_batch * blocks_per_row(cfg) + 1
+    return (n_blocks, cfg.n_layers, 2, cfg.kv_block_size, cfg.n_heads, cfg.head_dim)
+
+
 def decode_step(cfg, params, kv, pos, cur_tok, gumbel, force_tok, force_mask, temp):
     """One engine step for every slot.
 
@@ -137,6 +170,15 @@ def decode_step(cfg, params, kv, pos, cur_tok, gumbel, force_tok, force_mask, te
         x = x + _merge_heads(att) @ p[f"l{l}.wo"]
         h2 = ref.rmsnorm(x, p[f"l{l}.ln2"])
         x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    next_tok, chosen_lp, lp_all, ent = _sample_head(
+        cfg, p, x, gumbel, force_tok, force_mask, temp
+    )
+    return next_tok, chosen_lp, lp_all, kv, ent
+
+
+def _sample_head(cfg, p, x, gumbel, force_tok, force_mask, temp):
+    """Shared logits → Gumbel-max sampling tail of both decode variants.
+    One definition so dense and paged cannot drift numerically."""
     hN = ref.rmsnorm(x, p["final_norm"])
     logits = (hN @ p["embed"].T) / temp                      # [B, V]
     lp_all = jax.nn.log_softmax(logits, axis=-1)
@@ -144,7 +186,55 @@ def decode_step(cfg, params, kv, pos, cur_tok, gumbel, force_tok, force_mask, te
     next_tok = jnp.where(force_mask > 0.5, force_tok, sampled).astype(jnp.int32)
     chosen_lp = jnp.take_along_axis(lp_all, next_tok[:, None], axis=-1)[:, 0]
     ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1)
-    return next_tok, chosen_lp, lp_all, kv, ent
+    return next_tok, chosen_lp, lp_all, ent
+
+
+def decode_step_paged(cfg, params, pool, table, copy_src, copy_dst,
+                      pos, cur_tok, gumbel, force_tok, force_mask, temp):
+    """One engine step against the paged device KV pool.
+
+    pool: [N, L, 2, bs, H, hd] shared block pool (kv_pool_shape); the last
+    physical block is the trash block (see kv_pool_shape). table: [B, NB]
+    int32 — logical block j of row b is physical block table[b, j]; parked
+    rows' tables point every slot at trash. copy_src/copy_dst: [B] int32
+    CoW-fork lanes — before any write, each row copies one whole block
+    pool[copy_src[b]] -> pool[copy_dst[b]] (the allocator reports at most
+    one fork per row per step: a divergent write crosses into exactly one
+    block); rows without a fork carry trash->trash, a deterministic no-op.
+
+    The current token's K/V scatter into (table[b, pos//bs], pos % bs),
+    attention gathers by block index masked to <= pos — so the rust
+    allocator's refcounted sharing and forks govern *physical* memory
+    while token output stays bit-identical to decode_step (parity test in
+    python/tests/test_model.py).
+
+    Returns (next_tok[B], chosen_lp[B], logprobs[B, V], pool', ent[B]).
+    """
+    p = unpack(cfg, params)
+    rows = jnp.arange(cfg.gen_batch)
+    bs = cfg.kv_block_size
+    # CoW forks first: real device block copies, before any write lands
+    pool = pool.at[copy_dst].set(pool[copy_src])
+    blk = table[rows, pos // bs]                             # [B] write block
+    off = pos % bs
+    x = p["embed"][cur_tok]                                  # [B, d]
+    for l in range(cfg.n_layers):
+        h = ref.rmsnorm(x, p[f"l{l}.ln1"])
+        q = ref.rope(_split_heads(h @ p[f"l{l}.wq"], cfg.n_heads), pos)
+        k = ref.rope(_split_heads(h @ p[f"l{l}.wk"], cfg.n_heads), pos)
+        v = _split_heads(h @ p[f"l{l}.wv"], cfg.n_heads)
+        pool = pool.at[blk, l, 0, off].set(k)
+        pool = pool.at[blk, l, 1, off].set(v)
+        att = attn_k.paged_decode_attention(
+            q, pool[:, l, 0], pool[:, l, 1], table, pos
+        )
+        x = x + _merge_heads(att) @ p[f"l{l}.wo"]
+        h2 = ref.rmsnorm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    next_tok, chosen_lp, lp_all, ent = _sample_head(
+        cfg, p, x, gumbel, force_tok, force_mask, temp
+    )
+    return next_tok, chosen_lp, lp_all, pool, ent
 
 
 # ---------------------------------------------------------------------------

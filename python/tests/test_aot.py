@@ -33,10 +33,35 @@ def test_manifest_structure(tmp_path):
     assert manifest["metric_names"] == model.METRIC_NAMES
     assert manifest["pad_id"] == vocab.PAD_ID
     # every graph has an input signature
-    for g in ("init", "decode", "train", "sft", "score", "score_full"):
+    for g in ("init", "decode", "decode_paged", "train", "sft", "score",
+              "score_full"):
         assert g in v["inputs"], g
+    # paged-pool geometry is recorded for the rust allocator
+    assert v["kv_block_size"] == cfg.kv_block_size
+    assert v["kv_blocks_per_row"] * cfg.kv_block_size == cfg.max_seq
+    assert v["kv_pool_blocks"] == cfg.gen_batch * v["kv_blocks_per_row"] + 1
+    # both decode variants declare their cache donation
+    P = len(cfg.param_specs())
+    for g in ("decode", "decode_paged"):
+        assert v["aliases"][g] == {"param": P, "output": aot.DECODE_KV_OUT}
     # json-serializable
     json.dumps(manifest)
+
+
+def test_decode_graphs_emit_input_output_alias(tmp_path):
+    """The donated cache operand must surface as a real input_output_alias
+    in the lowered HLO header — that is what turns the declared donation
+    at `run_buffers_b` call sites into a true in-place update."""
+    cfg = configs.TINY
+    files = aot.lower_variant(cfg, str(tmp_path), only={"decode", "decode_paged"})
+    P = len(cfg.param_specs())
+    for g in ("decode", "decode_paged"):
+        header = (tmp_path / files[g]).read_text().splitlines()[0]
+        assert "input_output_alias" in header, g
+        # output tuple index 3 (the returned cache) aliases the cache
+        # operand at flat parameter index P
+        assert f"{{{aot.DECODE_KV_OUT}}}: ({P}, {{}}, may-alias)" in header, (
+            g, header)
 
 
 def test_signatures_match_model_conventions():
@@ -45,6 +70,16 @@ def test_signatures_match_model_conventions():
     decode = {s[0]: s for s in sigs["decode"]}
     assert decode["kv"][1] == model.kv_shape(cfg)
     assert decode["gumbel"][1] == (cfg.gen_batch, cfg.vocab)
+    paged = {s[0]: s for s in sigs["decode_paged"]}
+    assert paged["kv_pool"][1] == model.kv_pool_shape(cfg)
+    nb = model.blocks_per_row(cfg)
+    assert paged["block_table"][1] == (cfg.gen_batch, nb)
+    assert paged["block_table"][2] == "i32"
+    assert paged["copy_src"][1] == paged["copy_dst"][1] == (cfg.gen_batch,)
+    # the paged pool covers exactly the dense capacity plus the trash block
+    n, _l, _two, bs, _h, _d = paged["kv_pool"][1]
+    assert nb * bs == cfg.max_seq
+    assert n == cfg.gen_batch * nb + 1
     train = {s[0]: s for s in sigs["train"]}
     # per-token reward (packing-exact)
     assert train["reward"][1] == (cfg.train_batch, cfg.seq_len)

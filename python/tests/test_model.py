@@ -113,6 +113,160 @@ def test_decode_samples_argmax_with_zero_gumbel(params):
     np.testing.assert_allclose(lp, jnp.max(lp_all, axis=-1), atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# paged KV parity (the PR-8 acceptance claim: layout never changes tokens)
+# ---------------------------------------------------------------------------
+
+def _private_tables():
+    """Block tables with zero sharing: row b owns physical blocks
+    b*NB .. (b+1)*NB-1, trash block last. The worst-case layout the pool
+    is sized for (model.kv_pool_shape)."""
+    nb = model.blocks_per_row(CFG)
+    b = CFG.gen_batch
+    table = np.stack([np.arange(nb, dtype=np.int32) + r * nb for r in range(b)])
+    trash = model.kv_pool_shape(CFG)[0] - 1
+    return jnp.asarray(table), trash
+
+
+def _no_copy(trash):
+    """Fork lanes for a fork-free step: every row copies trash -> trash."""
+    return jnp.full((CFG.gen_batch,), trash, jnp.int32)
+
+
+def test_paged_decode_matches_dense_bitwise(params):
+    """Free-running sampling chains through both decode graphs must agree
+    bit-for-bit: same tokens, same behavior logprobs, same distributions.
+    This is the correctness contract that lets `[kv] layout = paged` keep
+    the dense artifact as a bit-identical fallback."""
+    bg = CFG.gen_batch
+    rng = np.random.default_rng(42)
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    pool = jnp.zeros(model.kv_pool_shape(CFG), jnp.float32)
+    table, trash = _private_tables()
+    nocopy = _no_copy(trash)
+    cur_d = cur_p = jnp.full((bg,), vocab.BOS_ID, jnp.int32)
+    ftok = jnp.zeros((bg,), jnp.int32)
+    fmask = jnp.zeros((bg,), jnp.float32)
+    temp = jnp.float32(1.0)
+    for step in range(10):
+        pos = jnp.full((bg,), step, jnp.int32)
+        gum = jnp.asarray(rng.standard_normal((bg, CFG.vocab)).astype(np.float32))
+        nt_d, lp_d, lpa_d, kv, _ = model.decode_step(
+            CFG, params, kv, pos, cur_d, gum, ftok, fmask, temp
+        )
+        nt_p, lp_p, lpa_p, pool, _ = model.decode_step_paged(
+            CFG, params, pool, table, nocopy, nocopy,
+            pos, cur_p, gum, ftok, fmask, temp
+        )
+        np.testing.assert_array_equal(np.asarray(nt_d), np.asarray(nt_p))
+        np.testing.assert_array_equal(np.asarray(lp_d), np.asarray(lp_p))
+        np.testing.assert_array_equal(np.asarray(lpa_d), np.asarray(lpa_p))
+        cur_d, cur_p = nt_d, nt_p
+
+
+def test_paged_shared_prefix_fork_matches_dense(params):
+    """Rows 0 and 1 physically share their prompt block (one device block,
+    refcount 2); at the first divergent write the test performs the
+    allocator's CoW fork through the copy_src/copy_dst lanes — a real
+    device block copy — and the token stream must still match a dense run
+    where each row always had its own private cache."""
+    bg = CFG.gen_batch
+    nb = model.blocks_per_row(CFG)
+    rng = np.random.default_rng(7)
+    prompt = [5, 9, 12, 7, 4, 11, 6]            # positions 0..6, one block
+    assert len(prompt) <= CFG.kv_block_size
+
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    pool = jnp.zeros(model.kv_pool_shape(CFG), jnp.float32)
+    trash = model.kv_pool_shape(CFG)[0] - 1
+    nocopy = _no_copy(trash)
+    # physical layout: block 0 is shared by rows 0+1 for logical block 0;
+    # everything else private; block `fork_blk` stays free for the fork
+    table = np.zeros((bg, nb), dtype=np.int32)
+    nxt = 1
+    for r in range(bg):
+        for j in range(nb):
+            if r in (0, 1) and j == 0:
+                table[r, j] = 0
+            else:
+                table[r, j] = nxt
+                nxt += 1
+    fork_blk = nxt
+    assert fork_blk < trash, "pool must keep a free block for the fork"
+    table = jnp.asarray(table)
+
+    cur_d = cur_p = jnp.full((bg,), vocab.BOS_ID, jnp.int32)
+    temp = jnp.float32(1.0)
+    forked = False
+    for step in range(12):
+        pos = jnp.full((bg,), step, jnp.int32)
+        gum = jnp.asarray(rng.standard_normal((bg, CFG.vocab)).astype(np.float32))
+        if step < len(prompt):
+            # forced shared prompt: rows 0+1 scatter identical K/V into the
+            # same physical block — the duplicate write is value-identical
+            ftok = jnp.full((bg,), prompt[step], jnp.int32)
+            fmask = jnp.ones((bg,), jnp.float32)
+            csrc = cdst = nocopy
+        else:
+            ftok = jnp.zeros((bg,), jnp.int32)
+            fmask = jnp.zeros((bg,), jnp.float32)
+            if not forked:
+                # first divergent feed: fork row 1's shared block before
+                # its write lands (copy block 0 -> fork_blk, repoint)
+                csrc = jnp.asarray(
+                    np.where(np.arange(bg) == 1, 0, trash).astype(np.int32))
+                cdst = jnp.asarray(
+                    np.where(np.arange(bg) == 1, fork_blk, trash).astype(np.int32))
+                table = table.at[1, 0].set(fork_blk)
+                forked = True
+            else:
+                csrc = cdst = nocopy
+        nt_d, lp_d, lpa_d, kv, _ = model.decode_step(
+            CFG, params, kv, pos, cur_d, gum, ftok, fmask, temp
+        )
+        nt_p, lp_p, lpa_p, pool, _ = model.decode_step_paged(
+            CFG, params, pool, table, csrc, cdst,
+            pos, cur_p, gum, ftok, fmask, temp
+        )
+        np.testing.assert_array_equal(np.asarray(nt_d), np.asarray(nt_p))
+        np.testing.assert_array_equal(np.asarray(lpa_d), np.asarray(lpa_p))
+        cur_d, cur_p = nt_d, nt_p
+    assert forked
+    # the shared block really carried the prefix: row 0's dense timeline
+    # for the prompt positions lives verbatim in physical block 0
+    np.testing.assert_array_equal(
+        np.asarray(pool[0, :, 0, : len(prompt)]),
+        np.asarray(kv[:, 0, 0, : len(prompt)]),
+    )
+    # and the fork copy really diverged row 1 away from row 0's block
+    assert not np.array_equal(
+        np.asarray(pool[fork_blk, :, 0, : CFG.kv_block_size]),
+        np.asarray(pool[0, :, 0, : CFG.kv_block_size]),
+    )
+
+
+def test_paged_kernel_matches_numpy_reference(params):
+    """kernels.attention.paged_decode_attention == ref.paged_decode_attention
+    on a random pool/table (independent of the model graphs)."""
+    from compile.kernels import attention as attn_k
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(3)
+    n, _l, _two, bs, h, d = model.kv_pool_shape(CFG)
+    nb = model.blocks_per_row(CFG)
+    b = CFG.gen_batch
+    kp = jnp.asarray(rng.standard_normal((n, bs, h, d)).astype(np.float32))
+    vp = jnp.asarray(rng.standard_normal((n, bs, h, d)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
+    table = jnp.asarray(
+        np.stack([rng.permutation(n - 1)[:nb] for _ in range(b)]).astype(np.int32)
+    )
+    pos = jnp.asarray(rng.integers(0, nb * bs, size=(b,)).astype(np.int32))
+    got = attn_k.paged_decode_attention(q, kp, vp, table, pos)
+    want = ref.paged_decode_attention(q, kp, vp, table, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_train_step_is_onpolicy_consistent(params):
     """behavior_lp from score => ESS = 1, KL = 0, and loss gradient flows."""
     tokens, seg, pos = mk_tokens(1, CFG.train_batch, 24)
@@ -123,8 +277,8 @@ def test_train_step_is_onpolicy_consistent(params):
     p2, m2, v2, metrics = model.train_step(
         CFG, params, m, v, jnp.float32(1.0), tokens, seg, pos,
         blp, jnp.ones(tokens.shape), jnp.ones(tokens.shape),
-        mask, jnp.float32(1e-3), jnp.float32(5.0), jnp.float32(0.0),
-        jnp.float32(0.0),
+        mask, jnp.ones(tokens.shape), jnp.float32(1e-3), jnp.float32(5.0),
+        jnp.float32(0.0), jnp.float32(0.0), jnp.float32(1.0),
     )
     names = model.METRIC_NAMES
     ess = float(metrics[names.index("ess")])
@@ -147,8 +301,8 @@ def test_value_mode_uses_value_head(params):
     p2, _, _, _ = model.train_step(
         CFG, params, m, v, jnp.float32(1.0), tokens, seg, pos,
         blp, jnp.zeros(tokens.shape), jnp.ones(tokens.shape),
-        mask, jnp.float32(1e-3), jnp.float32(5.0), jnp.float32(1.0),
-        jnp.float32(0.5),
+        mask, jnp.ones(tokens.shape), jnp.float32(1e-3), jnp.float32(5.0),
+        jnp.float32(1.0), jnp.float32(0.5), jnp.float32(1.0),
     )
     dv = float(jnp.sum(jnp.abs(p2[vh_index] - params[vh_index])))
     assert dv > 0.0, "value head must receive gradient in value mode"

@@ -10,7 +10,13 @@
 //!   price of shedding load under block pressure);
 //! * coalesced vs serial replay count: replays needed to land N
 //!   imported/parked sequences when slots free one at a time — the
-//!   N-replay quadratic the admission window kills.
+//!   N-replay quadratic the admission window kills;
+//! * device bytes held: dense per-slot tensor vs the paged block pool
+//!   at a realistic mid-run occupancy — the HBM the `[kv] layout =
+//!   "paged"` path actually gives back;
+//! * replay dispatch rows: per-row replay vs the legacy full-batch
+//!   rebuild — row-steps re-fed through the decode graph to land N
+//!   imports next to resident sequences.
 //!
 //! `cargo bench --bench kvmem`
 
@@ -128,6 +134,82 @@ fn main() {
         println!(
             "(serial batch=1 pays one full-batch replay per import; the window \
              amortizes it to ceil(N/batch))"
+        );
+    }
+
+    benchkit::section("kvmem — device bytes: dense per-slot tensor vs paged pool");
+    {
+        // TINY decode-graph dims (python/compile/configs.py): L=2 layers,
+        // H=2 heads, hd=16, block_size=16, 6 blocks per row -> max_seq 96.
+        // Dense bills every slot for max_seq tokens whether used or not;
+        // paged bills only the blocks the allocator actually holds.
+        let (l, h, hd, bs, nb_row, slots) = (2usize, 2usize, 16usize, 16usize, 6usize, 8usize);
+        let tok_bytes = l * 2 * h * hd * 4; // f32 K+V across layers, per token
+        let dense_bytes = slots * (bs * nb_row) * tok_bytes;
+        // mid-run occupancy: a 4-member GRPO group on a 30-token shared
+        // prompt plus four solo rows at varied fills
+        let mut alloc = BlockAllocator::new(slots * nb_row, bs);
+        for i in 0..4u64 {
+            alloc.admit_shared(i, 1, 30).unwrap();
+        }
+        for (i, &total) in [34usize, 50, 66, 18].iter().enumerate() {
+            alloc.admit(10 + i as u64, total).unwrap();
+        }
+        let paged_bytes = alloc.held_blocks() * bs * tok_bytes;
+        let saved = 100.0 * (dense_bytes - paged_bytes) as f64 / dense_bytes as f64;
+        benchkit::json_note("pool_bytes/dense", dense_bytes as f64);
+        benchkit::json_note("pool_bytes/paged", paged_bytes as f64);
+        benchkit::json_note("pool_bytes/saved_pct", saved);
+        benchkit::table(
+            &["layout", "device KV bytes", "vs dense"],
+            &[
+                vec!["dense".into(), dense_bytes.to_string(), "-".into()],
+                vec![
+                    "paged".into(),
+                    paged_bytes.to_string(),
+                    format!("-{saved:.1}%"),
+                ],
+            ],
+        );
+        println!(
+            "(8 slots x 96-token rows; paged holds {} of {} pool blocks)",
+            alloc.held_blocks(),
+            slots * nb_row
+        );
+    }
+
+    benchkit::section("kvmem — replay dispatch rows: per-row vs full-batch");
+    {
+        // Landing n imports (64-token prefix each) in one coalesced replay
+        // while the other slots hold residents mid-generation: the legacy
+        // full-batch rebuild re-feeds every active row at every prefix
+        // position; per-row replay feeds only the re-admitted rows and
+        // skips the residents (stats.replay_rows_skipped).
+        let (slots, prefix) = (8usize, 64usize);
+        let mut rows = Vec::new();
+        for &n in &[1usize, 2, 4] {
+            let per_row = prefix * n;
+            let full_batch = prefix * slots;
+            assert!(per_row <= full_batch);
+            benchkit::json_note(
+                &format!("replay_dispatch/imports={n}/row_steps_full_batch"),
+                full_batch as f64,
+            );
+            benchkit::json_note(
+                &format!("replay_dispatch/imports={n}/row_steps_per_row"),
+                per_row as f64,
+            );
+            rows.push(vec![
+                n.to_string(),
+                (slots - n).to_string(),
+                full_batch.to_string(),
+                per_row.to_string(),
+                format!("{:.1}%", 100.0 * (full_batch - per_row) as f64 / full_batch as f64),
+            ]);
+        }
+        benchkit::table(
+            &["imports", "residents", "row-steps full-batch", "row-steps per-row", "saved"],
+            &rows,
         );
     }
 

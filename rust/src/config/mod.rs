@@ -44,7 +44,7 @@ pub use self::toml::{TomlDoc, TomlValue};
 use crate::broker::Policy;
 use crate::data::task::{RewardCfg, TaskKind};
 use crate::rl::AdvantageMode;
-use crate::sched::{AutoScaleCfg, PreemptPolicy, SchedPolicy};
+use crate::sched::{AutoScaleCfg, KvLayout, PreemptPolicy, SchedPolicy};
 use anyhow::{bail, Result};
 
 /// Training mode (paper §2.2 vs §4; see the module docs for the
@@ -190,6 +190,13 @@ pub struct KvConfig {
     /// preemptees) are admitted min(waiting, batch, slots) at a time so
     /// one KV replay covers the batch; 1 = legacy admit-eagerly
     pub replay_batch: usize,
+    /// device-side cache layout: "dense" keeps the legacy per-slot
+    /// `[L, 2, B, max_seq, H, hd]` tensor; "paged" runs the
+    /// `decode_paged` graph against the block pool with per-row block
+    /// tables, so the allocator's paged accounting (sharing, preemption)
+    /// is realized in device memory. Dense stays the default until paged
+    /// parity is proven on the target runtime.
+    pub layout: KvLayout,
 }
 
 impl Default for KvConfig {
@@ -199,6 +206,7 @@ impl Default for KvConfig {
             overcommit: 1.0,
             preempt: PreemptPolicy::None,
             replay_batch: 4,
+            layout: KvLayout::Dense,
         }
     }
 }
@@ -438,6 +446,10 @@ impl RunConfig {
         let Some(preempt) = PreemptPolicy::parse(&preempt_name) else {
             bail!("unknown kv.preempt_policy {preempt_name:?} (none | youngest)");
         };
+        let layout_name = doc.str_or("kv.layout", d.kv.layout.name())?;
+        let Some(kv_layout) = KvLayout::parse(&layout_name) else {
+            bail!("unknown kv.layout {layout_name:?} (dense | paged)");
+        };
         let da = &d.autoscale;
         Ok(RunConfig {
             variant: doc.str_or("run.variant", &d.variant)?,
@@ -481,6 +493,7 @@ impl RunConfig {
                 overcommit: doc.f64_or("kv.overcommit", d.kv.overcommit)?,
                 preempt,
                 replay_batch: doc.usize_or("kv.replay_batch", d.kv.replay_batch)?,
+                layout: kv_layout,
             },
             autoscale: AutoScaleCfg {
                 enabled: doc.bool_or("autoscale.enabled", da.enabled)?,
@@ -578,11 +591,12 @@ impl RunConfig {
         let _ = writeln!(s, "[sched]\npolicy = \"{}\"", self.sched.name());
         let _ = writeln!(
             s,
-            "[kv]\nblock_size = {}\novercommit = {}\npreempt_policy = \"{}\"\nreplay_batch = {}",
+            "[kv]\nblock_size = {}\novercommit = {}\npreempt_policy = \"{}\"\nreplay_batch = {}\nlayout = \"{}\"",
             self.kv.block_size,
             self.kv.overcommit,
             self.kv.preempt.name(),
-            self.kv.replay_batch
+            self.kv.replay_batch,
+            self.kv.layout.name()
         );
         let _ = writeln!(
             s,
@@ -1019,6 +1033,7 @@ mod tests {
             overcommit = 2.5
             preempt_policy = "youngest"
             replay_batch = 6
+            layout = "paged"
             "#,
         )
         .unwrap();
@@ -1027,19 +1042,24 @@ mod tests {
         assert_eq!(cfg.kv.overcommit, 2.5);
         assert_eq!(cfg.kv.preempt, PreemptPolicy::Youngest);
         assert_eq!(cfg.kv.replay_batch, 6);
+        assert_eq!(cfg.kv.layout, KvLayout::Paged);
         cfg.validate().unwrap();
-        // defaults: exact pool, no preemption, coalescing on
+        // defaults: exact pool, no preemption, coalescing on, dense cache
         let d = RunConfig::default();
         assert_eq!(d.kv.block_size, 16);
         assert_eq!(d.kv.overcommit, 1.0);
         assert_eq!(d.kv.preempt, PreemptPolicy::None);
         assert_eq!(d.kv.replay_batch, 4);
+        assert_eq!(d.kv.layout, KvLayout::Dense);
     }
 
     #[test]
     fn kv_validation_rules() {
         let doc = TomlDoc::parse("[kv]\npreempt_policy = \"oldest\"").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err(), "unknown victim rule refused");
+
+        let doc = TomlDoc::parse("[kv]\nlayout = \"ragged\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "unknown cache layout refused");
 
         let mut cfg = RunConfig::default();
         cfg.kv.block_size = 0;
@@ -1127,6 +1147,7 @@ mod tests {
             cfg.kv.overcommit = (1 + c.rng.below(80)) as f64 / 16.0;
             cfg.kv.preempt = *c.rng.choice(&[PreemptPolicy::None, PreemptPolicy::Youngest]);
             cfg.kv.replay_batch = c.usize_in(1, 12);
+            cfg.kv.layout = *c.rng.choice(&[KvLayout::Dense, KvLayout::Paged]);
             cfg.checkpoint.every = c.usize_in(0, 9);
             cfg.checkpoint.keep_last = c.usize_in(0, 5);
             cfg.checkpoint.write_retries = c.usize_in(0, 4);

@@ -114,8 +114,9 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
     ecfg.temperature = cfg.temperature as f32;
     ecfg.max_new_tokens = cfg.max_new_tokens;
     ecfg.sched = cfg.sched;
-    // `[kv]`: paged-memory layer — block granularity, oversubscription,
-    // block-pressure preemption, coalesced replay
+    // `[kv]`: paged-memory layer — device layout, block granularity,
+    // oversubscription, block-pressure preemption, coalesced replay
+    ecfg.kv_layout = cfg.kv.layout;
     ecfg.block_size = cfg.kv.block_size;
     ecfg.overcommit = cfg.kv.overcommit;
     ecfg.preempt = cfg.kv.preempt;

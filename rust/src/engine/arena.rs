@@ -53,6 +53,18 @@ pub struct StepArena {
     /// write against the allocator's block tables (block-table-aware
     /// staging)
     pub cap: Vec<usize>,
+    /// paged-layout lanes (empty until `enable_paged`): the `[B, NB]`
+    /// block-table operand row-major, and the per-row CoW copy lanes.
+    /// Idle table entries and copy-free rows point at the pool's trash
+    /// block, so the graph's unconditional gather/copy is a harmless
+    /// self-write there.
+    pub table: Vec<i32>,
+    pub copy_src: Vec<i32>,
+    pub copy_dst: Vec<i32>,
+    /// blocks per row (NB) when paged, 0 when dense
+    blocks_per_row: usize,
+    /// the pool's sacrificial trailing block index
+    trash: i32,
     temp: f32,
 }
 
@@ -65,6 +77,14 @@ pub struct StepLiterals {
     pub ftok: Literal,
     pub fmask: Literal,
     pub temp: Literal,
+}
+
+/// The paged graph's extra operands, in `decode_paged` order (between
+/// the pool and `pos`): block table `[B, NB]`, then the CoW copy lanes.
+pub struct PagedLanes {
+    pub table: Literal,
+    pub copy_src: Literal,
+    pub copy_dst: Literal,
 }
 
 impl StepArena {
@@ -82,8 +102,29 @@ impl StepArena {
             fmask: vec![1.0; b],
             gumbel: vec![0.0; b * vocab],
             cap: vec![0; b],
+            table: Vec::new(),
+            copy_src: Vec::new(),
+            copy_dst: Vec::new(),
+            blocks_per_row: 0,
+            trash: 0,
             temp,
         }
+    }
+
+    /// Switch the arena to the paged layout: size the `[B, NB]`
+    /// block-table lane and the per-row copy lanes, all parked at the
+    /// pool's `trash` block. Call once right after construction; the
+    /// dense lanes keep working unchanged.
+    pub fn enable_paged(&mut self, blocks_per_row: usize, trash: i32) {
+        self.blocks_per_row = blocks_per_row;
+        self.trash = trash;
+        self.table = vec![trash; self.b * blocks_per_row];
+        self.copy_src = vec![trash; self.b];
+        self.copy_dst = vec![trash; self.b];
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.blocks_per_row > 0
     }
 
     pub fn batch(&self) -> usize {
@@ -103,6 +144,10 @@ impl StepArena {
         self.ftok.iter_mut().for_each(|x| *x = self.pad);
         self.fmask.iter_mut().for_each(|x| *x = 1.0);
         self.cap.iter_mut().for_each(|x| *x = 0);
+        let trash = self.trash;
+        self.table.iter_mut().for_each(|x| *x = trash);
+        self.copy_src.iter_mut().for_each(|x| *x = trash);
+        self.copy_dst.iter_mut().for_each(|x| *x = trash);
     }
 
     /// Zero the noise buffer (greedy decoding / replay).
@@ -128,6 +173,35 @@ impl StepArena {
                 self.fmask[i] = 0.0;
             }
         }
+    }
+
+    /// The mutable `[NB]` block-table lane of one row — the engine hands
+    /// this straight to `BlockAllocator::fill_table`.
+    pub fn row_table(&mut self, i: usize) -> &mut [i32] {
+        let nb = self.blocks_per_row;
+        &mut self.table[i * nb..(i + 1) * nb]
+    }
+
+    /// Stage one row's copy-on-write: the paged graph copies
+    /// `pool[copy_src]` into `pool[copy_dst]` before the layer loop. Rows
+    /// without a fork stay trash -> trash (a self-write no real block
+    /// observes).
+    pub fn set_copy(&mut self, i: usize, src: i32, dst: i32) {
+        self.copy_src[i] = src;
+        self.copy_dst[i] = dst;
+    }
+
+    /// Build the paged graph's extra input literals: block table
+    /// `[B, NB]`, copy lanes `[B]`.
+    pub fn paged_literals(&self) -> Result<PagedLanes> {
+        debug_assert!(self.is_paged(), "enable_paged first");
+        let b = self.b as i64;
+        let nb = self.blocks_per_row as i64;
+        Ok(PagedLanes {
+            table: Literal::vec1(&self.table).reshape(&[b, nb])?,
+            copy_src: Literal::vec1(&self.copy_src),
+            copy_dst: Literal::vec1(&self.copy_dst),
+        })
     }
 
     /// Build the step's input literals from the arena buffers. Shapes are
@@ -167,6 +241,27 @@ mod tests {
         assert_eq!(a.ftok, vec![-7, -7, -7]);
         assert_eq!(a.fmask, vec![1.0, 1.0, 1.0]);
         assert_eq!(a.cap, vec![0, 0, 0], "reset clears the staging capacities");
+    }
+
+    #[test]
+    fn paged_lanes_default_to_trash_and_reset_clean() {
+        let mut a = StepArena::new(2, 4, 0, 1.0, 95);
+        assert!(!a.is_paged());
+        a.enable_paged(3, 24);
+        assert!(a.is_paged());
+        assert_eq!(a.table, vec![24; 6], "idle tables park every entry at trash");
+        assert_eq!(a.copy_src, vec![24, 24]);
+        a.row_table(1).copy_from_slice(&[0, 5, 24]);
+        a.set_copy(1, 5, 7);
+        assert_eq!(a.table, vec![24, 24, 24, 0, 5, 24], "row 0 untouched");
+        assert_eq!((a.copy_src[1], a.copy_dst[1]), (5, 7));
+        let lanes = a.paged_literals().unwrap();
+        assert_eq!(lanes.table.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(lanes.copy_src.array_shape().unwrap().dims(), &[2]);
+        a.reset();
+        assert_eq!(a.table, vec![24; 6], "reset re-parks the table lane");
+        assert_eq!(a.copy_src, vec![24, 24]);
+        assert_eq!(a.copy_dst, vec![24, 24]);
     }
 
     #[test]

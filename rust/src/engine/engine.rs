@@ -11,9 +11,10 @@ use crate::data::task::Problem;
 use crate::model::tokenizer::{EOS_ID, PAD_ID};
 use crate::rl::Rollout;
 use crate::runtime::{
-    run_decode_step, DecodeInputs, DeviceVal, HostTensor, Runtime, StagePlan, Variant,
+    run_decode_step, run_decode_step_paged, DecodeInputs, DeviceVal, HostTensor, PagedInputs,
+    Runtime, StagePlan, TablePlan, Variant,
 };
-use crate::sched::{PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
+use crate::sched::{KvLayout, PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use crate::weights::ShadowSet;
@@ -28,6 +29,12 @@ pub struct EngineCfg {
     pub variant: String,
     pub temperature: f32,
     pub max_new_tokens: usize,
+    /// device cache layout (`[kv] layout`): Dense keeps the legacy
+    /// `[L, 2, B, Tmax, H, hd]` per-slot tensor and uses the block
+    /// allocator as an accounting model only; Paged runs the
+    /// `decode_paged` graph against the device block pool, with the
+    /// allocator's tables shipped as a real graph operand every step
+    pub kv_layout: KvLayout,
     /// KV page size for the block allocator
     pub block_size: usize,
     /// total KV blocks; None = sized from `overcommit`
@@ -67,6 +74,7 @@ impl EngineCfg {
             variant: variant.to_string(),
             temperature: 1.0,
             max_new_tokens: 48,
+            kv_layout: KvLayout::Dense,
             block_size: 16,
             kv_blocks: None,
             overcommit: 1.0,
@@ -98,8 +106,20 @@ pub struct EngineStats {
     pub snapshots_exported: u64,
     /// snapshots imported from another engine (migration adoptions)
     pub snapshots_imported: u64,
-    /// full KV replays triggered by admitting an imported prefix
+    /// replay passes triggered by admitting an imported/parked prefix
     pub import_replays: u64,
+    /// per-row replay: slots whose KV was actually rebuilt by a replay
+    /// pass (admitted imports/preemptees, or every active slot under the
+    /// §5.1 full recompute)
+    pub replay_rows_rebuilt: u64,
+    /// per-row replay: active slots a replay pass left untouched because
+    /// their device KV was already resident (the work the legacy
+    /// full-batch replay redid every time)
+    pub replay_rows_skipped: u64,
+    /// gauge, refreshed every step: distinct physical KV blocks the
+    /// allocator currently holds (== device pool blocks in use when the
+    /// paged layout is active)
+    pub kv_device_blocks_in_use: u64,
     // ---- §Perf breakdown (accumulated microseconds) ----
     /// building + staging the per-step inputs (arena → device)
     pub stage_us: u64,
@@ -201,8 +221,27 @@ impl Engine {
     ) -> Result<Engine> {
         let variant = rt.manifest.variant(&cfg.variant)?.clone();
         crate::runtime::check_params(&variant, init_params)?;
-        let graph = rt.graph(&cfg.variant, "decode")?;
-        let kv = DeviceVal::Lit(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?);
+        let paged = cfg.kv_layout == KvLayout::Paged;
+        let graph = rt.graph(&cfg.variant, if paged { "decode_paged" } else { "decode" })?;
+        let kv = if paged {
+            ensure!(
+                variant.has_paged_pool(),
+                "variant '{}' carries no paged-pool geometry — rebuild the \
+                 artifacts (make artifacts) with an aot.py that lowers decode_paged",
+                cfg.variant
+            );
+            ensure!(
+                cfg.block_size == variant.kv_block_size,
+                "[kv] block_size {} does not match the compiled page size {} — \
+                 the block table is a graph operand, so the allocator must \
+                 account in graph pages",
+                cfg.block_size,
+                variant.kv_block_size
+            );
+            DeviceVal::Lit(HostTensor::zeros_f32(&variant.kv_pool_shape()).to_literal()?)
+        } else {
+            DeviceVal::Lit(HostTensor::zeros_f32(&variant.kv_shape()).to_literal()?)
+        };
         ensure!(
             cfg.overcommit > 0.0,
             "kv overcommit must be positive, got {}",
@@ -216,6 +255,18 @@ impl Engine {
                 BlockAllocator::new(n, cfg.block_size)
             }
         };
+        if paged {
+            // every allocatable block must be backed by a device pool
+            // block; the pool's trailing slot is the trash block and is
+            // never handed out
+            ensure!(
+                allocator.total_blocks() <= variant.kv_pool_blocks - 1,
+                "allocator wants {} KV blocks but the compiled pool backs only {} \
+                 (+1 trash) — lower [kv] kv_blocks/overcommit or recompile",
+                allocator.total_blocks(),
+                variant.kv_pool_blocks - 1
+            );
+        }
         let scheduler = cfg.sched.build_with_preempt(cfg.preempt);
         let b = variant.gen_batch;
         let v = variant.vocab;
@@ -223,7 +274,10 @@ impl Engine {
         // decode graph scatters at pos[b] for every row, and position 0
         // holds live BOS K/V (see arena module docs)
         let park = (variant.max_seq - 1) as i32;
-        let arena = StepArena::new(b, v, PAD_ID, cfg.temperature, park);
+        let mut arena = StepArena::new(b, v, PAD_ID, cfg.temperature, park);
+        if paged {
+            arena.enable_paged(variant.kv_blocks_per_row, (variant.kv_pool_blocks - 1) as i32);
+        }
         let mut eng = Engine {
             cfg,
             slots: (0..b).map(|_| None).collect(),
@@ -586,10 +640,11 @@ impl Engine {
     // ---------------- decode loop ----------------
 
     /// Admit pending sequences into free slots (in-flight adds), one
-    /// scheduler pick per free slot. Returns true when any admitted
-    /// sequence carries progress made elsewhere (an imported snapshot or
-    /// a parked preemptee), i.e. its KV prefix must be replayed before
-    /// the next decode step.
+    /// scheduler pick per free slot. Returns the slot indices of admitted
+    /// sequences that carry progress made elsewhere (imported snapshots
+    /// or parked preemptees), i.e. exactly the rows whose KV prefix must
+    /// be replayed before the next decode step — resident neighbors stay
+    /// out of the replay (per-row replay).
     ///
     /// **Coalesced replay**: every admitted pos>0 sequence forces the
     /// same full-batch `recompute_kv` pass, so N of them trickling into
@@ -605,11 +660,11 @@ impl Engine {
     /// allocating G copies; the gate the scheduler consults is
     /// share-aware, so a group member can be admissible when a
     /// same-length stranger is not.
-    fn admit(&mut self) -> bool {
-        let mut needs_replay = false;
+    fn admit(&mut self) -> Vec<usize> {
+        let mut replay_slots = Vec::new();
         let free_slots = self.slots.iter().filter(|s| s.is_none()).count();
         if free_slots == 0 || self.pending.is_empty() {
-            return false;
+            return replay_slots;
         }
         let waiting_replay = self.pending.iter().filter(|s| s.pos > 0).count();
         if !replay_window_open(
@@ -618,7 +673,7 @@ impl Engine {
             self.cfg.replay_batch,
             self.slots.len(),
         ) {
-            return false; // hold the slots for the coalesced batch
+            return replay_slots; // hold the slots for the coalesced batch
         }
         let mut views_built = false;
         for i in 0..self.slots.len() {
@@ -632,7 +687,9 @@ impl Engine {
                 // built once per admit() into the reusable buffer, kept
                 // in sync with `pending` as picks are removed below
                 self.view_buf.clear();
-                self.view_buf.extend(self.pending.iter().map(|s| s.view()));
+                let bs = self.cfg.block_size;
+                self.view_buf
+                    .extend(self.pending.iter().map(|s| s.view(s.total_len().div_ceil(bs))));
                 views_built = true;
             }
             let allocator = &self.allocator;
@@ -662,12 +719,12 @@ impl Engine {
                     .expect("scheduler picked an admissible sequence");
             }
             if seq.pos > 0 {
-                needs_replay = true;
+                replay_slots.push(i);
             }
             self.slots[i] = Some(seq);
             self.stalled[i] = false;
         }
-        needs_replay
+        replay_slots
     }
 
     /// Block pressure on slot `i`: ask the scheduler for victims to park
@@ -678,10 +735,23 @@ impl Engine {
         loop {
             let mut slot_of = Vec::new();
             let mut views = Vec::new();
+            let paged = self.arena.is_paged();
             for (slot, s) in self.slots.iter().enumerate() {
                 if let Some(s) = s {
+                    // block bill the victim rule weighs: under the paged
+                    // layout the allocator's share-aware private count
+                    // (parking a mostly-shared group member loses less
+                    // resident KV); dense keeps the worst-case fill,
+                    // which is order-equivalent to the legacy tie-break
+                    let kvb = if paged {
+                        self.allocator.private_blocks(s.seq_id).unwrap_or_else(|| {
+                            s.total_len().div_ceil(self.cfg.block_size)
+                        })
+                    } else {
+                        s.total_len().div_ceil(self.cfg.block_size)
+                    };
                     slot_of.push(slot);
-                    views.push(s.view());
+                    views.push(s.view(kvb));
                 }
             }
             if views.len() <= 1 {
@@ -729,19 +799,21 @@ impl Engine {
 
     /// One decode step for every busy slot. Returns finished rollouts.
     pub fn step(&mut self) -> Result<StepOutcome> {
-        let needs_replay = self.admit();
+        let replay_slots = self.admit();
         let b = self.variant.gen_batch;
         let vsz = self.variant.vocab;
         if self.n_active() == 0 {
             return Ok(StepOutcome { idle: true, ..Default::default() });
         }
-        if needs_replay {
+        if !replay_slots.is_empty() {
             // a migrated prefix has no KV on this device: rebuild it via
-            // the replay path before decoding. The replay covers every
-            // active slot (same semantics as the §5.1 recompute), so
-            // healthy neighbors come out with KV under current weights.
+            // the replay path before decoding. Per-row replay — only the
+            // just-admitted rows are re-fed; resident neighbors keep
+            // their device KV instead of being redundantly rebuilt (the
+            // §5.1 ablation still goes through the full-batch
+            // `recompute_kv`, whose point is refreshing everyone).
             self.stats.import_replays += 1;
-            self.recompute_kv()?;
+            self.recompute_rows(&replay_slots, false)?;
         }
 
         // KV growth check: a slot whose next token needs a new block (or
@@ -750,12 +822,23 @@ impl Engine {
         // victim to park (blocks freed through the snapshot path, vLLM's
         // preempt/swap) so the rest keep moving; without one the slot
         // stalls in place (legacy).
+        let paged = self.arena.is_paged();
+        // CoW forks surfaced by this step's growth, to be staged into the
+        // copy lanes *after* `arena.reset()` below (which re-parks them)
+        let mut forks: Vec<(usize, u32, u32)> = Vec::new();
         for i in 0..b {
             let Some(s) = &self.slots[i] else { continue };
             let (sid, need) = (s.seq_id, s.pos + 1);
             let mut ok = self.allocator.grow(sid, need).unwrap_or(false);
             if !ok {
                 ok = self.preempt_for_growth(i)?;
+            }
+            if paged {
+                // the device copy must ride the same dispatch that first
+                // uses the forked table, so capture it here per-row
+                if let Some((old, new)) = self.allocator.take_last_fork() {
+                    forks.push((i, old, new));
+                }
             }
             if self.slots[i].is_none() {
                 continue; // the starved sequence itself was parked
@@ -765,6 +848,7 @@ impl Engine {
                 self.stats.stall_steps += 1;
             }
         }
+        self.stats.kv_device_blocks_in_use = self.allocator.held_blocks() as u64;
         if self.n_active() == 0 {
             // preemption can park the last active sequence; it waits in
             // pending for the coalesced re-admission
@@ -786,6 +870,24 @@ impl Engine {
                 self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next(), cap);
             }
         }
+        if paged {
+            // ship the allocator's tables as this step's block-table
+            // operand (occupied rows only — reset just re-parked the
+            // rest at trash), then stage the CoW copy lanes captured by
+            // the growth loop. A fork whose row was parked meanwhile is
+            // dropped: its blocks went back to the free pool.
+            let trash = (self.variant.kv_pool_blocks - 1) as i32;
+            for i in 0..b {
+                if let Some(s) = &self.slots[i] {
+                    self.allocator.fill_table(s.seq_id, self.arena.row_table(i), trash);
+                }
+            }
+            for &(i, old, new) in &forks {
+                if self.slots[i].is_some() {
+                    self.arena.set_copy(i, old as i32, new as i32);
+                }
+            }
+        }
         if self.cfg.greedy {
             self.arena.zero_gumbel();
         } else {
@@ -794,29 +896,49 @@ impl Engine {
         // `lits` lives past the dispatch: staging inside run_decode_step
         // is asynchronous and reads from these literals
         let lits = self.arena.to_literals()?;
+        let lanes = if paged { Some(self.arena.paged_literals()?) } else { None };
         self.stats.stage_us += t_arena.elapsed().as_micros() as u64;
 
         let param_bufs: Vec<&PjRtBuffer> =
             self.params.active().iter().map(|p| &p.buf).collect();
-        let d = run_decode_step(
-            &self.graph,
-            &param_bufs,
-            &mut self.kv,
-            DecodeInputs {
-                pos: &lits.pos,
-                cur: &lits.cur,
-                gumbel: &lits.gumbel,
-                ftok: &lits.ftok,
-                fmask: &lits.fmask,
-                temp: &lits.temp,
-            },
-            Some(&StagePlan {
-                park: (self.variant.max_seq - 1) as i32,
-                pos: &self.arena.pos,
-                cap: &self.arena.cap,
-            }),
-        )
-        .context("decode step")?;
+        let inputs = DecodeInputs {
+            pos: &lits.pos,
+            cur: &lits.cur,
+            gumbel: &lits.gumbel,
+            ftok: &lits.ftok,
+            fmask: &lits.fmask,
+            temp: &lits.temp,
+        };
+        let plan = StagePlan {
+            park: (self.variant.max_seq - 1) as i32,
+            pos: &self.arena.pos,
+            cap: &self.arena.cap,
+        };
+        let d = match &lanes {
+            Some(lanes) => run_decode_step_paged(
+                &self.graph,
+                &param_bufs,
+                &mut self.kv,
+                PagedInputs {
+                    table: &lanes.table,
+                    copy_src: &lanes.copy_src,
+                    copy_dst: &lanes.copy_dst,
+                },
+                inputs,
+                Some(&plan),
+                Some(&TablePlan {
+                    block_size: self.cfg.block_size,
+                    blocks_per_row: self.variant.kv_blocks_per_row,
+                    pool_blocks: self.variant.kv_pool_blocks,
+                    table: &self.arena.table,
+                    copy_src: &self.arena.copy_src,
+                    copy_dst: &self.arena.copy_dst,
+                }),
+            )
+            .context("paged decode step")?,
+            None => run_decode_step(&self.graph, &param_bufs, &mut self.kv, inputs, Some(&plan))
+                .context("decode step")?,
+        };
         drop(param_bufs);
         self.stats.stage_us += d.stage_us;
         self.stats.execute_us += d.execute_us;
@@ -888,26 +1010,57 @@ impl Engine {
 
     /// Rebuild the KV cache for all active sequences under the current
     /// weights by force-replaying their streams (Fig 7 "KV cache
-    /// recomputed" mode; also the snapshot-import path). Does not touch
-    /// sequence state or stats other than recompute counters. Cold path:
-    /// the per-position dispatch goes through the same `run_decode_step`
-    /// helper as the hot loop, with the loop-invariant literals hoisted
-    /// and the index vectors reused across positions.
+    /// recomputed" mode — the §5.1 ablation, whose whole point is
+    /// refreshing *every* row, so this zeroes the cache and replays the
+    /// full batch).
     fn recompute_kv(&mut self) -> Result<()> {
+        let rows: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_some())
+            .collect();
+        self.recompute_rows(&rows, true)
+    }
+
+    /// Replay the token streams of `rows` (slot indices) to rebuild their
+    /// KV, leaving every other active slot's resident KV untouched —
+    /// the per-row replay behind snapshot imports and preemptee
+    /// re-admission. Does not touch sequence state or stats other than
+    /// replay counters. Cold path: the per-position dispatch goes through
+    /// the same decode-step helpers as the hot loop, with the
+    /// loop-invariant literals hoisted and the index vectors reused
+    /// across positions.
+    ///
+    /// `zero_first` reseeds the cache with zeros before replaying (the
+    /// full-batch recompute). The per-row path keeps the cache: a
+    /// rebuilt row overwrites exactly its live prefix `0..pos-1`, and
+    /// whatever stale data sits at positions `>= pos` (the slot's
+    /// previous occupant, or the row's own pre-park tail) is never
+    /// attended — attention at position p reads `0..=p` only.
+    fn recompute_rows(&mut self, rows: &[usize], zero_first: bool) -> Result<()> {
         let b = self.variant.gen_batch;
         let vsz = self.variant.vocab;
-        self.kv = DeviceVal::Lit(HostTensor::zeros_f32(&self.variant.kv_shape()).to_literal()?);
-        let max_pos = self
-            .slots
+        let paged = self.arena.is_paged();
+        if zero_first {
+            let shape =
+                if paged { self.variant.kv_pool_shape() } else { self.variant.kv_shape() };
+            self.kv = DeviceVal::Lit(HostTensor::zeros_f32(&shape).to_literal()?);
+        }
+        let mut rebuild = vec![false; b];
+        for &i in rows {
+            rebuild[i] = true;
+        }
+        let n_active = self.slots.iter().filter(|s| s.is_some()).count();
+        self.stats.replay_rows_rebuilt += rows.len() as u64;
+        self.stats.replay_rows_skipped += (n_active - rows.len()) as u64;
+        let max_pos = rows
             .iter()
-            .flatten()
+            .filter_map(|&i| self.slots[i].as_ref())
             .map(|s| s.pos)
             .max()
             .unwrap_or(0);
         if max_pos == 0 {
-            // nothing written yet anywhere: the zeroed cache *is* the
-            // rebuilt state, and with no dispatch the param sources must
-            // stay alive for the next consuming execute
+            // nothing to re-feed: the cache as it stands *is* the rebuilt
+            // state, and with no dispatch the param sources must stay
+            // alive for the next consuming execute
             self.stats.kv_recomputes += 1;
             return Ok(());
         }
@@ -934,18 +1087,41 @@ impl Engine {
         let caps: Vec<usize> = self
             .slots
             .iter()
-            .map(|slot| {
+            .enumerate()
+            .map(|(i, slot)| {
+                if !rebuild[i] {
+                    return 0; // parked for the whole replay
+                }
                 slot.as_ref()
                     .and_then(|s| self.allocator.capacity_tokens(s.seq_id))
                     .unwrap_or(0)
             })
             .collect();
+        // paged: the rebuilt rows' block tables are loop-invariant too
+        // (no growth happens mid-replay), staged once via the arena.
+        // Skipped rows keep trash tables — their parked scatter lands in
+        // the trash block instead of touching their resident KV.
+        let lanes = if paged {
+            self.arena.reset();
+            let trash = (self.variant.kv_pool_blocks - 1) as i32;
+            for i in 0..b {
+                if !rebuild[i] {
+                    continue;
+                }
+                if let Some(s) = &self.slots[i] {
+                    self.allocator.fill_table(s.seq_id, self.arena.row_table(i), trash);
+                }
+            }
+            Some(self.arena.paged_literals()?)
+        } else {
+            None
+        };
         for p in 0..max_pos {
             pos.iter_mut().for_each(|x| *x = park);
             cur.iter_mut().for_each(|x| *x = PAD_ID);
             for (i, slot) in self.slots.iter().enumerate() {
                 if let Some(s) = slot {
-                    if p < s.pos {
+                    if rebuild[i] && p < s.pos {
                         pos[i] = p as i32;
                         cur[i] = s.stream[p];
                     }
@@ -955,20 +1131,40 @@ impl Engine {
             let cur_l = Literal::vec1(&cur);
             let param_bufs: Vec<&PjRtBuffer> =
                 self.params.active().iter().map(|sp| &sp.buf).collect();
-            let d = run_decode_step(
-                &self.graph,
-                &param_bufs,
-                &mut self.kv,
-                DecodeInputs {
-                    pos: &pos_l,
-                    cur: &cur_l,
-                    gumbel: &zero_gum,
-                    ftok: &ftok_l,
-                    fmask: &fmask_l,
-                    temp: &temp_l,
-                },
-                Some(&StagePlan { park, pos: &pos, cap: &caps }),
-            )?;
+            let inputs = DecodeInputs {
+                pos: &pos_l,
+                cur: &cur_l,
+                gumbel: &zero_gum,
+                ftok: &ftok_l,
+                fmask: &fmask_l,
+                temp: &temp_l,
+            };
+            let plan = StagePlan { park, pos: &pos, cap: &caps };
+            let d = match &lanes {
+                Some(lanes) => run_decode_step_paged(
+                    &self.graph,
+                    &param_bufs,
+                    &mut self.kv,
+                    PagedInputs {
+                        table: &lanes.table,
+                        copy_src: &lanes.copy_src,
+                        copy_dst: &lanes.copy_dst,
+                    },
+                    inputs,
+                    Some(&plan),
+                    Some(&TablePlan {
+                        block_size: self.cfg.block_size,
+                        blocks_per_row: self.variant.kv_blocks_per_row,
+                        pool_blocks: self.variant.kv_pool_blocks,
+                        table: &self.arena.table,
+                        copy_src: &self.arena.copy_src,
+                        copy_dst: &self.arena.copy_dst,
+                    }),
+                )?,
+                None => {
+                    run_decode_step(&self.graph, &param_bufs, &mut self.kv, inputs, Some(&plan))?
+                }
+            };
             drop(param_bufs);
             if d.kv_restaged {
                 self.stats.kv_restages += 1;

@@ -2,15 +2,20 @@
 //! (vLLM's PagedAttention bookkeeping, upgraded from per-sequence block
 //! tables to a shared-block economy).
 //!
-//! The device-side cache of the AOT decode graph is dense per slot, so
-//! physically every sequence owns its own cache plane; this allocator is
-//! the *admission-capacity model* layered on top, and it works exactly
-//! like vLLM's: the cache is divided into fixed-size blocks, a sequence
-//! references ceil(len / block_size) blocks, and a request is admitted
-//! only when a slot *and* enough blocks are available. With an
-//! over-committed pool (`[kv] overcommit`) this throttles admission and
-//! growth exactly like a full HBM — which is what lets one actor run far
-//! more concurrent long rollouts per GPU than the worst case would allow
+//! The cache is divided into fixed-size blocks, a sequence references
+//! ceil(len / block_size) blocks, and a request is admitted only when a
+//! slot *and* enough blocks are available. Under the default dense device
+//! layout (`[kv] layout = "dense"`) every slot physically owns a full
+//! `max_seq` cache plane and this allocator is purely the
+//! *admission-capacity model* layered on top; under the paged layout the
+//! same tables are **real device addresses**: the engine exports them
+//! with [`BlockAllocator::fill_table`] into the `decode_paged` graph's
+//! per-row block-table operand, so the block ids here index the device
+//! pool `[n_blocks, L, 2, block_size, H, hd]` directly and a freed or
+//! shared block is freed/shared in HBM, not just in the books. With an
+//! over-committed pool (`[kv] overcommit`) admission and growth throttle
+//! exactly like a full HBM — which is what lets one actor run far more
+//! concurrent long rollouts per GPU than the worst case would allow
 //! (paper §4: KV memory is the binding resource at saturation).
 //!
 //! **Prefix sharing.** The G members of a GRPO group decode the same
@@ -83,6 +88,11 @@ pub struct BlockAllocator {
     cow_forks: u64,
     /// admissions that reused a registered prefix
     shared_admits: u64,
+    /// (old, new) physical blocks of the fork performed by the most
+    /// recent `grow` call, if any — the paged engine drains this into the
+    /// decode graph's copy_src/copy_dst lanes so the device pool performs
+    /// the same copy-on-write the books just recorded
+    last_fork: Option<(u32, u32)>,
 }
 
 impl BlockAllocator {
@@ -98,6 +108,7 @@ impl BlockAllocator {
             block_home: HashMap::new(),
             cow_forks: 0,
             shared_admits: 0,
+            last_fork: None,
         }
     }
 
@@ -267,6 +278,7 @@ impl BlockAllocator {
     /// growth — the block-pressure signal the engine forwards to the
     /// scheduler's preemption hook (vLLM would preempt/swap here too).
     pub fn grow(&mut self, seq_id: u64, new_len: usize) -> Result<bool> {
+        self.last_fork = None;
         let Some(sb) = self.tables.get(&seq_id) else {
             bail!("grow on unknown sequence {seq_id}");
         };
@@ -291,6 +303,7 @@ impl BlockAllocator {
             let old = std::mem::replace(&mut sb.table[widx], nb);
             self.dec_ref(old);
             self.cow_forks += 1;
+            self.last_fork = Some((old, nb));
         } else if divergent
             && !self.block_home.is_empty()
             && widx < self.tables[&seq_id].table.len()
@@ -330,6 +343,37 @@ impl BlockAllocator {
     /// The block table of a live sequence (for tests/inspection).
     pub fn table(&self, seq_id: u64) -> Option<&[u32]> {
         self.tables.get(&seq_id).map(|t| t.table.as_slice())
+    }
+
+    /// Take the (old, new) block pair of the fork performed by the most
+    /// recent `grow` call, if it forked. The paged engine drains this
+    /// per step into the decode graph's copy_src/copy_dst operands so
+    /// the device pool copies the shared block before the divergent
+    /// write lands.
+    pub fn take_last_fork(&mut self) -> Option<(u32, u32)> {
+        self.last_fork.take()
+    }
+
+    /// Blocks in the sequence's table held by it alone (refcount 1) —
+    /// the number of physical blocks its eviction would actually free,
+    /// and the share-aware `SeqView::kv_blocks` cost signal the paged
+    /// engine feeds the preemption victim rule.
+    pub fn private_blocks(&self, seq_id: u64) -> Option<usize> {
+        self.tables
+            .get(&seq_id)
+            .map(|t| t.table.iter().filter(|&&b| self.refs[b as usize] == 1).count())
+    }
+
+    /// Export a live sequence's block table into a device-literal lane:
+    /// real entries first, every remaining row slot pointed at `trash`
+    /// (the pool's sacrificial last block, where parked rows scatter).
+    /// An unknown `seq_id` fills the whole lane with `trash` — exactly
+    /// what an empty decode slot must present to the graph.
+    pub fn fill_table(&self, seq_id: u64, out: &mut [i32], trash: i32) {
+        let table = self.tables.get(&seq_id).map(|t| t.table.as_slice()).unwrap_or(&[]);
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = table.get(i).map(|&b| b as i32).unwrap_or(trash);
+        }
     }
 
     /// Invariant check used by the property tests: refcount conservation
@@ -509,6 +553,51 @@ mod tests {
             a.release(i as u64).unwrap();
         }
         assert_eq!(a.free_blocks(), 32);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_is_reported_for_the_device_copy_lanes() {
+        let (prompt, bs) = (6usize, 8usize); // partial block: divergence forks
+        let mut a = BlockAllocator::new(4, bs);
+        a.admit_shared(1, 9, prompt).unwrap();
+        a.admit_shared(2, 9, prompt).unwrap();
+        assert!(a.take_last_fork().is_none(), "nothing grew yet");
+        let shared = a.table(1).unwrap()[0];
+        assert!(a.grow(1, prompt + 1).unwrap());
+        let (old, new) = a.take_last_fork().expect("divergent write forked");
+        assert_eq!(old, shared, "copy source is the shared block");
+        assert_eq!(new, a.table(1).unwrap()[0], "copy target is the private copy");
+        assert!(a.take_last_fork().is_none(), "drained: a fork reports once");
+        // a fork-free grow must not resurrect the stale report
+        assert!(a.grow(1, bs + 1).unwrap());
+        assert!(a.take_last_fork().is_none());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fill_table_pads_with_trash_and_private_blocks_discount_sharing() {
+        let bs = 8usize;
+        let mut a = BlockAllocator::new(8, bs);
+        a.admit_shared(1, 5, 12).unwrap(); // 2 blocks, both shared
+        a.admit_shared(2, 5, 12).unwrap();
+        let trash = 7i32;
+        let mut lane = [0i32; 4];
+        a.fill_table(1, &mut lane, trash);
+        let t = a.table(1).unwrap().to_vec();
+        assert_eq!(&lane[..2], &[t[0] as i32, t[1] as i32]);
+        assert_eq!(&lane[2..], &[trash, trash], "unused row slots park at trash");
+        // unknown sequence = empty decode slot: the whole lane is parked
+        a.fill_table(99, &mut lane, trash);
+        assert_eq!(lane, [trash; 4]);
+        // fully shared tables free nothing on eviction...
+        assert_eq!(a.private_blocks(1), Some(0));
+        assert!(a.grow(1, 13).unwrap()); // divergent write -> CoW fork
+        assert_eq!(a.cow_forks(), 1);
+        // ...but the forked copy is a private block
+        assert_eq!(a.private_blocks(1), Some(1));
+        assert_eq!(a.private_blocks(2), Some(0));
+        assert_eq!(a.private_blocks(99), None);
         a.check_invariants().unwrap();
     }
 

@@ -22,11 +22,19 @@
 //!   over-committed pool (`[kv] overcommit`) throttles exactly like a
 //!   full HBM, and under block pressure the scheduler's preemption hook
 //!   parks a victim through the snapshot path (blocks freed, resumed via
-//!   a coalesced replay) instead of stalling the slot. The device-side
-//!   cache itself is a dense per-slot tensor (the AOT decode graph's
-//!   layout), so the allocator is the admission-capacity model — but its
-//!   block tables are enforced at dispatch time
-//!   (`runtime::StagePlan`);
+//!   a coalesced replay) instead of stalling the slot. Two device
+//!   layouts back the same accounting (`[kv] layout`): **dense** (the
+//!   default) keeps the legacy per-slot `[L, 2, B, Tmax, H, hd]` tensor,
+//!   with the allocator as the admission-capacity model and its tables
+//!   enforced at dispatch time (`runtime::StagePlan`); **paged** runs
+//!   the `decode_paged` graph against a device block *pool*
+//!   `[n_blocks, L, 2, block_size, H, hd]`, shipping the allocator's
+//!   block tables as a per-step graph operand (plus CoW copy lanes for
+//!   shared-prompt forks), so block indices are real device addresses —
+//!   validated per dispatch by `runtime::TablePlan`. Replays after a
+//!   park/import are **per-row**: only the re-admitted rows are re-fed
+//!   (`stats.replay_rows_skipped` counts the resident neighbors the
+//!   legacy full-batch replay would have redundantly rebuilt);
 //! * **in-flight weight updates** — eager ([`Engine::set_weights`]) or
 //!   overlapped ([`Engine::begin_weight_update`] /
 //!   [`Engine::stage_weight_tensor`] / [`Engine::commit_weights`]) swaps

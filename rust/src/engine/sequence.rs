@@ -79,13 +79,18 @@ impl SeqState {
     }
 
     /// Scheduler-facing view of this sequence — what admission picks and
-    /// preemption victim rules see (`sched::SeqView`).
-    pub fn view(&self) -> crate::sched::SeqView {
+    /// preemption victim rules see (`sched::SeqView`). `kv_blocks` is the
+    /// caller's allocator-side block bill for this sequence: the engine
+    /// passes `ceil(total_len / block_size)` for queued sequences and the
+    /// share-aware private-block count for seated ones, so the victim
+    /// rule sees the real eviction cost.
+    pub fn view(&self, kv_blocks: usize) -> crate::sched::SeqView {
         crate::sched::SeqView {
             seq_id: self.seq_id,
             group_id: self.group_id,
             total_len: self.total_len(),
             gen_len: self.gen_len(),
+            kv_blocks,
         }
     }
 

@@ -33,6 +33,15 @@ pub enum Dtype {
     I32,
 }
 
+/// One graph's cache-donation record: aot.py declares that the flat
+/// operand at `param` is returned at output tuple index `output` and is
+/// safe to update in place (`input_output_alias` in the lowered HLO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AliasSpec {
+    pub param: usize,
+    pub output: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct Variant {
     pub name: String,
@@ -46,6 +55,16 @@ pub struct Variant {
     pub seq_len: usize,
     pub vocab: usize,
     pub n_params: usize,
+    /// paged-pool geometry (0 when the manifest predates the paged
+    /// decode graph): page size in tokens, pages per row
+    /// (`max_seq / kv_block_size`), and total device pool blocks
+    /// including the trailing trash block
+    pub kv_block_size: usize,
+    pub kv_blocks_per_row: usize,
+    pub kv_pool_blocks: usize,
+    /// graph name -> donated cache operand record (empty for manifests
+    /// written before donation landed)
+    pub aliases: BTreeMap<String, AliasSpec>,
     pub params: Vec<ParamSpec>,
     pub artifacts: BTreeMap<String, String>,
     pub inputs: BTreeMap<String, Vec<IoSpec>>,
@@ -59,6 +78,30 @@ impl Variant {
 
     pub fn kv_shape(&self) -> Vec<usize> {
         vec![self.n_layers, 2, self.gen_batch, self.max_seq, self.n_heads, self.head_dim]
+    }
+
+    /// True when the manifest carries the paged-pool geometry (i.e. it
+    /// was written by an aot.py that lowers `decode_paged`).
+    pub fn has_paged_pool(&self) -> bool {
+        self.kv_block_size > 0 && self.kv_pool_blocks > 0
+    }
+
+    /// Paged pool tensor [n_blocks, L, 2, block_size, H, hd] — the
+    /// `decode_paged` cache operand. The last block index is the trash
+    /// block parked rows scatter into.
+    pub fn kv_pool_shape(&self) -> Vec<usize> {
+        vec![
+            self.kv_pool_blocks,
+            self.n_layers,
+            2,
+            self.kv_block_size,
+            self.n_heads,
+            self.head_dim,
+        ]
+    }
+
+    pub fn kv_pool_numel(&self) -> usize {
+        self.kv_pool_shape().iter().product()
     }
 }
 
@@ -145,6 +188,23 @@ fn parse_variant(name: &str, v: &Json) -> Result<Variant> {
             .collect::<Result<Vec<_>>>()?;
         inputs.insert(g.clone(), specs);
     }
+    // optional paged-pool fields: absent in manifests written before the
+    // paged decode graph, so their absence must not fail the parse
+    let opt_usize = |key: &str| -> Result<usize> {
+        v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(0))
+    };
+    let mut aliases = BTreeMap::new();
+    if let Some(a) = v.get("aliases") {
+        for (g, rec) in a.as_obj()? {
+            aliases.insert(
+                g.clone(),
+                AliasSpec {
+                    param: rec.req("param")?.as_usize()?,
+                    output: rec.req("output")?.as_usize()?,
+                },
+            );
+        }
+    }
     Ok(Variant {
         name: name.to_string(),
         d_model: v.req("d_model")?.as_usize()?,
@@ -157,6 +217,10 @@ fn parse_variant(name: &str, v: &Json) -> Result<Variant> {
         seq_len: v.req("seq_len")?.as_usize()?,
         vocab: v.req("vocab")?.as_usize()?,
         n_params: v.req("n_params")?.as_usize()?,
+        kv_block_size: opt_usize("kv_block_size")?,
+        kv_blocks_per_row: opt_usize("kv_blocks_per_row")?,
+        kv_pool_blocks: opt_usize("kv_pool_blocks")?,
+        aliases,
         params,
         artifacts,
         inputs,
@@ -204,6 +268,34 @@ mod tests {
         assert_eq!(v.kv_shape(), vec![2, 2, 4, 96, 2, 16]);
         assert_eq!(v.inputs["decode"][0].dtype, Dtype::I32);
         assert_eq!(m.metric_index("ess"), Some(1));
+        // pre-paged manifest: geometry absent, not a parse error
+        assert!(!v.has_paged_pool());
+        assert!(v.aliases.is_empty());
+    }
+
+    #[test]
+    fn parses_paged_pool_fields() {
+        // the same variant as aot.py now writes it: pool geometry plus
+        // the cache-donation records for both decode graphs
+        let text = SNIPPET.replace(
+            r#""n_params": 27744,"#,
+            r#""n_params": 27744,
+          "kv_block_size": 16, "kv_blocks_per_row": 6, "kv_pool_blocks": 25,
+          "aliases": {"decode": {"param": 19, "output": 3},
+                      "decode_paged": {"param": 19, "output": 3}},"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert!(v.has_paged_pool());
+        assert_eq!(v.kv_block_size * v.kv_blocks_per_row, v.max_seq);
+        // pool covers every row densely plus the trash block
+        assert_eq!(v.kv_pool_blocks, v.gen_batch * v.kv_blocks_per_row + 1);
+        assert_eq!(v.kv_pool_shape(), vec![25, 2, 2, 16, 2, 16]);
+        assert_eq!(v.kv_pool_numel(), 25 * 2 * 2 * 16 * 2 * 16);
+        assert_eq!(
+            v.aliases["decode_paged"],
+            AliasSpec { param: 19, output: 3 }
+        );
     }
 
     #[test]

@@ -234,11 +234,14 @@ impl Graph {
     /// device-resident ones (the KV cache) into the next step.
     ///
     /// `donated` marks input indices whose buffers the caller will not
-    /// reuse after this call (the KV operand). True PJRT donation is a
-    /// compile-time property (`input_output_alias` in the HLO, which
-    /// aot.py does not emit yet), so today the hook only sanity-checks the
-    /// indices; it exists so call sites already declare aliasing intent
-    /// and the AOT side can turn it on without touching the engine.
+    /// reuse after this call (the KV/pool operand). True donation is a
+    /// compile-time property — aot.py lowers both decode graphs with
+    /// `donate_argnums` on the cache operand, so their HLO carries a real
+    /// `input_output_alias={ {DECODE_KV_OUT}: (P, {}, may-alias) }`
+    /// header (asserted by python/tests/test_aot.py and recorded in the
+    /// manifest's `aliases`) and PJRT satisfies the update in place. The
+    /// hook sanity-checks the indices so a call site that forgets to
+    /// declare the handover fails loudly rather than silently copying.
     pub fn run_buffers_b<B: std::borrow::Borrow<xla::PjRtBuffer>>(
         &self,
         inputs: &[B],
@@ -421,6 +424,145 @@ pub fn run_decode_step(
     Ok(DecodeStep { outs, kv_restaged, stage_us, execute_us, kv_take_us })
 }
 
+/// The paged graph's extra operands (between the pool and `pos`): the
+/// `[B, NB]` block table and the per-row copy-on-write lanes.
+pub struct PagedInputs<'a> {
+    pub table: &'a Literal,
+    pub copy_src: &'a Literal,
+    pub copy_dst: &'a Literal,
+}
+
+/// Block-table entitlement for one paged dispatch — the paged analogue
+/// of [`StagePlan`]'s capacity check, over the *addresses* instead of
+/// the lengths. The graph gathers/scatters through every table entry it
+/// is handed, so an entry pointing at a freed block (or a live row left
+/// parked at trash) is silent cross-sequence KV corruption; this plan
+/// refuses the dispatch instead.
+pub struct TablePlan<'a> {
+    /// KV page size in tokens
+    pub block_size: usize,
+    /// table entries per row (NB = max_seq / block_size)
+    pub blocks_per_row: usize,
+    /// device pool blocks; the last index is the sacrificial trash block
+    pub pool_blocks: usize,
+    /// `[B, NB]` row-major block-table lane
+    pub table: &'a [i32],
+    /// per-row CoW copy lanes (trash -> trash for copy-free rows)
+    pub copy_src: &'a [i32],
+    pub copy_dst: &'a [i32],
+}
+
+impl TablePlan<'_> {
+    /// Every entry addresses the pool, every position a live row writes
+    /// or attends is backed by a real (non-trash) block, and the copy
+    /// lanes stay in range.
+    fn validate(&self, park: i32, pos: &[i32]) -> Result<()> {
+        let trash = self.pool_blocks as i32 - 1;
+        if self.table.len() != pos.len() * self.blocks_per_row {
+            bail!(
+                "table plan shape skew: {} entries for {} rows x {} blocks",
+                self.table.len(),
+                pos.len(),
+                self.blocks_per_row
+            );
+        }
+        if self.copy_src.len() != pos.len() || self.copy_dst.len() != pos.len() {
+            bail!("copy lanes must be one entry per row");
+        }
+        for (row, &p) in pos.iter().enumerate() {
+            let lane = &self.table[row * self.blocks_per_row..(row + 1) * self.blocks_per_row];
+            for (i, &b) in lane.iter().enumerate() {
+                if b < 0 || b > trash {
+                    bail!("row {row} table entry {i} addresses block {b} outside the pool");
+                }
+            }
+            if p == park {
+                continue;
+            }
+            // the row writes at p and attends 0..p: every covering page
+            // must be a real block, not the parking target
+            let need = p as usize / self.block_size + 1;
+            for (i, &b) in lane.iter().take(need).enumerate() {
+                if b == trash {
+                    bail!(
+                        "row {row} stages position {p} but table entry {i} still \
+                         parks at the trash block (allocator and table lane drifted)"
+                    );
+                }
+            }
+        }
+        for (row, (&s, &d)) in self.copy_src.iter().zip(self.copy_dst).enumerate() {
+            if s < 0 || s > trash || d < 0 || d > trash {
+                bail!("row {row} copy lane ({s} -> {d}) addresses outside the pool");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One `decode_paged` dispatch: the paged twin of [`run_decode_step`].
+///
+/// Operand order after the unrolled parameters: the block pool (the
+/// donated cache operand, flat index P), then `table, copy_src,
+/// copy_dst`, then the six per-step operands. The pool buffer is threaded
+/// back from output [`DECODE_KV_OUT`] exactly like the dense KV — with
+/// the `input_output_alias` aot.py emits, that handover is a true
+/// in-place device update of the pool.
+pub fn run_decode_step_paged(
+    graph: &Graph,
+    param_bufs: &[&xla::PjRtBuffer],
+    pool: &mut DeviceVal,
+    paged: PagedInputs<'_>,
+    inp: DecodeInputs<'_>,
+    plan: Option<&StagePlan<'_>>,
+    tables: Option<&TablePlan<'_>>,
+) -> Result<DecodeStep> {
+    if let Some(p) = plan {
+        p.validate()?;
+        if let Some(t) = tables {
+            t.validate(p.park, p.pos)?;
+        }
+    }
+    let t_stage = std::time::Instant::now();
+    let table_b = graph.stage(paged.table)?;
+    let csrc_b = graph.stage(paged.copy_src)?;
+    let cdst_b = graph.stage(paged.copy_dst)?;
+    let pos_b = graph.stage(inp.pos)?;
+    let cur_b = graph.stage(inp.cur)?;
+    let gum_b = graph.stage(inp.gumbel)?;
+    let ftok_b = graph.stage(inp.ftok)?;
+    let fmask_b = graph.stage(inp.fmask)?;
+    let temp_b = graph.stage(inp.temp)?;
+    let pool_staged: xla::PjRtBuffer;
+    let kv_restaged;
+    let pool_ref: &xla::PjRtBuffer = match &*pool {
+        DeviceVal::Buf(buf) => {
+            kv_restaged = false;
+            buf
+        }
+        DeviceVal::Lit(l) => {
+            kv_restaged = true;
+            pool_staged = graph.stage(l)?;
+            &pool_staged
+        }
+    };
+    let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.to_vec();
+    let pool_idx = inputs.len();
+    inputs.push(pool_ref);
+    inputs.extend([&table_b, &csrc_b, &cdst_b]);
+    inputs.extend([&pos_b, &cur_b, &gum_b, &ftok_b, &fmask_b, &temp_b]);
+    let stage_us = t_stage.elapsed().as_micros() as u64;
+
+    let t_exec = std::time::Instant::now();
+    let mut outs = graph.run_buffers_b(&inputs, &[pool_idx])?;
+    let execute_us = t_exec.elapsed().as_micros() as u64;
+    drop(inputs);
+    let t_take = std::time::Instant::now();
+    *pool = outs.take(DECODE_KV_OUT)?;
+    let kv_take_us = t_take.elapsed().as_micros() as u64;
+    Ok(DecodeStep { outs, kv_restaged, stage_us, execute_us, kv_take_us })
+}
+
 /// Per-thread runtime: PJRT client + manifest + compiled-graph cache.
 pub struct Runtime {
     pub client: PjRtClient,
@@ -584,6 +726,51 @@ mod stage_plan_tests {
         assert!(plan.validate().is_err(), "negative positions are never backed");
         let plan = StagePlan { park: 95, pos: &[0, 1], cap: &[4] };
         assert!(plan.validate().is_err(), "shape skew is refused");
+    }
+
+    // TablePlan geometry shared by the paged tests: 2 rows x 3 blocks of
+    // 4 tokens over a 7-block pool (trash = 6)
+    fn tp<'a>(table: &'a [i32], csrc: &'a [i32], cdst: &'a [i32]) -> TablePlan<'a> {
+        TablePlan {
+            block_size: 4,
+            blocks_per_row: 3,
+            pool_blocks: 7,
+            table,
+            copy_src: csrc,
+            copy_dst: cdst,
+        }
+    }
+
+    #[test]
+    fn paged_backed_rows_and_parked_rows_pass() {
+        // row 0 parked (all trash), row 1 writing position 5 (pages 0-1
+        // real, tail parked)
+        let table = [6, 6, 6, 0, 2, 6];
+        let plan = tp(&table, &[6, 6], &[6, 6]);
+        plan.validate(95, &[95, 5]).unwrap();
+        // a staged CoW copy between real blocks passes too
+        let plan = tp(&table, &[2, 6], &[4, 6]);
+        plan.validate(95, &[95, 5]).unwrap();
+    }
+
+    #[test]
+    fn paged_unbacked_or_out_of_pool_entries_are_refused() {
+        // live row whose covering page still parks at trash
+        let table = [6, 6, 6, 0, 6, 6];
+        assert!(
+            tp(&table, &[6, 6], &[6, 6]).validate(95, &[95, 5]).is_err(),
+            "position 5 needs page 1 backed by a real block"
+        );
+        // entry addressing outside the pool
+        let table = [6, 6, 6, 0, 7, 6];
+        assert!(tp(&table, &[6, 6], &[6, 6]).validate(95, &[95, 5]).is_err());
+        let table = [6, 6, 6, 0, -1, 6];
+        assert!(tp(&table, &[6, 6], &[6, 6]).validate(95, &[95, 5]).is_err());
+        // copy lane outside the pool
+        let table = [6, 6, 6, 0, 2, 6];
+        assert!(tp(&table, &[9, 6], &[0, 6]).validate(95, &[95, 5]).is_err());
+        // shape skew: 1 row of positions against 2 rows of table
+        assert!(tp(&table, &[6], &[6]).validate(95, &[95]).is_err());
     }
 }
 

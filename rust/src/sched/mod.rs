@@ -63,5 +63,5 @@ pub mod snapshot;
 
 pub use autoscale::{AutoScaleCfg, AutoScaler, ScaleDecision, ScaleSignals};
 pub use migrate::MigrationHub;
-pub use scheduler::{PreemptPolicy, SchedPolicy, Scheduler, SeqView};
+pub use scheduler::{KvLayout, PreemptPolicy, SchedPolicy, Scheduler, SeqView};
 pub use snapshot::SeqSnapshot;

@@ -32,6 +32,48 @@ pub struct SeqView {
     /// generated-prefix length (> 0 only for imported snapshots and
     /// preempted-and-parked sequences)
     pub gen_len: usize,
+    /// KV blocks the sequence holds in the paged allocator — the eviction
+    /// cost signal: parking frees this many block refs, and a resume must
+    /// re-seat (and under the paged device layout, per-row replay) the
+    /// same count. For sequences not yet seated this is the block cost of
+    /// admitting them (`ceil(total_len / block_size)` before sharing).
+    pub kv_blocks: usize,
+}
+
+/// Device-side KV cache layout (`[kv] layout`).
+///
+/// `Dense` keeps the cache as one `[L, 2, B, max_seq, H, hd]` tensor with
+/// a slot axis — every slot owns a full `max_seq` stripe whether it uses
+/// it or not. `Paged` addresses a block pool
+/// `[n_blocks, L, 2, block_size, H, hd]` through per-row block tables, so
+/// device memory follows the allocator's paged accounting (prefix sharing
+/// and preemption actually return device blocks). Dense stays the default
+/// until paged parity is proven on the target runtime; the decode graphs
+/// for both layouts ship in every artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvLayout {
+    /// per-slot dense cache tensor (the legacy layout, bit-for-bit)
+    #[default]
+    Dense,
+    /// block-indexed pool + per-row block tables (`decode_paged` graph)
+    Paged,
+}
+
+impl KvLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvLayout::Dense => "dense",
+            KvLayout::Paged => "paged",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvLayout> {
+        match s {
+            "dense" => Some(KvLayout::Dense),
+            "paged" => Some(KvLayout::Paged),
+            _ => None,
+        }
+    }
 }
 
 /// Victim-selection rule for scheduler-driven preemption under KV block
@@ -64,20 +106,28 @@ impl PreemptPolicy {
         }
     }
 
-    /// Shared victim rule used by the built-in schedulers. Final
-    /// tie-break is the sequence's *local id*, not its slot index: slot
-    /// placement depends on admission interleaving (which slot freed
-    /// first), so an index tie-break would pick different victims across
-    /// otherwise-identical runs — the id makes victim choice a pure
-    /// function of the sequence set, which is what replay-stable chaos
-    /// runs (tests/determinism.rs) assert.
+    /// Shared victim rule used by the built-in schedulers. After the
+    /// salvage cost (`gen_len`), ties break on `kv_blocks` — the actual
+    /// replay bill: parking a sequence frees that many block refs and a
+    /// resume must re-seat and replay exactly that many, so among equal
+    /// salvage losses the cheapest-to-restore victim wins. When every
+    /// view reports `kv_blocks = ceil(total_len / bs)` (the engine's
+    /// default fill) the key is order-equivalent to the historical
+    /// `(gen_len, total_len, seq_id)` — block counts are monotone in
+    /// length — so existing digests are unchanged. Final tie-break is the
+    /// sequence's *local id*, not its slot index: slot placement depends
+    /// on admission interleaving (which slot freed first), so an index
+    /// tie-break would pick different victims across otherwise-identical
+    /// runs — the id makes victim choice a pure function of the sequence
+    /// set, which is what replay-stable chaos runs
+    /// (tests/determinism.rs) assert.
     fn pick(&self, active: &[SeqView]) -> Option<usize> {
         match self {
             PreemptPolicy::None => None,
             PreemptPolicy::Youngest => active
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, v)| (v.gen_len, v.total_len, v.seq_id))
+                .min_by_key(|(_, v)| (v.gen_len, v.kv_blocks, v.total_len, v.seq_id))
                 .map(|(i, _)| i),
         }
     }
@@ -232,7 +282,15 @@ mod tests {
     use super::*;
 
     fn view(seq_id: u64, total_len: usize, gen_len: usize) -> SeqView {
-        SeqView { seq_id, group_id: seq_id, total_len, gen_len }
+        // default fill mirrors the engine: block cost monotone in length
+        // (block_size 4), so these views exercise the historical ordering
+        SeqView {
+            seq_id,
+            group_id: seq_id,
+            total_len,
+            gen_len,
+            kv_blocks: total_len.div_ceil(4),
+        }
     }
 
     #[test]
@@ -305,9 +363,9 @@ mod tests {
         // a pure function of the sequence set: every permutation of the
         // active array must name the same victim sequence.
         let mut s = Fifo { preempt: PreemptPolicy::Youngest };
-        let a = SeqView { seq_id: 31, group_id: 1, total_len: 12, gen_len: 2 };
-        let b = SeqView { seq_id: 17, group_id: 2, total_len: 12, gen_len: 2 };
-        let c = SeqView { seq_id: 54, group_id: 3, total_len: 12, gen_len: 2 };
+        let a = SeqView { seq_id: 31, group_id: 1, total_len: 12, gen_len: 2, kv_blocks: 3 };
+        let b = SeqView { seq_id: 17, group_id: 2, total_len: 12, gen_len: 2, kv_blocks: 3 };
+        let c = SeqView { seq_id: 54, group_id: 3, total_len: 12, gen_len: 2, kv_blocks: 3 };
         let perms: [[SeqView; 3]; 6] = [
             [a, b, c], [a, c, b], [b, a, c], [b, c, a], [c, a, b], [c, b, a],
         ];
@@ -318,6 +376,31 @@ mod tests {
                 "victim must be the lowest-id tied sequence regardless of slot order"
             );
         }
+    }
+
+    #[test]
+    fn preempt_youngest_breaks_salvage_ties_on_block_cost() {
+        // two sequences with identical salvage loss (gen_len) but
+        // different allocator bills: the shared-prefix member holds fewer
+        // private blocks than the equally-long stranger, so it is the
+        // cheaper eviction even though its total_len is *larger* — the
+        // block-count signal must dominate the length tie-break
+        let mut s = Fifo { preempt: PreemptPolicy::Youngest };
+        let shared =
+            SeqView { seq_id: 9, group_id: 1, total_len: 20, gen_len: 3, kv_blocks: 2 };
+        let stranger =
+            SeqView { seq_id: 4, group_id: 2, total_len: 16, gen_len: 3, kv_blocks: 4 };
+        assert_eq!(s.pick_victim(&[stranger, shared], 0), Some(1));
+    }
+
+    #[test]
+    fn kv_layout_parse_and_names() {
+        assert_eq!(KvLayout::parse("dense"), Some(KvLayout::Dense));
+        assert_eq!(KvLayout::parse("paged"), Some(KvLayout::Paged));
+        assert_eq!(KvLayout::parse("ragged"), None);
+        assert_eq!(KvLayout::default(), KvLayout::Dense);
+        assert_eq!(KvLayout::Paged.name(), "paged");
+        assert_eq!(KvLayout::Dense.name(), "dense");
     }
 
     #[test]

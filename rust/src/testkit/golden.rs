@@ -41,9 +41,12 @@
 //! (`SimCfg::digest`), so coarse-grained scenarios get the same
 //! replay-stability check.
 
+use crate::engine::BlockAllocator;
 use crate::model::checkpoint::TrainState;
 use crate::runtime::HostTensor;
-use crate::sched::{MigrationHub, PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
+use crate::sched::{
+    KvLayout, MigrationHub, PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView,
+};
 use crate::testkit::chaos::{corrupt_snapshot_bytes, ChaosKind, ChaosSchedule};
 use crate::util::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -315,6 +318,17 @@ pub struct GoldenCfg {
     /// guardrail rollbacks allowed before a trip falls through to the
     /// fail-safe drain (mirrors `[control] rollback_budget`)
     pub rollback_budget: usize,
+    /// `[kv] layout` analogue: Paged threads a refcounted
+    /// [`BlockAllocator`] shadow through every admission, growth and
+    /// release the run performs — value-neutral by construction (the
+    /// pool is sized to never refuse, and scheduler views bill blocks by
+    /// a layout-independent formula), so a paged run must produce the
+    /// *same digest* as a dense one, which the conformance tests assert
+    pub kv_layout: KvLayout,
+    /// page size of the paged shadow (tokens per block); 4 keeps the
+    /// 2-token prompt a partial block, so the first divergent write of
+    /// every group member exercises a copy-on-write fork
+    pub kv_block_size: usize,
 }
 
 impl GoldenCfg {
@@ -334,6 +348,8 @@ impl GoldenCfg {
             sched: SchedPolicy::Fifo,
             preempt: PreemptPolicy::Youngest,
             rollback_budget: 2,
+            kv_layout: KvLayout::Dense,
+            kv_block_size: 4,
         }
     }
 }
@@ -421,6 +437,10 @@ pub struct GoldenStats {
     pub hub_deposited: u64,
     pub hub_claimed: u64,
     pub hub_discarded: u64,
+    /// paged-shadow accounting (0 under the dense layout): copy-on-write
+    /// forks performed, and the peak distinct blocks held at any tick
+    pub kv_cow_forks: u64,
+    pub kv_peak_blocks: u64,
 }
 
 /// Result of a golden run (completed, or stopped at an injected
@@ -463,12 +483,17 @@ impl GSeq {
         }
     }
 
-    fn view(&self) -> SeqView {
+    /// `bs` is the block size the view bills KV in. Deliberately the
+    /// same worst-case fill in both layouts (never the paged shadow's
+    /// share-aware count): the victim rule must pick identically under
+    /// dense and paged, or the layouts could not be digest-equivalent.
+    fn view(&self, bs: usize) -> SeqView {
         SeqView {
             seq_id: self.uid,
             group_id: self.group,
             total_len: 2 + self.toks.len(),
             gen_len: self.toks.len(),
+            kv_blocks: (2 + self.toks.len()).div_ceil(bs),
         }
     }
 
@@ -507,6 +532,55 @@ impl GSeq {
             versions: s.token_version.clone(),
             rng: Rng::from_state_words(s.rng_words),
         })
+    }
+}
+
+/// The paged-layout shadow: a real [`BlockAllocator`] fed every
+/// admission, growth and release the golden run performs, with the
+/// conservation invariants checked every tick. It must be value-neutral
+/// — the pool is sized so it can never refuse work the model admits
+/// (any refusal panics the run instead of silently diverging), so the
+/// only thing the paged arm can change versus the dense arm is
+/// *allocator state*, never a digest event.
+struct GoldenKv {
+    alloc: BlockAllocator,
+}
+
+impl GoldenKv {
+    fn build(cfg: &GoldenCfg) -> Option<GoldenKv> {
+        if cfg.kv_layout != KvLayout::Paged {
+            return None;
+        }
+        let per_seq = (2 + cfg.max_new).div_ceil(cfg.kv_block_size);
+        // generous: live_target residents plus CoW fork headroom — the
+        // shadow must never refuse what the model admits
+        let blocks = (cfg.live_target + cfg.group_size) * per_seq * 2 + 8;
+        Some(GoldenKv { alloc: BlockAllocator::new(blocks, cfg.kv_block_size) })
+    }
+
+    /// Admission: fresh sequences (nothing generated) share their
+    /// group's prompt blocks, exactly like the engine's admit path;
+    /// anything with generated tokens re-enters private.
+    fn seat(&mut self, s: &GSeq) {
+        let total = 2 + s.toks.len();
+        let r = if s.toks.is_empty() {
+            self.alloc.admit_shared(s.uid, s.group, total)
+        } else {
+            self.alloc.admit(s.uid, total)
+        };
+        r.expect("golden kv shadow refused an admission its pool must cover");
+    }
+
+    fn grow(&mut self, uid: u64, total: usize) {
+        let ok = self
+            .alloc
+            .grow(uid, total)
+            .expect("golden kv shadow lost track of a live sequence");
+        assert!(ok, "golden kv pool sized to never run dry, but grow failed");
+    }
+
+    fn release(&mut self, uid: u64) {
+        self.alloc.release(uid).expect("golden kv shadow released an unknown sequence");
     }
 }
 
@@ -659,6 +733,8 @@ struct Golden<'a> {
     paused: bool,
     /// fail-safe drain: nothing new admitted, live work runs to finish
     draining: bool,
+    /// paged-layout allocator shadow (None under the dense layout)
+    kv: Option<GoldenKv>,
 }
 
 impl GoldenPipeline {
@@ -761,6 +837,7 @@ impl<'a> Golden<'a> {
             tripped: BTreeSet::new(),
             paused: false,
             draining: false,
+            kv: GoldenKv::build(cfg),
         }
     }
 
@@ -785,6 +862,13 @@ impl<'a> Golden<'a> {
             );
             self.tick += 1;
             self.stats.ticks += 1;
+            if let Some(kv) = &self.kv {
+                kv.alloc
+                    .check_invariants()
+                    .expect("golden kv shadow broke block conservation");
+                self.stats.kv_peak_blocks =
+                    self.stats.kv_peak_blocks.max(kv.alloc.held_blocks() as u64);
+            }
             // control-plane pause windows: on entry every in-flight
             // sequence parks into the hub with its RNG cursor; while
             // paused nothing admits or generates (the trainer stays idle
@@ -830,6 +914,10 @@ impl<'a> Golden<'a> {
     }
 
     fn finish(mut self, stop_after: Option<u64>) -> GoldenRun {
+        if let Some(kv) = &self.kv {
+            kv.alloc.check_invariants().expect("golden kv shadow ends conserving blocks");
+            self.stats.kv_cow_forks = kv.alloc.cow_forks();
+        }
         self.stats.corrupt_rejected = self.hub.corrupt_rejected();
         self.hub.discard_all();
         self.stats.hub_deposited = self.hub.deposited();
@@ -958,6 +1046,9 @@ impl<'a> Golden<'a> {
         }
         self.log = EventLog::resumed(RunDigest { hash: aux.hash, events: aux.events });
         self.paused = self.pert.paused_at(self.tick);
+        // a rollback is a process restart: the device KV died with it, so
+        // the paged shadow starts empty (claims re-admit through seat)
+        self.kv = GoldenKv::build(self.cfg);
         // the resume() twin finishes the checkpoint tick's trainer drain
         // before its first generation round — replay must match its order
         self.drain_trainer(None)?;
@@ -987,6 +1078,13 @@ impl<'a> Golden<'a> {
         self.stats.pauses += 1;
         self.stats.parked += all.len() as u64;
         for s in &all {
+            if let Some(kv) = &mut self.kv {
+                // pending sequences were never seated, so only the live
+                // ones hold blocks — release is keyed by uid either way
+                if kv.alloc.capacity_tokens(s.uid).is_some() {
+                    kv.release(s.uid);
+                }
+            }
             self.hub.deposit_raw(s.to_snapshot().to_bytes());
         }
     }
@@ -1025,12 +1123,15 @@ impl<'a> Golden<'a> {
             for (&id, seqs) in &self.actors {
                 for (i, s) in seqs.iter().enumerate() {
                     where_of.push((id, i));
-                    views.push(s.view());
+                    views.push(s.view(self.cfg.kv_block_size));
                 }
             }
             let Some(vi) = self.scheduler.pick_victim(&views, 0) else { continue };
             let (aid, idx) = where_of[vi];
             let victim = self.actors.get_mut(&aid).expect("victim shard live").remove(idx);
+            if let Some(kv) = &mut self.kv {
+                kv.release(victim.uid);
+            }
             self.hub.deposit_raw(victim.to_snapshot().to_bytes());
             self.stats.preemptions += 1;
         }
@@ -1064,6 +1165,9 @@ impl<'a> Golden<'a> {
         let Some(mut seqs) = self.actors.remove(&id) else { return };
         seqs.sort_by_key(|s| s.uid);
         for s in seqs {
+            if let Some(kv) = &mut self.kv {
+                kv.release(s.uid);
+            }
             self.hub.deposit_raw(s.to_snapshot().to_bytes());
         }
     }
@@ -1080,6 +1184,9 @@ impl<'a> Golden<'a> {
     /// Placement is canonicalized out of the digest, so this rule only
     /// has to be deterministic, not clever.
     fn seat(&mut self, seq: GSeq) {
+        if let Some(kv) = &mut self.kv {
+            kv.seat(&seq);
+        }
         let id = self
             .actors
             .iter()
@@ -1111,7 +1218,8 @@ impl<'a> Golden<'a> {
                 self.seat(seq);
                 continue;
             }
-            let views: Vec<SeqView> = self.pending.iter().map(|s| s.view()).collect();
+            let views: Vec<SeqView> =
+                self.pending.iter().map(|s| s.view(self.cfg.kv_block_size)).collect();
             let Some(idx) = self.scheduler.pick(&views, &|_| true) else {
                 bail!("scheduler refused to admit with an always-open gate");
             };
@@ -1151,6 +1259,13 @@ impl<'a> Golden<'a> {
             let tok = s.rng.below(self.cfg.vocab) as i32;
             s.toks.push(tok);
             s.versions.push(self.version);
+            let total = 2 + s.toks.len();
+            if let Some(kv) = &mut self.kv {
+                // the engine's growth check: back the new token with a
+                // block, forking a shared prompt block on first
+                // divergence
+                kv.grow(uid, total);
+            }
             self.log.record(DigestEvent::Token {
                 seq: uid,
                 index: (s.toks.len() - 1) as u32,
@@ -1164,7 +1279,11 @@ impl<'a> Golden<'a> {
             let mut i = 0;
             while i < seqs.len() {
                 if seqs[i].toks.len() >= seqs[i].target {
-                    done.push(seqs.remove(i));
+                    let s = seqs.remove(i);
+                    if let Some(kv) = &mut self.kv {
+                        kv.release(s.uid);
+                    }
+                    done.push(s);
                 } else {
                     i += 1;
                 }

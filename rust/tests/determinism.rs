@@ -57,7 +57,7 @@ use pipeline_rl::coordinator::{GroupCollector, Packer, TrainBatch};
 use pipeline_rl::metrics::MetricsHub;
 use pipeline_rl::model::checkpoint::TrainState;
 use pipeline_rl::rl::{truncated_weights, FinishReason, Rollout};
-use pipeline_rl::sched::{PreemptPolicy, SchedPolicy};
+use pipeline_rl::sched::{KvLayout, PreemptPolicy, SchedPolicy};
 // shared deterministic trainer (Adam-shaped, checkpointed RNG cursor):
 // one manifest save per step, publishing the version clock the chaos
 // schedule fires on
@@ -337,6 +337,61 @@ fn migration_and_preemption_chaos_is_digest_equivalent() {
         let gen = Perturbation::generate(seed, cfg.steps, 6, 3);
         let run2 = GoldenPipeline::run(&cfg, &gen).expect("generated-chaos run");
         assert_digest_eq("migration_preemption_chaos_gen", seed, &base.log, &[&run2.log]);
+    });
+}
+
+/// The paged device-KV layout is an implementation detail, not a
+/// behavior: a golden run threading every admission/growth/release
+/// through the refcounted block-allocator shadow (CoW prompt forks,
+/// per-tick conservation checks) produces the *same digest* as the
+/// dense run — calm and under migration + preemption chaos alike.
+#[test]
+fn paged_kv_layout_is_digest_equivalent_to_dense() {
+    let seed = seed_from_env(0x9a6e_d0);
+    with_seed("paged_kv_layout", seed, |seed| {
+        let mut cfg = GoldenCfg::new(seed);
+        cfg.steps = 14;
+        cfg.n_actors = 3;
+        cfg.live_target = 8;
+        cfg.preempt = PreemptPolicy::Youngest;
+        let mut paged_cfg = cfg.clone();
+        paged_cfg.kv_layout = KvLayout::Paged;
+
+        // calm: same digest with and without the paged shadow
+        let base = GoldenPipeline::run(&cfg, &Perturbation::none()).expect("dense baseline");
+        let calm =
+            GoldenPipeline::run(&paged_cfg, &Perturbation::none()).expect("paged baseline");
+        assert_digest_eq("paged_kv_layout_calm", seed, &base.log, &[&calm.log]);
+        assert_eq!(base.stats.kv_cow_forks, 0, "the dense arm runs no shadow");
+        assert!(
+            calm.stats.kv_cow_forks > 0,
+            "2-token prompts on 4-token pages: a group member's first \
+             divergent write must fork the shared prompt block"
+        );
+        assert!(calm.stats.kv_peak_blocks > 0, "the shadow held real blocks");
+
+        // chaos: kills, pool resizes, byzantine deposits and forced
+        // preemptions — block tables churn through release/re-admit and
+        // a full allocator rebuild at every rollback, digest unchanged
+        let mut chaos = ChaosSchedule::kill_then_restart(2, 5);
+        chaos.events.push(pipeline_rl::testkit::chaos::ChaosEvent {
+            at_step: 4,
+            kind: pipeline_rl::testkit::chaos::ChaosKind::RemoveActor,
+        });
+        chaos.events.push(pipeline_rl::testkit::chaos::ChaosEvent {
+            at_step: 7,
+            kind: pipeline_rl::testkit::chaos::ChaosKind::CorruptSnapshot,
+        });
+        chaos.events.sort_by_key(|e| e.at_step);
+        let pert = Perturbation {
+            chaos: Some(chaos),
+            preempt_ticks: vec![3, 9, 15, 21],
+            ..Perturbation::default()
+        };
+        let run = GoldenPipeline::run(&paged_cfg, &pert).expect("paged chaos run");
+        assert!(run.stats.migrated > 0, "kills moved live sequences");
+        assert!(run.stats.preemptions > 0, "forced preemptions fired");
+        assert_digest_eq("paged_kv_layout_chaos", seed, &base.log, &[&run.log]);
     });
 }
 

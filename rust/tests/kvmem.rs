@@ -15,7 +15,12 @@
 //!     synthetic block pressure and later resumed emits the same
 //!     remaining tokens and version tags as an uninterrupted run;
 //!   - **coalesced replay**: importing N snapshots triggers at most
-//!     ceil(N/replay_batch) replays, proven by `stats.import_replays`.
+//!     ceil(N/replay_batch) replays, proven by `stats.import_replays`;
+//!   - **per-row replay**: an import admitted while residents are
+//!     mid-generation rebuilds *only its own row*
+//!     (`stats.replay_rows_skipped` counts the untouched neighbors) and
+//!     the residents' streams come out identical to a run with no
+//!     import at all.
 
 use pipeline_rl::data::task::TaskGen;
 use pipeline_rl::engine::{Engine, EngineCfg};
@@ -200,6 +205,10 @@ fn preempted_sequence_matches_uninterrupted() {
         eng.stats.import_replays >= 1,
         "the parked sequence resumed through a coalesced replay"
     );
+    assert!(
+        eng.stats.replay_rows_rebuilt >= 1,
+        "every re-admission rebuilt the victim's row"
+    );
     eng.kv_check().unwrap();
 
     // equivalence: preemption + resume is invisible in the output
@@ -286,5 +295,103 @@ fn importing_n_snapshots_coalesces_replays() {
         imp.stats.import_replays
     );
     assert_eq!(imp.stats.snapshots_imported, n as u64);
+    assert_eq!(
+        imp.stats.replay_rows_rebuilt,
+        n as u64,
+        "per-row replay: each import is rebuilt exactly once, locals never"
+    );
+    imp.kv_check().unwrap();
+}
+
+#[test]
+fn per_row_replay_skips_residents_and_leaves_their_streams_intact() {
+    if !runtime_or_skip("per_row_replay_skips_residents_and_leaves_their_streams_intact") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    let params = init_params(&mut rt);
+    let gen = TaskGen::curriculum_small();
+    let tk = Tokenizer::new();
+
+    // donor: one sequence with real progress, exported as a snapshot
+    let mut donor = Engine::new(&mut rt, greedy_cfg(16), &params, 0, Rng::new(4)).unwrap();
+    donor.set_weights(1, &params).unwrap();
+    if donor.n_slots() < 2 {
+        eprintln!("SKIP per_row_replay: single-slot engine");
+        return;
+    }
+    let pd = gen.problem(40);
+    donor.add_request(pd.clone(), tk.encode(&pd.prompt).unwrap(), 400);
+    for _ in 0..3 {
+        assert!(!donor.step().unwrap().idle);
+    }
+    let snaps = donor.export_snapshots();
+    assert_eq!(snaps.len(), 1);
+    let snap = &snaps[0];
+    assert!(snap.pos > 0, "the snapshot carries progress to replay");
+
+    // locals fill all slots but one; the free slot is the import's seat,
+    // so the replay provably fires while every local is mid-generation
+    let n_locals = donor.n_slots() - 1;
+    let seat_locals = |eng: &mut Engine| {
+        for i in 0..n_locals {
+            let p = gen.problem(60 + i as u64);
+            let toks = tk.encode(&p.prompt).unwrap();
+            eng.add_request(p, toks, 900 + i as u64);
+        }
+    };
+    let finish = |eng: &mut Engine, want: usize| -> Vec<Rollout> {
+        let mut out = Vec::new();
+        for _ in 0..3000 {
+            out.extend(eng.step().unwrap().finished);
+            if out.len() == want {
+                break;
+            }
+        }
+        out
+    };
+
+    // control: the locals alone — their reference streams
+    let mut ctrl = Engine::new(&mut rt, greedy_cfg(16), &params, 1, Rng::new(5)).unwrap();
+    ctrl.set_weights(1, &params).unwrap();
+    seat_locals(&mut ctrl);
+    let ctrl_done = finish(&mut ctrl, n_locals);
+    assert_eq!(ctrl_done.len(), n_locals);
+    assert_eq!(ctrl.stats.replay_rows_rebuilt, 0, "nothing to replay without imports");
+
+    // probe: same locals, plus the import one step in
+    let mut imp = Engine::new(&mut rt, greedy_cfg(16), &params, 2, Rng::new(6)).unwrap();
+    imp.set_weights(1, &params).unwrap();
+    seat_locals(&mut imp);
+    assert!(!imp.step().unwrap().idle); // locals seated, streams moving
+    imp.import_snapshot(snap, gen.problem(snap.problem_id)).unwrap();
+    let done = finish(&mut imp, n_locals + 1);
+    assert_eq!(done.len(), n_locals + 1, "locals and the import all finish");
+
+    // the replay rebuilt exactly the imported row and skipped every
+    // resident neighbor — the redundant work the legacy full-batch
+    // replay performed
+    assert_eq!(imp.stats.import_replays, 1);
+    assert_eq!(imp.stats.replay_rows_rebuilt, 1, "only the import was re-fed");
+    assert_eq!(
+        imp.stats.replay_rows_skipped,
+        n_locals as u64,
+        "every mid-generation resident stayed out of the replay"
+    );
+
+    // ...and skipping them is safe: their streams match the no-import
+    // control bit for bit (greedy decode — any KV corruption from the
+    // replay's parked scatters would fork the tokens)
+    for c in &ctrl_done {
+        let got = done
+            .iter()
+            .find(|r| r.group_id == c.group_id)
+            .expect("local rollout present");
+        assert_eq!(got.gen_tokens, c.gen_tokens, "resident streams untouched by the replay");
+        assert_eq!(got.token_version, c.token_version);
+    }
+    // migrated prefix preserved verbatim through the per-row rebuild
+    let m = done.iter().find(|r| r.group_id == 400).expect("import finishes");
+    assert_eq!(&m.gen_tokens[..snap.gen_tokens.len()], &snap.gen_tokens[..]);
     imp.kv_check().unwrap();
 }

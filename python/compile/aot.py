@@ -17,6 +17,9 @@ Outputs (per variant v in {tiny, small, base}):
                                     the paged KV pool; both decode
                                     variants donate their cache operand
                                     (input_output_alias in the HLO text)
+    artifacts/<v>_prefill_chunk.hlo.txt       W-token chunked prefill
+    artifacts/<v>_prefill_chunk_paged.hlo.txt ... against the paged pool;
+                                    both donate the cache like decode
     artifacts/<v>_train.hlo.txt     IS-REINFORCE + Adam optimizer step
     artifacts/<v>_sft.hlo.txt       cross-entropy warmup step
     artifacts/<v>_score.hlo.txt     per-token logprobs
@@ -81,6 +84,29 @@ def graph_signatures(cfg: configs.ModelConfig):
             ("force_mask", (bg,), "f32"),
             ("temp", (), "f32"),
         ],
+        "prefill_chunk": [
+            ("kv", kv, "f32"),
+            ("start", (bg,), "i32"),
+            ("chunk_toks", (bg, cfg.prefill_chunk), "i32"),
+            ("vlen", (bg,), "i32"),
+            ("gumbel", (bg, v), "f32"),
+            ("force_tok", (bg,), "i32"),
+            ("force_mask", (bg,), "f32"),
+            ("temp", (), "f32"),
+        ],
+        "prefill_chunk_paged": [
+            ("kv_pool", pool, "f32"),
+            ("block_table", (bg, nb), "i32"),
+            ("copy_src", (bg,), "i32"),
+            ("copy_dst", (bg,), "i32"),
+            ("start", (bg,), "i32"),
+            ("chunk_toks", (bg, cfg.prefill_chunk), "i32"),
+            ("vlen", (bg,), "i32"),
+            ("gumbel", (bg, v), "f32"),
+            ("force_tok", (bg,), "i32"),
+            ("force_mask", (bg,), "f32"),
+            ("temp", (), "f32"),
+        ],
         "train": [
             ("step", (), "f32"),
             ("tokens", (bt, t), "i32"),
@@ -140,6 +166,8 @@ def graph_fns(cfg: configs.ModelConfig):
         "init": (lambda seed: tuple(model.init_params(cfg, seed)), 0),
         "decode": (with_params(model.decode_step, 1), 1),
         "decode_paged": (with_params(model.decode_step_paged, 1), 1),
+        "prefill_chunk": (with_params(model.prefill_chunk, 1), 1),
+        "prefill_chunk_paged": (with_params(model.prefill_chunk_paged, 1), 1),
         "train": (with_params(model.train_step, 3), 3),
         "sft": (with_params(model.sft_step, 3), 3),
         "score": (with_params(model.score, 1), 1),
@@ -147,14 +175,16 @@ def graph_fns(cfg: configs.ModelConfig):
     }
 
 
-# Donation plan: both decode variants update their cache operand (dense kv
-# / paged pool — the first runtime input, flat argument index P = number
-# of params) and return it at output tuple index 3 (DECODE_KV_OUT on the
-# rust side). donate_argnums survives the stablehlo -> HLO-text path as a
-# real `input_output_alias={ {3}: (P, {}, may-alias) }` header, which is
+# Donation plan: the decode and prefill-chunk variants update their cache
+# operand (dense kv / paged pool — the first runtime input, flat argument
+# index P = number of params) and return it at output tuple index 3
+# (DECODE_KV_OUT on the rust side). donate_argnums survives the
+# stablehlo -> HLO-text path as a real
+# `input_output_alias={ {3}: (P, {}, may-alias) }` header, which is
 # what lets PJRT satisfy the declared donation at `run_buffers_b` call
 # sites with a true in-place update instead of a copy.
-DONATED_CACHE_GRAPHS = ("decode", "decode_paged")
+DONATED_CACHE_GRAPHS = ("decode", "decode_paged",
+                        "prefill_chunk", "prefill_chunk_paged")
 DECODE_KV_OUT = 3
 
 
@@ -226,6 +256,9 @@ def build_manifest(variants, files_by_variant):
             "kv_blocks_per_row": model.blocks_per_row(cfg),
             # pool block count includes the trash block (last index)
             "kv_pool_blocks": model.kv_pool_shape(cfg)[0],
+            # chunk width W baked into the prefill_chunk graphs; the rust
+            # engine's `[kv] prefill_chunk` must be <= this
+            "prefill_chunk": cfg.prefill_chunk,
             "aliases": {
                 g: rec
                 for g in sigs

@@ -33,6 +33,12 @@ class ModelConfig:
     # dense [max_seq] timeline — that equality is what makes the paged
     # kernel bit-identical to the dense one (tests/test_model.py).
     kv_block_size: int = 16
+    # Chunk width W of the prefill_chunk graphs: forced tokens ingested per
+    # dispatch during prompt prefill and KV replay (ceil(P/W) dispatches
+    # for a P-token prefix instead of P). Baked into the artifact like
+    # every other dimension; the rust engine's `[kv] prefill_chunk` must
+    # not exceed it (shorter chunks ride the graph with a parked tail).
+    prefill_chunk: int = 8
 
     @property
     def head_dim(self) -> int:

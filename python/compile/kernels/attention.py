@@ -23,6 +23,15 @@ and trainer (DESIGN.md §3):
   match — the allocator's prefix sharing and CoW forks govern physical
   memory without touching numerics.
 
+* `chunk_decode_attention` / `paged_chunk_decode_attention` — the W-query
+  generalization backing the `prefill_chunk` graphs: lane j of row b is a
+  query at cache position pos[b, j], masked to keys 0..=pos[b, j]. The
+  caller scatters all W fresh K/V lanes *before* attending, so the
+  position mask alone yields causal within-chunk + past-KV attention.
+  Parked/invalid lanes ride along at pos = T-1 (full mask, finite
+  softmax, output discarded). The paged variant gathers-then-denses like
+  `_paged_decode_kernel`, inheriting the same bit-parity argument.
+
 Grid-shape rationale (§Perf): batch-vectorized bodies keep the VMEM
 footprint per grid step modest (≤ ~2 MiB at the base variant — table in
 EXPERIMENTS.md §Perf) while minimizing the *number* of grid steps, which
@@ -158,6 +167,55 @@ def decode_attention(q, k_cache, v_cache, pos):
     )(q, k_cache, v_cache, pos)
 
 
+def _chunk_decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale):
+    """One head per grid step, vectorized over slots; W query lanes per
+    row. q [B,W,1,hd]; k,v [B,T,1,hd]; pos [B,W] (per-lane cache pos).
+
+    Lanes are unrolled with byte-for-byte `_decode_kernel` math instead
+    of one [B,W,T] einsum: XLA CPU contractions are not bit-stable across
+    an extra batch dimension, and the parity contract (a chunk == the
+    same tokens fed one step at a time) demands exact equality. K/V for
+    the head are still staged once per grid step and shared by all lanes
+    — the dispatch-count win is untouched.
+    """
+    t = k_ref.shape[1]
+    w = q_ref.shape[1]
+    k = k_ref[:, :, 0, :].astype(jnp.float32)          # [B, T, hd]
+    v = v_ref[:, :, 0, :].astype(jnp.float32)
+    pos = pos_ref[...]                                 # [B, W]
+    for j in range(w):
+        q = q_ref[:, j, 0, :].astype(jnp.float32)      # [B, hd]
+        s = jnp.einsum("bd,btd->bt", q, k) * scale     # [B, T]
+        valid = jax.lax.iota(jnp.int32, t)[None, :] <= pos[:, j][:, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(valid, p, 0.0)
+        out = jnp.einsum("bt,btd->bd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[:, j, 0, :] = out.astype(o_ref.dtype)
+
+
+def chunk_decode_attention(q, k_cache, v_cache, pos):
+    """q: [B, W, H, D]; k_cache, v_cache: [B, T, H, D]; pos: [B, W] int32.
+    Equivalent to ref.chunk_decode_attention."""
+    b, t, h, d = k_cache.shape
+    w = q.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_chunk_decode_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, w, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, t, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, w), lambda hi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, w, 1, d), lambda hi: (0, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w, h, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, pos)
+
+
 def _paged_decode_kernel(q_ref, k_ref, v_ref, tbl_ref, pos_ref, o_ref, *, scale):
     """One head per grid step, vectorized over slots.
     q [B,1,hd]; k,v pool planes [N,bs,1,hd]; tbl [B,NB]; pos [B].
@@ -209,5 +267,61 @@ def paged_decode_attention(q, k_pool, v_pool, table, pos):
         ],
         out_specs=pl.BlockSpec((b, 1, d), lambda hi: (0, hi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, k_pool, v_pool, table, pos)
+
+
+def _paged_chunk_decode_kernel(q_ref, k_ref, v_ref, tbl_ref, pos_ref, o_ref, *, scale):
+    """One head per grid step, vectorized over slots and chunk lanes.
+    q [B,W,1,hd]; k,v pool planes [N,bs,1,hd]; tbl [B,NB]; pos [B,W].
+
+    Gather-then-dense exactly like `_paged_decode_kernel`, then the math
+    is byte-for-byte `_chunk_decode_kernel` — the same bit-parity proof
+    obligation, now for W queries per row. The gather runs once per grid
+    step; lanes share the densified timeline.
+    """
+    bs = k_ref.shape[1]
+    w = q_ref.shape[1]
+    tbl = tbl_ref[...]                                 # [B, NB]
+    b, nb = tbl.shape
+    t = nb * bs
+    k = k_ref[:, :, 0, :].astype(jnp.float32)[tbl].reshape(b, t, -1)
+    v = v_ref[:, :, 0, :].astype(jnp.float32)[tbl].reshape(b, t, -1)
+    pos = pos_ref[...]                                 # [B, W]
+    for j in range(w):
+        q = q_ref[:, j, 0, :].astype(jnp.float32)      # [B, hd]
+        s = jnp.einsum("bd,btd->bt", q, k) * scale     # [B, T]
+        valid = jax.lax.iota(jnp.int32, t)[None, :] <= pos[:, j][:, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(valid, p, 0.0)
+        out = jnp.einsum("bt,btd->bd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[:, j, 0, :] = out.astype(o_ref.dtype)
+
+
+def paged_chunk_decode_attention(q, k_pool, v_pool, table, pos):
+    """q: [B, W, H, D]; k_pool, v_pool: [N, bs, H, D]; table: [B, NB]
+    int32; pos: [B, W] int32 per-lane cache positions.
+
+    Equivalent to ref.paged_chunk_decode_attention, and bit-identical to
+    chunk_decode_attention on the densified cache when NB*bs == max_seq.
+    """
+    n, bs, h, d = k_pool.shape
+    b, nb = table.shape
+    w = q.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_paged_chunk_decode_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, w, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((n, bs, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((n, bs, 1, d), lambda hi: (0, 0, hi, 0)),
+            pl.BlockSpec((b, nb), lambda hi: (0, 0)),
+            pl.BlockSpec((b, w), lambda hi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, w, 1, d), lambda hi: (0, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w, h, d), q.dtype),
         interpret=True,
     )(q, k_pool, v_pool, table, pos)

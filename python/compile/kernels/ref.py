@@ -66,6 +66,25 @@ def decode_attention(q, k_cache, v_cache, pos):
     return jnp.einsum("bhj,bjhd->bhd", p, v_cache)
 
 
+def chunk_decode_attention(q, k_cache, v_cache, pos):
+    """Chunked-prefill attention: W queries per row against the dense cache.
+
+    q: [B, W, H, D] (rope'd queries; lane j of row b sits at cache position
+    pos[b, j]); k_cache, v_cache: [B, T, H, D]; pos: [B, W] int32 — lane j
+    attends to cache positions 0..=pos[b, j]. Within-chunk causality falls
+    out of the position mask because the caller scatters all W keys before
+    attending. Invalid (parked) lanes carry pos = T-1, so their softmax is
+    finite; their output is garbage by contract and never read.
+    """
+    b, t, h, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bwhd,bjhd->bhwj", q, k_cache) * scale
+    valid = jnp.arange(t)[None, None, :] <= pos[:, :, None]  # [B, W, T]
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhwj,bjhd->bwhd", p, v_cache)
+
+
 def gather_kv_blocks(pool_plane, table):
     """Densify one K or V pool plane through a block table.
 
@@ -83,6 +102,14 @@ def paged_decode_attention(q, k_pool, v_pool, table, pos):
     """Oracle for kernels.attention.paged_decode_attention: densify the
     pool through the table, then it IS dense decode attention."""
     return decode_attention(
+        q, gather_kv_blocks(k_pool, table), gather_kv_blocks(v_pool, table), pos
+    )
+
+
+def paged_chunk_decode_attention(q, k_pool, v_pool, table, pos):
+    """Oracle for kernels.attention.paged_chunk_decode_attention: densify
+    the pool through the table, then it IS dense chunk attention."""
+    return chunk_decode_attention(
         q, gather_kv_blocks(k_pool, table), gather_kv_blocks(v_pool, table), pos
     )
 

@@ -5,7 +5,7 @@ with RMSNorm, RoPE, GELU MLP and a tied embedding/softmax head, expressed
 as pure functions over a *flat list* of parameter arrays (canonical order
 = `configs.ModelConfig.param_specs()`, mirrored by the rust manifest).
 
-Five computations are exported by aot.py, one HLO artifact each:
+These computations are exported by aot.py, one HLO artifact each:
 
   init        seed -> params
   decode      one continuous-batching engine step for all slots (the
@@ -20,6 +20,15 @@ Five computations are exported by aot.py, one HLO artifact each:
               for true in-place update. Token-for-token identical to
               `decode` — `[kv] layout = dense|paged` on the rust side
               picks the artifact; dense stays the bit-for-bit fallback
+  prefill_chunk / prefill_chunk_paged
+              the chunked-prefill generalization of decode: W forced
+              tokens per row per dispatch (per-row start/valid-length
+              lanes), so a P-token prompt ingestion or KV replay costs
+              ceil(P/W) dispatches instead of P. Lane vlen-1 runs the
+              same Gumbel-max sampling head, so a chunk that reaches the
+              end of a row's stream also samples its first free token.
+              Rows with no prefill work ride along with vlen = 1
+              (ordinary decode) or vlen = 0 (parked)
   train       fused fwd+bwd+Adam IS-REINFORCE optimizer step (calls
               kernels.reinforce_loss with its custom-VJP Pallas backward
               and kernels.adam)
@@ -233,6 +242,145 @@ def decode_step_paged(cfg, params, pool, table, copy_src, copy_dst,
         x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
     next_tok, chosen_lp, lp_all, ent = _sample_head(
         cfg, p, x, gumbel, force_tok, force_mask, temp
+    )
+    return next_tok, chosen_lp, lp_all, pool, ent
+
+
+def prefill_chunk(cfg, params, kv, start, chunk_toks, vlen, gumbel,
+                  force_tok, force_mask, temp):
+    """Chunked prefill: up to W forced tokens per row in one dispatch.
+
+    chunk_toks: [B, W] — lane j of row b feeds token chunk_toks[b, j] at
+    cache position start[b] + j, for j < vlen[b]; lanes >= vlen[b] are
+    inert (tokens replaced by PAD, K/V zeroed and scattered at the park
+    position max_seq-1). All W K/V lanes of a layer are scattered before
+    its attention, so the per-lane position mask (keys 0..=start+j) gives
+    causal within-chunk + past-KV attention in one batched kernel call
+    (kernels.attention.chunk_decode_attention). The sampling head runs on
+    lane max(vlen-1, 0) — when the chunk ends exactly at a row's stream
+    end the dispatch also samples, identically to decode_step at that
+    position. Rows with vlen = 0 park (start = max_seq-1, like an idle
+    decode row).
+
+    Bit-exactness contract (the parity tests' claim): every projection /
+    norm / MLP runs per lane at the same [B, ...] shapes as decode_step,
+    and the chunk attention kernel unrolls its lanes over byte-for-byte
+    `_decode_kernel` math — XLA CPU contractions are not bit-stable
+    across a fused [B*W, ...] batch, so the chunk fuses *dispatches*
+    (one executable, one KV round-trip, W scatters per layer), never
+    reduction shapes. A chunk is therefore bit-identical to feeding its
+    tokens through decode_step one at a time, for every valid lane. Only
+    the park column differs: inert lanes write zeros where legacy parked
+    rows write rope'd PAD garbage — both are dead values no valid query
+    ever attends (mask col <= pos).
+
+    Returns (next_tok[B], chosen_lp[B], logprobs[B, V], kv', ent[B]) —
+    the decode_step signature, so the rust engine reads it back through
+    the same lanes.
+    """
+    p = unpack(cfg, params)
+    bsz = cfg.gen_batch
+    w = cfg.prefill_chunk
+    rows = jnp.arange(bsz)
+    park = cfg.max_seq - 1
+    lane = jnp.arange(w)
+    valid = lane[None, :] < vlen[:, None]                    # [B, W]
+    pos_w = jnp.where(valid, start[:, None] + lane[None, :], park)
+    toks_w = jnp.where(valid, chunk_toks, vocab.PAD_ID)
+    xs = [p["embed"][toks_w[:, j]] for j in range(w)]        # W x [B, d]
+    for l in range(cfg.n_layers):
+        qs, ks, vs = [], [], []
+        for j in range(w):
+            h = ref.rmsnorm(xs[j], p[f"l{l}.ln1"])
+            qs.append(ref.rope(
+                _split_heads(h @ p[f"l{l}.wq"], cfg.n_heads), pos_w[:, j]))
+            ks.append(ref.rope(
+                _split_heads(h @ p[f"l{l}.wk"], cfg.n_heads), pos_w[:, j]))
+            vs.append(_split_heads(h @ p[f"l{l}.wv"], cfg.n_heads))
+        # inert lanes scatter zeros at park: duplicate writes of equal
+        # values, deterministic regardless of scatter order
+        k_all = jnp.where(valid[..., None, None], jnp.stack(ks, axis=1), 0.0)
+        v_all = jnp.where(valid[..., None, None], jnp.stack(vs, axis=1), 0.0)
+        kv = kv.at[l, 0, rows[:, None], pos_w].set(k_all)
+        kv = kv.at[l, 1, rows[:, None], pos_w].set(v_all)
+        att = attn_k.chunk_decode_attention(
+            jnp.stack(qs, axis=1), kv[l, 0], kv[l, 1], pos_w)
+        for j in range(w):
+            xj = xs[j] + _merge_heads(att[:, j]) @ p[f"l{l}.wo"]
+            h2 = ref.rmsnorm(xj, p[f"l{l}.ln2"])
+            xs[j] = xj + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    # lane vlen-1 feeds the sampling head (lane 0 for parked rows — the
+    # same PAD-forward a legacy parked row runs; its output is discarded)
+    x_last = xs[0]
+    for j in range(1, w):
+        x_last = jnp.where((lane[j] < vlen)[:, None], xs[j], x_last)
+    next_tok, chosen_lp, lp_all, ent = _sample_head(
+        cfg, p, x_last, gumbel, force_tok, force_mask, temp
+    )
+    return next_tok, chosen_lp, lp_all, kv, ent
+
+
+def prefill_chunk_paged(cfg, params, pool, table, copy_src, copy_dst,
+                        start, chunk_toks, vlen, gumbel,
+                        force_tok, force_mask, temp):
+    """Chunked prefill against the paged device KV pool.
+
+    Same chunk semantics as prefill_chunk; the W K/V scatters address the
+    block pool through the same table/copy-lane operands as
+    decode_step_paged — lane j of row b writes block table[b, (start+j)
+    // bs] at offset (start+j) % bs. Inert lanes (j >= vlen[b], and every
+    lane of a parked row) scatter *zeros* directly into the trash block
+    at offset bs-1, never touching a real block. CoW copy lanes run
+    before any write, exactly like the single-step graph.
+
+    Bit-exactness: same per-lane structure as prefill_chunk (see its
+    docstring) — the batched op is kernels.attention.
+    paged_chunk_decode_attention, whose gather-then-dense body inherits
+    the dense/paged parity argument of `_paged_decode_kernel`.
+
+    Returns (next_tok[B], chosen_lp[B], logprobs[B, V], pool', ent[B]).
+    """
+    p = unpack(cfg, params)
+    bsz = cfg.gen_batch
+    w = cfg.prefill_chunk
+    rows = jnp.arange(bsz)
+    bs = cfg.kv_block_size
+    park = cfg.max_seq - 1
+    trash = kv_pool_shape(cfg)[0] - 1
+    lane = jnp.arange(w)
+    valid = lane[None, :] < vlen[:, None]                    # [B, W]
+    pos_w = jnp.where(valid, start[:, None] + lane[None, :], park)
+    toks_w = jnp.where(valid, chunk_toks, vocab.PAD_ID)
+    # CoW forks first: real device block copies, before any write lands
+    pool = pool.at[copy_dst].set(pool[copy_src])
+    blk = jnp.where(valid, table[rows[:, None], pos_w // bs], trash)
+    off = pos_w % bs                                         # park -> bs-1
+    xs = [p["embed"][toks_w[:, j]] for j in range(w)]        # W x [B, d]
+    for l in range(cfg.n_layers):
+        qs, ks, vs = [], [], []
+        for j in range(w):
+            h = ref.rmsnorm(xs[j], p[f"l{l}.ln1"])
+            qs.append(ref.rope(
+                _split_heads(h @ p[f"l{l}.wq"], cfg.n_heads), pos_w[:, j]))
+            ks.append(ref.rope(
+                _split_heads(h @ p[f"l{l}.wk"], cfg.n_heads), pos_w[:, j]))
+            vs.append(_split_heads(h @ p[f"l{l}.wv"], cfg.n_heads))
+        k_all = jnp.where(valid[..., None, None], jnp.stack(ks, axis=1), 0.0)
+        v_all = jnp.where(valid[..., None, None], jnp.stack(vs, axis=1), 0.0)
+        pool = pool.at[blk, l, 0, off].set(k_all)
+        pool = pool.at[blk, l, 1, off].set(v_all)
+        att = attn_k.paged_chunk_decode_attention(
+            jnp.stack(qs, axis=1), pool[:, l, 0], pool[:, l, 1], table, pos_w
+        )
+        for j in range(w):
+            xj = xs[j] + _merge_heads(att[:, j]) @ p[f"l{l}.wo"]
+            h2 = ref.rmsnorm(xj, p[f"l{l}.ln2"])
+            xs[j] = xj + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    x_last = xs[0]
+    for j in range(1, w):
+        x_last = jnp.where((lane[j] < vlen)[:, None], xs[j], x_last)
+    next_tok, chosen_lp, lp_all, ent = _sample_head(
+        cfg, p, x_last, gumbel, force_tok, force_mask, temp
     )
     return next_tok, chosen_lp, lp_all, pool, ent
 

@@ -33,16 +33,19 @@ def test_manifest_structure(tmp_path):
     assert manifest["metric_names"] == model.METRIC_NAMES
     assert manifest["pad_id"] == vocab.PAD_ID
     # every graph has an input signature
-    for g in ("init", "decode", "decode_paged", "train", "sft", "score",
-              "score_full"):
+    for g in ("init", "decode", "decode_paged", "prefill_chunk",
+              "prefill_chunk_paged", "train", "sft", "score", "score_full"):
         assert g in v["inputs"], g
     # paged-pool geometry is recorded for the rust allocator
     assert v["kv_block_size"] == cfg.kv_block_size
     assert v["kv_blocks_per_row"] * cfg.kv_block_size == cfg.max_seq
     assert v["kv_pool_blocks"] == cfg.gen_batch * v["kv_blocks_per_row"] + 1
-    # both decode variants declare their cache donation
+    # chunked-prefill width is recorded for the rust engine's gate
+    assert v["prefill_chunk"] == cfg.prefill_chunk
+    # every cache-carrying decode/prefill variant declares its donation
     P = len(cfg.param_specs())
-    for g in ("decode", "decode_paged"):
+    for g in ("decode", "decode_paged", "prefill_chunk",
+              "prefill_chunk_paged"):
         assert v["aliases"][g] == {"param": P, "output": aot.DECODE_KV_OUT}
     # json-serializable
     json.dumps(manifest)
@@ -76,6 +79,14 @@ def test_signatures_match_model_conventions():
     assert paged["block_table"][1] == (cfg.gen_batch, nb)
     assert paged["block_table"][2] == "i32"
     assert paged["copy_src"][1] == paged["copy_dst"][1] == (cfg.gen_batch,)
+    chunk = {s[0]: s for s in sigs["prefill_chunk"]}
+    assert chunk["kv"][1] == model.kv_shape(cfg)
+    assert chunk["chunk_toks"][1] == (cfg.gen_batch, cfg.prefill_chunk)
+    assert chunk["start"][1] == chunk["vlen"][1] == (cfg.gen_batch,)
+    cpaged = {s[0]: s for s in sigs["prefill_chunk_paged"]}
+    assert cpaged["kv_pool"][1] == model.kv_pool_shape(cfg)
+    assert cpaged["block_table"][1] == (cfg.gen_batch, nb)
+    assert cpaged["chunk_toks"][1] == (cfg.gen_batch, cfg.prefill_chunk)
     # the paged pool covers exactly the dense capacity plus the trash block
     n, _l, _two, bs, _h, _d = paged["kv_pool"][1]
     assert nb * bs == cfg.max_seq

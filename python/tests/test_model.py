@@ -267,6 +267,322 @@ def test_paged_kernel_matches_numpy_reference(params):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# chunked prefill parity (PR-9: W forced tokens per dispatch never change
+# tokens, logprobs, or the KV cache vs. token-at-a-time prefill)
+# ---------------------------------------------------------------------------
+
+# mixed prompt lengths: W (=8) divides none of them, rows finish prefill at
+# different rounds (decode rides along while others still chunk), and the
+# longest crosses a KV-block boundary during ingestion
+_CHUNK_PROMPTS = [5, 11, 8, 16]
+
+
+def _mk_streams(seed):
+    rng = np.random.default_rng(seed)
+    return [
+        [vocab.BOS_ID] + [int(t) for t in rng.integers(3, 40, size=n)]
+        for n in _CHUNK_PROMPTS
+    ]
+
+
+def _run_decode_sim(params, streams0, gum, n_gen):
+    """Token-at-a-time engine simulator on decode_step: every round each
+    row feeds one token; rows at the end of their stream sample (with the
+    same fixed gumbel each round) and append. Returns per-row generated
+    tokens / chosen lps / distributions, final kv, final positions."""
+    bg = CFG.gen_batch
+    temp = jnp.float32(1.0)
+    streams = [list(s) for s in streams0]
+    p = [0] * bg
+    gen = [[] for _ in range(bg)]
+    lps = [[] for _ in range(bg)]
+    dists = [[] for _ in range(bg)]
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    while any(len(g) < n_gen for g in gen):
+        pos = jnp.asarray(p, jnp.int32)
+        cur = jnp.asarray([streams[r][p[r]] for r in range(bg)], jnp.int32)
+        forced = [
+            streams[r][p[r] + 1] if p[r] + 1 < len(streams[r]) else None
+            for r in range(bg)
+        ]
+        ftok = jnp.asarray([f if f is not None else 0 for f in forced], jnp.int32)
+        fmask = jnp.asarray(
+            [0.0 if f is None else 1.0 for f in forced], jnp.float32)
+        nt, lp, lpa, kv, _ = model.decode_step(
+            CFG, params, kv, pos, cur, gum, ftok, fmask, temp)
+        nt_h, lp_h, lpa_h = np.asarray(nt), np.asarray(lp), np.asarray(lpa)
+        for r in range(bg):
+            if forced[r] is None:
+                streams[r].append(int(nt_h[r]))
+                gen[r].append(int(nt_h[r]))
+                lps[r].append(lp_h[r])
+                dists[r].append(lpa_h[r])
+            p[r] += 1
+    return streams, gen, lps, dists, kv, p
+
+
+def _run_chunk_sim(params, streams0, gum, n_gen, paged):
+    """Chunked engine simulator: every round row r feeds
+    n_r = min(W, len(stream_r) - p_r) tokens in one prefill_chunk
+    dispatch; rows whose chunk reaches the stream end sample in the same
+    dispatch. Decode rows ride along with n_r = 1."""
+    bg = CFG.gen_batch
+    w = CFG.prefill_chunk
+    temp = jnp.float32(1.0)
+    streams = [list(s) for s in streams0]
+    p = [0] * bg
+    gen = [[] for _ in range(bg)]
+    lps = [[] for _ in range(bg)]
+    dists = [[] for _ in range(bg)]
+    if paged:
+        cache = jnp.zeros(model.kv_pool_shape(CFG), jnp.float32)
+        table, trash = _private_tables()
+        nocopy = _no_copy(trash)
+    else:
+        cache = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    n_dispatch = 0
+    while any(len(g) < n_gen for g in gen):
+        n = [min(w, len(streams[r]) - p[r]) for r in range(bg)]
+        toks = np.full((bg, w), vocab.PAD_ID, np.int32)
+        for r in range(bg):
+            toks[r, : n[r]] = streams[r][p[r] : p[r] + n[r]]
+        forced = [
+            streams[r][p[r] + n[r]] if p[r] + n[r] < len(streams[r]) else None
+            for r in range(bg)
+        ]
+        ftok = jnp.asarray([f if f is not None else 0 for f in forced], jnp.int32)
+        fmask = jnp.asarray(
+            [0.0 if f is None else 1.0 for f in forced], jnp.float32)
+        args = (jnp.asarray(p, jnp.int32), jnp.asarray(toks),
+                jnp.asarray(n, jnp.int32), gum, ftok, fmask, temp)
+        if paged:
+            nt, lp, lpa, cache, _ = model.prefill_chunk_paged(
+                CFG, params, cache, table, nocopy, nocopy, *args)
+        else:
+            nt, lp, lpa, cache, _ = model.prefill_chunk(CFG, params, cache, *args)
+        n_dispatch += 1
+        nt_h, lp_h, lpa_h = np.asarray(nt), np.asarray(lp), np.asarray(lpa)
+        for r in range(bg):
+            if forced[r] is None:
+                streams[r].append(int(nt_h[r]))
+                gen[r].append(int(nt_h[r]))
+                lps[r].append(lp_h[r])
+                dists[r].append(lpa_h[r])
+            p[r] += n[r]
+    return streams, gen, lps, dists, cache, p, n_dispatch
+
+
+def test_prefill_chunk_matches_token_at_a_time_bitwise(params):
+    """The PR-9 correctness contract: chunked prompt ingestion — W forced
+    tokens per dispatch, remainders, decode rows riding along — yields
+    bit-identical sampled tokens, chosen logprobs, full distributions AND
+    KV contents vs. feeding the same streams one token at a time."""
+    streams0 = _mk_streams(21)
+    rng = np.random.default_rng(9)
+    gum = jnp.asarray(
+        rng.standard_normal((CFG.gen_batch, CFG.vocab)).astype(np.float32))
+    n_gen = 3
+    s_l, gen_l, lps_l, dists_l, kv_l, p_l = _run_decode_sim(
+        params, streams0, gum, n_gen)
+    s_c, gen_c, lps_c, dists_c, kv_c, p_c, nd = _run_chunk_sim(
+        params, streams0, gum, n_gen, paged=False)
+    for r in range(CFG.gen_batch):
+        k = min(len(gen_l[r]), len(gen_c[r]))
+        assert k >= n_gen
+        assert gen_l[r][:k] == gen_c[r][:k], r
+        np.testing.assert_array_equal(
+            np.asarray(lps_l[r][:k]), np.asarray(lps_c[r][:k]))
+        np.testing.assert_array_equal(
+            np.asarray(dists_l[r][:k]), np.asarray(dists_c[r][:k]))
+    # chunking really reduced dispatch count: the token-at-a-time sim uses
+    # one dispatch per position of the slowest row
+    assert nd < max(p_l)
+    # KV contents agree bit-for-bit on every position both sims fed
+    kv_l, kv_c = np.asarray(kv_l), np.asarray(kv_c)
+    for r in range(CFG.gen_batch):
+        ext = min(p_l[r], p_c[r])
+        np.testing.assert_array_equal(
+            kv_l[:, :, r, :ext], kv_c[:, :, r, :ext])
+
+
+def test_prefill_chunk_paged_matches_dense_bitwise(params):
+    """Chunked ingestion through the paged pool (block tables, trash
+    parking) is bit-identical to chunked ingestion on the dense layout —
+    the same contract the single-step graphs already honor."""
+    streams0 = _mk_streams(22)
+    rng = np.random.default_rng(10)
+    gum = jnp.asarray(
+        rng.standard_normal((CFG.gen_batch, CFG.vocab)).astype(np.float32))
+    n_gen = 2
+    _, gen_d, lps_d, dists_d, kv_d, p_d, _ = _run_chunk_sim(
+        params, streams0, gum, n_gen, paged=False)
+    _, gen_p, lps_p, dists_p, pool, p_p, _ = _run_chunk_sim(
+        params, streams0, gum, n_gen, paged=True)
+    assert p_d == p_p
+    table, _trash = _private_tables()
+    from compile.kernels import ref
+    for r in range(CFG.gen_batch):
+        assert gen_d[r] == gen_p[r], r
+        np.testing.assert_array_equal(np.asarray(lps_d[r]), np.asarray(lps_p[r]))
+        np.testing.assert_array_equal(
+            np.asarray(dists_d[r]), np.asarray(dists_p[r]))
+    # the densified pool carries the same timelines the dense kv does
+    kv_d = np.asarray(kv_d)
+    for l in range(CFG.n_layers):
+        for plane in range(2):
+            dense_view = np.asarray(
+                ref.gather_kv_blocks(jnp.asarray(pool)[:, l, plane], table))
+            for r in range(CFG.gen_batch):
+                np.testing.assert_array_equal(
+                    dense_view[r, : p_d[r]], kv_d[l, plane, r, : p_d[r]])
+
+
+def test_prefill_chunk_boundary_crossing_and_trash_isolation(params):
+    """One crafted chunk dispatch: rows 0/1 chunk positions 12..19 —
+    crossing the kv_block_size=16 block boundary mid-chunk — row 2 is
+    parked (vlen = 0), row 3 rides along as a plain decode row (vlen = 1,
+    samples). Dense and paged must agree bitwise with each other and with
+    the token-at-a-time continuation, and the parked row's physical
+    blocks must come back untouched (inert scatters land in trash)."""
+    bs = CFG.kv_block_size
+    w = CFG.prefill_chunk
+    assert 12 < bs < 12 + w, "chunk must straddle the block boundary"
+    bg = CFG.gen_batch
+    rng = np.random.default_rng(17)
+    gum = jnp.asarray(rng.standard_normal((bg, CFG.vocab)).astype(np.float32))
+    temp = jnp.float32(1.0)
+    streams = [
+        [vocab.BOS_ID] + [int(t) for t in rng.integers(3, 40, size=19)]
+        for _ in range(bg)
+    ]  # stream length 20: positions 0..19
+
+    # shared 12-position prefix via the legacy graphs on both layouts
+    kv = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    pool = jnp.zeros(model.kv_pool_shape(CFG), jnp.float32)
+    table, trash = _private_tables()
+    nocopy = _no_copy(trash)
+    for p in range(12):
+        pos = jnp.full((bg,), p, jnp.int32)
+        cur = jnp.asarray([s[p] for s in streams], jnp.int32)
+        ftok = jnp.asarray([s[p + 1] for s in streams], jnp.int32)
+        fmask = jnp.ones((bg,), jnp.float32)
+        _, _, _, kv, _ = model.decode_step(
+            CFG, params, kv, pos, cur, gum, ftok, fmask, temp)
+        _, _, _, pool, _ = model.decode_step_paged(
+            CFG, params, pool, table, nocopy, nocopy,
+            pos, cur, gum, ftok, fmask, temp)
+
+    # the chunk dispatch: vlen [8, 8, 0, 1], start 12 (park for row 2)
+    park = CFG.max_seq - 1
+    vlen = [w, w, 0, 1]
+    start = jnp.asarray([12, 12, park, 12], jnp.int32)
+    toks = np.full((bg, w), vocab.PAD_ID, np.int32)
+    for r, n in enumerate(vlen):
+        toks[r, :n] = streams[r][12 : 12 + n]
+    # rows 0/1 end at position 19 == stream end -> sample; row 3 samples
+    # at 12; parked row 2 carries the idle-row forcing lanes (PAD)
+    ftok = jnp.asarray([0, 0, vocab.PAD_ID, 0], jnp.int32)
+    fmask = jnp.asarray([0.0, 0.0, 1.0, 0.0], jnp.float32)
+    args = (start, jnp.asarray(toks), jnp.asarray(vlen, jnp.int32),
+            gum, ftok, fmask, temp)
+    pool_before = np.asarray(pool)
+    nt_d, lp_d, lpa_d, kv, _ = model.prefill_chunk(CFG, params, kv, *args)
+    nt_p, lp_p, lpa_p, pool, _ = model.prefill_chunk_paged(
+        CFG, params, pool, table, nocopy, nocopy, *args)
+
+    # dense == paged, bitwise, for the whole dispatch
+    np.testing.assert_array_equal(np.asarray(nt_d), np.asarray(nt_p))
+    np.testing.assert_array_equal(np.asarray(lp_d), np.asarray(lp_p))
+    np.testing.assert_array_equal(np.asarray(lpa_d), np.asarray(lpa_p))
+
+    # parked row 2's physical blocks are untouched: inert lanes write only
+    # the trash block
+    pool_after = np.asarray(pool)
+    own = np.asarray(table)[2]
+    np.testing.assert_array_equal(pool_after[own], pool_before[own])
+
+    # == the token-at-a-time continuation: row 3's sample equals legacy
+    # step 12; rows 0/1's samples equal legacy step 19
+    kv_ref = jnp.zeros(model.kv_shape(CFG), jnp.float32)
+    for p in range(12):
+        pos = jnp.full((bg,), p, jnp.int32)
+        cur = jnp.asarray([s[p] for s in streams], jnp.int32)
+        ftok_l = jnp.asarray([s[p + 1] for s in streams], jnp.int32)
+        _, _, _, kv_ref, _ = model.decode_step(
+            CFG, params, kv_ref, pos, cur, gum, ftok_l,
+            jnp.ones((bg,), jnp.float32), temp)
+    row3_sample = None
+    for p in range(12, 20):
+        # rows 0/1 continue forced; rows 2/3 park after their work is done
+        pos_v, cur_v, ftok_v, fmask_v = [], [], [], []
+        for r in range(bg):
+            if r in (0, 1):
+                pos_v.append(p)
+                cur_v.append(streams[r][p])
+                last = p + 1 >= 20
+                ftok_v.append(0 if last else streams[r][p + 1])
+                fmask_v.append(0.0 if last else 1.0)
+            elif r == 3 and p == 12:
+                pos_v.append(p)
+                cur_v.append(streams[r][p])
+                ftok_v.append(0)
+                fmask_v.append(0.0)
+            else:  # parked
+                pos_v.append(park)
+                cur_v.append(vocab.PAD_ID)
+                ftok_v.append(vocab.PAD_ID)
+                fmask_v.append(1.0)
+        nt_l, lp_l, lpa_l, kv_ref, _ = model.decode_step(
+            CFG, params, kv_ref, jnp.asarray(pos_v, jnp.int32),
+            jnp.asarray(cur_v, jnp.int32), gum,
+            jnp.asarray(ftok_v, jnp.int32), jnp.asarray(fmask_v, jnp.float32),
+            temp)
+        if p == 12:
+            row3_sample = (np.asarray(nt_l)[3], np.asarray(lp_l)[3],
+                           np.asarray(lpa_l)[3])
+    nt_d, lp_d, lpa_d = np.asarray(nt_d), np.asarray(lp_d), np.asarray(lpa_d)
+    assert nt_d[3] == row3_sample[0]
+    np.testing.assert_array_equal(lp_d[3], row3_sample[1])
+    np.testing.assert_array_equal(lpa_d[3], row3_sample[2])
+    for r in (0, 1):
+        assert nt_d[r] == np.asarray(nt_l)[r]
+        np.testing.assert_array_equal(lp_d[r], np.asarray(lp_l)[r])
+        np.testing.assert_array_equal(lpa_d[r], np.asarray(lpa_l)[r])
+
+
+def test_chunk_kernel_matches_numpy_reference(params):
+    """kernels.attention.{chunk,paged_chunk}_decode_attention ==
+    ref.{chunk,paged_chunk}_decode_attention on random data with
+    arbitrary (even unordered) per-lane positions."""
+    from compile.kernels import attention as attn_k
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(5)
+    n, _l, _two, bs, h, d = model.kv_pool_shape(CFG)
+    nb = model.blocks_per_row(CFG)
+    b = CFG.gen_batch
+    w = CFG.prefill_chunk
+    t = CFG.max_seq
+    kc = jnp.asarray(rng.standard_normal((b, t, h, d)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal((b, t, h, d)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((b, w, h, d)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, t, size=(b, w)).astype(np.int32))
+    got = attn_k.chunk_decode_attention(q, kc, vc, pos)
+    want = ref.chunk_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    kp = jnp.asarray(rng.standard_normal((n, bs, h, d)).astype(np.float32))
+    vp = jnp.asarray(rng.standard_normal((n, bs, h, d)).astype(np.float32))
+    table = jnp.asarray(
+        np.stack([rng.permutation(n - 1)[:nb] for _ in range(b)]).astype(np.int32)
+    )
+    posp = jnp.asarray(rng.integers(0, nb * bs, size=(b, w)).astype(np.int32))
+    got = attn_k.paged_chunk_decode_attention(q, kp, vp, table, posp)
+    want = ref.paged_chunk_decode_attention(q, kp, vp, table, posp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_train_step_is_onpolicy_consistent(params):
     """behavior_lp from score => ESS = 1, KL = 0, and loss gradient flows."""
     tokens, seg, pos = mk_tokens(1, CFG.train_batch, 24)

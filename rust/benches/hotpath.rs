@@ -9,6 +9,9 @@
 //! * trainer optimizer step (per variant)
 //! * weight swap: eager (decode stalls for the transfer) vs overlapped
 //!   (shadow staging between steps + zero-stall commit)
+//! * chunked prompt ingestion: dispatches-to-first-sample and wall time
+//!   at `prefill_chunk` 1 vs W (timed section needs the runtime; the
+//!   golden-shadow dispatch counts below run device-free)
 //! * packer throughput, broker round-trip, RNG fill
 //!
 //! `cargo bench --bench hotpath`
@@ -170,6 +173,57 @@ fn engine_benches() -> anyhow::Result<()> {
         );
     }
 
+    benchkit::section("L3 hot paths — chunked prompt ingestion");
+    {
+        let mut rt = Runtime::new()?;
+        let compiled_w = rt.manifest.variant("tiny")?.prefill_chunk;
+        let prompt_len = 48usize; // stream = 49 positions to first sample
+        for w in [1usize, 8] {
+            if w > 1 && compiled_w < w {
+                eprintln!(
+                    "SKIP chunked ingestion at W={w}: artifacts compiled \
+                     without prefill_chunk graphs (width {compiled_w})"
+                );
+                continue;
+            }
+            let params = rt.init_params("tiny", 1)?;
+            let mut cfg = EngineCfg::new("tiny");
+            cfg.max_new_tokens = usize::MAX / 2;
+            cfg.prefill_chunk = w;
+            let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(2))?;
+            let gen = TaskGen::curriculum_small();
+            for i in 0..eng.n_slots() {
+                let p = gen.problem(i as u64);
+                let toks: Vec<i32> = (0..prompt_len).map(|t| 3 + (t % 40) as i32).collect();
+                eng.add_request(p, toks, i as u64);
+            }
+            let sw = Stopwatch::new();
+            let mut dispatches = 0u64;
+            loop {
+                let out = eng.step()?;
+                dispatches += 1;
+                if out.tokens_sampled > 0 || dispatches > 2 * (prompt_len as u64 + 2) {
+                    break;
+                }
+            }
+            let ms = sw.millis();
+            println!(
+                "chunked ingestion W={w}: {dispatches} dispatches to first sample \
+                 ({ms:.2} ms, {} chunk dispatches, {} forced steps saved)",
+                eng.stats.prefill_chunks, eng.stats.forced_steps_saved,
+            );
+            benchkit::json_note(
+                &format!("chunked ingestion/dispatches_w{w}"),
+                dispatches as f64,
+            );
+            benchkit::json_note(&format!("chunked ingestion/ms_w{w}"), ms);
+            benchkit::json_note(
+                &format!("chunked ingestion/forced_steps_saved_w{w}"),
+                eng.stats.forced_steps_saved as f64,
+            );
+        }
+    }
+
     benchkit::section("L3 hot paths — in-flight weight swap (overlapped)");
     {
         let mut rt = Runtime::new()?;
@@ -274,6 +328,37 @@ fn main() -> anyhow::Result<()> {
             rx.recv(Duration::from_secs(1)).unwrap();
         }
     });
+
+    // chunked-prefill dispatch accounting over the device-free golden
+    // shadow: prompt ingestion plus chaos re-seating (kills, forced
+    // preemptions) billed at W = 1 vs W = 8 — the O(P/W) replay claim
+    // as machine-readable counts, runnable without any runtime
+    benchkit::section("chunked prefill — dispatch accounting (device-free)");
+    {
+        use pipeline_rl::testkit::golden::{GoldenCfg, GoldenPipeline, Perturbation};
+        let pert = Perturbation::generate(7, 12, 4, 3);
+        for w in [1usize, 8] {
+            let mut cfg = GoldenCfg::new(0xbe9c_11);
+            cfg.steps = 12;
+            cfg.live_target = 8;
+            cfg.prefill_chunk = w;
+            let run = GoldenPipeline::run(&cfg, &pert).expect("golden shadow run");
+            println!(
+                "    prefill_chunk={w}: {} prefill dispatches, {} forced steps saved \
+                 ({} re-seated)",
+                run.stats.prefill_dispatches, run.stats.forced_steps_saved,
+                run.stats.migrated + run.stats.preemptions,
+            );
+            benchkit::json_note(
+                &format!("chunked prefill shadow/dispatches_w{w}"),
+                run.stats.prefill_dispatches as f64,
+            );
+            benchkit::json_note(
+                &format!("chunked prefill shadow/forced_steps_saved_w{w}"),
+                run.stats.forced_steps_saved as f64,
+            );
+        }
+    }
 
     // rng gumbel fill (decode-loop noise)
     let mut rng = Rng::new(3);

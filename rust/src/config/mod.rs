@@ -197,6 +197,13 @@ pub struct KvConfig {
     /// is realized in device memory. Dense stays the default until paged
     /// parity is proven on the target runtime.
     pub layout: KvLayout,
+    /// chunked-prefill width W: prompt ingestion and KV replay feed W
+    /// forced tokens per `prefill_chunk` dispatch (ceil(P/W) dispatches
+    /// for a P-token prefix) instead of one decode step per token.
+    /// 1 = legacy token-at-a-time (bit-for-bit identical, no chunk graph
+    /// needed); W > 1 requires the artifact's `prefill_chunk` entries and
+    /// must not exceed the compiled chunk width in the manifest.
+    pub prefill_chunk: usize,
 }
 
 impl Default for KvConfig {
@@ -207,6 +214,7 @@ impl Default for KvConfig {
             preempt: PreemptPolicy::None,
             replay_batch: 4,
             layout: KvLayout::Dense,
+            prefill_chunk: 1,
         }
     }
 }
@@ -494,6 +502,7 @@ impl RunConfig {
                 preempt,
                 replay_batch: doc.usize_or("kv.replay_batch", d.kv.replay_batch)?,
                 layout: kv_layout,
+                prefill_chunk: doc.usize_or("kv.prefill_chunk", d.kv.prefill_chunk)?,
             },
             autoscale: AutoScaleCfg {
                 enabled: doc.bool_or("autoscale.enabled", da.enabled)?,
@@ -591,12 +600,13 @@ impl RunConfig {
         let _ = writeln!(s, "[sched]\npolicy = \"{}\"", self.sched.name());
         let _ = writeln!(
             s,
-            "[kv]\nblock_size = {}\novercommit = {}\npreempt_policy = \"{}\"\nreplay_batch = {}\nlayout = \"{}\"",
+            "[kv]\nblock_size = {}\novercommit = {}\npreempt_policy = \"{}\"\nreplay_batch = {}\nlayout = \"{}\"\nprefill_chunk = {}",
             self.kv.block_size,
             self.kv.overcommit,
             self.kv.preempt.name(),
             self.kv.replay_batch,
-            self.kv.layout.name()
+            self.kv.layout.name(),
+            self.kv.prefill_chunk
         );
         let _ = writeln!(
             s,
@@ -701,6 +711,9 @@ impl RunConfig {
         }
         if self.kv.replay_batch == 0 {
             bail!("kv.replay_batch must be >= 1 (1 = admit eagerly)");
+        }
+        if self.kv.prefill_chunk == 0 {
+            bail!("kv.prefill_chunk must be >= 1 (1 = token-at-a-time prefill)");
         }
         // overcommit > 1 with preempt = none is deliberately legal: the
         // legacy stall-in-place path is the ablation baseline the
@@ -1034,6 +1047,7 @@ mod tests {
             preempt_policy = "youngest"
             replay_batch = 6
             layout = "paged"
+            prefill_chunk = 8
             "#,
         )
         .unwrap();
@@ -1043,14 +1057,17 @@ mod tests {
         assert_eq!(cfg.kv.preempt, PreemptPolicy::Youngest);
         assert_eq!(cfg.kv.replay_batch, 6);
         assert_eq!(cfg.kv.layout, KvLayout::Paged);
+        assert_eq!(cfg.kv.prefill_chunk, 8);
         cfg.validate().unwrap();
-        // defaults: exact pool, no preemption, coalescing on, dense cache
+        // defaults: exact pool, no preemption, coalescing on, dense cache,
+        // token-at-a-time prefill
         let d = RunConfig::default();
         assert_eq!(d.kv.block_size, 16);
         assert_eq!(d.kv.overcommit, 1.0);
         assert_eq!(d.kv.preempt, PreemptPolicy::None);
         assert_eq!(d.kv.replay_batch, 4);
         assert_eq!(d.kv.layout, KvLayout::Dense);
+        assert_eq!(d.kv.prefill_chunk, 1);
     }
 
     #[test]
@@ -1074,6 +1091,10 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.kv.replay_batch = 0;
         assert!(cfg.validate().is_err(), "zero replay batch refused");
+
+        let mut cfg = RunConfig::default();
+        cfg.kv.prefill_chunk = 0;
+        assert!(cfg.validate().is_err(), "zero prefill chunk refused");
 
         // oversubscription without preemption stays legal (the ablation
         // baseline: legacy stall-in-place)
@@ -1148,6 +1169,7 @@ mod tests {
             cfg.kv.preempt = *c.rng.choice(&[PreemptPolicy::None, PreemptPolicy::Youngest]);
             cfg.kv.replay_batch = c.usize_in(1, 12);
             cfg.kv.layout = *c.rng.choice(&[KvLayout::Dense, KvLayout::Paged]);
+            cfg.kv.prefill_chunk = c.usize_in(1, 16);
             cfg.checkpoint.every = c.usize_in(0, 9);
             cfg.checkpoint.keep_last = c.usize_in(0, 5);
             cfg.checkpoint.write_retries = c.usize_in(0, 4);

@@ -361,6 +361,27 @@ pub fn run_actor(args: ActorArgs) -> Result<()> {
                 steps,
                 engine.kv_shared_saved_blocks() as f64,
             );
+            // chunked-prefill accounting: dispatch counts and the split
+            // prefill/decode execute times, so ingestion cost is visible
+            // separately from steady-state decode latency
+            hub.record(
+                &format!("actor{actor_id}/prefill_chunks"),
+                t,
+                steps,
+                engine.stats.prefill_chunks as f64,
+            );
+            hub.record(
+                &format!("actor{actor_id}/forced_steps_saved"),
+                t,
+                steps,
+                engine.stats.forced_steps_saved as f64,
+            );
+            hub.record(
+                &format!("actor{actor_id}/prefill_us"),
+                t,
+                steps,
+                engine.stats.prefill_us as f64,
+            );
         }
 
         // ---- finished sequences: verify reward, publish ----

@@ -61,6 +61,16 @@ pub struct StepArena {
     pub table: Vec<i32>,
     pub copy_src: Vec<i32>,
     pub copy_dst: Vec<i32>,
+    /// chunked-prefill lanes (empty until `enable_chunk`): the `[B, W]`
+    /// forced-token matrix and the per-row valid length for the
+    /// `prefill_chunk` graphs. Row i feeds `ctoks[i*W .. i*W+vlen[i]]` at
+    /// positions `pos[i] + j`; lanes past `vlen[i]` are inert (the graph
+    /// PAD-masks them and parks their scatter), so the tail may hold
+    /// stale tokens.
+    pub ctoks: Vec<i32>,
+    pub vlen: Vec<i32>,
+    /// compiled chunk width W when chunked prefill is on, 0 when off
+    chunk_w: usize,
     /// blocks per row (NB) when paged, 0 when dense
     blocks_per_row: usize,
     /// the pool's sacrificial trailing block index
@@ -87,6 +97,15 @@ pub struct PagedLanes {
     pub copy_dst: Literal,
 }
 
+/// The chunk graph's input literals, in `prefill_chunk` operand order
+/// (`start, chunk_toks, vlen` — after params and the cache, before the
+/// shared `gumbel, ftok, fmask, temp` tail from `StepLiterals`).
+pub struct ChunkLanes {
+    pub start: Literal,
+    pub ctoks: Literal,
+    pub vlen: Literal,
+}
+
 impl StepArena {
     /// `park` is the idle-row cache position (the engine passes
     /// `max_seq - 1` — see module docs).
@@ -105,6 +124,9 @@ impl StepArena {
             table: Vec::new(),
             copy_src: Vec::new(),
             copy_dst: Vec::new(),
+            ctoks: Vec::new(),
+            vlen: Vec::new(),
+            chunk_w: 0,
             blocks_per_row: 0,
             trash: 0,
             temp,
@@ -125,6 +147,20 @@ impl StepArena {
 
     pub fn is_paged(&self) -> bool {
         self.blocks_per_row > 0
+    }
+
+    /// Size the chunked-prefill lanes for compiled width `w`. Call once
+    /// right after construction when `[kv] prefill_chunk > 1`; the
+    /// single-step lanes keep working unchanged (and stay the hot path
+    /// on rounds where every row advances by one token).
+    pub fn enable_chunk(&mut self, w: usize) {
+        self.chunk_w = w;
+        self.ctoks = vec![self.pad; self.b * w];
+        self.vlen = vec![0; self.b];
+    }
+
+    pub fn chunk_width(&self) -> usize {
+        self.chunk_w
     }
 
     pub fn batch(&self) -> usize {
@@ -148,6 +184,9 @@ impl StepArena {
         self.table.iter_mut().for_each(|x| *x = trash);
         self.copy_src.iter_mut().for_each(|x| *x = trash);
         self.copy_dst.iter_mut().for_each(|x| *x = trash);
+        let pad = self.pad;
+        self.ctoks.iter_mut().for_each(|x| *x = pad);
+        self.vlen.iter_mut().for_each(|x| *x = 0);
     }
 
     /// Zero the noise buffer (greedy decoding / replay).
@@ -173,6 +212,56 @@ impl StepArena {
                 self.fmask[i] = 0.0;
             }
         }
+    }
+
+    /// Write one row's chunked-prefill inputs: `toks` are the forced
+    /// tokens fed at cache positions `start + j` (at most W of them —
+    /// the engine clamps), `forced` is the stream token after the chunk
+    /// (None when the chunk reaches the stream end and the row samples),
+    /// `cap` backs the last written position. Rows with no work this
+    /// round stay at the reset defaults (`vlen = 0`, parked `pos`).
+    pub fn set_chunk_row(
+        &mut self,
+        i: usize,
+        start: usize,
+        toks: &[i32],
+        forced: Option<i32>,
+        cap: usize,
+    ) {
+        let w = self.chunk_w;
+        let pad = self.pad;
+        debug_assert!(!toks.is_empty() && toks.len() <= w, "1..=W tokens per chunk row");
+        self.pos[i] = start as i32;
+        self.vlen[i] = toks.len() as i32;
+        self.ctoks[i * w..i * w + toks.len()].copy_from_slice(toks);
+        // inert tail lanes are PAD-masked in-graph; re-pad anyway so the
+        // staged buffer never leaks a previous round's tokens
+        self.ctoks[i * w + toks.len()..(i + 1) * w].iter_mut().for_each(|x| *x = pad);
+        self.cap[i] = cap;
+        match forced {
+            Some(t) => {
+                self.ftok[i] = t;
+                self.fmask[i] = 1.0;
+            }
+            None => {
+                self.ftok[i] = self.pad;
+                self.fmask[i] = 0.0;
+            }
+        }
+    }
+
+    /// Build the chunk graph's extra input literals: start `[B]`, forced
+    /// tokens `[B, W]`, valid lengths `[B]`. The `gumbel/ftok/fmask/temp`
+    /// tail comes from `to_literals` (shared with the single-step path).
+    pub fn chunk_literals(&self) -> Result<ChunkLanes> {
+        debug_assert!(self.chunk_w > 0, "enable_chunk first");
+        let b = self.b as i64;
+        let w = self.chunk_w as i64;
+        Ok(ChunkLanes {
+            start: Literal::vec1(&self.pos),
+            ctoks: Literal::vec1(&self.ctoks).reshape(&[b, w])?,
+            vlen: Literal::vec1(&self.vlen),
+        })
     }
 
     /// The mutable `[NB]` block-table lane of one row — the engine hands
@@ -262,6 +351,37 @@ mod tests {
         assert_eq!(a.table, vec![24; 6], "reset re-parks the table lane");
         assert_eq!(a.copy_src, vec![24, 24]);
         assert_eq!(a.copy_dst, vec![24, 24]);
+    }
+
+    #[test]
+    fn chunk_lanes_stage_and_reset_clean() {
+        let mut a = StepArena::new(3, 4, -7, 1.0, 95);
+        assert_eq!(a.chunk_width(), 0);
+        a.enable_chunk(4);
+        assert_eq!(a.chunk_width(), 4);
+        assert_eq!(a.ctoks, vec![-7; 12], "chunk lanes start PAD-parked");
+        assert_eq!(a.vlen, vec![0, 0, 0]);
+        // full-width prefill row, remainder row, and a decode rider
+        a.set_chunk_row(0, 8, &[10, 11, 12, 13], Some(14), 16);
+        a.set_chunk_row(1, 5, &[20, 21], None, 8);
+        a.set_chunk_row(2, 3, &[30], None, 8);
+        assert_eq!(a.pos, vec![8, 5, 3], "pos lane doubles as chunk start");
+        assert_eq!(a.vlen, vec![4, 2, 1]);
+        assert_eq!(a.ctoks, vec![10, 11, 12, 13, 20, 21, -7, -7, 30, -7, -7, -7]);
+        assert_eq!(a.ftok, vec![14, -7, -7]);
+        assert_eq!(a.fmask, vec![1.0, 0.0, 0.0]);
+        assert_eq!(a.cap, vec![16, 8, 8]);
+        // a shorter chunk re-pads the stale tail of the same row
+        a.set_chunk_row(0, 12, &[40], None, 16);
+        assert_eq!(&a.ctoks[..4], &[40, -7, -7, -7]);
+        let lanes = a.chunk_literals().unwrap();
+        assert_eq!(lanes.ctoks.array_shape().unwrap().dims(), &[3, 4]);
+        assert_eq!(lanes.start.array_shape().unwrap().dims(), &[3]);
+        assert_eq!(lanes.vlen.to_vec::<i32>().unwrap(), vec![1, 2, 1]);
+        a.reset();
+        assert_eq!(a.ctoks, vec![-7; 12], "reset re-parks the chunk lanes");
+        assert_eq!(a.vlen, vec![0, 0, 0]);
+        assert_eq!(a.pos, vec![95, 95, 95]);
     }
 
     #[test]

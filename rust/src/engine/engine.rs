@@ -11,8 +11,9 @@ use crate::data::task::Problem;
 use crate::model::tokenizer::{EOS_ID, PAD_ID};
 use crate::rl::Rollout;
 use crate::runtime::{
-    run_decode_step, run_decode_step_paged, DecodeInputs, DeviceVal, HostTensor, PagedInputs,
-    Runtime, StagePlan, TablePlan, Variant,
+    run_decode_step, run_decode_step_paged, run_prefill_chunk, run_prefill_chunk_paged,
+    ChunkInputs, DecodeInputs, DeviceVal, HostTensor, PagedInputs, Runtime, StagePlan, TablePlan,
+    Variant,
 };
 use crate::sched::{KvLayout, PreemptPolicy, SchedPolicy, Scheduler, SeqSnapshot, SeqView};
 use crate::util::timer::Stopwatch;
@@ -66,6 +67,14 @@ pub struct EngineCfg {
     /// greedy decoding: zero Gumbel noise (argmax) — used by the eval
     /// harness (Table 1 protocol)
     pub greedy: bool,
+    /// chunked-prefill width (`[kv] prefill_chunk`): rows with more than
+    /// one forced token left ride `prefill_chunk` dispatches that ingest
+    /// up to W stream tokens at once — ceil(P/W) dispatches for a
+    /// P-token prefix — while resident rows keep decoding in the same
+    /// dispatch. 1 = legacy token-at-a-time (bit-for-bit identical,
+    /// single decode graph); > 1 requires the artifact's chunk graphs
+    /// and must not exceed the manifest's compiled width.
+    pub prefill_chunk: usize,
 }
 
 impl EngineCfg {
@@ -84,6 +93,7 @@ impl EngineCfg {
             capture_dist: false,
             recompute_kv_on_update: false,
             greedy: false,
+            prefill_chunk: 1,
         }
     }
 }
@@ -140,6 +150,17 @@ pub struct EngineStats {
     /// init, recompute replay, or the tuple-readback fallback); the
     /// device-resident steady state keeps this at 1 total
     pub kv_restages: u64,
+    // ---- chunked prefill (prompt ingestion split out of decode) ----
+    /// execute time of `prefill_chunk` dispatches (prompt ingestion and
+    /// chunked replay), split out of `execute_us` so the decode-step
+    /// latency the throughput model cares about stays clean
+    pub prefill_us: u64,
+    /// `prefill_chunk` dispatches issued (step interleave + replay)
+    pub prefill_chunks: u64,
+    /// single-token dispatches the chunking eliminated: each chunk
+    /// dispatch covering K positions saves K - 1 of them, so
+    /// prompt ingestion to position P books P - ceil(P/W) here
+    pub forced_steps_saved: u64,
 }
 
 /// Captured distribution row (Fig 7): sampled token's full log-dist.
@@ -178,6 +199,10 @@ pub struct Engine {
     pub cfg: EngineCfg,
     variant: Variant,
     graph: Rc<crate::runtime::Graph>,
+    /// the `prefill_chunk` graph (loaded only when `cfg.prefill_chunk >
+    /// 1): rounds where some row has more than one forced token left
+    /// dispatch through this instead of W single decode steps
+    chunk_graph: Option<Rc<crate::runtime::Graph>>,
     /// double-buffered device-resident weights: the active set serves
     /// decode; incoming versions stage into the shadow set between steps
     /// and swap atomically at a step boundary (§Perf)
@@ -206,6 +231,18 @@ pub struct Engine {
     pub captured: Vec<DistRow>,
     /// reusable per-step input staging buffers (no hot-loop allocation)
     arena: StepArena,
+    /// loop-invariant replay/chunk literals, hoisted out of
+    /// `recompute_rows` (they were rebuilt on every replay pass): zero
+    /// Gumbel noise, the all-PAD forced-token lane, the all-ones force
+    /// mask, and the scalar temperature
+    zero_gum_l: Literal,
+    pad_ftok_l: Literal,
+    ones_fmask_l: Literal,
+    temp_l: Literal,
+    /// reusable per-row chunk lengths and last-written-position plan
+    /// for the chunked dispatch path (no hot-loop allocation)
+    chunk_len: Vec<usize>,
+    chunk_plan_pos: Vec<i32>,
     /// true between a weight commit and the first execute that consumes
     /// the new buffers (see `release_param_sources`)
     param_sources_pending: bool,
@@ -223,6 +260,27 @@ impl Engine {
         crate::runtime::check_params(&variant, init_params)?;
         let paged = cfg.kv_layout == KvLayout::Paged;
         let graph = rt.graph(&cfg.variant, if paged { "decode_paged" } else { "decode" })?;
+        ensure!(
+            cfg.prefill_chunk >= 1,
+            "[kv] prefill_chunk must be >= 1 (1 = token-at-a-time prefill)"
+        );
+        let chunk_graph = if cfg.prefill_chunk > 1 {
+            ensure!(
+                variant.prefill_chunk >= cfg.prefill_chunk,
+                "[kv] prefill_chunk {} exceeds the compiled chunk width {} of \
+                 variant '{}' — rebuild the artifacts with a wider \
+                 ModelConfig.prefill_chunk or lower the setting",
+                cfg.prefill_chunk,
+                variant.prefill_chunk,
+                cfg.variant
+            );
+            Some(rt.graph(
+                &cfg.variant,
+                if paged { "prefill_chunk_paged" } else { "prefill_chunk" },
+            )?)
+        } else {
+            None
+        };
         let kv = if paged {
             ensure!(
                 variant.has_paged_pool(),
@@ -278,6 +336,19 @@ impl Engine {
         if paged {
             arena.enable_paged(variant.kv_blocks_per_row, (variant.kv_pool_blocks - 1) as i32);
         }
+        if chunk_graph.is_some() {
+            // lanes are sized to the *compiled* width (the graph operand
+            // shape); a smaller cfg.prefill_chunk just leaves the tail
+            // lanes inert every dispatch
+            arena.enable_chunk(variant.prefill_chunk);
+        }
+        // replay/chunk literals that never change over the engine's life:
+        // zero gumbel (forced steps ignore sampling), all-PAD forcing,
+        // all-ones force mask, temperature
+        let zero_gum_l = HostTensor::zeros_f32(&[b, v]).to_literal()?;
+        let pad_ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
+        let ones_fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(cfg.temperature).to_literal()?;
         let mut eng = Engine {
             cfg,
             slots: (0..b).map(|_| None).collect(),
@@ -293,8 +364,15 @@ impl Engine {
             stats: EngineStats::default(),
             captured: Vec::new(),
             arena,
+            zero_gum_l,
+            pad_ftok_l,
+            ones_fmask_l,
+            temp_l,
+            chunk_len: vec![0; b],
+            chunk_plan_pos: vec![park; b],
             variant,
             graph,
+            chunk_graph,
             params: ShadowSet::new(),
             kv,
             param_sources_pending: false,
@@ -667,15 +745,25 @@ impl Engine {
             return replay_slots;
         }
         let waiting_replay = self.pending.iter().filter(|s| s.pos > 0).count();
-        if !replay_window_open(
+        // when the window is closed the hold applies to *replay
+        // candidates only*: fresh (pos == 0) sequences trigger no replay,
+        // so seating them costs the coalescing nothing — holding every
+        // free slot for them too starved fresh prompts whenever imports
+        // queued up (the gate below refuses pos > 0 while closed)
+        let window_open = replay_window_open(
             waiting_replay,
             free_slots,
             self.cfg.replay_batch,
             self.slots.len(),
-        ) {
+        );
+        if !window_open && self.pending.iter().all(|s| s.pos > 0) {
             return replay_slots; // hold the slots for the coalesced batch
         }
         let mut views_built = false;
+        // maps view_buf index -> pending index: identity when the window
+        // is open; skips replay candidates while it is closed so a
+        // pos > 0 head cannot head-of-line-block fresh prompts under FIFO
+        let mut pend_idx: Vec<usize> = Vec::new();
         for i in 0..self.slots.len() {
             if self.slots[i].is_some() {
                 continue;
@@ -687,13 +775,25 @@ impl Engine {
                 // built once per admit() into the reusable buffer, kept
                 // in sync with `pending` as picks are removed below
                 self.view_buf.clear();
+                pend_idx.clear();
                 let bs = self.cfg.block_size;
-                self.view_buf
-                    .extend(self.pending.iter().map(|s| s.view(s.total_len().div_ceil(bs))));
+                for (pi, s) in self.pending.iter().enumerate() {
+                    if !window_open && s.pos > 0 {
+                        continue; // waits for the coalesced replay batch
+                    }
+                    pend_idx.push(pi);
+                    self.view_buf.push(s.view(s.total_len().div_ceil(bs)));
+                }
                 views_built = true;
+            }
+            if self.view_buf.is_empty() {
+                break; // only held replay candidates remain
             }
             let allocator = &self.allocator;
             let gate = |v: &SeqView| {
+                if !window_open && v.pos > 0 {
+                    return false; // replay candidates wait for the window
+                }
                 if v.gen_len == 0 {
                     allocator.can_admit_shared(v.group_id, v.total_len)
                 } else {
@@ -703,11 +803,18 @@ impl Engine {
             let Some(idx) = self.scheduler.pick(&self.view_buf, &gate) else {
                 break; // policy admits nothing (e.g. out of KV blocks)
             };
-            let Some(seq) = self.pending.remove(idx) else {
+            let pi = pend_idx.get(idx).copied().unwrap_or(idx);
+            let Some(seq) = self.pending.remove(pi) else {
                 debug_assert!(false, "scheduler picked out-of-range index {idx}");
                 break;
             };
             self.view_buf.remove(idx);
+            pend_idx.remove(idx);
+            for x in pend_idx.iter_mut() {
+                if *x > pi {
+                    *x -= 1;
+                }
+            }
             if seq.gen_len() == 0 {
                 self.allocator
                     .admit_shared(seq.seq_id, seq.group_id, seq.total_len())
@@ -823,6 +930,7 @@ impl Engine {
         // preempt/swap) so the rest keep moving; without one the slot
         // stalls in place (legacy).
         let paged = self.arena.is_paged();
+        let w_cfg = if self.chunk_graph.is_some() { self.cfg.prefill_chunk } else { 1 };
         // CoW forks surfaced by this step's growth, to be staged into the
         // copy lanes *after* `arena.reset()` below (which re-parks them)
         let mut forks: Vec<(usize, u32, u32)> = Vec::new();
@@ -832,6 +940,22 @@ impl Engine {
             let mut ok = self.allocator.grow(sid, need).unwrap_or(false);
             if !ok {
                 ok = self.preempt_for_growth(i)?;
+            }
+            // chunked prefill: back the whole chunk if the pool allows;
+            // a refusal (all-or-nothing growth) just clamps this round's
+            // chunk to the capacity already held. Rows with forced
+            // tokens left have generated nothing (mid-stream rows sit at
+            // pos == stream.len() - 1), so neither grow call here can
+            // fork a shared block — the fork capture below stays a
+            // single pair per row
+            if ok && w_cfg > 1 {
+                if let Some(s) = &self.slots[i] {
+                    let remaining = s.stream.len() - s.pos;
+                    if remaining > 1 {
+                        let desired = w_cfg.min(remaining);
+                        let _ = self.allocator.grow(s.seq_id, s.pos + desired);
+                    }
+                }
             }
             if paged {
                 // the device copy must ride the same dispatch that first
@@ -855,19 +979,63 @@ impl Engine {
             return Ok(StepOutcome { idle: true, ..Default::default() });
         }
 
+        // ---- chunked-prefill round plan ----
+        // n_i = stream tokens row i feeds this round: up to W for rows
+        // still force-feeding a prefix (prompt ingestion), exactly 1 for
+        // resident decode rows riding along, clamped to the block-backed
+        // capacity. K = max n_i picks the dispatch: K == 1 keeps the
+        // single decode graph — the bit-for-bit legacy hot path,
+        // including its RNG consumption — and K > 1 rides one chunk
+        // dispatch that replaces K single steps.
+        let mut k_max = 1usize;
+        for i in 0..b {
+            self.chunk_len[i] = 0;
+            if self.stalled[i] {
+                continue;
+            }
+            let Some(s) = &self.slots[i] else { continue };
+            let mut n = w_cfg.min(s.stream.len() - s.pos).max(1);
+            if n > 1 {
+                let cap = self.allocator.capacity_tokens(s.seq_id).unwrap_or(s.pos + 1);
+                n = n.min(cap.saturating_sub(s.pos)).max(1);
+            }
+            self.chunk_len[i] = n;
+            k_max = k_max.max(n);
+        }
+        let chunked = k_max > 1;
+
         // ---- build inputs in the reusable arena (no allocation) ----
         let t_arena = Instant::now();
         self.arena.reset();
-        for (i, slot) in self.slots.iter().enumerate() {
-            if let Some(s) = slot {
-                if self.stalled[i] {
+        if chunked {
+            for i in 0..b {
+                let n = self.chunk_len[i];
+                if n == 0 {
                     continue;
                 }
+                let s = self.slots[i].as_ref().expect("planned rows are active");
                 let cap = self
                     .allocator
                     .capacity_tokens(s.seq_id)
                     .expect("active sequences hold a block table");
-                self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next(), cap);
+                // the forcing lanes describe the token *after* the chunk:
+                // present -> the sampling head is masked to it (more
+                // prefix left), absent -> the chunk's last lane samples
+                let forced = s.stream.get(s.pos + n).copied();
+                self.arena.set_chunk_row(i, s.pos, &s.stream[s.pos..s.pos + n], forced, cap);
+            }
+        } else {
+            for (i, slot) in self.slots.iter().enumerate() {
+                if let Some(s) = slot {
+                    if self.stalled[i] {
+                        continue;
+                    }
+                    let cap = self
+                        .allocator
+                        .capacity_tokens(s.seq_id)
+                        .expect("active sequences hold a block table");
+                    self.arena.set_slot(i, s.pos, s.cur_token(), s.forced_next(), cap);
+                }
             }
         }
         if paged {
@@ -891,57 +1059,127 @@ impl Engine {
         if self.cfg.greedy {
             self.arena.zero_gumbel();
         } else {
-            self.rng.fill_gumbel(&mut self.arena.gumbel);
+            // RNG-cursor pin: a chunk dispatch covering K positions
+            // consumes exactly the K Gumbel fills the legacy path would
+            // burn running K single steps (the last fill is the operand;
+            // K == 1 is the legacy path verbatim), so token streams stay
+            // identical between prefill_chunk = 1 and W whenever the
+            // per-step draws match — always under greedy, and under
+            // sampling whenever rows consume draw k at the same dispatch
+            // (e.g. lockstep prompts)
+            for _ in 0..k_max {
+                self.rng.fill_gumbel(&mut self.arena.gumbel);
+            }
         }
         // `lits` lives past the dispatch: staging inside run_decode_step
         // is asynchronous and reads from these literals
         let lits = self.arena.to_literals()?;
         let lanes = if paged { Some(self.arena.paged_literals()?) } else { None };
+        let chunk_lits = if chunked { Some(self.arena.chunk_literals()?) } else { None };
         self.stats.stage_us += t_arena.elapsed().as_micros() as u64;
 
+        let park = (self.variant.max_seq - 1) as i32;
         let param_bufs: Vec<&PjRtBuffer> =
             self.params.active().iter().map(|p| &p.buf).collect();
-        let inputs = DecodeInputs {
-            pos: &lits.pos,
-            cur: &lits.cur,
-            gumbel: &lits.gumbel,
-            ftok: &lits.ftok,
-            fmask: &lits.fmask,
-            temp: &lits.temp,
-        };
-        let plan = StagePlan {
-            park: (self.variant.max_seq - 1) as i32,
-            pos: &self.arena.pos,
-            cap: &self.arena.cap,
-        };
-        let d = match &lanes {
-            Some(lanes) => run_decode_step_paged(
-                &self.graph,
-                &param_bufs,
-                &mut self.kv,
-                PagedInputs {
-                    table: &lanes.table,
-                    copy_src: &lanes.copy_src,
-                    copy_dst: &lanes.copy_dst,
-                },
-                inputs,
-                Some(&plan),
-                Some(&TablePlan {
-                    block_size: self.cfg.block_size,
-                    blocks_per_row: self.variant.kv_blocks_per_row,
-                    pool_blocks: self.variant.kv_pool_blocks,
-                    table: &self.arena.table,
-                    copy_src: &self.arena.copy_src,
-                    copy_dst: &self.arena.copy_dst,
-                }),
-            )
-            .context("paged decode step")?,
-            None => run_decode_step(&self.graph, &param_bufs, &mut self.kv, inputs, Some(&plan))
-                .context("decode step")?,
+        let d = if let Some(cl) = &chunk_lits {
+            // the chunk writes start..=start+n-1: the plan carries each
+            // row's *last* written position so the existing capacity and
+            // table entitlement checks cover every lane
+            for i in 0..b {
+                self.chunk_plan_pos[i] = match self.chunk_len[i] {
+                    0 => park,
+                    n => {
+                        (self.slots[i].as_ref().expect("planned rows are active").pos + n - 1)
+                            as i32
+                    }
+                };
+            }
+            let inputs = ChunkInputs {
+                start: &cl.start,
+                ctoks: &cl.ctoks,
+                vlen: &cl.vlen,
+                gumbel: &lits.gumbel,
+                ftok: &lits.ftok,
+                fmask: &lits.fmask,
+                temp: &lits.temp,
+            };
+            let plan = StagePlan { park, pos: &self.chunk_plan_pos, cap: &self.arena.cap };
+            let g = self.chunk_graph.as_ref().expect("chunked round requires the chunk graph");
+            match &lanes {
+                Some(lanes) => run_prefill_chunk_paged(
+                    g,
+                    &param_bufs,
+                    &mut self.kv,
+                    PagedInputs {
+                        table: &lanes.table,
+                        copy_src: &lanes.copy_src,
+                        copy_dst: &lanes.copy_dst,
+                    },
+                    inputs,
+                    Some(&plan),
+                    Some(&TablePlan {
+                        block_size: self.cfg.block_size,
+                        blocks_per_row: self.variant.kv_blocks_per_row,
+                        pool_blocks: self.variant.kv_pool_blocks,
+                        table: &self.arena.table,
+                        copy_src: &self.arena.copy_src,
+                        copy_dst: &self.arena.copy_dst,
+                    }),
+                )
+                .context("paged chunked prefill step")?,
+                None => run_prefill_chunk(g, &param_bufs, &mut self.kv, inputs, Some(&plan))
+                    .context("chunked prefill step")?,
+            }
+        } else {
+            let inputs = DecodeInputs {
+                pos: &lits.pos,
+                cur: &lits.cur,
+                gumbel: &lits.gumbel,
+                ftok: &lits.ftok,
+                fmask: &lits.fmask,
+                temp: &lits.temp,
+            };
+            let plan = StagePlan { park, pos: &self.arena.pos, cap: &self.arena.cap };
+            match &lanes {
+                Some(lanes) => run_decode_step_paged(
+                    &self.graph,
+                    &param_bufs,
+                    &mut self.kv,
+                    PagedInputs {
+                        table: &lanes.table,
+                        copy_src: &lanes.copy_src,
+                        copy_dst: &lanes.copy_dst,
+                    },
+                    inputs,
+                    Some(&plan),
+                    Some(&TablePlan {
+                        block_size: self.cfg.block_size,
+                        blocks_per_row: self.variant.kv_blocks_per_row,
+                        pool_blocks: self.variant.kv_pool_blocks,
+                        table: &self.arena.table,
+                        copy_src: &self.arena.copy_src,
+                        copy_dst: &self.arena.copy_dst,
+                    }),
+                )
+                .context("paged decode step")?,
+                None => {
+                    run_decode_step(&self.graph, &param_bufs, &mut self.kv, inputs, Some(&plan))
+                        .context("decode step")?
+                }
+            }
         };
         drop(param_bufs);
         self.stats.stage_us += d.stage_us;
-        self.stats.execute_us += d.execute_us;
+        if chunked {
+            // prompt-ingestion execute time is split out of the decode
+            // latency; each chunk covering K positions replaced K - 1
+            // single-token dispatches
+            self.stats.prefill_us += d.execute_us;
+            self.stats.prefill_chunks += 1;
+            self.stats.forced_steps_saved += (k_max - 1) as u64;
+        } else {
+            self.stats.execute_us += d.execute_us;
+        }
         // ~0 on untupled builds; the full tuple readback on fallback ones
         self.stats.readback_us += d.kv_take_us;
         if d.kv_restaged {
@@ -968,36 +1206,44 @@ impl Engine {
         self.release_param_sources();
         self.stats.steps += 1;
 
-        // advance states, collect finishes
+        // advance states, collect finishes. Each planned row advances by
+        // its chunk length: the leading advances are forced (their
+        // next/lp arguments are ignored — the stream already holds the
+        // token), and only a chunk reaching the stream end consumes the
+        // dispatch's sampled token, exactly like the K single steps it
+        // replaced. `chunk_len == 1` for every row on legacy rounds.
         let mut outcome = StepOutcome::default();
         let t_now = self.clock.seconds();
         for i in 0..b {
-            if self.stalled[i] {
+            let n = self.chunk_len[i];
+            if n == 0 {
                 continue;
             }
             let Some(s) = self.slots[i].as_mut() else { continue };
-            let was_forced = s.forced_next().is_some();
-            if was_forced {
-                self.stats.tokens_forced += 1;
-            } else {
-                self.stats.tokens_sampled += 1;
-                outcome.tokens_sampled += 1;
-                if let Some(all) = &lp_all {
-                    self.captured.push(DistRow {
-                        seq_id: s.seq_id,
-                        gen_index: s.gen_len(),
-                        logdist: all[i * vsz..(i + 1) * vsz].to_vec(),
-                        version: self.params.active_version(),
-                    });
+            for _ in 0..n {
+                let was_forced = s.forced_next().is_some();
+                if was_forced {
+                    self.stats.tokens_forced += 1;
+                } else {
+                    self.stats.tokens_sampled += 1;
+                    outcome.tokens_sampled += 1;
+                    if let Some(all) = &lp_all {
+                        self.captured.push(DistRow {
+                            seq_id: s.seq_id,
+                            gen_index: s.gen_len(),
+                            logdist: all[i * vsz..(i + 1) * vsz].to_vec(),
+                            version: self.params.active_version(),
+                        });
+                    }
                 }
+                s.advance(
+                    next[i],
+                    lps[i],
+                    self.params.active_version(),
+                    EOS_ID,
+                    self.variant.max_seq,
+                );
             }
-            s.advance(
-                next[i],
-                lps[i],
-                self.params.active_version(),
-                EOS_ID,
-                self.variant.max_seq,
-            );
             if s.finished() {
                 let s = self.slots[i].take().unwrap();
                 self.allocator.release(s.seq_id).expect("release admitted seq");
@@ -1037,7 +1283,6 @@ impl Engine {
     /// attended — attention at position p reads `0..=p` only.
     fn recompute_rows(&mut self, rows: &[usize], zero_first: bool) -> Result<()> {
         let b = self.variant.gen_batch;
-        let vsz = self.variant.vocab;
         let paged = self.arena.is_paged();
         if zero_first {
             let shape =
@@ -1064,11 +1309,9 @@ impl Engine {
             self.stats.kv_recomputes += 1;
             return Ok(());
         }
-        // loop-invariant inputs built once per replay, not per position
-        let zero_gum = HostTensor::zeros_f32(&[b, vsz]).to_literal()?;
-        let ftok_l = HostTensor::from_i32(&[b], vec![PAD_ID; b]).to_literal()?;
-        let fmask_l = HostTensor::from_f32(&[b], vec![1.0; b]).to_literal()?;
-        let temp_l = HostTensor::scalar_f32(self.cfg.temperature).to_literal()?;
+        // loop-invariant inputs (zero gumbel, all-PAD forcing, all-ones
+        // mask, temperature) are engine-owned literals built once at
+        // construction — replay just borrows them
         // rows with no work at position p park at max_seq - 1 (writing
         // pos 0 would clobber the BOS K/V a shorter neighbor already
         // replayed — the heterogeneous-position case is the migration
@@ -1116,53 +1359,135 @@ impl Engine {
         } else {
             None
         };
-        for p in 0..max_pos {
-            pos.iter_mut().for_each(|x| *x = park);
-            cur.iter_mut().for_each(|x| *x = PAD_ID);
-            for (i, slot) in self.slots.iter().enumerate() {
-                if let Some(s) = slot {
-                    if rebuild[i] && p < s.pos {
-                        pos[i] = p as i32;
-                        cur[i] = s.stream[p];
-                    }
-                }
-            }
-            let pos_l = Literal::vec1(&pos);
-            let cur_l = Literal::vec1(&cur);
+        // chunked replay: with the chunk graph loaded, W-strided rounds
+        // rebuild the same prefixes in ceil(max_pos / W) dispatches
+        // instead of max_pos. W == 1 (or no chunk graph) is the legacy
+        // per-position loop, bit-for-bit. Neither path consumes RNG —
+        // replay always forces, so the gumbel operand is all-zero.
+        let w = if self.chunk_graph.is_some() { self.cfg.prefill_chunk.max(1) } else { 1 };
+        let mut p = 0usize;
+        while p < max_pos {
+            // this round covers positions p .. p + k - 1 across the batch
+            let k = w.min(max_pos - p);
             let param_bufs: Vec<&PjRtBuffer> =
                 self.params.active().iter().map(|sp| &sp.buf).collect();
-            let inputs = DecodeInputs {
-                pos: &pos_l,
-                cur: &cur_l,
-                gumbel: &zero_gum,
-                ftok: &ftok_l,
-                fmask: &fmask_l,
-                temp: &temp_l,
-            };
-            let plan = StagePlan { park, pos: &pos, cap: &caps };
-            let d = match &lanes {
-                Some(lanes) => run_decode_step_paged(
-                    &self.graph,
-                    &param_bufs,
-                    &mut self.kv,
-                    PagedInputs {
-                        table: &lanes.table,
-                        copy_src: &lanes.copy_src,
-                        copy_dst: &lanes.copy_dst,
-                    },
-                    inputs,
-                    Some(&plan),
-                    Some(&TablePlan {
-                        block_size: self.cfg.block_size,
-                        blocks_per_row: self.variant.kv_blocks_per_row,
-                        pool_blocks: self.variant.kv_pool_blocks,
-                        table: &self.arena.table,
-                        copy_src: &self.arena.copy_src,
-                        copy_dst: &self.arena.copy_dst,
-                    }),
-                )?,
-                None => {
-                    run_decode_step(&self.graph, &param_bufs, &mut self.kv, inputs, Some(&plan))?
+            let d = if k > 1 {
+                for i in 0..b {
+                    let vl = match &self.slots[i] {
+                        Some(s) if rebuild[i] && s.pos > p => (s.pos - p).min(k),
+                        _ => 0,
+                    };
+                    if vl == 0 {
+                        // no work this round: inert lanes, parked write
+                        self.arena.vlen[i] = 0;
+                        self.arena.pos[i] = park;
+                        self.chunk_plan_pos[i] = park;
+                    } else {
+                        let s = self.slots[i].as_ref().expect("vl > 0 implies occupied slot");
+                        self.arena.set_chunk_row(
+                            i,
+                            p,
+                            &s.stream[p..p + vl],
+                            Some(PAD_ID),
+                            caps[i],
+                        );
+                        self.chunk_plan_pos[i] = (p + vl - 1) as i32;
+                    }
+                }
+                let cl = self.arena.chunk_literals()?;
+                let inputs = ChunkInputs {
+                    start: &cl.start,
+                    ctoks: &cl.ctoks,
+                    vlen: &cl.vlen,
+                    gumbel: &self.zero_gum_l,
+                    ftok: &self.pad_ftok_l,
+                    fmask: &self.ones_fmask_l,
+                    temp: &self.temp_l,
+                };
+                let plan = StagePlan { park, pos: &self.chunk_plan_pos, cap: &caps };
+                let g = self
+                    .chunk_graph
+                    .as_ref()
+                    .expect("k > 1 requires the chunk graph");
+                let d = match &lanes {
+                    Some(lanes) => run_prefill_chunk_paged(
+                        g,
+                        &param_bufs,
+                        &mut self.kv,
+                        PagedInputs {
+                            table: &lanes.table,
+                            copy_src: &lanes.copy_src,
+                            copy_dst: &lanes.copy_dst,
+                        },
+                        inputs,
+                        Some(&plan),
+                        Some(&TablePlan {
+                            block_size: self.cfg.block_size,
+                            blocks_per_row: self.variant.kv_blocks_per_row,
+                            pool_blocks: self.variant.kv_pool_blocks,
+                            table: &self.arena.table,
+                            copy_src: &self.arena.copy_src,
+                            copy_dst: &self.arena.copy_dst,
+                        }),
+                    )?,
+                    None => {
+                        run_prefill_chunk(g, &param_bufs, &mut self.kv, inputs, Some(&plan))?
+                    }
+                };
+                self.stats.prefill_us += d.execute_us;
+                self.stats.prefill_chunks += 1;
+                self.stats.forced_steps_saved += (k - 1) as u64;
+                d
+            } else {
+                pos.iter_mut().for_each(|x| *x = park);
+                cur.iter_mut().for_each(|x| *x = PAD_ID);
+                for (i, slot) in self.slots.iter().enumerate() {
+                    if let Some(s) = slot {
+                        if rebuild[i] && p < s.pos {
+                            pos[i] = p as i32;
+                            cur[i] = s.stream[p];
+                        }
+                    }
+                }
+                let pos_l = Literal::vec1(&pos);
+                let cur_l = Literal::vec1(&cur);
+                let inputs = DecodeInputs {
+                    pos: &pos_l,
+                    cur: &cur_l,
+                    gumbel: &self.zero_gum_l,
+                    ftok: &self.pad_ftok_l,
+                    fmask: &self.ones_fmask_l,
+                    temp: &self.temp_l,
+                };
+                let plan = StagePlan { park, pos: &pos, cap: &caps };
+                match &lanes {
+                    Some(lanes) => run_decode_step_paged(
+                        &self.graph,
+                        &param_bufs,
+                        &mut self.kv,
+                        PagedInputs {
+                            table: &lanes.table,
+                            copy_src: &lanes.copy_src,
+                            copy_dst: &lanes.copy_dst,
+                        },
+                        inputs,
+                        Some(&plan),
+                        Some(&TablePlan {
+                            block_size: self.cfg.block_size,
+                            blocks_per_row: self.variant.kv_blocks_per_row,
+                            pool_blocks: self.variant.kv_pool_blocks,
+                            table: &self.arena.table,
+                            copy_src: &self.arena.copy_src,
+                            copy_dst: &self.arena.copy_dst,
+                        }),
+                    )?,
+                    None => run_decode_step(
+                        &self.graph,
+                        &param_bufs,
+                        &mut self.kv,
+                        inputs,
+                        Some(&plan),
+                    )?,
                 }
             };
             drop(param_bufs);
@@ -1170,6 +1495,7 @@ impl Engine {
                 self.stats.kv_restages += 1;
             }
             self.stats.recompute_steps += 1;
+            p += k;
         }
         // replay executes consumed the active param buffers
         self.release_param_sources();

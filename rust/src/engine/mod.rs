@@ -40,9 +40,22 @@
 //!   [`Engine::stage_weight_tensor`] / [`Engine::commit_weights`]) swaps
 //!   between decode steps while *retaining* the KV cache (the paper's
 //!   §5.1 design choice), tagging subsequent tokens with the new version;
-//! * **prefill-through-decode** — prompts are force-fed through the same
-//!   decode graph (the force_tok/force_mask inputs), so one compiled
-//!   executable serves the whole request path;
+//! * **prefill-through-decode, chunked** — prompts are force-fed through
+//!   the decode path (the force_tok/force_mask inputs), so one compiled
+//!   family of executables serves the whole request path. With
+//!   `[kv] prefill_chunk = W` (> 1) the engine dispatches the
+//!   `prefill_chunk`/`prefill_chunk_paged` graphs instead: each round
+//!   feeds up to `W` forced tokens per row (`[B, W]` lanes in the
+//!   [`arena::StepArena`]), so ingesting or replaying a prompt of `P`
+//!   tokens costs `ceil(P/W)` dispatches instead of `P`
+//!   (`stats.prefill_chunks` / `stats.forced_steps_saved` account for
+//!   it, `stats.prefill_us` splits the execute time out of the decode
+//!   path). Chunk rounds interleave with decode — rows mid-generation
+//!   take their one sampled step in the same dispatch via the chunk
+//!   graph's final lane, and the RNG cursor burns exactly the per-step
+//!   Gumbel draws the token-at-a-time path would, so token streams,
+//!   logprobs, version tags, and golden digests are identical between
+//!   `W = 1` (bit-for-bit legacy) and any `W > 1`;
 //! * the paper's three-endpoint service API as a trait ([`api`]).
 //!
 //! # Hot-path data flow (§Perf)

@@ -90,6 +90,7 @@ impl SeqState {
             group_id: self.group_id,
             total_len: self.total_len(),
             gen_len: self.gen_len(),
+            pos: self.pos,
             kv_blocks,
         }
     }

@@ -62,6 +62,10 @@ pub struct Variant {
     pub kv_block_size: usize,
     pub kv_blocks_per_row: usize,
     pub kv_pool_blocks: usize,
+    /// compiled chunk width W of the `prefill_chunk` graphs (0 when the
+    /// manifest predates chunked prefill): the engine's
+    /// `[kv] prefill_chunk` must not exceed it
+    pub prefill_chunk: usize,
     /// graph name -> donated cache operand record (empty for manifests
     /// written before donation landed)
     pub aliases: BTreeMap<String, AliasSpec>,
@@ -220,6 +224,7 @@ fn parse_variant(name: &str, v: &Json) -> Result<Variant> {
         kv_block_size: opt_usize("kv_block_size")?,
         kv_blocks_per_row: opt_usize("kv_blocks_per_row")?,
         kv_pool_blocks: opt_usize("kv_pool_blocks")?,
+        prefill_chunk: opt_usize("prefill_chunk")?,
         aliases,
         params,
         artifacts,
@@ -271,6 +276,8 @@ mod tests {
         // pre-paged manifest: geometry absent, not a parse error
         assert!(!v.has_paged_pool());
         assert!(v.aliases.is_empty());
+        // pre-chunk manifest: width absent -> 0 (no chunk graphs)
+        assert_eq!(v.prefill_chunk, 0);
     }
 
     #[test]
@@ -281,12 +288,14 @@ mod tests {
             r#""n_params": 27744,"#,
             r#""n_params": 27744,
           "kv_block_size": 16, "kv_blocks_per_row": 6, "kv_pool_blocks": 25,
+          "prefill_chunk": 8,
           "aliases": {"decode": {"param": 19, "output": 3},
                       "decode_paged": {"param": 19, "output": 3}},"#,
         );
         let m = Manifest::parse(&text).unwrap();
         let v = m.variant("tiny").unwrap();
         assert!(v.has_paged_pool());
+        assert_eq!(v.prefill_chunk, 8);
         assert_eq!(v.kv_block_size * v.kv_blocks_per_row, v.max_seq);
         // pool covers every row densely plus the trash block
         assert_eq!(v.kv_pool_blocks, v.gen_batch * v.kv_blocks_per_row + 1);

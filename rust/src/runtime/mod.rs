@@ -563,6 +563,141 @@ pub fn run_decode_step_paged(
     Ok(DecodeStep { outs, kv_restaged, stage_us, execute_us, kv_take_us })
 }
 
+/// The chunked-prefill operands, in `prefill_chunk` graph order (after
+/// the parameter set and the cache): per-row chunk start position `[B]`,
+/// the `[B, W]` forced-token matrix, per-row valid length `[B]`, then the
+/// same sampling tail the decode graphs take (`gumbel, ftok, fmask,
+/// temp`). Rows with `vlen = 0` are inert — the graph parks their
+/// scatters and forwards lane 0 like a legacy parked row.
+pub struct ChunkInputs<'a> {
+    pub start: &'a Literal,
+    pub ctoks: &'a Literal,
+    pub vlen: &'a Literal,
+    pub gumbel: &'a Literal,
+    pub ftok: &'a Literal,
+    pub fmask: &'a Literal,
+    pub temp: &'a Literal,
+}
+
+/// One `prefill_chunk` dispatch: W forced tokens per row in one
+/// executable launch (ceil(P/W) dispatches for a P-token prefix instead
+/// of P decode steps). Cache threading, donation and timing match
+/// [`run_decode_step`] exactly — the chunk graph keeps the decode output
+/// contract (KV at [`DECODE_KV_OUT`]).
+///
+/// `plan.pos`, when given, must carry each row's *last* written cache
+/// position (`start + vlen - 1`, or `park` for inert rows): the chunk
+/// writes `start..=last` and attends `0..=last`, so the existing
+/// capacity check over the furthest write covers every lane.
+pub fn run_prefill_chunk(
+    graph: &Graph,
+    param_bufs: &[&xla::PjRtBuffer],
+    kv: &mut DeviceVal,
+    inp: ChunkInputs<'_>,
+    plan: Option<&StagePlan<'_>>,
+) -> Result<DecodeStep> {
+    if let Some(p) = plan {
+        p.validate()?;
+    }
+    let t_stage = std::time::Instant::now();
+    let start_b = graph.stage(inp.start)?;
+    let ctoks_b = graph.stage(inp.ctoks)?;
+    let vlen_b = graph.stage(inp.vlen)?;
+    let gum_b = graph.stage(inp.gumbel)?;
+    let ftok_b = graph.stage(inp.ftok)?;
+    let fmask_b = graph.stage(inp.fmask)?;
+    let temp_b = graph.stage(inp.temp)?;
+    let kv_staged: xla::PjRtBuffer;
+    let kv_restaged;
+    let kv_ref: &xla::PjRtBuffer = match &*kv {
+        DeviceVal::Buf(buf) => {
+            kv_restaged = false;
+            buf
+        }
+        DeviceVal::Lit(l) => {
+            kv_restaged = true;
+            kv_staged = graph.stage(l)?;
+            &kv_staged
+        }
+    };
+    let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.to_vec();
+    let kv_idx = inputs.len();
+    inputs.push(kv_ref);
+    inputs.extend([&start_b, &ctoks_b, &vlen_b, &gum_b, &ftok_b, &fmask_b, &temp_b]);
+    let stage_us = t_stage.elapsed().as_micros() as u64;
+
+    let t_exec = std::time::Instant::now();
+    let mut outs = graph.run_buffers_b(&inputs, &[kv_idx])?;
+    let execute_us = t_exec.elapsed().as_micros() as u64;
+    drop(inputs);
+    let t_take = std::time::Instant::now();
+    *kv = outs.take(DECODE_KV_OUT)?;
+    let kv_take_us = t_take.elapsed().as_micros() as u64;
+    Ok(DecodeStep { outs, kv_restaged, stage_us, execute_us, kv_take_us })
+}
+
+/// One `prefill_chunk_paged` dispatch: the paged twin of
+/// [`run_prefill_chunk`]. Operand order after the parameters: the block
+/// pool (donated), `table, copy_src, copy_dst`, then the chunk operands.
+/// Inert lanes scatter into the pool's trash block, so the same
+/// [`TablePlan`] entitlement check applies over the last written
+/// positions.
+pub fn run_prefill_chunk_paged(
+    graph: &Graph,
+    param_bufs: &[&xla::PjRtBuffer],
+    pool: &mut DeviceVal,
+    paged: PagedInputs<'_>,
+    inp: ChunkInputs<'_>,
+    plan: Option<&StagePlan<'_>>,
+    tables: Option<&TablePlan<'_>>,
+) -> Result<DecodeStep> {
+    if let Some(p) = plan {
+        p.validate()?;
+        if let Some(t) = tables {
+            t.validate(p.park, p.pos)?;
+        }
+    }
+    let t_stage = std::time::Instant::now();
+    let table_b = graph.stage(paged.table)?;
+    let csrc_b = graph.stage(paged.copy_src)?;
+    let cdst_b = graph.stage(paged.copy_dst)?;
+    let start_b = graph.stage(inp.start)?;
+    let ctoks_b = graph.stage(inp.ctoks)?;
+    let vlen_b = graph.stage(inp.vlen)?;
+    let gum_b = graph.stage(inp.gumbel)?;
+    let ftok_b = graph.stage(inp.ftok)?;
+    let fmask_b = graph.stage(inp.fmask)?;
+    let temp_b = graph.stage(inp.temp)?;
+    let pool_staged: xla::PjRtBuffer;
+    let kv_restaged;
+    let pool_ref: &xla::PjRtBuffer = match &*pool {
+        DeviceVal::Buf(buf) => {
+            kv_restaged = false;
+            buf
+        }
+        DeviceVal::Lit(l) => {
+            kv_restaged = true;
+            pool_staged = graph.stage(l)?;
+            &pool_staged
+        }
+    };
+    let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.to_vec();
+    let pool_idx = inputs.len();
+    inputs.push(pool_ref);
+    inputs.extend([&table_b, &csrc_b, &cdst_b]);
+    inputs.extend([&start_b, &ctoks_b, &vlen_b, &gum_b, &ftok_b, &fmask_b, &temp_b]);
+    let stage_us = t_stage.elapsed().as_micros() as u64;
+
+    let t_exec = std::time::Instant::now();
+    let mut outs = graph.run_buffers_b(&inputs, &[pool_idx])?;
+    let execute_us = t_exec.elapsed().as_micros() as u64;
+    drop(inputs);
+    let t_take = std::time::Instant::now();
+    *pool = outs.take(DECODE_KV_OUT)?;
+    let kv_take_us = t_take.elapsed().as_micros() as u64;
+    Ok(DecodeStep { outs, kv_restaged, stage_us, execute_us, kv_take_us })
+}
+
 /// Per-thread runtime: PJRT client + manifest + compiled-graph cache.
 pub struct Runtime {
     pub client: PjRtClient,

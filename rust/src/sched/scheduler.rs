@@ -32,6 +32,12 @@ pub struct SeqView {
     /// generated-prefix length (> 0 only for imported snapshots and
     /// preempted-and-parked sequences)
     pub gen_len: usize,
+    /// cache positions already fed (tokens consumed by decode so far).
+    /// `pos > 0` marks a sequence whose KV prefix must be replayed after
+    /// seating — the admission gate uses it to hold replay candidates for
+    /// the coalesced window while letting fresh (`pos == 0`) sequences
+    /// admit freely
+    pub pos: usize,
     /// KV blocks the sequence holds in the paged allocator — the eviction
     /// cost signal: parking frees this many block refs, and a resume must
     /// re-seat (and under the paged device layout, per-row replay) the
@@ -289,6 +295,8 @@ mod tests {
             group_id: seq_id,
             total_len,
             gen_len,
+            // resumed sequences sit one short of their stream length
+            pos: if gen_len > 0 { total_len - 1 } else { 0 },
             kv_blocks: total_len.div_ceil(4),
         }
     }
@@ -363,9 +371,12 @@ mod tests {
         // a pure function of the sequence set: every permutation of the
         // active array must name the same victim sequence.
         let mut s = Fifo { preempt: PreemptPolicy::Youngest };
-        let a = SeqView { seq_id: 31, group_id: 1, total_len: 12, gen_len: 2, kv_blocks: 3 };
-        let b = SeqView { seq_id: 17, group_id: 2, total_len: 12, gen_len: 2, kv_blocks: 3 };
-        let c = SeqView { seq_id: 54, group_id: 3, total_len: 12, gen_len: 2, kv_blocks: 3 };
+        let a =
+            SeqView { seq_id: 31, group_id: 1, total_len: 12, gen_len: 2, pos: 11, kv_blocks: 3 };
+        let b =
+            SeqView { seq_id: 17, group_id: 2, total_len: 12, gen_len: 2, pos: 11, kv_blocks: 3 };
+        let c =
+            SeqView { seq_id: 54, group_id: 3, total_len: 12, gen_len: 2, pos: 11, kv_blocks: 3 };
         let perms: [[SeqView; 3]; 6] = [
             [a, b, c], [a, c, b], [b, a, c], [b, c, a], [c, a, b], [c, b, a],
         ];
@@ -387,9 +398,9 @@ mod tests {
         // block-count signal must dominate the length tie-break
         let mut s = Fifo { preempt: PreemptPolicy::Youngest };
         let shared =
-            SeqView { seq_id: 9, group_id: 1, total_len: 20, gen_len: 3, kv_blocks: 2 };
+            SeqView { seq_id: 9, group_id: 1, total_len: 20, gen_len: 3, pos: 19, kv_blocks: 2 };
         let stranger =
-            SeqView { seq_id: 4, group_id: 2, total_len: 16, gen_len: 3, kv_blocks: 4 };
+            SeqView { seq_id: 4, group_id: 2, total_len: 16, gen_len: 3, pos: 15, kv_blocks: 4 };
         assert_eq!(s.pick_victim(&[stranger, shared], 0), Some(1));
     }
 

@@ -329,6 +329,14 @@ pub struct GoldenCfg {
     /// 2-token prompt a partial block, so the first divergent write of
     /// every group member exercises a copy-on-write fork
     pub kv_block_size: usize,
+    /// `[kv] prefill_chunk` analogue: a dispatch-accounting shadow for
+    /// chunked prefill. Seating a sequence bills `ceil(fed / W)` prefill
+    /// dispatches instead of `fed` (the positions its existing stream
+    /// force-feeds) — value-neutral by construction: no digest event
+    /// depends on the billing, so a `W > 1` run must produce the *same
+    /// digest* as a `W = 1` one while its dispatch counts drop, which
+    /// the conformance tests assert
+    pub prefill_chunk: usize,
 }
 
 impl GoldenCfg {
@@ -350,6 +358,7 @@ impl GoldenCfg {
             rollback_budget: 2,
             kv_layout: KvLayout::Dense,
             kv_block_size: 4,
+            prefill_chunk: 1,
         }
     }
 }
@@ -441,6 +450,12 @@ pub struct GoldenStats {
     /// forks performed, and the peak distinct blocks held at any tick
     pub kv_cow_forks: u64,
     pub kv_peak_blocks: u64,
+    /// chunked-prefill shadow: decode dispatches spent force-feeding
+    /// existing streams at seating (fresh prompts and re-seated
+    /// snapshots), and the single-token dispatches those chunks replaced
+    /// — mirrors `EngineStats::{prefill_chunks, forced_steps_saved}`
+    pub prefill_dispatches: u64,
+    pub forced_steps_saved: u64,
 }
 
 /// Result of a golden run (completed, or stopped at an injected
@@ -493,6 +508,8 @@ impl GSeq {
             group_id: self.group,
             total_len: 2 + self.toks.len(),
             gen_len: self.toks.len(),
+            // a resumed sequence sits one short of its stream length
+            pos: if self.toks.is_empty() { 0 } else { 1 + self.toks.len() },
             kv_blocks: (2 + self.toks.len()).div_ceil(bs),
         }
     }
@@ -1187,6 +1204,16 @@ impl<'a> Golden<'a> {
         if let Some(kv) = &mut self.kv {
             kv.seat(&seq);
         }
+        // chunked-prefill dispatch shadow: seating force-feeds the
+        // sequence's existing stream — the 2-token prompt for a fresh
+        // admission, BOS + prompt + salvaged prefix for a re-seated
+        // snapshot. W-wide chunks cover it in ceil(fed / W) dispatches.
+        // Value-neutral: nothing below logs a digest event off this.
+        let w = self.cfg.prefill_chunk.max(1);
+        let fed = if seq.toks.is_empty() { 2 } else { 1 + seq.toks.len() };
+        let disp = fed.div_ceil(w) as u64;
+        self.stats.prefill_dispatches += disp;
+        self.stats.forced_steps_saved += fed as u64 - disp;
         let id = self
             .actors
             .iter()

@@ -395,6 +395,58 @@ fn paged_kv_layout_is_digest_equivalent_to_dense() {
     });
 }
 
+/// Chunked prefill is a dispatch-count optimization, not a behavior:
+/// a golden run billing prompt ingestion and snapshot re-seating in
+/// W-wide chunks produces the *same digest* as the token-at-a-time run
+/// — calm and under kill/preempt chaos — while its dispatch shadow
+/// drops by exactly the coalesced forced steps.
+#[test]
+fn chunked_prefill_is_digest_equivalent_to_token_at_a_time() {
+    let seed = seed_from_env(0xc4_0a_11);
+    with_seed("chunked_prefill", seed, |seed| {
+        let mut cfg = GoldenCfg::new(seed);
+        cfg.steps = 14;
+        cfg.n_actors = 3;
+        cfg.live_target = 8;
+        cfg.preempt = PreemptPolicy::Youngest;
+        let mut chunk_cfg = cfg.clone();
+        chunk_cfg.prefill_chunk = 4;
+
+        // calm: same digest with and without chunked billing
+        let base =
+            GoldenPipeline::run(&cfg, &Perturbation::none()).expect("legacy baseline");
+        let calm =
+            GoldenPipeline::run(&chunk_cfg, &Perturbation::none()).expect("chunked baseline");
+        assert_digest_eq("chunked_prefill_calm", seed, &base.log, &[&calm.log]);
+        assert_eq!(base.stats.forced_steps_saved, 0, "W = 1 coalesces nothing");
+        assert!(calm.stats.forced_steps_saved > 0, "W = 4 coalesces forced steps");
+        assert!(
+            calm.stats.prefill_dispatches < base.stats.prefill_dispatches,
+            "chunking must cut prefill dispatches"
+        );
+        // identical seatings in both arms: the W = 1 dispatch bill splits
+        // exactly into chunk dispatches plus the steps they absorbed
+        assert_eq!(
+            calm.stats.prefill_dispatches + calm.stats.forced_steps_saved,
+            base.stats.prefill_dispatches,
+            "dispatch accounting must conserve fed positions"
+        );
+
+        // chaos: kills and forced preemptions re-seat salvaged prefixes
+        // through the chunked replay accounting — digest unchanged
+        let pert = Perturbation::generate(seed, cfg.steps, 6, 3);
+        let run = GoldenPipeline::run(&chunk_cfg, &pert).expect("chunked chaos run");
+        let legacy = GoldenPipeline::run(&cfg, &pert).expect("legacy chaos run");
+        assert_digest_eq("chunked_prefill_chaos", seed, &base.log, &[&run.log]);
+        assert_digest_eq("chunked_prefill_chaos_legacy", seed, &base.log, &[&legacy.log]);
+        assert_eq!(
+            run.stats.prefill_dispatches + run.stats.forced_steps_saved,
+            legacy.stats.prefill_dispatches,
+            "conservation holds under chaos re-seating too"
+        );
+    });
+}
+
 // ---------------------------------------------------------------------
 // the real supervisor: TrainerSlot failover, bit-identical parameters
 // ---------------------------------------------------------------------

@@ -451,3 +451,202 @@ fn resume_cursors_continue_the_sampling_stream() {
     assert!(b.restore_admission_cursor(0).is_err(), "rewind refused");
     assert!(b.restore_rng([0; 4]).is_err(), "zero RNG cursor refused");
 }
+
+// ---------------- chunked prefill ----------------
+
+/// Submit `n` requests whose prompt lengths come from `lens` (cycled);
+/// token values are deterministic and in-vocab.
+fn submit_with_lens(eng: &mut Engine, lens: &[usize]) {
+    let gen = TaskGen::curriculum_small();
+    for (i, &len) in lens.iter().enumerate() {
+        let p = gen.problem(i as u64 + 100);
+        let toks: Vec<i32> =
+            (0..len).map(|t| 3 + ((t as i32 * 7 + i as i32 * 3) % 40)).collect();
+        eng.add_request(p, toks, i as u64);
+    }
+}
+
+/// Skip chunk tests when the artifacts predate the `prefill_chunk`
+/// graphs (the manifest records the compiled width).
+fn chunk_width_or_skip(name: &str, need: usize) -> bool {
+    if !runtime_or_skip(name) {
+        return false;
+    }
+    let rt = Runtime::new().expect("runtime");
+    let w = rt.manifest.variant("tiny").expect("tiny variant").prefill_chunk;
+    if w < need {
+        eprintln!("skipping {name}: artifacts compiled without prefill_chunk >= {need}");
+        return false;
+    }
+    true
+}
+
+/// Chunked prompt ingestion must reproduce the legacy token-at-a-time
+/// path exactly — same tokens, same behavior logprobs, same version tags
+/// — for lockstep rows under sampling (equal prompt lengths keep every
+/// row consuming the same per-step Gumbel draw in both paths).
+#[test]
+fn chunked_prefill_matches_legacy_sampled_lockstep() {
+    if !chunk_width_or_skip("chunked_prefill_matches_legacy_sampled_lockstep", 4) {
+        return;
+    }
+    let run = |w: usize| {
+        let mut cfg = EngineCfg::new("tiny");
+        cfg.max_new_tokens = 12;
+        cfg.prefill_chunk = w;
+        let (_rt, mut eng) = mk_engine(cfg);
+        submit_with_lens(&mut eng, &[10, 10, 10, 10]);
+        let mut rollouts = Vec::new();
+        for _ in 0..600 {
+            rollouts.extend(eng.step().unwrap().finished);
+            if rollouts.len() >= 4 {
+                break;
+            }
+        }
+        assert_eq!(rollouts.len(), 4);
+        rollouts.sort_by_key(|r| r.seq_id);
+        let toks: Vec<Vec<i32>> = rollouts.iter().map(|r| r.gen_tokens.clone()).collect();
+        let lps: Vec<Vec<f32>> = rollouts.iter().map(|r| r.behavior_lp.clone()).collect();
+        let vers: Vec<Vec<u64>> = rollouts.iter().map(|r| r.token_version.clone()).collect();
+        (toks, lps, vers, eng.stats.clone())
+    };
+    let (t1, l1, v1, s1) = run(1);
+    let (tw, lw, vw, sw) = run(4);
+    assert_eq!(t1, tw, "identical token streams");
+    assert_eq!(l1, lw, "identical behavior logprobs (bitwise)");
+    assert_eq!(v1, vw, "identical version tags");
+    assert_eq!(s1.prefill_chunks, 0, "legacy path never chunk-dispatches");
+    assert!(sw.prefill_chunks > 0, "W = 4 must ingest via chunk dispatches");
+    assert!(sw.forced_steps_saved > 0);
+    assert!(sw.steps < s1.steps, "chunking must reduce total dispatches");
+}
+
+/// Greedy decoding is draw-free, so the equivalence must also hold for
+/// heterogeneous prompt lengths (rows mid-prefill ride chunk dispatches
+/// while resident rows keep decoding on single-token lanes).
+#[test]
+fn chunked_prefill_greedy_heterogeneous_matches_legacy() {
+    if !chunk_width_or_skip("chunked_prefill_greedy_heterogeneous_matches_legacy", 4) {
+        return;
+    }
+    let run = |w: usize| {
+        let mut cfg = EngineCfg::new("tiny");
+        cfg.max_new_tokens = 10;
+        cfg.greedy = true;
+        cfg.prefill_chunk = w;
+        let (_rt, mut eng) = mk_engine(cfg);
+        submit_with_lens(&mut eng, &[3, 11, 6, 16]);
+        let mut rollouts = Vec::new();
+        for _ in 0..600 {
+            rollouts.extend(eng.step().unwrap().finished);
+            if rollouts.len() >= 4 {
+                break;
+            }
+        }
+        assert_eq!(rollouts.len(), 4);
+        rollouts.sort_by_key(|r| r.seq_id);
+        let toks: Vec<Vec<i32>> = rollouts.iter().map(|r| r.gen_tokens.clone()).collect();
+        let lps: Vec<Vec<f32>> = rollouts.iter().map(|r| r.behavior_lp.clone()).collect();
+        (toks, lps)
+    };
+    assert_eq!(run(1), run(4), "greedy streams identical across chunk widths");
+}
+
+/// The acceptance arithmetic: with `prefill_chunk = W`, ingesting a
+/// stream of length L costs `ceil(L / W)` dispatches to the first
+/// sampled token (legacy: L), and an N-row replay to position P costs
+/// `ceil(P / W)` dispatches booking `P - ceil(P / W)` saved steps.
+#[test]
+fn chunked_prefill_dispatch_counts() {
+    if !chunk_width_or_skip("chunked_prefill_dispatch_counts", 4) {
+        return;
+    }
+    let w = 4usize;
+    let prompt_len = 10usize; // stream = BOS + 10 tokens -> L = 11
+    let l = prompt_len + 1;
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 16;
+    cfg.prefill_chunk = w;
+    cfg.recompute_kv_on_update = true;
+    let (mut rt, mut eng) = mk_engine(cfg);
+    submit_with_lens(&mut eng, &[prompt_len; 4]);
+    let mut steps_to_first_sample = 0u64;
+    for _ in 0..100 {
+        let out = eng.step().unwrap();
+        steps_to_first_sample += 1;
+        if out.tokens_sampled > 0 {
+            break;
+        }
+    }
+    let expect_dispatches = l.div_ceil(w) as u64;
+    assert_eq!(steps_to_first_sample, expect_dispatches, "ingestion is O(L/W)");
+    assert_eq!(eng.stats.prefill_chunks, expect_dispatches);
+    assert_eq!(eng.stats.forced_steps_saved, l as u64 - expect_dispatches);
+
+    // replay accounting: every still-active row sits at pos = L after
+    // the sampling round, so the coalesced recompute replays to P = L
+    if eng.n_active() == 0 {
+        return; // every first sample hit EOS — nothing to replay
+    }
+    let before = eng.stats.clone();
+    let params_v1 = rt.init_params("tiny", 8).unwrap();
+    eng.set_weights(1, &params_v1).unwrap();
+    assert_eq!(eng.stats.kv_recomputes, before.kv_recomputes + 1);
+    let p = l; // replay rebuilds positions 0..P-1, P = pos = L
+    assert_eq!(
+        eng.stats.recompute_steps - before.recompute_steps,
+        p.div_ceil(w) as u64,
+        "replay to P costs ceil(P/W) dispatches"
+    );
+    assert_eq!(
+        eng.stats.forced_steps_saved - before.forced_steps_saved,
+        (p - p.div_ceil(w)) as u64,
+        "replay books P - ceil(P/W) saved dispatches"
+    );
+}
+
+/// Regression (replay-window starvation): a closed coalesced-replay
+/// window must hold only pos > 0 candidates — fresh prompts fill the
+/// free slots instead of queueing behind imports they do not depend on.
+#[test]
+fn fresh_admissions_bypass_closed_replay_window() {
+    if !runtime_or_skip("fresh_admissions_bypass_closed_replay_window") {
+        return;
+    }
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 32;
+    cfg.replay_batch = 4;
+    // donor: run four sequences a few steps, park them as snapshots
+    let (_rt_a, mut donor) = mk_engine(cfg.clone());
+    submit_n(&mut donor, 4);
+    for _ in 0..6 {
+        donor.step().unwrap();
+    }
+    let snaps = donor.export_snapshots();
+    assert_eq!(snaps.len(), 4);
+    assert!(snaps.iter().all(|s| s.total_len() > 1), "donors made progress");
+
+    // receiver: two resident sequences leave two free slots; four
+    // waiting replays need all four slots, so the window is closed
+    let (_rt_b, mut eng) = mk_engine(cfg);
+    submit_n(&mut eng, 2);
+    eng.step().unwrap();
+    assert_eq!(eng.n_active(), 2);
+    let gen = TaskGen::curriculum_small();
+    for s in &snaps {
+        eng.import_snapshot(s, gen.problem(s.problem_id)).unwrap();
+    }
+    // two fresh prompts arrive behind the replay candidates
+    let p1 = gen.problem(900);
+    let p2 = gen.problem(901);
+    let t1 = Tokenizer::new().encode(&p1.prompt).unwrap();
+    let t2 = Tokenizer::new().encode(&p2.prompt).unwrap();
+    eng.add_request(p1, t1, 900);
+    eng.add_request(p2, t2, 901);
+    assert_eq!(eng.n_pending(), 6);
+    eng.step().unwrap();
+    // the fix under test: fresh sequences admit while the replays wait
+    assert_eq!(eng.n_active(), 4, "fresh prompts fill the surplus slots");
+    assert_eq!(eng.n_pending(), 4, "replay candidates keep waiting");
+    assert_eq!(eng.stats.import_replays, 0, "no partial replay batch ran");
+}

@@ -1,0 +1,195 @@
+//! Serving-gateway benchmarks — appended machine-readably to
+//! BENCH_gateway.json (see benchkit docs). Entirely device-free: the
+//! gateway schedules a [`SimService`] (deterministic hash tokens, real
+//! paged-allocator accounting), so the numbers replay bit-for-bit.
+//!
+//! * QoS under open-loop load: interactive admission-to-first-token
+//!   (p50/p99 in gateway ticks) and batch throughput across burst
+//!   multipliers 1x/4x/8x, preemption on — the SLO table the acceptance
+//!   test (tests/gateway.rs) asserts one row of;
+//! * the same 8x flash crowd with preemption *off* — what the
+//!   latency-sensitive eviction path is worth;
+//! * per-tick scheduling overhead: a saturated `Gateway<SimService>`
+//!   step vs the bare service step (the front door's bookkeeping cost).
+//!
+//! `cargo bench --bench gateway`
+
+use pipeline_rl::benchkit::{self, f, time};
+use pipeline_rl::config::GatewayConfig;
+use pipeline_rl::data::task::{Problem, TaskKind};
+use pipeline_rl::engine::{CompletionRequest, GenerationService};
+use pipeline_rl::gateway::{Gateway, SimService};
+use pipeline_rl::simcluster::{due_at, poisson_trace, ArrivalCfg};
+
+const SEED: u64 = 0x6a7e_bec4;
+const SLOTS: usize = 8;
+const MAX_NEW: usize = 16;
+
+fn problem(id: u64) -> Problem {
+    Problem {
+        kind: TaskKind::Add,
+        prompt: format!("p{id}"),
+        answer: String::new(),
+        trace: String::new(),
+        id,
+    }
+}
+
+fn batch_req(id: u64) -> CompletionRequest {
+    CompletionRequest::rollout(problem(id), vec![2, 3, 4, 5], id)
+}
+
+fn inter_req(id: u64, tenant: u64) -> CompletionRequest {
+    CompletionRequest::interactive(problem(id), vec![2, 3, 4, 5], id, tenant)
+}
+
+struct Summary {
+    arrivals: usize,
+    p50_att: u64,
+    p99_att: u64,
+    preemptions: u64,
+    finished_batch: u64,
+    horizon: u64,
+    ticks: u64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The acceptance scenario as a measurement: open-loop interactive
+/// arrivals against a batch-saturated gateway, run to quiescence.
+fn run_scenario(burst_mult: f64, preempt: bool) -> Summary {
+    let mut cfg = GatewayConfig::default();
+    cfg.preempt = preempt;
+    let mut gw = Gateway::new(SimService::new(SLOTS, 64, 4, MAX_NEW, SEED), cfg);
+    // short interactive turns, chosen a priori from the sim's
+    // deterministic length rule
+    let mut inter_pids = (10_000u64..).filter(|p| SimService::target_len(SEED, *p, MAX_NEW) <= 5);
+    let arrivals = ArrivalCfg {
+        rate: 0.06,
+        horizon: 600,
+        tenants: 4,
+        burst_every: 150,
+        burst_len: 30,
+        burst_mult,
+    };
+    let trace = poisson_trace(&arrivals, SEED);
+    let mut cursor = 0usize;
+    let mut tickets = Vec::new();
+    let mut next_batch = 100_000u64;
+    for tick in 0..arrivals.horizon {
+        for a in due_at(&trace, &mut cursor, tick) {
+            let pid = inter_pids.next().expect("infinite ids");
+            tickets.push(gw.submit(inter_req(pid, a.tenant)).expect("admitting"));
+        }
+        loop {
+            let st = gw.stats();
+            if (st.submitted_batch - st.finished_batch - st.shed_batch) >= 12 {
+                break;
+            }
+            gw.submit(batch_req(next_batch)).expect("admitting");
+            next_batch += 1;
+        }
+        gw.step().expect("step");
+    }
+    while gw.load() > 0 {
+        gw.step().expect("drain step");
+        assert!(gw.tick() < 20_000, "drain did not quiesce");
+    }
+    let mut att: Vec<u64> = tickets
+        .iter()
+        .filter_map(|&tid| {
+            let t = gw.ticket(tid)?;
+            let first = gw.svc().first_token_step(t.engine_seq?)?;
+            Some(first - t.arrived_tick)
+        })
+        .collect();
+    att.sort_unstable();
+    let st = *gw.stats();
+    Summary {
+        arrivals: tickets.len(),
+        p50_att: percentile(&att, 0.50),
+        p99_att: percentile(&att, 0.99),
+        preemptions: st.qos_preemptions,
+        finished_batch: st.finished_batch,
+        horizon: arrivals.horizon,
+        ticks: gw.tick(),
+    }
+}
+
+fn main() {
+    benchkit::json_begin("gateway");
+
+    benchkit::section("gateway — QoS under open-loop load (ticks)");
+    {
+        let mut rows = Vec::new();
+        for &(mult, preempt) in &[(1.0, true), (4.0, true), (8.0, true), (8.0, false)] {
+            let s = run_scenario(mult, preempt);
+            let batch_tput = s.finished_batch as f64 / s.ticks as f64;
+            rows.push(vec![
+                format!("{mult}x"),
+                if preempt { "on" } else { "off" }.to_string(),
+                s.arrivals.to_string(),
+                s.p50_att.to_string(),
+                s.p99_att.to_string(),
+                s.preemptions.to_string(),
+                f(batch_tput),
+            ]);
+            if (mult - 8.0).abs() < f64::EPSILON && preempt {
+                benchkit::json_note("p99_att_burst8_ticks", s.p99_att as f64);
+                benchkit::json_note("p50_att_burst8_ticks", s.p50_att as f64);
+                benchkit::json_note("qos_preemptions_burst8", s.preemptions as f64);
+                benchkit::json_note("batch_throughput_burst8", batch_tput);
+                benchkit::json_note("open_loop_horizon_ticks", s.horizon as f64);
+            }
+            if (mult - 8.0).abs() < f64::EPSILON && !preempt {
+                benchkit::json_note("p99_att_burst8_nopreempt_ticks", s.p99_att as f64);
+            }
+        }
+        benchkit::table(
+            &["burst", "preempt", "arrivals", "p50 att", "p99 att", "preempts", "batch/tick"],
+            &rows,
+        );
+    }
+
+    benchkit::section("gateway — per-tick scheduling overhead");
+    {
+        // saturated steady state: refill one batch request per tick so
+        // admission work happens every step in both setups
+        let mut bare = SimService::new(SLOTS, 64, 4, MAX_NEW, SEED);
+        let mut id = 1u64;
+        for _ in 0..SLOTS {
+            bare.submit(batch_req(id)).unwrap();
+            id += 1;
+        }
+        let r0 = time("sim_step_saturated", 200, 3000, || {
+            bare.submit(batch_req(id)).unwrap();
+            id += 1;
+            let _ = bare.step().unwrap();
+        });
+        let mut gw = Gateway::new(
+            SimService::new(SLOTS, 64, 4, MAX_NEW, SEED),
+            GatewayConfig::default(),
+        );
+        let mut gid = 1u64;
+        for _ in 0..SLOTS {
+            gw.submit(batch_req(gid)).unwrap();
+            gid += 1;
+        }
+        let r1 = time("gateway_step_saturated", 200, 3000, || {
+            gw.submit(batch_req(gid)).unwrap();
+            gid += 1;
+            let _ = gw.step().unwrap();
+        });
+        benchkit::json_note("sim_step_ms", r0.mean_ms);
+        benchkit::json_note("gateway_step_ms", r1.mean_ms);
+        benchkit::json_note("gateway_overhead_ms", (r1.mean_ms - r0.mean_ms).max(0.0));
+    }
+
+    benchkit::json_end();
+}

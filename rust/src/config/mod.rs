@@ -289,6 +289,46 @@ impl Default for ControlConfig {
     }
 }
 
+/// `[gateway]` — the serving front door (see `crate::gateway`): admits
+/// external generation requests alongside rollouts with QoS classes,
+/// per-tenant KV budgets and bounded shed-oldest-batch-first queues;
+/// interactive arrivals may evict batch rollouts through the snapshot
+/// park path. `enabled = false` (the default) keeps every existing run
+/// bit-for-bit identical — nothing consults this section and no gateway
+/// is constructed (pinned by the golden digest in tests/determinism.rs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayConfig {
+    /// wire a `Gateway` front door around the generation service
+    pub enabled: bool,
+    /// interactive-class share of the bounded admission buffer (entries)
+    pub interactive_queue: usize,
+    /// batch-class share of the bounded admission buffer (entries)
+    pub batch_queue: usize,
+    /// per-tenant KV budget as a fraction of the service's total blocks
+    /// (the house tenant — the training run itself — is exempt)
+    pub tenant_kv_frac: f64,
+    /// let interactive arrivals evict batch rollouts via the snapshot
+    /// park path when no slot is free (off = interactive waits in queue)
+    pub preempt: bool,
+    /// interactive p99 admission-to-first-token objective, in gateway
+    /// ticks — consumed by the device-free acceptance scenario and
+    /// `benches/gateway.rs`, not enforced at admission time
+    pub slo_p99_ticks: f64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            enabled: false,
+            interactive_queue: 64,
+            batch_queue: 256,
+            tenant_kv_frac: 0.5,
+            preempt: true,
+            slo_p99_ticks: 25.0,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub variant: String,
@@ -353,6 +393,9 @@ pub struct RunConfig {
     /// `[control]` — run control plane: pause/drain/rollback commands +
     /// guardrail auto-rollback (requires `[elastic] trainer_failover`)
     pub control: ControlConfig,
+    /// `[gateway]` — QoS-classed serving front door: user inference and
+    /// rollouts on one engine (off by default; off = bit-for-bit legacy)
+    pub gateway: GatewayConfig,
     /// deterministic single-thread mode: actors and trainer are stepped
     /// round-robin by the orchestrator (useful for tests & 1-core boxes)
     pub log_every: usize,
@@ -395,6 +438,7 @@ impl Default for RunConfig {
             elastic: ElasticConfig::default(),
             autoscale: AutoScaleCfg::default(),
             control: ControlConfig::default(),
+            gateway: GatewayConfig::default(),
             log_every: 10,
             weight_transfer_ms: 0.0,
         }
@@ -556,6 +600,16 @@ impl RunConfig {
                     .usize_or("control.retry_backoff_ms", d.control.retry_backoff_ms as usize)?
                     as u64,
             },
+            gateway: GatewayConfig {
+                enabled: doc.bool_or("gateway.enabled", d.gateway.enabled)?,
+                interactive_queue: doc
+                    .usize_or("gateway.interactive_queue", d.gateway.interactive_queue)?,
+                batch_queue: doc.usize_or("gateway.batch_queue", d.gateway.batch_queue)?,
+                tenant_kv_frac: doc
+                    .f64_or("gateway.tenant_kv_frac", d.gateway.tenant_kv_frac)?,
+                preempt: doc.bool_or("gateway.preempt", d.gateway.preempt)?,
+                slo_p99_ticks: doc.f64_or("gateway.slo_p99_ticks", d.gateway.slo_p99_ticks)?,
+            },
             elastic: ElasticConfig {
                 enabled: doc.bool_or("elastic.enabled", d.elastic.enabled)?,
                 min_actors: doc.usize_or("elastic.min_actors", d.elastic.min_actors)?,
@@ -575,7 +629,8 @@ impl RunConfig {
     }
 
     /// Serialize the `[rl]` (off-policyness dial) / `[sched]` / `[kv]` /
-    /// `[checkpoint]` / `[elastic]` / `[autoscale]` / `[control]` sections back to TOML
+    /// `[checkpoint]` / `[elastic]` / `[autoscale]` / `[control]` /
+    /// `[gateway]` sections back to TOML
     /// text that [`RunConfig::from_doc`] parses to the same values — the
     /// round-trip contract the config property test pins (a field added
     /// to one of these sections without a serializer line here fails that
@@ -662,6 +717,18 @@ impl RunConfig {
             c.max_lag_steps,
             c.rollback_budget,
             c.retry_backoff_ms
+        );
+        let g = &self.gateway;
+        let _ = writeln!(
+            s,
+            "[gateway]\nenabled = {}\ninteractive_queue = {}\nbatch_queue = {}\n\
+             tenant_kv_frac = {}\npreempt = {}\nslo_p99_ticks = {}",
+            g.enabled,
+            g.interactive_queue,
+            g.batch_queue,
+            g.tenant_kv_frac,
+            g.preempt,
+            g.slo_p99_ticks
         );
         s
     }
@@ -854,6 +921,30 @@ impl RunConfig {
                     "control.rollback_budget must be >= 1 when the control plane is \
                      enabled: a zero budget would turn every guardrail trip into an \
                      immediate drain, which is spelled [control] enabled = false"
+                );
+            }
+        }
+        if self.gateway.enabled {
+            if self.gateway.interactive_queue == 0 || self.gateway.batch_queue == 0 {
+                bail!(
+                    "gateway queues must each hold at least one entry: a zero-length \
+                     class queue silently rejects that whole class, which is spelled \
+                     [gateway] enabled = false"
+                );
+            }
+            if !self.gateway.tenant_kv_frac.is_finite()
+                || self.gateway.tenant_kv_frac <= 0.0
+                || self.gateway.tenant_kv_frac > 1.0
+            {
+                bail!(
+                    "gateway.tenant_kv_frac must be a fraction in (0, 1], got {}",
+                    self.gateway.tenant_kv_frac
+                );
+            }
+            if !self.gateway.slo_p99_ticks.is_finite() || self.gateway.slo_p99_ticks <= 0.0 {
+                bail!(
+                    "gateway.slo_p99_ticks must be a positive tick count, got {}",
+                    self.gateway.slo_p99_ticks
                 );
             }
         }
@@ -1212,6 +1303,12 @@ mod tests {
             cfg.control.max_lag_steps = c.rng.below(10) as f64;
             cfg.control.rollback_budget = c.usize_in(1, 5);
             cfg.control.retry_backoff_ms = c.usize_in(0, 500) as u64;
+            cfg.gateway.enabled = c.rng.below(2) == 1;
+            cfg.gateway.interactive_queue = c.usize_in(1, 128);
+            cfg.gateway.batch_queue = c.usize_in(1, 512);
+            cfg.gateway.tenant_kv_frac = (1 + c.rng.below(16)) as f64 / 16.0;
+            cfg.gateway.preempt = c.rng.below(2) == 1;
+            cfg.gateway.slo_p99_ticks = (1 + c.rng.below(64)) as f64;
 
             let text = cfg.sections_to_toml();
             let doc = TomlDoc::parse(&text).map_err(|e| format!("emitted TOML: {e}"))?;
@@ -1244,6 +1341,12 @@ mod tests {
                 return Err(format!(
                     "[control] drift: {:?} vs {:?}",
                     back.control, cfg.control
+                ));
+            }
+            if back.gateway != cfg.gateway {
+                return Err(format!(
+                    "[gateway] drift: {:?} vs {:?}",
+                    back.gateway, cfg.gateway
                 ));
             }
             if back.clip_c != cfg.clip_c
@@ -1309,6 +1412,73 @@ mod tests {
         assert_eq!(d.control.window, 8);
         assert_eq!(d.control.rollback_budget, 2);
         assert_eq!(d.checkpoint.write_retries, 2);
+    }
+
+    #[test]
+    fn parses_gateway_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            [gateway]
+            enabled = true
+            interactive_queue = 8
+            batch_queue = 32
+            tenant_kv_frac = 0.25
+            preempt = false
+            slo_p99_ticks = 40
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert!(cfg.gateway.enabled);
+        assert_eq!(cfg.gateway.interactive_queue, 8);
+        assert_eq!(cfg.gateway.batch_queue, 32);
+        assert_eq!(cfg.gateway.tenant_kv_frac, 0.25);
+        assert!(!cfg.gateway.preempt);
+        assert_eq!(cfg.gateway.slo_p99_ticks, 40.0);
+        cfg.validate().unwrap();
+        // the front door stays closed by default — nothing constructs a
+        // gateway, so existing runs are bit-for-bit identical
+        let d = RunConfig::default();
+        assert!(!d.gateway.enabled);
+        assert_eq!(d.gateway.interactive_queue, 64);
+        assert_eq!(d.gateway.batch_queue, 256);
+        assert_eq!(d.gateway.tenant_kv_frac, 0.5);
+        assert!(d.gateway.preempt);
+    }
+
+    #[test]
+    fn gateway_section_rejects_degenerate_values() {
+        let mut cfg = RunConfig::default();
+        cfg.gateway.enabled = true;
+        cfg.validate().unwrap();
+
+        cfg.gateway.interactive_queue = 0;
+        assert!(cfg.validate().is_err(), "zero interactive queue refused");
+        cfg.gateway.interactive_queue = 1;
+        cfg.gateway.batch_queue = 0;
+        assert!(cfg.validate().is_err(), "zero batch queue refused");
+        cfg.gateway.batch_queue = 1;
+
+        cfg.gateway.tenant_kv_frac = 0.0;
+        assert!(cfg.validate().is_err(), "zero tenant budget refused");
+        cfg.gateway.tenant_kv_frac = 1.5;
+        assert!(cfg.validate().is_err(), "over-unity tenant budget refused");
+        cfg.gateway.tenant_kv_frac = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN tenant budget refused");
+        cfg.gateway.tenant_kv_frac = 1.0;
+
+        cfg.gateway.slo_p99_ticks = 0.0;
+        assert!(cfg.validate().is_err(), "zero SLO refused");
+        cfg.gateway.slo_p99_ticks = f64::INFINITY;
+        assert!(cfg.validate().is_err(), "infinite SLO refused");
+        cfg.gateway.slo_p99_ticks = 25.0;
+        cfg.validate().unwrap();
+
+        // disabled gateway never constrains the rest of the config
+        let mut cfg = RunConfig::default();
+        cfg.gateway.interactive_queue = 0;
+        cfg.gateway.tenant_kv_frac = -1.0;
+        cfg.validate().unwrap();
     }
 
     #[test]

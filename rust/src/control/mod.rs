@@ -141,6 +141,12 @@ struct GateInner {
     loads: Mutex<BTreeMap<usize, usize>>,
 }
 
+/// Load-ledger slot the serving gateway reports under ([`ControlGate::
+/// report_load`]). Actor incarnations use their pool index; the gateway
+/// is a singleton front door, so it gets one fixed id far outside any
+/// plausible pool size instead of competing for an index.
+pub const GATEWAY_LEDGER_ID: usize = usize::MAX;
+
 /// Shared gate between the supervisor (writer) and the actors (readers).
 #[derive(Clone)]
 pub struct ControlGate {

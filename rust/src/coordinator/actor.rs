@@ -24,7 +24,7 @@ use crate::broker::Publisher;
 use crate::config::{Mode, RunConfig};
 use crate::control::{AdmissionPhase, ControlGate};
 use crate::data::{Dataset, task::TaskGen};
-use crate::engine::{Engine, EngineCfg};
+use crate::engine::{CompletionRequest, Engine, EngineCfg, GenerationService};
 use crate::metrics::MetricsHub;
 use crate::model::Tokenizer;
 use crate::rl::{FinishReason, Rollout};
@@ -533,7 +533,14 @@ fn submit_group(
     let group_id = group_base | *group_counter;
     *group_counter += 1;
     for _ in 0..cfg.group_size {
-        engine.add_request(problem.clone(), prompt.clone(), group_id);
+        // batch-class house-tenant submission — the legacy add_request
+        // path bit-for-bit, but through the same trait surface the
+        // serving gateway fronts (so an actor can run behind one)
+        engine.submit(CompletionRequest::rollout(
+            problem.clone(),
+            prompt.clone(),
+            group_id,
+        ))?;
     }
     Ok(())
 }

@@ -7,7 +7,7 @@
 use crate::config::RunConfig;
 use crate::data::task::{extract_answer, Problem, TaskGen};
 use crate::data::Dataset;
-use crate::engine::{Engine, EngineCfg};
+use crate::engine::{CompletionRequest, Engine, EngineCfg, GenerationService};
 use crate::model::Tokenizer;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Rng;
@@ -61,7 +61,7 @@ pub fn evaluate_problems(
 
     for (i, p) in problems.iter().enumerate() {
         let toks = tokenizer.encode(&p.prompt)?;
-        engine.add_request(p.clone(), toks, i as u64);
+        engine.submit(CompletionRequest::rollout(p.clone(), toks, i as u64))?;
     }
 
     let mut report = EvalReport { n: problems.len(), ..Default::default() };

@@ -7,7 +7,7 @@ use crate::config::RunConfig;
 use crate::data::task::TaskGen;
 use crate::data::Dataset;
 use crate::engine::engine::DistRow;
-use crate::engine::{Engine, EngineCfg};
+use crate::engine::{CompletionRequest, Engine, EngineCfg, GenerationService};
 use crate::model::Tokenizer;
 use crate::rl::Rollout;
 use crate::runtime::{HostTensor, Runtime};
@@ -58,7 +58,7 @@ pub fn replay_kl(
     let n = engine.n_slots();
     for (i, p) in dataset.eval_suite(n).into_iter().enumerate() {
         let toks = tokenizer.encode(&p.prompt)?;
-        engine.add_request(p, toks, i as u64);
+        engine.submit(CompletionRequest::rollout(p, toks, i as u64))?;
     }
 
     let interval = (cfg.max_new_tokens / g.max(1)).max(1);

@@ -109,6 +109,13 @@ pub fn run_controlled(
     }
     let log = Logger::new("orchestr");
     let hub = MetricsHub::new();
+    // gauge so dashboards can tell gateway-fronted runs apart at a
+    // glance; with the default `[gateway] enabled = false` the run's
+    // trajectory is golden-digest-identical to pre-gateway builds
+    hub.set(
+        "gateway/enabled",
+        if cfg.gateway.enabled { 1.0 } else { 0.0 },
+    );
     let t0 = global_seconds();
 
     // ---- resume state (skips warmup entirely) ----

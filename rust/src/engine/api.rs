@@ -14,12 +14,78 @@ use crate::runtime::HostTensor;
 use crate::sched::SeqSnapshot;
 use anyhow::Result;
 
-/// A generation request (the chat-completions analogue).
+/// Quality-of-service class of a generation request. The serving gateway
+/// (`crate::gateway`) schedules the two classes asymmetrically: interactive
+/// requests admit first and may evict batch rollouts through the snapshot
+/// park path; batch work is the first thing shed under queue pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    /// latency-sensitive user traffic (admission-to-first-token SLO)
+    Interactive,
+    /// throughput traffic: RL rollouts and offline generation — evictable
+    /// (parked losslessly via [`SeqSnapshot`]) and sheddable
+    #[default]
+    Batch,
+}
+
+impl QosClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+/// The house tenant: the training run's own rollout traffic. Exempt from
+/// per-tenant KV budgets (the run owns whatever the gateway doesn't lease
+/// out to external tenants).
+pub const ROLLOUT_TENANT: u64 = 0;
+
+/// A generation request (the chat-completions analogue). QoS class and
+/// tenant id ride along so one engine can serve user inference next to
+/// rollouts; the engine itself ignores both — classing is the gateway's
+/// admission concern, and every pre-gateway call site uses
+/// [`CompletionRequest::rollout`], which pins the legacy behavior
+/// (batch-class, house tenant) bit-for-bit.
 #[derive(Debug, Clone)]
 pub struct CompletionRequest {
     pub problem: Problem,
     pub prompt_tokens: Vec<i32>,
     pub group_id: u64,
+    pub qos: QosClass,
+    /// tenant id for KV budgeting ([`ROLLOUT_TENANT`] = the training run)
+    pub tenant: u64,
+}
+
+impl CompletionRequest {
+    /// A batch-class rollout request from the training loop itself — the
+    /// legacy three-argument submission, unchanged in behavior.
+    pub fn rollout(problem: Problem, prompt_tokens: Vec<i32>, group_id: u64) -> Self {
+        CompletionRequest {
+            problem,
+            prompt_tokens,
+            group_id,
+            qos: QosClass::Batch,
+            tenant: ROLLOUT_TENANT,
+        }
+    }
+
+    /// A latency-sensitive user request from an external tenant.
+    pub fn interactive(
+        problem: Problem,
+        prompt_tokens: Vec<i32>,
+        group_id: u64,
+        tenant: u64,
+    ) -> Self {
+        CompletionRequest {
+            problem,
+            prompt_tokens,
+            group_id,
+            qos: QosClass::Interactive,
+            tenant,
+        }
+    }
 }
 
 /// Live KV-memory pressure of a generation service (the `/metrics`
@@ -69,6 +135,23 @@ pub trait GenerationService {
 
     /// Live KV-memory pressure (see [`KvPressure`]).
     fn kv_pressure(&self) -> KvPressure;
+
+    /// Externally-driven preemption (the gateway's latency-sensitive
+    /// eviction): park one *active* sequence whose id is in `allowed` and
+    /// hand its snapshot out — blocks freed, generated prefix, version
+    /// tags and RNG cursor intact — instead of re-queueing it locally.
+    /// The caller owns the parked sequence (typically depositing it into
+    /// a `MigrationHub`) and re-imports it via
+    /// [`GenerationService::import_snapshot`] when headroom returns, so
+    /// no salvageable token is lost. Victim choice is the deterministic
+    /// `PreemptPolicy::Youngest` rule over the allowed set — external
+    /// eviction is gateway policy, independent of the engine's
+    /// `[kv] preempt_policy` ablation setting. `None` when nothing in
+    /// `allowed` is active (or the service cannot preempt).
+    fn preempt_victim(&mut self, allowed: &[u64]) -> Option<SeqSnapshot> {
+        let _ = allowed;
+        None
+    }
 }
 
 impl GenerationService for super::Engine {
@@ -112,5 +195,12 @@ impl GenerationService for super::Engine {
             saved_blocks: self.kv_shared_saved_blocks(),
             preemptions: self.stats.preemptions,
         }
+    }
+
+    fn preempt_victim(&mut self, allowed: &[u64]) -> Option<SeqSnapshot> {
+        // errors here are allocator-book invariant failures, which the
+        // engine's own tests pin; an external caller treats them as
+        // "nothing preemptable"
+        self.preempt_external(allowed).ok().flatten()
     }
 }

@@ -904,6 +904,46 @@ impl Engine {
         Ok(())
     }
 
+    /// External preemption (the gateway's QoS eviction): park one active
+    /// sequence whose id is in `allowed` and return its snapshot to the
+    /// caller instead of re-queueing it locally — the first half of a
+    /// migration, with the caller (not this engine's pending queue)
+    /// owning the resume. Victim choice is the deterministic
+    /// `PreemptPolicy::Youngest` rule over the allowed views only, so the
+    /// `[kv] preempt_policy = none` ablation (which governs *block-
+    /// pressure* stalls) cannot disable latency-sensitive eviction.
+    pub fn preempt_external(&mut self, allowed: &[u64]) -> Result<Option<SeqSnapshot>> {
+        let paged = self.arena.is_paged();
+        let mut slot_of = Vec::new();
+        let mut views = Vec::new();
+        for (slot, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                if !allowed.contains(&s.seq_id) {
+                    continue;
+                }
+                let kvb = if paged {
+                    self.allocator
+                        .private_blocks(s.seq_id)
+                        .unwrap_or_else(|| s.total_len().div_ceil(self.cfg.block_size))
+                } else {
+                    s.total_len().div_ceil(self.cfg.block_size)
+                };
+                slot_of.push(slot);
+                views.push(s.view(kvb));
+            }
+        }
+        let Some(vidx) = crate::sched::PreemptPolicy::Youngest.pick(&views) else {
+            return Ok(None);
+        };
+        let vslot = slot_of[vidx];
+        let s = self.slots[vslot].take().expect("victim slot is active");
+        self.allocator.release(s.seq_id)?;
+        self.stalled[vslot] = false;
+        let snap = s.to_snapshot(self.rng.state_words());
+        self.stats.preemptions += 1;
+        Ok(Some(snap))
+    }
+
     /// One decode step for every busy slot. Returns finished rollouts.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let replay_slots = self.admit();

@@ -95,7 +95,7 @@ pub mod engine;
 pub mod kvcache;
 pub mod sequence;
 
-pub use api::{CompletionRequest, GenerationService, KvPressure};
+pub use api::{CompletionRequest, GenerationService, KvPressure, QosClass, ROLLOUT_TENANT};
 pub use arena::StepArena;
 pub use engine::{Engine, EngineCfg, EngineStats, StepOutcome};
 pub use kvcache::BlockAllocator;

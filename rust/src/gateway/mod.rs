@@ -1,0 +1,1306 @@
+//! Serving gateway: QoS-classed user inference and rollouts on one
+//! engine (ROADMAP direction 1, "serving gateway for user-facing
+//! inference during training" — the rsBot `tau-gateway`/M24 "True RL
+//! Pipeline In Production" track, SNIPPETS.md §1).
+//!
+//! The paper's pipeline keeps the generation fleet saturated with
+//! rollouts; production wants the *same* weights answering user traffic
+//! without a second deployment. [`Gateway`] is the front door that makes
+//! one [`GenerationService`] serve both:
+//!
+//! * **QoS classes** ([`QosClass`]) — `interactive` requests carry an
+//!   admission-to-first-token SLO; `batch` (rollouts, offline bulk) is
+//!   throughput traffic. Interactive admits first.
+//! * **Continuous-batching admission** — the gateway hands the service a
+//!   request only when a decode slot is free, so the engine never builds
+//!   an internal queue it cannot shed; the gateway owns the bounded
+//!   per-class queues and their backpressure policy
+//!   (**shed-oldest-batch-first**: overflow evicts the oldest queued
+//!   batch entry, falling back to the oldest interactive entry only when
+//!   no batch work is queued).
+//! * **Latency-sensitive preemption** — when every slot is busy, an
+//!   interactive arrival evicts the *youngest* active batch sequence
+//!   through the existing snapshot park machinery
+//!   ([`GenerationService::preempt_victim`], the engine side of
+//!   `sched::PreemptPolicy::Youngest`): the victim's generated prefix,
+//!   logprobs, version tags and RNG cursor land in a gateway-owned
+//!   [`MigrationHub`] and are re-imported when headroom returns, so **no
+//!   rollout token is lost** — the hub's conservation books
+//!   (`deposited == claimed + discarded + depth`) are asserted by the
+//!   acceptance scenario.
+//! * **Per-tenant KV budgets** — external tenants are capped at
+//!   `tenant_kv_frac` of the service's KV blocks (estimated per
+//!   admission from [`GenerationService::kv_pressure`]); the house
+//!   tenant [`ROLLOUT_TENANT`] — the training run itself — is exempt.
+//! * **Drain/pause semantics** — wired to the PR 7 control plane
+//!   ([`ControlGate`]): `Draining` rejects new submissions and finishes
+//!   what is in flight; `Paused` additionally parks everything to the
+//!   hub and decodes nothing; the gateway reports its in-custody load
+//!   under [`GATEWAY_LEDGER_ID`] so a drain can observe quiescence.
+//!
+//! `[gateway] enabled = false` (the default) constructs no gateway at
+//! all — existing runs are bit-for-bit identical, pinned by a golden
+//! digest under the tier1 seed rotation (tests/determinism.rs).
+//!
+//! [`SimService`] is the device-free reference implementation of
+//! [`GenerationService`] (deterministic hash tokens, real
+//! `BlockAllocator` accounting, optional golden-digest hook): it backs
+//! the conformance suite, the open-loop SLO acceptance scenario
+//! (tests/gateway.rs, driven by `simcluster::arrival` traces) and
+//! `benches/gateway.rs`, none of which need PJRT.
+
+use crate::config::GatewayConfig;
+use crate::control::{AdmissionPhase, ControlGate, GATEWAY_LEDGER_ID};
+use crate::data::task::Problem;
+use crate::engine::{
+    BlockAllocator, CompletionRequest, GenerationService, KvPressure, QosClass, ROLLOUT_TENANT,
+};
+use crate::metrics::MetricsHub;
+use crate::rl::{FinishReason, Rollout};
+use crate::runtime::HostTensor;
+use crate::sched::{MigrationHub, PreemptPolicy, SeqSnapshot, SeqView};
+use crate::testkit::{DigestEvent, EventLog, RunDigest};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// Admission ledger entry for one request, from arrival to completion.
+/// Ticks are gateway step counts (the gateway's only clock), so every
+/// latency derived from them is deterministic and device-free.
+#[derive(Debug, Clone)]
+pub struct RequestTicket {
+    pub qos: QosClass,
+    pub tenant: u64,
+    pub problem_id: u64,
+    /// gateway tick at submission
+    pub arrived_tick: u64,
+    /// gateway tick the request entered the service (None = still queued
+    /// or shed)
+    pub admitted_tick: Option<u64>,
+    /// service-side sequence id, re-pointed on every park/reclaim cycle
+    pub engine_seq: Option<u64>,
+    /// gateway tick the rollout completed (or the ticket was shed)
+    pub finished_tick: Option<u64>,
+    /// dropped by backpressure before ever reaching the service
+    pub shed: bool,
+    /// KV blocks charged against the tenant budget while admitted
+    pub kv_est: usize,
+}
+
+/// Event counters mirrored into [`MetricsHub`] when one is attached.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GatewayStats {
+    pub submitted_interactive: u64,
+    pub submitted_batch: u64,
+    pub admitted_interactive: u64,
+    pub admitted_batch: u64,
+    pub finished_interactive: u64,
+    pub finished_batch: u64,
+    /// submissions refused because the control plane is draining/paused
+    pub rejected_not_admitting: u64,
+    pub shed_batch: u64,
+    pub shed_interactive: u64,
+    /// batch sequences parked to make room for interactive arrivals
+    pub qos_preemptions: u64,
+    /// parked sequences re-imported once headroom returned
+    pub reclaimed: u64,
+}
+
+/// The QoS-classed front door (module docs). Wraps any
+/// [`GenerationService`] and is itself one, so the coordinator, the
+/// conformance suite and the benches drive a `Gateway<Engine>` and a
+/// bare `Engine` through the same trait.
+pub struct Gateway<S: GenerationService> {
+    svc: S,
+    cfg: GatewayConfig,
+    /// queued ticket ids, per class, arrival order
+    q_interactive: VecDeque<u64>,
+    q_batch: VecDeque<u64>,
+    /// queued (not yet admitted) requests by ticket id
+    queued: BTreeMap<u64, CompletionRequest>,
+    tickets: BTreeMap<u64, RequestTicket>,
+    next_ticket: u64,
+    /// gateway-owned park for QoS-preempted / pause-parked sequences
+    parked: Arc<MigrationHub>,
+    /// problems held for re-import after a park, refcounted per ticket
+    problems: BTreeMap<u64, (Problem, usize)>,
+    /// service seq id -> ticket id, for every admitted sequence
+    seq_ticket: BTreeMap<u64, u64>,
+    /// parked snapshot's (old) seq id -> ticket id, until reclaimed
+    parked_tickets: BTreeMap<u64, u64>,
+    /// service seq id -> class, the preemption filter's view
+    active: BTreeMap<u64, QosClass>,
+    /// KV blocks currently charged per external tenant
+    tenant_blocks: BTreeMap<u64, usize>,
+    gate: Option<ControlGate>,
+    hub: Option<MetricsHub>,
+    tick: u64,
+    /// the Paused park already ran for the current pause episode
+    paused_parked: bool,
+    stats: GatewayStats,
+}
+
+impl<S: GenerationService> Gateway<S> {
+    pub fn new(svc: S, cfg: GatewayConfig) -> Self {
+        Gateway {
+            svc,
+            cfg,
+            q_interactive: VecDeque::new(),
+            q_batch: VecDeque::new(),
+            queued: BTreeMap::new(),
+            tickets: BTreeMap::new(),
+            next_ticket: 1,
+            parked: Arc::new(MigrationHub::new()),
+            problems: BTreeMap::new(),
+            seq_ticket: BTreeMap::new(),
+            parked_tickets: BTreeMap::new(),
+            active: BTreeMap::new(),
+            tenant_blocks: BTreeMap::new(),
+            gate: None,
+            hub: None,
+            tick: 0,
+            paused_parked: false,
+            stats: GatewayStats::default(),
+        }
+    }
+
+    /// Wire the control plane's admission gate (pause/drain semantics +
+    /// the in-custody load ledger).
+    pub fn with_control(mut self, gate: ControlGate) -> Self {
+        self.gate = Some(gate);
+        self
+    }
+
+    /// Attach a metrics sink: per-class queue-depth / admit-wait /
+    /// latency series and admit/shed/preempt counters.
+    pub fn with_metrics(mut self, hub: MetricsHub) -> Self {
+        self.hub = Some(hub);
+        self
+    }
+
+    pub fn svc(&self) -> &S {
+        &self.svc
+    }
+
+    pub fn svc_mut(&mut self) -> &mut S {
+        &mut self.svc
+    }
+
+    /// The gateway-owned park (QoS-preempted and pause-parked work).
+    pub fn parked(&self) -> &MigrationHub {
+        &self.parked
+    }
+
+    pub fn stats(&self) -> &GatewayStats {
+        &self.stats
+    }
+
+    pub fn ticket(&self, id: u64) -> Option<&RequestTicket> {
+        self.tickets.get(&id)
+    }
+
+    pub fn tickets(&self) -> &BTreeMap<u64, RequestTicket> {
+        &self.tickets
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// (interactive, batch) queue depths.
+    pub fn queue_depths(&self) -> (usize, usize) {
+        (self.q_interactive.len(), self.q_batch.len())
+    }
+
+    /// Everything the gateway is responsible for right now: queued +
+    /// parked + in the service. This is what the load ledger reports —
+    /// a drain is quiescent only when all three are empty.
+    pub fn in_custody(&self) -> usize {
+        self.queued.len() + self.parked.depth() + self.svc.load()
+    }
+
+    fn free_slots(&self) -> usize {
+        self.svc.slots().saturating_sub(self.svc.load())
+    }
+
+    /// Per-admission KV charge: an even split of the pool across slots
+    /// (the a-priori estimate — the service's allocator enforces the
+    /// real accounting; this bound is the *leasing* policy).
+    fn kv_estimate(&self) -> usize {
+        let total = self.svc.kv_pressure().total_blocks;
+        (total / self.svc.slots().max(1)).max(1)
+    }
+
+    fn tenant_budget(&self) -> usize {
+        let total = self.svc.kv_pressure().total_blocks;
+        ((self.cfg.tenant_kv_frac * total as f64).floor() as usize).max(1)
+    }
+
+    fn tenant_fits(&self, tenant: u64, est: usize) -> bool {
+        if tenant == ROLLOUT_TENANT {
+            return true;
+        }
+        let held = self.tenant_blocks.get(&tenant).copied().unwrap_or(0);
+        held + est <= self.tenant_budget()
+    }
+
+    /// Close a ticket's books: release the tenant KV charge and the
+    /// problem refcount. `shed` marks backpressure drops and failed
+    /// re-imports (work that left custody without completing).
+    fn release_ticket(&mut self, tid: u64, shed: bool) {
+        let (tenant, est, problem_id) = {
+            let Some(t) = self.tickets.get_mut(&tid) else { return };
+            t.shed = shed;
+            t.finished_tick = Some(self.tick);
+            let out = (t.tenant, t.kv_est, t.problem_id);
+            t.kv_est = 0;
+            out
+        };
+        if tenant != ROLLOUT_TENANT && est > 0 {
+            let drop_entry = match self.tenant_blocks.get_mut(&tenant) {
+                Some(held) => {
+                    *held = held.saturating_sub(est);
+                    *held == 0
+                }
+                None => false,
+            };
+            if drop_entry {
+                self.tenant_blocks.remove(&tenant);
+            }
+        }
+        if let Some(entry) = self.problems.get_mut(&problem_id) {
+            entry.1 = entry.1.saturating_sub(1);
+            if entry.1 == 0 {
+                self.problems.remove(&problem_id);
+            }
+        }
+    }
+
+    /// Move one queued ticket into the service (caller verified a free
+    /// slot and the tenant budget).
+    fn admit_ticket(&mut self, tid: u64) -> Result<()> {
+        let req = self.queued.remove(&tid).expect("queued request for ticket");
+        let qos = req.qos;
+        let tenant = req.tenant;
+        let est = self.kv_estimate();
+        let seq = self.svc.submit(req)?;
+        let wait = {
+            let t = self.tickets.get_mut(&tid).expect("ticket exists while queued");
+            t.admitted_tick = Some(self.tick);
+            t.engine_seq = Some(seq);
+            t.kv_est = if tenant == ROLLOUT_TENANT { 0 } else { est };
+            (self.tick - t.arrived_tick) as f64
+        };
+        self.seq_ticket.insert(seq, tid);
+        self.active.insert(seq, qos);
+        if tenant != ROLLOUT_TENANT {
+            *self.tenant_blocks.entry(tenant).or_insert(0) += est;
+        }
+        match qos {
+            QosClass::Interactive => self.stats.admitted_interactive += 1,
+            QosClass::Batch => self.stats.admitted_batch += 1,
+        }
+        if let Some(h) = &self.hub {
+            let t = self.tick as f64;
+            h.record(&format!("gateway/admit_wait_{}", qos.name()), t, t, wait);
+            h.add(&format!("gateway/admitted_{}", qos.name()), 1.0);
+        }
+        Ok(())
+    }
+
+    /// Park the youngest active batch sequence into the gateway hub to
+    /// free a slot for an interactive arrival. Returns false when no
+    /// batch sequence is active (interactive work is never evicted for
+    /// interactive work).
+    fn preempt_one_batch(&mut self) -> bool {
+        let allowed: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|(_, q)| **q == QosClass::Batch)
+            .map(|(s, _)| *s)
+            .collect();
+        if allowed.is_empty() {
+            return false;
+        }
+        let Some(snap) = self.svc.preempt_victim(&allowed) else {
+            return false;
+        };
+        if let Some(tid) = self.seq_ticket.remove(&snap.seq_id) {
+            self.parked_tickets.insert(snap.seq_id, tid);
+        }
+        self.active.remove(&snap.seq_id);
+        self.stats.qos_preemptions += 1;
+        if let Some(h) = &self.hub {
+            h.add("gateway/qos_preemptions", 1.0);
+        }
+        self.parked.deposit(vec![snap]);
+        true
+    }
+
+    /// Re-import parked sequences while slots are free (oldest first —
+    /// the hub is FIFO). Runs while Running *and* Draining: parked work
+    /// is already-admitted in-flight work, and draining keeps decoding
+    /// what is in flight.
+    fn reclaim_parked(&mut self) -> Result<()> {
+        while self.free_slots() > 0 {
+            let Some(snap) = self.parked.claim(1).pop() else { break };
+            let Some((problem, _)) = self.problems.get(&snap.problem_id) else {
+                // not a deposit we made (no problem held): refuse it and
+                // keep the books balanced — it lands in `discarded`
+                self.parked.reject(&snap);
+                continue;
+            };
+            let problem = problem.clone();
+            match self.svc.import_snapshot(&snap, problem) {
+                Ok(new_seq) => {
+                    let tid = self.parked_tickets.remove(&snap.seq_id);
+                    let qos = tid
+                        .and_then(|tid| self.tickets.get(&tid).map(|t| t.qos))
+                        .unwrap_or(QosClass::Batch);
+                    if let Some(tid) = tid {
+                        self.seq_ticket.insert(new_seq, tid);
+                        if let Some(t) = self.tickets.get_mut(&tid) {
+                            t.engine_seq = Some(new_seq);
+                        }
+                    }
+                    self.active.insert(new_seq, qos);
+                    self.stats.reclaimed += 1;
+                    if let Some(h) = &self.hub {
+                        h.add("gateway/reclaimed", 1.0);
+                    }
+                }
+                Err(_) => {
+                    // importer refused (config skew, malformed): move the
+                    // tokens to the discarded column and close the ticket
+                    self.parked.reject(&snap);
+                    if let Some(tid) = self.parked_tickets.remove(&snap.seq_id) {
+                        self.release_ticket(tid, true);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn report_load(&self) {
+        if let Some(g) = &self.gate {
+            g.report_load(GATEWAY_LEDGER_ID, self.in_custody());
+        }
+    }
+}
+
+impl<S: GenerationService> GenerationService for Gateway<S> {
+    /// Enqueue under backpressure. Returns a gateway **ticket id** (not
+    /// a service sequence id — the request has not reached the service
+    /// yet); track it via [`Gateway::ticket`].
+    fn submit(&mut self, req: CompletionRequest) -> Result<u64> {
+        if let Some(g) = &self.gate {
+            if !g.admitting() {
+                self.stats.rejected_not_admitting += 1;
+                if let Some(h) = &self.hub {
+                    h.add("gateway/rejected", 1.0);
+                }
+                bail!("gateway is not admitting (phase {:?})", g.phase());
+            }
+        }
+        // bounded admission buffer: both class queues share one total
+        // bound; overflow sheds the oldest *batch* entry first and
+        // touches interactive only when no batch work is queued
+        while self.q_interactive.len() + self.q_batch.len()
+            >= self.cfg.interactive_queue + self.cfg.batch_queue
+        {
+            let Some(vtid) = self
+                .q_batch
+                .pop_front()
+                .or_else(|| self.q_interactive.pop_front())
+            else {
+                break;
+            };
+            self.queued.remove(&vtid);
+            let vqos = self.tickets[&vtid].qos;
+            match vqos {
+                QosClass::Batch => self.stats.shed_batch += 1,
+                QosClass::Interactive => self.stats.shed_interactive += 1,
+            }
+            if let Some(h) = &self.hub {
+                h.add(&format!("gateway/shed_{}", vqos.name()), 1.0);
+            }
+            self.release_ticket(vtid, true);
+        }
+        let tid = self.next_ticket;
+        self.next_ticket += 1;
+        self.problems
+            .entry(req.problem.id)
+            .and_modify(|e| e.1 += 1)
+            .or_insert_with(|| (req.problem.clone(), 1));
+        self.tickets.insert(
+            tid,
+            RequestTicket {
+                qos: req.qos,
+                tenant: req.tenant,
+                problem_id: req.problem.id,
+                arrived_tick: self.tick,
+                admitted_tick: None,
+                engine_seq: None,
+                finished_tick: None,
+                shed: false,
+                kv_est: 0,
+            },
+        );
+        match req.qos {
+            QosClass::Interactive => {
+                self.q_interactive.push_back(tid);
+                self.stats.submitted_interactive += 1;
+            }
+            QosClass::Batch => {
+                self.q_batch.push_back(tid);
+                self.stats.submitted_batch += 1;
+            }
+        }
+        if let Some(h) = &self.hub {
+            h.add(&format!("gateway/submitted_{}", req.qos.name()), 1.0);
+        }
+        self.queued.insert(tid, req);
+        Ok(tid)
+    }
+
+    fn init_process_group(&mut self, group: &str) -> Result<()> {
+        self.svc.init_process_group(group)
+    }
+
+    fn request_weight_update(&mut self, version: u64, params: &[HostTensor]) -> Result<()> {
+        self.svc.request_weight_update(version, params)
+    }
+
+    /// One gateway tick: pump admission (interactive first, preempting
+    /// batch when configured; then reclaim parked work; then batch),
+    /// record metrics, then advance the wrapped service one step.
+    fn step(&mut self) -> Result<Vec<Rollout>> {
+        self.tick += 1;
+        let phase = self
+            .gate
+            .as_ref()
+            .map(|g| g.phase())
+            .unwrap_or(AdmissionPhase::Running);
+        if phase == AdmissionPhase::Paused {
+            if !self.paused_parked {
+                // park *everything* in flight to the hub; queued work
+                // stays queued (it never reached the service)
+                let snaps = self.svc.export_snapshots();
+                for s in &snaps {
+                    if let Some(tid) = self.seq_ticket.remove(&s.seq_id) {
+                        self.parked_tickets.insert(s.seq_id, tid);
+                    }
+                    self.active.remove(&s.seq_id);
+                }
+                self.parked.deposit(snaps);
+                self.paused_parked = true;
+            }
+            self.report_load();
+            return Ok(Vec::new());
+        }
+        self.paused_parked = false;
+        let admitting = phase == AdmissionPhase::Running;
+
+        if admitting {
+            // interactive admission, evicting batch when slots are full
+            loop {
+                let est = self.kv_estimate();
+                let Some(qpos) = self
+                    .q_interactive
+                    .iter()
+                    .position(|tid| self.tenant_fits(self.tickets[tid].tenant, est))
+                else {
+                    break;
+                };
+                if self.free_slots() == 0 && !(self.cfg.preempt && self.preempt_one_batch()) {
+                    break;
+                }
+                if self.free_slots() == 0 {
+                    break; // preemption freed nothing the service admits
+                }
+                let tid = self.q_interactive.remove(qpos).expect("position valid");
+                self.admit_ticket(tid)?;
+            }
+        }
+        self.reclaim_parked()?;
+        if admitting {
+            // batch admission fills whatever headroom is left
+            while self.free_slots() > 0 {
+                let est = self.kv_estimate();
+                let Some(qpos) = self
+                    .q_batch
+                    .iter()
+                    .position(|tid| self.tenant_fits(self.tickets[tid].tenant, est))
+                else {
+                    break;
+                };
+                let tid = self.q_batch.remove(qpos).expect("position valid");
+                self.admit_ticket(tid)?;
+            }
+        }
+        if let Some(h) = &self.hub {
+            let t = self.tick as f64;
+            h.record("gateway/queue_interactive", t, t, self.q_interactive.len() as f64);
+            h.record("gateway/queue_batch", t, t, self.q_batch.len() as f64);
+            h.record("gateway/parked", t, t, self.parked.depth() as f64);
+        }
+
+        let done = self.svc.step()?;
+        for r in &done {
+            self.active.remove(&r.seq_id);
+            if let Some(tid) = self.seq_ticket.remove(&r.seq_id) {
+                let (qos, admitted) = {
+                    let t = &self.tickets[&tid];
+                    (t.qos, t.admitted_tick.unwrap_or(self.tick))
+                };
+                match qos {
+                    QosClass::Interactive => self.stats.finished_interactive += 1,
+                    QosClass::Batch => self.stats.finished_batch += 1,
+                }
+                if let Some(h) = &self.hub {
+                    let t = self.tick as f64;
+                    h.record(
+                        &format!("gateway/latency_{}", qos.name()),
+                        t,
+                        t,
+                        (self.tick - admitted) as f64,
+                    );
+                    h.add(&format!("gateway/finished_{}", qos.name()), 1.0);
+                }
+                self.release_ticket(tid, false);
+            }
+        }
+        // report *after* the service step so a drain that just finished
+        // its last sequence is observed as quiescent this very tick
+        self.report_load();
+        Ok(done)
+    }
+
+    fn load(&self) -> usize {
+        self.in_custody()
+    }
+
+    fn slots(&self) -> usize {
+        self.svc.slots()
+    }
+
+    /// Drain the service *and* the gateway park — the caller takes
+    /// custody of every in-flight sequence. Queued (never-admitted)
+    /// requests stay queued; they hold no engine state to export.
+    fn export_snapshots(&mut self) -> Vec<SeqSnapshot> {
+        let mut out = self.svc.export_snapshots();
+        for s in &out {
+            if let Some(tid) = self.seq_ticket.remove(&s.seq_id) {
+                self.parked_tickets.insert(s.seq_id, tid);
+            }
+            self.active.remove(&s.seq_id);
+        }
+        loop {
+            let got = self.parked.claim(64);
+            if got.is_empty() {
+                break;
+            }
+            out.extend(got);
+        }
+        out
+    }
+
+    fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64> {
+        let seq = self.svc.import_snapshot(snap, problem.clone())?;
+        if let Some(tid) = self.parked_tickets.remove(&snap.seq_id) {
+            // one of ours coming home: re-point its ticket
+            let qos = self.tickets.get(&tid).map(|t| t.qos).unwrap_or_default();
+            if let Some(t) = self.tickets.get_mut(&tid) {
+                t.engine_seq = Some(seq);
+            }
+            self.seq_ticket.insert(seq, tid);
+            self.active.insert(seq, qos);
+        } else {
+            // adopted from another service instance: open a book for it
+            // so finish accounting and the preemption filter stay total
+            let tid = self.next_ticket;
+            self.next_ticket += 1;
+            self.problems
+                .entry(problem.id)
+                .and_modify(|e| e.1 += 1)
+                .or_insert_with(|| (problem.clone(), 1));
+            self.tickets.insert(
+                tid,
+                RequestTicket {
+                    qos: QosClass::Batch,
+                    tenant: ROLLOUT_TENANT,
+                    problem_id: problem.id,
+                    arrived_tick: self.tick,
+                    admitted_tick: Some(self.tick),
+                    engine_seq: Some(seq),
+                    finished_tick: None,
+                    shed: false,
+                    kv_est: 0,
+                },
+            );
+            self.seq_ticket.insert(seq, tid);
+            self.active.insert(seq, QosClass::Batch);
+        }
+        Ok(seq)
+    }
+
+    fn kv_pressure(&self) -> KvPressure {
+        self.svc.kv_pressure()
+    }
+
+    fn preempt_victim(&mut self, allowed: &[u64]) -> Option<SeqSnapshot> {
+        let snap = self.svc.preempt_victim(allowed)?;
+        if let Some(tid) = self.seq_ticket.remove(&snap.seq_id) {
+            // the caller takes custody; remember the ticket in case the
+            // snapshot comes back through import_snapshot
+            self.parked_tickets.insert(snap.seq_id, tid);
+        }
+        self.active.remove(&snap.seq_id);
+        Some(snap)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Device-free reference service
+// ---------------------------------------------------------------------
+
+fn avalanche(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51afd7ed558ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ceb9fe1a85ec53);
+    x ^ (x >> 33)
+}
+
+#[derive(Debug, Clone)]
+struct SimSeq {
+    seq_id: u64,
+    group_id: u64,
+    problem_id: u64,
+    prompt: Vec<i32>,
+    gen: Vec<i32>,
+    lp: Vec<f32>,
+    ver: Vec<u64>,
+    /// deterministic generation length, a pure function of (seed,
+    /// problem id) — the sim analogue of "the model decides when to stop"
+    target_gen: usize,
+    t_start: f64,
+}
+
+impl SimSeq {
+    fn total_len(&self) -> usize {
+        self.prompt.len() + self.gen.len()
+    }
+}
+
+/// Device-free [`GenerationService`]: continuous batching over a fixed
+/// slot pool, FIFO seating, one deterministic hash token per active row
+/// per step, real [`BlockAllocator`] KV accounting, lossless
+/// export/import/preempt through [`SeqSnapshot`], and an optional
+/// golden-digest hook ([`SimService::with_digest`]) recording the exact
+/// event stream an `Engine` run would. Everything the gateway tests,
+/// the SLO acceptance scenario and `benches/gateway.rs` need, with no
+/// PJRT runtime.
+pub struct SimService {
+    slots: Vec<Option<SimSeq>>,
+    pending: VecDeque<SimSeq>,
+    alloc: BlockAllocator,
+    max_seq: usize,
+    max_new: usize,
+    seed: u64,
+    next_seq: u64,
+    step_no: u64,
+    version: u64,
+    preemptions: u64,
+    /// seq id -> step_no its first token was generated (SLO probe)
+    first_token: BTreeMap<u64, u64>,
+    digest: Option<EventLog>,
+}
+
+impl SimService {
+    pub fn new(slots: usize, max_seq: usize, block_size: usize, max_new: usize, seed: u64) -> Self {
+        SimService {
+            slots: (0..slots).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            alloc: BlockAllocator::for_slots(slots, max_seq, block_size),
+            max_seq,
+            max_new: max_new.max(1),
+            seed,
+            next_seq: 1,
+            step_no: 0,
+            version: 0,
+            preemptions: 0,
+            first_token: BTreeMap::new(),
+            digest: None,
+        }
+    }
+
+    /// Record every generated token and completion into a golden
+    /// [`EventLog`] — the digest-identity tests compare these.
+    pub fn with_digest(mut self, log: EventLog) -> Self {
+        self.digest = Some(log);
+        self
+    }
+
+    pub fn digest(&self) -> Option<RunDigest> {
+        self.digest.as_ref().map(|l| l.digest())
+    }
+
+    /// The full event log (when digesting) — so digest mismatches can be
+    /// explained by their first diverging event, not just two hashes.
+    pub fn event_log(&self) -> Option<&EventLog> {
+        self.digest.as_ref()
+    }
+
+    /// Step number the sequence produced its first token (the service
+    /// half of the admission-to-first-token SLO).
+    pub fn first_token_step(&self, seq_id: u64) -> Option<u64> {
+        self.first_token.get(&seq_id).copied()
+    }
+
+    pub fn step_no(&self) -> u64 {
+        self.step_no
+    }
+
+    /// Deterministic generation length for `(seed, problem id)` — public
+    /// so tests and benches can classify problems a priori (short
+    /// interactive turns vs long rollouts) without running them.
+    pub fn target_len(seed: u64, problem_id: u64, max_new: usize) -> usize {
+        Self::target_for(seed, problem_id, max_new)
+    }
+
+    fn target_for(seed: u64, problem_id: u64, max_new: usize) -> usize {
+        1 + (avalanche(seed ^ problem_id.wrapping_mul(0x9e3779b97f4a7c15)) % max_new as u64)
+            as usize
+    }
+
+    fn token(seed: u64, seq_id: u64, idx: usize) -> i32 {
+        (avalanche(seed ^ seq_id.rotate_left(17) ^ (idx as u64).wrapping_mul(0x100000001b3))
+            % 50000) as i32
+            + 2
+    }
+
+    fn snap_of(seq: &SimSeq) -> SeqSnapshot {
+        SeqSnapshot {
+            seq_id: seq.seq_id,
+            group_id: seq.group_id,
+            problem_id: seq.problem_id,
+            prompt: seq.prompt.clone(),
+            gen_tokens: seq.gen.clone(),
+            behavior_lp: seq.lp.clone(),
+            token_version: seq.ver.clone(),
+            pos: if seq.gen.is_empty() { 0 } else { seq.total_len() - 1 },
+            max_new: seq.target_gen.max(seq.gen.len()).max(1),
+            rng_words: [0; 4],
+            t_start: seq.t_start,
+        }
+    }
+}
+
+impl GenerationService for SimService {
+    fn submit(&mut self, req: CompletionRequest) -> Result<u64> {
+        if req.prompt_tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if req.prompt_tokens.len() + 1 > self.max_seq {
+            bail!(
+                "prompt of {} tokens cannot generate within max_seq {}",
+                req.prompt_tokens.len(),
+                self.max_seq
+            );
+        }
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+        let cap = self.max_seq - req.prompt_tokens.len();
+        let target = Self::target_for(self.seed, req.problem.id, self.max_new).min(cap);
+        self.pending.push_back(SimSeq {
+            seq_id,
+            group_id: req.group_id,
+            problem_id: req.problem.id,
+            prompt: req.prompt_tokens,
+            gen: Vec::new(),
+            lp: Vec::new(),
+            ver: Vec::new(),
+            target_gen: target,
+            t_start: self.step_no as f64,
+        });
+        Ok(seq_id)
+    }
+
+    fn init_process_group(&mut self, _group: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn request_weight_update(&mut self, version: u64, _params: &[HostTensor]) -> Result<()> {
+        self.version = version;
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<Vec<Rollout>> {
+        self.step_no += 1;
+        // seat pending FIFO into the lowest free slots; head-of-line
+        // blocks under KV pressure (FIFO admission, like the engine)
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                continue;
+            }
+            let Some(front) = self.pending.front() else { break };
+            if !self.alloc.can_admit(front.total_len()) {
+                break;
+            }
+            let seq = self.pending.pop_front().expect("checked front");
+            self.alloc.admit(seq.seq_id, seq.total_len())?;
+            self.slots[i] = Some(seq);
+        }
+        let mut done = Vec::new();
+        for i in 0..self.slots.len() {
+            let Some(seq) = &mut self.slots[i] else { continue };
+            if !self.alloc.grow(seq.seq_id, seq.total_len() + 1)? {
+                continue; // block pressure: stall in place this step
+            }
+            let idx = seq.gen.len();
+            let tok = Self::token(self.seed, seq.seq_id, idx);
+            seq.gen.push(tok);
+            seq.lp.push(-0.5 - 0.01 * (tok % 17) as f32);
+            seq.ver.push(self.version);
+            if idx == 0 {
+                self.first_token.insert(seq.seq_id, self.step_no);
+            }
+            if let Some(log) = &mut self.digest {
+                log.record(DigestEvent::Token {
+                    seq: seq.seq_id,
+                    index: idx as u32,
+                    tok,
+                    version: self.version,
+                });
+            }
+            if seq.gen.len() >= seq.target_gen {
+                let seq = self.slots[i].take().expect("active row");
+                self.alloc.release(seq.seq_id)?;
+                if let Some(log) = &mut self.digest {
+                    log.record(DigestEvent::GroupComplete {
+                        group: seq.group_id,
+                        tokens: seq.gen.len() as u64,
+                    });
+                }
+                done.push(Rollout {
+                    seq_id: seq.seq_id,
+                    problem_id: seq.problem_id,
+                    group_id: seq.group_id,
+                    actor_id: 0,
+                    prompt_tokens: seq.prompt,
+                    gen_tokens: seq.gen,
+                    behavior_lp: seq.lp,
+                    token_version: seq.ver,
+                    reward: 0.0,
+                    finish: FinishReason::Eos,
+                    t_start: seq.t_start,
+                    t_end: self.step_no as f64,
+                });
+            }
+        }
+        Ok(done)
+    }
+
+    fn load(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count() + self.pending.len()
+    }
+
+    fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn export_snapshots(&mut self) -> Vec<SeqSnapshot> {
+        let mut out = Vec::new();
+        for i in 0..self.slots.len() {
+            if let Some(seq) = self.slots[i].take() {
+                let _ = self.alloc.release(seq.seq_id);
+                out.push(Self::snap_of(&seq));
+            }
+        }
+        for seq in std::mem::take(&mut self.pending) {
+            out.push(Self::snap_of(&seq));
+        }
+        out
+    }
+
+    fn import_snapshot(&mut self, snap: &SeqSnapshot, problem: Problem) -> Result<u64> {
+        snap.validate()?;
+        if problem.id != snap.problem_id {
+            bail!(
+                "snapshot belongs to problem {}, got problem {}",
+                snap.problem_id,
+                problem.id
+            );
+        }
+        if snap.total_len() + 1 > self.max_seq {
+            bail!(
+                "snapshot of {} tokens cannot resume within max_seq {}",
+                snap.total_len(),
+                self.max_seq
+            );
+        }
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+        let cap = self.max_seq - snap.prompt.len();
+        // same stopping rule as a fresh submit, but a resumed sequence
+        // always generates at least one more token (it was mid-flight)
+        let target = Self::target_for(self.seed, snap.problem_id, self.max_new)
+            .min(cap)
+            .max(snap.gen_tokens.len() + 1);
+        self.pending.push_back(SimSeq {
+            seq_id,
+            group_id: snap.group_id,
+            problem_id: snap.problem_id,
+            prompt: snap.prompt.clone(),
+            gen: snap.gen_tokens.clone(),
+            lp: snap.behavior_lp.clone(),
+            ver: snap.token_version.clone(),
+            target_gen: target,
+            t_start: snap.t_start,
+        });
+        Ok(seq_id)
+    }
+
+    fn kv_pressure(&self) -> KvPressure {
+        KvPressure {
+            total_blocks: self.alloc.total_blocks(),
+            free_blocks: self.alloc.free_blocks(),
+            held_blocks: self.alloc.held_blocks(),
+            saved_blocks: self.alloc.shared_saved_blocks(),
+            preemptions: self.preemptions,
+        }
+    }
+
+    fn preempt_victim(&mut self, allowed: &[u64]) -> Option<SeqSnapshot> {
+        let mut slot_of = Vec::new();
+        let mut views = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            let Some(s) = s else { continue };
+            if !allowed.contains(&s.seq_id) {
+                continue;
+            }
+            slot_of.push(i);
+            views.push(SeqView {
+                seq_id: s.seq_id,
+                group_id: s.group_id,
+                total_len: s.total_len(),
+                gen_len: s.gen.len(),
+                pos: if s.gen.is_empty() { 0 } else { s.total_len() - 1 },
+                kv_blocks: s.total_len().div_ceil(self.alloc.block_size()),
+            });
+        }
+        let vidx = PreemptPolicy::Youngest.pick(&views)?;
+        let seq = self.slots[slot_of[vidx]].take().expect("victim slot active");
+        self.alloc.release(seq.seq_id).ok()?;
+        self.preemptions += 1;
+        Some(Self::snap_of(&seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task::TaskKind;
+
+    const SEED: u64 = 0xBEEF;
+
+    fn problem(id: u64) -> Problem {
+        Problem {
+            kind: TaskKind::Add,
+            prompt: format!("p{id}"),
+            answer: "a".into(),
+            trace: String::new(),
+            id,
+        }
+    }
+
+    fn batch_req(id: u64) -> CompletionRequest {
+        CompletionRequest::rollout(problem(id), vec![2, 3, 4], id)
+    }
+
+    fn inter_req(id: u64, tenant: u64) -> CompletionRequest {
+        CompletionRequest::interactive(problem(id), vec![2, 3, 4], id, tenant)
+    }
+
+    fn sim(slots: usize) -> SimService {
+        SimService::new(slots, 32, 4, 6, SEED)
+    }
+
+    /// Problem ids whose deterministic sim generation length is >= 3
+    /// under the shared test seed, so multi-step scenarios cannot race a
+    /// one-token completion.
+    fn long_pids(n: usize) -> Vec<u64> {
+        (1u64..10_000)
+            .filter(|p| SimService::target_for(SEED, *p, 6) >= 3)
+            .take(n)
+            .collect()
+    }
+
+    fn run_until_done<S: GenerationService>(svc: &mut S, max_steps: usize) -> Vec<Rollout> {
+        let mut out = Vec::new();
+        for _ in 0..max_steps {
+            out.extend(svc.step().unwrap());
+            if svc.load() == 0 {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sim_service_is_deterministic() {
+        let run = |seed| {
+            let mut s = SimService::new(2, 32, 4, 6, seed);
+            for i in 1..=4 {
+                s.submit(batch_req(i)).unwrap();
+            }
+            run_until_done(&mut s, 200)
+                .into_iter()
+                .map(|r| (r.seq_id, r.gen_tokens))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same streams");
+        assert_ne!(run(7), run(8), "different seed, different streams");
+    }
+
+    #[test]
+    fn sim_service_export_import_preserves_tokens() {
+        let pids = long_pids(2);
+        let mut s = sim(2);
+        s.submit(batch_req(pids[0])).unwrap();
+        s.submit(batch_req(pids[1])).unwrap();
+        s.step().unwrap();
+        let snaps = s.export_snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(s.load(), 0);
+        for sn in &snaps {
+            sn.validate().unwrap();
+            assert_eq!(sn.gen_tokens.len(), 1, "one step generated one token each");
+            s.import_snapshot(sn, problem(sn.problem_id)).unwrap();
+        }
+        let done = run_until_done(&mut s, 200);
+        assert_eq!(done.len(), 2);
+        for r in &done {
+            // the parked prefix survives at the front of the rollout
+            let sn = snaps.iter().find(|s| s.group_id == r.group_id).unwrap();
+            assert_eq!(&r.gen_tokens[..sn.gen_tokens.len()], &sn.gen_tokens[..]);
+        }
+    }
+
+    #[test]
+    fn gateway_passes_batch_traffic_through_fifo() {
+        let mut gw = Gateway::new(sim(2), GatewayConfig::default());
+        let mut tids = Vec::new();
+        for i in 1..=5 {
+            tids.push(gw.submit(batch_req(i)).unwrap());
+        }
+        let done = run_until_done(&mut gw, 300);
+        assert_eq!(done.len(), 5);
+        let st = *gw.stats();
+        assert_eq!(st.submitted_batch, 5);
+        assert_eq!(st.admitted_batch, 5);
+        assert_eq!(st.finished_batch, 5);
+        assert_eq!(st.qos_preemptions, 0);
+        assert_eq!(st.shed_batch, 0);
+        for tid in tids {
+            let t = gw.ticket(tid).unwrap();
+            assert!(t.finished_tick.is_some() && !t.shed);
+            assert!(t.admitted_tick.unwrap() >= t.arrived_tick);
+        }
+        assert_eq!(gw.in_custody(), 0);
+        assert!(gw.parked().depth() == 0 && gw.parked().deposited() == 0);
+    }
+
+    #[test]
+    fn overflow_sheds_oldest_batch_first() {
+        let mut cfg = GatewayConfig::default();
+        cfg.interactive_queue = 1;
+        cfg.batch_queue = 2;
+        // zero-slot service: nothing ever admits, the queues only fill
+        let mut gw = Gateway::new(sim(0), cfg);
+        let b1 = gw.submit(batch_req(1)).unwrap();
+        let b2 = gw.submit(batch_req(2)).unwrap();
+        let i1 = gw.submit(inter_req(3, 9)).unwrap();
+        // buffer full (3 of 3): next submit sheds the OLDEST BATCH entry
+        let b3 = gw.submit(batch_req(4)).unwrap();
+        assert!(gw.ticket(b1).unwrap().shed);
+        assert!(!gw.ticket(b2).unwrap().shed && !gw.ticket(i1).unwrap().shed);
+        assert_eq!(gw.stats().shed_batch, 1);
+        // drain the batch queue with interactive floods: batch goes
+        // first, interactive is last to be touched
+        let i2 = gw.submit(inter_req(5, 9)).unwrap();
+        let i3 = gw.submit(inter_req(6, 9)).unwrap();
+        assert!(gw.ticket(b2).unwrap().shed && gw.ticket(b3).unwrap().shed);
+        assert!(!gw.ticket(i1).unwrap().shed);
+        // only interactive left: now the oldest interactive is shed
+        let i4 = gw.submit(inter_req(7, 9)).unwrap();
+        assert!(gw.ticket(i1).unwrap().shed);
+        assert_eq!(gw.stats().shed_interactive, 1);
+        assert!(!gw.ticket(i2).unwrap().shed);
+        let _ = (i3, i4);
+    }
+
+    #[test]
+    fn interactive_preempts_batch_and_nothing_is_lost() {
+        let pids = long_pids(3);
+        let mut gw = Gateway::new(sim(2), GatewayConfig::default());
+        gw.submit(batch_req(pids[0])).unwrap();
+        gw.submit(batch_req(pids[1])).unwrap();
+        gw.step().unwrap(); // both batch seated, one token each
+        assert_eq!(gw.svc().load(), 2);
+        gw.submit(inter_req(pids[2], 9)).unwrap();
+        gw.step().unwrap();
+        let st = *gw.stats();
+        assert_eq!(st.qos_preemptions, 1, "a batch victim was parked");
+        assert_eq!(st.admitted_interactive, 1);
+        assert_eq!(gw.parked().deposited(), 1);
+        let (dep_tok, _) = gw.parked().token_counts();
+        assert!(dep_tok >= 1, "the victim's generated prefix was salvaged");
+        // run to completion: the parked batch sequence reclaims a slot
+        // once the interactive one finishes, and every request completes
+        let done = run_until_done(&mut gw, 400);
+        assert_eq!(done.len(), 3, "all three rollouts completed");
+        let st = *gw.stats();
+        assert_eq!(st.reclaimed, 1);
+        assert_eq!(st.finished_interactive, 1);
+        assert_eq!(st.finished_batch, 2);
+        // conservation: everything deposited was claimed back
+        let hub = gw.parked();
+        assert_eq!(hub.deposited(), hub.claimed() + hub.discarded() + hub.depth() as u64);
+        assert_eq!(hub.depth(), 0);
+        assert_eq!(hub.discarded(), 0);
+        let (dep, cl) = hub.token_counts();
+        assert_eq!(dep, cl, "zero salvageable tokens lost");
+        assert_eq!(gw.in_custody(), 0);
+    }
+
+    #[test]
+    fn preempt_disabled_makes_interactive_wait() {
+        let pids = long_pids(2);
+        let mut cfg = GatewayConfig::default();
+        cfg.preempt = false;
+        // single slot: the per-admission estimate is the whole pool, so
+        // an external tenant needs the full-pool lease to admit at all
+        cfg.tenant_kv_frac = 1.0;
+        let mut gw = Gateway::new(sim(1), cfg);
+        gw.submit(batch_req(pids[0])).unwrap();
+        gw.step().unwrap();
+        gw.submit(inter_req(pids[1], 9)).unwrap();
+        gw.step().unwrap();
+        assert_eq!(gw.stats().qos_preemptions, 0);
+        assert_eq!(gw.stats().admitted_interactive, 0, "waits for the slot");
+        let done = run_until_done(&mut gw, 400);
+        assert_eq!(done.len(), 2);
+        assert_eq!(gw.stats().admitted_interactive, 1);
+    }
+
+    #[test]
+    fn tenant_kv_budget_gates_admission() {
+        let mut cfg = GatewayConfig::default();
+        // per-admission estimate is total/slots = 1/4 of the pool; a
+        // budget of one quarter admits exactly one concurrent request
+        // for the tenant
+        cfg.tenant_kv_frac = 0.25;
+        let mut gw = Gateway::new(sim(4), cfg);
+        gw.submit(inter_req(1, 7)).unwrap();
+        gw.submit(inter_req(2, 7)).unwrap();
+        gw.step().unwrap();
+        assert_eq!(
+            gw.stats().admitted_interactive,
+            1,
+            "second request exceeds tenant 7's KV lease"
+        );
+        // the house tenant is exempt: rollouts still admit freely
+        gw.submit(batch_req(3)).unwrap();
+        gw.step().unwrap();
+        assert_eq!(gw.stats().admitted_batch, 1);
+        // once the first finishes, the lease frees and the second admits
+        let done = run_until_done(&mut gw, 400);
+        assert_eq!(done.len(), 3);
+        assert_eq!(gw.stats().admitted_interactive, 2);
+    }
+
+    #[test]
+    fn draining_rejects_new_work_but_finishes_in_flight() {
+        let pids = long_pids(1);
+        let gate = ControlGate::new();
+        let mut gw = Gateway::new(sim(2), GatewayConfig::default()).with_control(gate.clone());
+        gw.submit(batch_req(pids[0])).unwrap();
+        gw.step().unwrap();
+        gate.set_phase(AdmissionPhase::Draining);
+        assert!(gw.submit(batch_req(2)).is_err());
+        assert_eq!(gw.stats().rejected_not_admitting, 1);
+        let done = run_until_done(&mut gw, 200);
+        assert_eq!(done.len(), 1, "in-flight work still completes");
+        assert_eq!(gate.total_load(), 0, "ledger reports quiescence");
+    }
+
+    #[test]
+    fn pause_parks_everything_and_resume_reclaims() {
+        let pids = long_pids(2);
+        let gate = ControlGate::new();
+        let mut gw = Gateway::new(sim(2), GatewayConfig::default()).with_control(gate.clone());
+        gw.submit(batch_req(pids[0])).unwrap();
+        gw.submit(batch_req(pids[1])).unwrap();
+        gw.step().unwrap();
+        gate.set_phase(AdmissionPhase::Paused);
+        let out = gw.step().unwrap();
+        assert!(out.is_empty(), "paused gateway decodes nothing");
+        assert_eq!(gw.svc().load(), 0, "everything left the service");
+        assert_eq!(gw.parked().depth(), 2);
+        gw.step().unwrap(); // idempotent: no double park
+        assert_eq!(gw.parked().deposited(), 2);
+        gate.set_phase(AdmissionPhase::Running);
+        let done = run_until_done(&mut gw, 400);
+        assert_eq!(done.len(), 2);
+        assert_eq!(gw.stats().reclaimed, 2);
+        let hub = gw.parked();
+        assert_eq!(hub.deposited(), hub.claimed());
+        let (dep, cl) = hub.token_counts();
+        assert_eq!(dep, cl, "pause/resume lost no salvaged tokens");
+    }
+
+    #[test]
+    fn gateway_export_drains_service_and_park() {
+        let pids = long_pids(3);
+        let mut cfg = GatewayConfig::default();
+        cfg.tenant_kv_frac = 1.0; // single slot: see preempt_disabled test
+        let mut gw = Gateway::new(sim(1), cfg);
+        gw.submit(batch_req(pids[0])).unwrap();
+        gw.submit(batch_req(pids[1])).unwrap();
+        gw.step().unwrap(); // first batch seated; second queued in the gateway
+        gw.submit(inter_req(pids[2], 9)).unwrap();
+        gw.step().unwrap(); // preempts the seated batch into the park
+        assert_eq!(gw.parked().depth(), 1);
+        let snaps = gw.export_snapshots();
+        // interactive from the service + the parked batch victim
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(gw.svc().load(), 0);
+        assert_eq!(gw.parked().depth(), 0);
+        // bring one home: its ticket re-attaches with its class
+        let victim = snaps.iter().find(|s| s.group_id == pids[0]).unwrap();
+        gw.import_snapshot(victim, problem(pids[0])).unwrap();
+        let done = run_until_done(&mut gw, 400);
+        // the re-imported victim plus the still-queued batch request
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn metrics_hub_sees_gateway_series() {
+        let hub = MetricsHub::new();
+        let mut cfg = GatewayConfig::default();
+        cfg.tenant_kv_frac = 1.0; // single slot: see preempt_disabled test
+        let mut gw = Gateway::new(sim(1), cfg).with_metrics(hub.clone());
+        gw.submit(batch_req(1)).unwrap();
+        gw.submit(inter_req(2, 9)).unwrap();
+        let _ = run_until_done(&mut gw, 300);
+        assert_eq!(hub.counter("gateway/submitted_batch"), 1.0);
+        assert_eq!(hub.counter("gateway/submitted_interactive"), 1.0);
+        assert_eq!(hub.counter("gateway/finished_interactive"), 1.0);
+        assert!(!hub.series("gateway/queue_interactive").points.is_empty());
+        assert_eq!(hub.series("gateway/admit_wait_interactive").points.len(), 1);
+        assert_eq!(hub.series("gateway/latency_batch").points.len(), 1);
+    }
+}

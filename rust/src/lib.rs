@@ -22,6 +22,7 @@ pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod gateway;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;

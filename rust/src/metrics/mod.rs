@@ -34,15 +34,25 @@ pub struct Series {
 }
 
 impl Series {
+    /// Append a point under the default ring-buffer retention
+    /// ([`DEFAULT_RETENTION`]). This used to push unbounded, which let
+    /// every direct caller (standalone harness series built outside a
+    /// [`MetricsHub`]) bypass the retention the hub enforces — an
+    /// open-loop producer like the serving gateway, pushing one point per
+    /// admission tick for hours, would grow the series without limit.
+    /// Custom caps (including the audited-unbounded `cap == 0`) are a hub
+    /// policy, set via [`MetricsHub::with_retention`]; the raw series API
+    /// deliberately no longer exposes one.
     pub fn push(&mut self, t: f64, x: f64, value: f64) {
-        self.points.push(Point { t, x, value });
+        self.push_bounded(t, x, value, DEFAULT_RETENTION);
     }
 
     /// Push with ring-buffer retention: once the series holds `2 * cap`
     /// points everything but the newest `cap` is dropped in one drain —
     /// amortized O(1) per push, memory bounded by `2 * cap`, and the
     /// newest `cap` points are always intact (`cap == 0` disables the
-    /// bound).
+    /// bound — reachable only through [`MetricsHub::with_retention`],
+    /// never from this type's public surface).
     fn push_bounded(&mut self, t: f64, x: f64, value: f64, cap: usize) {
         self.points.push(Point { t, x, value });
         if cap > 0 && self.points.len() >= cap * 2 {
@@ -372,6 +382,31 @@ mod tests {
             unbounded.record("r", i as f64, i as f64, i as f64);
         }
         assert_eq!(unbounded.series("r").points.len(), 1000);
+    }
+
+    #[test]
+    fn raw_series_push_is_retention_bounded() {
+        // regression: `Series::push` was public *and* unbounded, so any
+        // direct caller leaked past the hub's ring retention. It now
+        // applies DEFAULT_RETENTION itself.
+        let mut s = Series::default();
+        let n = DEFAULT_RETENTION * 2 + 10;
+        for i in 0..n {
+            s.push(i as f64, i as f64, i as f64);
+        }
+        assert!(
+            s.points.len() < DEFAULT_RETENTION * 2,
+            "direct pushes must stay under 2*DEFAULT_RETENTION, got {}",
+            s.points.len()
+        );
+        // the newest points survive intact, in order
+        assert_eq!(s.last().unwrap().value, (n - 1) as f64);
+        let tail: Vec<f64> =
+            s.points[s.points.len() - 4..].iter().map(|p| p.value).collect();
+        assert_eq!(
+            tail,
+            ((n - 4)..n).map(|v| v as f64).collect::<Vec<_>>()
+        );
     }
 
     #[test]

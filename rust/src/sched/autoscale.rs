@@ -163,11 +163,20 @@ impl AutoScaler {
             return ScaleDecision::Hold;
         }
         let pool = s.pool.max(1) as f64;
-        let supply_frac = if s.supply_capacity == 0 {
-            0.0
-        } else {
-            s.supply_depth as f64 / s.supply_capacity as f64
-        };
+        // Fail-safe: a zero supply capacity means the downstream topic is
+        // unknown or closed, not infinitely absorbent. Mapping it to
+        // `supply_frac = 0.0` (the old behavior) read as "nothing queued
+        // downstream", so backlog could scale the pool up with nowhere to
+        // drain and scale-down could never fire. Neither pressure is
+        // evaluable without a real capacity, so hold — and reset both
+        // streaks, because a Hold on unknown signals must not extend a
+        // patience run built from known ones.
+        if s.supply_capacity == 0 {
+            self.up_streak = 0;
+            self.down_streak = 0;
+            return ScaleDecision::Hold;
+        }
+        let supply_frac = s.supply_depth as f64 / s.supply_capacity as f64;
         // A backlog only justifies more actors while the downstream can
         // absorb more throughput: with the supply buffer already
         // saturated, queued work will drain into freed slots anyway, and
@@ -179,11 +188,18 @@ impl AutoScaler {
         // freshness guard: ESS floor (IS-corrected runs) replaces the raw
         // lag cap when configured — the two measure the same risk, and
         // applying both would re-impose the step cap the correction is
-        // meant to relax
+        // meant to relax. Non-finite signals fail safe *shut* (the
+        // Guardrail contract): a NaN ess or token_lag means the telemetry
+        // is broken, and `NaN >= floor` / `NaN < cap` are both false only
+        // on the guarded branch that happens to be active — so every
+        // branch, including "both guards disabled", must check finiteness
+        // explicitly or a NaN would default the gate open.
         let lag_ok = if self.cfg.ess_floor > 0.0 {
-            s.ess >= self.cfg.ess_floor
+            s.ess.is_finite() && s.ess >= self.cfg.ess_floor
+        } else if self.cfg.max_lag_steps > 0.0 {
+            s.token_lag.is_finite() && s.token_lag < self.cfg.max_lag_steps
         } else {
-            self.cfg.max_lag_steps <= 0.0 || s.token_lag < self.cfg.max_lag_steps
+            s.token_lag.is_finite() && s.ess.is_finite()
         };
         let down_pressure = s.backlog == 0 && supply_frac >= self.cfg.supply_high_frac;
         let fill_ok = s.batch_fill >= self.cfg.min_batch_fill;
@@ -392,6 +408,107 @@ mod tests {
             assert_eq!(a.decide(&s), ScaleDecision::Hold);
         }
         assert_eq!(a.ups(), 0);
+    }
+
+    #[test]
+    fn zero_supply_capacity_is_fail_safe_hold() {
+        // regression: capacity 0 (downstream unknown/closed) used to read
+        // as supply_frac = 0.0 — "infinitely absorbent" — so a backlog
+        // scaled the pool up with nowhere to drain. It must hold instead.
+        let mut a = AutoScaler::new(cfg());
+        let mut s = backlog(10, 1);
+        s.supply_capacity = 0;
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups(), 0);
+        // and a saturated-shaped signal with capacity 0 must not scale
+        // down either: neither pressure is evaluable
+        let mut b = AutoScaler::new(cfg());
+        let mut s = saturated(3);
+        s.supply_capacity = 0;
+        for _ in 0..10 {
+            assert_eq!(b.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(b.downs(), 0);
+    }
+
+    #[test]
+    fn zero_supply_capacity_resets_patience_streaks() {
+        // a capacity dropout mid-patience-run must restart the count: two
+        // good samples + a blind one + two good samples is not three
+        // consecutive observations of pressure
+        let mut a = AutoScaler::new(cfg());
+        assert_eq!(a.decide(&backlog(10, 1)), ScaleDecision::Hold);
+        assert_eq!(a.decide(&backlog(10, 1)), ScaleDecision::Hold);
+        let mut blind = backlog(10, 1);
+        blind.supply_capacity = 0;
+        assert_eq!(a.decide(&blind), ScaleDecision::Hold);
+        assert_eq!(a.decide(&backlog(10, 1)), ScaleDecision::Hold);
+        assert_eq!(a.decide(&backlog(10, 1)), ScaleDecision::Hold);
+        // only the third consecutive *evaluable* sample fires
+        assert_eq!(a.decide(&backlog(10, 1)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn nan_ess_blocks_scale_up_under_ess_floor() {
+        let mut c = cfg();
+        c.ess_floor = 0.5;
+        let mut a = AutoScaler::new(c);
+        let mut s = backlog(10, 1);
+        s.ess = f64::NAN;
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups(), 0);
+    }
+
+    #[test]
+    fn nan_token_lag_blocks_scale_up_under_lag_cap() {
+        let mut c = cfg();
+        c.max_lag_steps = 4.0;
+        let mut a = AutoScaler::new(c);
+        let mut s = backlog(10, 1);
+        s.token_lag = f64::NAN;
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups(), 0);
+    }
+
+    #[test]
+    fn nan_signals_block_scale_up_even_with_guards_disabled() {
+        // regression: with max_lag_steps == 0 the old disjunct
+        // short-circuited true, so a NaN token_lag (broken telemetry)
+        // defaulted the freshness gate *open*. Fail-safe shut instead.
+        let mut a = AutoScaler::new(cfg()); // both guards disabled
+        let mut s = backlog(10, 1);
+        s.token_lag = f64::NAN;
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        let mut b = AutoScaler::new(cfg());
+        let mut s = backlog(10, 1);
+        s.ess = f64::INFINITY;
+        for _ in 0..10 {
+            assert_eq!(b.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.ups() + b.ups(), 0);
+    }
+
+    #[test]
+    fn nan_batch_fill_blocks_scale_down() {
+        // pin the already-safe path: `NaN >= min_batch_fill` is false, so
+        // a NaN fill can never approve a scale-down
+        let mut c = cfg();
+        c.min_batch_fill = 0.5;
+        let mut a = AutoScaler::new(c);
+        let mut s = saturated(3);
+        s.batch_fill = f64::NAN;
+        for _ in 0..10 {
+            assert_eq!(a.decide(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.downs(), 0);
     }
 
     #[test]

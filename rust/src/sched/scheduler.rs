@@ -127,7 +127,13 @@ impl PreemptPolicy {
     /// runs — the id makes victim choice a pure function of the sequence
     /// set, which is what replay-stable chaos runs
     /// (tests/determinism.rs) assert.
-    fn pick(&self, active: &[SeqView]) -> Option<usize> {
+    ///
+    /// Public because external preemption uses it directly: the serving
+    /// gateway's QoS eviction (interactive traffic displacing batch
+    /// rollouts) runs this rule over a *class-filtered* view set, so the
+    /// victim choice is the same deterministic function whether the
+    /// pressure came from KV blocks or from a latency-sensitive arrival.
+    pub fn pick(&self, active: &[SeqView]) -> Option<usize> {
         match self {
             PreemptPolicy::None => None,
             PreemptPolicy::Youngest => active

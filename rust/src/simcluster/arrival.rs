@@ -1,0 +1,168 @@
+//! Open-loop arrival models for the serving gateway (ROADMAP direction
+//! 1: "simcluster gets an open-loop arrival model — millions of users =
+//! Poisson/bursty traces — to prove SLOs under churn").
+//!
+//! The gateway's acceptance scenario needs *external* traffic that does
+//! not wait for the system (open loop): request arrival times are drawn
+//! up front from a seeded process, and the driver submits whatever the
+//! trace says is due at each tick regardless of how backed up the
+//! gateway is. Two processes cover the paper-style serving story:
+//!
+//! * **Poisson** — memoryless steady-state load: exponential
+//!   inter-arrival gaps `-ln(U)/rate` accumulated over continuous time,
+//!   floored onto the gateway's integer tick clock.
+//! * **Bursty** — the same Poisson base with periodic burst windows in
+//!   which the rate is multiplied (flash crowds). This is the trace that
+//!   must show interactive p99 admission-to-first-token holding its SLO
+//!   while batch rollouts degrade gracefully and recover after the
+//!   window closes.
+//!
+//! Traces are deterministic per seed (PCG64 stream, see
+//! [`crate::util::Rng`]) so SLO numbers replay bit-for-bit in tests and
+//! in `benches/gateway.rs`.
+
+use crate::util::Rng;
+
+/// One scheduled request arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    /// gateway tick (step count) the request becomes due
+    pub tick: u64,
+    /// external tenant id (never `ROLLOUT_TENANT`; see [`ArrivalCfg`])
+    pub tenant: u64,
+}
+
+/// Parameters of an open-loop trace.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalCfg {
+    /// mean arrivals per tick outside burst windows (> 0)
+    pub rate: f64,
+    /// horizon in ticks: arrivals are generated in [0, horizon)
+    pub horizon: u64,
+    /// arrivals rotate over this many external tenants (ids 1..=tenants)
+    pub tenants: u64,
+    /// every `burst_every` ticks a burst window opens (0 = pure Poisson)
+    pub burst_every: u64,
+    /// burst window length in ticks
+    pub burst_len: u64,
+    /// rate multiplier inside a burst window (>= 1)
+    pub burst_mult: f64,
+}
+
+impl Default for ArrivalCfg {
+    fn default() -> Self {
+        ArrivalCfg {
+            rate: 0.2,
+            horizon: 200,
+            tenants: 4,
+            burst_every: 0,
+            burst_len: 0,
+            burst_mult: 1.0,
+        }
+    }
+}
+
+impl ArrivalCfg {
+    /// Is `tick` inside a burst window?
+    pub fn in_burst(&self, tick: u64) -> bool {
+        self.burst_every > 0 && self.burst_len > 0 && tick % self.burst_every < self.burst_len
+    }
+}
+
+/// Draw a full open-loop trace: arrival ticks sorted ascending, tenants
+/// rotating 1..=tenants. Deterministic per (cfg, seed).
+///
+/// The thinning construction: gaps are drawn from the *burst* (maximum)
+/// rate, and candidates landing outside a burst window survive with
+/// probability `1/burst_mult` — the standard way to sample an
+/// inhomogeneous Poisson process without inverting its rate integral,
+/// and it degenerates to plain Poisson when no bursts are configured.
+pub fn poisson_trace(cfg: &ArrivalCfg, seed: u64) -> Vec<Arrival> {
+    assert!(cfg.rate > 0.0 && cfg.rate.is_finite(), "rate must be positive");
+    assert!(cfg.burst_mult >= 1.0, "burst_mult must be >= 1");
+    let mut rng = Rng::with_stream(seed, 0x0a55_71a1_a77e_57a7);
+    let peak = cfg.rate * cfg.burst_mult;
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    let mut tenant = 0u64;
+    loop {
+        // exponential gap at the peak rate; max() guards ln(0)
+        let u = rng.f64().max(f64::MIN_POSITIVE);
+        t += -u.ln() / peak;
+        let tick = t.floor() as u64;
+        if tick >= cfg.horizon {
+            break;
+        }
+        // thinning: off-burst candidates survive at rate/peak
+        if !cfg.in_burst(tick) && rng.f64() >= 1.0 / cfg.burst_mult {
+            continue;
+        }
+        tenant = tenant % cfg.tenants.max(1) + 1;
+        out.push(Arrival { tick, tenant });
+    }
+    out
+}
+
+/// Arrivals due at exactly `tick` (the per-step drain for an open-loop
+/// driver walking a sorted trace with an advancing cursor).
+pub fn due_at(trace: &[Arrival], cursor: &mut usize, tick: u64) -> Vec<Arrival> {
+    let start = *cursor;
+    while *cursor < trace.len() && trace[*cursor].tick <= tick {
+        *cursor += 1;
+    }
+    trace[start..*cursor].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = ArrivalCfg { rate: 0.5, horizon: 400, ..ArrivalCfg::default() };
+        let a = poisson_trace(&cfg, 42);
+        let b = poisson_trace(&cfg, 42);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_ne!(a, poisson_trace(&cfg, 43), "different seed, different trace");
+        assert!(a.windows(2).all(|w| w[0].tick <= w[1].tick), "sorted");
+        assert!(a.iter().all(|x| x.tick < 400 && (1..=4).contains(&x.tenant)));
+        // mean ~ rate * horizon = 200; a loose 3-sigma-ish band
+        assert!(a.len() > 120 && a.len() < 300, "got {}", a.len());
+    }
+
+    #[test]
+    fn bursts_concentrate_arrivals() {
+        let cfg = ArrivalCfg {
+            rate: 0.2,
+            horizon: 1000,
+            tenants: 2,
+            burst_every: 100,
+            burst_len: 20,
+            burst_mult: 8.0,
+        };
+        let trace = poisson_trace(&cfg, 7);
+        let in_burst = trace.iter().filter(|a| cfg.in_burst(a.tick)).count();
+        let out_burst = trace.len() - in_burst;
+        // burst windows are 20% of the horizon at 8x the rate: they must
+        // hold the clear majority of arrivals
+        assert!(
+            in_burst > out_burst,
+            "bursts should dominate: {in_burst} in vs {out_burst} out"
+        );
+        assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn due_at_walks_the_trace_exactly_once() {
+        let cfg = ArrivalCfg { rate: 0.3, horizon: 100, ..ArrivalCfg::default() };
+        let trace = poisson_trace(&cfg, 11);
+        let mut cursor = 0usize;
+        let mut seen = 0usize;
+        for tick in 0..cfg.horizon {
+            let due = due_at(&trace, &mut cursor, tick);
+            assert!(due.iter().all(|a| a.tick <= tick));
+            seen += due.len();
+        }
+        assert_eq!(seen, trace.len(), "every arrival delivered exactly once");
+    }
+}

@@ -28,8 +28,10 @@
 //! churn too: dropped sequences refund the phase quota and regenerate
 //! from scratch.
 
+pub mod arrival;
 pub mod scenarios;
 pub mod sim;
 
+pub use arrival::{due_at, poisson_trace, Arrival, ArrivalCfg};
 pub use scenarios::{drain_scenario, generation_only, DrainPoint};
 pub use sim::{GpuFailure, SimAutoScale, SimCfg, SimMode, SimResult, Simulator};

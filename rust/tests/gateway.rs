@@ -1,0 +1,309 @@
+//! Serving-gateway integration: trait conformance + the open-loop SLO
+//! acceptance scenario (ROADMAP direction 1).
+//!
+//! Two layers:
+//!
+//! 1. **GenerationService conformance** — one generic suite drives every
+//!    implementation of the paper's three-endpoint API through the same
+//!    obligations: submissions complete, load/slots books balance,
+//!    `export_snapshots`/`import_snapshot` round-trips preserve
+//!    generated prefixes, KV pressure stays within the pool, and an
+//!    in-flight `request_weight_update` never drops a sequence. It runs
+//!    device-free against [`SimService`] and a gateway-fronted
+//!    `Gateway<SimService>`, and against the real [`Engine`] when a PJRT
+//!    runtime is present (`runtime_or_skip`, see tier1.sh).
+//!
+//! 2. **Bursty SLO acceptance** — a seeded open-loop arrival trace
+//!    (`simcluster::arrival`, Poisson base + 8x flash-crowd windows)
+//!    submits interactive traffic against a gateway whose slots are kept
+//!    saturated with house batch rollouts. Device-free and fully
+//!    deterministic, it proves the tentpole claims: interactive p99
+//!    admission-to-first-token holds the configured SLO *through* the
+//!    bursts, batch degrades gracefully (QoS preemptions park victims
+//!    losslessly) and recovers (every batch rollout still completes),
+//!    and the gateway park's conservation books close with zero
+//!    salvageable tokens lost.
+
+use pipeline_rl::config::GatewayConfig;
+use pipeline_rl::data::task::{Problem, TaskGen};
+use pipeline_rl::engine::{CompletionRequest, Engine, EngineCfg, GenerationService};
+use pipeline_rl::gateway::{Gateway, SimService};
+use pipeline_rl::model::Tokenizer;
+use pipeline_rl::runtime::{HostTensor, Runtime};
+use pipeline_rl::simcluster::{due_at, poisson_trace, ArrivalCfg};
+use pipeline_rl::testkit::runtime_or_skip;
+use pipeline_rl::util::Rng;
+
+const SIM_SEED: u64 = 0x6a7e_0001;
+
+/// Deterministic problems (and thus prompts) shared by every service
+/// under test; ids must be unique per request so KV prefix-sharing keys
+/// (group ids) never alias across different prompts.
+fn problem_of(id: u64) -> Problem {
+    TaskGen::curriculum_small().problem(id)
+}
+
+fn rollout_req(id: u64) -> CompletionRequest {
+    let p = problem_of(id);
+    let toks = Tokenizer::new().encode(&p.prompt).expect("task prompt tokenizes");
+    CompletionRequest::rollout(p, toks, id)
+}
+
+fn interactive_req(id: u64, tenant: u64) -> CompletionRequest {
+    let p = problem_of(id);
+    let toks = Tokenizer::new().encode(&p.prompt).expect("task prompt tokenizes");
+    CompletionRequest::interactive(p, toks, id, tenant)
+}
+
+fn sim() -> SimService {
+    SimService::new(4, 64, 4, 8, SIM_SEED)
+}
+
+// ---------------------------------------------------------------------
+// 1. conformance suite
+// ---------------------------------------------------------------------
+
+/// Trait-level obligations every GenerationService must meet. `params`
+/// is whatever the service accepts as a weight payload (empty for the
+/// device-free sim; real host tensors for the engine). Request/problem
+/// ids are drawn from `base..` so repeated runs in one process never
+/// alias groups.
+fn conformance<S: GenerationService>(svc: &mut S, params: &[HostTensor], base: u64, name: &str) {
+    assert!(svc.slots() > 0, "{name}: a service must expose decode slots");
+    assert_eq!(svc.load(), 0, "{name}: fresh service is idle");
+    svc.init_process_group("conformance").unwrap();
+
+    // -- every submission completes, and load counts queued work --
+    let n = svc.slots().min(4);
+    for i in 0..n as u64 {
+        svc.submit(rollout_req(base + i)).unwrap();
+    }
+    assert_eq!(svc.load(), n, "{name}: load counts submitted work");
+    let kv = svc.kv_pressure();
+    assert!(
+        kv.free_blocks <= kv.total_blocks && kv.held_blocks <= kv.total_blocks,
+        "{name}: KV books within the pool"
+    );
+    let mut done = Vec::new();
+    for step in 0.. {
+        assert!(step < 4000, "{name}: run did not complete");
+        done.extend(svc.step().unwrap());
+        // an in-flight weight update must not drop sequences
+        if step == 1 {
+            svc.request_weight_update(1, params).unwrap();
+        }
+        if svc.load() == 0 {
+            break;
+        }
+    }
+    assert_eq!(done.len(), n, "{name}: every submission completes");
+    for r in &done {
+        r.validate().unwrap();
+        assert!(!r.gen_tokens.is_empty(), "{name}: rollouts carry tokens");
+    }
+
+    // -- export/import round-trips preserve generated prefixes --
+    let m = 2u64;
+    for i in 0..m {
+        svc.submit(rollout_req(base + 100 + i)).unwrap();
+    }
+    let mut early = Vec::new();
+    for _ in 0..3 {
+        early.extend(svc.step().unwrap());
+    }
+    let snaps = svc.export_snapshots();
+    assert_eq!(svc.load(), 0, "{name}: export drains the service");
+    assert_eq!(
+        early.len() + snaps.len(),
+        m as usize,
+        "{name}: finished + exported covers every submission"
+    );
+    for sn in &snaps {
+        sn.validate().unwrap();
+        svc.import_snapshot(sn, problem_of(sn.problem_id)).unwrap();
+    }
+    let mut late = Vec::new();
+    for step in 0.. {
+        assert!(step < 4000, "{name}: resumed run did not complete");
+        late.extend(svc.step().unwrap());
+        if svc.load() == 0 {
+            break;
+        }
+    }
+    assert_eq!(late.len(), snaps.len(), "{name}: every import completes");
+    for sn in &snaps {
+        let r = late
+            .iter()
+            .find(|r| r.group_id == sn.group_id)
+            .expect("re-imported sequence finished");
+        assert!(
+            r.gen_tokens.len() >= sn.gen_tokens.len()
+                && r.gen_tokens[..sn.gen_tokens.len()] == sn.gen_tokens[..],
+            "{name}: parked prefix survives at the front of the rollout"
+        );
+    }
+    let kv = svc.kv_pressure();
+    assert_eq!(kv.free_blocks, kv.total_blocks, "{name}: idle service holds no blocks");
+}
+
+#[test]
+fn sim_service_conforms() {
+    conformance(&mut sim(), &[], 1000, "SimService");
+}
+
+#[test]
+fn gateway_front_conforms() {
+    // the gateway wraps a service and *is* one: same obligations, with
+    // its admission queue and park folded into the load/export books
+    let mut gw = Gateway::new(sim(), GatewayConfig::default());
+    conformance(&mut gw, &[], 2000, "Gateway<SimService>");
+    assert_eq!(gw.stats().shed_batch, 0, "conformance traffic never sheds");
+}
+
+#[test]
+fn engine_conforms() {
+    if !runtime_or_skip("engine_conforms") {
+        return;
+    }
+    let mut rt = Runtime::new().expect("runtime");
+    let params = rt.init_params("tiny", 7).unwrap();
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 8;
+    let mut eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(1)).unwrap();
+    eng.set_weights(0, &params).unwrap();
+    conformance(&mut eng, &params, 3000, "Engine");
+}
+
+#[test]
+fn gateway_fronted_engine_conforms() {
+    if !runtime_or_skip("gateway_fronted_engine_conforms") {
+        return;
+    }
+    let mut rt = Runtime::new().expect("runtime");
+    let params = rt.init_params("tiny", 7).unwrap();
+    let mut cfg = EngineCfg::new("tiny");
+    cfg.max_new_tokens = 8;
+    let eng = Engine::new(&mut rt, cfg, &params, 0, Rng::new(1)).unwrap();
+    let mut gw = Gateway::new(eng, GatewayConfig::default());
+    gw.svc_mut().set_weights(0, &params).unwrap();
+    conformance(&mut gw, &params, 4000, "Gateway<Engine>");
+}
+
+// ---------------------------------------------------------------------
+// 2. bursty open-loop SLO acceptance
+// ---------------------------------------------------------------------
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * p).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[test]
+fn interactive_p99_holds_slo_under_bursts_while_batch_recovers() {
+    // 8 slots, 128 KV blocks; interactive turns are short (<= 5 tokens,
+    // a chat-style reply), batch rollouts run the full length range
+    let slots = 8usize;
+    let max_new = 16usize;
+    let svc = SimService::new(slots, 64, 4, max_new, SIM_SEED);
+    let cfg = GatewayConfig::default(); // preempt on, slo_p99_ticks = 25
+    let slo = cfg.slo_p99_ticks;
+    let mut gw = Gateway::new(svc, cfg);
+
+    // interactive problems: ids picked so the sim's deterministic
+    // generation length is short — SLO traffic is short-turn by design
+    let mut inter_pids =
+        (10_000u64..).filter(|p| SimService::target_len(SIM_SEED, *p, max_new) <= 5);
+
+    // open-loop arrivals: Poisson base with 8x flash crowds covering 20%
+    // of the horizon — the trace the SLO must survive
+    let arrivals = ArrivalCfg {
+        rate: 0.06,
+        horizon: 600,
+        tenants: 4,
+        burst_every: 150,
+        burst_len: 30,
+        burst_mult: 8.0,
+    };
+    let trace = poisson_trace(&arrivals, SIM_SEED);
+    assert!(trace.len() > 30, "trace dense enough to mean anything");
+    let mut cursor = 0usize;
+
+    let mut inter_tickets = Vec::new();
+    let mut next_batch_pid = 100_000u64;
+    let outstanding_batch = |gw: &Gateway<SimService>| {
+        let st = gw.stats();
+        (st.submitted_batch - st.finished_batch - st.shed_batch) as usize
+    };
+
+    // phase 1: the open-loop horizon. House batch keeps the engine
+    // saturated (12 outstanding >= 8 slots), so every burst admission
+    // exercises the preemption path.
+    for tick in 0..arrivals.horizon {
+        for a in due_at(&trace, &mut cursor, tick) {
+            let pid = inter_pids.next().expect("infinite id stream");
+            inter_tickets.push(gw.submit(interactive_req(pid, a.tenant)).unwrap());
+        }
+        while outstanding_batch(&gw) < 12 {
+            gw.submit(rollout_req(next_batch_pid)).unwrap();
+            next_batch_pid += 1;
+        }
+        gw.step().unwrap();
+    }
+
+    // phase 2: drain — no new traffic; everything in custody completes
+    for step in 0.. {
+        assert!(step < 4000, "drain did not quiesce");
+        gw.step().unwrap();
+        if gw.load() == 0 {
+            break;
+        }
+    }
+
+    let st = *gw.stats();
+
+    // every interactive request was served (the queue bound never bit)
+    assert_eq!(st.shed_interactive, 0, "no interactive request shed");
+    assert_eq!(st.finished_interactive, inter_tickets.len() as u64);
+
+    // p99 admission-to-first-token within the SLO, measured through the
+    // bursts: first-token step comes from the service (its step clock
+    // advances with the gateway tick), arrival from the ticket ledger
+    let mut att: Vec<u64> = inter_tickets
+        .iter()
+        .map(|&tid| {
+            let t = gw.ticket(tid).expect("ticket retained");
+            assert!(!t.shed && t.finished_tick.is_some());
+            let seq = t.engine_seq.expect("admitted");
+            let first = gw.svc().first_token_step(seq).expect("generated");
+            first - t.arrived_tick
+        })
+        .collect();
+    att.sort_unstable();
+    let p50 = percentile(&att, 0.50);
+    let p99 = percentile(&att, 0.99);
+    assert!(
+        (p99 as f64) <= slo,
+        "interactive p99 admission-to-first-token {p99} ticks > SLO {slo} (p50 {p50})"
+    );
+
+    // batch degraded gracefully: bursts forced preemptions, every parked
+    // victim was reclaimed, and the conservation books closed with zero
+    // salvageable tokens lost
+    assert!(st.qos_preemptions > 0, "bursts must exercise the preemption path");
+    assert_eq!(st.reclaimed, st.qos_preemptions, "every victim came home");
+    let hub = gw.parked();
+    assert_eq!(
+        hub.deposited(),
+        hub.claimed() + hub.discarded() + hub.depth() as u64
+    );
+    assert_eq!(hub.depth(), 0);
+    assert_eq!(hub.discarded(), 0, "no parked rollout was abandoned");
+    let (dep_tokens, claimed_tokens) = hub.token_counts();
+    assert_eq!(dep_tokens, claimed_tokens, "zero salvageable tokens lost");
+
+    // ... and recovered: every batch rollout the run submitted finished
+    assert_eq!(st.finished_batch, st.submitted_batch - st.shed_batch);
+    assert!(st.finished_batch > 0);
+    assert_eq!(gw.in_custody(), 0);
+}

@@ -92,6 +92,16 @@ cargo bench --bench kvmem
 echo "== tier1: cargo bench --bench onpolicy =="
 cargo bench --bench onpolicy
 
+# Serving-gateway bench: device-free (Gateway over SimService), so it
+# runs everywhere -> rust/BENCH_gateway.json. The SLO table for the QoS
+# acceptance claim: interactive p50/p99 admission-to-first-token across
+# burst multipliers (preemption on/off) plus the gateway's per-tick
+# scheduling overhead. The hard assertions live in tests/gateway.rs
+# (run by `cargo test` above); this step keeps the latency trajectory a
+# diffable artifact.
+echo "== tier1: cargo bench --bench gateway =="
+cargo bench --bench gateway
+
 # clippy over every target (benches/examples/tests included), warnings
 # fatal — the lint policy lives in [workspace.lints] in rust/Cargo.toml.
 # Toolchain is pinned via rust-toolchain.toml (components include clippy).
